@@ -1,0 +1,118 @@
+//! End-to-end pretraining driver (the DESIGN.md §7 headline example).
+//!
+//! Reproduces the paper's full §3.3 two-phase schedule on the testbed
+//! scale: builds a synthetic corpus, shards it per device (§4.1), then
+//! pretrains a BERT model with data parallelism, ring allreduce,
+//! gradient accumulation (§4.4) and AMP loss scaling (§4.2) —
+//! phase 1 at seq 128, phase 2 at seq 512 with Table-6 ratios —
+//! and writes the Figure-7 loss curves to CSV.
+//!
+//! Run:  cargo run --release --example pretrain_e2e -- \
+//!         [--preset bert-tiny] [--steps 200] [--phase2-steps 40]
+//!         [--topo 1M2G] [--accum 4] [--docs 256] [--out runs/e2e]
+//!
+//! The run recorded in EXPERIMENTS.md used the defaults.
+
+use bertdist::cliopt::Args;
+use bertdist::config::{RunConfig, TwoPhaseSchedule};
+use bertdist::coordinator::train_run;
+use bertdist::data::corpus::SyntheticCorpus;
+use bertdist::data::{build_shards, Vocab};
+use bertdist::runtime::Engine;
+use bertdist::topology::Topology;
+use bertdist::util::ascii_plot::{plot_series, Series};
+use bertdist::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1))?;
+    let preset = args.get("preset", "bert-tiny");
+    let steps = args.get_parse("steps", 200usize)?;
+    let phase2_steps = args.get_parse("phase2-steps", 40usize)?;
+    let topo = args.get("topo", "1M2G");
+    let accum = args.get_parse("accum", 4usize)?;
+    let docs_n = args.get_parse("docs", 256usize)?;
+    let batch = args.get_parse("batch", 8usize)?;
+    let out_dir = std::path::PathBuf::from(args.get("out", "runs/e2e"));
+    args.finish_strict()?;
+
+    let mut sw = Stopwatch::new();
+    std::fs::create_dir_all(&out_dir)?;
+
+    // ---- data (paper §3.1 + §4.1) ----
+    let engine = Engine::cpu(std::path::Path::new("artifacts"))?;
+    let model = engine.model(&preset)?;
+    let data_dir = out_dir.join("data");
+    let world = Topology::parse(&topo).map_err(|e| anyhow::anyhow!(e))?
+        .world_size();
+    if !data_dir.join("vocab.txt").exists() {
+        println!("building corpus + shards under {} ...", data_dir.display());
+        let docs = SyntheticCorpus::new(42, 20_000)
+            .documents(docs_n, 10, 12);
+        let vocab = Vocab::from_documents(&docs, model.config.vocab_size);
+        std::fs::create_dir_all(&data_dir)?;
+        vocab.save(&data_dir.join("vocab.txt"))?;
+        let stats = build_shards(&docs, &vocab, world.max(4), &data_dir,
+                                 "train", 42)?;
+        println!("  {} examples, {} shards", stats.examples, stats.shards);
+    }
+    sw.lap("data");
+
+    // ---- two-phase pretraining (paper §3.3, Table 6) ----
+    let sched = TwoPhaseSchedule::paper();
+    println!(
+        "two-phase schedule (paper Table 6 ratios): phase1 seq {} / \
+         phase2 seq {}; paper runs {}+{} epochs in {:.1} days on 32M8G",
+        sched.phase1.seq_len, sched.phase2.seq_len, sched.phase1.epochs,
+        sched.phase2.epochs, sched.paper_total_days()
+    );
+
+    let mut cfg = RunConfig::default();
+    cfg.train.preset = preset.clone();
+    cfg.train.variant = "fused_f32".into();
+    cfg.train.optimizer = "lamb".into();
+    cfg.train.lr = 2e-4;
+    cfg.train.warmup_steps = steps / 10;
+    cfg.train.accum_steps = accum;
+    cfg.train.log_every = 10;
+    cfg.cluster.topo = Topology::parse(&topo).unwrap();
+
+    let ckpt = out_dir.join("model.ckpt");
+    let outcome = train_run(&engine, &cfg, &data_dir, steps, phase2_steps,
+                            batch, 128, Some(&ckpt))?;
+    sw.lap("train");
+
+    // ---- Figure 7 artifact ----
+    let p1 = outcome.phase1.loss.xy();
+    std::fs::write(out_dir.join("phase1_loss.csv"),
+                   outcome.phase1.loss.to_csv())?;
+    let mut series = vec![Series { name: "phase1 (seq 128)", points: &p1,
+                                   marker: '1' }];
+    let p2xy = outcome.phase2.as_ref().map(|r| r.loss.xy());
+    if let Some(r2) = &outcome.phase2 {
+        std::fs::write(out_dir.join("phase2_loss.csv"), r2.loss.to_csv())?;
+    }
+    if let Some(ref p2) = p2xy {
+        series.push(Series { name: "phase2 (seq 512)", points: p2,
+                             marker: '2' });
+    }
+    println!("{}", plot_series(
+        "two-phase pretraining loss (cf. paper Figure 7)", &series, 72, 18));
+
+    let r1 = &outcome.phase1;
+    println!("phase 1: {}", r1.summary());
+    if let Some(r2) = &outcome.phase2 {
+        println!("phase 2: {}", r2.summary());
+    }
+    println!(
+        "loss improved: {} (first-10 mean {:.4} -> last-10 mean {:.4})",
+        r1.loss.improved(10),
+        r1.loss.points.iter().take(10).map(|p| p.1).sum::<f64>()
+            / 10f64.min(r1.loss.points.len() as f64),
+        r1.loss.tail_mean(10)
+    );
+    for (name, dt) in sw.laps() {
+        println!("  {name:<6} {dt:.1}s");
+    }
+    println!("artifacts in {}", out_dir.display());
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Weak-scaling study driver (paper Figures 3 and 6).
+//!
+//! Sweeps topologies with the calibrated cluster model AND cross-checks
+//! the small end (1–4 ranks) against REAL threaded ring-allreduce wall
+//! time over the actual BERT-large gradient payload.
+//!
+//! Run: cargo run --release --example weak_scaling -- [--accum 4]
+//!        [--grad-mb 128]
+
+use bertdist::cliopt::Args;
+use bertdist::collectives::CollectiveGroup;
+use bertdist::simulator::scaling::{figure6_topologies, sweep_intra_vs_inter,
+                                   weak_scaling};
+use bertdist::simulator::IterationModel;
+use bertdist::topology::Topology;
+use bertdist::util::fmt::render_table;
+use bertdist::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1))?;
+    let accum = args.get_parse("accum", 4usize)?;
+    let grad_mb = args.get_parse("grad-mb", 64usize)?;
+    args.finish_strict()?;
+
+    // ---- Figure 3: intra vs inter, k=1 ----
+    let t1 = IterationModel::paper(Topology::new(1, 1), 1, true);
+    let (intra, inter) = sweep_intra_vs_inter(&t1);
+    println!("Figure 3 — intra-node vs inter-node weak scaling (k=1):\n");
+    let rows: Vec<Vec<String>> = intra
+        .iter()
+        .zip(&inter)
+        .map(|(a, b)| vec![
+            a.gpus.to_string(),
+            format!("{:.2}x / {:.0}%", a.scaling_factor, a.efficiency * 100.0),
+            format!("{:.2}x / {:.0}%", b.scaling_factor, b.efficiency * 100.0),
+        ])
+        .collect();
+    println!("{}", render_table(
+        &["GPUs", "intra (PCIe)", "inter (10GbE)"], &rows));
+
+    // ---- Figure 6: multi-node with accumulation ----
+    let tk = IterationModel::paper(Topology::new(1, 1), accum, true);
+    let pts = weak_scaling(&tk, &figure6_topologies());
+    println!("Figure 6 — xM8G weak scaling (k={accum}):\n");
+    let rows: Vec<Vec<String>> = pts
+        .iter()
+        .map(|p| vec![
+            p.topo.to_string(),
+            p.gpus.to_string(),
+            format!("{:.1}x", p.scaling_factor),
+            format!("{:.1}%", p.efficiency * 100.0),
+        ])
+        .collect();
+    println!("{}", render_table(&["topo", "GPUs", "factor", "efficiency"],
+                                &rows));
+
+    // ---- real threaded allreduce cross-check ----
+    println!(
+        "real ring-allreduce wall time ({grad_mb} MiB f32 payload, \
+         in-process threads):\n"
+    );
+    let n_elems = grad_mb * 1024 * 1024 / 4;
+    let mut rows = Vec::new();
+    for world in [1usize, 2, 4] {
+        let handles = CollectiveGroup::new(world);
+        let sw = Stopwatch::new();
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|mut h| {
+                std::thread::spawn(move || {
+                    let mut buf = vec![1.0f32; n_elems];
+                    h.allreduce(&mut buf);
+                    buf[0]
+                })
+            })
+            .collect();
+        for j in joins {
+            let v = j.join().unwrap();
+            assert_eq!(v, world as f32);
+        }
+        let dt = sw.elapsed();
+        let algbw = (n_elems * 4) as f64 / dt / 1e9;
+        rows.push(vec![
+            world.to_string(),
+            format!("{:.3}s", dt),
+            format!("{:.2} GB/s", algbw),
+        ]);
+    }
+    println!("{}", render_table(&["ranks", "wall", "alg bandwidth"], &rows));
+    println!("(single-core testbed: ranks time-share one CPU, so wall time \
+              grows with ranks; the correctness and traffic pattern are \
+              what this cross-check exercises)");
+    Ok(())
+}

@@ -1,0 +1,200 @@
+"""AOT compiler: lower the L2/L1 stack to HLO text + manifest.json.
+
+This is the ONLY bridge between Python and Rust.  Each jitted function is
+lowered to StableHLO, converted to an XlaComputation, and dumped as HLO
+**text** (NOT ``.serialize()`` — jax >= 0.5 emits 64-bit instruction ids
+that the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly, see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  manifest.json                      — the contract with rust/src/runtime
+  <preset>_train_<variant>_b<B>_s<S>.hlo.txt
+  <preset>_fwd_<variant>_b<B>_s<S>.hlo.txt
+  <preset>_apply_<opt>.hlo.txt
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts \
+            --preset bert-tiny --batch 8 --seq 128 [--variants all]
+
+`make artifacts` drives this; it is a no-op when inputs are unchanged.
+"""
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+from . import model as M
+
+# (fused, dtype) variants — the Table 4/5 axes (paper §5.1).
+VARIANTS = {
+    "unfused_f32": dict(fused=False, dtype="f32"),   # "Non-Optimized"
+    "bf16": dict(fused=False, dtype="bf16"),         # "FP16" column analogue
+    "fused_f32": dict(fused=True, dtype="f32"),      # fusion only
+    "fused_bf16": dict(fused=True, dtype="bf16"),    # "FP16 & Fused Kernel"
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    from jax._src.lib import xla_client as xc
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_meta(spec):
+    return {"shape": list(spec.shape), "dtype": str(np.dtype(spec.dtype))}
+
+
+def lower_one(fn, specs, path):
+    """Lower ``fn`` at ``specs`` and write HLO text to ``path``."""
+    t0 = time.time()
+    lowered = fn.lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return {"file": os.path.basename(path),
+            "inputs": [_spec_meta(s) for s in specs],
+            "hlo_bytes": len(text),
+            "lower_seconds": round(time.time() - t0, 2)}
+
+
+def layout_meta(cfg):
+    out = []
+    off = 0
+    for name, shape in M.param_layout(cfg):
+        n = int(np.prod(shape))
+        out.append({"name": name, "offset": off, "shape": list(shape)})
+        off += n
+    return out
+
+
+def build(out_dir, preset, batch, seq, variants, optimizers, fwd_batch=None,
+          phase2=False):
+    cfg0 = M.PRESETS[preset]
+    os.makedirs(out_dir, exist_ok=True)
+    arts = {}
+
+    for vname in variants:
+        v = VARIANTS[vname]
+        cfg = dataclasses.replace(cfg0, **v)
+        fn, specs = M.make_train_step(cfg, batch, seq)
+        key = f"train_{vname}_b{batch}_s{seq}"
+        path = os.path.join(out_dir, f"{preset}_{key}.hlo.txt")
+        print(f"[aot] lowering {preset} {key} ...", flush=True)
+        arts[key] = lower_one(fn, specs + (), path)
+        arts[key]["outputs"] = ["loss", "mlm_loss", "nsp_loss", "mlm_acc",
+                                "grads_flat", "grad_norm"]
+
+    if phase2:
+        # phase-2 train step: seq 512, smaller per-GPU batch (paper Table 6).
+        b2 = max(1, batch // 8)
+        cfg = dataclasses.replace(cfg0, **VARIANTS["fused_f32"])
+        fn, specs = M.make_train_step(cfg, b2, 512)
+        key = f"train_fused_f32_b{b2}_s512"
+        path = os.path.join(out_dir, f"{preset}_{key}.hlo.txt")
+        print(f"[aot] lowering {preset} {key} (phase 2) ...", flush=True)
+        arts[key] = lower_one(fn, specs, path)
+        arts[key]["outputs"] = ["loss", "mlm_loss", "nsp_loss", "mlm_acc",
+                                "grads_flat", "grad_norm"]
+
+    # eval-only forward (fused f32)
+    fb = fwd_batch or batch
+    cfg = dataclasses.replace(cfg0, **VARIANTS["fused_f32"])
+    fn, specs = M.make_forward(cfg, fb, seq)
+    key = f"fwd_fused_f32_b{fb}_s{seq}"
+    path = os.path.join(out_dir, f"{preset}_{key}.hlo.txt")
+    print(f"[aot] lowering {preset} {key} ...", flush=True)
+    arts[key] = lower_one(fn, specs, path)
+    arts[key]["outputs"] = ["loss", "mlm_loss", "nsp_loss", "mlm_acc"]
+
+    for opt in optimizers:
+        fn, specs = M.make_apply(cfg0, opt)
+        key = f"apply_{opt}"
+        path = os.path.join(out_dir, f"{preset}_{key}.hlo.txt")
+        print(f"[aot] lowering {preset} {key} ...", flush=True)
+        arts[key] = lower_one(fn, specs, path)
+        arts[key]["outputs"] = ["params", "m", "v"]
+
+    # fine-tuning (QA span head, paper §3.1.2/§5.3)
+    cfg = dataclasses.replace(cfg0, **VARIANTS["fused_f32"])
+    fn, specs = M.make_qa_train_step(cfg, batch, seq)
+    key = f"qa_train_b{batch}_s{seq}"
+    path = os.path.join(out_dir, f"{preset}_{key}.hlo.txt")
+    print(f"[aot] lowering {preset} {key} ...", flush=True)
+    arts[key] = lower_one(fn, specs, path)
+    arts[key]["outputs"] = ["loss", "start_acc", "end_acc", "exact",
+                            "grads_flat", "grad_norm"]
+    fn, specs = M.make_qa_apply(cfg0)
+    key = "qa_apply"
+    path = os.path.join(out_dir, f"{preset}_{key}.hlo.txt")
+    print(f"[aot] lowering {preset} {key} ...", flush=True)
+    arts[key] = lower_one(fn, specs, path)
+    arts[key]["outputs"] = ["params", "m", "v"]
+
+    return {
+        "preset": preset,
+        "config": {
+            "vocab_size": cfg0.vocab_size, "hidden": cfg0.hidden,
+            "layers": cfg0.layers, "heads": cfg0.heads,
+            "intermediate": cfg0.intermediate, "max_seq": cfg0.max_seq,
+            "type_vocab": cfg0.type_vocab,
+        },
+        "param_count": M.param_count(cfg0),
+        "finetune_param_count": M.finetune_param_count(cfg0),
+        "batch": batch, "seq": seq,
+        "layout": layout_meta(cfg0),
+        "artifacts": arts,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", action="append", default=None,
+                    help="model preset(s); default: bert-micro + bert-tiny")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--variants", default="all",
+                    help="comma list or 'all': " + ",".join(VARIANTS))
+    ap.add_argument("--optimizers", default="lamb,adam")
+    ap.add_argument("--phase2", action="store_true", default=True,
+                    help="also emit the seq-512 phase-2 train step")
+    ap.add_argument("--no-phase2", dest="phase2", action="store_false")
+    args = ap.parse_args()
+
+    presets = args.preset or ["bert-micro", "bert-tiny"]
+    variants = (list(VARIANTS) if args.variants == "all"
+                else args.variants.split(","))
+    optimizers = args.optimizers.split(",") if args.optimizers else []
+
+    manifest = {"version": 1, "jax_version": jax.__version__, "models": {}}
+    for preset in presets:
+        if preset == "bert-micro":
+            # micro: CI-speed integration-test model, tiny shapes
+            m = build(args.out_dir, preset, batch=2, seq=32,
+                      variants=variants, optimizers=optimizers, phase2=False)
+        else:
+            m = build(args.out_dir, preset, batch=args.batch, seq=args.seq,
+                      variants=variants, optimizers=optimizers,
+                      phase2=args.phase2)
+        manifest["models"][preset] = m
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {man_path} "
+          f"({sum(len(m['artifacts']) for m in manifest['models'].values())} "
+          f"artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""L2 perf audit: op-count statistics over lowered HLO artifacts.
+
+Used by the EXPERIMENTS.md §Perf pass: counts HLO instructions by opcode
+per artifact, so the fused-vs-unfused structural claim (§4.3) and any
+regression in graph size are visible without running anything.
+
+Usage: cd python && python -m compile.hlo_stats [--dir ../artifacts]
+"""
+
+import argparse
+import collections
+import os
+import re
+
+OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\]{},\s]*?\s(\w+)\(")
+
+INTERESTING = ["fusion", "tanh", "multiply", "add", "dot", "transpose",
+               "reduce", "exponential", "convert", "while", "custom-call"]
+
+
+def stats_for(path):
+    counts = collections.Counter()
+    total = 0
+    with open(path) as f:
+        for line in f:
+            m = OP_RE.match(line)
+            if m:
+                counts[m.group(1)] += 1
+                total += 1
+    return total, counts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="../artifacts")
+    ap.add_argument("--filter", default="")
+    args = ap.parse_args()
+
+    rows = []
+    for name in sorted(os.listdir(args.dir)):
+        if not name.endswith(".hlo.txt") or args.filter not in name:
+            continue
+        total, counts = stats_for(os.path.join(args.dir, name))
+        rows.append((name, total, counts))
+
+    width = max((len(r[0]) for r in rows), default=20)
+    print(f"{'artifact':<{width}}  {'ops':>6}  " +
+          "  ".join(f"{op:>10}" for op in INTERESTING))
+    for name, total, counts in rows:
+        print(f"{name:<{width}}  {total:>6}  " +
+              "  ".join(f"{counts.get(op, 0):>10}" for op in INTERESTING))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Layer-1 Pallas kernels for bertdist.
+
+All kernels lower with ``interpret=True`` so the emitted HLO runs on any
+PJRT backend (the Rust coordinator uses the CPU plugin).  Each kernel has
+a pure-jnp oracle in :mod:`ref` and a hypothesis-swept pytest in
+``python/tests/test_kernels.py``.
+"""
+
+from . import ref
+from .fused_gelu import fused_gelu
+from .fused_layernorm import fused_layernorm
+from .fused_lamb import fused_lamb
+from .attention import fused_attention
+
+__all__ = [
+    "ref",
+    "fused_gelu",
+    "fused_layernorm",
+    "fused_lamb",
+    "fused_attention",
+]

@@ -1,0 +1,94 @@
+"""Encoder self-attention core as a Pallas kernel.
+
+BERT's encoder attention (paper §2.1) is the compute hot-spot: two batched
+matmuls around a masked softmax.  On CUDA the paper relies on cuBLAS +
+elementwise kernels; on TPU the insight maps to an MXU-friendly tiled
+kernel (DESIGN.md §3 Hardware-Adaptation):
+
+  * one program instance per (batch, head): Q·Kᵀ runs on the MXU with the
+    full [S, D] tiles resident in VMEM (S ≤ 512, D = head_dim ≤ 128, so
+    QKV + scores fit comfortably: 3·S·D·4 + S·S·4 ≈ 1.8 MiB at S=512),
+  * the softmax (max-subtract, exp, normalize) stays fused in the same
+    kernel — no HBM round trip for the S×S score matrix, which is the
+    whole point (the unfused path materializes scores twice),
+  * the additive mask is applied in-register before the max.
+
+For very long sequences this would become a FlashAttention-style k-loop
+with running max/denominator; BERT phase-2 tops out at S=512 where the
+single-tile variant is already VMEM-resident, so we keep the simpler
+schedule (documented trade-off, DESIGN.md §9).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, mask_ref, scale_ref, o_ref):
+    """Fused QKᵀ → mask → softmax → ·V for one (batch, head) tile."""
+    q = q_ref[0]            # [S, D]
+    k = k_ref[0]            # [S, D]
+    v = v_ref[0]            # [S, D]
+    mask = mask_ref[0]      # [1, S] additive
+    scale = scale_ref[0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    scores = scores + mask  # broadcast [1,S] over rows
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(probs, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fused_attention(q, k, v, mask, scale):
+    """Fused attention.
+
+    Args:
+      q, k, v: f32[B, H, S, D].
+      mask: f32[B, 1, 1, S] additive mask (0 keep / -1e9 drop).
+      scale: f32 scalar (1/sqrt(D)).
+    Returns f32[B, H, S, D].
+    """
+    b, h, s, d = q.shape
+    bh = b * h
+    q2 = q.reshape(bh, s, d)
+    k2 = k.reshape(bh, s, d)
+    v2 = v.reshape(bh, s, d)
+    # mask per (batch) broadcast over heads -> [bh, 1, s]
+    mask2 = jnp.broadcast_to(mask.reshape(b, 1, 1, s), (b, h, 1, s)).reshape(bh, 1, s)
+    scale_arr = jnp.asarray(scale, jnp.float32).reshape(1)
+
+    out = pl.pallas_call(
+        _attention_kernel,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1, s), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), jnp.float32),
+        interpret=True,
+    )(q2, k2, v2, mask2, scale_arr)
+    return out.reshape(b, h, s, d)
+
+
+def vmem_bytes(s, d, dtype_bytes=4):
+    """VMEM per (batch, head) instance: Q,K,V,O tiles + SxS scores."""
+    return (4 * s * d + s * s) * dtype_bytes
+
+
+def mxu_utilization_estimate(s, d):
+    """Fraction of MXU 128x128 tiles carrying useful work for QK^T.
+
+    The MXU processes ceil(S/128)*ceil(S/128)*ceil(D/128) tiles; useful
+    work is S*S*D. Perfectly aligned shapes (S,D multiples of 128) => 1.0.
+    """
+    import math
+    tiles = math.ceil(s / 128) * math.ceil(s / 128) * math.ceil(d / 128)
+    useful = (s * s * d) / (tiles * 128 * 128 * 128)
+    return useful

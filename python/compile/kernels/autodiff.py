@@ -1,0 +1,195 @@
+"""custom_vjp wrappers that make the fused Pallas kernels differentiable.
+
+Interpret-mode ``pallas_call`` does not support reverse-mode autodiff, so
+each fused forward kernel gets an explicit VJP:
+
+* ``gelu``      — backward is itself a fused Pallas kernel (one pass:
+                  recompute tanh(u) and apply the analytic dGELU).
+* ``layernorm`` — dx is a fused Pallas kernel (one pass per row tile,
+                  using the saved inverse-σ); dγ/dβ are cross-row
+                  reductions left to XLA (they fuse into one pass).
+* ``attention`` — backward is the standard einsum chain; it is matmul-
+                  dominated, which the MXU (and XLA CPU) already handles
+                  at peak, so there is nothing to fuse by hand.
+
+This mirrors Apex: fused forward + fused elementwise backward, matmul
+backward delegated to the BLAS layer.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .fused_gelu import _gelu_kernel, DEFAULT_BLOCK_ROWS
+from .fused_layernorm import EPS
+from .attention import fused_attention as _fused_attention_fwd
+from .ref import GELU_A, GELU_B, GELU_C
+
+
+# ---------------------------------------------------------------- GELU --
+
+def _dgelu_kernel(x_ref, dy_ref, dx_ref):
+    """Fused dGELU: one VMEM pass, recomputes tanh(u) instead of saving it.
+
+    y  = a*x*(1 + t),  t = tanh(u),  u = b*(x + c*x^3)
+    dy/dx = a*(1 + t) + a*x*(1 - t^2)*b*(1 + 3*c*x^2)
+    """
+    x = x_ref[...]
+    dy = dy_ref[...]
+    u = GELU_B * (x + GELU_C * x * x * x)
+    t = jnp.tanh(u)
+    du = GELU_B * (1.0 + 3.0 * GELU_C * x * x)
+    dx_ref[...] = dy * (GELU_A * (1.0 + t) + GELU_A * x * (1.0 - t * t) * du)
+
+
+def _tiled_call_2(kernel, a, b, out_dtype, block_rows=DEFAULT_BLOCK_ROWS):
+    """Run a 2-input elementwise kernel tiled over rows of [rows, feat]."""
+    rows, feat = a.shape
+    if rows % block_rows != 0:
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((rows, feat), out_dtype),
+            interpret=True,
+        )(a, b)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, feat), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, feat), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, feat), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, feat), out_dtype),
+        interpret=True,
+    )(a, b)
+
+
+@jax.custom_vjp
+def gelu(x):
+    """Differentiable fused GELU (forward + backward both Pallas)."""
+    from .fused_gelu import fused_gelu
+    return fused_gelu(x)
+
+
+def _gelu_fwd(x):
+    from .fused_gelu import fused_gelu
+    return fused_gelu(x), x
+
+
+def _gelu_bwd(x, dy):
+    shape = x.shape
+    feat = shape[-1]
+    rows = x.size // feat
+    dx = _tiled_call_2(_dgelu_kernel, x.reshape(rows, feat),
+                       dy.reshape(rows, feat), x.dtype)
+    return (dx.reshape(shape),)
+
+
+gelu.defvjp(_gelu_fwd, _gelu_bwd)
+
+
+# ----------------------------------------------------------- LayerNorm --
+
+def _dln_dx_kernel(xhat_ref, dyg_ref, inv_ref, dx_ref):
+    """Fused LayerNorm dx given xhat, dy*gamma and inv-sigma per row.
+
+    dx = inv * (dyg - mean(dyg) - xhat * mean(dyg * xhat))
+    """
+    xhat = xhat_ref[...]
+    dyg = dyg_ref[...]
+    inv = inv_ref[...]
+    feat = xhat.shape[-1]
+    m1 = jnp.sum(dyg, axis=-1, keepdims=True) / feat
+    m2 = jnp.sum(dyg * xhat, axis=-1, keepdims=True) / feat
+    dx_ref[...] = inv * (dyg - m1 - xhat * m2)
+
+
+@jax.custom_vjp
+def layernorm(x, gamma, beta):
+    """Differentiable fused LayerNorm over the last axis."""
+    from .fused_layernorm import fused_layernorm
+    return fused_layernorm(x, gamma, beta)
+
+
+def _ln_fwd(x, gamma, beta):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + EPS)
+    xhat = (x - mu) * inv
+    y = xhat * gamma + beta
+    return y, (xhat, inv, gamma)
+
+
+def _ln_bwd(res, dy):
+    xhat, inv, gamma = res
+    shape = xhat.shape
+    feat = shape[-1]
+    rows = xhat.size // feat
+    dyg = (dy * gamma).reshape(rows, feat)
+    xhat2 = xhat.reshape(rows, feat)
+    inv2 = jnp.broadcast_to(inv, shape).reshape(rows, feat)
+
+    if rows % DEFAULT_BLOCK_ROWS_LN != 0:
+        dx = pl.pallas_call(
+            _dln_dx_kernel,
+            out_shape=jax.ShapeDtypeStruct((rows, feat), xhat.dtype),
+            interpret=True,
+        )(xhat2, dyg, inv2)
+    else:
+        br = DEFAULT_BLOCK_ROWS_LN
+        dx = pl.pallas_call(
+            _dln_dx_kernel,
+            grid=(rows // br,),
+            in_specs=[
+                pl.BlockSpec((br, feat), lambda i: (i, 0)),
+                pl.BlockSpec((br, feat), lambda i: (i, 0)),
+                pl.BlockSpec((br, feat), lambda i: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((br, feat), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((rows, feat), xhat.dtype),
+            interpret=True,
+        )(xhat2, dyg, inv2)
+
+    axes = tuple(range(len(shape) - 1))
+    dgamma = jnp.sum(dy * xhat, axis=axes)
+    dbeta = jnp.sum(dy, axis=axes)
+    return dx.reshape(shape), dgamma, dbeta
+
+
+DEFAULT_BLOCK_ROWS_LN = DEFAULT_BLOCK_ROWS
+layernorm.defvjp(_ln_fwd, _ln_bwd)
+
+
+# ----------------------------------------------------------- Attention --
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def attention(q, k, v, mask, scale):
+    """Differentiable fused attention (forward Pallas, backward einsum)."""
+    return _fused_attention_fwd(q, k, v, mask, scale)
+
+
+def _attn_fwd(q, k, v, mask, scale):
+    out = _fused_attention_fwd(q, k, v, mask, scale)
+    return out, (q, k, v, mask)
+
+
+def _attn_bwd(scale, res, dout):
+    q, k, v, mask = res
+    # Recompute probabilities (cheaper than saving the S x S matrix).
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) * scale + mask
+    probs = ref.softmax(scores, axis=-1)
+    dv = jnp.einsum("bhst,bhsd->bhtd", probs, dout)
+    dprobs = jnp.einsum("bhsd,bhtd->bhst", dout, v)
+    # softmax backward: dscores = probs * (dprobs - sum(dprobs*probs))
+    tmp = jnp.sum(dprobs * probs, axis=-1, keepdims=True)
+    dscores = probs * (dprobs - tmp)
+    dq = jnp.einsum("bhst,bhtd->bhsd", dscores, k) * scale
+    dk = jnp.einsum("bhst,bhsd->bhtd", dscores, q) * scale
+    dmask = jnp.sum(dscores, axis=(1, 2), keepdims=True)
+    return dq, dk, dv, dmask
+
+
+attention.defvjp(_attn_fwd, _attn_bwd)

@@ -1,0 +1,123 @@
+"""Fused LAMB optimizer step as a Pallas kernel (paper §4.3 fuses the
+optimizer with Apex; §2.1 motivates LAMB for large-batch BERT).
+
+Unfused LAMB touches each of (p, g, m, v) several times: moment updates,
+bias correction, the update direction, two norms, and the final axpy.  The
+fused kernel does all elementwise work in ONE pass per tile and
+accumulates the two norms (‖p‖², ‖update‖²) into scratch, then a second
+tiny pass applies the trust-ratio-scaled update.
+
+Because the trust ratio is a *per-tensor* scalar that depends on a full
+reduction, the kernel is structured as a two-phase grid:
+  phase A (grid over tiles): m' = β₁m+(1-β₁)g ; v' = β₂v+(1-β₂)g² ;
+           u = m̂/(√v̂+ε)+λp ; accumulate Σp², Σu² ; write m', v', u
+  phase B (host-level, fused into the same jitted fn): trust = ‖p‖/‖u‖ ;
+           p' = p − lr·trust·u   (a single fused axpy pallas pass)
+
+This mirrors how Apex's multi-tensor LAMB splits into two multi-tensor
+launches on CUDA.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-6
+WEIGHT_DECAY = 0.01
+DEFAULT_BLOCK = 65536  # elements per tile: 4 arrays * 256 KiB = 1 MiB VMEM
+
+
+def _lamb_phase_a_kernel(p_ref, g_ref, m_ref, v_ref, c1_ref, c2_ref,
+                         m_out, v_out, u_out, psq_out, usq_out):
+    """One fused pass: moments, bias-corrected update dir, norm partials."""
+    p = p_ref[...]
+    g = g_ref[...]
+    m = BETA1 * m_ref[...] + (1.0 - BETA1) * g
+    v = BETA2 * v_ref[...] + (1.0 - BETA2) * g * g
+    m_hat = m / c1_ref[0]
+    v_hat = v / c2_ref[0]
+    u = m_hat / (jnp.sqrt(v_hat) + EPS) + WEIGHT_DECAY * p
+    m_out[...] = m
+    v_out[...] = v
+    u_out[...] = u
+    psq_out[0] = jnp.sum(p * p)
+    usq_out[0] = jnp.sum(u * u)
+
+
+def _lamb_phase_b_kernel(p_ref, u_ref, s_ref, p_out):
+    """Trust-scaled axpy: p' = p - (lr*trust) * u."""
+    p_out[...] = p_ref[...] - s_ref[0] * u_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fused_lamb(p, g, m, v, step, lr):
+    """Fused LAMB update for one flat f32 tensor.
+
+    Args:
+      p, g, m, v: f32[N] parameter, gradient, first/second moments.
+      step: f32 scalar (1-based step count, for bias correction).
+      lr: f32 scalar learning rate.
+    Returns: (p_new, m_new, v_new).
+    """
+    n = p.shape[0]
+    c1 = (1.0 - BETA1 ** step).reshape(1)
+    c2 = (1.0 - BETA2 ** step).reshape(1)
+
+    block = DEFAULT_BLOCK if n % DEFAULT_BLOCK == 0 else n
+    grid_n = n // block
+    m_new, v_new, u, psq, usq = pl.pallas_call(
+        _lamb_phase_a_kernel,
+        grid=(grid_n,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), p.dtype),
+            jax.ShapeDtypeStruct((n,), p.dtype),
+            jax.ShapeDtypeStruct((n,), p.dtype),
+            jax.ShapeDtypeStruct((grid_n,), p.dtype),
+            jax.ShapeDtypeStruct((grid_n,), p.dtype),
+        ],
+        interpret=True,
+    )(p, g, m, v, c1, c2)
+
+    w_norm = jnp.sqrt(jnp.sum(psq))
+    u_norm = jnp.sqrt(jnp.sum(usq))
+    trust = jnp.where(w_norm > 0.0,
+                      jnp.where(u_norm > 0.0, w_norm / u_norm, 1.0), 1.0)
+    scale = (lr * trust).reshape(1)
+
+    p_new = pl.pallas_call(
+        _lamb_phase_b_kernel,
+        grid=(grid_n,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), p.dtype),
+        interpret=True,
+    )(p, u, scale)
+    return p_new, m_new, v_new
+
+
+def vmem_bytes(block=DEFAULT_BLOCK, dtype_bytes=4):
+    """Phase-A VMEM per instance: 4 in tiles + 3 out tiles (+scalars)."""
+    return 7 * block * dtype_bytes

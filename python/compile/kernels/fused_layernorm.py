@@ -1,0 +1,72 @@
+"""Fused LayerNorm as a Pallas kernel (paper §4.3).
+
+Unfused LayerNorm is 4+ passes over the activation (mean, variance,
+normalize, affine).  The fused kernel computes both row statistics and the
+normalized/affine output in a single VMEM residency of the tile: one HBM
+read, one HBM write per element, plus a broadcast read of gamma/beta.
+
+BlockSpec: tile over rows (token axis), keep the feature axis whole so the
+row reduction is a single in-register reduction along lanes.  gamma/beta
+are replicated to every program instance (block index map pins them to
+block 0).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+EPS = 1e-12
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...]
+    feat = x.shape[-1]
+    mu = jnp.sum(x, axis=-1, keepdims=True) / feat
+    d = x - mu
+    var = jnp.sum(d * d, axis=-1, keepdims=True) / feat
+    inv = jax.lax.rsqrt(var + EPS)
+    o_ref[...] = d * inv * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def fused_layernorm(x, gamma, beta, block_rows=DEFAULT_BLOCK_ROWS):
+    """Fused LayerNorm over the last axis of ``x`` ([..., feat])."""
+    orig_shape = x.shape
+    feat = orig_shape[-1]
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, feat)
+    g2 = gamma.reshape(1, feat)
+    b2 = beta.reshape(1, feat)
+
+    if rows % block_rows != 0:
+        out = pl.pallas_call(
+            _layernorm_kernel,
+            out_shape=jax.ShapeDtypeStruct((rows, feat), x.dtype),
+            interpret=True,
+        )(x2, g2, b2)
+        return out.reshape(orig_shape)
+
+    grid = (rows // block_rows,)
+    out = pl.pallas_call(
+        _layernorm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, feat), lambda i: (i, 0)),
+            pl.BlockSpec((1, feat), lambda i: (0, 0)),  # gamma: replicated
+            pl.BlockSpec((1, feat), lambda i: (0, 0)),  # beta: replicated
+        ],
+        out_specs=pl.BlockSpec((block_rows, feat), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, feat), x.dtype),
+        interpret=True,
+    )(x2, g2, b2)
+    return out.reshape(orig_shape)
+
+
+def vmem_bytes(block_rows, feat, dtype_bytes=4):
+    """VMEM per instance: in tile + out tile + gamma + beta."""
+    return (2 * block_rows + 2) * feat * dtype_bytes

@@ -1,0 +1,506 @@
+"""Layer-2: BERT encoder forward/backward in JAX (build-time only).
+
+The paper (§2.1, §3.3) pretrains BERT-large with the two standard
+objectives: masked-LM and next-sentence prediction.  This module defines
+the model as a pure function over a SINGLE FLAT f32 parameter vector
+(DESIGN.md §4 "flat-parameter convention") so that the Rust coordinator
+sees one contiguous gradient buffer — the unit that ring allreduce,
+bucketed overlap, and gradient accumulation all operate on.
+
+Variants (paper §4.2 / §4.3):
+  * ``fused=True``  — GELU / LayerNorm / attention run as Pallas kernels
+    (with fused backward, see kernels.autodiff);
+  * ``fused=False`` — the paper's op-by-op decomposition (7-op GELU etc.);
+  * ``dtype='bf16'``— AMP-style mixed precision: matmul inputs cast to
+    bfloat16 (the TPU analogue of FP16 TensorCore math), accumulation and
+    numerically-dangerous ops (softmax, layernorm, exp/log) kept in f32,
+    master weights stay f32 — exactly the paper's safe/dangerous split;
+  * ``dtype='f32'`` — full precision baseline.
+
+Everything here is lowered ONCE by aot.py to HLO text; Python never runs
+on the training path.
+"""
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import autodiff as fused
+from .kernels import ref as unfused
+from .kernels.fused_lamb import fused_lamb
+
+IGNORE_INDEX = -1  # mlm_labels value for unmasked positions
+
+
+# ------------------------------------------------------------- configs --
+
+@dataclasses.dataclass(frozen=True)
+class BertConfig:
+    """Architecture hyper-parameters (paper §2.1: BERT-large shapes)."""
+    vocab_size: int = 8192
+    hidden: int = 256
+    layers: int = 4
+    heads: int = 4
+    intermediate: int = 1024
+    max_seq: int = 128
+    type_vocab: int = 2
+    fused: bool = True
+    dtype: str = "f32"  # "f32" | "bf16"
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+
+# Named presets.  bert-large is the paper's target; the smaller ones are
+# what a 1-core CPU testbed can actually train (DESIGN.md §2 substitution).
+PRESETS: Dict[str, BertConfig] = {
+    "bert-micro": BertConfig(vocab_size=512, hidden=64, layers=2, heads=2,
+                             intermediate=256, max_seq=64),
+    # max_seq=512 so phase-2 (seq 512) shares the phase-1 position table,
+    # exactly like the paper's two-phase schedule (§3.3).
+    "bert-tiny": BertConfig(vocab_size=8192, hidden=128, layers=2, heads=2,
+                            intermediate=512, max_seq=512),
+    "bert-mini": BertConfig(vocab_size=8192, hidden=256, layers=4, heads=4,
+                            intermediate=1024, max_seq=512),
+    "bert-medium": BertConfig(vocab_size=8192, hidden=512, layers=8, heads=8,
+                              intermediate=2048, max_seq=512),
+    "bert-base": BertConfig(vocab_size=30522, hidden=768, layers=12, heads=12,
+                            intermediate=3072, max_seq=512),
+    "bert-large": BertConfig(vocab_size=30522, hidden=1024, layers=24,
+                             heads=16, intermediate=4096, max_seq=512),
+}
+
+
+# ------------------------------------------------------- param layout  --
+
+def param_layout(cfg: BertConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat parameter vector.
+
+    The order is the serialization contract with the Rust side
+    (manifest.json) — NEVER reorder without bumping the manifest version.
+    Names follow huggingface-style grouping so the Rust `model::layout`
+    module can classify tensors into the paper's Figure-4 groups
+    (embedding / attention / intermediate / output / other).
+    """
+    h, i, v = cfg.hidden, cfg.intermediate, cfg.vocab_size
+    out: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embeddings.word_embeddings", (v, h)),
+        ("embeddings.position_embeddings", (cfg.max_seq, h)),
+        ("embeddings.token_type_embeddings", (cfg.type_vocab, h)),
+        ("embeddings.layernorm.gamma", (h,)),
+        ("embeddings.layernorm.beta", (h,)),
+    ]
+    for l in range(cfg.layers):
+        p = f"encoder.layer.{l}"
+        out += [
+            (f"{p}.attention.query.weight", (h, h)),
+            (f"{p}.attention.query.bias", (h,)),
+            (f"{p}.attention.key.weight", (h, h)),
+            (f"{p}.attention.key.bias", (h,)),
+            (f"{p}.attention.value.weight", (h, h)),
+            (f"{p}.attention.value.bias", (h,)),
+            (f"{p}.attention.output.weight", (h, h)),
+            (f"{p}.attention.output.bias", (h,)),
+            (f"{p}.attention.layernorm.gamma", (h,)),
+            (f"{p}.attention.layernorm.beta", (h,)),
+            (f"{p}.intermediate.weight", (h, i)),
+            (f"{p}.intermediate.bias", (i,)),
+            (f"{p}.output.weight", (i, h)),
+            (f"{p}.output.bias", (h,)),
+            (f"{p}.output.layernorm.gamma", (h,)),
+            (f"{p}.output.layernorm.beta", (h,)),
+        ]
+    out += [
+        ("cls.predictions.transform.weight", (h, h)),
+        ("cls.predictions.transform.bias", (h,)),
+        ("cls.predictions.layernorm.gamma", (h,)),
+        ("cls.predictions.layernorm.beta", (h,)),
+        ("cls.predictions.bias", (v,)),           # decoder tied to word emb
+        ("cls.pooler.weight", (h, h)),
+        ("cls.pooler.bias", (h,)),
+        ("cls.seq_relationship.weight", (h, 2)),
+        ("cls.seq_relationship.bias", (2,)),
+    ]
+    return out
+
+
+def param_count(cfg: BertConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in param_layout(cfg))
+
+
+def init_params(cfg: BertConfig, seed: int = 0) -> np.ndarray:
+    """Truncated-normal(0.02) init like BERT; returns the flat f32 vector."""
+    rng = np.random.RandomState(seed)
+    chunks = []
+    for name, shape in param_layout(cfg):
+        n = int(np.prod(shape))
+        if name.endswith(".gamma"):
+            chunks.append(np.ones(n, np.float32))
+        elif name.endswith((".beta", ".bias")):
+            chunks.append(np.zeros(n, np.float32))
+        else:
+            w = rng.normal(0.0, 0.02, size=n)
+            w = np.clip(w, -0.04, 0.04)  # cheap truncation at 2 sigma
+            chunks.append(w.astype(np.float32))
+    return np.concatenate(chunks)
+
+
+def unflatten(flat, cfg: BertConfig):
+    """Split the flat vector into the named parameter dict (jit-traceable)."""
+    params = {}
+    off = 0
+    for name, shape in param_layout(cfg):
+        n = int(np.prod(shape))
+        params[name] = flat[off:off + n].reshape(shape)
+        off += n
+    return params
+
+
+# ------------------------------------------------------------ forward  --
+
+def _linear(x, w, b, cfg: BertConfig):
+    """Matmul in the compute dtype (bf16 under AMP), f32 accumulate."""
+    if cfg.dtype == "bf16":
+        y = jnp.dot(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+                    preferred_element_type=jnp.float32)
+    else:
+        y = jnp.dot(x, w)
+    return y + b
+
+
+def _gelu(x, cfg: BertConfig):
+    return fused.gelu(x) if cfg.fused else unfused.gelu_unfused(x)
+
+
+def _layernorm(x, g, b, cfg: BertConfig):
+    # LayerNorm is numerically dangerous in half precision (paper §4.2):
+    # always computed in f32, mirroring AMP's blacklist.
+    x = x.astype(jnp.float32)
+    if cfg.fused:
+        return fused.layernorm(x, g, b)
+    return unfused.layernorm_unfused(x, g, b)
+
+
+def _attention_block(x, p, prefix, mask, cfg: BertConfig):
+    b, s, h = x.shape
+    nh, hd = cfg.heads, cfg.head_dim
+
+    def split_heads(t):
+        return t.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+
+    q = split_heads(_linear(x, p[f"{prefix}.query.weight"],
+                            p[f"{prefix}.query.bias"], cfg))
+    k = split_heads(_linear(x, p[f"{prefix}.key.weight"],
+                            p[f"{prefix}.key.bias"], cfg))
+    v = split_heads(_linear(x, p[f"{prefix}.value.weight"],
+                            p[f"{prefix}.value.bias"], cfg))
+    scale = 1.0 / float(np.sqrt(hd))
+    if cfg.fused:
+        ctx = fused.attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), mask, scale)
+    else:
+        ctx = unfused.attention(q, k, v, mask, scale)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, h)
+    out = _linear(ctx, p[f"{prefix}.output.weight"],
+                  p[f"{prefix}.output.bias"], cfg)
+    return _layernorm(x + out, p[f"{prefix}.layernorm.gamma"],
+                      p[f"{prefix}.layernorm.beta"], cfg)
+
+
+def encoder_forward(params, input_ids, token_type_ids, attention_mask,
+                    cfg: BertConfig):
+    """BERT encoder: embeddings + L transformer layers.
+
+    Returns the final hidden states f32[B, S, H].
+    """
+    b, s = input_ids.shape
+    positions = jnp.arange(s)[None, :]
+    x = (params["embeddings.word_embeddings"][input_ids]
+         + params["embeddings.position_embeddings"][positions]
+         + params["embeddings.token_type_embeddings"][token_type_ids])
+    x = _layernorm(x, params["embeddings.layernorm.gamma"],
+                   params["embeddings.layernorm.beta"], cfg)
+
+    # additive mask: 0 for real tokens, -1e9 for padding
+    mask = (1.0 - attention_mask.astype(jnp.float32)) * -1e9
+    mask = mask[:, None, None, :]
+
+    for l in range(cfg.layers):
+        p = f"encoder.layer.{l}"
+        x = _attention_block(x, params, f"{p}.attention", mask, cfg)
+        inter = _gelu(_linear(x, params[f"{p}.intermediate.weight"],
+                              params[f"{p}.intermediate.bias"], cfg), cfg)
+        out = _linear(inter, params[f"{p}.output.weight"],
+                      params[f"{p}.output.bias"], cfg)
+        x = _layernorm(x + out, params[f"{p}.output.layernorm.gamma"],
+                       params[f"{p}.output.layernorm.beta"], cfg)
+    return x
+
+
+def pretrain_loss(flat_params, input_ids, token_type_ids, attention_mask,
+                  mlm_labels, nsp_labels, cfg: BertConfig):
+    """Masked-LM + NSP loss (paper §2.1 objectives).
+
+    mlm_labels: i32[B,S], IGNORE_INDEX (-1) at unmasked positions.
+    nsp_labels: i32[B] in {0,1}.
+    Returns (loss, (mlm_loss, nsp_loss, mlm_acc)).
+    """
+    p = unflatten(flat_params, cfg)
+    hidden = encoder_forward(p, input_ids, token_type_ids, attention_mask, cfg)
+
+    # --- MLM head: transform -> layernorm -> tied decoder
+    t = _gelu(_linear(hidden, p["cls.predictions.transform.weight"],
+                      p["cls.predictions.transform.bias"], cfg), cfg)
+    t = _layernorm(t, p["cls.predictions.layernorm.gamma"],
+                   p["cls.predictions.layernorm.beta"], cfg)
+    logits = _linear(t, p["embeddings.word_embeddings"].T,
+                     p["cls.predictions.bias"], cfg)  # [B,S,V]
+
+    mask = (mlm_labels != IGNORE_INDEX)
+    safe_labels = jnp.where(mask, mlm_labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, safe_labels[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    mlm_loss = jnp.sum(jnp.where(mask, nll, 0.0)) / denom
+    mlm_acc = jnp.sum(jnp.where(mask, jnp.argmax(logits, -1) == safe_labels,
+                                False)) / denom
+
+    # --- NSP head: pooler(tanh) on [CLS] -> 2-way classifier
+    cls = hidden[:, 0, :]
+    pooled = jnp.tanh(_linear(cls, p["cls.pooler.weight"],
+                              p["cls.pooler.bias"], cfg))
+    nsp_logits = _linear(pooled, p["cls.seq_relationship.weight"],
+                         p["cls.seq_relationship.bias"], cfg)
+    nsp_logp = jax.nn.log_softmax(nsp_logits.astype(jnp.float32), axis=-1)
+    nsp_loss = -jnp.mean(
+        jnp.take_along_axis(nsp_logp, nsp_labels[:, None], axis=-1))
+
+    loss = mlm_loss + nsp_loss
+    return loss, (mlm_loss, nsp_loss, mlm_acc)
+
+
+# --------------------------------------------------------- train step  --
+
+def train_step(flat_params, input_ids, token_type_ids, attention_mask,
+               mlm_labels, nsp_labels, loss_scale, cfg: BertConfig):
+    """One forward+backward micro-step.
+
+    Loss scaling (paper §4.2): the loss is multiplied by ``loss_scale``
+    before differentiation and the gradients divided by it afterwards, so
+    small-magnitude gradients survive the reduced dynamic range of the
+    half-precision compute path.  The Rust AMP engine owns the dynamic
+    adjustment of ``loss_scale`` and checks the returned ``grad_norm`` /
+    finiteness for overflow.
+
+    Returns (loss, mlm_loss, nsp_loss, mlm_acc, grads_flat, grad_norm).
+    """
+    def scaled(fp):
+        loss, aux = pretrain_loss(fp, input_ids, token_type_ids,
+                                  attention_mask, mlm_labels, nsp_labels, cfg)
+        return loss * loss_scale, (loss, aux)
+
+    grads, (loss, aux) = jax.grad(scaled, has_aux=True)(flat_params)
+    grads = grads / loss_scale
+    mlm_loss, nsp_loss, mlm_acc = aux
+    grad_norm = jnp.sqrt(jnp.sum(grads * grads))
+    return (loss.astype(jnp.float32), mlm_loss.astype(jnp.float32),
+            nsp_loss.astype(jnp.float32), mlm_acc.astype(jnp.float32),
+            grads, grad_norm.astype(jnp.float32))
+
+
+# ------------------------------------------------------- optimizer step --
+
+def apply_lamb(flat_params, flat_grads, flat_m, flat_v, step, lr,
+               cfg: BertConfig, clip_norm: float = 1.0):
+    """LAMB apply over the flat vector with PER-TENSOR trust ratios.
+
+    The flat vector is sliced along the manifest layout so each tensor
+    gets its own layer-wise trust ratio (the point of LAMB, §2.1); each
+    slice update is the fused Pallas LAMB kernel.  Global grad-norm
+    clipping at ``clip_norm`` matches the NVIDIA BERT recipe the paper
+    builds on.
+    """
+    gnorm = jnp.sqrt(jnp.sum(flat_grads * flat_grads))
+    scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-12))
+    g = flat_grads * scale
+
+    new_p, new_m, new_v = [], [], []
+    off = 0
+    for _name, shape in param_layout(cfg):
+        n = int(np.prod(shape))
+        sl = slice(off, off + n)
+        pn, mn, vn = fused_lamb(flat_params[sl], g[sl], flat_m[sl],
+                                flat_v[sl], step, lr)
+        new_p.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+        off += n
+    return (jnp.concatenate(new_p), jnp.concatenate(new_m),
+            jnp.concatenate(new_v))
+
+
+def apply_adam(flat_params, flat_grads, flat_m, flat_v, step, lr,
+               cfg: BertConfig, clip_norm: float = 1.0):
+    """AdamW apply over the flat vector (baseline optimizer)."""
+    from .kernels.ref import adam_update
+    gnorm = jnp.sqrt(jnp.sum(flat_grads * flat_grads))
+    scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-12))
+    g = flat_grads * scale
+    return adam_update(flat_params, g, flat_m, flat_v, step, lr)
+
+
+# ------------------------------------------------------------- jitting --
+
+def make_train_step(cfg: BertConfig, batch: int, seq: int):
+    """Concrete jit-able train step with shapes baked (AOT unit)."""
+    def fn(flat_params, input_ids, token_type_ids, attention_mask,
+           mlm_labels, nsp_labels, loss_scale):
+        return train_step(flat_params, input_ids, token_type_ids,
+                          attention_mask, mlm_labels, nsp_labels,
+                          loss_scale, cfg)
+    n = param_count(cfg)
+    specs = (
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    return jax.jit(fn), specs
+
+
+def make_apply(cfg: BertConfig, optimizer: str = "lamb"):
+    """Concrete jit-able optimizer apply (AOT unit)."""
+    apply = apply_lamb if optimizer == "lamb" else apply_adam
+
+    def fn(params, grads, m, v, step, lr):
+        return apply(params, grads, m, v, step, lr, cfg)
+    n = param_count(cfg)
+    vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    return jax.jit(fn), (vec, vec, vec, vec, scalar, scalar)
+
+
+def make_forward(cfg: BertConfig, batch: int, seq: int):
+    """Inference-only forward returning (loss, mlm_acc) — used for eval."""
+    def fn(flat_params, input_ids, token_type_ids, attention_mask,
+           mlm_labels, nsp_labels):
+        loss, (mlm, nsp, acc) = pretrain_loss(
+            flat_params, input_ids, token_type_ids, attention_mask,
+            mlm_labels, nsp_labels, cfg)
+        return (loss.astype(jnp.float32), mlm.astype(jnp.float32),
+                nsp.astype(jnp.float32), acc.astype(jnp.float32))
+    n = param_count(cfg)
+    specs = (
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    )
+    return jax.jit(fn), specs
+
+
+# ------------------------------------------------- fine-tuning (QA) ----
+# Paper §3.1.2/§5.3: the pre-trained checkpoint is fine-tuned on SQuAD
+# (extractive QA).  The mechanism: a span-prediction head (hidden -> 2)
+# on top of the encoder, trained with start/end cross-entropy.  The flat
+# fine-tune parameter vector is the pretraining vector plus the head.
+
+def finetune_layout(cfg: BertConfig):
+    """Flat layout for fine-tuning = pretraining layout + QA head."""
+    return param_layout(cfg) + [
+        ("qa.weight", (cfg.hidden, 2)),
+        ("qa.bias", (2,)),
+    ]
+
+
+def finetune_param_count(cfg: BertConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in finetune_layout(cfg))
+
+
+def qa_loss(flat_ft_params, input_ids, token_type_ids, attention_mask,
+            start_positions, end_positions, cfg: BertConfig):
+    """Extractive-QA span loss (start/end cross-entropy, SQuAD-style)."""
+    n_pre = param_count(cfg)
+    pre = flat_ft_params[:n_pre]
+    head = flat_ft_params[n_pre:]
+    p = unflatten(pre, cfg)
+    w = head[: cfg.hidden * 2].reshape(cfg.hidden, 2)
+    b = head[cfg.hidden * 2:]
+
+    hidden = encoder_forward(p, input_ids, token_type_ids, attention_mask,
+                             cfg)
+    logits = jnp.dot(hidden, w) + b                      # [B, S, 2]
+    # mask out padding positions
+    neg = (1.0 - attention_mask.astype(jnp.float32)) * -1e9
+    start_logits = logits[..., 0] + neg                  # [B, S]
+    end_logits = logits[..., 1] + neg
+
+    def ce(lg, pos):
+        lp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+        return -jnp.mean(jnp.take_along_axis(lp, pos[:, None], axis=-1))
+
+    loss = 0.5 * (ce(start_logits, start_positions)
+                  + ce(end_logits, end_positions))
+    start_acc = jnp.mean(
+        (jnp.argmax(start_logits, -1) == start_positions).astype(jnp.float32))
+    end_acc = jnp.mean(
+        (jnp.argmax(end_logits, -1) == end_positions).astype(jnp.float32))
+    exact = jnp.mean(
+        ((jnp.argmax(start_logits, -1) == start_positions)
+         & (jnp.argmax(end_logits, -1) == end_positions))
+        .astype(jnp.float32))
+    return loss, (start_acc, end_acc, exact)
+
+
+def make_qa_train_step(cfg: BertConfig, batch: int, seq: int):
+    """Concrete jit-able QA fine-tuning step (AOT unit)."""
+    def fn(flat_ft, input_ids, token_type_ids, attention_mask,
+           start_positions, end_positions, loss_scale):
+        def scaled(fp):
+            loss, aux = qa_loss(fp, input_ids, token_type_ids,
+                                attention_mask, start_positions,
+                                end_positions, cfg)
+            return loss * loss_scale, (loss, aux)
+        grads, (loss, aux) = jax.grad(scaled, has_aux=True)(flat_ft)
+        grads = grads / loss_scale
+        start_acc, end_acc, exact = aux
+        gnorm = jnp.sqrt(jnp.sum(grads * grads))
+        return (loss.astype(jnp.float32), start_acc.astype(jnp.float32),
+                end_acc.astype(jnp.float32), exact.astype(jnp.float32),
+                grads, gnorm.astype(jnp.float32))
+    n = finetune_param_count(cfg)
+    specs = (
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    return jax.jit(fn), specs
+
+
+def make_qa_apply(cfg: BertConfig):
+    """AdamW apply over the fine-tune flat vector (SQuAD recipe uses
+    Adam; LAMB is a pretraining-scale tool)."""
+    from .kernels.ref import adam_update
+    def fn(params, grads, m, v, step, lr):
+        gnorm = jnp.sqrt(jnp.sum(grads * grads))
+        scale = jnp.minimum(1.0, 1.0 / (gnorm + 1e-12))
+        return adam_update(params, grads * scale, m, v, step, lr)
+    n = finetune_param_count(cfg)
+    vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    return jax.jit(fn), (vec, vec, vec, vec, scalar, scalar)

@@ -1,0 +1,103 @@
+"""QA fine-tuning head (paper §5.3 mechanism): loss, grads, layout."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+CFG = M.PRESETS["bert-micro"]
+
+
+def qa_batch(cfg, b, s, seed=0):
+    rng = np.random.RandomState(seed)
+    ids = jnp.asarray(rng.randint(5, cfg.vocab_size, (b, s)), jnp.int32)
+    tt = jnp.zeros((b, s), jnp.int32)
+    am = jnp.ones((b, s), jnp.int32)
+    start = jnp.asarray(rng.randint(0, s // 2, (b,)), jnp.int32)
+    end = start + jnp.asarray(rng.randint(0, 3, (b,)), jnp.int32)
+    return ids, tt, am, start, end
+
+
+def ft_params(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    pre = M.init_params(cfg, seed)
+    head = rng.normal(0, 0.02, cfg.hidden * 2 + 2).astype(np.float32)
+    return jnp.asarray(np.concatenate([pre, head]))
+
+
+def test_finetune_layout_extends_pretraining():
+    base = M.param_count(CFG)
+    ft = M.finetune_param_count(CFG)
+    assert ft == base + CFG.hidden * 2 + 2
+    names = [n for n, _ in M.finetune_layout(CFG)]
+    assert names[-2:] == ["qa.weight", "qa.bias"]
+
+
+def test_qa_loss_starts_at_uniform():
+    """Random init: span CE ~ ln(seq) per side."""
+    flat = ft_params(CFG)
+    batch = qa_batch(CFG, 2, 32)
+    loss, (sa, ea, ex) = M.qa_loss(flat, *batch, CFG)
+    assert abs(float(loss) - np.log(32)) < 0.8, float(loss)
+    assert 0.0 <= float(ex) <= 1.0
+    assert 0.0 <= float(sa) <= 1.0 and 0.0 <= float(ea) <= 1.0
+
+
+def test_qa_train_step_outputs_and_grad_shape():
+    fn, specs = M.make_qa_train_step(CFG, 2, 32)
+    flat = ft_params(CFG)
+    batch = qa_batch(CFG, 2, 32)
+    out = fn(flat, *batch, jnp.float32(1.0))
+    assert len(out) == 6
+    grads = out[4]
+    assert grads.shape == (M.finetune_param_count(CFG),)
+    assert np.all(np.isfinite(np.asarray(grads)))
+    # the head's gradient must be nonzero (it is on the path)
+    head_g = np.asarray(grads[-(CFG.hidden * 2 + 2):])
+    assert np.abs(head_g).max() > 0
+
+
+def test_qa_loss_scaling_invariance():
+    fn, _ = M.make_qa_train_step(CFG, 2, 32)
+    flat = ft_params(CFG)
+    batch = qa_batch(CFG, 2, 32)
+    g1 = np.asarray(fn(flat, *batch, jnp.float32(1.0))[4])
+    g2 = np.asarray(fn(flat, *batch, jnp.float32(512.0))[4])
+    np.testing.assert_allclose(g1, g2, atol=1e-5, rtol=1e-3)
+
+
+def test_qa_finetuning_learns_fixed_batch():
+    fn, _ = M.make_qa_train_step(CFG, 2, 32)
+    apply_fn, _ = M.make_qa_apply(CFG)
+    flat = ft_params(CFG)
+    batch = qa_batch(CFG, 2, 32, seed=3)
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    losses = []
+    for i in range(6):
+        out = fn(flat, *batch, jnp.float32(1.0))
+        losses.append(float(out[0]))
+        flat, m, v = apply_fn(flat, out[4], m, v, jnp.float32(i + 1),
+                              jnp.float32(3e-3))
+    assert losses[-1] < losses[0], losses
+
+
+def test_padding_positions_never_win_argmax():
+    """Masked (pad) positions get -1e9 logits, so predicted spans always
+    land inside the attended region."""
+    flat = ft_params(CFG)
+    b, s = 2, 32
+    ids, tt, _, start, end = qa_batch(CFG, b, s)
+    am = jnp.ones((b, s), jnp.int32).at[:, 20:].set(0)
+    n_pre = M.param_count(CFG)
+    pre = M.unflatten(flat[:n_pre], CFG)
+    hidden = M.encoder_forward(pre, ids, tt, am, CFG)
+    head = flat[n_pre:]
+    w = head[: CFG.hidden * 2].reshape(CFG.hidden, 2)
+    bia = head[CFG.hidden * 2:]
+    logits = jnp.dot(hidden, w) + bia
+    neg = (1.0 - am.astype(jnp.float32)) * -1e9
+    s_pred = jnp.argmax(logits[..., 0] + neg, -1)
+    assert np.all(np.asarray(s_pred) < 20)

@@ -1,0 +1,194 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the block-divisibility boundary) so both the
+gridded fast path and the single-block fallback of each kernel are hit.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import autodiff as ad
+from compile.kernels.fused_gelu import fused_gelu, vmem_bytes as gelu_vmem
+from compile.kernels.fused_layernorm import fused_layernorm, \
+    vmem_bytes as ln_vmem
+from compile.kernels.fused_lamb import fused_lamb, DEFAULT_BLOCK
+from compile.kernels.attention import fused_attention, vmem_bytes as at_vmem, \
+    mxu_utilization_estimate
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+# ------------------------------------------------------------------ GELU
+
+@settings(**SETTINGS)
+@given(rows=st.integers(1, 300), feat=st.sampled_from([8, 64, 128, 256]))
+def test_gelu_matches_ref(rows, feat):
+    rng = np.random.default_rng(rows * 1000 + feat)
+    x = rand(rng, rows, feat)
+    np.testing.assert_allclose(fused_gelu(x), ref.gelu(x), atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(rows=st.sampled_from([1, 7, 256, 512]), feat=st.sampled_from([16, 128]))
+def test_gelu_grad_matches_ref(rows, feat):
+    rng = np.random.default_rng(rows + feat)
+    x = rand(rng, rows, feat)
+    g = jax.grad(lambda x: jnp.sum(ad.gelu(x) ** 2))(x)
+    g_ref = jax.grad(lambda x: jnp.sum(ref.gelu(x) ** 2))(x)
+    np.testing.assert_allclose(g, g_ref, atol=1e-4, rtol=1e-4)
+
+
+def test_gelu_matches_unfused_decomposition():
+    """The paper's 7-op decomposition computes the same function."""
+    x = jnp.linspace(-4, 4, 97, dtype=jnp.float32).reshape(1, 97)
+    np.testing.assert_allclose(ref.gelu_unfused(x), ref.gelu(x), atol=1e-6)
+    np.testing.assert_allclose(fused_gelu(x), ref.gelu_unfused(x), atol=1e-5)
+
+
+def test_gelu_3d_input():
+    rng = np.random.default_rng(0)
+    x = rand(rng, 2, 5, 32)
+    np.testing.assert_allclose(fused_gelu(x), ref.gelu(x), atol=1e-5)
+
+
+def test_gelu_vmem_budget():
+    # default tile must fit VMEM (~16 MiB) with double-buffer headroom
+    assert gelu_vmem(256, 4096) <= 16 * 2 ** 20 / 2
+
+
+# ------------------------------------------------------------- LayerNorm
+
+@settings(**SETTINGS)
+@given(rows=st.integers(1, 300), feat=st.sampled_from([8, 64, 256]))
+def test_layernorm_matches_ref(rows, feat):
+    rng = np.random.default_rng(rows * 7 + feat)
+    x = rand(rng, rows, feat)
+    g = rand(rng, feat)
+    b = rand(rng, feat)
+    np.testing.assert_allclose(fused_layernorm(x, g, b),
+                               ref.layernorm(x, g, b), atol=1e-4, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(rows=st.sampled_from([3, 256]), feat=st.sampled_from([16, 64]))
+def test_layernorm_grads_match_ref(rows, feat):
+    rng = np.random.default_rng(rows + feat)
+    x, g, b = rand(rng, rows, feat), rand(rng, feat), rand(rng, feat)
+
+    def f(fn):
+        return jax.grad(lambda x, g, b: jnp.sum(fn(x, g, b) ** 2),
+                        argnums=(0, 1, 2))(x, g, b)
+
+    for got, want in zip(f(ad.layernorm), f(ref.layernorm)):
+        np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+
+def test_layernorm_rows_are_normalized():
+    rng = np.random.default_rng(1)
+    x = rand(rng, 10, 128) * 5 + 3
+    y = fused_layernorm(x, jnp.ones(128), jnp.zeros(128))
+    np.testing.assert_allclose(np.mean(y, -1), 0, atol=1e-4)
+    np.testing.assert_allclose(np.std(y, -1), 1, atol=1e-3)
+
+
+def test_layernorm_unfused_matches_fused():
+    rng = np.random.default_rng(2)
+    x, g, b = rand(rng, 17, 32), rand(rng, 32), rand(rng, 32)
+    np.testing.assert_allclose(ref.layernorm_unfused(x, g, b),
+                               fused_layernorm(x, g, b), atol=1e-4)
+
+
+def test_layernorm_vmem_budget():
+    assert ln_vmem(256, 4096) < 16 * 2 ** 20 * 0.6
+
+
+# ------------------------------------------------------------- Attention
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 3), h=st.integers(1, 4),
+       s=st.sampled_from([4, 16, 64]), d=st.sampled_from([8, 32]))
+def test_attention_matches_ref(b, h, s, d):
+    rng = np.random.default_rng(b * 100 + h * 10 + s + d)
+    q, k, v = rand(rng, b, h, s, d), rand(rng, b, h, s, d), rand(rng, b, h, s, d)
+    mask = jnp.zeros((b, 1, 1, s), jnp.float32)
+    scale = 1.0 / np.sqrt(d)
+    np.testing.assert_allclose(fused_attention(q, k, v, mask, scale),
+                               ref.attention(q, k, v, mask, scale),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_attention_respects_padding_mask():
+    """Masked key positions must receive ~zero attention weight."""
+    rng = np.random.default_rng(3)
+    s = 8
+    q = rand(rng, 1, 1, s, 4)
+    k = rand(rng, 1, 1, s, 4)
+    v = jnp.zeros((1, 1, s, 4), jnp.float32).at[:, :, s - 1, :].set(1e3)
+    mask = jnp.zeros((1, 1, 1, s)).at[..., s - 1].set(-1e9)
+    out = fused_attention(q, k, v, mask, 0.5)
+    assert float(jnp.max(jnp.abs(out))) < 1e-3  # last key contributed ~0
+
+
+def test_attention_grad_matches_ref():
+    rng = np.random.default_rng(4)
+    q = rand(rng, 2, 2, 8, 4)
+    mask = jnp.zeros((2, 1, 1, 8))
+    g = jax.grad(lambda q: jnp.sum(ad.attention(q, q, q, mask, 0.5) ** 2))(q)
+    g_ref = jax.grad(lambda q: jnp.sum(ref.attention(q, q, q, mask, 0.5) ** 2))(q)
+    np.testing.assert_allclose(g, g_ref, atol=1e-3, rtol=1e-3)
+
+
+def test_attention_vmem_and_mxu_estimates():
+    # phase-2 shape S=512, D=64: must fit VMEM
+    assert at_vmem(512, 64) < 16 * 2 ** 20 / 2
+    assert mxu_utilization_estimate(512, 128) == 1.0
+    assert 0 < mxu_utilization_estimate(512, 64) <= 0.5  # D=64 half-fills K
+
+
+# ------------------------------------------------------------------ LAMB
+
+@settings(**SETTINGS)
+@given(n=st.sampled_from([8, 1000, DEFAULT_BLOCK, 2 * DEFAULT_BLOCK]),
+       step=st.integers(1, 100))
+def test_lamb_matches_ref(n, step):
+    rng = np.random.default_rng(n + step)
+    p, g = rand(rng, n), rand(rng, n) * 0.1
+    m, v = rand(rng, n) * 0.01, jnp.abs(rand(rng, n)) * 0.01
+    lr = jnp.float32(1e-3)
+    got = fused_lamb(p, g, m, v, jnp.float32(step), lr)
+    want = ref.lamb_update(p, g, m, v, jnp.float32(step), lr)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-4)
+
+
+def test_lamb_zero_gradient_still_decays():
+    """With g=0 LAMB still applies weight decay through the update dir."""
+    n = 16
+    p = jnp.ones(n)
+    z = jnp.zeros(n)
+    p2, m2, v2 = fused_lamb(p, z, z, z, jnp.float32(1.0), jnp.float32(0.1))
+    assert float(jnp.max(p2)) < 1.0  # decay shrank the weights
+    np.testing.assert_allclose(m2, 0.0, atol=0)
+
+
+def test_lamb_trust_ratio_scales_update():
+    """Doubling the weights (same grads) scales the step via trust ratio."""
+    rng = np.random.default_rng(5)
+    n = 64
+    g = rand(rng, n)
+    z = jnp.zeros(n)
+    p1 = jnp.ones(n)
+    lr = jnp.float32(0.01)
+    a1, _, _ = fused_lamb(p1, g, z, z, jnp.float32(1.0), lr)
+    a2, _, _ = fused_lamb(2 * p1, g, z, z, jnp.float32(1.0), lr)
+    d1 = float(jnp.linalg.norm(a1 - p1))
+    d2 = float(jnp.linalg.norm(a2 - 2 * p1))
+    assert d2 > 1.5 * d1  # larger weight norm -> larger trusted step

@@ -1,0 +1,172 @@
+"""L2 correctness: model shapes, losses, gradients, variant equivalence."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+CFG = M.PRESETS["bert-micro"]
+
+
+def make_batch(cfg, b, s, seed=0):
+    rng = np.random.RandomState(seed)
+    ids = jnp.asarray(rng.randint(4, cfg.vocab_size, (b, s)), jnp.int32)
+    tt = jnp.asarray(rng.randint(0, 2, (b, s)), jnp.int32)
+    am = jnp.ones((b, s), jnp.int32)
+    mask = rng.rand(b, s) < 0.15
+    ml = jnp.asarray(np.where(mask, np.asarray(ids), M.IGNORE_INDEX), jnp.int32)
+    nsp = jnp.asarray(rng.randint(0, 2, (b,)), jnp.int32)
+    return ids, tt, am, ml, nsp
+
+
+def test_param_count_matches_layout():
+    flat = M.init_params(CFG, 0)
+    assert flat.shape == (M.param_count(CFG),)
+    total = sum(int(np.prod(s)) for _, s in M.param_layout(CFG))
+    assert total == flat.size
+
+
+def test_param_counts_match_published_models():
+    """bert-base ~110M and bert-large ~340M (paper §1)."""
+    base = M.param_count(M.PRESETS["bert-base"])
+    large = M.param_count(M.PRESETS["bert-large"])
+    assert 105e6 < base < 115e6
+    assert 330e6 < large < 345e6
+
+
+def test_unflatten_roundtrip():
+    flat = jnp.asarray(M.init_params(CFG, 1))
+    p = M.unflatten(flat, CFG)
+    rebuilt = jnp.concatenate([p[n].ravel() for n, _ in M.param_layout(CFG)])
+    np.testing.assert_array_equal(rebuilt, flat)
+
+
+def test_forward_shapes_and_initial_loss():
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    batch = make_batch(CFG, 2, 32)
+    loss, (mlm, nsp, acc) = M.pretrain_loss(flat, *batch, CFG)
+    # random init: mlm ~= ln(V), nsp ~= ln(2)
+    assert abs(float(mlm) - np.log(CFG.vocab_size)) < 1.0
+    assert abs(float(nsp) - np.log(2)) < 0.3
+    assert 0.0 <= float(acc) <= 1.0
+    assert float(loss) == pytest.approx(float(mlm) + float(nsp), rel=1e-5)
+
+
+def test_mlm_ignore_index_excluded_from_loss():
+    """All-ignored labels must produce zero MLM loss, not NaN."""
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    ids, tt, am, _, nsp = make_batch(CFG, 2, 32)
+    ml = jnp.full_like(ids, M.IGNORE_INDEX)
+    loss, (mlm, _, _) = M.pretrain_loss(flat, ids, tt, am, ml, nsp, CFG)
+    assert float(mlm) == 0.0
+    assert np.isfinite(float(loss))
+
+
+def test_train_step_gradient_matches_finite_difference():
+    """Directional finite-difference check of the full fwd+bwd."""
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    batch = make_batch(CFG, 1, 16)
+    fn, _ = M.make_train_step(CFG, 1, 16)
+    out = fn(flat, *batch, jnp.float32(1.0))
+    grads = np.asarray(out[4])
+    rng = np.random.RandomState(0)
+    d = rng.randn(flat.size).astype(np.float32)
+    d /= np.linalg.norm(d)
+    eps = 1e-2
+    lp = M.pretrain_loss(flat + eps * d, *batch, CFG)[0]
+    lm = M.pretrain_loss(flat - eps * d, *batch, CFG)[0]
+    fd = (float(lp) - float(lm)) / (2 * eps)
+    an = float(np.dot(grads, d))
+    assert abs(fd - an) < 3e-2 * max(1.0, abs(fd)), (fd, an)
+
+
+def test_loss_scaling_invariance():
+    """Grads must be identical (to fp error) for any loss scale (§4.2)."""
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    batch = make_batch(CFG, 2, 16)
+    fn, _ = M.make_train_step(CFG, 2, 16)
+    g1 = np.asarray(fn(flat, *batch, jnp.float32(1.0))[4])
+    g2 = np.asarray(fn(flat, *batch, jnp.float32(1024.0))[4])
+    np.testing.assert_allclose(g1, g2, atol=1e-5, rtol=1e-3)
+
+
+def test_fused_and_unfused_agree():
+    """Paper Fig. 8 claim: optimizations do not change the function."""
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    batch = make_batch(CFG, 2, 16)
+    cfg_f = dataclasses.replace(CFG, fused=True, dtype="f32")
+    cfg_u = dataclasses.replace(CFG, fused=False, dtype="f32")
+    lf, (mf, nf, _) = M.pretrain_loss(flat, *batch, cfg_f)
+    lu, (mu, nu, _) = M.pretrain_loss(flat, *batch, cfg_u)
+    assert float(lf) == pytest.approx(float(lu), rel=1e-4)
+    assert float(mf) == pytest.approx(float(mu), rel=1e-4)
+
+
+def test_bf16_close_to_f32():
+    """AMP compute path stays within half-precision error of f32."""
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    batch = make_batch(CFG, 2, 16)
+    cfg32 = dataclasses.replace(CFG, fused=False, dtype="f32")
+    cfg16 = dataclasses.replace(CFG, fused=False, dtype="bf16")
+    l32 = float(M.pretrain_loss(flat, *batch, cfg32)[0])
+    l16 = float(M.pretrain_loss(flat, *batch, cfg16)[0])
+    assert abs(l32 - l16) / abs(l32) < 0.05
+
+
+def test_padding_mask_blocks_contributions():
+    """Changing tokens under pad positions must not change the loss."""
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    ids, tt, am, ml, nsp = make_batch(CFG, 1, 16)
+    am = am.at[0, 8:].set(0)
+    ml = ml.at[0, 8:].set(M.IGNORE_INDEX)
+    l1 = float(M.pretrain_loss(flat, ids, tt, am, ml, nsp, CFG)[0])
+    ids2 = ids.at[0, 12].set(7)
+    l2 = float(M.pretrain_loss(flat, ids2, tt, am, ml, nsp, CFG)[0])
+    # pad tokens still enter embeddings; assert effect is tiny vs a real edit
+    ids3 = ids.at[0, 2].set(7)
+    l3 = float(M.pretrain_loss(flat, ids3, tt, am, ml, nsp, CFG)[0])
+    assert abs(l2 - l1) < abs(l3 - l1) + 1e-6 or abs(l2 - l1) < 1e-4
+
+
+def test_apply_lamb_moves_params_and_is_finite():
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    rng = np.random.RandomState(0)
+    g = jnp.asarray(rng.randn(flat.size).astype(np.float32)) * 0.01
+    z = jnp.zeros_like(flat)
+    fn, _ = M.make_apply(CFG, "lamb")
+    p2, m2, v2 = fn(flat, g, z, z, jnp.float32(1.0), jnp.float32(1e-3))
+    assert np.all(np.isfinite(np.asarray(p2)))
+    assert float(jnp.linalg.norm(p2 - flat)) > 0
+
+
+def test_apply_adam_differs_from_lamb():
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    rng = np.random.RandomState(1)
+    g = jnp.asarray(rng.randn(flat.size).astype(np.float32)) * 0.01
+    z = jnp.zeros_like(flat)
+    lamb, _ = M.make_apply(CFG, "lamb")
+    adam, _ = M.make_apply(CFG, "adam")
+    pl_, _, _ = lamb(flat, g, z, z, jnp.float32(1.0), jnp.float32(1e-3))
+    pa, _, _ = adam(flat, g, z, z, jnp.float32(1.0), jnp.float32(1e-3))
+    assert float(jnp.linalg.norm(pl_ - pa)) > 0
+
+
+def test_short_training_reduces_loss():
+    """5 LAMB steps on one repeated batch must reduce the loss."""
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    batch = make_batch(CFG, 2, 16, seed=3)
+    step_fn, _ = M.make_train_step(CFG, 2, 16)
+    apply_fn, _ = M.make_apply(CFG, "lamb")
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    losses = []
+    for i in range(5):
+        out = step_fn(flat, *batch, jnp.float32(1.0))
+        losses.append(float(out[0]))
+        flat, m, v = apply_fn(flat, out[4], m, v, jnp.float32(i + 1),
+                              jnp.float32(5e-3))
+    assert losses[-1] < losses[0], losses

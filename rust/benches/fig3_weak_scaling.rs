@@ -1,0 +1,60 @@
+//! Bench: regenerate paper **Figure 3** — weak scaling comparison
+//! between intra-node scaling (1M{1..8}G over PCIe) and inter-node
+//! scaling ({1..8}M1G over the 10 Gb/s network), no grad accumulation.
+//!
+//! Run: `cargo bench --bench fig3_weak_scaling`
+
+use bertdist::simulator::scaling::sweep_intra_vs_inter;
+use bertdist::simulator::IterationModel;
+use bertdist::topology::Topology;
+use bertdist::util::ascii_plot::{plot_series, Series};
+use bertdist::util::fmt::render_table;
+
+fn main() {
+    println!("=== Figure 3: Intra-node vs Inter-node weak scaling ===\n");
+    let template = IterationModel::paper(Topology::new(1, 1), 1, true);
+    let (intra, inter) = sweep_intra_vs_inter(&template);
+
+    let rows: Vec<Vec<String>> = intra
+        .iter()
+        .zip(&inter)
+        .map(|(a, b)| vec![
+            a.gpus.to_string(),
+            format!("{}", a.topo),
+            format!("{:.2}x ({:.0}%)", a.scaling_factor,
+                    a.efficiency * 100.0),
+            format!("{}", b.topo),
+            format!("{:.2}x ({:.0}%)", b.scaling_factor,
+                    b.efficiency * 100.0),
+        ])
+        .collect();
+    println!("{}", render_table(
+        &["GPUs", "intra topo", "intra factor", "inter topo",
+          "inter factor"],
+        &rows));
+
+    let ai: Vec<(f64, f64)> =
+        intra.iter().map(|p| (p.gpus as f64, p.scaling_factor)).collect();
+    let bi: Vec<(f64, f64)> =
+        inter.iter().map(|p| (p.gpus as f64, p.scaling_factor)).collect();
+    println!("{}", plot_series(
+        "weak scaling factor (i=intra, x=inter)",
+        &[Series { name: "intra-node", points: &ai, marker: 'i' },
+          Series { name: "inter-node", points: &bi, marker: 'x' }],
+        60, 14));
+
+    // Paper shape assertions:
+    // 1. near-zero gain 1M1G -> 2M1G
+    assert!(inter[1].scaling_factor < 1.5,
+            "2M1G factor {}", inter[1].scaling_factor);
+    // 2. inter-node efficiency capped around 38%
+    assert!((0.30..0.45).contains(&inter[3].efficiency),
+            "8M1G eff {}", inter[3].efficiency);
+    // 3. intra-node dominates inter-node at every width
+    for (a, b) in intra.iter().zip(&inter).skip(1) {
+        assert!(a.scaling_factor > b.scaling_factor);
+    }
+    println!("paper anchors hold: 2M1G ~no gain; inter cap ~38%; \
+              intra > inter everywhere");
+    println!("\nfig3_weak_scaling OK");
+}

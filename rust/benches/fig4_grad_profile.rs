@@ -1,0 +1,38 @@
+//! Bench: regenerate paper **Figure 4** — gradient memory profile of
+//! BERT-large grouped by layer class, supporting the §4.4 argument that
+//! the gradients are dense (sparsification unattractive).
+//!
+//! Run: `cargo bench --bench fig4_grad_profile`
+
+use bertdist::model::BertConfig;
+use bertdist::util::ascii_plot::bar_chart;
+use bertdist::util::human_bytes;
+
+fn main() {
+    println!("=== Figure 4: Gradient Memory Profile (BERT-large) ===\n");
+    let cfg = BertConfig::preset("bert-large").unwrap();
+    let layout = cfg.param_layout();
+    let profile = layout.gradient_profile();
+
+    let rows: Vec<(String, f64)> = profile
+        .sorted_rows()
+        .into_iter()
+        .map(|(name, bytes)| {
+            (format!("{name:<13} {:>10}", human_bytes(bytes)), bytes / 1e6)
+        })
+        .collect();
+    println!("{}", bar_chart("MB of f32 gradients per layer group",
+                             &rows, 48));
+
+    let dense = profile.dense_fraction();
+    println!("total gradients: {} across {} tensors",
+             human_bytes(profile.total() as f64), layout.entries().len());
+    println!("dense (attention+intermediate+output) fraction: {:.1}%",
+             dense * 100.0);
+    // Paper: "the majority of the gradients are in the attention,
+    // intermediate, and output layers".
+    assert!(dense > 0.7, "Figure-4 shape violated: dense={dense}");
+    let rows = profile.sorted_rows();
+    assert_eq!(rows[0].0, "attention", "attention must dominate");
+    println!("\nfig4_grad_profile OK");
+}

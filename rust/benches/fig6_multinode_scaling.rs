@@ -1,0 +1,53 @@
+//! Bench: regenerate paper **Figure 6** — multi-node throughput scaling
+//! up to 32M8G (256 GPUs) with k=4 gradient accumulation, asserting the
+//! paper's headline 165x weak-scaling factor (±10%).
+//!
+//! Run: `cargo bench --bench fig6_multinode_scaling`
+
+use bertdist::simulator::scaling::{figure6_topologies, weak_scaling};
+use bertdist::simulator::IterationModel;
+use bertdist::topology::Topology;
+use bertdist::util::ascii_plot::{plot_series, Series};
+use bertdist::util::fmt::render_table;
+
+fn main() {
+    println!("=== Figure 6: Multi-node Throughput Scaling (k=4) ===\n");
+    let template = IterationModel::paper(Topology::new(1, 1), 4, true);
+    let pts = weak_scaling(&template, &figure6_topologies());
+
+    let rows: Vec<Vec<String>> = pts
+        .iter()
+        .map(|p| vec![
+            p.topo.to_string(),
+            p.gpus.to_string(),
+            format!("{:.2e}", p.cluster_tokens_per_sec),
+            format!("{:.1}x", p.scaling_factor),
+            format!("{:.1}%", p.efficiency * 100.0),
+        ])
+        .collect();
+    println!("{}", render_table(
+        &["topology", "GPUs", "tokens/s", "scaling factor", "efficiency"],
+        &rows));
+
+    let xy: Vec<(f64, f64)> =
+        pts.iter().map(|p| (p.gpus as f64, p.scaling_factor)).collect();
+    println!("{}", plot_series("scaling factor vs GPUs",
+                               &[Series { name: "xM8G k=4", points: &xy,
+                                          marker: '*' }], 60, 14));
+
+    // paper anchors
+    let last = pts.last().unwrap();
+    assert_eq!(last.gpus, 256);
+    assert!((last.scaling_factor - 165.0).abs() / 165.0 < 0.10,
+            "headline factor {} vs paper 165", last.scaling_factor);
+    for w in pts.windows(2) {
+        assert!(w[1].efficiency <= w[0].efficiency + 1e-9,
+                "efficiency must decay with machine count");
+        assert!(w[1].scaling_factor > w[0].scaling_factor,
+                "absolute throughput must still grow");
+    }
+    println!("headline: {:.0}x at 256 GPUs (paper: 165x, {:.0}% efficiency \
+              claimed ~70%)", last.scaling_factor,
+             last.efficiency * 100.0);
+    println!("\nfig6_multinode_scaling OK");
+}

@@ -1,0 +1,88 @@
+//! Bench: regenerate paper **Figure 8** — optimized vs non-optimized
+//! training loss equivalence, measured with REAL training runs on the
+//! PJRT substrate: same seed, same data, fused_bf16 vs unfused_f32.
+//!
+//! The paper's claim: the systems optimizations do not change the
+//! training trajectory ("the two loss curve is highly similar").
+//!
+//! Run: `cargo bench --bench fig8_opt_vs_nonopt`
+
+use bertdist::data::masking::{build_batch, MaskingConfig};
+use bertdist::data::PairExample;
+use bertdist::runtime::Engine;
+use bertdist::trainer::init_params;
+use bertdist::util::ascii_plot::{plot_series, Series};
+use bertdist::util::Pcg64;
+
+const STEPS: usize = 25;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Figure 8: Optimized vs Non-optimized loss curves ===\n");
+    let engine = Engine::cpu(std::path::Path::new("artifacts"))?;
+    let preset = "bert-micro";
+    let model = engine.model(preset)?;
+    let n = model.param_count;
+
+    // fixed mini-dataset of 4 batches, rotated
+    let cfg = MaskingConfig { vocab_size: model.config.vocab_size as u32,
+                              ..Default::default() };
+    let mut rng = Pcg64::new(11);
+    let batches: Vec<_> = (0..4)
+        .map(|i| {
+            let exs: Vec<PairExample> = (0..2)
+                .map(|j| PairExample {
+                    tokens_a: (0..14).map(|t| 10 + (t * (i + 1) + j) % 480)
+                        .collect(),
+                    tokens_b: (0..12).map(|t| 20 + (t * (j + 2) + i) % 480)
+                        .collect(),
+                    is_next: (i + j) % 2 == 0,
+                })
+                .collect();
+            build_batch(&exs, 32, &cfg, &mut rng)
+        })
+        .collect();
+
+    let mut curves: Vec<Vec<(f64, f64)>> = Vec::new();
+    for (variant, scale) in [("unfused_f32", 1.0f32), ("fused_bf16", 1024.0)] {
+        let step = engine.train_step(preset, variant, 2, 32)?;
+        let apply = engine.apply_step(preset, "lamb")?;
+        let mut irng = Pcg64::new(7);
+        let mut params = init_params(&model.layout, &mut irng);
+        let mut m = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        let mut curve = Vec::new();
+        for s in 0..STEPS {
+            let out = step.run(&params, &batches[s % batches.len()], scale)?;
+            curve.push((s as f64, out.loss as f64));
+            apply.run(&mut params, &out.grads, &mut m, &mut v,
+                      (s + 1) as f32, 3e-3)?;
+        }
+        println!("{variant:<12}: loss {:.4} -> {:.4}", curve[0].1,
+                 curve.last().unwrap().1);
+        curves.push(curve);
+    }
+
+    println!("{}", plot_series(
+        "loss, optimized (o) vs non-optimized (n)",
+        &[Series { name: "unfused_f32 (non-optimized)", points: &curves[0],
+                   marker: 'n' },
+          Series { name: "fused_bf16 (optimized)", points: &curves[1],
+                   marker: 'o' }],
+        70, 16));
+
+    let max_rel = curves[0]
+        .iter()
+        .zip(&curves[1])
+        .map(|(a, b)| ((a.1 - b.1) / a.1).abs())
+        .fold(0.0f64, f64::max);
+    println!("max relative divergence over {STEPS} steps: {:.3}%",
+             max_rel * 100.0);
+    assert!(max_rel < 0.05,
+            "optimized curve diverged from baseline: {max_rel}");
+    // both must actually learn
+    for c in &curves {
+        assert!(c.last().unwrap().1 < c[0].1, "no learning happened");
+    }
+    println!("\nfig8_opt_vs_nonopt OK");
+    Ok(())
+}

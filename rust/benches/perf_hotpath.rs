@@ -1,0 +1,139 @@
+//! Perf bench: L3 hot-path microbenchmarks for the EXPERIMENTS.md §Perf
+//! iteration loop — allreduce bandwidth, batch assembly, shard read,
+//! bucket planning, LAMB host step, f16 conversion throughput, and the
+//! end-to-end PJRT step overhead breakdown.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use bertdist::collectives::ring::ring_allreduce_inplace;
+use bertdist::collectives::CollectiveGroup;
+use bertdist::data::masking::{build_batch, MaskingConfig};
+use bertdist::data::PairExample;
+use bertdist::grad::build_buckets;
+use bertdist::half::F16;
+use bertdist::model::BertConfig;
+use bertdist::optimizer::{lamb_step, OptHyper, OptState};
+use bertdist::runtime::Engine;
+use bertdist::trainer::init_params;
+use bertdist::util::fmt::render_table;
+use bertdist::util::stopwatch::bench_times;
+use bertdist::util::{Pcg64, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== perf_hotpath: coordinator hot-path microbenches ===\n");
+    let mut rows = Vec::new();
+
+    // ---- threaded ring allreduce bandwidth (the §4.4 data path) ----
+    let elems = 16 * 1024 * 1024 / 4; // 16 MiB payload
+    for world in [2usize, 4] {
+        let (min, _, _) = bench_times(3, || {
+            let handles = CollectiveGroup::new(world);
+            let joins: Vec<_> = handles
+                .into_iter()
+                .map(|mut h| {
+                    std::thread::spawn(move || {
+                        let mut buf = vec![1.0f32; elems];
+                        h.allreduce(&mut buf);
+                    })
+                })
+                .collect();
+            for j in joins {
+                j.join().unwrap();
+            }
+        });
+        rows.push(vec![
+            format!("threaded allreduce x{world} (16 MiB)"),
+            format!("{:.2} ms", min * 1e3),
+            format!("{:.2} GB/s alg", elems as f64 * 4.0 / min / 1e9),
+        ]);
+    }
+
+    // ---- single-threaded reference allreduce ----
+    let (min, _, _) = bench_times(3, || {
+        let mut bufs: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0f32; elems / 4])
+            .collect();
+        ring_allreduce_inplace(&mut bufs);
+    });
+    rows.push(vec!["reference allreduce x4 (4 MiB each)".into(),
+                   format!("{:.2} ms", min * 1e3), String::new()]);
+
+    // ---- batch assembly (masking pipeline) ----
+    let cfg = MaskingConfig::default();
+    let exs: Vec<PairExample> = (0..8)
+        .map(|i| PairExample {
+            tokens_a: (0..60).map(|t| 10 + (t + i) % 8000).collect(),
+            tokens_b: (0..60).map(|t| 10 + (t * 2 + i) % 8000).collect(),
+            is_next: i % 2 == 0,
+        })
+        .collect();
+    let mut rng = Pcg64::new(1);
+    let (min, _, _) = bench_times(50, || {
+        std::hint::black_box(build_batch(&exs, 128, &cfg, &mut rng));
+    });
+    rows.push(vec!["batch assembly 8x128 (mask+pack)".into(),
+                   format!("{:.3} ms", min * 1e3),
+                   format!("{:.1} Mtok/s", 8.0 * 128.0 / min / 1e6)]);
+
+    // ---- bucket planning on bert-large ----
+    let layout = BertConfig::preset("bert-large").unwrap().param_layout();
+    let (min, _, _) = bench_times(20, || {
+        std::hint::black_box(build_buckets(&layout, 1 << 22));
+    });
+    rows.push(vec!["bucket planning (bert-large, 4M elems)".into(),
+                   format!("{:.3} ms", min * 1e3), String::new()]);
+
+    // ---- host LAMB step on bert-mini-sized flat vector ----
+    let mini = BertConfig::preset("bert-mini").unwrap().param_layout();
+    let n = mini.total_len();
+    let mut p = vec![0.01f32; n];
+    let mut g = vec![0.001f32; n];
+    let mut st = OptState::new(n);
+    let h = OptHyper::default();
+    let (min, _, _) = bench_times(5, || {
+        lamb_step(&mut p, &mut g, &mut st, &mini, 1e-3, &h);
+    });
+    rows.push(vec![
+        format!("host LAMB step ({:.1}M params)", n as f64 / 1e6),
+        format!("{:.2} ms", min * 1e3),
+        format!("{:.0} Melem/s", n as f64 / min / 1e6),
+    ]);
+
+    // ---- f16 conversion throughput (AMP overflow scans) ----
+    let xs: Vec<f32> = (0..1_000_000).map(|i| i as f32 * 1e-3).collect();
+    let (min, _, _) = bench_times(5, || {
+        let s: u32 = xs.iter().map(|&x| F16::from_f32(x).0 as u32).sum();
+        std::hint::black_box(s);
+    });
+    rows.push(vec!["f16 convert 1M values".into(),
+                   format!("{:.2} ms", min * 1e3),
+                   format!("{:.0} Melem/s", 1.0 / min)]);
+
+    // ---- PJRT step overhead breakdown ----
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let engine = Engine::cpu(std::path::Path::new("artifacts"))?;
+        let model = engine.model("bert-micro")?;
+        let mut rng = Pcg64::new(2);
+        let params = init_params(&model.layout, &mut rng);
+        let sw = Stopwatch::new();
+        let step = engine.train_step("bert-micro", "fused_f32", 2, 32)?;
+        let compile_s = sw.elapsed();
+        let batch = build_batch(&exs[..2], 32, &MaskingConfig {
+            vocab_size: model.config.vocab_size as u32,
+            ..Default::default()
+        }, &mut rng);
+        step.run(&params, &batch, 1.0)?; // warmup
+        let (min, mean, _) = bench_times(10, || {
+            step.run(&params, &batch, 1.0).unwrap();
+        });
+        rows.push(vec!["XLA compile train step (once)".into(),
+                       format!("{:.0} ms", compile_s * 1e3), String::new()]);
+        rows.push(vec!["PJRT train step bert-micro 2x32".into(),
+                       format!("{:.2} ms (mean {:.2})", min * 1e3,
+                               mean * 1e3),
+                       format!("{:.0} tok/s", 64.0 / min)]);
+    }
+
+    println!("{}", render_table(&["hot path", "time", "rate"], &rows));
+    println!("perf_hotpath OK");
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Bench: the §4.4 gradient-sparsification BASELINE study — why the
+//! paper rejected it in favor of gradient accumulation.
+//!
+//! Measures, on REAL BERT gradients from the PJRT substrate:
+//!   * signal quality (cosine to dense) vs compression ratio,
+//!   * selection overhead (the "extra calculation" §4.4 mentions),
+//!   * threshold sensitivity (the "tuning work"),
+//! and contrasts with a synthetic heavy-tailed gradient where
+//! sparsification DOES work — reproducing the paper's argument that
+//! BERT's dense Fig.-4 gradient profile is the wrong fit.
+//!
+//! Run: `cargo bench --bench sec44_sparsification`
+
+use bertdist::data::masking::{build_batch, MaskingConfig};
+use bertdist::data::PairExample;
+use bertdist::grad::sparsify::{by_threshold, cosine_to_dense,
+                               synth_heavy_tailed, top_k};
+use bertdist::runtime::Engine;
+use bertdist::trainer::init_params;
+use bertdist::util::fmt::render_table;
+use bertdist::util::stopwatch::bench_times;
+use bertdist::util::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== §4.4 baseline: gradient sparsification on BERT ===\n");
+    let engine = Engine::cpu(std::path::Path::new("artifacts"))?;
+    let model = engine.model("bert-micro")?;
+    let step = engine.train_step("bert-micro", "fused_f32", 2, 32)?;
+    let mut rng = Pcg64::new(17);
+    let params = init_params(&model.layout, &mut rng);
+    let ex = PairExample {
+        tokens_a: (10..24).collect(),
+        tokens_b: (30..44).collect(),
+        is_next: true,
+    };
+    let cfg = MaskingConfig { vocab_size: 512, ..Default::default() };
+    let batch = build_batch(&[ex.clone(), ex], 32, &cfg, &mut rng);
+    let grads = step.run(&params, &batch, 1.0)?.grads;
+    let n = grads.len();
+
+    println!("real BERT gradient ({n} elements) vs synthetic heavy-tailed:\n");
+    let heavy = synth_heavy_tailed(n, 3);
+    let mut rows = Vec::new();
+    for keep_pct in [50.0, 20.0, 10.0, 1.0] {
+        let k = (n as f64 * keep_pct / 100.0) as usize;
+        let s_bert = top_k(&grads, k);
+        let s_heavy = top_k(&heavy, k);
+        rows.push(vec![
+            format!("{keep_pct}%"),
+            format!("{:.1}x", s_bert.compression()),
+            format!("{:.3}", cosine_to_dense(&s_bert, &grads)),
+            format!("{:.3}", cosine_to_dense(&s_heavy, &heavy)),
+        ]);
+    }
+    println!("{}", render_table(
+        &["kept", "compression", "cosine (BERT grads)",
+          "cosine (heavy-tailed)"],
+        &rows));
+
+    // shape assertions: at 100:1 compression (where sparsification pays
+    // for its overheads) the heavy-tailed gradient keeps its signal but
+    // BERT's dense gradient visibly degrades.
+    let k10 = n / 10;
+    let k100 = n / 100;
+    let cos_bert = cosine_to_dense(&top_k(&grads, k100), &grads);
+    let cos_heavy = cosine_to_dense(&top_k(&heavy, k100), &heavy);
+    assert!(cos_heavy > 0.995, "heavy-tailed must stay intact: {cos_heavy}");
+    assert!(cos_bert < cos_heavy - 0.02,
+            "dense BERT must degrade more: {cos_bert} vs {cos_heavy}");
+
+    // selection overhead
+    let (sel_min, _, _) = bench_times(5, || {
+        std::hint::black_box(top_k(&grads, k10));
+    });
+    println!("top-k selection overhead: {:.2} ms for {n} grads \
+              ({:.0} Melem/s) — paid EVERY iteration",
+             sel_min * 1e3, n as f64 / sel_min / 1e6);
+
+    // threshold sensitivity (the tuning problem)
+    println!("\nthreshold sensitivity (the §4.4 tuning risk):\n");
+    let mut rows = Vec::new();
+    for t in [1e-6f32, 1e-5, 1e-4, 1e-3] {
+        let s = by_threshold(&grads, t);
+        rows.push(vec![
+            format!("{t:.0e}"),
+            format!("{:.2}%", 100.0 * s.indices.len() as f64 / n as f64),
+            format!("{:.1}x", s.compression()),
+            format!("{:.3}", cosine_to_dense(&s, &grads)),
+        ]);
+    }
+    println!("{}", render_table(
+        &["threshold", "kept", "compression", "cosine"], &rows));
+    println!("a 100x threshold range swings kept-fraction by orders of \
+              magnitude — the tuning burden the paper cites.");
+
+    // the alternative the paper chose: gradient accumulation reduces
+    // traffic 4x with ZERO signal distortion.
+    println!("\ngradient accumulation k=4 (the paper's choice): 4.0x \
+              traffic reduction, cosine 1.000 by construction.");
+    println!("\nsec44_sparsification OK");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Bench: the §5.3 experiment — fine-tune the QA span head starting
+//! from a PRETRAINED checkpoint vs from scratch, on the SQuAD-mechanism
+//! task (DESIGN.md §2 substitution for SQuAD v1.1).
+//!
+//! The paper's §5.3 signal: the pretrained encoder transfers (81–83% F1
+//! on real SQuAD).  Our shape check: after the same number of fine-tune
+//! steps, the pretrained start reaches a lower (or equal) QA loss than
+//! the random start.
+//!
+//! Run: `cargo bench --bench sec53_finetune`
+
+use bertdist::config::RunConfig;
+use bertdist::coordinator::train_run;
+use bertdist::data::corpus::SyntheticCorpus;
+use bertdist::data::{build_shards, Vocab};
+use bertdist::finetune::run_finetune;
+use bertdist::runtime::Engine;
+use bertdist::topology::Topology;
+use bertdist::trainer::init_params;
+use bertdist::util::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== §5.3: fine-tuning from pretrained vs scratch ===\n");
+    let engine = Engine::cpu(std::path::Path::new("artifacts"))?;
+    let preset = "bert-micro";
+    let model = engine.model(preset)?;
+
+    // ---- quick MLM pretraining to obtain a checkpoint ----
+    let dir = std::env::temp_dir().join("bertdist_sec53");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+    let docs = SyntheticCorpus::new(31, 2_000).documents(40, 8, 10);
+    let vocab = Vocab::from_documents(&docs, model.config.vocab_size);
+    vocab.save(&dir.join("vocab.txt"))?;
+    build_shards(&docs, &vocab, 2, &dir, "train", 31)?;
+
+    let mut cfg = RunConfig::default();
+    cfg.train.preset = preset.into();
+    cfg.train.lr = 2e-3;
+    cfg.train.warmup_steps = 10;
+    cfg.train.accum_steps = 1;
+    cfg.train.log_every = 50;
+    cfg.cluster.topo = Topology::parse("1M2G").unwrap();
+    println!("pretraining {preset} for 150 steps ...");
+    let ck = dir.join("pre.ckpt");
+    let out = train_run(&engine, &cfg, &dir, 150, 0, 2, 32, Some(&ck))?;
+    println!("pretraining: loss {:.4} -> {:.4}\n",
+             out.phase1.loss.points[0].1, out.phase1.loss.tail_mean(10));
+
+    // ---- fine-tune: pretrained vs scratch, same seed/steps ----
+    let pre = bertdist::checkpoint::Checkpoint::load(&ck)?;
+    let mut rng = Pcg64::new(2);
+    let scratch = init_params(&model.layout, &mut rng);
+    let steps = 80;
+    println!("fine-tuning {steps} steps each ...");
+    let rep_pre =
+        run_finetune(&engine, preset, &pre.params, steps, 2, 32, 1e-3, 9)?;
+    let rep_scr =
+        run_finetune(&engine, preset, &scratch, steps, 2, 32, 1e-3, 9)?;
+
+    let tail_pre = rep_pre.loss.tail_mean(10);
+    let tail_scr = rep_scr.loss.tail_mean(10);
+    println!("  pretrained: loss -> {tail_pre:.4}, exact {:.1}%",
+             rep_pre.final_exact * 100.0);
+    println!("  scratch   : loss -> {tail_scr:.4}, exact {:.1}%",
+             rep_scr.final_exact * 100.0);
+
+    // shape assertions
+    assert!(rep_pre.loss.tail_mean(10) < rep_pre.loss.points[0].1,
+            "pretrained fine-tune must learn");
+    assert!(rep_scr.loss.tail_mean(10) < rep_scr.loss.points[0].1,
+            "scratch fine-tune must learn");
+    assert!(tail_pre <= tail_scr * 1.05,
+            "pretrained start must not be worse than scratch \
+             ({tail_pre:.4} vs {tail_scr:.4})");
+    println!("\npaper context: real SQuAD F1 81-83% (theirs) vs 90.9% \
+              (Google) — the gap is a phase-2 hyperparameter issue \
+              (§5.2), not a systems issue; this bench reproduces the \
+              transfer mechanism.");
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("\nsec53_finetune OK");
+    Ok(())
+}

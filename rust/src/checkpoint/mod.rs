@@ -1,0 +1,179 @@
+//! Checkpointing: save/restore (params, optimizer moments, step, scaler)
+//! to a single binary file with CRC integrity.  Own format — no serde
+//! offline (DESIGN.md §10).
+//!
+//! Layout: `BCKP | version u32 | step u64 | scale f64 | n u64 |
+//! params f32*n | m f32*n | v f32*n | crc32 u32`.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::util::crc32::Crc32;
+
+const MAGIC: &[u8; 4] = b"BCKP";
+const VERSION: u32 = 1;
+
+/// Everything needed to resume training.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub loss_scale: f64,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+#[derive(thiserror::Error, Debug)]
+pub enum CkptError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("not a bertdist checkpoint")]
+    BadMagic,
+    #[error("unsupported checkpoint version {0}")]
+    BadVersion(u32),
+    #[error("checkpoint corrupt (crc mismatch)")]
+    Corrupt,
+    #[error("state size mismatch")]
+    SizeMismatch,
+}
+
+impl Checkpoint {
+    pub fn new(n: usize) -> Self {
+        Self {
+            step: 0,
+            loss_scale: 65536.0,
+            params: vec![0.0; n],
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+        }
+    }
+
+    /// Save atomically (write temp + rename).
+    pub fn save(&self, path: &Path) -> Result<(), CkptError> {
+        if self.m.len() != self.params.len()
+            || self.v.len() != self.params.len() {
+            return Err(CkptError::SizeMismatch);
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            let mut crc = Crc32::new();
+            let w = |f: &mut dyn Write, crc: &mut Crc32, b: &[u8]|
+                -> std::io::Result<()> {
+                crc.update(b);
+                f.write_all(b)
+            };
+            w(&mut f, &mut crc, MAGIC)?;
+            w(&mut f, &mut crc, &VERSION.to_le_bytes())?;
+            w(&mut f, &mut crc, &self.step.to_le_bytes())?;
+            w(&mut f, &mut crc, &self.loss_scale.to_le_bytes())?;
+            w(&mut f, &mut crc, &(self.params.len() as u64).to_le_bytes())?;
+            for arr in [&self.params, &self.m, &self.v] {
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(arr.as_ptr() as *const u8,
+                                               arr.len() * 4)
+                };
+                w(&mut f, &mut crc, bytes)?;
+            }
+            f.write_all(&crc.finalize().to_le_bytes())?;
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load and verify.
+    pub fn load(path: &Path) -> Result<Checkpoint, CkptError> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes)?;
+        if bytes.len() < 4 + 4 + 8 + 8 + 8 + 4 {
+            return Err(CkptError::BadMagic);
+        }
+        if &bytes[0..4] != MAGIC {
+            return Err(CkptError::BadMagic);
+        }
+        let body = &bytes[..bytes.len() - 4];
+        let want_crc = u32::from_le_bytes(
+            bytes[bytes.len() - 4..].try_into().unwrap());
+        if crate::util::crc32(body) != want_crc {
+            return Err(CkptError::Corrupt);
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(CkptError::BadVersion(version));
+        }
+        let step = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        let loss_scale =
+            f64::from_le_bytes(bytes[16..24].try_into().unwrap());
+        let n = u64::from_le_bytes(bytes[24..32].try_into().unwrap()) as usize;
+        let expect = 32 + 3 * n * 4 + 4;
+        if bytes.len() != expect {
+            return Err(CkptError::SizeMismatch);
+        }
+        let read_arr = |off: usize| -> Vec<f32> {
+            bytes[off..off + n * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        };
+        Ok(Checkpoint {
+            step,
+            loss_scale,
+            params: read_arr(32),
+            m: read_arr(32 + n * 4),
+            v: read_arr(32 + 2 * n * 4),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut c = Checkpoint::new(100);
+        c.step = 42;
+        c.loss_scale = 1024.0;
+        for i in 0..100 {
+            c.params[i] = i as f32 * 0.5;
+            c.m[i] = -(i as f32);
+            c.v[i] = i as f32 * i as f32;
+        }
+        let path = std::env::temp_dir().join("bertdist_ckpt_rt.bin");
+        c.save(&path).unwrap();
+        let l = Checkpoint::load(&path).unwrap();
+        assert_eq!(l, c);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let c = Checkpoint::new(10);
+        let path = std::env::temp_dir().join("bertdist_ckpt_corrupt.bin");
+        c.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[40] ^= 1;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(Checkpoint::load(&path), Err(CkptError::Corrupt)));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn bad_magic_detected() {
+        let path = std::env::temp_dir().join("bertdist_ckpt_magic.bin");
+        std::fs::write(&path, b"garbage-not-a-checkpoint-xxxxxxxxxxxx")
+            .unwrap();
+        assert!(matches!(Checkpoint::load(&path), Err(CkptError::BadMagic)));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn size_mismatch_on_save() {
+        let mut c = Checkpoint::new(10);
+        c.m.pop();
+        let path = std::env::temp_dir().join("bertdist_ckpt_size.bin");
+        assert!(matches!(c.save(&path), Err(CkptError::SizeMismatch)));
+    }
+}

@@ -1,0 +1,190 @@
+//! Minimal CLI argument parser (substrate: `clap` unavailable offline).
+//!
+//! Grammar: `bertdist <subcommand> [--flag] [--key value] [--key=value]
+//! [positional...]`.  Typed accessors with defaults; unknown options are
+//! an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` / `--key=value` options.
+    opts: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    flags: Vec<String>,
+    /// Remaining positional arguments (after the subcommand).
+    pub positional: Vec<String>,
+    /// Option keys that were consumed via accessors (for strict checking).
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+#[derive(thiserror::Error, Debug)]
+pub enum CliError {
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value} ({hint})")]
+    BadValue { key: String, value: String, hint: String },
+    #[error("unknown option(s): {0}")]
+    Unknown(String),
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) — `argv[0]` excluded.
+    pub fn parse_from<I, S>(tokens: I) -> Result<Args, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Args::default();
+        let toks: Vec<String> = tokens.into_iter().map(Into::into).collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(body) = t.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    out.opts.insert(body[..eq].to_string(),
+                                    body[eq + 1..].to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.opts.insert(body.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn parse() -> Result<Args, CliError> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    /// String option with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn get_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.opts.get(key).cloned()
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T)
+        -> Result<T, CliError> {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: key.to_string(),
+                value: v.clone(),
+                hint: std::any::type_name::<T>().to_string(),
+            }),
+        }
+    }
+
+    /// Boolean switch: present as `--flag`, or `--flag true/false`.
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        if self.flags.iter().any(|f| f == key) {
+            return true;
+        }
+        matches!(self.opts.get(key).map(|s| s.as_str()),
+                 Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) if v.is_empty() => Vec::new(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+
+    /// After all accessors ran, error on any unconsumed option/flag.
+    pub fn finish_strict(&self) -> Result<(), CliError> {
+        let seen = self.seen.borrow();
+        let mut unknown: Vec<String> = self
+            .opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !seen.contains(k))
+            .map(|k| format!("--{k}"))
+            .collect();
+        unknown.dedup();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError::Unknown(unknown.join(", ")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_options_flags_positionals() {
+        let a = Args::parse_from(["train", "--steps", "100", "--fast",
+                                  "--lr=0.1", "path1", "path2"]).unwrap();
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get_parse("steps", 0usize).unwrap(), 100);
+        assert_eq!(a.get_parse("lr", 0.0f64).unwrap(), 0.1);
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional, vec!["path1", "path2"]);
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let a = Args::parse_from(["x"]).unwrap();
+        assert_eq!(a.get("name", "dflt"), "dflt");
+        assert_eq!(a.get_parse("k", 7i32).unwrap(), 7);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn bad_typed_value_is_error() {
+        let a = Args::parse_from(["x", "--n", "abc"]).unwrap();
+        assert!(a.get_parse("n", 0u32).is_err());
+    }
+
+    #[test]
+    fn strict_mode_catches_typos() {
+        let a = Args::parse_from(["x", "--stps", "5"]).unwrap();
+        let _ = a.get_parse("steps", 0usize);
+        assert!(a.finish_strict().is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = Args::parse_from(["x", "--v", "a, b,c"]).unwrap();
+        assert_eq!(a.get_list("v", &[]), vec!["a", "b", "c"]);
+        assert_eq!(a.get_list("w", &["d"]), vec!["d"]);
+    }
+
+    #[test]
+    fn boolean_with_explicit_value() {
+        let a = Args::parse_from(["x", "--overlap", "true"]).unwrap();
+        assert!(a.flag("overlap"));
+        let b = Args::parse_from(["x", "--overlap=false"]).unwrap();
+        assert!(!b.flag("overlap"));
+    }
+}

@@ -1,0 +1,176 @@
+//! Hierarchical allreduce executor (paper §4.4 resource separation):
+//! reduce within each node over "PCIe", ring-allreduce across node
+//! leaders over the "network", then broadcast back within each node.
+//!
+//! This is the data-movement schedule NCCL uses on multi-GPU nodes with
+//! a single NIC; the traffic crossing the network is `2(M−1)/M · bytes`
+//! regardless of the per-node GPU count — the property that makes the
+//! 10 Gb/s bottleneck survivable.  The result must equal the flat ring
+//! exactly (property-tested below); only the *where bytes travel*
+//! differs, which `netsim::hierarchical_allreduce_time` prices.
+
+use super::ring::ring_allreduce_inplace;
+use crate::topology::Topology;
+
+/// Execute hierarchical allreduce over per-device buffers laid out in
+/// rank order (machine-major).  All buffers end up holding the global
+/// elementwise sum.
+pub fn hierarchical_allreduce_inplace(topo: &Topology,
+                                      bufs: &mut [Vec<f32>]) {
+    let world = topo.world_size();
+    assert_eq!(bufs.len(), world, "need one buffer per device");
+    if world <= 1 {
+        return;
+    }
+    let g = topo.gpus_per_machine;
+    let m = topo.machines;
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "ragged buffers");
+
+    // Phase 1 — intra-node reduce to the local leader (PCIe traffic):
+    // leader (local rank 0) accumulates its node's buffers.
+    for machine in 0..m {
+        let base = machine * g;
+        for local in 1..g {
+            let (head, tail) = bufs.split_at_mut(base + local);
+            let leader = &mut head[base];
+            for (d, s) in leader.iter_mut().zip(&tail[0]) {
+                *d += s;
+            }
+        }
+    }
+
+    // Phase 2 — inter-node ring allreduce over the leaders (network).
+    if m > 1 {
+        let mut leader_bufs: Vec<Vec<f32>> = (0..m)
+            .map(|machine| std::mem::take(&mut bufs[machine * g]))
+            .collect();
+        ring_allreduce_inplace(&mut leader_bufs);
+        for (machine, lb) in leader_bufs.into_iter().enumerate() {
+            bufs[machine * g] = lb;
+        }
+    }
+
+    // Phase 3 — intra-node broadcast from the leader (PCIe traffic).
+    for machine in 0..m {
+        let base = machine * g;
+        let (head, tail) = bufs.split_at_mut(base + 1);
+        let leader = &head[base];
+        for local in 0..g - 1 {
+            tail[local].copy_from_slice(leader);
+        }
+    }
+}
+
+/// Bytes a single node's NIC carries under each scheme, for a payload
+/// of `bytes` — the §4.4 accounting that justifies the hierarchy.
+pub fn nic_bytes_per_node(topo: &Topology, bytes: f64,
+                          hierarchical: bool) -> f64 {
+    let m = topo.machines;
+    if m <= 1 {
+        return 0.0;
+    }
+    if hierarchical {
+        // leader ring over m nodes: send 2(m-1)/m of the payload
+        2.0 * (m as f64 - 1.0) / m as f64 * bytes
+    } else {
+        // flat ring over world ranks, machine-major: the single network
+        // hop per node carries 2(n-1)/n of the payload too — same
+        // bandwidth, but lockstep with (g-1) PCIe hops per step.
+        let n = topo.world_size() as f64;
+        2.0 * (n - 1.0) / n * bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::util::Pcg64;
+
+    fn serial_sum(bufs: &[Vec<f32>]) -> Vec<f32> {
+        let mut out = vec![0.0f32; bufs[0].len()];
+        for b in bufs {
+            for (o, v) in out.iter_mut().zip(b) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_serial_sum_2m2g() {
+        let topo = Topology::new(2, 2);
+        let mut bufs: Vec<Vec<f32>> = (0..4)
+            .map(|r| (0..10).map(|i| (r * 100 + i) as f32).collect())
+            .collect();
+        let want = serial_sum(&bufs);
+        hierarchical_allreduce_inplace(&topo, &mut bufs);
+        for b in &bufs {
+            testkit::assert_allclose(b, &want, 1e-5, 1e-6);
+        }
+    }
+
+    #[test]
+    fn single_device_noop() {
+        let topo = Topology::new(1, 1);
+        let mut bufs = vec![vec![1.0, 2.0]];
+        hierarchical_allreduce_inplace(&topo, &mut bufs);
+        assert_eq!(bufs[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn single_node_many_gpus() {
+        let topo = Topology::new(1, 4);
+        let mut bufs: Vec<Vec<f32>> =
+            (0..4).map(|r| vec![r as f32 + 1.0; 5]).collect();
+        hierarchical_allreduce_inplace(&topo, &mut bufs);
+        for b in &bufs {
+            testkit::assert_allclose(b, &vec![10.0; 5], 1e-6, 0.0);
+        }
+    }
+
+    #[test]
+    fn prop_hierarchical_equals_flat_ring() {
+        testkit::check_msg(
+            "hier=flat", 0x41E2, 40,
+            |r: &mut Pcg64| {
+                let m = r.range_usize(1, 5);
+                let g = r.range_usize(1, 5);
+                let len = r.range_usize(1, 120);
+                let bufs: Vec<Vec<f32>> = (0..m * g)
+                    .map(|_| (0..len).map(|_| r.next_f32() * 2.0 - 1.0)
+                        .collect())
+                    .collect();
+                (m, g, bufs)
+            },
+            |(m, g, bufs)| {
+                let topo = Topology::new(*m, *g);
+                let mut flat = bufs.clone();
+                ring_allreduce_inplace(&mut flat);
+                let mut hier = bufs.clone();
+                hierarchical_allreduce_inplace(&topo, &mut hier);
+                for (rank, (a, b)) in hier.iter().zip(&flat).enumerate() {
+                    let d = testkit::max_abs_diff(a, b);
+                    if d > 1e-3 {
+                        return Err(format!("rank {rank} diff {d}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn nic_traffic_accounting() {
+        let topo = Topology::new(32, 8);
+        let bytes = 1.345e9;
+        let hier = nic_bytes_per_node(&topo, bytes, true);
+        let flat = nic_bytes_per_node(&topo, bytes, false);
+        // both ~2x payload; hierarchical is slightly lower (m vs n terms)
+        assert!(hier < flat);
+        assert!((hier / bytes - 2.0 * 31.0 / 32.0).abs() < 1e-9);
+        assert_eq!(nic_bytes_per_node(&Topology::new(1, 8), bytes, true),
+                   0.0);
+    }
+}

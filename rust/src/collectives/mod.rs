@@ -1,0 +1,54 @@
+//! Collective communication (paper §2.2, §4.4): ring allreduce implemented
+//! for real over worker threads, plus broadcast/allgather, and the
+//! hierarchical (PCIe-then-network) variant.
+//!
+//! The algorithm is NCCL's: reduce-scatter then all-gather around a ring.
+//! Every rank sends exactly `2*(n-1)/n * M` elements, so any single link
+//! carries at most one gradient's worth of traffic — the property the
+//! paper relies on for linear bandwidth scaling (§2.2).
+//!
+//! Data movement here is REAL (shared-memory channels between threads);
+//! wall-clock timing for cluster-scale runs comes from `netsim`'s
+//! analytic model, which `cost` re-exports for the simulator.
+
+pub mod hierarchical;
+pub mod ring;
+pub mod threaded;
+
+pub use hierarchical::hierarchical_allreduce_inplace;
+pub use ring::{ring_allreduce_inplace, RingPlan};
+pub use threaded::{CollectiveGroup, GroupHandle};
+
+use crate::netsim::{Fabric, LinkModel};
+use crate::topology::Topology;
+
+/// Analytic cost of the collective used by the simulator; thin wrapper
+/// over `netsim` so callers only import one module.
+pub fn allreduce_cost(topo: &Topology, bytes: f64, fabric: &Fabric,
+                      hierarchical: bool) -> f64 {
+    if hierarchical && topo.machines > 1 && topo.gpus_per_machine > 1 {
+        crate::netsim::hierarchical_allreduce_time(topo, bytes, fabric)
+    } else {
+        let link: LinkModel = fabric.ring_bottleneck(topo);
+        crate::netsim::ring_allreduce_time(topo.world_size(), bytes, link)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_zero_for_single_device() {
+        let topo = Topology::new(1, 1);
+        assert_eq!(allreduce_cost(&topo, 1e9, &Fabric::paper(), false), 0.0);
+    }
+
+    #[test]
+    fn cost_increases_with_world_size_payload() {
+        let f = Fabric::paper();
+        let t2 = allreduce_cost(&Topology::new(2, 1), 1e8, &f, false);
+        let t2b = allreduce_cost(&Topology::new(2, 1), 2e8, &f, false);
+        assert!(t2b > t2);
+    }
+}

@@ -1,0 +1,241 @@
+//! Ring allreduce chunk plan + a single-threaded reference executor.
+//!
+//! [`RingPlan`] computes the chunk boundaries each rank owns; the
+//! reduce-scatter phase walks `n-1` steps where rank r sends chunk
+//! `(r - step) mod n` to its successor, the all-gather phase walks the
+//! reduced chunks back around.  [`ring_allreduce_inplace`] executes the
+//! schedule over borrowed buffers — it is the oracle the threaded
+//! implementation is property-tested against, and doubles as the
+//! in-process path when world_size == 1.
+
+/// Chunk boundaries for a ring of `n` ranks over a buffer of `len`.
+#[derive(Debug, Clone)]
+pub struct RingPlan {
+    pub n: usize,
+    pub len: usize,
+    bounds: Vec<usize>, // n+1 entries
+}
+
+impl RingPlan {
+    pub fn new(n: usize, len: usize) -> Self {
+        assert!(n >= 1);
+        // Chunks are as even as possible; the first `len % n` chunks get
+        // one extra element.
+        let base = len / n;
+        let extra = len % n;
+        let mut bounds = Vec::with_capacity(n + 1);
+        let mut off = 0;
+        bounds.push(0);
+        for i in 0..n {
+            off += base + usize::from(i < extra);
+            bounds.push(off);
+        }
+        Self { n, len, bounds }
+    }
+
+    /// Element range of chunk `c`.
+    pub fn chunk(&self, c: usize) -> std::ops::Range<usize> {
+        self.bounds[c]..self.bounds[c + 1]
+    }
+
+    /// Chunk index rank `r` SENDS at reduce-scatter step `s` (0-based).
+    pub fn send_chunk_rs(&self, r: usize, s: usize) -> usize {
+        (r + self.n - s) % self.n
+    }
+
+    /// Chunk index rank `r` RECEIVES (and reduces) at step `s`.
+    pub fn recv_chunk_rs(&self, r: usize, s: usize) -> usize {
+        // the predecessor's send chunk
+        (r + self.n - 1 - s) % self.n
+    }
+
+    /// Chunk rank `r` sends at all-gather step `s`: the fully-reduced
+    /// chunk it owns after reduce-scatter, rotating around.
+    pub fn send_chunk_ag(&self, r: usize, s: usize) -> usize {
+        (r + 1 + self.n - s) % self.n
+    }
+
+    /// Chunk rank `r` receives at all-gather step `s`.
+    pub fn recv_chunk_ag(&self, r: usize, s: usize) -> usize {
+        (r + self.n - s) % self.n
+    }
+
+    /// Total elements a single rank transmits (2*(n-1)/n * len, ±rounding).
+    pub fn bytes_sent_per_rank(&self) -> usize {
+        if self.n == 1 {
+            return 0;
+        }
+        let mut total = 0;
+        for s in 0..self.n - 1 {
+            total += self.chunk(self.send_chunk_rs(0, s)).len();
+            total += self.chunk(self.send_chunk_ag(0, s)).len();
+        }
+        total
+    }
+}
+
+/// Execute ring allreduce (sum) over `bufs` in place — every buffer ends
+/// up holding the elementwise sum.  Single-threaded reference: the
+/// schedule is executed step-by-step exactly as the threaded version
+/// does, including chunk ordering.
+pub fn ring_allreduce_inplace(bufs: &mut [Vec<f32>]) {
+    let n = bufs.len();
+    if n <= 1 {
+        return;
+    }
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "ragged buffers");
+    let plan = RingPlan::new(n, len);
+
+    // reduce-scatter: after n-1 steps, rank r owns the full sum of chunk
+    // (r+1) % n.
+    for s in 0..n - 1 {
+        // simultaneous exchange: gather all messages first, then apply.
+        let msgs: Vec<(usize, usize, Vec<f32>)> = (0..n)
+            .map(|r| {
+                let c = plan.send_chunk_rs(r, s);
+                let rng = plan.chunk(c);
+                ((r + 1) % n, c, bufs[r][rng].to_vec())
+            })
+            .collect();
+        for (dst, c, data) in msgs {
+            let rng = plan.chunk(c);
+            for (d, v) in bufs[dst][rng].iter_mut().zip(data) {
+                *d += v;
+            }
+        }
+    }
+    // all-gather: rotate the reduced chunks around the ring.
+    for s in 0..n - 1 {
+        let msgs: Vec<(usize, usize, Vec<f32>)> = (0..n)
+            .map(|r| {
+                let c = plan.send_chunk_ag(r, s);
+                let rng = plan.chunk(c);
+                ((r + 1) % n, c, bufs[r][rng].to_vec())
+            })
+            .collect();
+        for (dst, c, data) in msgs {
+            let rng = plan.chunk(c);
+            bufs[dst][rng].copy_from_slice(&data);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::util::Pcg64;
+
+    fn serial_sum(bufs: &[Vec<f32>]) -> Vec<f32> {
+        let len = bufs[0].len();
+        let mut out = vec![0.0f32; len];
+        for b in bufs {
+            for (o, v) in out.iter_mut().zip(b) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn plan_chunks_partition_buffer() {
+        for (n, len) in [(1, 10), (3, 10), (4, 4), (5, 23), (8, 8), (7, 3)] {
+            let p = RingPlan::new(n, len);
+            let mut covered = 0;
+            for c in 0..n {
+                covered += p.chunk(c).len();
+            }
+            assert_eq!(covered, len, "n={n} len={len}");
+            assert_eq!(p.chunk(0).start, 0);
+            assert_eq!(p.chunk(n - 1).end, len);
+        }
+    }
+
+    #[test]
+    fn schedule_send_recv_consistent() {
+        // What rank r+1 receives at step s is what rank r sends.
+        let p = RingPlan::new(5, 50);
+        for s in 0..4 {
+            for r in 0..5 {
+                assert_eq!(p.send_chunk_rs(r, s), p.recv_chunk_rs((r + 1) % 5, s));
+                assert_eq!(p.send_chunk_ag(r, s), p.recv_chunk_ag((r + 1) % 5, s));
+            }
+        }
+    }
+
+    #[test]
+    fn traffic_matches_2nm1_over_n() {
+        // Each rank transmits 2*(n-1)/n of the payload (paper §2.2).
+        let p = RingPlan::new(4, 400);
+        assert_eq!(p.bytes_sent_per_rank(), 2 * 3 * 100);
+        let p1 = RingPlan::new(1, 100);
+        assert_eq!(p1.bytes_sent_per_rank(), 0);
+    }
+
+    #[test]
+    fn allreduce_equals_serial_sum_basic() {
+        let mut bufs = vec![
+            vec![1.0, 2.0, 3.0, 4.0, 5.0],
+            vec![10.0, 20.0, 30.0, 40.0, 50.0],
+            vec![100.0, 200.0, 300.0, 400.0, 500.0],
+        ];
+        let want = serial_sum(&bufs);
+        ring_allreduce_inplace(&mut bufs);
+        for b in &bufs {
+            testkit::assert_allclose(b, &want, 1e-6, 1e-6);
+        }
+    }
+
+    #[test]
+    fn single_rank_is_identity() {
+        let mut bufs = vec![vec![1.0, -2.0, 3.5]];
+        ring_allreduce_inplace(&mut bufs);
+        assert_eq!(bufs[0], vec![1.0, -2.0, 3.5]);
+    }
+
+    #[test]
+    fn prop_allreduce_equals_serial_sum() {
+        testkit::check_msg(
+            "ring-allreduce=sum", 0xC0, 48,
+            |r: &mut Pcg64| {
+                let n = r.range_usize(1, 9);
+                let len = r.range_usize(1, 200);
+                let bufs: Vec<Vec<f32>> = (0..n)
+                    .map(|_| (0..len)
+                        .map(|_| (r.next_f32() - 0.5) * 10.0)
+                        .collect())
+                    .collect();
+                bufs
+            },
+            |bufs| {
+                let want = serial_sum(bufs);
+                let mut got = bufs.clone();
+                ring_allreduce_inplace(&mut got);
+                for (r, b) in got.iter().enumerate() {
+                    let d = testkit::max_abs_diff(b, &want);
+                    if d > 1e-3 {
+                        return Err(format!("rank {r} off by {d}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_chunk_len_when_smaller_than_ranks() {
+        // len < n: some chunks are empty but the sum must still be exact.
+        testkit::check(
+            "ring-small-buffers", 0xC1, 32,
+            |r: &mut Pcg64| (r.range_usize(2, 12), r.range_usize(1, 6)),
+            |&(n, len)| {
+                let mut bufs: Vec<Vec<f32>> =
+                    (0..n).map(|i| vec![i as f32 + 1.0; len]).collect();
+                let want: f32 = (1..=n).map(|i| i as f32).sum();
+                ring_allreduce_inplace(&mut bufs);
+                bufs.iter().all(|b| b.iter().all(|&v| (v - want).abs() < 1e-4))
+            },
+        );
+    }
+}

@@ -1,0 +1,312 @@
+//! Multi-threaded collectives: real data exchange between worker threads
+//! over ring channels — the in-process stand-in for NCCL (DESIGN.md §2).
+//!
+//! [`CollectiveGroup::new(n)`] wires `n` ranks into a ring of mpsc
+//! channels; each worker thread takes its [`GroupHandle`] and calls
+//! `allreduce` / `broadcast` / `barrier` exactly like an NCCL
+//! communicator.  Messages are chunk vectors; channels are unbounded so
+//! the lock-step ring schedule cannot deadlock.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+
+use super::ring::RingPlan;
+
+/// A message on the ring: (step tag, chunk payload).
+type Msg = (u32, Vec<f32>);
+
+/// Factory for the per-rank handles of one communicator group.
+pub struct CollectiveGroup;
+
+impl CollectiveGroup {
+    /// Create `n` ring-connected handles (index = rank).
+    pub fn new(n: usize) -> Vec<GroupHandle> {
+        assert!(n >= 1);
+        let mut txs: Vec<Option<Sender<Msg>>> = Vec::with_capacity(n);
+        let mut rxs: Vec<Option<Receiver<Msg>>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel::<Msg>();
+            txs.push(Some(tx));
+            rxs.push(Some(rx));
+        }
+        let barrier = Arc::new(Barrier::new(n));
+        let mut handles = Vec::with_capacity(n);
+        for r in 0..n {
+            // rank r sends to (r+1)%n, receives from (r-1+n)%n.
+            let tx_next = txs[(r + 1) % n].take().unwrap();
+            let rx_prev = rxs[r].replace(unsafe_dummy_rx()).unwrap();
+            handles.push(GroupHandle {
+                rank: r,
+                n,
+                tx_next,
+                rx_prev,
+                barrier: barrier.clone(),
+                bytes_sent: 0,
+            });
+        }
+        handles
+    }
+}
+
+// Placeholder receiver used only during construction (never read).
+fn unsafe_dummy_rx() -> Receiver<Msg> {
+    channel().1
+}
+
+/// One rank's endpoint in a collective group.
+pub struct GroupHandle {
+    pub rank: usize,
+    pub n: usize,
+    tx_next: Sender<Msg>,
+    rx_prev: Receiver<Msg>,
+    barrier: Arc<Barrier>,
+    /// Total f32 elements this rank has transmitted (traffic accounting,
+    /// checked against the 2(n-1)/n law in tests).
+    bytes_sent: usize,
+}
+
+impl GroupHandle {
+    /// Elementwise-sum allreduce over `buf`, in place.
+    ///
+    /// NCCL ring algorithm: `n-1` reduce-scatter steps then `n-1`
+    /// all-gather steps.  Tags carry the step index as a sanity check
+    /// against schedule skew.
+    pub fn allreduce(&mut self, buf: &mut [f32]) {
+        let n = self.n;
+        if n == 1 {
+            return;
+        }
+        let plan = RingPlan::new(n, buf.len());
+        // reduce-scatter
+        for s in 0..n - 1 {
+            let c = plan.send_chunk_rs(self.rank, s);
+            let payload = buf[plan.chunk(c)].to_vec();
+            self.bytes_sent += payload.len();
+            self.tx_next.send((s as u32, payload)).expect("ring send");
+            let (tag, data) = self.rx_prev.recv().expect("ring recv");
+            debug_assert_eq!(tag, s as u32, "reduce-scatter schedule skew");
+            let rc = plan.recv_chunk_rs(self.rank, s);
+            for (d, v) in buf[plan.chunk(rc)].iter_mut().zip(data) {
+                *d += v;
+            }
+        }
+        // all-gather
+        for s in 0..n - 1 {
+            let c = plan.send_chunk_ag(self.rank, s);
+            let payload = buf[plan.chunk(c)].to_vec();
+            self.bytes_sent += payload.len();
+            self.tx_next.send((100 + s as u32, payload)).expect("ring send");
+            let (tag, data) = self.rx_prev.recv().expect("ring recv");
+            debug_assert_eq!(tag, 100 + s as u32, "all-gather schedule skew");
+            let rc = plan.recv_chunk_ag(self.rank, s);
+            buf[plan.chunk(rc)].copy_from_slice(&data);
+        }
+    }
+
+    /// Mean-allreduce: sum then divide by world size (gradient averaging).
+    pub fn allreduce_mean(&mut self, buf: &mut [f32]) {
+        self.allreduce(buf);
+        let inv = 1.0 / self.n as f32;
+        for v in buf.iter_mut() {
+            *v *= inv;
+        }
+    }
+
+    /// Broadcast `buf` from `root` to all ranks (ring pipeline).
+    pub fn broadcast(&mut self, buf: &mut [f32], root: usize) {
+        let n = self.n;
+        if n == 1 {
+            return;
+        }
+        // Pipeline around the ring: each rank forwards once, the rank
+        // just before root terminates.
+        let dist = (self.rank + n - root) % n; // hops from root
+        if dist == 0 {
+            self.bytes_sent += buf.len();
+            self.tx_next.send((200, buf.to_vec())).expect("bcast send");
+        } else {
+            let (_, data) = self.rx_prev.recv().expect("bcast recv");
+            buf.copy_from_slice(&data);
+            if dist != n - 1 {
+                self.bytes_sent += buf.len();
+                self.tx_next.send((200, data)).expect("bcast fwd");
+            }
+        }
+        self.barrier.wait();
+    }
+
+    /// Block until every rank reaches the barrier.
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+
+    /// Elements transmitted so far by this rank.
+    pub fn elements_sent(&self) -> usize {
+        self.bytes_sent
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::util::Pcg64;
+    use std::thread;
+
+    /// Run `n` worker threads, each applying `f` to its handle + buffer;
+    /// returns the final buffers.
+    fn run_group(bufs: Vec<Vec<f32>>,
+                 f: impl Fn(&mut GroupHandle, &mut Vec<f32>) + Send + Sync
+                     + 'static)
+                 -> Vec<Vec<f32>> {
+        let n = bufs.len();
+        let handles = CollectiveGroup::new(n);
+        let f = Arc::new(f);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .zip(bufs)
+            .map(|(mut h, mut b)| {
+                let f = f.clone();
+                thread::spawn(move || {
+                    f(&mut h, &mut b);
+                    (b, h.elements_sent())
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap().0).collect()
+    }
+
+    #[test]
+    fn threaded_allreduce_matches_serial_sum() {
+        let bufs = vec![
+            vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0],
+            vec![10.0, 20.0, 30.0, 40.0, 50.0, 60.0, 70.0],
+            vec![0.5; 7],
+        ];
+        let mut want = vec![0.0f32; 7];
+        for b in &bufs {
+            for (w, v) in want.iter_mut().zip(b) {
+                *w += v;
+            }
+        }
+        let got = run_group(bufs, |h, b| h.allreduce(b));
+        for g in got {
+            testkit::assert_allclose(&g, &want, 1e-5, 1e-5);
+        }
+    }
+
+    #[test]
+    fn threaded_matches_reference_implementation() {
+        let mut rng = Pcg64::new(0xD0);
+        let n = 5;
+        let len = 97;
+        let bufs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.next_f32() - 0.5).collect())
+            .collect();
+        let mut reference = bufs.clone();
+        super::super::ring::ring_allreduce_inplace(&mut reference);
+        let got = run_group(bufs, |h, b| h.allreduce(b));
+        for (g, r) in got.iter().zip(&reference) {
+            testkit::assert_allclose(g, r, 1e-5, 1e-5);
+        }
+    }
+
+    #[test]
+    fn allreduce_mean_averages() {
+        let bufs = vec![vec![2.0f32; 10], vec![4.0; 10]];
+        let got = run_group(bufs, |h, b| h.allreduce_mean(b));
+        for g in got {
+            testkit::assert_allclose(&g, &vec![3.0; 10], 1e-6, 0.0);
+        }
+    }
+
+    #[test]
+    fn broadcast_from_each_root() {
+        for root in 0..4 {
+            let bufs: Vec<Vec<f32>> = (0..4)
+                .map(|r| vec![r as f32 * 100.0; 6])
+                .collect();
+            let got = run_group(bufs, move |h, b| h.broadcast(b, root));
+            for g in got {
+                testkit::assert_allclose(&g, &vec![root as f32 * 100.0; 6],
+                                         0.0, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn traffic_per_rank_follows_ring_law() {
+        // 4 ranks, 400 elements: each rank must send exactly
+        // 2*(n-1)/n * len = 600 elements for allreduce.
+        let n = 4;
+        let len = 400;
+        let handles = CollectiveGroup::new(n);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|mut h| {
+                thread::spawn(move || {
+                    let mut b = vec![1.0f32; len];
+                    h.allreduce(&mut b);
+                    h.elements_sent()
+                })
+            })
+            .collect();
+        for j in joins {
+            assert_eq!(j.join().unwrap(), 600);
+        }
+    }
+
+    #[test]
+    fn prop_threaded_allreduce_random() {
+        testkit::check_msg(
+            "threaded-allreduce", 0xD1, 10,
+            |r: &mut Pcg64| {
+                let n = r.range_usize(2, 7);
+                let len = r.range_usize(1, 150);
+                (0..n)
+                    .map(|_| (0..len).map(|_| r.next_f32() * 4.0 - 2.0)
+                        .collect::<Vec<f32>>())
+                    .collect::<Vec<_>>()
+            },
+            |bufs| {
+                let mut want = vec![0.0f32; bufs[0].len()];
+                for b in bufs {
+                    for (w, v) in want.iter_mut().zip(b) {
+                        *w += v;
+                    }
+                }
+                let got = run_group(bufs.clone(), |h, b| h.allreduce(b));
+                for (i, g) in got.iter().enumerate() {
+                    let d = testkit::max_abs_diff(g, &want);
+                    if d > 1e-3 {
+                        return Err(format!("rank {i} diff {d}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let n = 4;
+        let counter = Arc::new(AtomicUsize::new(0));
+        let handles = CollectiveGroup::new(n);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|h| {
+                let c = counter.clone();
+                thread::spawn(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    h.barrier();
+                    // after the barrier, everyone must have incremented
+                    c.load(Ordering::SeqCst)
+                })
+            })
+            .collect();
+        for j in joins {
+            assert_eq!(j.join().unwrap(), n);
+        }
+    }
+}

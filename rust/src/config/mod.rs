@@ -1,0 +1,15 @@
+//! Configuration system: a TOML-subset parser plus the typed configs for
+//! model / training / cluster / data (paper Tables 1, 2, 6).
+//!
+//! The parser (`toml.rs`) covers the subset real config files need:
+//! `[section]` and `[section.sub]` headers, `key = value` with strings,
+//! integers, floats, booleans, and homogeneous inline arrays, plus `#`
+//! comments.  Substrate: the `toml` crate is unavailable offline.
+
+pub mod phases;
+pub mod toml;
+pub mod types;
+
+pub use phases::{PhaseConfig, TwoPhaseSchedule};
+pub use toml::TomlDoc;
+pub use types::{ClusterConfig, DataConfig, RunConfig, TrainConfig};

@@ -1,0 +1,284 @@
+//! TOML-subset parser (substrate: `toml`/`serde` unavailable offline).
+//!
+//! Supported: `[table]` / `[a.b]` headers, `key = "str" | 123 | 1.5 |
+//! true | [1, 2, 3]`, `#` comments, blank lines.  Keys are flattened to
+//! dotted paths (`section.key`).  This covers every config file shipped
+//! in `examples/` and `rust/tests/`.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+#[derive(thiserror::Error, Debug)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A parsed document: dotted-path -> value.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut prefix = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(TomlError { line: ln + 1,
+                                           msg: "unterminated header".into() });
+                }
+                prefix = line[1..line.len() - 1].trim().to_string();
+                if prefix.is_empty() {
+                    return Err(TomlError { line: ln + 1,
+                                           msg: "empty table name".into() });
+                }
+                continue;
+            }
+            let eq = line.find('=').ok_or(TomlError {
+                line: ln + 1,
+                msg: "expected key = value".into(),
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(TomlError { line: ln + 1, msg: "empty key".into() });
+            }
+            let val = parse_value(line[eq + 1..].trim()).map_err(|msg| {
+                TomlError { line: ln + 1, msg }
+            })?;
+            let full = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            doc.values.insert(full, val);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<TomlDoc> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        match self.values.get(key) {
+            Some(TomlValue::Str(s)) => s.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    pub fn int(&self, key: &str, default: i64) -> i64 {
+        match self.values.get(key) {
+            Some(TomlValue::Int(i)) => *i,
+            Some(TomlValue::Float(f)) => *f as i64,
+            _ => default,
+        }
+    }
+
+    pub fn float(&self, key: &str, default: f64) -> f64 {
+        match self.values.get(key) {
+            Some(TomlValue::Float(f)) => *f,
+            Some(TomlValue::Int(i)) => *i as f64,
+            _ => default,
+        }
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        match self.values.get(key) {
+            Some(TomlValue::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(unescape(body)));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?;
+        let body = body.trim();
+        if body.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let mut out = Vec::new();
+        for item in split_top_level(body) {
+            out.push(parse_value(item.trim())?);
+        }
+        return Ok(TomlValue::Array(out));
+    }
+    // number: int if no '.', 'e', or 'E'
+    let cleaned = s.replace('_', "");
+    if cleaned.contains(['.', 'e', 'E']) {
+        cleaned.parse::<f64>().map(TomlValue::Float)
+            .map_err(|_| format!("bad float '{s}'"))
+    } else {
+        cleaned.parse::<i64>().map(TomlValue::Int)
+            .map_err(|_| format!("bad integer '{s}'"))
+    }
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# run config
+name = "phase1"            # inline comment
+[train]
+steps = 100
+lr = 1e-4
+overlap = true
+accum = 4
+[cluster]
+topo = "32M8G"
+bandwidths = [10.0, 64.0]
+[cluster.net]
+latency_us = 50
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(d.str("name", ""), "phase1");
+        assert_eq!(d.int("train.steps", 0), 100);
+        assert!((d.float("train.lr", 0.0) - 1e-4).abs() < 1e-12);
+        assert!(d.bool("train.overlap", false));
+        assert_eq!(d.str("cluster.topo", ""), "32M8G");
+        assert_eq!(d.int("cluster.net.latency_us", 0), 50);
+        match d.get("cluster.bandwidths") {
+            Some(TomlValue::Array(a)) => assert_eq!(a.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let d = TomlDoc::parse("").unwrap();
+        assert_eq!(d.int("nope", 7), 7);
+        assert_eq!(d.str("nope", "x"), "x");
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let d = TomlDoc::parse("a = 3\nb = 2.5").unwrap();
+        assert_eq!(d.float("a", 0.0), 3.0);
+        assert_eq!(d.int("b", 0), 2);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let d = TomlDoc::parse(r##"k = "a#b" # real comment"##).unwrap();
+        assert_eq!(d.str("k", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = TomlDoc::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn escapes_in_strings() {
+        let d = TomlDoc::parse(r#"k = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(d.str("k", ""), "a\nb\t\"c\"");
+    }
+
+    #[test]
+    fn underscore_digit_separators() {
+        let d = TomlDoc::parse("n = 1_000_000").unwrap();
+        assert_eq!(d.int("n", 0), 1_000_000);
+    }
+}

@@ -1,0 +1,235 @@
+//! Typed run configuration assembled from CLI + TOML (paper Tables 1/2/6).
+
+use super::toml::TomlDoc;
+use crate::topology::Topology;
+
+/// Training hyper-parameters (per-phase values live in `phases.rs`).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Model preset name (must exist in the AOT manifest).
+    pub preset: String,
+    /// Artifact variant: "fused_bf16" (optimized) .. "unfused_f32".
+    pub variant: String,
+    /// Optimizer: "lamb" | "adam".
+    pub optimizer: String,
+    /// Base learning rate (paper Table 6: 1e-4).
+    pub lr: f64,
+    /// Linear warmup steps before constant/decay.
+    pub warmup_steps: usize,
+    /// Gradient accumulation steps k (paper §4.4: 4 for the headline run).
+    pub accum_steps: usize,
+    /// Overlap backward with bucketed allreduce (paper Fig. 2).
+    pub overlap: bool,
+    /// Gradient bucket size threshold in elements (DDP-style).
+    pub bucket_elems: usize,
+    /// Total optimizer steps to run.
+    pub steps: usize,
+    /// Initial dynamic loss scale (paper §4.2).
+    pub init_loss_scale: f64,
+    /// RNG seed for data order + masking.
+    pub seed: u64,
+    /// Steps between metric log lines.
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            preset: "bert-tiny".into(),
+            variant: "fused_f32".into(),
+            optimizer: "lamb".into(),
+            lr: 1e-4,
+            warmup_steps: 10,
+            accum_steps: 4,
+            overlap: true,
+            bucket_elems: 1 << 20,
+            steps: 100,
+            init_loss_scale: 65536.0,
+            seed: 42,
+            log_every: 10,
+        }
+    }
+}
+
+/// Cluster description (paper Table 1).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Topology in the paper's "<X>M<Y>G" encoding.
+    pub topo: Topology,
+    /// Inter-node network bandwidth, bits per second (paper: 10 Gb/s).
+    pub network_bps: f64,
+    /// Intra-node PCIe bandwidth, bits per second (paper: 64 Gb/s).
+    pub pcie_bps: f64,
+    /// Per-message network latency, seconds.
+    pub net_latency_s: f64,
+    /// Per-message PCIe latency, seconds.
+    pub pcie_latency_s: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            topo: Topology::parse("1M2G").unwrap(),
+            network_bps: 10e9,
+            pcie_bps: 64e9,
+            net_latency_s: 50e-6,
+            pcie_latency_s: 5e-6,
+        }
+    }
+}
+
+/// Data pipeline configuration (paper §3.1, §4.1).
+#[derive(Debug, Clone)]
+pub struct DataConfig {
+    /// Directory of bshard files.
+    pub shard_dir: String,
+    /// Per-GPU micro-batch size.
+    pub micro_batch: usize,
+    /// Sequence length (128 phase 1 / 512 phase 2).
+    pub seq_len: usize,
+    /// MLM mask probability (paper: 0.15).
+    pub mask_prob: f64,
+    /// Max predictions per sequence (paper Table 6: 20 @128, 80 @512).
+    pub max_predictions: usize,
+    /// Vocabulary size (must match the model preset).
+    pub vocab_size: usize,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        Self {
+            shard_dir: "data/shards".into(),
+            micro_batch: 8,
+            seq_len: 128,
+            mask_prob: 0.15,
+            max_predictions: 20,
+            vocab_size: 8192,
+        }
+    }
+}
+
+/// Top-level run config.
+#[derive(Debug, Clone, Default)]
+pub struct RunConfig {
+    pub train: TrainConfig,
+    pub cluster: ClusterConfig,
+    pub data: DataConfig,
+    /// Artifacts directory holding manifest.json.
+    pub artifacts_dir: String,
+}
+
+impl RunConfig {
+    /// Merge a TOML document over the defaults.
+    pub fn from_toml(doc: &TomlDoc) -> anyhow::Result<RunConfig> {
+        let mut c = RunConfig::default();
+        c.artifacts_dir = doc.str("artifacts_dir", "artifacts");
+
+        c.train.preset = doc.str("train.preset", &c.train.preset);
+        c.train.variant = doc.str("train.variant", &c.train.variant);
+        c.train.optimizer = doc.str("train.optimizer", &c.train.optimizer);
+        c.train.lr = doc.float("train.lr", c.train.lr);
+        c.train.warmup_steps =
+            doc.int("train.warmup_steps", c.train.warmup_steps as i64) as usize;
+        c.train.accum_steps =
+            doc.int("train.accum_steps", c.train.accum_steps as i64) as usize;
+        c.train.overlap = doc.bool("train.overlap", c.train.overlap);
+        c.train.bucket_elems =
+            doc.int("train.bucket_elems", c.train.bucket_elems as i64) as usize;
+        c.train.steps = doc.int("train.steps", c.train.steps as i64) as usize;
+        c.train.init_loss_scale =
+            doc.float("train.init_loss_scale", c.train.init_loss_scale);
+        c.train.seed = doc.int("train.seed", c.train.seed as i64) as u64;
+        c.train.log_every =
+            doc.int("train.log_every", c.train.log_every as i64) as usize;
+
+        let topo = doc.str("cluster.topo", "1M2G");
+        c.cluster.topo = Topology::parse(&topo)
+            .map_err(|e| anyhow::anyhow!("cluster.topo: {e}"))?;
+        c.cluster.network_bps =
+            doc.float("cluster.network_gbps", c.cluster.network_bps / 1e9) * 1e9;
+        c.cluster.pcie_bps =
+            doc.float("cluster.pcie_gbps", c.cluster.pcie_bps / 1e9) * 1e9;
+        c.cluster.net_latency_s =
+            doc.float("cluster.net_latency_us",
+                      c.cluster.net_latency_s * 1e6) / 1e6;
+        c.cluster.pcie_latency_s =
+            doc.float("cluster.pcie_latency_us",
+                      c.cluster.pcie_latency_s * 1e6) / 1e6;
+
+        c.data.shard_dir = doc.str("data.shard_dir", &c.data.shard_dir);
+        c.data.micro_batch =
+            doc.int("data.micro_batch", c.data.micro_batch as i64) as usize;
+        c.data.seq_len = doc.int("data.seq_len", c.data.seq_len as i64) as usize;
+        c.data.mask_prob = doc.float("data.mask_prob", c.data.mask_prob);
+        c.data.max_predictions =
+            doc.int("data.max_predictions",
+                    c.data.max_predictions as i64) as usize;
+        c.data.vocab_size =
+            doc.int("data.vocab_size", c.data.vocab_size as i64) as usize;
+        Ok(c)
+    }
+
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.train.accum_steps >= 1, "accum_steps must be >= 1");
+        anyhow::ensure!(self.train.steps >= 1, "steps must be >= 1");
+        anyhow::ensure!(self.data.micro_batch >= 1, "micro_batch must be >= 1");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.data.mask_prob),
+            "mask_prob must be in [0,1]"
+        );
+        anyhow::ensure!(self.train.init_loss_scale >= 1.0,
+                        "init_loss_scale must be >= 1");
+        anyhow::ensure!(
+            matches!(self.train.optimizer.as_str(), "lamb" | "adam"),
+            "optimizer must be lamb or adam"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides_defaults() {
+        let doc = TomlDoc::parse(
+            "[train]\nsteps = 7\nlr = 0.5\noverlap = false\n\
+             [cluster]\ntopo = \"2M4G\"\nnetwork_gbps = 25.0\n\
+             [data]\nseq_len = 512\n",
+        ).unwrap();
+        let c = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.train.steps, 7);
+        assert_eq!(c.train.lr, 0.5);
+        assert!(!c.train.overlap);
+        assert_eq!(c.cluster.topo.machines, 2);
+        assert_eq!(c.cluster.topo.gpus_per_machine, 4);
+        assert_eq!(c.cluster.network_bps, 25e9);
+        assert_eq!(c.data.seq_len, 512);
+    }
+
+    #[test]
+    fn bad_topology_is_error() {
+        let doc = TomlDoc::parse("[cluster]\ntopo = \"banana\"\n").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = RunConfig::default();
+        c.train.accum_steps = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.data.mask_prob = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.train.optimizer = "sgd9000".into();
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,46 @@
+//! `bertdist cost` — Tables 7 & 8: cloud vs acquisition cost estimation.
+
+use crate::cliopt::Args;
+use crate::costmodel;
+use crate::util::fmt::render_table;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let days = args.get_parse("days", 12.0f64)?;
+    args.finish_strict()?;
+
+    println!("Table 7 — Google Cloud price estimation:\n");
+    let cloud = costmodel::cloud_cost(256, days);
+    println!("{}", render_table(
+        &["Devices", "Count", "Price/hour", "Training time", "Total"],
+        &[vec![
+            "NVIDIA T4".into(), "256".into(),
+            format!("${:.2}", costmodel::CLOUD_T4_PER_HOUR_USD),
+            format!("{days} days"), format!("${cloud:.1}"),
+        ]],
+    ));
+
+    println!("Table 8 — acquisition cost comparison:\n");
+    let mut rows = vec![{
+        let c = costmodel::paper_cluster();
+        vec![c.name.clone(), format!("{}", c.units),
+             format!("${:.0}", c.unit_cost_usd),
+             format!("${:.0}", c.total())]
+    }];
+    for c in costmodel::dgx_clusters() {
+        rows.push(vec![c.name.clone(), format!("{}", c.units),
+                       format!("${:.0}", c.unit_cost_usd),
+                       format!("${:.0}", c.total())]);
+    }
+    println!("{}", render_table(&["Cluster", "Units", "Unit price", "Total"],
+                                &rows));
+
+    let b = costmodel::break_even(days);
+    println!("break-even (§6): a {:.0}-year replacement cycle fits {:.0} \
+              {days}-day experiments;", costmodel::REPLACEMENT_YEARS,
+             b.experiments_per_cycle);
+    println!("  amortized ownership ${:.0}/experiment vs cloud \
+              ${:.0}/experiment (own/cloud = {:.2})",
+             b.own_cost_per_experiment, b.cloud_cost_per_experiment,
+             b.own_over_cloud);
+    Ok(())
+}

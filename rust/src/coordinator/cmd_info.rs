@@ -1,0 +1,37 @@
+//! `bertdist info` — inspect the AOT manifest and artifacts.
+
+use std::path::PathBuf;
+
+use crate::cliopt::Args;
+use crate::runtime::Manifest;
+use crate::util::{human_bytes, human_count};
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let dir: PathBuf = args.get("artifacts", "artifacts").into();
+    args.finish_strict()?;
+
+    let m = Manifest::load(&dir)?;
+    println!("artifacts dir: {}", dir.display());
+    for (name, model) in &m.models {
+        println!("\nmodel {name}:");
+        println!("  params: {} ({})", human_count(model.param_count as f64),
+                 human_bytes(model.param_count as f64 * 4.0));
+        println!(
+            "  config: hidden={} layers={} heads={} inter={} vocab={} seq<={}",
+            model.config.hidden, model.config.layers, model.config.heads,
+            model.config.intermediate, model.config.vocab_size,
+            model.config.max_seq
+        );
+        println!("  tensors: {}", model.layout.entries().len());
+        println!("  artifacts:");
+        for (key, art) in &model.artifacts {
+            let path = m.artifact_path(art);
+            let size = std::fs::metadata(&path)
+                .map(|md| human_bytes(md.len() as f64))
+                .unwrap_or_else(|_| "MISSING".into());
+            println!("    {key:<28} {size:>10}  ({} inputs)",
+                     art.inputs.len());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! `bertdist profile-grads` — Figure 4: gradient memory by layer group.
+
+use crate::cliopt::Args;
+use crate::model::BertConfig;
+use crate::util::ascii_plot::bar_chart;
+use crate::util::human_bytes;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let preset = args.get("preset", "bert-large");
+    args.finish_strict()?;
+
+    let cfg = BertConfig::preset(&preset)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset {preset}"))?;
+    let layout = cfg.param_layout();
+    let profile = layout.gradient_profile();
+
+    println!(
+        "Figure 4 — gradient memory profile for {preset} \
+         ({} params, {} of f32 gradients):\n",
+        layout.total_len(), human_bytes(layout.total_bytes() as f64)
+    );
+    let rows: Vec<(String, f64)> = profile
+        .sorted_rows()
+        .into_iter()
+        .map(|(name, bytes)| {
+            (format!("{name:<13} {}", human_bytes(bytes)), bytes / 1e6)
+        })
+        .collect();
+    println!("{}", bar_chart("MB of gradients per layer group", &rows, 50));
+    println!(
+        "dense (attention+intermediate+output) fraction: {:.1}%  — the \
+         paper's argument against sparsification (§4.4)",
+        profile.dense_fraction() * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! `bertdist scaling` — weak-scaling sweeps (Figures 3 and 6).
+
+use crate::cliopt::Args;
+use crate::simulator::scaling::{figure6_topologies, sweep_intra_vs_inter,
+                                weak_scaling};
+use crate::simulator::IterationModel;
+use crate::topology::Topology;
+use crate::util::ascii_plot::{plot_series, Series};
+use crate::util::fmt::render_table;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let mode = args.get("mode", "multinode");
+    let accum = args.get_parse("accum", 4usize)?;
+    args.finish_strict()?;
+
+    match mode.as_str() {
+        "intra-inter" => intra_inter(),
+        "multinode" => multinode(accum),
+        other => anyhow::bail!("mode must be intra-inter|multinode, got {other}"),
+    }
+    Ok(())
+}
+
+fn intra_inter() {
+    // Figure 3: no accumulation; overlap on.
+    let template = IterationModel::paper(Topology::new(1, 1), 1, true);
+    let (intra, inter) = sweep_intra_vs_inter(&template);
+    let mut rows = Vec::new();
+    for (a, b) in intra.iter().zip(&inter) {
+        rows.push(vec![
+            format!("{}", a.gpus),
+            format!("{}", a.topo),
+            format!("{:.2}x ({:.0}%)", a.scaling_factor,
+                    a.efficiency * 100.0),
+            format!("{}", b.topo),
+            format!("{:.2}x ({:.0}%)", b.scaling_factor,
+                    b.efficiency * 100.0),
+        ]);
+    }
+    println!("Figure 3 — weak scaling, intra-node vs inter-node (k=1):\n");
+    println!("{}", render_table(
+        &["GPUs", "intra", "factor (eff)", "inter", "factor (eff)"], &rows));
+    let ai: Vec<(f64, f64)> = intra.iter()
+        .map(|p| (p.gpus as f64, p.scaling_factor)).collect();
+    let bi: Vec<(f64, f64)> = inter.iter()
+        .map(|p| (p.gpus as f64, p.scaling_factor)).collect();
+    println!("{}", plot_series(
+        "scaling factor vs GPUs",
+        &[
+            Series { name: "intra-node (PCIe 64Gb/s)", points: &ai,
+                     marker: 'i' },
+            Series { name: "inter-node (net 10Gb/s)", points: &bi,
+                     marker: 'x' },
+        ],
+        60, 14));
+}
+
+fn multinode(accum: usize) {
+    // Figure 6: k=4 by default, overlap on, xM8G.
+    let template = IterationModel::paper(Topology::new(1, 1), accum, true);
+    let pts = weak_scaling(&template, &figure6_topologies());
+    let mut rows = Vec::new();
+    for p in &pts {
+        rows.push(vec![
+            format!("{}", p.topo),
+            format!("{}", p.gpus),
+            format!("{:.0}", p.cluster_tokens_per_sec),
+            format!("{:.1}x", p.scaling_factor),
+            format!("{:.1}%", p.efficiency * 100.0),
+            format!("{:.1}%", p.compute_utilization * 100.0),
+        ]);
+    }
+    println!("Figure 6 — multi-node weak scaling (k={accum}, overlap on):\n");
+    println!("{}", render_table(
+        &["topo", "GPUs", "tokens/s", "factor", "efficiency", "util"],
+        &rows));
+    let xy: Vec<(f64, f64)> = pts.iter()
+        .map(|p| (p.gpus as f64, p.scaling_factor)).collect();
+    println!("{}", plot_series("scaling factor vs GPUs (paper: 165x @ 256)",
+                               &[Series { name: "xM8G", points: &xy,
+                                          marker: '*' }], 60, 14));
+    if let Some(last) = pts.last() {
+        println!("headline: {:.0}x at {} GPUs (paper reports 165x; \
+                  abstract rounds efficiency to 70%)",
+                 last.scaling_factor, last.gpus);
+    }
+}

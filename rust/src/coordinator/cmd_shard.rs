@@ -1,0 +1,60 @@
+//! `bertdist shard-data` — the §4.1 pre-sharding step: corpus →
+//! tokenize → NSP pairs → N bshard files + vocab.txt.
+
+use std::path::PathBuf;
+
+use crate::cliopt::Args;
+use crate::data::corpus::{self, SyntheticCorpus};
+use crate::data::{build_shards, Vocab};
+use crate::util::{human_count, Stopwatch};
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let out: PathBuf = args.get("out", "data/quickstart").into();
+    let n_docs = args.get_parse("docs", 64usize)?;
+    let sentences = args.get_parse("sentences", 12usize)?;
+    let words = args.get_parse("words", 12usize)?;
+    let shards = args.get_parse("shards", 8usize)?;
+    let vocab_size = args.get_parse("vocab-size", 8192usize)?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let text = args.get_opt("text");
+    args.finish_strict()?;
+
+    let mut sw = Stopwatch::new();
+    let docs = match text {
+        Some(path) => {
+            println!("loading corpus from {path} ...");
+            corpus::load_text_file(std::path::Path::new(&path))?
+        }
+        None => {
+            println!(
+                "generating synthetic corpus: {n_docs} docs x {sentences} \
+                 sentences x ~{words} words (seed {seed})"
+            );
+            SyntheticCorpus::new(seed, 20_000)
+                .documents(n_docs, sentences, words)
+        }
+    };
+    let n_words = corpus::word_count(&docs);
+    sw.lap("corpus");
+
+    let vocab = Vocab::from_documents(&docs, vocab_size);
+    sw.lap("vocab");
+
+    std::fs::create_dir_all(&out)?;
+    vocab.save(&out.join("vocab.txt"))?;
+    let stats = build_shards(&docs, &vocab, shards, &out, "train", seed)?;
+    sw.lap("shard");
+
+    println!(
+        "corpus: {} documents, {} words -> {} examples ({} tokens)",
+        stats.documents, human_count(n_words as f64), stats.examples,
+        human_count(stats.tokens as f64)
+    );
+    println!("vocab: {} entries -> {}", vocab.len(),
+             out.join("vocab.txt").display());
+    println!("shards: {} files under {}", stats.shards, out.display());
+    for (name, dt) in sw.laps() {
+        println!("  {name:<8} {dt:.3}s");
+    }
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! `bertdist simulate` — one-iteration timeline on a modeled cluster
+//! (Figures 1, 2 and 5).
+
+use crate::cliopt::Args;
+use crate::simulator::{simulate_iteration, IterationModel};
+use crate::topology::Topology;
+use crate::util::human_duration;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let topo = Topology::parse(&args.get("topo", "2M1G"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let accum = args.get_parse("accum", 1usize)?;
+    let overlap = !args.flag("no-overlap");
+    let buckets = args.get_parse("buckets", 8usize)?;
+    let trace = args.get_opt("trace");
+    let print_topo = args.flag("print-topology");
+    args.finish_strict()?;
+
+    if print_topo {
+        println!("topology {topo} ({} GPUs):", topo.world_size());
+        println!("{}", topo.ascii_diagram());
+    }
+
+    let mut model = IterationModel::paper(topo, accum, overlap);
+    model.buckets = buckets;
+    let r = simulate_iteration(&model);
+
+    println!(
+        "iteration on {topo}: k={accum} overlap={overlap} buckets={buckets}"
+    );
+    println!("  micro compute      : {}",
+             human_duration(model.micro_compute_s()));
+    println!("  allreduce (total)  : {}", human_duration(model.allreduce_s()));
+    println!("  iteration time     : {}", human_duration(r.iteration_s));
+    println!("  exposed comm       : {}", human_duration(r.exposed_comm_s));
+    println!("  compute utilization: {:.1}%", r.compute_utilization * 100.0);
+    println!("  tokens/s per GPU   : {:.1}", r.tokens_per_sec_per_gpu);
+    println!("  cluster tokens/s   : {:.1}", r.cluster_tokens_per_sec);
+    println!();
+    println!("{}", r.timeline.ascii_gantt(100));
+
+    if let Some(path) = trace {
+        std::fs::write(&path, r.timeline.to_chrome_trace())?;
+        println!("chrome trace -> {path} (open in ui.perfetto.dev)");
+    }
+    Ok(())
+}

@@ -1,0 +1,164 @@
+//! `bertdist train` — the end-to-end data-parallel pretraining command.
+//!
+//! Also exposes [`train_run`] / [`prepare_datasets`] so examples and
+//! integration tests can drive the exact same path programmatically.
+
+use std::path::{Path, PathBuf};
+
+use crate::cliopt::Args;
+use crate::config::{RunConfig, TwoPhaseSchedule};
+use crate::data::ShardedDataset;
+use crate::runtime::Engine;
+use crate::topology::Topology;
+use crate::trainer::{TrainReport, Trainer};
+use crate::util::ascii_plot::{plot_series, Series};
+
+/// Outcome of a (possibly two-phase) training run.
+pub struct TrainOutcome {
+    pub phase1: TrainReport,
+    pub phase2: Option<TrainReport>,
+    pub trainer_step: usize,
+}
+
+/// Open one dataset view per rank.
+pub fn prepare_datasets(dir: &Path, world: usize)
+    -> anyhow::Result<Vec<ShardedDataset>> {
+    (0..world)
+        .map(|r| ShardedDataset::open(dir, "train", r, world))
+        .collect()
+}
+
+/// Drive a run: phase 1 (and optionally phase 2) with a shared trainer
+/// state, mirroring the paper's §3.3 schedule.
+pub fn train_run(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
+                 steps1: usize, steps2: usize, batch1: usize, seq1: usize,
+                 ckpt: Option<&Path>) -> anyhow::Result<TrainOutcome> {
+    let world = cfg.cluster.topo.world_size();
+    let datasets = prepare_datasets(data_dir, world)?;
+
+    // ---- phase 1 ----
+    let mut trainer = Trainer::new(engine, cfg.clone(), seq1, batch1)?;
+    if let Some(p) = ckpt {
+        if p.exists() {
+            println!("restoring checkpoint {}", p.display());
+            trainer.restore(crate::checkpoint::Checkpoint::load(p)?)?;
+        }
+    }
+    println!(
+        "phase 1: preset={} variant={} topo={} world={} batch={}x{} accum={}",
+        cfg.train.preset, cfg.train.variant, cfg.cluster.topo, world,
+        batch1, seq1, cfg.train.accum_steps
+    );
+    let report1 = trainer.run(&datasets, steps1, steps1 + steps2)?;
+    println!("phase 1 done: {}", report1.summary());
+    if let Some(p) = ckpt {
+        trainer.save(p)?;
+        println!("checkpoint -> {}", p.display());
+    }
+
+    // ---- phase 2 (seq 512, smaller batch — Table 6 ratios) ----
+    let report2 = if steps2 > 0 {
+        let batch2 = (batch1 / 8).max(1);
+        let seq2 = 512;
+        let mut cfg2 = cfg.clone();
+        cfg2.data.seq_len = seq2;
+        cfg2.data.max_predictions = 80; // Table 6
+        let mut t2 = Trainer::new(engine, cfg2, seq2, batch2)?;
+        t2.restore(trainer.checkpoint())?;
+        println!("phase 2: batch={batch2}x{seq2} (Table 6 ratios)");
+        let r = t2.run(&datasets, steps2, steps1 + steps2)?;
+        println!("phase 2 done: {}", r.summary());
+        if let Some(p) = ckpt {
+            t2.save(p)?;
+        }
+        let step = t2.step;
+        trainer = t2;
+        let _ = step;
+        Some(r)
+    } else {
+        None
+    };
+
+    Ok(TrainOutcome {
+        phase1: report1,
+        phase2: report2,
+        trainer_step: trainer.step,
+    })
+}
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = RunConfig::default();
+    if let Some(path) = args.get_opt("config") {
+        let doc = crate::config::TomlDoc::load(Path::new(&path))?;
+        cfg = RunConfig::from_toml(&doc)?;
+    }
+    cfg.train.preset = args.get("preset", &cfg.train.preset);
+    cfg.train.variant = args.get("variant", &cfg.train.variant);
+    cfg.train.optimizer = args.get("optimizer", &cfg.train.optimizer);
+    cfg.train.lr = args.get_parse("lr", cfg.train.lr)?;
+    cfg.train.accum_steps = args.get_parse("accum", cfg.train.accum_steps)?;
+    cfg.train.steps = args.get_parse("steps", cfg.train.steps)?;
+    cfg.train.seed = args.get_parse("seed", cfg.train.seed)?;
+    cfg.train.log_every = args.get_parse("log-every", cfg.train.log_every)?;
+    cfg.train.warmup_steps =
+        args.get_parse("warmup", cfg.train.warmup_steps)?;
+    if let Some(t) = args.get_opt("topo") {
+        cfg.cluster.topo = Topology::parse(&t)
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
+    let artifacts: PathBuf = args.get("artifacts", "artifacts").into();
+    let data_dir: PathBuf = args.get("data-dir", "data/quickstart").into();
+    let phase2_steps = args.get_parse(
+        "phase2-steps",
+        if args.flag("phase2") { cfg.train.steps / 5 } else { 0 },
+    )?;
+    let batch = args.get_parse("batch", 8usize)?;
+    let seq = args.get_parse("seq", 128usize)?;
+    let ckpt = args.get_opt("ckpt").map(PathBuf::from);
+    args.finish_strict()?;
+    cfg.validate()?;
+
+    if !data_dir.join("vocab.txt").exists() {
+        anyhow::bail!(
+            "no data at {} — run `bertdist shard-data --out {}` first",
+            data_dir.display(), data_dir.display()
+        );
+    }
+
+    let engine = Engine::cpu(&artifacts)?;
+    println!("engine: platform={}", engine.platform());
+    // Guard: the data vocabulary must fit the model's embedding table,
+    // or the gather produces garbage (NaN losses).
+    let model = engine.model(&cfg.train.preset)?;
+    let vocab = crate::data::Vocab::load(&data_dir.join("vocab.txt"))?;
+    anyhow::ensure!(
+        vocab.len() <= model.config.vocab_size,
+        "data vocab has {} entries but {} supports only {} — re-run \
+         `bertdist shard-data --vocab-size {}`",
+        vocab.len(), cfg.train.preset, model.config.vocab_size,
+        model.config.vocab_size
+    );
+    let outcome = train_run(&engine, &cfg, &data_dir, cfg.train.steps,
+                            phase2_steps, batch, seq, ckpt.as_deref())?;
+
+    // Figure-7 style loss plot
+    let p1 = outcome.phase1.loss.xy();
+    let mut series = vec![Series { name: "phase1 loss", points: &p1,
+                                   marker: '1' }];
+    let p2xy = outcome.phase2.as_ref().map(|r| r.loss.xy());
+    if let Some(ref p2) = p2xy {
+        series.push(Series { name: "phase2 loss", points: p2, marker: '2' });
+    }
+    println!("{}", plot_series("pretraining loss (cf. paper Fig. 7)",
+                               &series, 70, 16));
+    if phase2_steps > 0 {
+        let sched = TwoPhaseSchedule::paper();
+        println!(
+            "paper schedule reference: {} epochs phase1 + {} phase2 = {:.1} \
+             days on 32M8G",
+            sched.phase1.epochs, sched.phase2.epochs,
+            sched.paper_total_days()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! The leader/coordinator: CLI subcommands wiring every module together.
+//!
+//! This is the deployment surface of the framework — the equivalent of
+//! Megatron's `pretrain_bert.py` launcher, except everything downstream
+//! of `make artifacts` is pure Rust.
+
+mod cmd_amp;
+mod cmd_cost;
+mod cmd_info;
+mod cmd_profile;
+mod cmd_scaling;
+mod cmd_shard;
+mod cmd_simulate;
+mod cmd_train;
+
+pub use cmd_train::{prepare_datasets, train_run, TrainOutcome};
+
+use crate::cliopt::Args;
+
+const USAGE: &str = "\
+bertdist — cost-efficient multi-node BERT pretraining (paper reproduction)
+
+USAGE: bertdist <command> [options]
+
+COMMANDS:
+  train          data-parallel pretraining on the PJRT-CPU substrate
+                   --preset bert-tiny --topo 1M2G --steps 50 --accum 4
+                   --variant fused_f32 --optimizer lamb --lr 1e-4
+                   --data-dir data/quickstart [--phase2] [--ckpt path]
+  shard-data     build bshard files from a synthetic or real corpus (§4.1)
+                   --out data/quickstart --docs 64 --shards 8 [--text file]
+  simulate       one-iteration timeline, overlap on/off (Figs. 2 & 5)
+                   --topo 2M1G --accum 1 [--no-overlap] [--trace out.json]
+  scaling        weak-scaling sweeps (Figs. 3 & 6)
+                   --mode intra-inter | multinode  [--accum 4]
+  profile-grads  gradient memory profile by layer group (Fig. 4)
+                   --preset bert-large
+  cost           acquisition vs cloud cost tables (Tables 7 & 8)
+                   [--days 12]
+  amp-demo       mixed-precision walkthrough: op safety classes, loss
+                 scaling dynamics on real f16 semantics (§4.2)
+  info           inspect artifacts/manifest.json
+                   [--artifacts artifacts]
+";
+
+/// CLI entrypoint; returns the process exit code.
+pub fn cli_main() -> i32 {
+    let args = match Args::parse() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let cmd = match args.command.as_deref() {
+        Some(c) => c.to_string(),
+        None => {
+            print!("{USAGE}");
+            return 0;
+        }
+    };
+    let result = match cmd.as_str() {
+        "train" => cmd_train::run(&args),
+        "shard-data" => cmd_shard::run(&args),
+        "simulate" => cmd_simulate::run(&args),
+        "scaling" => cmd_scaling::run(&args),
+        "profile-grads" => cmd_profile::run(&args),
+        "cost" => cmd_cost::run(&args),
+        "amp-demo" => cmd_amp::run(&args),
+        "info" => cmd_info::run(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n\n{USAGE}");
+            return 2;
+        }
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}

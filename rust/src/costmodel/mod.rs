@@ -1,0 +1,128 @@
+//! Cost model (paper §1, §6, Tables 7–8): acquisition cost of the
+//! commodity cluster vs DGX clusters vs cloud rental.
+
+/// Paper Table 1: per-node and total acquisition costs.
+pub const NODE_COST_USD: f64 = 19_500.0;
+pub const NODES: usize = 32;
+pub const GPUS_PER_NODE: usize = 8;
+
+/// Paper Table 8: DGX unit prices.
+pub const DGX1_COST_USD: f64 = 149_000.0;
+pub const DGX2_COST_USD: f64 = 399_000.0;
+
+/// Paper Table 7: T4 cloud price per GPU-hour.
+pub const CLOUD_T4_PER_HOUR_USD: f64 = 0.35;
+
+/// Hardware replacement cycle the paper assumes (§6): 3 years.
+pub const REPLACEMENT_YEARS: f64 = 3.0;
+
+/// An acquisition option.
+#[derive(Debug, Clone)]
+pub struct ClusterCost {
+    pub name: String,
+    pub units: usize,
+    pub unit_cost_usd: f64,
+}
+
+impl ClusterCost {
+    pub fn total(&self) -> f64 {
+        self.units as f64 * self.unit_cost_usd
+    }
+}
+
+/// The paper's own cluster (Table 1): 32 nodes x $19.5K = $624K.
+pub fn paper_cluster() -> ClusterCost {
+    ClusterCost {
+        name: "32-node T4 cluster (this paper)".into(),
+        units: NODES,
+        unit_cost_usd: NODE_COST_USD,
+    }
+}
+
+/// Table 8 rows.
+pub fn dgx_clusters() -> Vec<ClusterCost> {
+    vec![
+        ClusterCost { name: "NVIDIA DGX1 x32".into(), units: 32,
+                      unit_cost_usd: DGX1_COST_USD },
+        ClusterCost { name: "NVIDIA DGX2 x32".into(), units: 32,
+                      unit_cost_usd: DGX2_COST_USD },
+    ]
+}
+
+/// Table 7: cloud rental cost for `gpus` T4s over `days`.
+pub fn cloud_cost(gpus: usize, days: f64) -> f64 {
+    gpus as f64 * days * 24.0 * CLOUD_T4_PER_HOUR_USD
+}
+
+/// §6 break-even analysis: how many `days`-long experiments fit in the
+/// replacement cycle, and the rent-vs-own multiple.
+#[derive(Debug, Clone)]
+pub struct BreakEven {
+    pub experiments_per_cycle: f64,
+    pub own_cost_per_experiment: f64,
+    pub cloud_cost_per_experiment: f64,
+    /// own / cloud per-experiment price ratio (>1 means renting one
+    /// experiment is cheaper than the amortized ownership).
+    pub own_over_cloud: f64,
+}
+
+pub fn break_even(days_per_experiment: f64) -> BreakEven {
+    let cluster = paper_cluster();
+    let experiments =
+        REPLACEMENT_YEARS * 365.0 / days_per_experiment;
+    let own_per = cluster.total() / experiments;
+    let cloud_per = cloud_cost(NODES * GPUS_PER_NODE, days_per_experiment);
+    BreakEven {
+        experiments_per_cycle: experiments,
+        own_cost_per_experiment: own_per,
+        cloud_cost_per_experiment: cloud_per,
+        own_over_cloud: own_per / cloud_per,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_total_624k() {
+        assert_eq!(paper_cluster().total(), 624_000.0);
+    }
+
+    #[test]
+    fn table8_dgx_totals() {
+        let d = dgx_clusters();
+        assert_eq!(d[0].total(), 4_768_000.0); // paper: $4.768M
+        assert_eq!(d[1].total(), 12_768_000.0); // paper: $12.768M
+    }
+
+    #[test]
+    fn table7_cloud_estimate() {
+        // paper: 256 T4 x 12 days x $0.35/h = $25,804.80
+        let c = cloud_cost(256, 12.0);
+        assert!((c - 25_804.8).abs() < 0.01, "{c}");
+    }
+
+    #[test]
+    fn paper_cost_ratios() {
+        // §1/§6: DGX setup costs ~7.6-20x the commodity cluster.
+        let own = paper_cluster().total();
+        let d = dgx_clusters();
+        assert!(d[0].total() / own > 7.0);
+        assert!(d[1].total() / own > 20.0);
+        // §6: cloud for one 12-day run is ~24x cheaper than buying
+        let ratio = own / cloud_cost(256, 12.0);
+        assert!((ratio - 24.0).abs() < 1.0, "{ratio}");
+    }
+
+    #[test]
+    fn break_even_matches_section6() {
+        // §6: 3-year cycle fits ~90 twelve-day experiments.
+        let b = break_even(12.0);
+        assert!((b.experiments_per_cycle - 91.25).abs() < 1.0);
+        // amortized ownership beats cloud well before the cycle ends
+        assert!(b.own_cost_per_experiment < b.cloud_cost_per_experiment,
+                "own {} cloud {}", b.own_cost_per_experiment,
+                b.cloud_cost_per_experiment);
+    }
+}

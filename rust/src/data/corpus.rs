@@ -1,0 +1,190 @@
+//! Corpus sources (paper §3.1.1 substitute).
+//!
+//! The paper trains on Wikipedia (2.5 B words) + BookCorpus (0.8 B).
+//! Neither is shippable here, so the default source is a **synthetic
+//! Zipf corpus**: documents of sentences whose words are drawn from a
+//! Zipf(1.1) distribution over a deterministic lexicon — matching the
+//! statistical shape natural text presents to the tokenizer/masking
+//! pipeline (a heavy-tailed unigram distribution).  A real-text loader
+//! is provided for users with their own corpus files (one document per
+//! blank-line-separated block, as in the BERT prep scripts).
+
+use crate::util::Pcg64;
+
+/// A corpus: documents -> sentences -> plain-text words.
+pub type Document = Vec<String>;
+
+/// Deterministic synthetic corpus generator.
+pub struct SyntheticCorpus {
+    lexicon: Vec<String>,
+    zipf_s: f64,
+    rng: Pcg64,
+}
+
+impl SyntheticCorpus {
+    /// `lexicon_size` distinct word types; Zipf exponent ~1.1 mimics
+    /// natural-language unigram statistics.
+    pub fn new(seed: u64, lexicon_size: usize) -> Self {
+        Self {
+            lexicon: build_lexicon(lexicon_size),
+            zipf_s: 1.1,
+            rng: Pcg64::with_stream(seed, 0x5EED),
+        }
+    }
+
+    /// Generate `n_docs` documents with `sentences_per_doc` sentences of
+    /// `words_per_sentence ± spread` words.
+    pub fn documents(&mut self, n_docs: usize, sentences_per_doc: usize,
+                     words_per_sentence: usize) -> Vec<Document> {
+        (0..n_docs)
+            .map(|_| {
+                (0..sentences_per_doc)
+                    .map(|_| self.sentence(words_per_sentence))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// One sentence of roughly `target_words` words.
+    pub fn sentence(&mut self, target_words: usize) -> String {
+        let jitter = (target_words / 3).max(1);
+        let n = target_words.saturating_sub(jitter / 2)
+            + self.rng.range_usize(0, jitter);
+        let n = n.max(2);
+        let words: Vec<&str> = (0..n)
+            .map(|_| {
+                let r = self.rng.next_zipf(self.lexicon.len(), self.zipf_s);
+                self.lexicon[r].as_str()
+            })
+            .collect();
+        words.join(" ")
+    }
+}
+
+/// Deterministic pronounceable lexicon: CV-syllable words, rank-ordered
+/// so low ranks are short (frequent words are short in natural language).
+fn build_lexicon(size: usize) -> Vec<String> {
+    const CONS: &[u8] = b"bcdfghjklmnprstvwz";
+    const VOWS: &[u8] = b"aeiou";
+    let mut out = Vec::with_capacity(size);
+    let mut i = 0usize;
+    'outer: for syllables in 1..=5usize {
+        // enumerate all CV^k combinations for this syllable count
+        let combos = (CONS.len() * VOWS.len()).pow(syllables as u32);
+        for c in 0..combos {
+            if out.len() >= size {
+                break 'outer;
+            }
+            let mut word = String::with_capacity(syllables * 2);
+            let mut rem = c;
+            for _ in 0..syllables {
+                let cv = rem % (CONS.len() * VOWS.len());
+                rem /= CONS.len() * VOWS.len();
+                word.push(CONS[cv / VOWS.len()] as char);
+                word.push(VOWS[cv % VOWS.len()] as char);
+            }
+            out.push(word);
+            i += 1;
+        }
+    }
+    debug_assert!(i >= out.len());
+    out
+}
+
+/// Load documents from a plain-text file: sentences are lines, documents
+/// are blank-line-separated blocks (the standard BERT pretraining input
+/// format).
+pub fn load_text_file(path: &std::path::Path) -> std::io::Result<Vec<Document>> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(parse_documents(&text))
+}
+
+/// Parse the blank-line-separated document format.
+pub fn parse_documents(text: &str) -> Vec<Document> {
+    let mut docs = Vec::new();
+    let mut cur: Document = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            if !cur.is_empty() {
+                docs.push(std::mem::take(&mut cur));
+            }
+        } else {
+            cur.push(line.to_string());
+        }
+    }
+    if !cur.is_empty() {
+        docs.push(cur);
+    }
+    docs
+}
+
+/// Count words in a corpus (for tokens/epoch accounting à la Table 3).
+pub fn word_count(docs: &[Document]) -> usize {
+    docs.iter()
+        .flat_map(|d| d.iter())
+        .map(|s| s.split_whitespace().count())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexicon_is_deterministic_and_distinct() {
+        let a = build_lexicon(500);
+        let b = build_lexicon(500);
+        assert_eq!(a, b);
+        let mut c = a.clone();
+        c.sort();
+        c.dedup();
+        assert_eq!(c.len(), 500);
+        // short words first
+        assert!(a[0].len() <= a[499].len());
+    }
+
+    #[test]
+    fn corpus_is_seed_deterministic() {
+        let d1 = SyntheticCorpus::new(7, 1000).documents(3, 4, 10);
+        let d2 = SyntheticCorpus::new(7, 1000).documents(3, 4, 10);
+        let d3 = SyntheticCorpus::new(8, 1000).documents(3, 4, 10);
+        assert_eq!(d1, d2);
+        assert_ne!(d1, d3);
+    }
+
+    #[test]
+    fn corpus_shape() {
+        let docs = SyntheticCorpus::new(1, 200).documents(5, 3, 8);
+        assert_eq!(docs.len(), 5);
+        assert!(docs.iter().all(|d| d.len() == 3));
+        for s in docs.iter().flatten() {
+            let n = s.split_whitespace().count();
+            assert!(n >= 2, "sentence too short: '{s}'");
+        }
+    }
+
+    #[test]
+    fn zipf_words_repeat() {
+        // A heavy-tailed distribution must reuse the head of the lexicon.
+        let docs = SyntheticCorpus::new(2, 5000).documents(10, 10, 12);
+        let mut counts = std::collections::HashMap::new();
+        for s in docs.iter().flatten() {
+            for w in s.split_whitespace() {
+                *counts.entry(w.to_string()).or_insert(0usize) += 1;
+            }
+        }
+        let max = counts.values().max().copied().unwrap_or(0);
+        assert!(max > 10, "head word should repeat often (max={max})");
+    }
+
+    #[test]
+    fn document_parsing() {
+        let text = "s one\ns two\n\n\ndoc2 s1\n";
+        let docs = parse_documents(text);
+        assert_eq!(docs.len(), 2);
+        assert_eq!(docs[0], vec!["s one", "s two"]);
+        assert_eq!(docs[1], vec!["doc2 s1"]);
+        assert_eq!(word_count(&docs), 6);
+    }
+}

@@ -1,0 +1,202 @@
+//! Sentence-pair pretraining examples and their `bshard` wire format
+//! (paper §3.1.1: NSP pairs with 50% shuffled continuations).
+//!
+//! Wire format (little-endian):
+//! ```text
+//! [ is_next u8 | len_a u16 | len_b u16 | tokens_a: len_a x u32varish ]
+//! ```
+//! Token ids are stored as u16 when the vocab fits (<= 65535, true for
+//! every preset incl. bert-large's 30522), guarded by a format flag byte.
+
+use super::special;
+
+/// One NSP example: two token sequences and the is-next label.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PairExample {
+    pub tokens_a: Vec<u32>,
+    pub tokens_b: Vec<u32>,
+    /// true = b actually follows a (label 0 in the NSP head convention
+    /// used by the model: 0 = IsNext, 1 = NotNext).
+    pub is_next: bool,
+}
+
+const FMT_U16: u8 = 1;
+const FMT_U32: u8 = 2;
+
+impl PairExample {
+    /// Serialize for `bshard`.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let wide = self
+            .tokens_a
+            .iter()
+            .chain(self.tokens_b.iter())
+            .any(|&t| t > u16::MAX as u32);
+        let mut out = Vec::with_capacity(
+            8 + (self.tokens_a.len() + self.tokens_b.len())
+                * if wide { 4 } else { 2 },
+        );
+        out.push(if wide { FMT_U32 } else { FMT_U16 });
+        out.push(u8::from(self.is_next));
+        out.extend((self.tokens_a.len() as u16).to_le_bytes());
+        out.extend((self.tokens_b.len() as u16).to_le_bytes());
+        for &t in self.tokens_a.iter().chain(self.tokens_b.iter()) {
+            if wide {
+                out.extend(t.to_le_bytes());
+            } else {
+                out.extend((t as u16).to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Deserialize from `bshard` bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<PairExample, String> {
+        if bytes.len() < 6 {
+            return Err("example record too short".into());
+        }
+        let fmt = bytes[0];
+        let is_next = bytes[1] != 0;
+        let len_a = u16::from_le_bytes([bytes[2], bytes[3]]) as usize;
+        let len_b = u16::from_le_bytes([bytes[4], bytes[5]]) as usize;
+        let width = match fmt {
+            FMT_U16 => 2,
+            FMT_U32 => 4,
+            other => return Err(format!("bad example format {other}")),
+        };
+        let need = 6 + (len_a + len_b) * width;
+        if bytes.len() != need {
+            return Err(format!("example length {} != expected {need}",
+                               bytes.len()));
+        }
+        let mut toks = Vec::with_capacity(len_a + len_b);
+        let mut off = 6;
+        for _ in 0..len_a + len_b {
+            let t = match fmt {
+                FMT_U16 => u16::from_le_bytes([bytes[off], bytes[off + 1]])
+                    as u32,
+                _ => u32::from_le_bytes([
+                    bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3],
+                ]),
+            };
+            toks.push(t);
+            off += width;
+        }
+        let tokens_b = toks.split_off(len_a);
+        Ok(PairExample { tokens_a: toks, tokens_b, is_next })
+    }
+
+    /// Total wordpiece tokens when assembled: [CLS] a [SEP] b [SEP].
+    pub fn assembled_len(&self) -> usize {
+        self.tokens_a.len() + self.tokens_b.len() + 3
+    }
+
+    /// Truncate the pair to fit `max_len` assembled tokens, trimming the
+    /// longer side first (the BERT `truncate_seq_pair` heuristic).
+    pub fn truncate(&mut self, max_len: usize) {
+        let budget = max_len.saturating_sub(3);
+        while self.tokens_a.len() + self.tokens_b.len() > budget {
+            if self.tokens_a.len() >= self.tokens_b.len() {
+                self.tokens_a.pop();
+            } else {
+                self.tokens_b.pop();
+            }
+        }
+    }
+
+    /// NSP label in the model's convention: 0 = IsNext, 1 = NotNext.
+    pub fn nsp_label(&self) -> i32 {
+        if self.is_next {
+            0
+        } else {
+            1
+        }
+    }
+
+    /// True if no token collides with a reserved special id.
+    pub fn ids_are_clean(&self) -> bool {
+        self.tokens_a
+            .iter()
+            .chain(self.tokens_b.iter())
+            .all(|&t| t >= special::FIRST_FREE || t == special::UNK)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn roundtrip_simple() {
+        let e = PairExample {
+            tokens_a: vec![5, 6, 7],
+            tokens_b: vec![8, 9],
+            is_next: true,
+        };
+        let b = e.to_bytes();
+        assert_eq!(PairExample::from_bytes(&b).unwrap(), e);
+    }
+
+    #[test]
+    fn roundtrip_wide_ids() {
+        let e = PairExample {
+            tokens_a: vec![70_000, 5],
+            tokens_b: vec![8],
+            is_next: false,
+        };
+        let b = e.to_bytes();
+        assert_eq!(b[0], super::FMT_U32);
+        assert_eq!(PairExample::from_bytes(&b).unwrap(), e);
+    }
+
+    #[test]
+    fn corrupt_length_rejected() {
+        let e = PairExample {
+            tokens_a: vec![5],
+            tokens_b: vec![6],
+            is_next: true,
+        };
+        let mut b = e.to_bytes();
+        b.pop();
+        assert!(PairExample::from_bytes(&b).is_err());
+        assert!(PairExample::from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn truncation_balances_sides() {
+        let mut e = PairExample {
+            tokens_a: (0..20).map(|i| i + 5).collect(),
+            tokens_b: (0..4).map(|i| i + 5).collect(),
+            is_next: true,
+        };
+        e.truncate(16);
+        assert_eq!(e.assembled_len(), 16);
+        // longer side was trimmed
+        assert_eq!(e.tokens_b.len(), 4);
+        assert_eq!(e.tokens_a.len(), 9);
+    }
+
+    #[test]
+    fn nsp_label_convention() {
+        let a = PairExample { tokens_a: vec![], tokens_b: vec![],
+                              is_next: true };
+        let b = PairExample { tokens_a: vec![], tokens_b: vec![],
+                              is_next: false };
+        assert_eq!(a.nsp_label(), 0);
+        assert_eq!(b.nsp_label(), 1);
+    }
+
+    #[test]
+    fn prop_roundtrip_random() {
+        testkit::check(
+            "example-roundtrip", 0xAB, 64,
+            |r: &mut Pcg64| PairExample {
+                tokens_a: testkit::gen_u32_vec(r, 0, 60, 40_000),
+                tokens_b: testkit::gen_u32_vec(r, 0, 60, 40_000),
+                is_next: r.chance(0.5),
+            },
+            |e| PairExample::from_bytes(&e.to_bytes()).as_ref() == Ok(e),
+        );
+    }
+}

@@ -1,0 +1,293 @@
+//! MLM masking + batch assembly (paper §3.1.1).
+//!
+//! Implements BERT's exact masking recipe: select 15% of non-special
+//! positions (capped at `max_predictions`), of which 80% become `[MASK]`,
+//! 10% a random token, 10% stay unchanged — labels carry the original id,
+//! `IGNORE` (-1) elsewhere.  Batches are the i32 tensors the AOT train
+//! step consumes (see python/compile/model.py `make_train_step`).
+
+use super::example::PairExample;
+use super::special;
+use crate::util::Pcg64;
+
+pub const IGNORE: i32 = -1;
+
+/// Masking hyper-parameters (paper Table 6: 20 preds @128, 80 @512).
+#[derive(Debug, Clone)]
+pub struct MaskingConfig {
+    pub mask_prob: f64,
+    pub max_predictions: usize,
+    /// Vocab size for random-replacement draws.
+    pub vocab_size: u32,
+    /// 80/10/10 split of selected positions.
+    pub mask_frac: f64,
+    pub random_frac: f64,
+}
+
+impl Default for MaskingConfig {
+    fn default() -> Self {
+        Self {
+            mask_prob: 0.15,
+            max_predictions: 20,
+            vocab_size: 8192,
+            mask_frac: 0.8,
+            random_frac: 0.1,
+        }
+    }
+}
+
+/// A training batch in the AOT train-step layout (row-major [B, S]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq: usize,
+    pub input_ids: Vec<i32>,
+    pub token_type_ids: Vec<i32>,
+    pub attention_mask: Vec<i32>,
+    pub mlm_labels: Vec<i32>,
+    pub nsp_labels: Vec<i32>,
+}
+
+impl Batch {
+    pub fn zeros(batch: usize, seq: usize) -> Self {
+        Self {
+            batch,
+            seq,
+            input_ids: vec![special::PAD as i32; batch * seq],
+            token_type_ids: vec![0; batch * seq],
+            attention_mask: vec![0; batch * seq],
+            mlm_labels: vec![IGNORE; batch * seq],
+            nsp_labels: vec![0; batch],
+        }
+    }
+
+    /// Number of prediction targets in the batch.
+    pub fn num_predictions(&self) -> usize {
+        self.mlm_labels.iter().filter(|&&l| l != IGNORE).count()
+    }
+
+    /// Number of real (non-pad) tokens.
+    pub fn num_tokens(&self) -> usize {
+        self.attention_mask.iter().filter(|&&m| m != 0).count()
+    }
+}
+
+/// Assemble one sequence: [CLS] a [SEP] b [SEP], then apply MLM masking.
+/// Writes into row `row` of `out`.  Deterministic given `rng` state.
+pub fn assemble_into(out: &mut Batch, row: usize, ex: &PairExample,
+                     cfg: &MaskingConfig, rng: &mut Pcg64) {
+    let seq = out.seq;
+    let mut ex = ex.clone();
+    ex.truncate(seq);
+
+    let base = row * seq;
+    // layout: CLS a... SEP b... SEP PAD...
+    let mut pos = 0usize;
+    let put = |out: &mut Batch, id: u32, seg: i32, pos: &mut usize| {
+        out.input_ids[base + *pos] = id as i32;
+        out.token_type_ids[base + *pos] = seg;
+        out.attention_mask[base + *pos] = 1;
+        *pos += 1;
+    };
+    put(out, special::CLS, 0, &mut pos);
+    for &t in &ex.tokens_a {
+        put(out, t, 0, &mut pos);
+    }
+    put(out, special::SEP, 0, &mut pos);
+    for &t in &ex.tokens_b {
+        put(out, t, 1, &mut pos);
+    }
+    put(out, special::SEP, 1, &mut pos);
+    let used = pos;
+    for p in used..seq {
+        out.input_ids[base + p] = special::PAD as i32;
+        out.token_type_ids[base + p] = 0;
+        out.attention_mask[base + p] = 0;
+        out.mlm_labels[base + p] = IGNORE;
+    }
+    out.nsp_labels[row] = ex.nsp_label();
+
+    // --- MLM masking over maskable positions (not CLS/SEP/PAD) ---
+    let maskable: Vec<usize> = (0..used)
+        .filter(|&p| {
+            let id = out.input_ids[base + p] as u32;
+            id != special::CLS && id != special::SEP && id != special::PAD
+        })
+        .collect();
+    let want = ((maskable.len() as f64 * cfg.mask_prob).round() as usize)
+        .min(cfg.max_predictions)
+        .min(maskable.len());
+    // reset labels for the used region
+    for p in 0..used {
+        out.mlm_labels[base + p] = IGNORE;
+    }
+    if want == 0 {
+        return;
+    }
+    let mut order = maskable;
+    rng.shuffle(&mut order);
+    for &p in order.iter().take(want) {
+        let original = out.input_ids[base + p];
+        out.mlm_labels[base + p] = original;
+        let roll = rng.next_f64();
+        if roll < cfg.mask_frac {
+            out.input_ids[base + p] = special::MASK as i32;
+        } else if roll < cfg.mask_frac + cfg.random_frac {
+            let r = special::FIRST_FREE
+                + rng.gen_range((cfg.vocab_size - special::FIRST_FREE) as u64)
+                    as u32;
+            out.input_ids[base + p] = r as i32;
+        } // else: keep original token
+    }
+}
+
+/// Build a full batch from `examples` (padded/truncated to `seq`).
+pub fn build_batch(examples: &[PairExample], seq: usize, cfg: &MaskingConfig,
+                   rng: &mut Pcg64) -> Batch {
+    let mut out = Batch::zeros(examples.len(), seq);
+    for (row, ex) in examples.iter().enumerate() {
+        assemble_into(&mut out, row, ex, cfg, rng);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    fn ex(a: usize, b: usize, next: bool) -> PairExample {
+        PairExample {
+            tokens_a: (0..a as u32).map(|i| 10 + i).collect(),
+            tokens_b: (0..b as u32).map(|i| 100 + i).collect(),
+            is_next: next,
+        }
+    }
+
+    fn cfg() -> MaskingConfig {
+        MaskingConfig { vocab_size: 1000, ..Default::default() }
+    }
+
+    #[test]
+    fn layout_cls_sep_segments() {
+        let mut rng = Pcg64::new(0);
+        let b = build_batch(&[ex(3, 2, true)], 16, &cfg(), &mut rng);
+        assert_eq!(b.input_ids[0], special::CLS as i32);
+        assert_eq!(b.input_ids[4], special::SEP as i32);
+        assert_eq!(b.input_ids[7], special::SEP as i32);
+        assert_eq!(&b.token_type_ids[..8], &[0, 0, 0, 0, 0, 1, 1, 1]);
+        assert_eq!(&b.attention_mask[..9], &[1, 1, 1, 1, 1, 1, 1, 1, 0]);
+        assert_eq!(b.nsp_labels[0], 0);
+        // pad region
+        assert!(b.input_ids[8..].iter().all(|&t| t == special::PAD as i32));
+        assert!(b.mlm_labels[8..].iter().all(|&l| l == IGNORE));
+    }
+
+    #[test]
+    fn masking_respects_budget_and_positions() {
+        let mut rng = Pcg64::new(1);
+        let c = MaskingConfig { max_predictions: 4, ..cfg() };
+        let b = build_batch(&[ex(20, 20, false)], 64, &c, &mut rng);
+        let preds = b.num_predictions();
+        assert!(preds <= 4, "{preds}");
+        assert!(preds >= 1);
+        // labels only where attention is 1 and not special
+        for p in 0..64 {
+            if b.mlm_labels[p] != IGNORE {
+                assert_eq!(b.attention_mask[p], 1);
+                let orig = b.mlm_labels[p] as u32;
+                assert!(orig >= special::FIRST_FREE);
+            }
+        }
+    }
+
+    #[test]
+    fn mask_rate_near_15_percent() {
+        let mut rng = Pcg64::new(2);
+        let c = MaskingConfig { max_predictions: 1000, ..cfg() };
+        let examples: Vec<PairExample> =
+            (0..32).map(|_| ex(30, 28, true)).collect();
+        let b = build_batch(&examples, 64, &c, &mut rng);
+        let rate = b.num_predictions() as f64
+            / (b.num_tokens() - 3 * 32) as f64; // minus CLS/SEP/SEP
+        assert!((rate - 0.15).abs() < 0.03, "rate={rate}");
+    }
+
+    #[test]
+    fn eighty_ten_ten_split() {
+        let mut rng = Pcg64::new(3);
+        let c = MaskingConfig { max_predictions: 10_000, ..cfg() };
+        let examples: Vec<PairExample> =
+            (0..64).map(|_| ex(30, 28, true)).collect();
+        let b = build_batch(&examples, 64, &c, &mut rng);
+        let mut masked = 0;
+        let mut kept = 0;
+        let mut random = 0;
+        for p in 0..b.input_ids.len() {
+            if b.mlm_labels[p] == IGNORE {
+                continue;
+            }
+            let cur = b.input_ids[p];
+            if cur == special::MASK as i32 {
+                masked += 1;
+            } else if cur == b.mlm_labels[p] {
+                kept += 1;
+            } else {
+                random += 1;
+            }
+        }
+        let total = (masked + kept + random) as f64;
+        assert!(total > 100.0);
+        assert!((masked as f64 / total - 0.8).abs() < 0.08,
+                "mask frac {}", masked as f64 / total);
+        assert!((kept as f64 / total - 0.1).abs() < 0.06);
+        assert!((random as f64 / total - 0.1).abs() < 0.06);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = || {
+            let mut rng = Pcg64::new(7);
+            build_batch(&[ex(10, 10, true), ex(5, 8, false)], 32, &cfg(),
+                        &mut rng)
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn truncation_fits_long_pairs() {
+        let mut rng = Pcg64::new(4);
+        let b = build_batch(&[ex(100, 100, true)], 32, &cfg(), &mut rng);
+        assert_eq!(b.num_tokens(), 32); // fully used, no overflow
+    }
+
+    #[test]
+    fn prop_batch_invariants() {
+        testkit::check_msg(
+            "batch-invariants", 0xBA, 32,
+            |r| {
+                let a = r.range_usize(1, 40);
+                let b = r.range_usize(1, 40);
+                let seq = [16, 32, 64][r.range_usize(0, 3)];
+                (a, b, seq, r.next_u64())
+            },
+            |&(a, b, seq, seed)| {
+                let mut rng = Pcg64::new(seed);
+                let batch = build_batch(&[ex(a, b, true)], seq, &cfg(),
+                                        &mut rng);
+                // attention mask is a prefix of ones
+                let row = &batch.attention_mask[..seq];
+                let ones = row.iter().take_while(|&&m| m == 1).count();
+                if row[ones..].iter().any(|&m| m != 0) {
+                    return Err("mask not prefix".into());
+                }
+                // every id in range
+                if batch.input_ids.iter().any(|&t| t < 0
+                    || t as u32 >= 1000) {
+                    return Err("id out of range".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,35 @@
+//! The BERT data pipeline, built from scratch (paper §3.1):
+//! corpus → tokenize (WordPiece-lite) → sentence pairs (NSP) →
+//! shard (bshard, §4.1) → per-epoch masking (15% MLM) → batches.
+//!
+//! * [`corpus`]   — synthetic Zipf corpus generator + real-text loader
+//! * [`vocab`]    — frequency-based WordPiece-lite vocabulary builder
+//! * [`tokenizer`]— greedy longest-match subword tokenizer
+//! * [`example`]  — sentence-pair records, serialized for `bshard`
+//! * [`masking`]  — MLM 80/10/10 masking + NSP batch assembly
+//! * [`pipeline`] — end-to-end: corpus → shards; shards → batches
+
+pub mod corpus;
+pub mod example;
+pub mod masking;
+pub mod pipeline;
+pub mod tokenizer;
+pub mod vocab;
+
+pub use corpus::SyntheticCorpus;
+pub use example::PairExample;
+pub use masking::{Batch, MaskingConfig};
+pub use pipeline::{build_shards, ShardedDataset};
+pub use tokenizer::Tokenizer;
+pub use vocab::Vocab;
+
+/// Reserved special token ids (fixed, vocabulary-independent).
+pub mod special {
+    pub const PAD: u32 = 0;
+    pub const CLS: u32 = 1;
+    pub const SEP: u32 = 2;
+    pub const MASK: u32 = 3;
+    pub const UNK: u32 = 4;
+    /// First id available to learned vocabulary entries.
+    pub const FIRST_FREE: u32 = 5;
+}

@@ -1,0 +1,296 @@
+//! End-to-end data pipeline (paper §3.1 + §4.1).
+//!
+//! `build_shards`: corpus → tokenize → NSP pairs (50% shuffled) → N
+//! `bshard` files (round-robin).  One shard set is built ONCE before
+//! training; per-epoch work is index shuffling + masking only — this is
+//! precisely the optimization of §4.1 (no monolithic load-and-scatter).
+//!
+//! [`ShardedDataset`]: a rank's view — it opens only the shard files
+//! assigned to that rank and streams batches from them.
+
+use std::path::{Path, PathBuf};
+
+use super::corpus::Document;
+use super::example::PairExample;
+use super::masking::{build_batch, Batch, MaskingConfig};
+use super::tokenizer::Tokenizer;
+use super::vocab::Vocab;
+use crate::shard::{round_robin_assignment, shard_file_name, ShardReader,
+                   ShardWriter};
+use crate::util::Pcg64;
+
+/// Statistics from a shard build.
+#[derive(Debug, Clone, Default)]
+pub struct BuildStats {
+    pub documents: usize,
+    pub examples: usize,
+    pub tokens: usize,
+    pub shards: usize,
+}
+
+/// Tokenize documents and emit NSP pair examples (50% IsNext, paper
+/// §3.1.1), then distribute them round-robin over `n_shards` files.
+pub fn build_shards(docs: &[Document], vocab: &Vocab, n_shards: usize,
+                    dir: &Path, stem: &str, seed: u64)
+                    -> anyhow::Result<BuildStats> {
+    std::fs::create_dir_all(dir)?;
+    let tok = Tokenizer::new(vocab);
+    let mut rng = Pcg64::with_stream(seed, 0x9A17);
+
+    // Tokenize every sentence once.
+    let tokenized: Vec<Vec<Vec<u32>>> = docs
+        .iter()
+        .map(|d| d.iter().map(|s| tok.encode(s)).collect())
+        .collect();
+
+    // NSP pairing: adjacent sentences; half get a random "b" from a
+    // different document.
+    let mut examples: Vec<PairExample> = Vec::new();
+    let mut tokens = 0usize;
+    for (di, doc) in tokenized.iter().enumerate() {
+        for si in 0..doc.len().saturating_sub(1) {
+            let a = doc[si].clone();
+            let (b, is_next) = if rng.chance(0.5) || tokenized.len() < 2 {
+                (doc[si + 1].clone(), true)
+            } else {
+                // random sentence from a different document
+                let mut dj = rng.range_usize(0, tokenized.len());
+                if dj == di {
+                    dj = (dj + 1) % tokenized.len();
+                }
+                let other = &tokenized[dj];
+                if other.is_empty() {
+                    (doc[si + 1].clone(), true)
+                } else {
+                    (other[rng.range_usize(0, other.len())].clone(), false)
+                }
+            };
+            if a.is_empty() || b.is_empty() {
+                continue;
+            }
+            tokens += a.len() + b.len();
+            examples.push(PairExample { tokens_a: a, tokens_b: b, is_next });
+        }
+    }
+
+    // Shuffle globally so shards are statistically identical, then
+    // round-robin into shard files.
+    rng.shuffle(&mut examples);
+    let assignment = round_robin_assignment(examples.len(), n_shards);
+    for (shard_idx, record_ids) in assignment.iter().enumerate() {
+        let path = dir.join(shard_file_name(stem, shard_idx, n_shards));
+        let mut w = ShardWriter::create(&path)?;
+        for &i in record_ids {
+            w.append(&examples[i].to_bytes())?;
+        }
+        w.finish()?;
+    }
+    Ok(BuildStats {
+        documents: docs.len(),
+        examples: examples.len(),
+        tokens,
+        shards: n_shards,
+    })
+}
+
+/// One rank's dataset: the shard files it owns, with per-epoch shuffling
+/// and batch assembly.
+pub struct ShardedDataset {
+    paths: Vec<PathBuf>,
+    examples: Vec<PairExample>,
+    rank: usize,
+    world: usize,
+}
+
+impl ShardedDataset {
+    /// Open the shards assigned to `rank` out of `world` (shards are
+    /// distributed round-robin over ranks).
+    pub fn open(dir: &Path, stem: &str, rank: usize, world: usize)
+        -> anyhow::Result<ShardedDataset> {
+        anyhow::ensure!(rank < world, "rank {rank} >= world {world}");
+        // discover shard count from directory listing
+        let mut all: Vec<PathBuf> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with(stem) && n.ends_with(".bshard"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        all.sort();
+        anyhow::ensure!(!all.is_empty(), "no shards '{stem}-*' in {dir:?}");
+        let mine: Vec<PathBuf> = all
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % world == rank)
+            .map(|(_, p)| p.clone())
+            .collect();
+        anyhow::ensure!(
+            !mine.is_empty(),
+            "rank {rank}: no shards (only {} shard files for world {world})",
+            all.len()
+        );
+
+        // Load this rank's examples into memory (each shard is 1/world of
+        // the data — exactly the paper's per-device stream).
+        let mut examples = Vec::new();
+        for p in &mine {
+            let mut r = ShardReader::open(p)?;
+            for rec in r.iter_all() {
+                let rec = rec?;
+                examples.push(
+                    PairExample::from_bytes(&rec)
+                        .map_err(|e| anyhow::anyhow!(e))?,
+                );
+            }
+        }
+        Ok(ShardedDataset { paths: mine, examples, rank, world })
+    }
+
+    pub fn len(&self) -> usize {
+        self.examples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.examples.is_empty()
+    }
+
+    pub fn shard_paths(&self) -> &[PathBuf] {
+        &self.paths
+    }
+
+    /// Deterministic per-epoch example order (seeded by epoch + rank).
+    pub fn epoch_order(&self, epoch: usize, seed: u64) -> Vec<usize> {
+        let mut rng = Pcg64::with_stream(
+            seed ^ (epoch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            self.rank as u64,
+        );
+        let mut order: Vec<usize> = (0..self.examples.len()).collect();
+        rng.shuffle(&mut order);
+        order
+    }
+
+    /// Build the `i`-th batch of an epoch (wraps around if needed).
+    pub fn batch(&self, order: &[usize], i: usize, batch_size: usize,
+                 seq: usize, cfg: &MaskingConfig, mask_rng: &mut Pcg64)
+                 -> Batch {
+        let n = order.len().max(1);
+        let exs: Vec<PairExample> = (0..batch_size)
+            .map(|k| self.examples[order[(i * batch_size + k) % n]].clone())
+            .collect();
+        build_batch(&exs, seq, cfg, mask_rng)
+    }
+
+    /// Batches per epoch at `batch_size`.
+    pub fn batches_per_epoch(&self, batch_size: usize) -> usize {
+        self.examples.len() / batch_size.max(1)
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::SyntheticCorpus;
+
+    fn setup(dir: &Path, n_shards: usize) -> (Vocab, BuildStats) {
+        let docs = SyntheticCorpus::new(11, 800).documents(12, 6, 8);
+        let vocab = Vocab::from_documents(&docs, 2048);
+        let stats =
+            build_shards(&docs, &vocab, n_shards, dir, "train", 5).unwrap();
+        (vocab, stats)
+    }
+
+    #[test]
+    fn build_creates_expected_files_and_counts() {
+        let dir = std::env::temp_dir().join("bertdist_pipe_build");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (_v, stats) = setup(&dir, 4);
+        assert_eq!(stats.shards, 4);
+        assert_eq!(stats.documents, 12);
+        // 12 docs x 5 adjacent pairs
+        assert_eq!(stats.examples, 60);
+        for i in 0..4 {
+            assert!(dir.join(shard_file_name("train", i, 4)).exists());
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn ranks_partition_all_examples() {
+        let dir = std::env::temp_dir().join("bertdist_pipe_part");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (_v, stats) = setup(&dir, 4);
+        let world = 2;
+        let mut total = 0;
+        for rank in 0..world {
+            let ds = ShardedDataset::open(&dir, "train", rank, world).unwrap();
+            assert_eq!(ds.shard_paths().len(), 2);
+            total += ds.len();
+        }
+        assert_eq!(total, stats.examples);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn nsp_labels_are_roughly_balanced() {
+        let dir = std::env::temp_dir().join("bertdist_pipe_nsp");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (_v, _s) = setup(&dir, 1);
+        let ds = ShardedDataset::open(&dir, "train", 0, 1).unwrap();
+        let next = ds.examples.iter().filter(|e| e.is_next).count();
+        let frac = next as f64 / ds.len() as f64;
+        assert!((frac - 0.5).abs() < 0.25, "frac={frac}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn epoch_orders_differ_but_are_deterministic() {
+        let dir = std::env::temp_dir().join("bertdist_pipe_epoch");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (_v, _s) = setup(&dir, 2);
+        let ds = ShardedDataset::open(&dir, "train", 0, 1).unwrap();
+        let e0 = ds.epoch_order(0, 42);
+        let e0b = ds.epoch_order(0, 42);
+        let e1 = ds.epoch_order(1, 42);
+        assert_eq!(e0, e0b);
+        assert_ne!(e0, e1);
+        let mut sorted = e0.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..ds.len()).collect::<Vec<_>>());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn batches_have_model_layout() {
+        let dir = std::env::temp_dir().join("bertdist_pipe_batch");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (vocab, _s) = setup(&dir, 2);
+        let ds = ShardedDataset::open(&dir, "train", 0, 1).unwrap();
+        let order = ds.epoch_order(0, 1);
+        let cfg = MaskingConfig {
+            vocab_size: vocab.len() as u32,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(9);
+        let b = ds.batch(&order, 0, 4, 32, &cfg, &mut rng);
+        assert_eq!(b.batch, 4);
+        assert_eq!(b.seq, 32);
+        assert_eq!(b.input_ids.len(), 128);
+        assert!(b.num_predictions() > 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_shards_error() {
+        let dir = std::env::temp_dir().join("bertdist_pipe_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(ShardedDataset::open(&dir, "train", 0, 1).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

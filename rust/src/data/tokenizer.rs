@@ -1,0 +1,204 @@
+//! Greedy longest-match-first WordPiece tokenizer (paper §3.1.1).
+//!
+//! Identical algorithm to BERT's `WordpieceTokenizer`: normalize, split
+//! on whitespace, then for each word repeatedly take the longest vocab
+//! entry that prefixes the remainder (continuations use the `##` prefix);
+//! words with no decomposition become `[UNK]`.  The vocabulary guarantees
+//! a character fallback, so `[UNK]` only appears for characters never
+//! seen at vocab-build time.
+
+use super::special;
+use super::vocab::{normalize, Vocab};
+
+/// Tokenizer over a fixed vocabulary.
+pub struct Tokenizer<'v> {
+    vocab: &'v Vocab,
+    max_word_chars: usize,
+}
+
+impl<'v> Tokenizer<'v> {
+    pub fn new(vocab: &'v Vocab) -> Self {
+        Self { vocab, max_word_chars: 100 }
+    }
+
+    /// Tokenize a sentence to ids (no specials added).
+    pub fn encode(&self, sentence: &str) -> Vec<u32> {
+        let mut out = Vec::new();
+        for raw in sentence.split_whitespace() {
+            let word = normalize(raw);
+            if word.is_empty() {
+                continue;
+            }
+            self.encode_word(&word, &mut out);
+        }
+        out
+    }
+
+    fn encode_word(&self, word: &str, out: &mut Vec<u32>) {
+        let chars: Vec<char> = word.chars().collect();
+        if chars.len() > self.max_word_chars {
+            out.push(special::UNK);
+            return;
+        }
+        let mut start = 0usize;
+        let mut pieces: Vec<u32> = Vec::new();
+        while start < chars.len() {
+            let mut end = chars.len();
+            let mut found: Option<u32> = None;
+            while end > start {
+                let sub: String = chars[start..end].iter().collect();
+                let cand = if start == 0 {
+                    sub
+                } else {
+                    format!("##{sub}")
+                };
+                if let Some(id) = self.vocab.id(&cand) {
+                    found = Some(id);
+                    break;
+                }
+                end -= 1;
+            }
+            match found {
+                Some(id) => {
+                    pieces.push(id);
+                    start = end;
+                }
+                None => {
+                    out.push(special::UNK);
+                    return;
+                }
+            }
+        }
+        out.extend(pieces);
+    }
+
+    /// Decode ids back to a readable string (## pieces joined).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            let tok = self.vocab.token(id).unwrap_or("[UNK]");
+            if let Some(cont) = tok.strip_prefix("##") {
+                out.push_str(cont);
+            } else {
+                if !out.is_empty() {
+                    out.push(' ');
+                }
+                out.push_str(tok);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::SyntheticCorpus;
+    use crate::testkit;
+    use crate::util::Pcg64;
+    use std::collections::HashMap;
+
+    fn toy_vocab() -> Vocab {
+        let mut f = HashMap::new();
+        for (w, n) in [("unwanted", 50), ("running", 40), ("the", 100),
+                       ("run", 60), ("want", 30), ("sat", 20)] {
+            f.insert(w.to_string(), n as usize);
+        }
+        Vocab::build(&f, 128)
+    }
+
+    #[test]
+    fn whole_words_match_directly() {
+        let v = toy_vocab();
+        let t = Tokenizer::new(&v);
+        let ids = t.encode("the running");
+        assert_eq!(ids.len(), 2);
+        assert_eq!(v.token(ids[0]), Some("the"));
+        assert_eq!(v.token(ids[1]), Some("running"));
+    }
+
+    #[test]
+    fn greedy_longest_match_decomposes() {
+        let v = toy_vocab();
+        let t = Tokenizer::new(&v);
+        // "runs" -> "run" + "##s"
+        let ids = t.encode("runs");
+        assert!(ids.len() >= 2);
+        assert_eq!(v.token(ids[0]), Some("run"));
+        assert_eq!(v.token(ids[1]), Some("##s"));
+    }
+
+    #[test]
+    fn decode_rejoins_pieces() {
+        let v = toy_vocab();
+        let t = Tokenizer::new(&v);
+        let ids = t.encode("the runs");
+        assert_eq!(t.decode(&ids), "the runs");
+    }
+
+    #[test]
+    fn normalization_applied() {
+        let v = toy_vocab();
+        let t = Tokenizer::new(&v);
+        assert_eq!(t.encode("The THE the,"), t.encode("the the the"));
+    }
+
+    #[test]
+    fn never_panics_and_rarely_unk_on_synthetic_corpus() {
+        let mut c = SyntheticCorpus::new(3, 2000);
+        let docs = c.documents(20, 5, 10);
+        let v = Vocab::from_documents(&docs, 4096);
+        let t = Tokenizer::new(&v);
+        let mut total = 0usize;
+        let mut unk = 0usize;
+        for s in docs.iter().flatten() {
+            for id in t.encode(s) {
+                total += 1;
+                if id == special::UNK {
+                    unk += 1;
+                }
+            }
+        }
+        assert!(total > 500);
+        // char fallback covers the corpus alphabet: no UNKs at all
+        assert_eq!(unk, 0, "unk={unk}/{total}");
+    }
+
+    #[test]
+    fn prop_encode_decode_word_identity_when_in_vocab() {
+        // For corpus-drawn sentences, decode(encode(s)) == normalized s.
+        let mut c = SyntheticCorpus::new(4, 1000);
+        let docs = c.documents(10, 4, 8);
+        let v = Vocab::from_documents(&docs, 4096);
+        let t = Tokenizer::new(&v);
+        testkit::check(
+            "tokenizer-roundtrip", 0xF0, 32,
+            |r: &mut Pcg64| {
+                let d = r.range_usize(0, docs.len());
+                let s = r.range_usize(0, docs[d].len());
+                docs[d][s].clone()
+            },
+            |s| {
+                let norm: Vec<String> = s
+                    .split_whitespace()
+                    .map(super::normalize)
+                    .filter(|w| !w.is_empty())
+                    .collect();
+                Tokenizer::new(&v).decode(&t.encode(s)) == norm.join(" ")
+            },
+        );
+    }
+
+    #[test]
+    fn ids_always_in_vocab_range() {
+        let mut c = SyntheticCorpus::new(5, 500);
+        let docs = c.documents(5, 3, 6);
+        let v = Vocab::from_documents(&docs, 1024);
+        let t = Tokenizer::new(&v);
+        for s in docs.iter().flatten() {
+            for id in t.encode(s) {
+                assert!((id as usize) < v.len());
+            }
+        }
+    }
+}

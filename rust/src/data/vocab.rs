@@ -1,0 +1,223 @@
+//! WordPiece-lite vocabulary (paper §3.1.1: WordPiece tokenization).
+//!
+//! A full WordPiece trainer does likelihood-driven merges; the property
+//! the rest of the pipeline needs is just: a frequency-ranked subword
+//! vocabulary with whole-word entries, `##`-continuation pieces, and a
+//! character-level fallback so tokenization is total.  This builder
+//! delivers exactly that and serializes to/from a plain text file
+//! (one token per line — the BERT `vocab.txt` convention).
+
+use std::collections::HashMap;
+
+use super::special;
+
+/// A fixed vocabulary: token string <-> id.
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    token_to_id: HashMap<String, u32>,
+    id_to_token: Vec<String>,
+}
+
+impl Vocab {
+    /// Build from a corpus word-frequency map.
+    ///
+    /// Budget layout: 5 specials, all single characters seen (as both
+    /// word-initial and `##` continuation pieces — the fallback), then
+    /// the most frequent whole words, then frequent suffix pieces.
+    pub fn build(word_freq: &HashMap<String, usize>, size: usize) -> Vocab {
+        assert!(size > special::FIRST_FREE as usize + 2);
+        let mut id_to_token: Vec<String> = vec![
+            "[PAD]".into(), "[CLS]".into(), "[SEP]".into(),
+            "[MASK]".into(), "[UNK]".into(),
+        ];
+
+        // character fallback pieces
+        let mut chars: Vec<char> = word_freq
+            .keys()
+            .flat_map(|w| w.chars())
+            .collect();
+        chars.sort_unstable();
+        chars.dedup();
+        for c in &chars {
+            id_to_token.push(c.to_string());
+        }
+        for c in &chars {
+            id_to_token.push(format!("##{c}"));
+        }
+
+        // frequent whole words
+        let mut words: Vec<(&String, &usize)> = word_freq.iter().collect();
+        words.sort_by(|a, b| b.1.cmp(a.1).then(a.0.cmp(b.0)));
+        let mut seen: std::collections::HashSet<String> =
+            id_to_token.iter().cloned().collect();
+        for (w, _) in &words {
+            if id_to_token.len() >= size {
+                break;
+            }
+            if w.chars().count() > 1 && seen.insert((*w).clone()) {
+                id_to_token.push((*w).clone());
+            }
+        }
+
+        // frequent suffixes as ## pieces (simple 2..4-char tails)
+        if id_to_token.len() < size {
+            let mut suffix_freq: HashMap<String, usize> = HashMap::new();
+            for (w, f) in &words {
+                let cs: Vec<char> = w.chars().collect();
+                for tail in 2..=3.min(cs.len().saturating_sub(1)) {
+                    let piece: String =
+                        cs[cs.len() - tail..].iter().collect();
+                    *suffix_freq.entry(format!("##{piece}")).or_insert(0) += **f;
+                }
+            }
+            let mut suffixes: Vec<(String, usize)> =
+                suffix_freq.into_iter().collect();
+            suffixes.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+            for (s, _) in suffixes {
+                if id_to_token.len() >= size {
+                    break;
+                }
+                if seen.insert(s.clone()) {
+                    id_to_token.push(s);
+                }
+            }
+        }
+
+        let token_to_id = id_to_token
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i as u32))
+            .collect();
+        Vocab { token_to_id, id_to_token }
+    }
+
+    /// Build directly from documents.
+    pub fn from_documents(docs: &[super::corpus::Document], size: usize)
+        -> Vocab {
+        let mut freq: HashMap<String, usize> = HashMap::new();
+        for s in docs.iter().flatten() {
+            for w in s.split_whitespace() {
+                let w = normalize(w);
+                if !w.is_empty() {
+                    *freq.entry(w).or_insert(0) += 1;
+                }
+            }
+        }
+        Self::build(&freq, size)
+    }
+
+    pub fn len(&self) -> usize {
+        self.id_to_token.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.id_to_token.is_empty()
+    }
+
+    pub fn id(&self, token: &str) -> Option<u32> {
+        self.token_to_id.get(token).copied()
+    }
+
+    pub fn token(&self, id: u32) -> Option<&str> {
+        self.id_to_token.get(id as usize).map(|s| s.as_str())
+    }
+
+    /// Serialize: one token per line (BERT vocab.txt convention).
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.id_to_token.join("\n"))
+    }
+
+    /// Load a vocab.txt.
+    pub fn load(path: &std::path::Path) -> std::io::Result<Vocab> {
+        let text = std::fs::read_to_string(path)?;
+        let id_to_token: Vec<String> =
+            text.lines().map(|l| l.to_string()).collect();
+        let token_to_id = id_to_token
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i as u32))
+            .collect();
+        Ok(Vocab { token_to_id, id_to_token })
+    }
+}
+
+/// Lowercase and strip non-alphanumeric edges (uncased BERT-style).
+pub fn normalize(word: &str) -> String {
+    word.chars()
+        .filter(|c| c.is_alphanumeric())
+        .flat_map(|c| c.to_lowercase())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_freq() -> HashMap<String, usize> {
+        let mut f = HashMap::new();
+        for (w, n) in [("the", 100), ("cat", 50), ("sat", 40), ("mat", 30),
+                       ("catalog", 5)] {
+            f.insert(w.to_string(), n);
+        }
+        f
+    }
+
+    #[test]
+    fn specials_have_fixed_ids() {
+        let v = Vocab::build(&toy_freq(), 64);
+        assert_eq!(v.id("[PAD]"), Some(special::PAD));
+        assert_eq!(v.id("[CLS]"), Some(special::CLS));
+        assert_eq!(v.id("[SEP]"), Some(special::SEP));
+        assert_eq!(v.id("[MASK]"), Some(special::MASK));
+        assert_eq!(v.id("[UNK]"), Some(special::UNK));
+    }
+
+    #[test]
+    fn frequent_words_are_whole_entries() {
+        let v = Vocab::build(&toy_freq(), 64);
+        assert!(v.id("the").is_some());
+        assert!(v.id("cat").is_some());
+    }
+
+    #[test]
+    fn char_fallback_always_present() {
+        let v = Vocab::build(&toy_freq(), 64);
+        for c in "thecasmlog".chars() {
+            assert!(v.id(&c.to_string()).is_some(), "{c}");
+            assert!(v.id(&format!("##{c}")).is_some(), "##{c}");
+        }
+    }
+
+    #[test]
+    fn id_token_roundtrip() {
+        let v = Vocab::build(&toy_freq(), 64);
+        for id in 0..v.len() as u32 {
+            let t = v.token(id).unwrap();
+            assert_eq!(v.id(t), Some(id));
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let v = Vocab::build(&toy_freq(), 64);
+        let path = std::env::temp_dir().join("bertdist_vocab_test.txt");
+        v.save(&path).unwrap();
+        let l = Vocab::load(&path).unwrap();
+        assert_eq!(l.len(), v.len());
+        assert_eq!(l.id("the"), v.id("the"));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn size_budget_respected() {
+        let v = Vocab::build(&toy_freq(), 40);
+        assert!(v.len() <= 40);
+    }
+
+    #[test]
+    fn normalize_strips_punctuation_and_case() {
+        assert_eq!(normalize("Hello,"), "hello");
+        assert_eq!(normalize("(world)"), "world");
+        assert_eq!(normalize("--"), "");
+    }
+}

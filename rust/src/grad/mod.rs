@@ -1,0 +1,264 @@
+//! Gradient plumbing (paper §4.4, Figures 2 & 5): flat buffers,
+//! size-threshold bucketing for communication/computation overlap, and
+//! local accumulation across micro-steps.
+//!
+//! * [`Bucket`]s partition the flat gradient vector into contiguous
+//!   ranges of ~`threshold` elements, *in reverse layout order* — the
+//!   order gradients become ready during backward (output layers first),
+//!   so each bucket's allreduce can launch as soon as backprop passes it
+//!   ("The gradients are exchanged as soon as they become available
+//!   after passing some certain size threshold", §4.4).
+//! * [`GradAccumulator`] sums micro-step gradients locally and tracks
+//!   the normalization factor (§4.4 gradient accumulation).
+
+pub mod sparsify;
+
+use crate::model::layout::ParamLayout;
+
+/// A contiguous flat-vector range exchanged as one allreduce message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bucket {
+    /// Flat element range [start, end).
+    pub start: usize,
+    pub end: usize,
+    /// Names of the parameter tensors whose gradients live here.
+    pub tensors: Vec<String>,
+    /// Backward readiness order: bucket 0 is ready FIRST (covers the
+    /// layout tail = output-side layers).
+    pub order: usize,
+}
+
+impl Bucket {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.len() * 4
+    }
+}
+
+/// Partition a parameter layout into buckets of >= `threshold_elems`,
+/// walking tensors from the END of the layout (backward order).  Tensor
+/// boundaries are respected: a tensor is never split across buckets
+/// (DDP semantics).
+pub fn build_buckets(layout: &ParamLayout, threshold_elems: usize)
+    -> Vec<Bucket> {
+    let mut buckets = Vec::new();
+    let mut cur_tensors: Vec<String> = Vec::new();
+    let mut cur_end: Option<usize> = None;
+    let mut cur_start = 0usize;
+    for entry in layout.entries().iter().rev() {
+        if cur_end.is_none() {
+            cur_end = Some(entry.offset + entry.len());
+        }
+        cur_start = entry.offset;
+        cur_tensors.push(entry.name.clone());
+        if cur_end.unwrap() - cur_start >= threshold_elems {
+            buckets.push(Bucket {
+                start: cur_start,
+                end: cur_end.unwrap(),
+                tensors: std::mem::take(&mut cur_tensors),
+                order: buckets.len(),
+            });
+            cur_end = None;
+        }
+    }
+    if let Some(end) = cur_end {
+        buckets.push(Bucket {
+            start: cur_start,
+            end,
+            tensors: cur_tensors,
+            order: buckets.len(),
+        });
+    }
+    buckets
+}
+
+/// Local gradient accumulator (paper §4.4): sums `k` micro-batch
+/// gradients before one global exchange; the trainer divides by the
+/// TOTAL sample count (k * world) via `mean_factor`.
+#[derive(Debug)]
+pub struct GradAccumulator {
+    sum: Vec<f32>,
+    micro_steps: usize,
+}
+
+impl GradAccumulator {
+    pub fn new(n: usize) -> Self {
+        Self { sum: vec![0.0; n], micro_steps: 0 }
+    }
+
+    /// Add one micro-step's gradients.
+    pub fn add(&mut self, grads: &[f32]) {
+        assert_eq!(grads.len(), self.sum.len());
+        for (s, g) in self.sum.iter_mut().zip(grads) {
+            *s += g;
+        }
+        self.micro_steps += 1;
+    }
+
+    /// Micro-steps accumulated since the last drain.
+    pub fn micro_steps(&self) -> usize {
+        self.micro_steps
+    }
+
+    /// Factor that turns the (already allreduce-SUMMED) buffer into a
+    /// mean over all contributing micro-batches.
+    pub fn mean_factor(&self, world: usize) -> f32 {
+        1.0 / (self.micro_steps.max(1) * world.max(1)) as f32
+    }
+
+    /// Mutable view for in-place allreduce.
+    pub fn buffer_mut(&mut self) -> &mut [f32] {
+        &mut self.sum
+    }
+
+    /// Owned-vector access (the trainer moves buffers into allreduce
+    /// worker threads and back without copying).
+    pub fn buffer_mut_vec(&mut self) -> &mut Vec<f32> {
+        &mut self.sum
+    }
+
+    pub fn buffer(&self) -> &[f32] {
+        &self.sum
+    }
+
+    /// Scale the buffer in place (applying `mean_factor`).
+    pub fn scale(&mut self, factor: f32) {
+        for v in self.sum.iter_mut() {
+            *v *= factor;
+        }
+    }
+
+    /// Reset for the next accumulation window.
+    pub fn reset(&mut self) {
+        self.sum.iter_mut().for_each(|v| *v = 0.0);
+        self.micro_steps = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layout::ParamLayout;
+    use crate::testkit;
+    use crate::util::Pcg64;
+
+    fn toy_layout() -> ParamLayout {
+        ParamLayout::from_shapes(&[
+            ("embeddings.word".into(), vec![100, 8]),       // 800
+            ("layer.0.attn.w".into(), vec![32, 32]),        // 1024
+            ("layer.0.attn.b".into(), vec![32]),            // 32
+            ("layer.0.out.w".into(), vec![64, 16]),         // 1024
+            ("cls.bias".into(), vec![100]),                 // 100
+        ])
+    }
+
+    #[test]
+    fn buckets_cover_layout_disjointly_in_reverse() {
+        let layout = toy_layout();
+        let buckets = build_buckets(&layout, 1000);
+        // coverage + disjointness
+        let mut covered = vec![false; layout.total_len()];
+        for b in &buckets {
+            for c in &mut covered[b.start..b.end] {
+                assert!(!*c, "overlap");
+                *c = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+        // bucket 0 holds the layout tail (cls.bias)
+        assert!(buckets[0].tensors.contains(&"cls.bias".to_string()));
+        assert_eq!(buckets[0].end, layout.total_len());
+        // orders are 0..n
+        for (i, b) in buckets.iter().enumerate() {
+            assert_eq!(b.order, i);
+        }
+    }
+
+    #[test]
+    fn threshold_respected_except_last() {
+        let layout = toy_layout();
+        let buckets = build_buckets(&layout, 1000);
+        for b in &buckets[..buckets.len() - 1] {
+            assert!(b.len() >= 1000, "{b:?}");
+        }
+    }
+
+    #[test]
+    fn huge_threshold_gives_single_bucket() {
+        let layout = toy_layout();
+        let buckets = build_buckets(&layout, usize::MAX);
+        assert_eq!(buckets.len(), 1);
+        assert_eq!(buckets[0].start, 0);
+        assert_eq!(buckets[0].end, layout.total_len());
+        assert_eq!(buckets[0].tensors.len(), 5);
+    }
+
+    #[test]
+    fn tiny_threshold_gives_per_tensor_buckets() {
+        let layout = toy_layout();
+        let buckets = build_buckets(&layout, 1);
+        assert_eq!(buckets.len(), 5);
+    }
+
+    #[test]
+    fn prop_bucket_partition_random_layouts() {
+        testkit::check_msg(
+            "bucket-partition", 0xB0C, 48,
+            |r: &mut Pcg64| {
+                let n = r.range_usize(1, 30);
+                let shapes: Vec<(String, Vec<usize>)> = (0..n)
+                    .map(|i| {
+                        (format!("t{i}"), vec![r.range_usize(1, 500)])
+                    })
+                    .collect();
+                (shapes, r.range_usize(1, 2000))
+            },
+            |(shapes, threshold)| {
+                let layout = ParamLayout::from_shapes(shapes);
+                let buckets = build_buckets(&layout, *threshold);
+                let total: usize = buckets.iter().map(|b| b.len()).sum();
+                if total != layout.total_len() {
+                    return Err(format!("covered {total} of {}",
+                                       layout.total_len()));
+                }
+                // buckets in reverse-contiguous order
+                for w in buckets.windows(2) {
+                    if w[1].end != w[0].start {
+                        return Err("buckets not reverse-contiguous".into());
+                    }
+                }
+                // tensor count preserved
+                let names: usize = buckets.iter().map(|b| b.tensors.len())
+                    .sum();
+                if names != shapes.len() {
+                    return Err("tensor lost".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn accumulator_sums_and_normalizes() {
+        let mut acc = GradAccumulator::new(4);
+        acc.add(&[1.0, 2.0, 3.0, 4.0]);
+        acc.add(&[1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(acc.micro_steps(), 2);
+        assert_eq!(acc.buffer(), &[2.0, 2.0, 4.0, 4.0]);
+        // mean over k=2 micro-steps x world=4 => /8
+        let f = acc.mean_factor(4);
+        assert!((f - 1.0 / 8.0).abs() < 1e-9);
+        acc.scale(f);
+        assert_eq!(acc.buffer()[0], 0.25);
+        acc.reset();
+        assert_eq!(acc.buffer(), &[0.0; 4]);
+        assert_eq!(acc.micro_steps(), 0);
+    }
+}

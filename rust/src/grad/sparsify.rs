@@ -1,0 +1,247 @@
+//! Gradient sparsification — the §4.4 BASELINE the paper evaluates and
+//! rejects (Wangni et al. [43]).
+//!
+//! Top-k magnitude sparsification with local error feedback
+//! (accumulating the dropped residual, as the sparsification literature
+//! prescribes).  The paper's argument against it for BERT:
+//! (a) the gradients are dense (Fig. 4 — attention/intermediate/output
+//! matmuls), so aggressive thresholds distort the signal;
+//! (b) threshold selection costs compute and tuning.
+//! The `sec44_sparsification` bench quantifies both effects on real
+//! BERT gradients from the PJRT substrate.
+
+use crate::util::Pcg64;
+
+/// A sparsified gradient message: (index, value) pairs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseGrad {
+    pub n: usize,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl SparseGrad {
+    /// Wire size in bytes (4B index + 4B value per entry).
+    pub fn wire_bytes(&self) -> usize {
+        self.indices.len() * 8
+    }
+
+    /// Compression ratio vs the dense f32 payload.
+    pub fn compression(&self) -> f64 {
+        (self.n * 4) as f64 / self.wire_bytes().max(1) as f64
+    }
+
+    /// Densify back to a full vector.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n];
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            out[i as usize] = v;
+        }
+        out
+    }
+}
+
+/// Select the top-`k` entries by magnitude.  Exact selection via
+/// partial sort of a sampled threshold would be cheaper; we use full
+/// `select_nth_unstable` which is O(n) — the cost the paper counts as
+/// "extra amount of calculation overhead".
+pub fn top_k(grads: &[f32], k: usize) -> SparseGrad {
+    let n = grads.len();
+    let k = k.min(n);
+    if k == 0 {
+        return SparseGrad { n, indices: vec![], values: vec![] };
+    }
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.select_nth_unstable_by(k - 1, |&a, &b| {
+        grads[b as usize]
+            .abs()
+            .partial_cmp(&grads[a as usize].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut indices: Vec<u32> = order[..k].to_vec();
+    indices.sort_unstable();
+    let values = indices.iter().map(|&i| grads[i as usize]).collect();
+    SparseGrad { n, indices, values }
+}
+
+/// Threshold-based sparsification (the tuning-sensitive alternative).
+pub fn by_threshold(grads: &[f32], threshold: f32) -> SparseGrad {
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    for (i, &g) in grads.iter().enumerate() {
+        if g.abs() >= threshold {
+            indices.push(i as u32);
+            values.push(g);
+        }
+    }
+    SparseGrad { n: grads.len(), indices, values }
+}
+
+/// Sparsifying worker state with error feedback: dropped gradient mass
+/// is carried into the next round instead of lost.
+#[derive(Debug)]
+pub struct ErrorFeedback {
+    residual: Vec<f32>,
+}
+
+impl ErrorFeedback {
+    pub fn new(n: usize) -> Self {
+        Self { residual: vec![0.0; n] }
+    }
+
+    /// Sparsify `grads + residual`, keeping the dropped part as the new
+    /// residual.  Returns the message to transmit.
+    pub fn step(&mut self, grads: &[f32], k: usize) -> SparseGrad {
+        assert_eq!(grads.len(), self.residual.len());
+        let corrected: Vec<f32> = grads
+            .iter()
+            .zip(&self.residual)
+            .map(|(g, r)| g + r)
+            .collect();
+        let msg = top_k(&corrected, k);
+        // residual = corrected - sent
+        self.residual = corrected;
+        for (&i, &v) in msg.indices.iter().zip(&msg.values) {
+            self.residual[i as usize] -= v;
+        }
+        msg
+    }
+
+    pub fn residual_norm(&self) -> f32 {
+        crate::optimizer::l2_norm(&self.residual)
+    }
+}
+
+/// Cosine similarity between the sparsified gradient and the dense one
+/// (1.0 = undistorted signal) — the quality metric in the bench.
+pub fn cosine_to_dense(msg: &SparseGrad, dense: &[f32]) -> f64 {
+    let sparse = msg.to_dense();
+    let dot: f64 = sparse.iter().zip(dense)
+        .map(|(a, b)| *a as f64 * *b as f64).sum();
+    let na: f64 = sparse.iter().map(|a| (*a as f64).powi(2)).sum::<f64>()
+        .sqrt();
+    let nb: f64 = dense.iter().map(|b| (*b as f64).powi(2)).sum::<f64>()
+        .sqrt();
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / na / nb
+    }
+}
+
+/// Synthetic "sparse-friendly" gradients (heavy-tailed) vs BERT-like
+/// dense gradients — used by tests to show when sparsification works.
+pub fn synth_heavy_tailed(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|_| {
+            let u = rng.next_f64();
+            // pareto-ish: most values tiny, a few huge
+            let mag = (1.0 / (1.0 - u)).powf(1.5) * 1e-4;
+            (mag * if rng.chance(0.5) { -1.0 } else { 1.0 }) as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn top_k_picks_largest_magnitudes() {
+        let g = vec![0.1, -5.0, 0.01, 3.0, -0.2];
+        let s = top_k(&g, 2);
+        assert_eq!(s.indices, vec![1, 3]);
+        assert_eq!(s.values, vec![-5.0, 3.0]);
+        assert_eq!(s.to_dense(), vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn top_k_edge_cases() {
+        let g = vec![1.0, 2.0];
+        assert_eq!(top_k(&g, 0).indices.len(), 0);
+        assert_eq!(top_k(&g, 5).indices.len(), 2);
+        assert_eq!(top_k(&[], 3).indices.len(), 0);
+    }
+
+    #[test]
+    fn threshold_variant() {
+        let g = vec![0.1, -5.0, 0.01, 3.0];
+        let s = by_threshold(&g, 1.0);
+        assert_eq!(s.indices, vec![1, 3]);
+        // too-high threshold sends nothing (the paper's tuning risk)
+        assert_eq!(by_threshold(&g, 10.0).indices.len(), 0);
+    }
+
+    #[test]
+    fn compression_accounting() {
+        let g = vec![1.0f32; 1000];
+        let s = top_k(&g, 100);
+        assert_eq!(s.wire_bytes(), 800);
+        assert!((s.compression() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn error_feedback_conserves_gradient_mass() {
+        // Over many rounds, sum(transmitted) ~= sum(all gradients).
+        let n = 256;
+        let mut ef = ErrorFeedback::new(n);
+        let mut sent_total = vec![0.0f32; n];
+        let mut grad_total = vec![0.0f32; n];
+        let mut rng = Pcg64::new(5);
+        for _ in 0..50 {
+            let g: Vec<f32> =
+                (0..n).map(|_| (rng.next_gaussian() * 0.1) as f32).collect();
+            for (t, x) in grad_total.iter_mut().zip(&g) {
+                *t += x;
+            }
+            let msg = ef.step(&g, 32);
+            for (&i, &v) in msg.indices.iter().zip(&msg.values) {
+                sent_total[i as usize] += v;
+            }
+        }
+        // residual bounds the difference
+        for i in 0..n {
+            let diff = (grad_total[i] - sent_total[i]).abs();
+            assert!(diff <= ef.residual_norm() + 1e-4, "i={i} diff={diff}");
+        }
+    }
+
+    #[test]
+    fn heavy_tailed_sparsifies_well_dense_does_not() {
+        // The paper's §4.4 argument in one test: a heavy-tailed gradient
+        // keeps high cosine similarity at 10:1 compression; a dense
+        // gaussian gradient (BERT-like) does not.
+        let n = 10_000;
+        let heavy = synth_heavy_tailed(n, 7);
+        let mut rng = Pcg64::new(8);
+        let dense: Vec<f32> =
+            (0..n).map(|_| (rng.next_gaussian() * 0.01) as f32).collect();
+        let k = n / 10;
+        let cos_heavy = cosine_to_dense(&top_k(&heavy, k), &heavy);
+        let cos_dense = cosine_to_dense(&top_k(&dense, k), &dense);
+        assert!(cos_heavy > 0.98, "{cos_heavy}");
+        assert!(cos_dense < 0.85, "{cos_dense}");
+        assert!(cos_heavy > cos_dense + 0.1);
+    }
+
+    #[test]
+    fn prop_topk_dense_roundtrip_subset() {
+        testkit::check(
+            "sparsify-subset", 0x59A, 48,
+            |r| {
+                let g = testkit::gen_f32_vec(r, 1, 300);
+                let k = r.range_usize(0, g.len() + 1);
+                (g, k)
+            },
+            |(g, k)| {
+                let s = top_k(g, *k);
+                // every transmitted value matches the original
+                s.indices.iter().zip(&s.values).all(|(&i, &v)| {
+                    g[i as usize] == v
+                }) && s.indices.len() == (*k).min(g.len())
+            },
+        );
+    }
+}

@@ -1,0 +1,308 @@
+//! IEEE 754 binary16 ("FP16") implemented from scratch (paper §2.3, §4.2).
+//!
+//! The AMP engine needs real half-precision semantics — round-to-nearest-
+//! even conversion, overflow to ±inf, gradual underflow to subnormals and
+//! zero — to model exactly the phenomenon the paper's loss scaling fixes:
+//! small-magnitude gradients rounding to zero in FP16's `[-14, 15]`
+//! exponent range.  The `half` crate is unavailable offline; this is the
+//! substrate replacement, fully tested against the IEEE rules.
+
+/// A 16-bit IEEE 754 half-precision float (storage type).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct F16(pub u16);
+
+/// Largest finite f16 value (65504.0).
+pub const F16_MAX: f32 = 65504.0;
+/// Smallest positive normal f16 (2^-14).
+pub const F16_MIN_POSITIVE: f32 = 6.103_515_6e-5;
+/// Smallest positive subnormal f16 (2^-24).
+pub const F16_MIN_SUBNORMAL: f32 = 5.960_464_5e-8;
+
+impl F16 {
+    pub const ZERO: F16 = F16(0x0000);
+    pub const NEG_ZERO: F16 = F16(0x8000);
+    pub const INFINITY: F16 = F16(0x7C00);
+    pub const NEG_INFINITY: F16 = F16(0xFC00);
+    pub const NAN: F16 = F16(0x7E00);
+    pub const MAX: F16 = F16(0x7BFF);
+
+    /// Convert from f32 with round-to-nearest-even (IEEE default).
+    pub fn from_f32(x: f32) -> F16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let frac = bits & 0x007F_FFFF;
+
+        if exp == 0xFF {
+            // Inf or NaN
+            return if frac == 0 {
+                F16(sign | 0x7C00)
+            } else {
+                F16(sign | 0x7E00 | ((frac >> 13) as u16 & 0x03FF))
+            };
+        }
+
+        // Unbiased exponent in f32, re-biased for f16 (bias 15).
+        let e = exp - 127 + 15;
+        if e >= 0x1F {
+            // Overflow -> infinity (this is what zaps huge scaled grads).
+            return F16(sign | 0x7C00);
+        }
+        if e <= 0 {
+            // Subnormal or underflow to zero.
+            if e < -10 {
+                return F16(sign); // too small: signed zero
+            }
+            // Add the implicit leading 1, then shift right.
+            let m = frac | 0x0080_0000;
+            let shift = (14 - e) as u32;
+            let half_ulp = 1u32 << (shift - 1);
+            let mut sub = m >> shift;
+            // round to nearest even
+            let rem = m & ((1 << shift) - 1);
+            if rem > half_ulp || (rem == half_ulp && (sub & 1) == 1) {
+                sub += 1;
+            }
+            return F16(sign | sub as u16);
+        }
+
+        // Normal number: round 23-bit mantissa to 10 bits, nearest-even.
+        let mut mant = (frac >> 13) as u16;
+        let rem = frac & 0x1FFF;
+        if rem > 0x1000 || (rem == 0x1000 && (mant & 1) == 1) {
+            mant += 1;
+            if mant == 0x400 {
+                // mantissa overflowed into the exponent
+                return if e + 1 >= 0x1F {
+                    F16(sign | 0x7C00)
+                } else {
+                    F16(sign | (((e + 1) as u16) << 10))
+                };
+            }
+        }
+        F16(sign | ((e as u16) << 10) | mant)
+    }
+
+    /// Convert to f32 (exact — every f16 is representable in f32).
+    pub fn to_f32(self) -> f32 {
+        let sign = ((self.0 & 0x8000) as u32) << 16;
+        let exp = ((self.0 >> 10) & 0x1F) as u32;
+        let frac = (self.0 & 0x03FF) as u32;
+        let bits = if exp == 0 {
+            if frac == 0 {
+                sign // signed zero
+            } else {
+                // subnormal: normalize
+                let mut e = 127 - 15 - 10;
+                let mut f = frac;
+                while f & 0x0400 == 0 {
+                    f <<= 1;
+                    e -= 1;
+                }
+                f &= 0x03FF;
+                sign | (((e + 10 + 1) as u32) << 23) | (f << 13)
+            }
+        } else if exp == 0x1F {
+            sign | 0x7F80_0000 | (frac << 13) // inf / nan
+        } else {
+            sign | ((exp + 127 - 15) << 23) | (frac << 13)
+        };
+        f32::from_bits(bits)
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x03FF) != 0
+    }
+
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+
+    pub fn is_finite(self) -> bool {
+        (self.0 & 0x7C00) != 0x7C00
+    }
+
+    pub fn is_subnormal(self) -> bool {
+        (self.0 & 0x7C00) == 0 && (self.0 & 0x03FF) != 0
+    }
+
+    pub fn is_zero(self) -> bool {
+        (self.0 & 0x7FFF) == 0
+    }
+}
+
+/// Classify what happens to an f32 value when cast to f16 — the AMP
+/// engine uses this to reason about gradient distributions (paper §2.3:
+/// "many small-magnitude gradients are rounded to zero").
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum CastFate {
+    /// Representable as a normal f16 (possibly rounded).
+    Normal,
+    /// Lands in the subnormal range — precision loss.
+    Subnormal,
+    /// Flushes to zero — the gradient vanishes.
+    Zero,
+    /// Overflows to infinity — triggers loss-scale backoff.
+    Overflow,
+    /// NaN in, NaN out.
+    Nan,
+}
+
+/// Determine the [`CastFate`] of an f32 under f16 conversion.
+pub fn cast_fate(x: f32) -> CastFate {
+    if x.is_nan() {
+        return CastFate::Nan;
+    }
+    let a = x.abs();
+    if a == 0.0 {
+        return CastFate::Zero;
+    }
+    if a > F16_MAX {
+        return CastFate::Overflow;
+    }
+    if a < F16_MIN_SUBNORMAL / 2.0 {
+        return CastFate::Zero;
+    }
+    if a < F16_MIN_POSITIVE {
+        // Might round to zero or to a subnormal.
+        let f = F16::from_f32(x);
+        if f.is_zero() {
+            CastFate::Zero
+        } else {
+            CastFate::Subnormal
+        }
+    } else {
+        CastFate::Normal
+    }
+}
+
+/// Round-trip an f32 slice through f16 (what shipping FP16 gradients over
+/// the wire would do); returns the number of values that flushed to zero
+/// and how many overflowed.
+pub fn simulate_f16_pass(xs: &mut [f32]) -> (usize, usize) {
+    let mut zeroed = 0;
+    let mut overflowed = 0;
+    for v in xs.iter_mut() {
+        let before = *v;
+        let f = F16::from_f32(before);
+        *v = f.to_f32();
+        if before != 0.0 && *v == 0.0 {
+            zeroed += 1;
+        }
+        if before.is_finite() && !v.is_finite() {
+            overflowed += 1;
+        }
+    }
+    (zeroed, overflowed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers_round_trip() {
+        for i in -2048i32..=2048 {
+            let x = i as f32;
+            assert_eq!(F16::from_f32(x).to_f32(), x, "i={i}");
+        }
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(F16::from_f32(1.0).0, 0x3C00);
+        assert_eq!(F16::from_f32(-2.0).0, 0xC000);
+        assert_eq!(F16::from_f32(65504.0).0, 0x7BFF);
+        assert_eq!(F16::from_f32(0.5).0, 0x3800);
+        assert_eq!(F16::from_f32(6.103_515_6e-5).0, 0x0400); // min normal
+    }
+
+    #[test]
+    fn overflow_to_infinity() {
+        assert!(F16::from_f32(65536.0).is_infinite());
+        assert!(F16::from_f32(-1e9).is_infinite());
+        assert_eq!(F16::from_f32(-1e9).0, 0xFC00);
+    }
+
+    #[test]
+    fn underflow_to_zero_and_subnormals() {
+        assert!(F16::from_f32(1e-9).is_zero());
+        let sub = F16::from_f32(1e-5); // below min normal 6.1e-5
+        assert!(sub.is_subnormal());
+        let back = sub.to_f32();
+        assert!((back - 1e-5).abs() / 1e-5 < 0.05, "{back}");
+    }
+
+    #[test]
+    fn nan_propagates() {
+        assert!(F16::from_f32(f32::NAN).is_nan());
+        assert!(F16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16;
+        // nearest-even rounds down to 1.0.
+        let x = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(F16::from_f32(x).to_f32(), 1.0);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9's midpoint...
+        // nearest-even rounds up to even mantissa 2.
+        let y = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(F16::from_f32(y).to_f32(), 1.0 + 2.0 * 2.0f32.powi(-10));
+    }
+
+    #[test]
+    fn cast_fates() {
+        assert_eq!(cast_fate(1.0), CastFate::Normal);
+        assert_eq!(cast_fate(1e-5), CastFate::Subnormal);
+        assert_eq!(cast_fate(1e-9), CastFate::Zero);
+        assert_eq!(cast_fate(1e6), CastFate::Overflow);
+        assert_eq!(cast_fate(f32::NAN), CastFate::Nan);
+        assert_eq!(cast_fate(0.0), CastFate::Zero);
+    }
+
+    #[test]
+    fn loss_scaling_rescues_small_gradients() {
+        // The §4.2 story in miniature: tiny grads die in fp16, but scaling
+        // by 1024 preserves them, and unscaling recovers the magnitude.
+        // all below half of the smallest subnormal (2^-25 ~ 2.98e-8)
+        let grads = [1e-8f32, 2.5e-8, -2e-8];
+        let mut plain = grads;
+        let (zeroed, _) = simulate_f16_pass(&mut plain);
+        assert_eq!(zeroed, 3, "unscaled tiny grads must vanish");
+
+        let scale = 65536.0f32;
+        let mut scaled: Vec<f32> = grads.iter().map(|g| g * scale).collect();
+        let (zeroed, overflowed) = simulate_f16_pass(&mut scaled);
+        assert_eq!((zeroed, overflowed), (0, 0));
+        for (orig, s) in grads.iter().zip(&scaled) {
+            let recovered = s / scale;
+            assert!((recovered - orig).abs() / orig.abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn monotonic_on_samples() {
+        // f16 conversion preserves (non-strict) ordering.
+        let mut prev = f32::NEG_INFINITY;
+        let mut x = -70000.0f32;
+        while x < 70000.0 {
+            let h = F16::from_f32(x).to_f32();
+            assert!(h >= prev, "x={x} h={h} prev={prev}");
+            prev = h;
+            x += 13.7;
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_ulp() {
+        // For normal-range values, |x - f16(x)| <= 2^-11 * |x| (half ULP).
+        let mut x = 0.001f32;
+        while x < 60000.0 {
+            let h = F16::from_f32(x).to_f32();
+            assert!((h - x).abs() <= x * 2.0f32.powi(-11) + f32::EPSILON,
+                    "x={x} h={h}");
+            x *= 1.37;
+        }
+    }
+}

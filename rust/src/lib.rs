@@ -1,0 +1,49 @@
+//! # bertdist
+//!
+//! Cost-efficient multi-node BERT pretraining — a reproduction of
+//! *"Multi-node BERT-pretraining: Cost-efficient Approach"*
+//! (Lin, Li, Pekhimenko, 2020) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is the **Layer-3 coordinator**: it owns data sharding
+//! (paper §4.1), the AMP loss-scaling state machine (§4.2), the
+//! data-parallel trainer with ring allreduce, communication/computation
+//! overlap and gradient accumulation (§4.4), plus the discrete-event
+//! cluster simulator that regenerates every table and figure of the
+//! paper's evaluation (§5).  Model math lives in AOT-compiled XLA
+//! artifacts produced once by `python/compile` (Layers 1–2); Python is
+//! never on the training path.
+//!
+//! Module map (see DESIGN.md §5 for the paper-section cross-reference):
+//!
+//! * substrates: [`util`], [`testkit`], [`half`], [`cliopt`], [`config`],
+//!   [`jsonlite`]
+//! * cluster model: [`topology`], [`netsim`], [`collectives`]
+//! * data path: [`shard`], [`data`]
+//! * numerics: [`precision`], [`grad`], [`optimizer`], [`model`]
+//! * execution: [`runtime`], [`trainer`], [`metrics`], [`checkpoint`]
+//! * evaluation: [`simulator`], [`costmodel`]
+//! * wiring: [`coordinator`]
+
+pub mod checkpoint;
+pub mod cliopt;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod finetune;
+pub mod grad;
+pub mod half;
+pub mod metrics;
+pub mod model;
+pub mod optimizer;
+pub mod precision;
+pub mod runtime;
+pub mod jsonlite;
+pub mod netsim;
+pub mod shard;
+pub mod simulator;
+pub mod testkit;
+pub mod topology;
+pub mod trainer;
+pub mod util;

@@ -1,0 +1,16 @@
+//! `bertdist` CLI — the leader entrypoint.
+//!
+//! Subcommands (wired in [`bertdist::coordinator`]):
+//!   train           data-parallel pretraining on the PJRT-CPU substrate
+//!   shard-data      build `bshard` files from a corpus (paper §4.1)
+//!   simulate        discrete-event cluster simulation (figs. 2/3/5/6)
+//!   scaling         weak-scaling sweeps (figs. 3 and 6)
+//!   profile-grads   gradient memory profile (fig. 4)
+//!   cost            acquisition / cloud cost tables (tables 7–8)
+//!   amp-demo        AMP loss-scaling walkthrough (§4.2)
+//!   info            artifact + manifest inspection
+
+fn main() {
+    let code = bertdist::coordinator::cli_main();
+    std::process::exit(code);
+}

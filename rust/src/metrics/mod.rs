@@ -1,0 +1,289 @@
+//! Metrics: counters, tokens/s throughput meter, loss-curve recorder, and
+//! a chrome-trace timeline exporter (load `chrome://tracing` /
+//! ui.perfetto.dev on the emitted JSON to see the Figure-2/5 spans).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use crate::jsonlite::Json;
+
+/// Throughput meter over a sliding window of (time, tokens) samples.
+#[derive(Debug)]
+pub struct ThroughputMeter {
+    start: Instant,
+    total_tokens: u64,
+    window: Vec<(f64, u64)>,
+    window_cap: usize,
+}
+
+impl Default for ThroughputMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputMeter {
+    pub fn new() -> Self {
+        Self {
+            start: Instant::now(),
+            total_tokens: 0,
+            window: Vec::new(),
+            window_cap: 64,
+        }
+    }
+
+    /// Record `tokens` processed now.
+    pub fn add(&mut self, tokens: u64) {
+        self.total_tokens += tokens;
+        let t = self.start.elapsed().as_secs_f64();
+        self.window.push((t, tokens));
+        if self.window.len() > self.window_cap {
+            self.window.remove(0);
+        }
+    }
+
+    /// Lifetime average tokens/s.
+    pub fn average(&self) -> f64 {
+        let dt = self.start.elapsed().as_secs_f64();
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.total_tokens as f64 / dt
+        }
+    }
+
+    /// Tokens/s over the recent window.
+    pub fn recent(&self) -> f64 {
+        if self.window.len() < 2 {
+            return self.average();
+        }
+        let t0 = self.window.first().unwrap().0;
+        let t1 = self.window.last().unwrap().0;
+        let toks: u64 = self.window.iter().skip(1).map(|(_, n)| n).sum();
+        if t1 <= t0 {
+            self.average()
+        } else {
+            toks as f64 / (t1 - t0)
+        }
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.total_tokens
+    }
+}
+
+/// Loss-curve recorder: (step, loss) samples + CSV/summary export —
+/// the data behind Figures 7/8.
+#[derive(Debug, Default, Clone)]
+pub struct LossCurve {
+    pub points: Vec<(usize, f64)>,
+}
+
+impl LossCurve {
+    pub fn push(&mut self, step: usize, loss: f64) {
+        self.points.push((step, loss));
+    }
+
+    /// Mean loss over the last `n` points.
+    pub fn tail_mean(&self, n: usize) -> f64 {
+        if self.points.is_empty() {
+            return f64::NAN;
+        }
+        let tail = &self.points[self.points.len().saturating_sub(n)..];
+        tail.iter().map(|(_, l)| l).sum::<f64>() / tail.len() as f64
+    }
+
+    /// Simple monotonic-trend check: mean of first k vs last k.
+    pub fn improved(&self, k: usize) -> bool {
+        if self.points.len() < 2 * k {
+            return false;
+        }
+        let head: f64 = self.points[..k].iter().map(|(_, l)| l).sum::<f64>()
+            / k as f64;
+        let tail = self.tail_mean(k);
+        tail < head
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,loss\n");
+        for (step, loss) in &self.points {
+            let _ = writeln!(s, "{step},{loss}");
+        }
+        s
+    }
+
+    /// Points as (x, y) f64 pairs for the ascii plotter.
+    pub fn xy(&self) -> Vec<(f64, f64)> {
+        self.points.iter().map(|&(s, l)| (s as f64, l)).collect()
+    }
+}
+
+/// One span in a trace timeline (chrome trace "X" event).
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub name: String,
+    /// Track id, e.g. the GPU rank or "net".
+    pub track: String,
+    /// Seconds.
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Timeline of spans; exports chrome trace JSON and an ASCII gantt —
+/// the Figure-2/5 artifact.
+#[derive(Debug, Default, Clone)]
+pub struct Timeline {
+    pub spans: Vec<Span>,
+}
+
+impl Timeline {
+    pub fn add(&mut self, track: &str, name: &str, start: f64, end: f64) {
+        debug_assert!(end >= start, "{name}: end {end} < start {start}");
+        self.spans.push(Span {
+            name: name.to_string(),
+            track: track.to_string(),
+            start,
+            end,
+        });
+    }
+
+    /// Latest end time.
+    pub fn horizon(&self) -> f64 {
+        self.spans.iter().map(|s| s.end).fold(0.0, f64::max)
+    }
+
+    /// Busy time per (track, span-name prefix).
+    pub fn busy(&self, track: &str, prefix: &str) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.track == track && s.name.starts_with(prefix))
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    /// Chrome trace JSON ("traceEvents" array of X events, µs units).
+    pub fn to_chrome_trace(&self) -> String {
+        let events: Vec<Json> = self
+            .spans
+            .iter()
+            .map(|s| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(s.name.clone()));
+                m.insert("ph".to_string(), Json::Str("X".to_string()));
+                m.insert("ts".to_string(), Json::Num(s.start * 1e6));
+                m.insert("dur".to_string(),
+                         Json::Num((s.end - s.start) * 1e6));
+                m.insert("pid".to_string(), Json::Num(1.0));
+                m.insert("tid".to_string(), Json::Str(s.track.clone()));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("traceEvents".to_string(), Json::Arr(events));
+        Json::Obj(root).to_string()
+    }
+
+    /// ASCII gantt chart over `width` columns (the Figure-2/5 rendering).
+    pub fn ascii_gantt(&self, width: usize) -> String {
+        let horizon = self.horizon().max(1e-12);
+        let mut tracks: Vec<String> = self
+            .spans
+            .iter()
+            .map(|s| s.track.clone())
+            .collect();
+        tracks.sort();
+        tracks.dedup();
+        let lw = tracks.iter().map(|t| t.len()).max().unwrap_or(0);
+        let mut out = String::new();
+        for t in &tracks {
+            let mut row = vec![' '; width];
+            for s in self.spans.iter().filter(|s| &s.track == t) {
+                let c0 = ((s.start / horizon) * width as f64) as usize;
+                let c1 = (((s.end / horizon) * width as f64).ceil() as usize)
+                    .min(width);
+                let ch = s.name.chars().next().unwrap_or('?');
+                for c in row.iter_mut().take(c1).skip(c0.min(width)) {
+                    *c = ch;
+                }
+            }
+            let _ = writeln!(out, "{:<lw$} |{}|", t,
+                             row.iter().collect::<String>());
+        }
+        let _ = writeln!(out, "{:<lw$}  0{}{:.4}s", "",
+                         " ".repeat(width.saturating_sub(8)), horizon);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_accumulates() {
+        let mut m = ThroughputMeter::new();
+        m.add(1000);
+        m.add(1000);
+        assert_eq!(m.total_tokens(), 2000);
+        assert!(m.average() > 0.0);
+        assert!(m.recent() >= 0.0);
+    }
+
+    #[test]
+    fn loss_curve_trend() {
+        let mut c = LossCurve::default();
+        for i in 0..20 {
+            c.push(i, 10.0 - i as f64 * 0.3);
+        }
+        assert!(c.improved(5));
+        assert!(c.tail_mean(5) < 6.0);
+        let csv = c.to_csv();
+        assert!(csv.starts_with("step,loss\n0,10\n"));
+        assert_eq!(c.xy().len(), 20);
+    }
+
+    #[test]
+    fn flat_curve_not_improved() {
+        let mut c = LossCurve::default();
+        for i in 0..10 {
+            c.push(i, 5.0);
+        }
+        assert!(!c.improved(3));
+    }
+
+    #[test]
+    fn timeline_accounting() {
+        let mut t = Timeline::default();
+        t.add("gpu0", "fwd", 0.0, 1.0);
+        t.add("gpu0", "bwd", 1.0, 3.0);
+        t.add("net", "allreduce", 1.5, 4.0);
+        assert_eq!(t.horizon(), 4.0);
+        assert_eq!(t.busy("gpu0", "fwd"), 1.0);
+        assert_eq!(t.busy("gpu0", ""), 3.0);
+        assert_eq!(t.busy("net", "allreduce"), 2.5);
+    }
+
+    #[test]
+    fn chrome_trace_parses_as_json() {
+        let mut t = Timeline::default();
+        t.add("gpu0", "fwd", 0.0, 0.5);
+        let j = Json::parse(&t.to_chrome_trace()).unwrap();
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(events[0].get("dur").unwrap().as_f64(), Some(0.5e6));
+    }
+
+    #[test]
+    fn gantt_renders_tracks() {
+        let mut t = Timeline::default();
+        t.add("gpu0", "fwd", 0.0, 1.0);
+        t.add("net", "allreduce", 1.0, 2.0);
+        let g = t.ascii_gantt(40);
+        assert!(g.contains("gpu0"));
+        assert!(g.contains("net"));
+        assert!(g.contains('f'));
+        assert!(g.contains('a'));
+    }
+}

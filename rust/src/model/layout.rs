@@ -1,0 +1,284 @@
+//! Flat parameter layout + the Figure-4 gradient memory profile.
+//!
+//! The paper's Figure 4 groups gradient memory by layer class to argue
+//! that BERT's gradients are dense (dominated by attention /
+//! intermediate / output matmul weights), making sparsification
+//! unattractive.  [`GradientProfile`] reproduces that exact breakdown
+//! from the layout.
+
+use crate::jsonlite::Json;
+
+/// One tensor in the flat parameter vector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl LayoutEntry {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.len() * 4
+    }
+}
+
+/// The ordered flat layout (the manifest contract).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamLayout {
+    entries: Vec<LayoutEntry>,
+    total: usize,
+}
+
+impl ParamLayout {
+    pub fn from_shapes(shapes: &[(String, Vec<usize>)]) -> ParamLayout {
+        let mut entries = Vec::with_capacity(shapes.len());
+        let mut off = 0usize;
+        for (name, shape) in shapes {
+            let e = LayoutEntry {
+                name: name.clone(),
+                offset: off,
+                shape: shape.clone(),
+            };
+            off += e.len();
+            entries.push(e);
+        }
+        ParamLayout { entries, total: off }
+    }
+
+    /// Parse from the manifest's `layout` array.
+    pub fn from_manifest(layout: &Json) -> anyhow::Result<ParamLayout> {
+        let arr = layout.as_arr()
+            .ok_or_else(|| anyhow::anyhow!("layout is not an array"))?;
+        let mut shapes = Vec::with_capacity(arr.len());
+        for e in arr {
+            let name = e.get("name").and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("layout entry missing name"))?;
+            let shape: Vec<usize> = e
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("layout entry missing shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            shapes.push((name.to_string(), shape));
+        }
+        let built = ParamLayout::from_shapes(&shapes);
+        // verify the manifest's offsets agree (defense against drift)
+        for (e, m) in built.entries.iter().zip(arr) {
+            let off = m.get("offset").and_then(Json::as_usize).unwrap_or(0);
+            anyhow::ensure!(
+                e.offset == off,
+                "layout drift at {}: built offset {} != manifest {}",
+                e.name, e.offset, off
+            );
+        }
+        Ok(built)
+    }
+
+    pub fn entries(&self) -> &[LayoutEntry] {
+        &self.entries
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.total
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.total * 4
+    }
+
+    pub fn find(&self, name: &str) -> Option<&LayoutEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// The Figure-4 gradient memory profile.
+    pub fn gradient_profile(&self) -> GradientProfile {
+        let mut p = GradientProfile::default();
+        for e in &self.entries {
+            let group = LayerGroup::classify(&e.name);
+            p.add(group, e.bytes());
+        }
+        p
+    }
+}
+
+/// Figure-4 layer classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerGroup {
+    Embedding,
+    Attention,
+    Intermediate,
+    Output,
+    LayerNorm,
+    Pooler,
+    Classifier,
+}
+
+impl LayerGroup {
+    pub const ALL: [LayerGroup; 7] = [
+        LayerGroup::Embedding,
+        LayerGroup::Attention,
+        LayerGroup::Intermediate,
+        LayerGroup::Output,
+        LayerGroup::LayerNorm,
+        LayerGroup::Pooler,
+        LayerGroup::Classifier,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LayerGroup::Embedding => "embedding",
+            LayerGroup::Attention => "attention",
+            LayerGroup::Intermediate => "intermediate",
+            LayerGroup::Output => "output",
+            LayerGroup::LayerNorm => "layernorm",
+            LayerGroup::Pooler => "pooler",
+            LayerGroup::Classifier => "classifier",
+        }
+    }
+
+    /// Classify a parameter name into its Figure-4 group.
+    pub fn classify(name: &str) -> LayerGroup {
+        if name.contains("layernorm") {
+            LayerGroup::LayerNorm
+        } else if name.starts_with("embeddings.") {
+            LayerGroup::Embedding
+        } else if name.contains(".attention.") {
+            LayerGroup::Attention
+        } else if name.contains(".intermediate.") {
+            LayerGroup::Intermediate
+        } else if name.contains(".output.") {
+            LayerGroup::Output
+        } else if name.contains("pooler") {
+            LayerGroup::Pooler
+        } else {
+            LayerGroup::Classifier
+        }
+    }
+}
+
+/// Bytes of gradient memory per layer group (Figure 4's bars).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GradientProfile {
+    pub bytes: std::collections::BTreeMap<&'static str, usize>,
+}
+
+impl GradientProfile {
+    fn add(&mut self, group: LayerGroup, bytes: usize) {
+        *self.bytes.entry(group.name()).or_insert(0) += bytes;
+    }
+
+    pub fn total(&self) -> usize {
+        self.bytes.values().sum()
+    }
+
+    /// Fraction of gradient bytes in the dense matmul groups — the
+    /// paper's argument that sparsification won't help (§4.4).
+    pub fn dense_fraction(&self) -> f64 {
+        let dense: usize = ["attention", "intermediate", "output"]
+            .iter()
+            .filter_map(|g| self.bytes.get(g))
+            .sum();
+        dense as f64 / self.total().max(1) as f64
+    }
+
+    /// Rows for the Figure-4 bar chart, largest first.
+    pub fn sorted_rows(&self) -> Vec<(String, f64)> {
+        let mut rows: Vec<(String, f64)> = self
+            .bytes
+            .iter()
+            .map(|(k, v)| (k.to_string(), *v as f64))
+            .collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::BertConfig;
+
+    #[test]
+    fn classification_rules() {
+        assert_eq!(LayerGroup::classify("embeddings.word_embeddings"),
+                   LayerGroup::Embedding);
+        assert_eq!(LayerGroup::classify("encoder.layer.3.attention.query.weight"),
+                   LayerGroup::Attention);
+        assert_eq!(LayerGroup::classify("encoder.layer.0.intermediate.weight"),
+                   LayerGroup::Intermediate);
+        assert_eq!(LayerGroup::classify("encoder.layer.0.output.weight"),
+                   LayerGroup::Output);
+        assert_eq!(LayerGroup::classify("encoder.layer.0.output.layernorm.gamma"),
+                   LayerGroup::LayerNorm);
+        assert_eq!(LayerGroup::classify("cls.pooler.weight"),
+                   LayerGroup::Pooler);
+        assert_eq!(LayerGroup::classify("cls.seq_relationship.weight"),
+                   LayerGroup::Classifier);
+    }
+
+    #[test]
+    fn bert_large_profile_matches_figure4_shape() {
+        // Figure 4's claim: the majority of gradient bytes are in the
+        // dense attention/intermediate/output matmuls.
+        let cfg = BertConfig::preset("bert-large").unwrap();
+        let profile = cfg.param_layout().gradient_profile();
+        assert!(profile.dense_fraction() > 0.7,
+                "dense fraction {}", profile.dense_fraction());
+        // total = 340M params * 4B = 1.36 GB of gradients
+        let gb = profile.total() as f64 / 1e9;
+        assert!((gb - 1.345).abs() < 0.05, "{gb} GB");
+        // attention is the largest single group for BERT-large
+        let rows = profile.sorted_rows();
+        assert_eq!(rows[0].0, "attention");
+    }
+
+    #[test]
+    fn profile_total_matches_layout() {
+        let cfg = BertConfig::preset("bert-mini").unwrap();
+        let layout = cfg.param_layout();
+        assert_eq!(layout.gradient_profile().total(), layout.total_bytes());
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let cfg = BertConfig::preset("bert-micro").unwrap();
+        let layout = cfg.param_layout();
+        // build a manifest-style JSON and parse it back
+        let arr: Vec<Json> = layout
+            .entries()
+            .iter()
+            .map(|e| {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(e.name.clone()));
+                m.insert("offset".to_string(), Json::Num(e.offset as f64));
+                m.insert(
+                    "shape".to_string(),
+                    Json::Arr(e.shape.iter().map(|&d| Json::Num(d as f64))
+                        .collect()),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        let parsed = ParamLayout::from_manifest(&Json::Arr(arr)).unwrap();
+        assert_eq!(parsed, layout);
+    }
+
+    #[test]
+    fn find_by_name() {
+        let cfg = BertConfig::preset("bert-micro").unwrap();
+        let layout = cfg.param_layout();
+        let e = layout.find("embeddings.word_embeddings").unwrap();
+        assert_eq!(e.offset, 0);
+        assert_eq!(e.shape, vec![512, 64]);
+        assert!(layout.find("nope").is_none());
+    }
+}

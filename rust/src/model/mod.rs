@@ -1,0 +1,154 @@
+//! Host-side model metadata: the flat parameter layout (the contract
+//! with `python/compile/model.py::param_layout`), BERT config presets,
+//! parameter counting, and the Figure-4 layer-group classification.
+
+pub mod layout;
+
+pub use layout::{GradientProfile, LayerGroup, ParamLayout};
+
+/// BERT architecture hyper-parameters, mirroring the Python presets.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BertConfig {
+    pub vocab_size: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub intermediate: usize,
+    pub max_seq: usize,
+    pub type_vocab: usize,
+}
+
+impl BertConfig {
+    /// Named presets — MUST stay in sync with python/compile/model.py.
+    pub fn preset(name: &str) -> Option<BertConfig> {
+        let c = match name {
+            "bert-micro" => BertConfig {
+                vocab_size: 512, hidden: 64, layers: 2, heads: 2,
+                intermediate: 256, max_seq: 64, type_vocab: 2,
+            },
+            "bert-tiny" => BertConfig {
+                vocab_size: 8192, hidden: 128, layers: 2, heads: 2,
+                intermediate: 512, max_seq: 512, type_vocab: 2,
+            },
+            "bert-mini" => BertConfig {
+                vocab_size: 8192, hidden: 256, layers: 4, heads: 4,
+                intermediate: 1024, max_seq: 512, type_vocab: 2,
+            },
+            "bert-medium" => BertConfig {
+                vocab_size: 8192, hidden: 512, layers: 8, heads: 8,
+                intermediate: 2048, max_seq: 512, type_vocab: 2,
+            },
+            "bert-base" => BertConfig {
+                vocab_size: 30522, hidden: 768, layers: 12, heads: 12,
+                intermediate: 3072, max_seq: 512, type_vocab: 2,
+            },
+            "bert-large" => BertConfig {
+                vocab_size: 30522, hidden: 1024, layers: 24, heads: 16,
+                intermediate: 4096, max_seq: 512, type_vocab: 2,
+            },
+            _ => return None,
+        };
+        Some(c)
+    }
+
+    /// Build the flat parameter layout — same order as the Python side.
+    pub fn param_layout(&self) -> ParamLayout {
+        let (h, i, v) = (self.hidden, self.intermediate, self.vocab_size);
+        let mut shapes: Vec<(String, Vec<usize>)> = vec![
+            ("embeddings.word_embeddings".into(), vec![v, h]),
+            ("embeddings.position_embeddings".into(), vec![self.max_seq, h]),
+            ("embeddings.token_type_embeddings".into(),
+             vec![self.type_vocab, h]),
+            ("embeddings.layernorm.gamma".into(), vec![h]),
+            ("embeddings.layernorm.beta".into(), vec![h]),
+        ];
+        for l in 0..self.layers {
+            let p = format!("encoder.layer.{l}");
+            for (suffix, shape) in [
+                ("attention.query.weight", vec![h, h]),
+                ("attention.query.bias", vec![h]),
+                ("attention.key.weight", vec![h, h]),
+                ("attention.key.bias", vec![h]),
+                ("attention.value.weight", vec![h, h]),
+                ("attention.value.bias", vec![h]),
+                ("attention.output.weight", vec![h, h]),
+                ("attention.output.bias", vec![h]),
+                ("attention.layernorm.gamma", vec![h]),
+                ("attention.layernorm.beta", vec![h]),
+                ("intermediate.weight", vec![h, i]),
+                ("intermediate.bias", vec![i]),
+                ("output.weight", vec![i, h]),
+                ("output.bias", vec![h]),
+                ("output.layernorm.gamma", vec![h]),
+                ("output.layernorm.beta", vec![h]),
+            ] {
+                shapes.push((format!("{p}.{suffix}"), shape));
+            }
+        }
+        shapes.extend([
+            ("cls.predictions.transform.weight".to_string(), vec![h, h]),
+            ("cls.predictions.transform.bias".to_string(), vec![h]),
+            ("cls.predictions.layernorm.gamma".to_string(), vec![h]),
+            ("cls.predictions.layernorm.beta".to_string(), vec![h]),
+            ("cls.predictions.bias".to_string(), vec![v]),
+            ("cls.pooler.weight".to_string(), vec![h, h]),
+            ("cls.pooler.bias".to_string(), vec![h]),
+            ("cls.seq_relationship.weight".to_string(), vec![h, 2]),
+            ("cls.seq_relationship.bias".to_string(), vec![2]),
+        ]);
+        ParamLayout::from_shapes(&shapes)
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.param_layout().total_len()
+    }
+
+    /// FLOPs for one fwd+bwd pass per token (the standard 6*N
+    /// approximation for transformer training).
+    pub fn train_flops_per_token(&self) -> f64 {
+        6.0 * self.param_count() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_counts_match_python_side() {
+        // Values verified against python/compile/model.py param_count.
+        assert_eq!(BertConfig::preset("bert-micro").unwrap().param_count(),
+                   146_178);
+        assert_eq!(BertConfig::preset("bert-base").unwrap().param_count(),
+                   110_106_428);
+        assert_eq!(BertConfig::preset("bert-large").unwrap().param_count(),
+                   336_226_108);
+    }
+
+    #[test]
+    fn published_model_sizes() {
+        // paper §1: 110M (base), 340M (large)
+        let base = BertConfig::preset("bert-base").unwrap().param_count();
+        let large = BertConfig::preset("bert-large").unwrap().param_count();
+        assert!((105_000_000..115_000_000).contains(&base));
+        assert!((330_000_000..345_000_000).contains(&large));
+    }
+
+    #[test]
+    fn unknown_preset_is_none() {
+        assert!(BertConfig::preset("bert-gigantic").is_none());
+    }
+
+    #[test]
+    fn layout_is_dense() {
+        let cfg = BertConfig::preset("bert-tiny").unwrap();
+        let layout = cfg.param_layout();
+        let mut off = 0;
+        for e in layout.entries() {
+            assert_eq!(e.offset, off, "{}", e.name);
+            off += e.len();
+        }
+        assert_eq!(off, cfg.param_count());
+    }
+}

@@ -1,0 +1,261 @@
+//! Host-side optimizers (paper §2.1: LAMB for large-batch BERT; Adam as
+//! the baseline it replaces).
+//!
+//! The hot training path applies updates through the AOT `apply_lamb`
+//! HLO (fused Pallas kernels); these Rust implementations serve (a) the
+//! pure-rust simulator mode, (b) golden cross-checks against the HLO in
+//! the integration tests, and (c) the learning-rate schedule.
+
+use crate::model::layout::ParamLayout;
+
+/// LAMB/AdamW hyper-parameters (NVIDIA BERT recipe defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct OptHyper {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub clip_norm: f32,
+}
+
+impl Default for OptHyper {
+    fn default() -> Self {
+        Self {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-6,
+            weight_decay: 0.01,
+            clip_norm: 1.0,
+        }
+    }
+}
+
+/// Optimizer state over the flat vector.
+#[derive(Debug)]
+pub struct OptState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: usize,
+}
+
+impl OptState {
+    pub fn new(n: usize) -> Self {
+        Self { m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+}
+
+/// Global-norm clip in place; returns the pre-clip norm.
+pub fn clip_by_global_norm(grads: &mut [f32], clip: f32) -> f32 {
+    let norm = l2_norm(grads);
+    if norm > clip && norm > 0.0 {
+        let s = clip / norm;
+        for g in grads.iter_mut() {
+            *g *= s;
+        }
+    }
+    norm
+}
+
+/// L2 norm of a slice.
+pub fn l2_norm(xs: &[f32]) -> f32 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// One LAMB step over the flat vector with PER-TENSOR trust ratios
+/// (the layout supplies tensor boundaries — LAMB's "layer-wise" unit).
+/// Matches `python/compile/kernels/fused_lamb.py` semantics.
+pub fn lamb_step(params: &mut [f32], grads: &mut [f32], state: &mut OptState,
+                 layout: &ParamLayout, lr: f32, h: &OptHyper) {
+    state.step += 1;
+    clip_by_global_norm(grads, h.clip_norm);
+    let c1 = 1.0 - h.beta1.powi(state.step as i32);
+    let c2 = 1.0 - h.beta2.powi(state.step as i32);
+    // §Perf iteration 2: bias correction as multiply-by-inverse (the two
+    // per-element divides were ~15% of the scalar pipeline).
+    let ic1 = 1.0 / c1;
+    let ic2 = 1.0 / c2;
+    // One scratch buffer reused across tensors (perf: §Perf iteration 1 —
+    // a fresh Vec per tensor cost ~8% of the step on bert-mini).
+    let max_len = layout.entries().iter().map(|e| e.len()).max()
+        .unwrap_or(0);
+    let mut update = vec![0.0f32; max_len];
+    for e in layout.entries() {
+        let r = e.offset..e.offset + e.len();
+        let (p, g) = (&mut params[r.clone()], &grads[r.clone()]);
+        let (m, v) = (&mut state.m[r.clone()], &mut state.v[r]);
+        let mut w_sq = 0.0f64;
+        let mut u_sq = 0.0f64;
+        // one fused pass: moments + update direction + norms
+        for i in 0..p.len() {
+            m[i] = h.beta1 * m[i] + (1.0 - h.beta1) * g[i];
+            v[i] = h.beta2 * v[i] + (1.0 - h.beta2) * g[i] * g[i];
+            let m_hat = m[i] * ic1;
+            let v_hat = v[i] * ic2;
+            let u = m_hat / (v_hat.sqrt() + h.eps) + h.weight_decay * p[i];
+            update[i] = u;
+            w_sq += (p[i] as f64) * (p[i] as f64);
+            u_sq += (u as f64) * (u as f64);
+        }
+        let w_norm = w_sq.sqrt();
+        let u_norm = u_sq.sqrt();
+        let trust = if w_norm > 0.0 && u_norm > 0.0 {
+            (w_norm / u_norm) as f32
+        } else {
+            1.0
+        };
+        for i in 0..p.len() {
+            p[i] -= lr * trust * update[i];
+        }
+    }
+}
+
+/// One AdamW step over the flat vector.
+pub fn adam_step(params: &mut [f32], grads: &mut [f32], state: &mut OptState,
+                 lr: f32, h: &OptHyper) {
+    state.step += 1;
+    clip_by_global_norm(grads, h.clip_norm);
+    let c1 = 1.0 - h.beta1.powi(state.step as i32);
+    let c2 = 1.0 - h.beta2.powi(state.step as i32);
+    for i in 0..params.len() {
+        let g = grads[i];
+        state.m[i] = h.beta1 * state.m[i] + (1.0 - h.beta1) * g;
+        state.v[i] = h.beta2 * state.v[i] + (1.0 - h.beta2) * g * g;
+        let m_hat = state.m[i] / c1;
+        let v_hat = state.v[i] / c2;
+        params[i] -=
+            lr * (m_hat / (v_hat.sqrt() + h.eps)
+                  + h.weight_decay * params[i]);
+    }
+}
+
+/// Learning-rate schedule: linear warmup then inverse-sqrt-free linear
+/// decay to zero at `total_steps` (the NVIDIA BERT pretraining schedule).
+pub fn lr_schedule(base_lr: f64, step: usize, warmup: usize,
+                   total_steps: usize) -> f64 {
+    let s = step as f64;
+    if step < warmup {
+        return base_lr * s / warmup.max(1) as f64;
+    }
+    if total_steps <= warmup {
+        return base_lr;
+    }
+    let progress = (s - warmup as f64)
+        / (total_steps - warmup).max(1) as f64;
+    base_lr * (1.0 - progress).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layout::ParamLayout;
+    use crate::testkit;
+    use crate::util::Pcg64;
+
+    fn layout2() -> ParamLayout {
+        ParamLayout::from_shapes(&[
+            ("a".into(), vec![8]),
+            ("b".into(), vec![4, 4]),
+        ])
+    }
+
+    #[test]
+    fn clip_leaves_small_grads_alone() {
+        let mut g = vec![0.1, -0.2, 0.05];
+        let norm = clip_by_global_norm(&mut g, 1.0);
+        assert!(norm < 1.0);
+        assert_eq!(g, vec![0.1, -0.2, 0.05]);
+    }
+
+    #[test]
+    fn clip_rescales_large_grads() {
+        let mut g = vec![3.0, 4.0]; // norm 5
+        clip_by_global_norm(&mut g, 1.0);
+        let n = l2_norm(&g);
+        assert!((n - 1.0).abs() < 1e-6);
+        assert!((g[0] / g[1] - 0.75).abs() < 1e-6); // direction preserved
+    }
+
+    #[test]
+    fn lamb_moves_params_and_adapts_per_tensor() {
+        let layout = layout2();
+        let mut p: Vec<f32> = (0..24).map(|i| 0.1 * (i as f32 + 1.0)).collect();
+        let before = p.clone();
+        let mut g = vec![0.01f32; 24];
+        let mut st = OptState::new(24);
+        lamb_step(&mut p, &mut g, &mut st, &layout, 0.01, &OptHyper::default());
+        assert_ne!(p, before);
+        assert!(p.iter().all(|x| x.is_finite()));
+        assert_eq!(st.step, 1);
+    }
+
+    #[test]
+    fn lamb_trust_ratio_scales_with_weight_norm() {
+        // Same grads, 2x weights => larger absolute step (LAMB property).
+        let layout = ParamLayout::from_shapes(&[("w".into(), vec![16])]);
+        let h = OptHyper::default();
+        let run = |scale: f32| {
+            let mut p = vec![scale; 16];
+            let before = p.clone();
+            let mut g = vec![0.5f32; 16];
+            let mut st = OptState::new(16);
+            lamb_step(&mut p, &mut g, &mut st, &layout, 0.01, &h);
+            p.iter().zip(&before).map(|(a, b)| (a - b).abs()).sum::<f32>()
+        };
+        assert!(run(2.0) > 1.5 * run(1.0));
+    }
+
+    #[test]
+    fn adam_matches_closed_form_first_step() {
+        // With m=v=0, first Adam step is -lr * g/(|g| + eps') - lr*wd*p
+        // after bias correction cancels.
+        let h = OptHyper { weight_decay: 0.0, clip_norm: 1e9,
+                           ..Default::default() };
+        let mut p = vec![1.0f32];
+        let mut g = vec![0.5f32];
+        let mut st = OptState::new(1);
+        adam_step(&mut p, &mut g, &mut st, 0.1, &h);
+        // m_hat = g, v_hat = g^2 -> update = g/|g| = 1 -> p = 1 - 0.1
+        assert!((p[0] - 0.9).abs() < 1e-3, "{}", p[0]);
+    }
+
+    #[test]
+    fn lr_schedule_shape() {
+        let base = 1e-4;
+        assert_eq!(lr_schedule(base, 0, 10, 100), 0.0);
+        assert!((lr_schedule(base, 5, 10, 100) - base * 0.5).abs() < 1e-12);
+        assert!((lr_schedule(base, 10, 10, 100) - base).abs() < 1e-12);
+        assert!(lr_schedule(base, 55, 10, 100) < base);
+        assert_eq!(lr_schedule(base, 100, 10, 100), 0.0);
+        // never negative
+        assert_eq!(lr_schedule(base, 1000, 10, 100), 0.0);
+    }
+
+    #[test]
+    fn prop_optimizers_keep_params_finite() {
+        testkit::check(
+            "opt-finite", 0x0F7, 24,
+            |r: &mut Pcg64| {
+                let p = testkit::gen_f32_vec(r, 24, 24);
+                let g = testkit::gen_f32_vec(r, 24, 24);
+                (p, g, r.chance(0.5))
+            },
+            |(p0, g0, use_lamb)| {
+                let layout = layout2();
+                let mut p = p0.clone();
+                let mut st = OptState::new(24);
+                let h = OptHyper::default();
+                for step in 0..5 {
+                    let mut g: Vec<f32> = g0.iter()
+                        .map(|x| x * (step as f32 + 1.0) * 0.1)
+                        .collect();
+                    if *use_lamb {
+                        lamb_step(&mut p, &mut g, &mut st, &layout, 0.01, &h);
+                    } else {
+                        adam_step(&mut p, &mut g, &mut st, 0.01, &h);
+                    }
+                }
+                p.iter().all(|x| x.is_finite())
+            },
+        );
+    }
+}

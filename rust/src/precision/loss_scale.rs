@@ -1,0 +1,194 @@
+//! Dynamic loss scaling (paper §2.3 "Loss scaling", §4.2).
+//!
+//! The Apex `DynamicLossScaler` policy: multiply the loss by `scale`
+//! before backward; after unscaling, if any gradient is non-finite the
+//! step is SKIPPED and the scale halved; after `growth_interval`
+//! consecutive good steps the scale doubles (up to a cap).  This keeps
+//! the scale riding just under the overflow threshold, maximizing how
+//! much of FP16's positive exponent range the gradients use.
+
+/// Verdict for one training step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepVerdict {
+    /// Gradients finite — apply the optimizer step.
+    Apply,
+    /// Overflow detected — skip the step, scale was reduced.
+    Skip,
+}
+
+/// Dynamic loss-scaler state machine.
+#[derive(Debug, Clone)]
+pub struct DynamicLossScaler {
+    scale: f64,
+    growth_factor: f64,
+    backoff_factor: f64,
+    growth_interval: usize,
+    good_steps: usize,
+    max_scale: f64,
+    min_scale: f64,
+    /// Counters for reporting.
+    pub total_steps: usize,
+    pub skipped_steps: usize,
+    pub growths: usize,
+    pub backoffs: usize,
+}
+
+impl Default for DynamicLossScaler {
+    fn default() -> Self {
+        Self::new(65536.0)
+    }
+}
+
+impl DynamicLossScaler {
+    /// Apex defaults: init 2^16, x2 growth every 2000 good steps, /2 on
+    /// overflow.
+    pub fn new(init_scale: f64) -> Self {
+        assert!(init_scale >= 1.0);
+        Self {
+            scale: init_scale,
+            growth_factor: 2.0,
+            backoff_factor: 0.5,
+            growth_interval: 2000,
+            good_steps: 0,
+            max_scale: 2.0f64.powi(24),
+            min_scale: 1.0,
+            total_steps: 0,
+            skipped_steps: 0,
+            growths: 0,
+            backoffs: 0,
+        }
+    }
+
+    /// Builder: growth interval (tests use small values).
+    pub fn with_growth_interval(mut self, n: usize) -> Self {
+        self.growth_interval = n.max(1);
+        self
+    }
+
+    /// Current scale — feed this to the AOT train step's `loss_scale`
+    /// input.
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Record a step's overflow status; returns whether to apply or skip.
+    pub fn update(&mut self, saw_overflow: bool) -> StepVerdict {
+        self.total_steps += 1;
+        if saw_overflow {
+            self.skipped_steps += 1;
+            self.backoffs += 1;
+            self.good_steps = 0;
+            self.scale =
+                (self.scale * self.backoff_factor).max(self.min_scale);
+            StepVerdict::Skip
+        } else {
+            self.good_steps += 1;
+            if self.good_steps >= self.growth_interval {
+                self.good_steps = 0;
+                let next = self.scale * self.growth_factor;
+                if next <= self.max_scale {
+                    self.scale = next;
+                    self.growths += 1;
+                }
+            }
+            StepVerdict::Apply
+        }
+    }
+
+    /// Fraction of steps skipped so far.
+    pub fn skip_rate(&self) -> f64 {
+        if self.total_steps == 0 {
+            0.0
+        } else {
+            self.skipped_steps as f64 / self.total_steps as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn overflow_halves_and_skips() {
+        let mut s = DynamicLossScaler::new(1024.0);
+        assert_eq!(s.update(true), StepVerdict::Skip);
+        assert_eq!(s.scale(), 512.0);
+        assert_eq!(s.skipped_steps, 1);
+    }
+
+    #[test]
+    fn growth_after_interval() {
+        let mut s = DynamicLossScaler::new(1024.0).with_growth_interval(3);
+        for _ in 0..2 {
+            assert_eq!(s.update(false), StepVerdict::Apply);
+            assert_eq!(s.scale(), 1024.0);
+        }
+        s.update(false); // 3rd good step -> grow
+        assert_eq!(s.scale(), 2048.0);
+    }
+
+    #[test]
+    fn overflow_resets_growth_streak() {
+        let mut s = DynamicLossScaler::new(1024.0).with_growth_interval(3);
+        s.update(false);
+        s.update(false);
+        s.update(true); // streak broken, scale halved
+        assert_eq!(s.scale(), 512.0);
+        s.update(false);
+        s.update(false);
+        assert_eq!(s.scale(), 512.0); // only 2 good steps since overflow
+        s.update(false);
+        assert_eq!(s.scale(), 1024.0);
+    }
+
+    #[test]
+    fn scale_never_leaves_bounds() {
+        let mut s = DynamicLossScaler::new(2.0);
+        for _ in 0..100 {
+            s.update(true);
+        }
+        assert!(s.scale() >= 1.0);
+        let mut s = DynamicLossScaler::new(65536.0).with_growth_interval(1);
+        for _ in 0..100 {
+            s.update(false);
+        }
+        assert!(s.scale() <= 2.0f64.powi(24));
+    }
+
+    #[test]
+    fn prop_scale_positive_and_finite_under_random_history() {
+        testkit::check(
+            "scaler-invariant", 0x5CA1E, 64,
+            |r: &mut Pcg64| {
+                (0..200).map(|_| r.chance(0.1)).collect::<Vec<bool>>()
+            },
+            |history| {
+                let mut s = DynamicLossScaler::new(65536.0)
+                    .with_growth_interval(5);
+                for &ov in history {
+                    s.update(ov);
+                }
+                s.scale().is_finite() && s.scale() >= 1.0
+                    && s.scale() <= 2.0f64.powi(24)
+            },
+        );
+    }
+
+    #[test]
+    fn converges_under_threshold_model() {
+        // Model a hard overflow threshold: overflow iff scale > 2^13.
+        // The scaler must settle into oscillation just below it (within
+        // one growth factor), not diverge or collapse.
+        let mut s = DynamicLossScaler::new(65536.0).with_growth_interval(10);
+        for _ in 0..500 {
+            let ov = s.scale() > 8192.0;
+            s.update(ov);
+        }
+        assert!(s.scale() <= 8192.0);
+        assert!(s.scale() >= 2048.0, "collapsed to {}", s.scale());
+        assert!(s.skip_rate() < 0.2, "skip rate {}", s.skip_rate());
+    }
+}

@@ -1,0 +1,64 @@
+//! Automated Mixed Precision engine (paper §2.3, §4.2).
+//!
+//! Three cooperating pieces, exactly as in Apex/AMP:
+//!
+//! * [`safety`] — the numerical-safety categorization of graph operators
+//!   (safe / dangerous / neutral) and the graph-rewriting pass that
+//!   assigns a compute dtype to every op (the paper's example: `plus` is
+//!   safe, `power`/`log` are dangerous);
+//! * [`loss_scale`] — the dynamic loss-scaling state machine: grow the
+//!   scale on a streak of finite steps, back off on overflow, skip the
+//!   optimizer step when gradients blew up;
+//! * overflow detection over real gradient buffers via the from-scratch
+//!   [`crate::half`] f16 semantics.
+
+pub mod loss_scale;
+pub mod safety;
+
+pub use loss_scale::{DynamicLossScaler, StepVerdict};
+pub use safety::{classify, rewrite_graph, DtypeAssignment, OpKind, Safety};
+
+/// Scan a gradient buffer for non-finite values (overflow check after
+/// unscaling — cheap single pass, the paper's "check before update").
+pub fn has_nonfinite(grads: &[f32]) -> bool {
+    grads.iter().any(|g| !g.is_finite())
+}
+
+/// Fraction of gradient values that would flush to zero if cast to f16
+/// at the given loss scale — the §2.3 diagnostic the scaler exists to fix.
+pub fn f16_zero_fraction(grads: &[f32], scale: f32) -> f64 {
+    if grads.is_empty() {
+        return 0.0;
+    }
+    let zeroed = grads
+        .iter()
+        .filter(|&&g| {
+            g != 0.0
+                && matches!(crate::half::cast_fate(g * scale),
+                            crate::half::CastFate::Zero)
+        })
+        .count();
+    zeroed as f64 / grads.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nonfinite_detection() {
+        assert!(!has_nonfinite(&[1.0, -2.0, 0.0]));
+        assert!(has_nonfinite(&[1.0, f32::NAN]));
+        assert!(has_nonfinite(&[f32::INFINITY]));
+    }
+
+    #[test]
+    fn scaling_reduces_zero_fraction() {
+        let grads: Vec<f32> = (0..1000).map(|i| 1e-11 * (i as f32 + 1.0))
+            .collect();
+        let unscaled = f16_zero_fraction(&grads, 1.0);
+        let scaled = f16_zero_fraction(&grads, 65536.0);
+        assert!(unscaled > 0.9, "{unscaled}");
+        assert!(scaled < 0.1, "{scaled}");
+    }
+}

@@ -1,0 +1,219 @@
+//! Numerical-safety classification + graph rewriting (paper §4.2).
+//!
+//! "Typically in a computation graph, not all FP16 operators are
+//! numerically safe... a *plus* operator is marked as safe while a
+//! *power* or a *log* operator is considered numerically dangerous in
+//! half precision. Automated mixed precision handles the categorization
+//! of the numerical safety level through the rewriting of computation
+//! graph."  This module implements that pass over an op-list IR:
+//! allowlist ops run in f16, blocklist ops are pinned to f32, neutral
+//! ops inherit from their inputs (the TF grappler/AMP inference rule),
+//! and casts are inserted at dtype boundaries.
+
+/// Operator kinds found in the BERT training graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    MatMul,
+    Add,
+    Mul,
+    Sub,
+    Tanh,
+    Gelu,
+    Softmax,
+    Exp,
+    Log,
+    Pow,
+    Div,
+    Sqrt,
+    Rsqrt,
+    ReduceSum,
+    ReduceMean,
+    LayerNorm,
+    Gather,
+    Transpose,
+    Reshape,
+    Dropout,
+    CrossEntropy,
+}
+
+/// AMP safety class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Safety {
+    /// Allowlist: numerically safe AND profits from f16 (TensorCore/MXU).
+    Safe,
+    /// Blocklist: dangerous in f16 (wide dynamic range / cancellation).
+    Dangerous,
+    /// Infer from inputs (shape/layout ops, cheap elementwise).
+    Neutral,
+}
+
+/// The paper's categorization, extended to the full BERT op set.
+pub fn classify(op: OpKind) -> Safety {
+    use OpKind::*;
+    match op {
+        // allowlist: matmul-class ops are why AMP exists
+        MatMul => Safety::Safe,
+        // blocklist: exp/log/pow/softmax/norms/losses stay f32
+        Exp | Log | Pow | Softmax | LayerNorm | CrossEntropy | ReduceSum
+        | ReduceMean | Sqrt | Rsqrt | Div => Safety::Dangerous,
+        // neutral: follow the data
+        Add | Mul | Sub | Tanh | Gelu | Gather | Transpose | Reshape
+        | Dropout => Safety::Neutral,
+    }
+}
+
+/// One op in the linearized graph IR.
+#[derive(Debug, Clone)]
+pub struct GraphOp {
+    pub name: String,
+    pub kind: OpKind,
+    /// Indices of producer ops (empty = graph input, treated as f16-able
+    /// activations).
+    pub inputs: Vec<usize>,
+}
+
+/// Result of the rewrite: per-op compute dtype + inserted cast count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DtypeAssignment {
+    /// true = f16 compute, false = f32.
+    pub f16: Vec<bool>,
+    /// Number of cast nodes the rewrite inserted.
+    pub casts_inserted: usize,
+}
+
+impl DtypeAssignment {
+    pub fn count_f16(&self) -> usize {
+        self.f16.iter().filter(|&&x| x).count()
+    }
+}
+
+/// The AMP graph-rewriting pass: assign f16 to Safe ops, f32 to
+/// Dangerous ops, and propagate through Neutral ops (a neutral op runs
+/// in f16 iff ALL its inputs are f16 — the conservative grappler rule);
+/// count the casts needed at every f16/f32 edge.
+pub fn rewrite_graph(ops: &[GraphOp]) -> DtypeAssignment {
+    let n = ops.len();
+    let mut f16 = vec![false; n];
+    // forward pass in topological (index) order
+    for i in 0..n {
+        f16[i] = match classify(ops[i].kind) {
+            Safety::Safe => true,
+            Safety::Dangerous => false,
+            Safety::Neutral => {
+                // graph inputs count as f16-able
+                ops[i].inputs.iter().all(|&p| f16[p])
+                    && !ops[i].inputs.is_empty()
+                    || ops[i].inputs.is_empty()
+            }
+        };
+    }
+    // count boundary casts
+    let mut casts = 0usize;
+    for (i, op) in ops.iter().enumerate() {
+        for &p in &op.inputs {
+            if f16[p] != f16[i] {
+                casts += 1;
+            }
+        }
+    }
+    DtypeAssignment { f16, casts_inserted: casts }
+}
+
+/// Build the linearized op-list of one BERT encoder layer (forward),
+/// used by the amp-demo subcommand and the §4.2 tests.
+pub fn bert_layer_graph() -> Vec<GraphOp> {
+    use OpKind::*;
+    let mut ops: Vec<GraphOp> = Vec::new();
+    let mut add = |name: &str, kind, inputs: Vec<usize>| -> usize {
+        ops.push(GraphOp { name: name.into(), kind, inputs });
+        ops.len() - 1
+    };
+    let x = add("input", Reshape, vec![]);
+    let q = add("q_proj", MatMul, vec![x]);
+    let k = add("k_proj", MatMul, vec![x]);
+    let v = add("v_proj", MatMul, vec![x]);
+    let qk = add("qk_scores", MatMul, vec![q, k]);
+    let sm = add("attn_softmax", Softmax, vec![qk]);
+    let ctx = add("attn_context", MatMul, vec![sm, v]);
+    let proj = add("attn_out_proj", MatMul, vec![ctx]);
+    let res1 = add("residual1", Add, vec![x, proj]);
+    let ln1 = add("layernorm1", LayerNorm, vec![res1]);
+    let inter = add("intermediate", MatMul, vec![ln1]);
+    let gelu = add("gelu", Gelu, vec![inter]);
+    let out = add("output_proj", MatMul, vec![gelu]);
+    let res2 = add("residual2", Add, vec![ln1, out]);
+    let _ln2 = add("layernorm2", LayerNorm, vec![res2]);
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_examples_classified() {
+        // §4.2: plus is safe(neutral-follow), power and log are dangerous.
+        assert_eq!(classify(OpKind::Add), Safety::Neutral);
+        assert_eq!(classify(OpKind::Pow), Safety::Dangerous);
+        assert_eq!(classify(OpKind::Log), Safety::Dangerous);
+        assert_eq!(classify(OpKind::MatMul), Safety::Safe);
+    }
+
+    #[test]
+    fn bert_layer_assignment_structure() {
+        let g = bert_layer_graph();
+        let a = rewrite_graph(&g);
+        let by_name = |n: &str| {
+            let i = g.iter().position(|o| o.name == n).unwrap();
+            a.f16[i]
+        };
+        // all matmuls in f16 (the TensorCore work)
+        for n in ["q_proj", "k_proj", "v_proj", "qk_scores", "attn_context",
+                  "attn_out_proj", "intermediate", "output_proj"] {
+            assert!(by_name(n), "{n} should be f16");
+        }
+        // dangerous ops pinned to f32
+        assert!(!by_name("attn_softmax"));
+        assert!(!by_name("layernorm1"));
+        assert!(!by_name("layernorm2"));
+        // casts exist at the f16/f32 boundaries
+        assert!(a.casts_inserted > 0);
+    }
+
+    #[test]
+    fn neutral_follows_inputs() {
+        use OpKind::*;
+        let g = vec![
+            GraphOp { name: "a".into(), kind: MatMul, inputs: vec![] },
+            GraphOp { name: "b".into(), kind: Softmax, inputs: vec![0] },
+            GraphOp { name: "add_ff".into(), kind: Add, inputs: vec![0, 0] },
+            GraphOp { name: "add_fx".into(), kind: Add, inputs: vec![0, 1] },
+        ];
+        let a = rewrite_graph(&g);
+        assert!(a.f16[2], "f16+f16 neutral stays f16");
+        assert!(!a.f16[3], "f16+f32 neutral falls back to f32");
+    }
+
+    #[test]
+    fn majority_of_bert_layer_runs_f16() {
+        // The point of AMP: most of the layer's ops (and ~all FLOPs,
+        // which live in the matmuls) end up in f16.
+        let g = bert_layer_graph();
+        let a = rewrite_graph(&g);
+        assert!(a.count_f16() * 2 > g.len(), "{}/{}", a.count_f16(), g.len());
+    }
+
+    #[test]
+    fn cast_count_is_edge_consistent() {
+        let g = bert_layer_graph();
+        let a = rewrite_graph(&g);
+        let manual: usize = g
+            .iter()
+            .enumerate()
+            .map(|(i, op)| {
+                op.inputs.iter().filter(|&&p| a.f16[p] != a.f16[i]).count()
+            })
+            .sum();
+        assert_eq!(a.casts_inserted, manual);
+    }
+}

@@ -1,0 +1,363 @@
+//! PJRT execution engine: compile HLO-text artifacts once, then execute
+//! them from the training hot path with zero Python involvement.
+//!
+//! Adapted from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`.  The AOT
+//! side lowers with `return_tuple=True`, so every result is a 1-tuple
+//! whose element is the function's (possibly tuple) output.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{ArtifactInfo, Manifest, ModelInfo};
+use crate::data::Batch;
+
+/// Output of one train-step execution.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    pub loss: f32,
+    pub mlm_loss: f32,
+    pub nsp_loss: f32,
+    pub mlm_acc: f32,
+    pub grads: Vec<f32>,
+    pub grad_norm: f32,
+}
+
+/// The engine: one PJRT client + the manifest it serves artifacts from.
+pub struct Engine {
+    client: PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn cpu(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().context("PjRtClient::cpu")?;
+        Ok(Engine { client, manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile_artifact(&self, art: &ArtifactInfo)
+        -> Result<PjRtLoadedExecutable> {
+        let path = self.manifest.artifact_path(art);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile {}", art.key))
+    }
+
+    /// Compile the train step for (preset, variant, batch, seq).
+    pub fn train_step(&self, preset: &str, variant: &str, batch: usize,
+                      seq: usize) -> Result<TrainStep> {
+        let model = self.manifest.model(preset)?;
+        let art = model.train_key(variant, batch, seq).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no train artifact for {preset}/{variant} b{batch} s{seq}; \
+                 available: {:?}",
+                model.artifacts.keys().collect::<Vec<_>>()
+            )
+        })?;
+        Ok(TrainStep {
+            exe: self.compile_artifact(art)?,
+            n_params: model.param_count,
+            batch,
+            seq,
+            key: art.key.clone(),
+        })
+    }
+
+    /// Compile the optimizer apply step ("lamb" | "adam").
+    pub fn apply_step(&self, preset: &str, optimizer: &str)
+        -> Result<ApplyStep> {
+        let model = self.manifest.model(preset)?;
+        let key = format!("apply_{optimizer}");
+        let art = model.artifacts.get(&key).ok_or_else(|| {
+            anyhow::anyhow!("no artifact {key} for {preset}")
+        })?;
+        Ok(ApplyStep {
+            exe: self.compile_artifact(art)?,
+            n_params: model.param_count,
+        })
+    }
+
+    /// Compile the QA fine-tuning step (paper §5.3).
+    pub fn qa_step(&self, preset: &str, batch: usize, seq: usize)
+        -> Result<QaStep> {
+        let model = self.manifest.model(preset)?;
+        let key = format!("qa_train_b{batch}_s{seq}");
+        let art = model.artifacts.get(&key).ok_or_else(|| {
+            anyhow::anyhow!("no artifact {key} for {preset}")
+        })?;
+        Ok(QaStep {
+            exe: self.compile_artifact(art)?,
+            n_params: model.finetune_param_count,
+            batch,
+            seq,
+        })
+    }
+
+    /// Compile the QA optimizer apply (AdamW over the extended vector).
+    pub fn qa_apply(&self, preset: &str) -> Result<ApplyStep> {
+        let model = self.manifest.model(preset)?;
+        let art = model.artifacts.get("qa_apply").ok_or_else(|| {
+            anyhow::anyhow!("no artifact qa_apply for {preset}")
+        })?;
+        Ok(ApplyStep {
+            exe: self.compile_artifact(art)?,
+            n_params: model.finetune_param_count,
+        })
+    }
+
+    /// Compile the eval-only forward step.
+    pub fn forward_step(&self, preset: &str, variant: &str, batch: usize,
+                        seq: usize) -> Result<ForwardStep> {
+        let model = self.manifest.model(preset)?;
+        let key = format!("fwd_{variant}_b{batch}_s{seq}");
+        let art = model.artifacts.get(&key).ok_or_else(|| {
+            anyhow::anyhow!("no artifact {key} for {preset}")
+        })?;
+        Ok(ForwardStep {
+            exe: self.compile_artifact(art)?,
+            n_params: model.param_count,
+        })
+    }
+
+    pub fn model(&self, preset: &str) -> Result<&ModelInfo> {
+        self.manifest.model(preset)
+    }
+}
+
+// ---------------------------------------------------------- marshaling --
+
+fn lit_f32_vec(data: &[f32]) -> Result<Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32, &[data.len()], bytes)?)
+}
+
+fn lit_i32_2d(data: &[i32], rows: usize, cols: usize) -> Result<Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "i32 literal shape mismatch");
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32, &[rows, cols], bytes)?)
+}
+
+fn lit_i32_1d(data: &[i32]) -> Result<Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32, &[data.len()], bytes)?)
+}
+
+fn lit_f32_scalar(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+fn scalar_f32(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+// ------------------------------------------------------------- steps  --
+
+/// Compiled fwd+bwd step: (params, batch, loss_scale) -> loss/grads.
+pub struct TrainStep {
+    exe: PjRtLoadedExecutable,
+    pub n_params: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub key: String,
+}
+
+impl TrainStep {
+    /// Execute one micro-step.
+    pub fn run(&self, params: &[f32], batch: &Batch, loss_scale: f32)
+        -> Result<StepOutput> {
+        anyhow::ensure!(params.len() == self.n_params,
+                        "params len {} != {}", params.len(), self.n_params);
+        anyhow::ensure!(batch.batch == self.batch && batch.seq == self.seq,
+                        "batch shape {}x{} != step {}x{}", batch.batch,
+                        batch.seq, self.batch, self.seq);
+        let inputs = [
+            lit_f32_vec(params)?,
+            lit_i32_2d(&batch.input_ids, self.batch, self.seq)?,
+            lit_i32_2d(&batch.token_type_ids, self.batch, self.seq)?,
+            lit_i32_2d(&batch.attention_mask, self.batch, self.seq)?,
+            lit_i32_2d(&batch.mlm_labels, self.batch, self.seq)?,
+            lit_i32_1d(&batch.nsp_labels)?,
+            lit_f32_scalar(loss_scale),
+        ];
+        let result = self.exe.execute::<Literal>(&inputs)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 6,
+                        "train step returned {} outputs", parts.len());
+        Ok(StepOutput {
+            loss: scalar_f32(&parts[0])?,
+            mlm_loss: scalar_f32(&parts[1])?,
+            nsp_loss: scalar_f32(&parts[2])?,
+            mlm_acc: scalar_f32(&parts[3])?,
+            grads: to_f32_vec(&parts[4])?,
+            grad_norm: scalar_f32(&parts[5])?,
+        })
+    }
+}
+
+/// Compiled optimizer apply: (p, g, m, v, step, lr) -> (p', m', v').
+pub struct ApplyStep {
+    exe: PjRtLoadedExecutable,
+    pub n_params: usize,
+}
+
+impl ApplyStep {
+    /// Execute; overwrites params/m/v in place.
+    pub fn run(&self, params: &mut Vec<f32>, grads: &[f32],
+               m: &mut Vec<f32>, v: &mut Vec<f32>, step: f32, lr: f32)
+               -> Result<()> {
+        anyhow::ensure!(params.len() == self.n_params);
+        let inputs = [
+            lit_f32_vec(params)?,
+            lit_f32_vec(grads)?,
+            lit_f32_vec(m)?,
+            lit_f32_vec(v)?,
+            lit_f32_scalar(step),
+            lit_f32_scalar(lr),
+        ];
+        let result = self.exe.execute::<Literal>(&inputs)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 3,
+                        "apply returned {} outputs", parts.len());
+        *params = to_f32_vec(&parts[0])?;
+        *m = to_f32_vec(&parts[1])?;
+        *v = to_f32_vec(&parts[2])?;
+        Ok(())
+    }
+}
+
+/// QA fine-tuning batch (paper §5.3 mechanism): question+context spans.
+#[derive(Debug, Clone)]
+pub struct QaBatch {
+    pub batch: usize,
+    pub seq: usize,
+    pub input_ids: Vec<i32>,
+    pub token_type_ids: Vec<i32>,
+    pub attention_mask: Vec<i32>,
+    pub start_positions: Vec<i32>,
+    pub end_positions: Vec<i32>,
+}
+
+impl QaBatch {
+    pub fn zeros(batch: usize, seq: usize) -> Self {
+        Self {
+            batch,
+            seq,
+            input_ids: vec![0; batch * seq],
+            token_type_ids: vec![0; batch * seq],
+            attention_mask: vec![0; batch * seq],
+            start_positions: vec![0; batch],
+            end_positions: vec![0; batch],
+        }
+    }
+}
+
+/// Output of one QA fine-tuning step.
+#[derive(Debug, Clone)]
+pub struct QaOutput {
+    pub loss: f32,
+    pub start_acc: f32,
+    pub end_acc: f32,
+    pub exact: f32,
+    pub grads: Vec<f32>,
+    pub grad_norm: f32,
+}
+
+/// Compiled QA fine-tuning step over the extended flat vector.
+pub struct QaStep {
+    exe: PjRtLoadedExecutable,
+    pub n_params: usize,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl QaStep {
+    pub fn run(&self, params_ft: &[f32], batch: &QaBatch, loss_scale: f32)
+        -> Result<QaOutput> {
+        anyhow::ensure!(params_ft.len() == self.n_params,
+                        "ft params len {} != {}", params_ft.len(),
+                        self.n_params);
+        anyhow::ensure!(batch.batch == self.batch && batch.seq == self.seq);
+        let inputs = [
+            lit_f32_vec(params_ft)?,
+            lit_i32_2d(&batch.input_ids, self.batch, self.seq)?,
+            lit_i32_2d(&batch.token_type_ids, self.batch, self.seq)?,
+            lit_i32_2d(&batch.attention_mask, self.batch, self.seq)?,
+            lit_i32_1d(&batch.start_positions)?,
+            lit_i32_1d(&batch.end_positions)?,
+            lit_f32_scalar(loss_scale),
+        ];
+        let result = self.exe.execute::<Literal>(&inputs)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 6);
+        Ok(QaOutput {
+            loss: scalar_f32(&parts[0])?,
+            start_acc: scalar_f32(&parts[1])?,
+            end_acc: scalar_f32(&parts[2])?,
+            exact: scalar_f32(&parts[3])?,
+            grads: to_f32_vec(&parts[4])?,
+            grad_norm: scalar_f32(&parts[5])?,
+        })
+    }
+}
+
+/// Compiled eval forward: (params, batch) -> (loss, mlm, nsp, acc).
+pub struct ForwardStep {
+    exe: PjRtLoadedExecutable,
+    pub n_params: usize,
+}
+
+impl ForwardStep {
+    pub fn run(&self, params: &[f32], batch: &Batch)
+        -> Result<(f32, f32, f32, f32)> {
+        let inputs = [
+            lit_f32_vec(params)?,
+            lit_i32_2d(&batch.input_ids, batch.batch, batch.seq)?,
+            lit_i32_2d(&batch.token_type_ids, batch.batch, batch.seq)?,
+            lit_i32_2d(&batch.attention_mask, batch.batch, batch.seq)?,
+            lit_i32_2d(&batch.mlm_labels, batch.batch, batch.seq)?,
+            lit_i32_1d(&batch.nsp_labels)?,
+        ];
+        let result = self.exe.execute::<Literal>(&inputs)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 4);
+        Ok((
+            scalar_f32(&parts[0])?,
+            scalar_f32(&parts[1])?,
+            scalar_f32(&parts[2])?,
+            scalar_f32(&parts[3])?,
+        ))
+    }
+}

@@ -1,0 +1,228 @@
+//! AOT manifest parsing — the contract emitted by `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::jsonlite::Json;
+use crate::model::layout::ParamLayout;
+use crate::model::BertConfig;
+
+/// One lowered artifact (an .hlo.txt file).
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    /// Manifest key, e.g. "train_fused_f32_b8_s128".
+    pub key: String,
+    /// File name within the artifacts dir.
+    pub file: String,
+    /// Input (shape, dtype) list in call order.
+    pub inputs: Vec<(Vec<usize>, String)>,
+    /// Output names in tuple order.
+    pub outputs: Vec<String>,
+}
+
+/// One model preset's artifact set.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub preset: String,
+    pub config: BertConfig,
+    pub param_count: usize,
+    /// Pretraining params + QA span head (paper §5.3 fine-tuning).
+    pub finetune_param_count: usize,
+    pub layout: ParamLayout,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl ModelInfo {
+    /// Find a train-step artifact for (variant, batch, seq).
+    pub fn train_key(&self, variant: &str, batch: usize, seq: usize)
+        -> Option<&ArtifactInfo> {
+        self.artifacts.get(&format!("train_{variant}_b{batch}_s{seq}"))
+    }
+
+    /// All train-step artifacts, as (variant, batch, seq, info).
+    pub fn train_artifacts(&self) -> Vec<(String, usize, usize, &ArtifactInfo)> {
+        self.artifacts
+            .iter()
+            .filter(|(k, _)| k.starts_with("train_"))
+            .filter_map(|(k, a)| {
+                let rest = &k["train_".len()..];
+                let bpos = rest.rfind("_b")?;
+                let spos = rest.rfind("_s")?;
+                let variant = rest[..bpos].to_string();
+                let batch: usize = rest[bpos + 2..spos].parse().ok()?;
+                let seq: usize = rest[spos + 2..].parse().ok()?;
+                Some((variant, batch, seq, a))
+            })
+            .collect()
+    }
+}
+
+/// The full manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {path:?}: {e}. Run `make artifacts` first."
+            )
+        })?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let mut models = BTreeMap::new();
+        let model_objs = json
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing models"))?;
+        for (name, m) in model_objs {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    pub fn model(&self, preset: &str) -> anyhow::Result<&ModelInfo> {
+        self.models.get(preset).ok_or_else(|| {
+            anyhow::anyhow!(
+                "preset '{preset}' not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn artifact_path(&self, art: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&art.file)
+    }
+}
+
+fn parse_model(name: &str, m: &Json) -> anyhow::Result<ModelInfo> {
+    let cfg_json = m.get("config")
+        .ok_or_else(|| anyhow::anyhow!("model {name}: missing config"))?;
+    let get = |k: &str| -> anyhow::Result<usize> {
+        cfg_json.get(k).and_then(Json::as_usize).ok_or_else(|| {
+            anyhow::anyhow!("model {name}: config missing {k}")
+        })
+    };
+    let config = BertConfig {
+        vocab_size: get("vocab_size")?,
+        hidden: get("hidden")?,
+        layers: get("layers")?,
+        heads: get("heads")?,
+        intermediate: get("intermediate")?,
+        max_seq: get("max_seq")?,
+        type_vocab: get("type_vocab")?,
+    };
+    let param_count = m.get("param_count").and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("model {name}: missing param_count"))?;
+    let finetune_param_count = m.get("finetune_param_count")
+        .and_then(Json::as_usize)
+        .unwrap_or(param_count + config.hidden * 2 + 2);
+    let layout = ParamLayout::from_manifest(
+        m.get("layout")
+            .ok_or_else(|| anyhow::anyhow!("model {name}: missing layout"))?,
+    )?;
+    anyhow::ensure!(
+        layout.total_len() == param_count,
+        "model {name}: layout total {} != param_count {param_count}",
+        layout.total_len()
+    );
+    // cross-check against the Rust-side preset definition
+    if let Some(rust_cfg) = BertConfig::preset(name) {
+        anyhow::ensure!(
+            rust_cfg == config,
+            "model {name}: python/rust preset drift: {config:?} vs {rust_cfg:?}"
+        );
+    }
+
+    let mut artifacts = BTreeMap::new();
+    let arts = m.get("artifacts").and_then(Json::as_obj)
+        .ok_or_else(|| anyhow::anyhow!("model {name}: missing artifacts"))?;
+    for (key, a) in arts {
+        let file = a.get("file").and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("artifact {key}: missing file"))?
+            .to_string();
+        let inputs = a
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .map(|arr| {
+                arr.iter()
+                    .map(|i| {
+                        let shape: Vec<usize> = i
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .map(|s| s.iter().filter_map(Json::as_usize)
+                                .collect())
+                            .unwrap_or_default();
+                        let dtype = i
+                            .get("dtype")
+                            .and_then(Json::as_str)
+                            .unwrap_or("float32")
+                            .to_string();
+                        (shape, dtype)
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        let outputs = a
+            .get("outputs")
+            .and_then(Json::as_arr)
+            .map(|arr| {
+                arr.iter().filter_map(|o| o.as_str().map(String::from))
+                    .collect()
+            })
+            .unwrap_or_default();
+        artifacts.insert(
+            key.clone(),
+            ArtifactInfo { key: key.clone(), file, inputs, outputs },
+        );
+    }
+    Ok(ModelInfo {
+        preset: name.to_string(),
+        config,
+        param_count,
+        finetune_param_count,
+        layout,
+        artifacts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.contains_key("bert-micro"));
+        let micro = m.model("bert-micro").unwrap();
+        assert_eq!(micro.param_count, 146_178);
+        assert_eq!(micro.layout.total_len(), 146_178);
+        assert!(micro.train_key("fused_f32", 2, 32).is_some());
+        assert!(micro.artifacts.contains_key("apply_lamb"));
+        let trains = micro.train_artifacts();
+        assert!(trains.iter().any(|(v, b, s, _)|
+            v == "fused_f32" && *b == 2 && *s == 32));
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let err = Manifest::load(Path::new("/nonexistent-dir-xyz"))
+            .unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime (the RT layer of DESIGN.md §4): loads the AOT manifest,
+//! compiles HLO-text artifacts on the CPU PJRT client, and exposes typed
+//! train/apply/forward steps over flat `f32` buffers.
+//!
+//! Python is NEVER invoked here — the artifacts in `artifacts/` are the
+//! only hand-off (HLO text, not serialized protos; see aot_recipe).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{ApplyStep, Engine, ForwardStep, QaBatch, QaOutput,
+                 QaStep, StepOutput, TrainStep};
+pub use manifest::{ArtifactInfo, Manifest, ModelInfo};

@@ -1,0 +1,147 @@
+//! Random-access `bshard` reader (paper §4.1: each device streams only
+//! its own shard; epoch reshuffles are index permutations, not data
+//! movement).
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+use super::{ShardError, FOOTER_MAGIC, MAGIC, VERSION};
+use crate::util::crc32;
+
+/// Reader with the record index resident; payloads are read on demand.
+pub struct ShardReader {
+    file: File,
+    path: PathBuf,
+    offsets: Vec<u64>,
+}
+
+impl ShardReader {
+    /// Open and validate a shard file; loads the index (O(records), not
+    /// O(bytes)).
+    pub fn open(path: &Path) -> Result<Self, ShardError> {
+        let mut file = File::open(path)?;
+        let total = file.metadata()?.len();
+        if total >= 4 {
+            let mut magic = [0u8; 4];
+            file.read_exact(&mut magic)?;
+            if &magic != MAGIC {
+                return Err(ShardError::BadMagic);
+            }
+            file.seek(SeekFrom::Start(0))?;
+        }
+        if total < 24 + 12 {
+            // header + footer minimum
+            return Err(if total >= 4 { ShardError::Truncated }
+                       else { ShardError::BadMagic });
+        }
+        let mut header = [0u8; 24];
+        file.read_exact(&mut header)?;
+        if &header[0..4] != MAGIC {
+            return Err(ShardError::BadMagic);
+        }
+        let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(ShardError::BadVersion(version));
+        }
+        let count = u64::from_le_bytes(header[8..16].try_into().unwrap())
+            as usize;
+
+        // footer: index_offset u64 + FOOTER_MAGIC
+        file.seek(SeekFrom::End(-12))?;
+        let mut footer = [0u8; 12];
+        file.read_exact(&mut footer)?;
+        if &footer[8..12] != FOOTER_MAGIC {
+            return Err(ShardError::Truncated);
+        }
+        let index_offset = u64::from_le_bytes(footer[0..8].try_into().unwrap());
+        if index_offset + (count as u64) * 8 + 12 != total {
+            return Err(ShardError::Truncated);
+        }
+
+        file.seek(SeekFrom::Start(index_offset))?;
+        let mut idx_bytes = vec![0u8; count * 8];
+        file.read_exact(&mut idx_bytes)?;
+        let offsets: Vec<u64> = idx_bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+
+        Ok(Self { file, path: path.to_path_buf(), offsets })
+    }
+
+    /// Number of records.
+    pub fn len(&self) -> usize {
+        self.offsets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.offsets.is_empty()
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Read and CRC-verify record `index`.
+    pub fn read(&mut self, index: usize) -> Result<Vec<u8>, ShardError> {
+        let count = self.offsets.len();
+        let off = *self.offsets.get(index).ok_or(ShardError::OutOfRange {
+            index,
+            count,
+        })?;
+        self.file.seek(SeekFrom::Start(off))?;
+        let mut hdr = [0u8; 8];
+        self.file.read_exact(&mut hdr)?;
+        let len = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+        let want_crc = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+        let mut payload = vec![0u8; len];
+        self.file.read_exact(&mut payload)?;
+        if crc32(&payload) != want_crc {
+            return Err(ShardError::Corrupt { index });
+        }
+        Ok(payload)
+    }
+
+    /// Iterate all records in index order (sequential scan).
+    pub fn iter_all(&mut self) -> impl Iterator<Item = Result<Vec<u8>, ShardError>> + '_ {
+        (0..self.len()).map(move |i| self.read(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shard::ShardWriter;
+
+    #[test]
+    fn sequential_iteration() {
+        let path = std::env::temp_dir().join("bshard_reader_iter.bshard");
+        {
+            let mut w = ShardWriter::create(&path).unwrap();
+            for i in 0..10u8 {
+                w.append(&[i; 3]).unwrap();
+            }
+            w.finish().unwrap();
+        }
+        let mut r = ShardReader::open(&path).unwrap();
+        let all: Vec<Vec<u8>> = r.iter_all().map(|x| x.unwrap()).collect();
+        assert_eq!(all.len(), 10);
+        assert_eq!(all[7], vec![7u8; 3]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncated_file_detected() {
+        let path = std::env::temp_dir().join("bshard_reader_trunc.bshard");
+        {
+            let mut w = ShardWriter::create(&path).unwrap();
+            w.append(b"datadata").unwrap();
+            w.finish().unwrap();
+        }
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(ShardReader::open(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,96 @@
+//! Streaming `bshard` writer (paper §4.1 sharding pipeline output side).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use super::{ShardError, FOOTER_MAGIC, MAGIC, VERSION};
+use crate::util::crc32;
+
+/// Appends records to a shard file; `finish()` writes the index + footer.
+pub struct ShardWriter {
+    out: BufWriter<File>,
+    offsets: Vec<u64>,
+    pos: u64,
+    finished: bool,
+}
+
+impl ShardWriter {
+    /// Create a new shard at `path` (truncates any existing file).
+    pub fn create(path: &Path) -> Result<Self, ShardError> {
+        let file = File::create(path)?;
+        let mut out = BufWriter::new(file);
+        out.write_all(MAGIC)?;
+        out.write_all(&VERSION.to_le_bytes())?;
+        out.write_all(&0u64.to_le_bytes())?; // record_count placeholder
+        out.write_all(&0u64.to_le_bytes())?; // reserved
+        Ok(Self { out, offsets: Vec::new(), pos: 24, finished: false })
+    }
+
+    /// Append one record.
+    pub fn append(&mut self, record: &[u8]) -> Result<(), ShardError> {
+        assert!(!self.finished, "append after finish");
+        self.offsets.push(self.pos);
+        let len = record.len() as u32;
+        let crc = crc32(record);
+        self.out.write_all(&len.to_le_bytes())?;
+        self.out.write_all(&crc.to_le_bytes())?;
+        self.out.write_all(record)?;
+        self.pos += 8 + record.len() as u64;
+        Ok(())
+    }
+
+    /// Number of records appended so far.
+    pub fn len(&self) -> usize {
+        self.offsets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.offsets.is_empty()
+    }
+
+    /// Write index + footer and patch the header record count.
+    pub fn finish(mut self) -> Result<(), ShardError> {
+        self.finished = true;
+        let index_offset = self.pos;
+        for off in &self.offsets {
+            self.out.write_all(&off.to_le_bytes())?;
+        }
+        self.out.write_all(&index_offset.to_le_bytes())?;
+        self.out.write_all(FOOTER_MAGIC)?;
+        self.out.flush()?;
+        // Patch record_count in the header.
+        let mut file = self.out.into_inner().map_err(|e| e.into_error())?;
+        use std::io::Seek;
+        file.seek(std::io::SeekFrom::Start(8))?;
+        file.write_all(&(self.offsets.len() as u64).to_le_bytes())?;
+        file.sync_all()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_shard_is_valid() {
+        let path = std::env::temp_dir().join("bshard_writer_empty.bshard");
+        ShardWriter::create(&path).unwrap().finish().unwrap();
+        let r = super::super::ShardReader::open(&path).unwrap();
+        assert_eq!(r.len(), 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn len_tracks_appends() {
+        let path = std::env::temp_dir().join("bshard_writer_len.bshard");
+        let mut w = ShardWriter::create(&path).unwrap();
+        assert!(w.is_empty());
+        w.append(b"a").unwrap();
+        w.append(b"b").unwrap();
+        assert_eq!(w.len(), 2);
+        w.finish().unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+}

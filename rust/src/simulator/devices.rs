@@ -1,0 +1,154 @@
+//! Device compute models, calibrated from the paper's Table 4 (measured
+//! BERT-large seq-128 pretraining throughput in tokens/s).
+//!
+//! These are MEASURED anchor points from the paper, not our invention —
+//! the simulator interpolates everything else from them, so Table 3/4/5
+//! regenerate exactly and Figures 3/6 inherit the right absolute scale.
+
+/// Single-GPU optimization variant (the Table 4/5 columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// FP32, unfused kernels ("Non-Optimized").
+    NonOptimized,
+    /// Mixed precision only ("FP16").
+    Fp16,
+    /// Mixed precision + fused kernels ("FP16 & Fused Kernel").
+    Fp16Fused,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 3] =
+        [Variant::NonOptimized, Variant::Fp16, Variant::Fp16Fused];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::NonOptimized => "Non-Optimized",
+            Variant::Fp16 => "FP16",
+            Variant::Fp16Fused => "FP16 & Fused Kernel",
+        }
+    }
+}
+
+/// A GPU model with its measured seq-128 BERT-large throughputs.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceModel {
+    pub name: &'static str,
+    /// tokens/s per Table 4 column.
+    pub non_optimized: f64,
+    pub fp16: f64,
+    pub fp16_fused: f64,
+    /// Whether the GPU has TensorCores (affects the FP16 multiplier).
+    pub tensor_cores: bool,
+}
+
+impl DeviceModel {
+    pub fn throughput(&self, v: Variant) -> f64 {
+        match v {
+            Variant::NonOptimized => self.non_optimized,
+            Variant::Fp16 => self.fp16,
+            Variant::Fp16Fused => self.fp16_fused,
+        }
+    }
+
+    /// Speedup over the non-optimized baseline (Table 5).
+    pub fn speedup(&self, v: Variant) -> f64 {
+        self.throughput(v) / self.non_optimized
+    }
+
+    /// Hours per epoch at `tokens_per_epoch` (Table 3).
+    pub fn epoch_hours(&self, v: Variant, tokens_per_epoch: f64) -> f64 {
+        tokens_per_epoch / self.throughput(v) / 3600.0
+    }
+
+    /// Days for the full 40-epoch pretraining on ONE GPU (Table 3).
+    pub fn forty_epoch_days(&self, v: Variant, tokens_per_epoch: f64) -> f64 {
+        40.0 * self.epoch_hours(v, tokens_per_epoch) / 24.0
+    }
+}
+
+/// Paper Table 4 rows (tokens/s, seq length 128).
+pub const DEVICES: [DeviceModel; 3] = [
+    DeviceModel {
+        name: "P100",
+        non_optimized: 1576.3,
+        fp16: 2680.7,
+        fp16_fused: 3228.8,
+        tensor_cores: false,
+    },
+    DeviceModel {
+        name: "T4 (TensorCore)",
+        non_optimized: 1953.5,
+        fp16: 4430.9,
+        fp16_fused: 5429.1,
+        tensor_cores: true,
+    },
+    DeviceModel {
+        name: "2080Ti (TensorCore)",
+        non_optimized: 3527.2,
+        fp16: 8823.8,
+        fp16_fused: 10765.8,
+        tensor_cores: true,
+    },
+];
+
+/// Paper Table 3: 16752.7 Million tokens per epoch (Wikipedia+Books).
+pub const PAPER_TOKENS_PER_EPOCH: f64 = 16_752.7e6;
+
+/// The T4 — the paper's cluster GPU (Table 1).
+pub fn t4() -> DeviceModel {
+    DEVICES[1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_speedups_match_paper() {
+        // Table 5: P100 2.05x, T4 2.78x, 2080Ti 3.05x for FP16+fused.
+        let wants = [(0, 1.70, 2.05), (1, 2.27, 2.78), (2, 2.50, 3.05)];
+        for (i, fp16, fused) in wants {
+            let d = DEVICES[i];
+            assert!((d.speedup(Variant::Fp16) - fp16).abs() < 0.01,
+                    "{}: {}", d.name, d.speedup(Variant::Fp16));
+            assert!((d.speedup(Variant::Fp16Fused) - fused).abs() < 0.01,
+                    "{}: {}", d.name, d.speedup(Variant::Fp16Fused));
+        }
+    }
+
+    #[test]
+    fn table3_epoch_times_match_paper() {
+        // Table 3: P100 1441.6h, T4 857.1h, 2080Ti 432.3h per epoch.
+        let wants = [(0, 1441.6, 2400.0), (1, 857.1, 1440.0),
+                     (2, 432.3, 720.0)];
+        for (i, hours, days40) in wants {
+            let d = DEVICES[i];
+            let h = d.epoch_hours(Variant::Fp16Fused, PAPER_TOKENS_PER_EPOCH);
+            assert!((h - hours).abs() / hours < 0.01,
+                    "{}: {h} vs {hours}", d.name);
+            let dd = d.forty_epoch_days(Variant::Fp16Fused,
+                                        PAPER_TOKENS_PER_EPOCH);
+            assert!((dd - days40).abs() / days40 < 0.01,
+                    "{}: {dd} vs {days40}", d.name);
+        }
+    }
+
+    #[test]
+    fn tensorcore_gpus_gain_more_from_fp16() {
+        // §5.1: "FP16 is more effective on GPUs equipped with TensorCores".
+        let p100 = DEVICES[0].speedup(Variant::Fp16);
+        for d in &DEVICES[1..] {
+            assert!(d.tensor_cores);
+            assert!(d.speedup(Variant::Fp16) > p100);
+        }
+    }
+
+    #[test]
+    fn fusion_adds_roughly_20_percent() {
+        // §5.1: kernel fusion gives ~1.2x on top of FP16 for all devices.
+        for d in &DEVICES {
+            let f = d.fp16_fused / d.fp16;
+            assert!((1.15..1.30).contains(&f), "{}: {f}", d.name);
+        }
+    }
+}

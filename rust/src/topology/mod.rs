@@ -1,0 +1,261 @@
+//! Cluster topology: the paper's `<X>M<Y>G` encoding (§3.2), device
+//! identities, link classification (PCIe intra-node vs network
+//! inter-node), ring construction for allreduce, and hierarchical
+//! grouping (intra-node group + inter-node leader ring).
+
+use std::fmt;
+
+/// A cluster of `machines` nodes with `gpus_per_machine` GPUs each —
+/// the paper's "<X>M<Y>G" notation (e.g. 32M8G, Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub machines: usize,
+    pub gpus_per_machine: usize,
+}
+
+/// A single GPU's identity within the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DeviceId {
+    pub machine: usize,
+    pub local: usize,
+}
+
+/// Link class between two devices (paper §4.4: two communication types).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Same device (no transfer).
+    Local,
+    /// Intra-node over PCIe (paper: 64 Gb/s).
+    Pcie,
+    /// Inter-node over the network (paper: 10 Gb/s).
+    Network,
+}
+
+impl Topology {
+    pub fn new(machines: usize, gpus_per_machine: usize) -> Self {
+        assert!(machines >= 1 && gpus_per_machine >= 1);
+        Self { machines, gpus_per_machine }
+    }
+
+    /// Parse the paper's encoding: "32M8G" -> 32 machines x 8 GPUs.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let up = s.trim().to_ascii_uppercase();
+        let m_pos = up.find('M').ok_or_else(|| format!("'{s}': missing M"))?;
+        let g_pos = up.find('G').ok_or_else(|| format!("'{s}': missing G"))?;
+        if g_pos < m_pos || g_pos != up.len() - 1 {
+            return Err(format!("'{s}': expected <X>M<Y>G"));
+        }
+        let machines: usize = up[..m_pos]
+            .parse()
+            .map_err(|_| format!("'{s}': bad machine count"))?;
+        let gpus: usize = up[m_pos + 1..g_pos]
+            .parse()
+            .map_err(|_| format!("'{s}': bad GPU count"))?;
+        if machines == 0 || gpus == 0 {
+            return Err(format!("'{s}': counts must be positive"));
+        }
+        Ok(Self::new(machines, gpus))
+    }
+
+    /// Total GPU count (paper Table 1: 256 for 32M8G).
+    pub fn world_size(&self) -> usize {
+        self.machines * self.gpus_per_machine
+    }
+
+    /// Flat rank of a device: machine-major order.
+    pub fn rank(&self, dev: DeviceId) -> usize {
+        debug_assert!(dev.machine < self.machines);
+        debug_assert!(dev.local < self.gpus_per_machine);
+        dev.machine * self.gpus_per_machine + dev.local
+    }
+
+    /// Device identity of a flat rank.
+    pub fn device(&self, rank: usize) -> DeviceId {
+        debug_assert!(rank < self.world_size());
+        DeviceId {
+            machine: rank / self.gpus_per_machine,
+            local: rank % self.gpus_per_machine,
+        }
+    }
+
+    /// All devices in rank order.
+    pub fn devices(&self) -> Vec<DeviceId> {
+        (0..self.world_size()).map(|r| self.device(r)).collect()
+    }
+
+    /// Classify the link between two devices.
+    pub fn link(&self, a: DeviceId, b: DeviceId) -> LinkKind {
+        if a == b {
+            LinkKind::Local
+        } else if a.machine == b.machine {
+            LinkKind::Pcie
+        } else {
+            LinkKind::Network
+        }
+    }
+
+    /// The flat ring order used by ring allreduce: rank i sends to
+    /// rank (i+1) % n.  Machine-major order keeps most hops on PCIe —
+    /// each machine's chain crosses the network exactly once, which is
+    /// how NCCL forms rings on this topology (paper §3.2).
+    pub fn ring_order(&self) -> Vec<DeviceId> {
+        self.devices()
+    }
+
+    /// Count of network-crossing hops in the flat ring.
+    pub fn ring_network_hops(&self) -> usize {
+        let ring = self.ring_order();
+        let n = ring.len();
+        (0..n)
+            .filter(|&i| {
+                self.link(ring[i], ring[(i + 1) % n]) == LinkKind::Network
+            })
+            .count()
+    }
+
+    /// Hierarchical grouping (paper §4.4 resource separation):
+    /// (intra-node groups in local-rank order, inter-node leader ring of
+    /// the local-rank-0 devices).
+    pub fn hierarchical_groups(&self) -> (Vec<Vec<DeviceId>>, Vec<DeviceId>) {
+        let groups: Vec<Vec<DeviceId>> = (0..self.machines)
+            .map(|m| {
+                (0..self.gpus_per_machine)
+                    .map(|l| DeviceId { machine: m, local: l })
+                    .collect()
+            })
+            .collect();
+        let leaders: Vec<DeviceId> = (0..self.machines)
+            .map(|m| DeviceId { machine: m, local: 0 })
+            .collect();
+        (groups, leaders)
+    }
+
+    /// Render the Figure-1 style topology sketch.
+    pub fn ascii_diagram(&self) -> String {
+        let mut out = String::new();
+        let show = self.machines.min(4);
+        for m in 0..show {
+            out.push_str(&format!("Node {m}: ["));
+            let g = self.gpus_per_machine.min(8);
+            for l in 0..g {
+                out.push_str(&format!(" GPU{l}"));
+            }
+            if self.gpus_per_machine > 8 {
+                out.push_str(" ...");
+            }
+            out.push_str(" ]  <-PCIe->\n");
+            if m + 1 < show {
+                out.push_str("    |  (10 Gb/s network)\n");
+            }
+        }
+        if self.machines > show {
+            out.push_str(&format!("    ... {} more nodes\n",
+                                  self.machines - show));
+        }
+        out
+    }
+}
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}M{}G", self.machines, self.gpus_per_machine)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn parses_paper_topologies() {
+        for (s, m, g) in [("1M1G", 1, 1), ("1M8G", 1, 8), ("2M1G", 2, 1),
+                          ("32M8G", 32, 8), ("8m4g", 8, 4)] {
+            let t = Topology::parse(s).unwrap();
+            assert_eq!((t.machines, t.gpus_per_machine), (m, g), "{s}");
+        }
+        assert_eq!(Topology::parse("32M8G").unwrap().world_size(), 256);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for s in ["", "M8G", "32M", "32G8M", "0M1G", "1M0G", "xMyG", "1M2G3"] {
+            assert!(Topology::parse(s).is_err(), "{s}");
+        }
+    }
+
+    #[test]
+    fn display_round_trips() {
+        let t = Topology::new(32, 8);
+        assert_eq!(Topology::parse(&t.to_string()).unwrap(), t);
+    }
+
+    #[test]
+    fn rank_device_inverse() {
+        let t = Topology::new(4, 8);
+        for r in 0..t.world_size() {
+            assert_eq!(t.rank(t.device(r)), r);
+        }
+    }
+
+    #[test]
+    fn link_classification() {
+        let t = Topology::new(2, 2);
+        let d = |m, l| DeviceId { machine: m, local: l };
+        assert_eq!(t.link(d(0, 0), d(0, 0)), LinkKind::Local);
+        assert_eq!(t.link(d(0, 0), d(0, 1)), LinkKind::Pcie);
+        assert_eq!(t.link(d(0, 1), d(1, 0)), LinkKind::Network);
+    }
+
+    #[test]
+    fn flat_ring_crosses_network_once_per_machine() {
+        // Machine-major ring: exactly `machines` network hops (incl. the
+        // wrap-around) when machines > 1.
+        for (m, g) in [(2, 4), (4, 8), (32, 8)] {
+            let t = Topology::new(m, g);
+            assert_eq!(t.ring_network_hops(), m, "{t}");
+        }
+        assert_eq!(Topology::new(1, 8).ring_network_hops(), 0);
+    }
+
+    #[test]
+    fn hierarchical_groups_partition_devices() {
+        let t = Topology::new(3, 4);
+        let (groups, leaders) = t.hierarchical_groups();
+        assert_eq!(groups.len(), 3);
+        assert_eq!(leaders.len(), 3);
+        let mut all: Vec<usize> =
+            groups.iter().flatten().map(|d| t.rank(*d)).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..12).collect::<Vec<_>>());
+        assert!(leaders.iter().all(|d| d.local == 0));
+    }
+
+    #[test]
+    fn prop_rank_bijective_random_topologies() {
+        testkit::check(
+            "rank-bijective", 0xB1, 64,
+            |r: &mut Pcg64| (r.range_usize(1, 40), r.range_usize(1, 16)),
+            |&(m, g)| {
+                let t = Topology::new(m, g);
+                let mut seen = vec![false; t.world_size()];
+                for d in t.devices() {
+                    let r = t.rank(d);
+                    if seen[r] {
+                        return false;
+                    }
+                    seen[r] = true;
+                }
+                seen.iter().all(|&x| x)
+            },
+        );
+    }
+
+    #[test]
+    fn ascii_diagram_mentions_nodes() {
+        let d = Topology::new(2, 4).ascii_diagram();
+        assert!(d.contains("Node 0"));
+        assert!(d.contains("GPU3"));
+    }
+}

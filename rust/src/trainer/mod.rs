@@ -1,0 +1,378 @@
+//! The data-parallel trainer (paper §3.2, §4.4): the coordinator's hot
+//! loop gluing every piece together.
+//!
+//! Per optimizer step:
+//! 1. each data-parallel rank runs `accum_steps` micro-steps of the AOT
+//!    train step on its own shard stream (paper §4.1: data loading stays
+//!    on the "PCIe" path, i.e. local), summing gradients locally
+//!    (paper §4.4 gradient accumulation);
+//! 2. the summed flat gradients are exchanged with a REAL ring allreduce
+//!    across worker threads, bucket by bucket in backward order (paper
+//!    Fig. 2 bucketed overlap schedule — on this 1-core testbed buckets
+//!    pipeline the exchange, wall-clock overlap is studied in
+//!    [`crate::simulator`]);
+//! 3. the AMP loss scaler inspects the unscaled gradients: on overflow
+//!    the step is skipped and the scale backs off (paper §4.2);
+//! 4. the leader applies LAMB via the AOT apply step; all replicas share
+//!    the post-update parameters (replicas are bitwise identical after
+//!    every sync, so one master copy is kept — asserted in tests).
+//!
+//! Rank micro-steps execute sequentially on this single-core testbed
+//! (parallel PJRT execution buys nothing at nproc=1); the ring exchange
+//! runs on real threads.  See DESIGN.md §2 for the substitution table.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::collectives::CollectiveGroup;
+use crate::config::RunConfig;
+use crate::data::{MaskingConfig, ShardedDataset};
+use crate::grad::{build_buckets, Bucket, GradAccumulator};
+use crate::metrics::{LossCurve, ThroughputMeter};
+use crate::optimizer::lr_schedule;
+use crate::precision::{has_nonfinite, DynamicLossScaler, StepVerdict};
+use crate::runtime::{ApplyStep, Engine, TrainStep};
+use crate::util::{Pcg64, Stopwatch};
+
+/// Outcome of a training run.
+#[derive(Debug, Default)]
+pub struct TrainReport {
+    pub loss: LossCurve,
+    pub mlm_loss: LossCurve,
+    pub nsp_loss: LossCurve,
+    pub mlm_acc: LossCurve,
+    pub steps: usize,
+    pub skipped_steps: usize,
+    pub final_loss_scale: f64,
+    pub tokens_per_sec: f64,
+    pub total_tokens: u64,
+    /// Per-phase wall-clock totals: (compute, allreduce, apply) seconds.
+    pub compute_s: f64,
+    pub allreduce_s: f64,
+    pub apply_s: f64,
+    pub wall_s: f64,
+}
+
+impl TrainReport {
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "steps={} skipped={} final_loss={:.4} tokens/s={:.1} \
+             compute={:.1}s allreduce={:.1}s apply={:.1}s wall={:.1}s",
+            self.steps, self.skipped_steps, self.loss.tail_mean(5),
+            self.tokens_per_sec, self.compute_s, self.allreduce_s,
+            self.apply_s, self.wall_s
+        )
+    }
+}
+
+/// The trainer: compiled steps + distributed state.
+pub struct Trainer {
+    train_step: TrainStep,
+    apply_step: ApplyStep,
+    buckets: Vec<Bucket>,
+    world: usize,
+    cfg: RunConfig,
+    pub params: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    pub scaler: DynamicLossScaler,
+    pub step: usize,
+    mask_cfg: MaskingConfig,
+}
+
+impl Trainer {
+    /// Build a trainer for the given run config (artifacts must exist).
+    pub fn new(engine: &Engine, cfg: RunConfig, seq: usize, batch: usize)
+        -> Result<Trainer> {
+        cfg.validate()?;
+        let model = engine.model(&cfg.train.preset)?;
+        let n = model.param_count;
+        let train_step =
+            engine.train_step(&cfg.train.preset, &cfg.train.variant, batch,
+                              seq)?;
+        let apply_step =
+            engine.apply_step(&cfg.train.preset, &cfg.train.optimizer)?;
+        let buckets = build_buckets(&model.layout, cfg.train.bucket_elems);
+        let world = cfg.cluster.topo.world_size();
+        let mask_cfg = MaskingConfig {
+            mask_prob: cfg.data.mask_prob,
+            max_predictions: cfg.data.max_predictions,
+            vocab_size: model.config.vocab_size as u32,
+            ..Default::default()
+        };
+        let mut init_rng = Pcg64::with_stream(cfg.train.seed, 0x1111);
+        let params = init_params(&model.layout, &mut init_rng);
+        Ok(Trainer {
+            train_step,
+            apply_step,
+            buckets,
+            world,
+            scaler: DynamicLossScaler::new(cfg.train.init_loss_scale)
+                .with_growth_interval(200),
+            cfg,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            params,
+            step: 0,
+            mask_cfg,
+        })
+    }
+
+    /// Restore parameters/optimizer state from a checkpoint.
+    pub fn restore(&mut self, ckpt: crate::checkpoint::Checkpoint) -> Result<()> {
+        anyhow::ensure!(ckpt.params.len() == self.params.len(),
+                        "checkpoint size mismatch");
+        self.params = ckpt.params;
+        self.m = ckpt.m;
+        self.v = ckpt.v;
+        self.step = ckpt.step as usize;
+        self.scaler = DynamicLossScaler::new(ckpt.loss_scale)
+            .with_growth_interval(200);
+        Ok(())
+    }
+
+    /// Snapshot current state.
+    pub fn checkpoint(&self) -> crate::checkpoint::Checkpoint {
+        crate::checkpoint::Checkpoint {
+            step: self.step as u64,
+            loss_scale: self.scaler.scale(),
+            params: self.params.clone(),
+            m: self.m.clone(),
+            v: self.v.clone(),
+        }
+    }
+
+    /// Save a checkpoint to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.checkpoint().save(path)?;
+        Ok(())
+    }
+
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    /// Run `steps` optimizer steps over the per-rank datasets.
+    /// `datasets.len()` must equal the topology world size.
+    pub fn run(&mut self, datasets: &[ShardedDataset], steps: usize,
+               total_steps_for_lr: usize) -> Result<TrainReport> {
+        anyhow::ensure!(
+            datasets.len() == self.world,
+            "need {} datasets (one per rank), got {}",
+            self.world, datasets.len()
+        );
+        let n = self.params.len();
+        let k = self.cfg.train.accum_steps;
+        let batch = self.train_step.batch;
+        let seq = self.train_step.seq;
+        let mut report = TrainReport::default();
+        let mut meter = ThroughputMeter::new();
+        let mut sw = Stopwatch::new();
+        let wall = Stopwatch::new();
+
+        let orders: Vec<Vec<usize>> = datasets
+            .iter()
+            .map(|d| d.epoch_order(self.step / 100, self.cfg.train.seed))
+            .collect();
+        let mut mask_rngs: Vec<Pcg64> = (0..self.world)
+            .map(|r| Pcg64::with_stream(self.cfg.train.seed, 0xDA7A + r as u64))
+            .collect();
+
+        let mut accs: Vec<GradAccumulator> =
+            (0..self.world).map(|_| GradAccumulator::new(n)).collect();
+
+        for local_step in 0..steps {
+            sw.reset();
+            // ---- 1. per-rank micro-steps (compute) ----
+            let scale = self.scaler.scale() as f32;
+            let mut loss_sum = 0.0f64;
+            let mut mlm_sum = 0.0f64;
+            let mut nsp_sum = 0.0f64;
+            let mut acc_sum = 0.0f64;
+            let mut saw_overflow = false;
+            for r in 0..self.world {
+                for micro in 0..k {
+                    let b = datasets[r].batch(
+                        &orders[r],
+                        (self.step * k + micro) % usize::MAX,
+                        batch, seq, &self.mask_cfg, &mut mask_rngs[r],
+                    );
+                    let out = self.train_step.run(&self.params, &b, scale)?;
+                    if !out.grad_norm.is_finite() || !out.loss.is_finite() {
+                        saw_overflow = true;
+                    }
+                    loss_sum += out.loss as f64;
+                    mlm_sum += out.mlm_loss as f64;
+                    nsp_sum += out.nsp_loss as f64;
+                    acc_sum += out.mlm_acc as f64;
+                    accs[r].add(&out.grads);
+                    meter.add((batch * seq) as u64);
+                }
+            }
+            report.compute_s += sw.lap("compute");
+
+            // ---- 2. bucketed ring allreduce across ranks (real threads) --
+            if self.world > 1 {
+                allreduce_buckets(&mut accs, &self.buckets);
+            }
+            report.allreduce_s += sw.lap("allreduce");
+
+            // ---- 3. AMP verdict + normalization ----
+            let micro_total = (k * self.world).max(1) as f32;
+            let grads: Vec<f32> = accs[0]
+                .buffer()
+                .iter()
+                .map(|g| g / micro_total)
+                .collect();
+            saw_overflow |= has_nonfinite(&grads);
+            for a in accs.iter_mut() {
+                a.reset();
+            }
+            let verdict = self.scaler.update(saw_overflow);
+
+            // ---- 4. optimizer apply (leader) ----
+            if verdict == StepVerdict::Apply {
+                self.step += 1;
+                let lr = lr_schedule(self.cfg.train.lr, self.step,
+                                     self.cfg.train.warmup_steps,
+                                     total_steps_for_lr) as f32;
+                self.apply_step.run(&mut self.params, &grads, &mut self.m,
+                                    &mut self.v, self.step as f32, lr)?;
+            } else {
+                report.skipped_steps += 1;
+            }
+            report.apply_s += sw.lap("apply");
+
+            // ---- metrics ----
+            let denom = (k * self.world) as f64;
+            report.loss.push(self.step, loss_sum / denom);
+            report.mlm_loss.push(self.step, mlm_sum / denom);
+            report.nsp_loss.push(self.step, nsp_sum / denom);
+            report.mlm_acc.push(self.step, acc_sum / denom);
+            if self.cfg.train.log_every > 0
+                && (local_step + 1) % self.cfg.train.log_every == 0 {
+                log::info!(
+                    "step {:>5} loss {:.4} mlm {:.4} nsp {:.4} acc {:.3} \
+                     scale {} tok/s {:.0}",
+                    self.step, loss_sum / denom, mlm_sum / denom,
+                    nsp_sum / denom, acc_sum / denom,
+                    self.scaler.scale(), meter.recent()
+                );
+                println!(
+                    "step {:>5} | loss {:.4} | mlm {:.4} | nsp {:.4} | \
+                     acc {:.3} | scale {:>8} | tok/s {:.0}",
+                    self.step, loss_sum / denom, mlm_sum / denom,
+                    nsp_sum / denom, acc_sum / denom,
+                    self.scaler.scale(), meter.recent()
+                );
+            }
+        }
+
+        report.steps = steps;
+        report.final_loss_scale = self.scaler.scale();
+        report.tokens_per_sec = meter.average();
+        report.total_tokens = meter.total_tokens();
+        report.wall_s = wall.elapsed();
+        Ok(report)
+    }
+}
+
+/// Initialize parameters like the Python side: N(0, 0.02) clipped at 2σ
+/// for weights, ones for LayerNorm gammas, zeros for biases/betas.
+pub fn init_params(layout: &crate::model::layout::ParamLayout,
+                   rng: &mut Pcg64) -> Vec<f32> {
+    let mut out = vec![0.0f32; layout.total_len()];
+    for e in layout.entries() {
+        let seg = &mut out[e.offset..e.offset + e.len()];
+        if e.name.ends_with(".gamma") {
+            seg.iter_mut().for_each(|x| *x = 1.0);
+        } else if e.name.ends_with(".beta") || e.name.ends_with(".bias") {
+            // zeros (already)
+        } else {
+            for x in seg.iter_mut() {
+                let g = (rng.next_gaussian() * 0.02).clamp(-0.04, 0.04);
+                *x = g as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Run the real threaded ring allreduce over each rank's accumulator,
+/// one bucket at a time in backward order (Fig. 2's schedule).
+fn allreduce_buckets(accs: &mut [GradAccumulator], buckets: &[Bucket]) {
+    let world = accs.len();
+    // Move each rank's buffer out, run threads, move back.
+    let mut bufs: Vec<Vec<f32>> = accs
+        .iter_mut()
+        .map(|a| std::mem::take(a.buffer_mut_vec()))
+        .collect();
+    let handles = CollectiveGroup::new(world);
+    let buckets_owned: Vec<(usize, usize)> =
+        buckets.iter().map(|b| (b.start, b.end)).collect();
+    let joins: Vec<_> = handles
+        .into_iter()
+        .zip(bufs.drain(..))
+        .map(|(mut h, mut buf)| {
+            let bks = buckets_owned.clone();
+            std::thread::spawn(move || {
+                for (s, e) in bks {
+                    h.allreduce(&mut buf[s..e]);
+                }
+                buf
+            })
+        })
+        .collect();
+    for (a, j) in accs.iter_mut().zip(joins) {
+        *a.buffer_mut_vec() = j.join().expect("allreduce worker panicked");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::BertConfig;
+
+    #[test]
+    fn init_params_structure() {
+        let layout = BertConfig::preset("bert-micro").unwrap().param_layout();
+        let mut rng = Pcg64::new(1);
+        let p = init_params(&layout, &mut rng);
+        assert_eq!(p.len(), 146_178);
+        // gamma segment is ones
+        let g = layout.find("embeddings.layernorm.gamma").unwrap();
+        assert!(p[g.offset..g.offset + g.len()].iter().all(|&x| x == 1.0));
+        // bias segment is zeros
+        let b = layout.find("cls.pooler.bias").unwrap();
+        assert!(p[b.offset..b.offset + b.len()].iter().all(|&x| x == 0.0));
+        // weights are clipped gaussians
+        let w = layout.find("embeddings.word_embeddings").unwrap();
+        let seg = &p[w.offset..w.offset + w.len()];
+        assert!(seg.iter().all(|&x| x.abs() <= 0.04));
+        assert!(seg.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn allreduce_buckets_sums_across_ranks() {
+        let layout = crate::model::layout::ParamLayout::from_shapes(&[
+            ("a".into(), vec![100]),
+            ("b".into(), vec![57]),
+        ]);
+        let buckets = build_buckets(&layout, 64);
+        let mut accs: Vec<GradAccumulator> =
+            (0..3).map(|_| GradAccumulator::new(157)).collect();
+        for (r, acc) in accs.iter_mut().enumerate() {
+            let g: Vec<f32> = (0..157).map(|i| (r * 200 + i) as f32).collect();
+            acc.add(&g);
+        }
+        let want: Vec<f32> = (0..157)
+            .map(|i| (0..3).map(|r| (r * 200 + i) as f32).sum())
+            .collect();
+        allreduce_buckets(&mut accs, &buckets);
+        for acc in &accs {
+            crate::testkit::assert_allclose(acc.buffer(), &want, 1e-4, 1e-5);
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Terminal line/bar plots for the bench harnesses — the figures of the
+//! paper (loss curves, scaling curves, timelines) are rendered as ASCII
+//! so `cargo bench` output is self-contained and diffable.
+
+/// A named data series for [`plot_series`].
+pub struct Series<'a> {
+    pub name: &'a str,
+    pub points: &'a [(f64, f64)],
+    pub marker: char,
+}
+
+/// Render one or more (x, y) series on a shared-axis ASCII grid.
+pub fn plot_series(title: &str, series: &[Series], width: usize,
+                   height: usize) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    let all: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().cloned())
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if all.is_empty() {
+        out.push_str("(no data)\n");
+        return out;
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (x, y) in &all {
+        xmin = xmin.min(*x);
+        xmax = xmax.max(*x);
+        ymin = ymin.min(*y);
+        ymax = ymax.max(*y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for s in series {
+        for (x, y) in s.points {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let cx = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64)
+                .round() as usize;
+            let cy = (((y - ymin) / (ymax - ymin)) * (height - 1) as f64)
+                .round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = s.marker;
+        }
+    }
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{ymax:>10.3} |")
+        } else if i == height - 1 {
+            format!("{ymin:>10.3} |")
+        } else {
+            format!("{:>10} |", "")
+        };
+        out.push_str(&label);
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>10}  {}\n", "", "-".repeat(width)));
+    out.push_str(&format!("{:>10}  {:<.3}{}{:>.3}\n", "", xmin,
+                          " ".repeat(width.saturating_sub(12)), xmax));
+    for s in series {
+        out.push_str(&format!("    {} = {}\n", s.marker, s.name));
+    }
+    out
+}
+
+/// Horizontal bar chart: one labelled bar per (label, value).
+pub fn bar_chart(title: &str, rows: &[(String, f64)], width: usize) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    let max = rows.iter().map(|(_, v)| *v).fold(0.0f64, f64::max);
+    let lw = rows.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    for (label, v) in rows {
+        let n = if max > 0.0 {
+            ((v / max) * width as f64).round() as usize
+        } else {
+            0
+        };
+        out.push_str(&format!("{:<lw$}  {} {:.3}\n", label,
+                              "#".repeat(n.max(if *v > 0.0 {1} else {0})), v));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plot_contains_markers_and_legend() {
+        let pts = [(0.0, 0.0), (1.0, 1.0), (2.0, 4.0)];
+        let s = Series { name: "sq", points: &pts, marker: '*' };
+        let out = plot_series("t", &[s], 40, 10);
+        assert!(out.contains('*'));
+        assert!(out.contains("sq"));
+    }
+
+    #[test]
+    fn plot_empty_is_graceful() {
+        let s = Series { name: "e", points: &[], marker: 'x' };
+        assert!(plot_series("t", &[s], 10, 5).contains("no data"));
+    }
+
+    #[test]
+    fn bars_scale_with_value() {
+        let rows = vec![("a".to_string(), 1.0), ("b".to_string(), 2.0)];
+        let out = bar_chart("t", &rows, 20);
+        let a_hashes = out.lines().nth(1).unwrap().matches('#').count();
+        let b_hashes = out.lines().nth(2).unwrap().matches('#').count();
+        assert!(b_hashes > a_hashes);
+    }
+}

@@ -1,0 +1,158 @@
+//! Human-readable formatting for bytes, counts, and durations — used by
+//! the CLI, the metrics reporters, and every bench harness table.
+
+/// `1536 -> "1.50 KiB"`, `1.36e9 -> "1.27 GiB"`.
+pub fn human_bytes(bytes: f64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes;
+    let mut u = 0;
+    while v.abs() >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", v as i64, UNITS[u])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// `16752700000 -> "16.75 G"` (SI, for token counts etc.).
+pub fn human_count(n: f64) -> String {
+    const UNITS: [&str; 5] = ["", "K", "M", "G", "T"];
+    let mut v = n;
+    let mut u = 0;
+    while v.abs() >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{:.0}", v)
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Seconds to a compact human duration: `93784.0 -> "1d 2h 3m"`,
+/// `0.00123 -> "1.23 ms"`.
+pub fn human_duration(seconds: f64) -> String {
+    if seconds < 0.0 {
+        return format!("-{}", human_duration(-seconds));
+    }
+    if seconds < 1e-3 {
+        return format!("{:.2} us", seconds * 1e6);
+    }
+    if seconds < 1.0 {
+        return format!("{:.2} ms", seconds * 1e3);
+    }
+    if seconds < 60.0 {
+        return format!("{:.2} s", seconds);
+    }
+    let total = seconds.round() as u64;
+    let (d, rem) = (total / 86_400, total % 86_400);
+    let (h, rem) = (rem / 3_600, rem % 3_600);
+    let (m, s) = (rem / 60, rem % 60);
+    let mut parts = Vec::new();
+    if d > 0 {
+        parts.push(format!("{d}d"));
+    }
+    if h > 0 {
+        parts.push(format!("{h}h"));
+    }
+    if m > 0 && d == 0 {
+        parts.push(format!("{m}m"));
+    }
+    if s > 0 && d == 0 && h == 0 {
+        parts.push(format!("{s}s"));
+    }
+    if parts.is_empty() {
+        parts.push("0s".to_string());
+    }
+    parts.join(" ")
+}
+
+/// Right-pad to `w` columns (for plain-text tables).
+pub fn pad(s: &str, w: usize) -> String {
+    if s.len() >= w {
+        s.to_string()
+    } else {
+        format!("{s}{}", " ".repeat(w - s.len()))
+    }
+}
+
+/// Left-pad to `w` columns.
+pub fn rpad(s: &str, w: usize) -> String {
+    if s.len() >= w {
+        s.to_string()
+    } else {
+        format!("{}{s}", " ".repeat(w - s.len()))
+    }
+}
+
+/// Render rows as an aligned table with a header separator.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let line: Vec<String> = headers
+        .iter()
+        .zip(&widths)
+        .map(|(h, w)| pad(h, *w))
+        .collect();
+    out.push_str(&line.join("  "));
+    out.push('\n');
+    out.push_str(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>()
+        .join("  "));
+    out.push('\n');
+    for row in rows {
+        let line: Vec<String> = row
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| pad(c, *w))
+            .collect();
+        out.push_str(&line.join("  "));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(human_bytes(512.0), "512 B");
+        assert_eq!(human_bytes(1536.0), "1.50 KiB");
+        assert_eq!(human_bytes(1.36e9), "1.27 GiB");
+    }
+
+    #[test]
+    fn count_units() {
+        assert_eq!(human_count(999.0), "999");
+        assert_eq!(human_count(16_752_700_000.0), "16.75 G");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(human_duration(0.00123), "1.23 ms");
+        assert_eq!(human_duration(45.0), "45.00 s");
+        assert_eq!(human_duration(93_784.0), "1d 2h");
+        assert_eq!(human_duration(3_660.0), "1h 1m");
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(&["a", "bb"], &[vec!["xxx".into(), "y".into()]]);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("a  "));
+        assert!(lines[2].starts_with("xxx"));
+    }
+}

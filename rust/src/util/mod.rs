@@ -1,0 +1,17 @@
+//! Small shared utilities: deterministic PRNG, CRC32, formatting helpers,
+//! a stopwatch, and terminal plotting for the benchmark harnesses.
+//!
+//! These exist because the offline build has no `rand`, `humantime`, or
+//! plotting crates — they are substrates per DESIGN.md §10.
+
+pub mod ascii_plot;
+pub mod crc32;
+pub mod fmt;
+pub mod prng;
+pub mod stopwatch;
+
+pub use ascii_plot::{plot_series, Series};
+pub use crc32::crc32;
+pub use fmt::{human_bytes, human_count, human_duration};
+pub use prng::Pcg64;
+pub use stopwatch::Stopwatch;

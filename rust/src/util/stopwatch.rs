@@ -1,0 +1,114 @@
+//! Wall-clock stopwatch with named laps — the timing primitive behind the
+//! bench harnesses and the trainer's per-phase breakdown (fwd / bwd /
+//! allreduce / apply), mirroring the paper's Figure-2/5 span taxonomy.
+
+use std::time::Instant;
+
+/// A stopwatch that records named laps.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+    laps: Vec<(String, f64)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Self { start: now, last: now, laps: Vec::new() }
+    }
+
+    /// Seconds since construction.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Record a lap: seconds since the previous lap (or start).
+    pub fn lap(&mut self, name: &str) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.laps.push((name.to_string(), dt));
+        dt
+    }
+
+    /// All recorded laps.
+    pub fn laps(&self) -> &[(String, f64)] {
+        &self.laps
+    }
+
+    /// Sum of laps with the given name.
+    pub fn total(&self, name: &str) -> f64 {
+        self.laps.iter().filter(|(n, _)| n == name).map(|(_, d)| d).sum()
+    }
+
+    /// Reset everything.
+    pub fn reset(&mut self) {
+        let now = Instant::now();
+        self.start = now;
+        self.last = now;
+        self.laps.clear();
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run `f` `n` times and return (min, mean, max) seconds — the bench
+/// harness kernel (criterion is unavailable offline).
+pub fn bench_times(n: usize, mut f: impl FnMut()) -> (f64, f64, f64) {
+    assert!(n > 0);
+    let mut times = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    (min, mean, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        sw.lap("a");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        sw.lap("a");
+        sw.lap("b");
+        assert_eq!(sw.laps().len(), 3);
+        assert!(sw.total("a") >= 0.004);
+        assert!(sw.total("b") < sw.total("a"));
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, dt) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn bench_times_ordering() {
+        let (min, mean, max) = bench_times(5, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(min <= mean && mean <= max);
+    }
+}

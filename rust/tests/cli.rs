@@ -1,0 +1,156 @@
+//! CLI smoke tests: drive the real `bertdist` binary end to end.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_bertdist"))
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = bin().output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("USAGE"));
+    assert!(text.contains("shard-data"));
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn unknown_option_is_rejected() {
+    let out = bin().args(["cost", "--dayz", "3"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--dayz"));
+}
+
+#[test]
+fn cost_command_prints_paper_tables() {
+    let out = bin().arg("cost").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("$624000"));
+    assert!(text.contains("$4768000"));
+    assert!(text.contains("25804.8"));
+}
+
+#[test]
+fn scaling_command_reports_headline() {
+    let out = bin().args(["scaling", "--mode", "multinode"]).output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("32M8G"));
+    assert!(text.contains("headline"));
+}
+
+#[test]
+fn simulate_command_renders_timeline() {
+    let out = bin()
+        .args(["simulate", "--topo", "2M1G", "--accum", "2",
+               "--print-topology"])
+        .output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("compute utilization"));
+    assert!(text.contains("Node 0"));
+    assert!(text.contains("gpu"));
+}
+
+#[test]
+fn profile_grads_matches_figure4() {
+    let out = bin().args(["profile-grads", "--preset", "bert-large"])
+        .output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("attention"));
+    assert!(text.contains("dense"));
+}
+
+#[test]
+fn amp_demo_runs() {
+    let out = bin().args(["amp-demo", "--steps", "50"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("fp16"));
+    assert!(text.contains("scale"));
+}
+
+#[test]
+fn shard_then_train_roundtrip() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let dir = std::env::temp_dir().join("bertdist_cli_train");
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = bin()
+        .args(["shard-data", "--out", dir.to_str().unwrap(), "--docs", "12",
+               "--shards", "2", "--vocab-size", "512"])
+        .output().unwrap();
+    assert!(out.status.success(),
+            "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = bin()
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .args(["train", "--preset", "bert-micro", "--topo", "1M2G",
+               "--steps", "4", "--accum", "1", "--batch", "2", "--seq",
+               "32", "--data-dir", dir.to_str().unwrap(), "--log-every",
+               "2", "--lr", "1e-3"])
+        .output().unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(),
+            "stdout:\n{text}\nstderr:\n{}",
+            String::from_utf8_lossy(&out.stderr));
+    assert!(text.contains("phase 1 done"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn info_lists_artifacts() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let out = bin()
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .arg("info")
+        .output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("bert-micro"));
+    assert!(text.contains("apply_lamb"));
+}
+
+#[test]
+fn train_rejects_oversized_vocab() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let dir = std::env::temp_dir().join("bertdist_cli_badvocab");
+    let _ = std::fs::remove_dir_all(&dir);
+    bin().args(["shard-data", "--out", dir.to_str().unwrap(), "--docs",
+                "12", "--shards", "2", "--vocab-size", "4096"])
+        .output().unwrap();
+    let out = bin()
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .args(["train", "--preset", "bert-micro", "--steps", "1",
+               "--batch", "2", "--seq", "32",
+               "--data-dir", dir.to_str().unwrap()])
+        .output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("vocab"));
+    let _ = std::fs::remove_dir_all(&dir);
+}

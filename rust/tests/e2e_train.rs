@@ -1,0 +1,250 @@
+//! Integration: the full training stack against real AOT artifacts.
+//! Requires `make artifacts` (skips gracefully otherwise — CI runs
+//! `make test` which guarantees artifacts exist).
+
+use std::path::{Path, PathBuf};
+
+use bertdist::config::RunConfig;
+use bertdist::coordinator::{prepare_datasets, train_run};
+use bertdist::data::corpus::SyntheticCorpus;
+use bertdist::data::{build_shards, Vocab};
+use bertdist::runtime::Engine;
+use bertdist::topology::Topology;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+fn make_data(dir: &Path, vocab_size: usize, shards: usize) {
+    let _ = std::fs::remove_dir_all(dir);
+    std::fs::create_dir_all(dir).unwrap();
+    let docs = SyntheticCorpus::new(9, 2_000).documents(24, 8, 10);
+    let vocab = Vocab::from_documents(&docs, vocab_size);
+    vocab.save(&dir.join("vocab.txt")).unwrap();
+    build_shards(&docs, &vocab, shards, dir, "train", 9).unwrap();
+}
+
+fn base_cfg(topo: &str) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.train.preset = "bert-micro".into();
+    cfg.train.variant = "fused_f32".into();
+    cfg.train.lr = 1e-3;
+    cfg.train.warmup_steps = 2;
+    cfg.train.accum_steps = 2;
+    cfg.train.log_every = 0;
+    cfg.cluster.topo = Topology::parse(topo).unwrap();
+    cfg
+}
+
+#[test]
+fn training_reduces_loss_end_to_end() {
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let dir = std::env::temp_dir().join("bertdist_it_train");
+    make_data(&dir, 512, 2);
+    let engine = Engine::cpu(&art).unwrap();
+    let cfg = base_cfg("1M2G");
+    let out = train_run(&engine, &cfg, &dir, 25, 0, 2, 32, None).unwrap();
+    let r = &out.phase1;
+    assert_eq!(r.steps, 25);
+    let head = r.loss.points[0].1;
+    let tail = r.loss.tail_mean(5);
+    assert!(tail < head, "loss did not improve: {head} -> {tail}");
+    assert!(tail.is_finite());
+    assert_eq!(r.skipped_steps, 0, "no overflow expected in f32");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn world_sizes_agree_on_sync_semantics() {
+    // Data-parallel invariant: with the SAME total micro-batches, the
+    // averaged gradient magnitude (and thus training) is stable across
+    // topologies; here we check 1M1G and 1M2G both learn and produce
+    // finite params.
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let engine = Engine::cpu(&art).unwrap();
+    for topo in ["1M1G", "1M2G", "2M2G"] {
+        let dir = std::env::temp_dir()
+            .join(format!("bertdist_it_world_{topo}"));
+        make_data(&dir, 512, 4);
+        let cfg = base_cfg(topo);
+        let out = train_run(&engine, &cfg, &dir, 6, 0, 2, 32, None).unwrap();
+        assert!(out.phase1.loss.tail_mean(3).is_finite(), "{topo}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn two_phase_schedule_runs_seq512() {
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    // bert-micro has no phase-2 artifact (max_seq 64); bert-tiny does.
+    let dir = std::env::temp_dir().join("bertdist_it_phase2");
+    make_data(&dir, 8192, 2);
+    let engine = Engine::cpu(&art).unwrap();
+    let mut cfg = base_cfg("1M1G");
+    cfg.train.preset = "bert-tiny".into();
+    cfg.train.accum_steps = 1;
+    let out = train_run(&engine, &cfg, &dir, 3, 2, 8, 128, None).unwrap();
+    let r2 = out.phase2.expect("phase 2 must run");
+    assert_eq!(r2.steps, 2);
+    assert!(r2.loss.tail_mean(2).is_finite());
+    // phase-2 starts from phase-1 weights: its loss should not be at
+    // random-init level + margin (ln(8192)+ln2 ~ 9.7)
+    assert!(r2.loss.points[0].1 < 11.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoint_resume_is_exact() {
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let dir = std::env::temp_dir().join("bertdist_it_ckpt");
+    make_data(&dir, 512, 2);
+    let engine = Engine::cpu(&art).unwrap();
+    let cfg = base_cfg("1M2G");
+    let ck = dir.join("t.ckpt");
+
+    // run 6 steps with a checkpoint at step 6
+    let out_a = train_run(&engine, &cfg, &dir, 6, 0, 2, 32, Some(&ck))
+        .unwrap();
+    assert!(ck.exists());
+    // resume and run 0 more steps: state must load cleanly
+    let ckpt = bertdist::checkpoint::Checkpoint::load(&ck).unwrap();
+    assert_eq!(ckpt.step as usize, out_a.trainer_step);
+    assert!(ckpt.params.iter().all(|p| p.is_finite()));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn variant_artifacts_agree_on_forward_loss() {
+    // All four train-step variants must compute the same loss (within
+    // bf16 tolerance) for identical params+batch — the Fig. 8 invariant
+    // at the artifact level.
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    use bertdist::data::masking::{build_batch, MaskingConfig};
+    use bertdist::data::PairExample;
+    use bertdist::trainer::init_params;
+    use bertdist::util::Pcg64;
+
+    let engine = Engine::cpu(&art).unwrap();
+    let model = engine.model("bert-micro").unwrap();
+    let mut rng = Pcg64::new(4);
+    let params = init_params(&model.layout, &mut rng);
+    let ex = PairExample {
+        tokens_a: (10..22).collect(),
+        tokens_b: (40..52).collect(),
+        is_next: false,
+    };
+    let cfg = MaskingConfig { vocab_size: 512, ..Default::default() };
+    let batch = build_batch(&[ex.clone(), ex], 32, &cfg, &mut rng);
+
+    let mut losses = Vec::new();
+    for variant in ["unfused_f32", "fused_f32", "bf16", "fused_bf16"] {
+        let step = engine.train_step("bert-micro", variant, 2, 32).unwrap();
+        let out = step.run(&params, &batch, 1.0).unwrap();
+        losses.push((variant, out.loss));
+    }
+    let f32_loss = losses[0].1;
+    for (variant, loss) in &losses {
+        let tol = if variant.contains("bf16") { 0.03 } else { 1e-4 };
+        assert!(((loss - f32_loss) / f32_loss).abs() < tol,
+                "{variant}: {loss} vs {f32_loss}");
+    }
+}
+
+#[test]
+fn grads_identical_across_replicas_after_allreduce() {
+    // The core data-parallel invariant: after sync, every rank holds the
+    // same averaged gradient.
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    use bertdist::collectives::CollectiveGroup;
+    use bertdist::data::masking::{build_batch, MaskingConfig};
+    use bertdist::data::PairExample;
+    use bertdist::trainer::init_params;
+    use bertdist::util::Pcg64;
+
+    let engine = Engine::cpu(&art).unwrap();
+    let model = engine.model("bert-micro").unwrap();
+    let step = engine.train_step("bert-micro", "fused_f32", 2, 32).unwrap();
+    let mut rng = Pcg64::new(6);
+    let params = init_params(&model.layout, &mut rng);
+    let cfg = MaskingConfig { vocab_size: 512, ..Default::default() };
+
+    // each "rank" computes grads on different data
+    let grads: Vec<Vec<f32>> = (0..3u32)
+        .map(|r| {
+            let ex = PairExample {
+                tokens_a: (10 + r..24 + r).collect(),
+                tokens_b: (40 + r..52 + r).collect(),
+                is_next: r % 2 == 0,
+            };
+            let b = build_batch(&[ex.clone(), ex], 32, &cfg, &mut rng);
+            step.run(&params, &b, 1.0).unwrap().grads
+        })
+        .collect();
+
+    // serial average
+    let n = grads[0].len();
+    let mut want = vec![0.0f32; n];
+    for g in &grads {
+        for (w, x) in want.iter_mut().zip(g) {
+            *w += x / 3.0;
+        }
+    }
+
+    // threaded allreduce_mean
+    let handles = CollectiveGroup::new(3);
+    let joins: Vec<_> = handles
+        .into_iter()
+        .zip(grads)
+        .map(|(mut h, mut g)| {
+            std::thread::spawn(move || {
+                h.allreduce_mean(&mut g);
+                g
+            })
+        })
+        .collect();
+    let results: Vec<Vec<f32>> =
+        joins.into_iter().map(|j| j.join().unwrap()).collect();
+    for r in &results {
+        bertdist::testkit::assert_allclose(r, &want, 1e-6, 1e-4);
+    }
+    // all replicas identical
+    for r in &results[1..] {
+        assert_eq!(r.len(), results[0].len());
+        bertdist::testkit::assert_allclose(r, &results[0], 0.0, 0.0);
+    }
+}
+
+#[test]
+fn dataset_partition_covers_everything_once() {
+    let dir = std::env::temp_dir().join("bertdist_it_partition");
+    make_data(&dir, 512, 8);
+    let world = 4;
+    let ds = prepare_datasets(&dir, world).unwrap();
+    let total: usize = ds.iter().map(|d| d.len()).sum();
+    // all shards assigned, 2 shards per rank
+    for d in &ds {
+        assert_eq!(d.shard_paths().len(), 2);
+    }
+    let ds1 = prepare_datasets(&dir, 1).unwrap();
+    assert_eq!(total, ds1[0].len());
+    let _ = std::fs::remove_dir_all(&dir);
+}

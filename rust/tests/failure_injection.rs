@@ -1,0 +1,169 @@
+//! Failure injection across the stack: corrupt shards, poisoned
+//! gradients, missing artifacts, malformed manifests — the system must
+//! fail loudly and recover where the design says it recovers.
+
+use std::path::PathBuf;
+
+use bertdist::data::{ShardedDataset};
+use bertdist::precision::{has_nonfinite, DynamicLossScaler, StepVerdict};
+use bertdist::runtime::{Engine, Manifest};
+use bertdist::shard::{shard_file_name, ShardReader, ShardWriter};
+use bertdist::util::Pcg64;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+#[test]
+fn corrupted_shard_record_fails_crc_not_garbage() {
+    let dir = std::env::temp_dir().join("bertdist_fi_shard");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(shard_file_name("train", 0, 1));
+    {
+        let mut w = ShardWriter::create(&path).unwrap();
+        let ex = bertdist::data::PairExample {
+            tokens_a: vec![10, 11, 12],
+            tokens_b: vec![20, 21],
+            is_next: true,
+        };
+        for _ in 0..5 {
+            w.append(&ex.to_bytes()).unwrap();
+        }
+        w.finish().unwrap();
+    }
+    // flip a byte inside record payloads
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[40] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let mut r = ShardReader::open(&path).unwrap();
+    let results: Vec<_> = (0..r.len()).map(|i| r.read(i)).collect();
+    assert!(results.iter().any(|x| x.is_err()),
+            "corruption must surface as an error");
+    // opening through the dataset layer propagates the error
+    assert!(ShardedDataset::open(&dir, "train", 0, 1).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn scaler_rides_through_repeated_overflows() {
+    let mut scaler = DynamicLossScaler::new(65536.0).with_growth_interval(8);
+    let mut rng = Pcg64::new(88);
+    let mut applied = 0;
+    for _ in 0..500 {
+        // 5% of steps produce non-finite grads
+        let grads = if rng.chance(0.05) {
+            vec![f32::NAN, 1.0]
+        } else {
+            vec![0.1, -0.2]
+        };
+        if scaler.update(has_nonfinite(&grads)) == StepVerdict::Apply {
+            applied += 1;
+        }
+    }
+    assert!(applied > 400, "most steps should still apply: {applied}");
+    assert!(scaler.scale() >= 1.0 && scaler.scale().is_finite());
+}
+
+#[test]
+fn missing_artifact_key_is_a_clean_error() {
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let engine = Engine::cpu(&art).unwrap();
+    let err = engine
+        .train_step("bert-micro", "nonexistent_variant", 2, 32)
+        .map(|_| ())
+        .unwrap_err();
+    assert!(err.to_string().contains("no train artifact"));
+    let err = engine.apply_step("bert-micro", "adagrad").map(|_| ())
+        .unwrap_err();
+    assert!(err.to_string().contains("apply_adagrad"));
+}
+
+#[test]
+fn wrong_batch_shape_is_rejected_before_pjrt() {
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    use bertdist::data::masking::{build_batch, MaskingConfig};
+    use bertdist::data::PairExample;
+    use bertdist::trainer::init_params;
+
+    let engine = Engine::cpu(&art).unwrap();
+    let model = engine.model("bert-micro").unwrap();
+    let step = engine.train_step("bert-micro", "fused_f32", 2, 32).unwrap();
+    let mut rng = Pcg64::new(1);
+    let params = init_params(&model.layout, &mut rng);
+    let ex = PairExample { tokens_a: vec![10], tokens_b: vec![11],
+                           is_next: true };
+    let cfg = MaskingConfig { vocab_size: 512, ..Default::default() };
+    // wrong seq (64 instead of 32)
+    let bad = build_batch(&[ex.clone(), ex.clone()], 64, &cfg, &mut rng);
+    assert!(step.run(&params, &bad, 1.0).is_err());
+    // wrong param count
+    let good = build_batch(&[ex.clone(), ex], 32, &cfg, &mut rng);
+    assert!(step.run(&params[..10], &good, 1.0).is_err());
+}
+
+#[test]
+fn malformed_manifest_is_rejected() {
+    let dir = std::env::temp_dir().join("bertdist_fi_manifest");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    // truncated JSON
+    std::fs::write(dir.join("manifest.json"), "{\"models\": {").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    // valid JSON, wrong schema
+    std::fs::write(dir.join("manifest.json"), "{\"models\": {\"m\": {}}}")
+        .unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    // layout/param_count inconsistency
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"models": {"m": {"config": {"vocab_size": 10, "hidden": 4,
+            "layers": 1, "heads": 1, "intermediate": 8, "max_seq": 8,
+            "type_vocab": 2}, "param_count": 999999,
+            "layout": [{"name": "w", "offset": 0, "shape": [2]}],
+            "artifacts": {}}}}"#,
+    ).unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(err.to_string().contains("layout total"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dataset_open_with_more_ranks_than_shards_fails_clearly() {
+    let dir = std::env::temp_dir().join("bertdist_fi_ranks");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    // one shard, two ranks -> rank 1 has nothing
+    let path = dir.join(shard_file_name("train", 0, 1));
+    let mut w = ShardWriter::create(&path).unwrap();
+    w.append(&bertdist::data::PairExample {
+        tokens_a: vec![10], tokens_b: vec![11], is_next: true,
+    }.to_bytes()).unwrap();
+    w.finish().unwrap();
+    assert!(ShardedDataset::open(&dir, "train", 0, 2).is_ok());
+    let err = ShardedDataset::open(&dir, "train", 1, 2).map(|_| ())
+        .unwrap_err();
+    assert!(err.to_string().contains("no shards"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoint_corruption_blocks_resume() {
+    let ck = bertdist::checkpoint::Checkpoint::new(64);
+    let path = std::env::temp_dir().join("bertdist_fi_ckpt.bin");
+    ck.save(&path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(bertdist::checkpoint::Checkpoint::load(&path).is_err());
+    let _ = std::fs::remove_file(&path);
+}
