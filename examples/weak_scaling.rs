@@ -8,13 +8,30 @@
 //!        [--grad-mb 128]
 
 use bertdist::cliopt::Args;
+use bertdist::collectives::pool::{CollectivePool, MicroStats, RankCompute,
+                                  WireFormat};
 use bertdist::collectives::CollectiveGroup;
+use bertdist::grad::BucketRange;
 use bertdist::simulator::scaling::{figure6_topologies, sweep_intra_vs_inter,
                                    weak_scaling};
 use bertdist::simulator::IterationModel;
 use bertdist::topology::Topology;
 use bertdist::util::fmt::render_table;
 use bertdist::util::Stopwatch;
+
+/// Constant synthetic gradient so the reduced value is checkable.
+struct Ones {
+    n: usize,
+}
+
+impl RankCompute for Ones {
+    fn micro(&self, _rank: usize, _step: usize, _micro: usize, _p: &[f32],
+             _scale: f32, out: &mut Vec<f32>) -> anyhow::Result<MicroStats> {
+        out.resize(self.n, 0.0);
+        out.fill(1.0);
+        Ok(MicroStats::default())
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_from(std::env::args().skip(1))?;
@@ -90,5 +107,50 @@ fn main() -> anyhow::Result<()> {
     println!("(single-core testbed: ranks time-share one CPU, so wall time \
               grows with ranks; the correctness and traffic pattern are \
               what this cross-check exercises)");
+
+    // ---- persistent pool: amortized repeated-step exchange ----
+    // The per-step spawn above pays thread + channel setup on every
+    // call; the pool pays it once and reuses workers/channels, which is
+    // what the trainer hot loop does (ISSUE 1).
+    let steps = 8;
+    println!(
+        "\npersistent pool, {steps} repeated steps over the same payload \
+         (8 buckets, Fig. 2 eager schedule):\n"
+    );
+    let mut rows = Vec::new();
+    for world in [1usize, 2, 4] {
+        let ones = Ones { n: n_elems };
+        let mut pool =
+            CollectivePool::new(world, n_elems,
+                                BucketRange::even_split(n_elems, 8),
+                                WireFormat::F32);
+        pool.step(&[], 1.0, 1, 0, true, &ones)?; // warmup
+        let sw = Stopwatch::new();
+        let mut exposed = 0.0;
+        let mut comm = 0.0;
+        for s in 1..=steps {
+            let out = pool.step(&[], 1.0, 1, s, true, &ones)?;
+            exposed += out.exposed_comm_s;
+            comm += out.comm_s;
+        }
+        let dt = sw.elapsed() / steps as f64;
+        // every element must be the sum over ranks
+        let got = pool.leader_grads()[0];
+        assert_eq!(got, world as f32, "reduced value mismatch");
+        let algbw = (n_elems * 4) as f64 / dt / 1e9;
+        let eff = if comm > 0.0 {
+            (1.0 - exposed / comm).clamp(0.0, 1.0) * 100.0
+        } else {
+            0.0
+        };
+        rows.push(vec![
+            world.to_string(),
+            format!("{:.4}s", dt),
+            format!("{:.2} GB/s", algbw),
+            format!("{eff:.0}%"),
+        ]);
+    }
+    println!("{}", render_table(
+        &["ranks", "wall/step", "alg bandwidth", "overlap eff"], &rows));
     Ok(())
 }

@@ -1,30 +1,91 @@
 //! Perf bench: L3 hot-path microbenchmarks for the EXPERIMENTS.md §Perf
-//! iteration loop — allreduce bandwidth, batch assembly, shard read,
-//! bucket planning, LAMB host step, f16 conversion throughput, and the
-//! end-to-end PJRT step overhead breakdown.
+//! iteration loop — allreduce bandwidth, the persistent-pool vs
+//! per-step-spawn step executor comparison (ISSUE 1 tentpole), batch
+//! assembly, shard read, bucket planning, LAMB host step, f16 conversion
+//! throughput, and the end-to-end PJRT step overhead breakdown.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
+//!
+//! Quick mode (CI smoke, see `scripts/bench_smoke.sh`): set `BENCH_QUICK=1`
+//! to shrink payloads/iterations and emit machine-readable rows to
+//! `BENCH_hotpath.json` (override the path with `BENCH_JSON_OUT`), so the
+//! perf trajectory can be tracked across PRs.
 
+use std::collections::BTreeMap;
+
+use bertdist::collectives::pool::{CollectivePool, MicroStats, RankCompute,
+                                  WireFormat};
 use bertdist::collectives::ring::ring_allreduce_inplace;
 use bertdist::collectives::CollectiveGroup;
 use bertdist::data::masking::{build_batch, MaskingConfig};
 use bertdist::data::PairExample;
-use bertdist::grad::build_buckets;
+use bertdist::grad::{build_buckets, Bucket, BucketRange, GradAccumulator};
 use bertdist::half::F16;
+use bertdist::jsonlite::Json;
 use bertdist::model::BertConfig;
 use bertdist::optimizer::{lamb_step, OptHyper, OptState};
 use bertdist::runtime::Engine;
-use bertdist::trainer::init_params;
+use bertdist::trainer::{allreduce_buckets, init_params};
 use bertdist::util::fmt::render_table;
 use bertdist::util::stopwatch::bench_times;
 use bertdist::util::{Pcg64, Stopwatch};
 
+/// One table row + its machine-readable twin.
+struct Rows {
+    table: Vec<Vec<String>>,
+    json: Vec<(String, f64, String)>, // (name, min ms, rate text)
+}
+
+impl Rows {
+    fn push(&mut self, name: &str, min_s: f64, rate: String) {
+        self.table.push(vec![
+            name.to_string(),
+            format!("{:.3} ms", min_s * 1e3),
+            rate.clone(),
+        ]);
+        self.json.push((name.to_string(), min_s * 1e3, rate));
+    }
+}
+
+/// Trivial deterministic compute for pool dispatch benchmarks: fills the
+/// gradient vector without touching XLA.
+struct FillCompute {
+    n: usize,
+}
+
+impl RankCompute for FillCompute {
+    fn micro(&self, rank: usize, _step: usize, micro: usize, _p: &[f32],
+             _scale: f32, out: &mut Vec<f32>) -> anyhow::Result<MicroStats> {
+        out.resize(self.n, 0.0);
+        out.fill((rank + micro + 1) as f32);
+        Ok(MicroStats::default())
+    }
+}
+
+fn even_buckets(n: usize, pieces: usize) -> Vec<Bucket> {
+    BucketRange::even_split(n, pieces)
+        .iter()
+        .enumerate()
+        .map(|(i, r)| Bucket {
+            start: r.start,
+            end: r.end,
+            tensors: Vec::new(),
+            order: i,
+        })
+        .collect()
+}
+
 fn main() -> anyhow::Result<()> {
-    println!("=== perf_hotpath: coordinator hot-path microbenches ===\n");
-    let mut rows = Vec::new();
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    println!(
+        "=== perf_hotpath: coordinator hot-path microbenches{} ===\n",
+        if quick { " (quick mode)" } else { "" }
+    );
+    let mut rows = Rows { table: Vec::new(), json: Vec::new() };
 
     // ---- threaded ring allreduce bandwidth (the §4.4 data path) ----
-    let elems = 16 * 1024 * 1024 / 4; // 16 MiB payload
+    let payload_bytes = if quick { 1 << 20 } else { 16 << 20 };
+    let elems = payload_bytes / 4;
     for world in [2usize, 4] {
         let (min, _, _) = bench_times(3, || {
             let handles = CollectiveGroup::new(world);
@@ -41,12 +102,79 @@ fn main() -> anyhow::Result<()> {
                 j.join().unwrap();
             }
         });
-        rows.push(vec![
-            format!("threaded allreduce x{world} (16 MiB)"),
-            format!("{:.2} ms", min * 1e3),
+        rows.push(
+            &format!("threaded allreduce x{world} ({} MiB)",
+                     payload_bytes >> 20),
+            min,
             format!("{:.2} GB/s alg", elems as f64 * 4.0 / min / 1e9),
-        ]);
+        );
     }
+
+    // ---- persistent pool vs per-step spawn (ISSUE 1 tentpole) ----
+    // Small payloads over many repeated steps: the per-step thread /
+    // channel / allocation churn of the old hot loop is what the pool
+    // amortizes away.
+    let world = 4;
+    let n = if quick { 16 * 1024 } else { 64 * 1024 };
+    let steps = if quick { 20 } else { 40 };
+    let buckets = even_buckets(n, 4);
+    let fill = FillCompute { n };
+    let grads_proto = vec![1.0f32; n];
+    let (spawn_min, _, _) = bench_times(3, || {
+        // the OLD path: fresh CollectiveGroup + per-rank spawn per step
+        let mut accs: Vec<GradAccumulator> =
+            (0..world).map(|_| GradAccumulator::new(n)).collect();
+        for _ in 0..steps {
+            for a in accs.iter_mut() {
+                a.reset();
+                a.add(&grads_proto);
+            }
+            allreduce_buckets(&mut accs, &buckets);
+        }
+    });
+    let mut pool =
+        CollectivePool::new(world, n, BucketRange::even_split(n, 4), WireFormat::F32);
+    // warmup (first step populates the recycled wire buffers)
+    pool.step(&[], 1.0, 1, 0, true, &fill)?;
+    let (pool_min, _, _) = bench_times(3, || {
+        for s in 0..steps {
+            pool.step(&[], 1.0, 1, s, true, &fill).unwrap();
+        }
+    });
+    let speedup = spawn_min / pool_min;
+    rows.push(
+        &format!("per-step spawn allreduce x{world} ({steps} steps)"),
+        spawn_min,
+        format!("{:.1} steps/s", steps as f64 / spawn_min),
+    );
+    rows.push(
+        &format!("persistent pool allreduce x{world} ({steps} steps)"),
+        pool_min,
+        format!("{:.1} steps/s ({speedup:.2}x vs spawn)",
+                steps as f64 / pool_min),
+    );
+    println!("pool vs spawn @ world={world}, {} KiB, {steps} steps: \
+              {speedup:.2}x", n * 4 / 1024);
+    assert!(
+        speedup >= 2.0,
+        "persistent pool must give >=2x amortized step throughput over \
+         per-step spawn at world=4 (got {speedup:.2}x)"
+    );
+
+    // ---- f16 wire variant of the pooled exchange ----
+    let mut pool16 =
+        CollectivePool::new(world, n, BucketRange::even_split(n, 4), WireFormat::F16);
+    pool16.step(&[], 1.0, 1, 0, true, &fill)?;
+    let (p16_min, _, _) = bench_times(3, || {
+        for s in 0..steps {
+            pool16.step(&[], 1.0, 1, s, true, &fill).unwrap();
+        }
+    });
+    rows.push(
+        &format!("persistent pool f16 wire x{world} ({steps} steps)"),
+        p16_min,
+        format!("{:.1} steps/s", steps as f64 / p16_min),
+    );
 
     // ---- single-threaded reference allreduce ----
     let (min, _, _) = bench_times(3, || {
@@ -54,8 +182,12 @@ fn main() -> anyhow::Result<()> {
             .collect();
         ring_allreduce_inplace(&mut bufs);
     });
-    rows.push(vec!["reference allreduce x4 (4 MiB each)".into(),
-                   format!("{:.2} ms", min * 1e3), String::new()]);
+    rows.push(
+        &format!("reference allreduce x4 ({:.2} MiB each)",
+                 payload_bytes as f64 / 4.0 / (1 << 20) as f64),
+        min,
+        String::new(),
+    );
 
     // ---- batch assembly (masking pipeline) ----
     let cfg = MaskingConfig::default();
@@ -67,20 +199,18 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
     let mut rng = Pcg64::new(1);
-    let (min, _, _) = bench_times(50, || {
+    let (min, _, _) = bench_times(if quick { 10 } else { 50 }, || {
         std::hint::black_box(build_batch(&exs, 128, &cfg, &mut rng));
     });
-    rows.push(vec!["batch assembly 8x128 (mask+pack)".into(),
-                   format!("{:.3} ms", min * 1e3),
-                   format!("{:.1} Mtok/s", 8.0 * 128.0 / min / 1e6)]);
+    rows.push("batch assembly 8x128 (mask+pack)", min,
+              format!("{:.1} Mtok/s", 8.0 * 128.0 / min / 1e6));
 
     // ---- bucket planning on bert-large ----
     let layout = BertConfig::preset("bert-large").unwrap().param_layout();
-    let (min, _, _) = bench_times(20, || {
+    let (min, _, _) = bench_times(if quick { 5 } else { 20 }, || {
         std::hint::black_box(build_buckets(&layout, 1 << 22));
     });
-    rows.push(vec!["bucket planning (bert-large, 4M elems)".into(),
-                   format!("{:.3} ms", min * 1e3), String::new()]);
+    rows.push("bucket planning (bert-large, 4M elems)", min, String::new());
 
     // ---- host LAMB step on bert-mini-sized flat vector ----
     let mini = BertConfig::preset("bert-mini").unwrap().param_layout();
@@ -89,24 +219,27 @@ fn main() -> anyhow::Result<()> {
     let mut g = vec![0.001f32; n];
     let mut st = OptState::new(n);
     let h = OptHyper::default();
-    let (min, _, _) = bench_times(5, || {
+    let (min, _, _) = bench_times(if quick { 2 } else { 5 }, || {
         lamb_step(&mut p, &mut g, &mut st, &mini, 1e-3, &h);
     });
-    rows.push(vec![
-        format!("host LAMB step ({:.1}M params)", n as f64 / 1e6),
-        format!("{:.2} ms", min * 1e3),
+    rows.push(
+        &format!("host LAMB step ({:.1}M params)", n as f64 / 1e6),
+        min,
         format!("{:.0} Melem/s", n as f64 / min / 1e6),
-    ]);
+    );
 
-    // ---- f16 conversion throughput (AMP overflow scans) ----
-    let xs: Vec<f32> = (0..1_000_000).map(|i| i as f32 * 1e-3).collect();
+    // ---- f16 conversion throughput (AMP overflow scans + wire) ----
+    let count = if quick { 100_000 } else { 1_000_000 };
+    let xs: Vec<f32> = (0..count).map(|i| i as f32 * 1e-3).collect();
     let (min, _, _) = bench_times(5, || {
         let s: u32 = xs.iter().map(|&x| F16::from_f32(x).0 as u32).sum();
         std::hint::black_box(s);
     });
-    rows.push(vec!["f16 convert 1M values".into(),
-                   format!("{:.2} ms", min * 1e3),
-                   format!("{:.0} Melem/s", 1.0 / min)]);
+    rows.push(
+        &format!("f16 convert {}k values", count / 1000),
+        min,
+        format!("{:.0} Melem/s", count as f64 / min / 1e6),
+    );
 
     // ---- PJRT step overhead breakdown ----
     if std::path::Path::new("artifacts/manifest.json").exists() {
@@ -125,15 +258,41 @@ fn main() -> anyhow::Result<()> {
         let (min, mean, _) = bench_times(10, || {
             step.run(&params, &batch, 1.0).unwrap();
         });
-        rows.push(vec!["XLA compile train step (once)".into(),
-                       format!("{:.0} ms", compile_s * 1e3), String::new()]);
-        rows.push(vec!["PJRT train step bert-micro 2x32".into(),
-                       format!("{:.2} ms (mean {:.2})", min * 1e3,
-                               mean * 1e3),
-                       format!("{:.0} tok/s", 64.0 / min)]);
+        rows.push("XLA compile train step (once)", compile_s, String::new());
+        rows.push(
+            "PJRT train step bert-micro 2x32",
+            min,
+            format!("{:.0} tok/s (mean {:.2} ms)", 64.0 / min, mean * 1e3),
+        );
     }
 
-    println!("{}", render_table(&["hot path", "time", "rate"], &rows));
+    println!("{}", render_table(&["hot path", "time", "rate"], &rows.table));
+
+    // ---- machine-readable emission for the perf trajectory ----
+    if quick || std::env::var("BENCH_JSON_OUT").is_ok() {
+        let path = std::env::var("BENCH_JSON_OUT")
+            .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+        let entries: Vec<Json> = rows
+            .json
+            .iter()
+            .map(|(name, ms, rate)| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(name.clone()));
+                m.insert("min_ms".to_string(), Json::Num(*ms));
+                m.insert("rate".to_string(), Json::Str(rate.clone()));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(),
+                    Json::Str("perf_hotpath".to_string()));
+        root.insert("quick".to_string(),
+                    Json::Str(quick.to_string()));
+        root.insert("rows".to_string(), Json::Arr(entries));
+        std::fs::write(&path, Json::Obj(root).to_string())?;
+        println!("wrote {path}");
+    }
+
     println!("perf_hotpath OK");
     Ok(())
 }

@@ -108,6 +108,20 @@ impl Args {
                  Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Tri-state boolean: `None` when the option is absent, `Some(true)`
+    /// for a bare `--key` or `--key true/1/yes`, `Some(false)` for any
+    /// other explicit value — lets a CLI flag override a config default
+    /// in either direction without clobbering it when unspecified.
+    pub fn flag_opt(&self, key: &str) -> Option<bool> {
+        self.mark(key);
+        if self.flags.iter().any(|f| f == key) {
+            return Some(true);
+        }
+        self.opts.get(key).map(|s| {
+            matches!(s.as_str(), "true" | "1" | "yes")
+        })
+    }
+
     /// Comma-separated list option.
     pub fn get_list(&self, key: &str, default: &[&str]) -> Vec<String> {
         self.mark(key);
@@ -186,5 +200,19 @@ mod tests {
         assert!(a.flag("overlap"));
         let b = Args::parse_from(["x", "--overlap=false"]).unwrap();
         assert!(!b.flag("overlap"));
+    }
+
+    #[test]
+    fn tri_state_flag_distinguishes_absent_from_false() {
+        let a = Args::parse_from(["x"]).unwrap();
+        assert_eq!(a.flag_opt("overlap"), None);
+        let b = Args::parse_from(["x", "--overlap"]).unwrap();
+        assert_eq!(b.flag_opt("overlap"), Some(true));
+        let c = Args::parse_from(["x", "--overlap=false"]).unwrap();
+        assert_eq!(c.flag_opt("overlap"), Some(false));
+        let d = Args::parse_from(["x", "--overlap", "true"]).unwrap();
+        assert_eq!(d.flag_opt("overlap"), Some(true));
+        // consumed keys pass strict checking
+        c.finish_strict().unwrap();
     }
 }

@@ -12,10 +12,13 @@
 //! analytic model, which `cost` re-exports for the simulator.
 
 pub mod hierarchical;
+pub mod pool;
 pub mod ring;
 pub mod threaded;
 
 pub use hierarchical::hierarchical_allreduce_inplace;
+pub use pool::{CollectivePool, MicroStats, RankCompute, StepOutcome,
+               WireFormat};
 pub use ring::{ring_allreduce_inplace, RingPlan};
 pub use threaded::{CollectiveGroup, GroupHandle};
 

@@ -1,0 +1,801 @@
+//! Persistent collective worker pool (paper §4.4, Fig. 2): the step
+//! executor behind the trainer's hot loop.
+//!
+//! The old hot loop ran every rank's compute sequentially on one thread,
+//! then built a fresh [`super::CollectiveGroup`] plus one `thread::spawn`
+//! per rank for EVERY optimizer step and barriered on the whole exchange.
+//! This module replaces that with infrastructure wired exactly once:
+//!
+//! * **two long-lived threads per rank** — a *compute* worker that runs
+//!   the rank's micro-steps and accumulates gradients, and a *comm*
+//!   worker that owns the rank's endpoint in a reusable ring of mpsc
+//!   channels (the in-process NCCL communicator, never re-created);
+//! * **overlapped bucket exchange** — on the final micro-step the compute
+//!   worker accumulates bucket-by-bucket in backward order and hands each
+//!   bucket to its comm worker *as soon as its accumulation completes*,
+//!   so the ring allreduce of bucket `b` overlaps the accumulation of
+//!   buckets `> b` (the Fig. 2 schedule; `overlap = false` degrades to
+//!   the accumulate-everything-then-exchange barrier order — bitwise
+//!   identical results, only the timing differs);
+//! * **preallocated, reused scratch** — per-rank gradient accumulators,
+//!   per-bucket payload buffers, ring chunk plans, and wire message
+//!   vectors (recycled through per-worker free lists) are all allocated
+//!   once; the steady-state step performs no gradient-sized heap
+//!   allocation and no thread spawn (only O(buckets) stats vectors);
+//! * **optional f16 wire format** (paper §4.4 exchanges FP16 gradients):
+//!   ring payloads are converted through [`crate::half::F16`] per hop,
+//!   halving wire bytes at one rounding per hop.  Each rank quantizes the
+//!   reduced chunk it owns before the all-gather so every replica still
+//!   ends bitwise identical.
+//!
+//! Determinism: given a deterministic [`RankCompute`], the reduced
+//! buffers are a pure function of the inputs — the eager (overlap) and
+//! barrier schedules produce bitwise-identical results because the
+//! element-wise accumulation order and the ring schedule are unchanged;
+//! only *when* each bucket's exchange runs differs.  This is asserted by
+//! `tests/pool_overlap.rs`.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::ring::RingPlan;
+use crate::grad::BucketRange;
+use crate::half::F16;
+
+/// On-the-wire payload encoding for ring messages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireFormat {
+    /// Full-precision f32 payloads (bitwise-faithful exchange).
+    #[default]
+    F32,
+    /// IEEE binary16 payloads (paper §4.4): half the wire bytes, one
+    /// round-to-nearest-even per hop.
+    F16,
+}
+
+/// Per-micro-step scalar outputs a [`RankCompute`] reports back.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MicroStats {
+    pub loss: f64,
+    pub mlm_loss: f64,
+    pub nsp_loss: f64,
+    pub mlm_acc: f64,
+    /// Any non-finite loss/grad-norm observed (AMP overflow signal).
+    pub nonfinite: bool,
+}
+
+/// One rank's micro-step: fill `grads_out` with the flat gradient of this
+/// (rank, step, micro) and report scalar stats.  Called concurrently from
+/// every rank's compute worker, so implementations must be `Sync`
+/// (per-rank mutable state goes behind per-rank locks).
+pub trait RankCompute: Sync {
+    fn micro(&self, rank: usize, step_index: usize, micro: usize,
+             params: &[f32], scale: f32, grads_out: &mut Vec<f32>)
+             -> Result<MicroStats>;
+}
+
+/// Aggregated outcome of one pooled optimizer step.
+#[derive(Debug, Clone, Default)]
+pub struct StepOutcome {
+    pub loss_sum: f64,
+    pub mlm_sum: f64,
+    pub nsp_sum: f64,
+    pub acc_sum: f64,
+    pub saw_overflow: bool,
+    /// Critical-path (max over ranks) seconds in `RankCompute::micro`.
+    pub compute_s: f64,
+    /// Critical-path seconds accumulating gradients.
+    pub accum_s: f64,
+    /// Critical-path seconds of ring exchange (sum over buckets).
+    pub comm_s: f64,
+    /// Critical-path seconds the step actually WAITED on comm after its
+    /// gradient accumulation finished — the exposed (non-overlapped)
+    /// communication of Fig. 2.
+    pub exposed_comm_s: f64,
+    /// Per-bucket exchange seconds (max over ranks).
+    pub bucket_s: Vec<f64>,
+    /// Wall-clock of the whole pooled step.
+    pub wall_s: f64,
+}
+
+// ------------------------------------------------------------ wiring --
+
+/// Job dispatched to one compute worker.  The references are transmuted
+/// to `'static` by [`CollectivePool::step`]; see the SAFETY note there.
+struct Job {
+    params: &'static [f32],
+    compute: &'static (dyn RankCompute + 'static),
+    scale: f32,
+    micro_steps: usize,
+    step_index: usize,
+    overlap: bool,
+}
+
+/// Per-rank stats returned by a compute worker after each step.
+#[derive(Debug, Clone, Default)]
+struct RankStats {
+    loss_sum: f64,
+    mlm_sum: f64,
+    nsp_sum: f64,
+    acc_sum: f64,
+    nonfinite: bool,
+    compute_s: f64,
+    accum_s: f64,
+    comm_s: f64,
+    exposed_comm_s: f64,
+    bucket_s: Vec<f64>,
+}
+
+struct RankResult {
+    rank: usize,
+    res: std::result::Result<RankStats, String>,
+}
+
+/// Ring hop message: (step tag, wire payload).
+enum RingMsg {
+    F32(u32, Vec<f32>),
+    F16(u32, Vec<u16>),
+}
+
+/// Reduced bucket handed back from a comm worker to its compute worker.
+struct Reduced {
+    idx: usize,
+    data: Vec<f32>,
+    exchange_s: f64,
+}
+
+/// The persistent pool: `2 * world` threads plus the channels between
+/// them, created once and reused for every step until drop.
+pub struct CollectivePool {
+    world: usize,
+    n_elems: usize,
+    ranges: Arc<[BucketRange]>,
+    wire: WireFormat,
+    job_txs: Vec<Sender<Job>>,
+    result_rx: Receiver<RankResult>,
+    /// Per-rank accumulated (and, post-step, reduced) flat gradients.
+    /// Locked by rank `r`'s compute worker for the duration of a step;
+    /// free for inspection between steps.
+    accs: Arc<Vec<Mutex<Vec<f32>>>>,
+    compute_handles: Vec<JoinHandle<()>>,
+    comm_handles: Vec<JoinHandle<()>>,
+}
+
+impl CollectivePool {
+    /// Wire up the pool: `world` rank pairs (compute + comm worker), ring
+    /// channels between the comm workers, and per-rank flat buffers of
+    /// `n_elems`.  `ranges` is the shared bucket table (built once via
+    /// [`crate::grad::bucket_ranges`] — no per-step cloning).
+    pub fn new(world: usize, n_elems: usize, ranges: Arc<[BucketRange]>,
+               wire: WireFormat) -> CollectivePool {
+        assert!(world >= 1, "world must be >= 1");
+        let accs: Arc<Vec<Mutex<Vec<f32>>>> = Arc::new(
+            (0..world).map(|_| Mutex::new(vec![0.0f32; n_elems])).collect(),
+        );
+        // Ring channels: comm worker r sends to slot (r+1) % world and
+        // receives from slot r (same wiring as CollectiveGroup).
+        let mut ring_txs: Vec<Option<Sender<RingMsg>>> = Vec::new();
+        let mut ring_rxs: Vec<Option<Receiver<RingMsg>>> = Vec::new();
+        for _ in 0..world {
+            let (tx, rx) = channel::<RingMsg>();
+            ring_txs.push(Some(tx));
+            ring_rxs.push(Some(rx));
+        }
+        let (result_tx, result_rx) = channel::<RankResult>();
+        let mut job_txs = Vec::with_capacity(world);
+        let mut compute_handles = Vec::with_capacity(world);
+        let mut comm_handles = Vec::with_capacity(world);
+        for r in 0..world {
+            let (job_tx, job_rx) = channel::<Job>();
+            let (bucket_tx, bucket_rx) = channel::<(usize, Vec<f32>)>();
+            let (reduced_tx, reduced_rx) = channel::<Reduced>();
+            let tx_next = ring_txs[(r + 1) % world].take().unwrap();
+            let rx_prev = ring_rxs[r].take().unwrap();
+            let ranges_comm = ranges.clone();
+            comm_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pool-comm-{r}"))
+                    .spawn(move || {
+                        comm_worker(r, world, wire, &ranges_comm, bucket_rx,
+                                    reduced_tx, tx_next, rx_prev);
+                    })
+                    .expect("spawn comm worker"),
+            );
+            let ranges_cmp = ranges.clone();
+            let accs_cmp = accs.clone();
+            let result_tx = result_tx.clone();
+            compute_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pool-rank-{r}"))
+                    .spawn(move || {
+                        compute_worker(r, world, &ranges_cmp, &accs_cmp,
+                                       job_rx, bucket_tx, reduced_rx,
+                                       result_tx);
+                    })
+                    .expect("spawn compute worker"),
+            );
+            job_txs.push(job_tx);
+        }
+        drop(result_tx);
+        CollectivePool {
+            world,
+            n_elems,
+            ranges,
+            wire,
+            job_txs,
+            result_rx,
+            accs,
+            compute_handles,
+            comm_handles,
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn n_elems(&self) -> usize {
+        self.n_elems
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn wire(&self) -> WireFormat {
+        self.wire
+    }
+
+    /// Run one optimizer step across all ranks: `micro_steps` calls to
+    /// `compute.micro` per rank (in parallel across ranks on the
+    /// persistent workers), local accumulation, then the bucketed ring
+    /// allreduce — eagerly interleaved with the final accumulation when
+    /// `overlap` is set, barrier-ordered otherwise.  After this returns,
+    /// every rank's buffer (see [`Self::rank_grads`]) holds the summed
+    /// gradients, bitwise identical across ranks.
+    ///
+    /// Blocks until every rank reported, so the borrows in the request
+    /// never outlive the call (see SAFETY below).  A `RankCompute` error
+    /// on any rank still completes the exchange protocol on every rank
+    /// (no deadlock) and is then returned here.
+    pub fn step(&mut self, params: &[f32], scale: f32, micro_steps: usize,
+                step_index: usize, overlap: bool,
+                compute: &dyn RankCompute) -> Result<StepOutcome> {
+        // SAFETY: the transmutes only erase lifetimes.  Workers use the
+        // references strictly between receiving the Job and sending
+        // their RankResult, and this function does not return until it
+        // has received exactly `world` results — so the borrows are live
+        // for every use.  Channel failures below are programming errors
+        // (a worker can only exit when the pool is dropped) and panic
+        // rather than return, keeping the invariant.
+        let params_static: &'static [f32] =
+            unsafe { std::mem::transmute::<&[f32], &'static [f32]>(params) };
+        let compute_static: &'static (dyn RankCompute + 'static) = unsafe {
+            std::mem::transmute::<&(dyn RankCompute + '_),
+                                  &'static (dyn RankCompute + 'static)>(
+                compute,
+            )
+        };
+        let t0 = Instant::now();
+        for tx in &self.job_txs {
+            tx.send(Job {
+                params: params_static,
+                compute: compute_static,
+                scale,
+                micro_steps,
+                step_index,
+                overlap,
+            })
+            .expect("collective pool worker exited (prior panic?)");
+        }
+        let mut out = StepOutcome {
+            bucket_s: vec![0.0; self.ranges.len()],
+            ..Default::default()
+        };
+        let mut errs: Vec<String> = Vec::new();
+        for _ in 0..self.world {
+            let r = self
+                .result_rx
+                .recv()
+                .expect("collective pool workers died mid-step");
+            match r.res {
+                Ok(s) => {
+                    out.loss_sum += s.loss_sum;
+                    out.mlm_sum += s.mlm_sum;
+                    out.nsp_sum += s.nsp_sum;
+                    out.acc_sum += s.acc_sum;
+                    out.saw_overflow |= s.nonfinite;
+                    out.compute_s = out.compute_s.max(s.compute_s);
+                    out.accum_s = out.accum_s.max(s.accum_s);
+                    out.comm_s = out.comm_s.max(s.comm_s);
+                    out.exposed_comm_s =
+                        out.exposed_comm_s.max(s.exposed_comm_s);
+                    for (t, b) in out.bucket_s.iter_mut().zip(&s.bucket_s) {
+                        *t = t.max(*b);
+                    }
+                }
+                Err(e) => errs.push(format!("rank {}: {e}", r.rank)),
+            }
+        }
+        out.wall_s = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(errs.is_empty(), "pooled step failed: {}",
+                        errs.join("; "));
+        Ok(out)
+    }
+
+    /// Rank 0's buffer — the reduced gradients the leader normalizes and
+    /// applies.  Only call between steps (a worker holds the lock during
+    /// its step).
+    pub fn leader_grads(&self) -> MutexGuard<'_, Vec<f32>> {
+        self.rank_grads(0)
+    }
+
+    /// Any rank's buffer (tests assert cross-rank bitwise equality).
+    pub fn rank_grads(&self, rank: usize) -> MutexGuard<'_, Vec<f32>> {
+        self.accs[rank].lock().expect("pool rank buffer poisoned")
+    }
+}
+
+impl Drop for CollectivePool {
+    fn drop(&mut self) {
+        // Closing the job channels unblocks the compute workers; their
+        // bucket channels then close, unblocking the comm workers.
+        self.job_txs.clear();
+        for h in self.compute_handles.drain(..) {
+            let _ = h.join();
+        }
+        for h in self.comm_handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ----------------------------------------------------- compute worker --
+
+#[allow(clippy::too_many_arguments)]
+fn compute_worker(rank: usize, world: usize, ranges: &Arc<[BucketRange]>,
+                  accs: &Arc<Vec<Mutex<Vec<f32>>>>, job_rx: Receiver<Job>,
+                  bucket_tx: Sender<(usize, Vec<f32>)>,
+                  reduced_rx: Receiver<Reduced>,
+                  result_tx: Sender<RankResult>) {
+    // Persistent scratch: micro-step gradient vector and one payload
+    // buffer per bucket, recycled every step.
+    let mut grads: Vec<f32> = Vec::new();
+    let mut bucket_bufs: Vec<Vec<f32>> =
+        ranges.iter().map(|b| Vec::with_capacity(b.len())).collect();
+    while let Ok(job) = job_rx.recv() {
+        let res = run_rank_step(rank, world, ranges, accs, &job, &mut grads,
+                                &mut bucket_bufs, &bucket_tx, &reduced_rx);
+        let msg = RankResult { rank, res: res.map_err(|e| format!("{e:#}")) };
+        if result_tx.send(msg).is_err() {
+            break;
+        }
+    }
+}
+
+/// Copy a bucket's accumulated slice into its reusable payload buffer and
+/// hand it to the comm worker.
+fn send_bucket(idx: usize, src: &[f32], slot: &mut Vec<f32>,
+               tx: &Sender<(usize, Vec<f32>)>) -> Result<()> {
+    let mut v = std::mem::take(slot);
+    v.clear();
+    v.extend_from_slice(src);
+    tx.send((idx, v))
+        .map_err(|_| anyhow::anyhow!("comm worker gone (bucket {idx})"))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_rank_step(rank: usize, world: usize, ranges: &[BucketRange],
+                 accs: &[Mutex<Vec<f32>>], job: &Job, grads: &mut Vec<f32>,
+                 bucket_bufs: &mut [Vec<f32>],
+                 bucket_tx: &Sender<(usize, Vec<f32>)>,
+                 reduced_rx: &Receiver<Reduced>) -> Result<RankStats> {
+    let mut acc = accs[rank].lock().expect("rank buffer poisoned");
+    acc.fill(0.0);
+    let mut stats = RankStats::default();
+    let k = job.micro_steps.max(1);
+    // On any failure we still complete the exchange protocol below so
+    // peer ranks blocked in the ring are released; the error is
+    // reported after.
+    let mut failure: Option<anyhow::Error> = None;
+    let mut sent_eagerly = false;
+    for micro in 0..k {
+        let t0 = Instant::now();
+        // Catch panics from the user-supplied compute, not just Errs:
+        // a vanished rank would otherwise desynchronize the ring and
+        // hang every peer (and `step()`) forever.  A caught panic takes
+        // the same still-complete-the-exchange path as an Err.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || job.compute.micro(rank, job.step_index, micro, job.params,
+                                 job.scale, grads),
+        ));
+        let m = match caught {
+            Ok(Ok(m)) => m,
+            Ok(Err(e)) => {
+                failure = Some(e);
+                break;
+            }
+            Err(payload) => {
+                let what = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic".to_string());
+                failure = Some(anyhow::anyhow!(
+                    "compute panicked at micro {micro}: {what}"
+                ));
+                break;
+            }
+        };
+        stats.compute_s += t0.elapsed().as_secs_f64();
+        if grads.len() != acc.len() {
+            failure = Some(anyhow::anyhow!(
+                "micro-step produced {} grads, buffer holds {}",
+                grads.len(), acc.len()
+            ));
+            break;
+        }
+        stats.loss_sum += m.loss;
+        stats.mlm_sum += m.mlm_loss;
+        stats.nsp_sum += m.nsp_loss;
+        stats.acc_sum += m.mlm_acc;
+        stats.nonfinite |= m.nonfinite;
+        let t1 = Instant::now();
+        if micro + 1 < k {
+            // Not the last micro-step: plain full-range accumulation.
+            for (a, g) in acc.iter_mut().zip(grads.iter()) {
+                *a += *g;
+            }
+            stats.accum_s += t1.elapsed().as_secs_f64();
+        } else {
+            // Final micro-step: accumulate bucket-by-bucket in backward
+            // order; with overlap on, enqueue each bucket's exchange the
+            // moment its accumulation completes (Fig. 2).
+            for (idx, br) in ranges.iter().enumerate() {
+                let tb = Instant::now();
+                let (seg, gseg) = (&mut acc[br.start..br.end],
+                                   &grads[br.start..br.end]);
+                for (a, g) in seg.iter_mut().zip(gseg.iter()) {
+                    *a += *g;
+                }
+                stats.accum_s += tb.elapsed().as_secs_f64();
+                if world > 1 && job.overlap {
+                    if let Err(e) = send_bucket(idx, &acc[br.start..br.end],
+                                                &mut bucket_bufs[idx],
+                                                bucket_tx) {
+                        failure = Some(e);
+                        break;
+                    }
+                    sent_eagerly = true;
+                }
+            }
+        }
+    }
+    let acc_done = Instant::now();
+    if world > 1 && !ranges.is_empty() {
+        if !sent_eagerly {
+            // Barrier mode — or the failure path, where we feed the ring
+            // whatever is accumulated so peers can finish their step.
+            for (idx, br) in ranges.iter().enumerate() {
+                if let Err(e) = send_bucket(idx, &acc[br.start..br.end],
+                                            &mut bucket_bufs[idx],
+                                            bucket_tx) {
+                    failure = failure.or(Some(e));
+                    break;
+                }
+            }
+        }
+        stats.bucket_s = vec![0.0; ranges.len()];
+        for idx in 0..ranges.len() {
+            let red = match reduced_rx.recv() {
+                Ok(r) => r,
+                Err(_) => {
+                    failure = failure.or_else(|| {
+                        Some(anyhow::anyhow!("comm worker gone mid-exchange"))
+                    });
+                    break;
+                }
+            };
+            debug_assert_eq!(red.idx, idx, "bucket reply out of order");
+            let br = ranges[red.idx];
+            acc[br.start..br.end].copy_from_slice(&red.data);
+            stats.bucket_s[red.idx] = red.exchange_s;
+            stats.comm_s += red.exchange_s;
+            bucket_bufs[red.idx] = red.data;
+        }
+        stats.exposed_comm_s =
+            acc_done.elapsed().as_secs_f64();
+    }
+    drop(acc);
+    match failure {
+        Some(e) => Err(e),
+        None => Ok(stats),
+    }
+}
+
+// -------------------------------------------------------- comm worker --
+
+fn comm_worker(rank: usize, world: usize, wire: WireFormat,
+               ranges: &[BucketRange], bucket_rx: Receiver<(usize, Vec<f32>)>,
+               reduced_tx: Sender<Reduced>, tx_next: Sender<RingMsg>,
+               rx_prev: Receiver<RingMsg>) {
+    // Chunk plans are a pure function of (world, bucket length): build
+    // them once and reuse forever.
+    let plans: Vec<RingPlan> =
+        ranges.iter().map(|b| RingPlan::new(world, b.len())).collect();
+    // Free lists recycle wire message vectors: every exchange sends and
+    // receives the same number of chunks, so after the first step the
+    // lists are self-sustaining (steady-state zero allocation).
+    let mut free_f32: Vec<Vec<f32>> = Vec::new();
+    let mut free_u16: Vec<Vec<u16>> = Vec::new();
+    while let Ok((idx, mut data)) = bucket_rx.recv() {
+        let t0 = Instant::now();
+        if world > 1 {
+            ring_exchange(&mut data, &plans[idx], rank, wire, &tx_next,
+                          &rx_prev, &mut free_f32, &mut free_u16);
+        }
+        let exchange_s = t0.elapsed().as_secs_f64();
+        if reduced_tx.send(Reduced { idx, data, exchange_s }).is_err() {
+            break;
+        }
+    }
+}
+
+/// In-place ring allreduce (sum) of `buf` across the comm workers, using
+/// the NCCL reduce-scatter + all-gather schedule from [`RingPlan`].
+#[allow(clippy::too_many_arguments)]
+fn ring_exchange(buf: &mut [f32], plan: &RingPlan, rank: usize,
+                 wire: WireFormat, tx: &Sender<RingMsg>,
+                 rx: &Receiver<RingMsg>, free_f32: &mut Vec<Vec<f32>>,
+                 free_u16: &mut Vec<Vec<u16>>) {
+    let n = plan.n;
+    if n <= 1 || buf.is_empty() {
+        return;
+    }
+    // reduce-scatter
+    for s in 0..n - 1 {
+        let sc = plan.chunk(plan.send_chunk_rs(rank, s));
+        send_wire(&buf[sc], s as u32, wire, tx, free_f32, free_u16);
+        let rc = plan.chunk(plan.recv_chunk_rs(rank, s));
+        recv_apply(&mut buf[rc], s as u32, true, rx, free_f32, free_u16);
+    }
+    if wire == WireFormat::F16 {
+        // Quantize the fully-reduced chunk this rank owns before the
+        // all-gather: every replica then holds f16-representable values
+        // and stays bitwise identical (f16 round-trip is idempotent).
+        let own = plan.chunk((rank + 1) % n);
+        for v in buf[own].iter_mut() {
+            *v = F16::from_f32(*v).to_f32();
+        }
+    }
+    // all-gather
+    for s in 0..n - 1 {
+        let sc = plan.chunk(plan.send_chunk_ag(rank, s));
+        send_wire(&buf[sc], 100 + s as u32, wire, tx, free_f32, free_u16);
+        let rc = plan.chunk(plan.recv_chunk_ag(rank, s));
+        recv_apply(&mut buf[rc], 100 + s as u32, false, rx, free_f32,
+                   free_u16);
+    }
+}
+
+fn send_wire(src: &[f32], tag: u32, wire: WireFormat, tx: &Sender<RingMsg>,
+             free_f32: &mut Vec<Vec<f32>>, free_u16: &mut Vec<Vec<u16>>) {
+    let msg = match wire {
+        WireFormat::F32 => {
+            let mut v = free_f32.pop().unwrap_or_default();
+            v.clear();
+            v.extend_from_slice(src);
+            RingMsg::F32(tag, v)
+        }
+        WireFormat::F16 => {
+            let mut v = free_u16.pop().unwrap_or_default();
+            v.clear();
+            v.extend(src.iter().map(|&x| F16::from_f32(x).0));
+            RingMsg::F16(tag, v)
+        }
+    };
+    tx.send(msg).expect("pool ring send");
+}
+
+/// Receive one ring hop and either reduce-add (`add = true`) or copy it
+/// into `dst`; the payload vector goes back on the free list.
+fn recv_apply(dst: &mut [f32], tag: u32, add: bool, rx: &Receiver<RingMsg>,
+              free_f32: &mut Vec<Vec<f32>>, free_u16: &mut Vec<Vec<u16>>) {
+    match rx.recv().expect("pool ring recv") {
+        RingMsg::F32(t, v) => {
+            debug_assert_eq!(t, tag, "ring schedule skew");
+            if add {
+                for (d, s) in dst.iter_mut().zip(v.iter()) {
+                    *d += *s;
+                }
+            } else {
+                dst.copy_from_slice(&v);
+            }
+            free_f32.push(v);
+        }
+        RingMsg::F16(t, v) => {
+            debug_assert_eq!(t, tag, "ring schedule skew");
+            if add {
+                for (d, b) in dst.iter_mut().zip(v.iter()) {
+                    *d += F16(*b).to_f32();
+                }
+            } else {
+                for (d, b) in dst.iter_mut().zip(v.iter()) {
+                    *d = F16(*b).to_f32();
+                }
+            }
+            free_u16.push(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    /// Deterministic synthetic gradients: f(rank, step, micro, i).
+    struct Synth {
+        n: usize,
+    }
+
+    impl RankCompute for Synth {
+        fn micro(&self, rank: usize, step_index: usize, micro: usize,
+                 _params: &[f32], _scale: f32, out: &mut Vec<f32>)
+                 -> Result<MicroStats> {
+            out.resize(self.n, 0.0);
+            for (i, v) in out.iter_mut().enumerate() {
+                *v = (rank * 1000 + step_index * 100 + micro * 10) as f32
+                    + (i % 13) as f32 * 0.25;
+            }
+            Ok(MicroStats { loss: 1.0, ..Default::default() })
+        }
+    }
+
+    fn full_ranges(n: usize, pieces: usize) -> Arc<[BucketRange]> {
+        BucketRange::even_split(n, pieces)
+    }
+
+    /// Serial oracle for the synthetic compute: sum over ranks & micros.
+    fn expected(world: usize, n: usize, step_index: usize, k: usize)
+                -> Vec<f32> {
+        let mut want = vec![0.0f32; n];
+        let synth = Synth { n };
+        let mut g = Vec::new();
+        for r in 0..world {
+            for m in 0..k {
+                synth.micro(r, step_index, m, &[], 1.0, &mut g).unwrap();
+                for (w, x) in want.iter_mut().zip(&g) {
+                    *w += *x;
+                }
+            }
+        }
+        want
+    }
+
+    #[test]
+    fn pooled_step_sums_across_ranks_and_micros() {
+        let (world, n, k) = (3, 157, 2);
+        let ranges = full_ranges(n, 2);
+        let mut pool =
+            CollectivePool::new(world, n, ranges, WireFormat::F32);
+        let synth = Synth { n };
+        let out = pool.step(&[], 1.0, k, 7, true, &synth).unwrap();
+        assert!((out.loss_sum - (world * k) as f64).abs() < 1e-9);
+        let want = expected(world, n, 7, k);
+        for r in 0..world {
+            testkit::assert_allclose(&pool.rank_grads(r), &want, 1e-3, 1e-5);
+        }
+    }
+
+    #[test]
+    fn overlap_and_barrier_are_bitwise_identical() {
+        let (world, n, k) = (4, 211, 3);
+        for wire in [WireFormat::F32, WireFormat::F16] {
+            let mut a = CollectivePool::new(world, n, full_ranges(n, 3),
+                                            wire);
+            let mut b = CollectivePool::new(world, n, full_ranges(n, 3),
+                                            wire);
+            let synth = Synth { n };
+            a.step(&[], 1.0, k, 0, true, &synth).unwrap();
+            b.step(&[], 1.0, k, 0, false, &synth).unwrap();
+            for r in 0..world {
+                let (ga, gb) = (a.rank_grads(r), b.rank_grads(r));
+                for (x, y) in ga.iter().zip(gb.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{wire:?} rank {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn world_one_needs_no_exchange() {
+        let n = 64;
+        let mut pool =
+            CollectivePool::new(1, n, full_ranges(n, 1), WireFormat::F32);
+        let synth = Synth { n };
+        let out = pool.step(&[], 1.0, 2, 0, true, &synth).unwrap();
+        assert_eq!(out.comm_s, 0.0);
+        let want = expected(1, n, 0, 2);
+        testkit::assert_allclose(&pool.leader_grads(), &want, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn compute_error_is_reported_not_deadlocked() {
+        struct Failing {
+            n: usize,
+        }
+        impl RankCompute for Failing {
+            fn micro(&self, rank: usize, _s: usize, _m: usize, _p: &[f32],
+                     _sc: f32, out: &mut Vec<f32>) -> Result<MicroStats> {
+                anyhow::ensure!(rank != 1, "injected failure on rank 1");
+                out.resize(self.n, 0.0);
+                out.fill(1.0);
+                Ok(MicroStats::default())
+            }
+        }
+        let n = 40;
+        let mut pool =
+            CollectivePool::new(3, n, full_ranges(n, 2), WireFormat::F32);
+        let err = pool.step(&[], 1.0, 1, 0, true, &Failing { n })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("rank 1"));
+        // the pool must still be usable afterwards
+        let synth = Synth { n };
+        pool.step(&[], 1.0, 1, 1, true, &synth).unwrap();
+        let want = expected(3, n, 1, 1);
+        testkit::assert_allclose(&pool.leader_grads(), &want, 1e-3, 1e-5);
+    }
+
+    #[test]
+    fn compute_panic_is_reported_not_deadlocked() {
+        struct Panicking {
+            n: usize,
+        }
+        impl RankCompute for Panicking {
+            fn micro(&self, rank: usize, _s: usize, _m: usize, _p: &[f32],
+                     _sc: f32, out: &mut Vec<f32>) -> Result<MicroStats> {
+                assert!(rank != 2, "injected panic on rank 2");
+                out.resize(self.n, 0.0);
+                out.fill(1.0);
+                Ok(MicroStats::default())
+            }
+        }
+        let n = 30;
+        let mut pool =
+            CollectivePool::new(3, n, full_ranges(n, 2), WireFormat::F32);
+        let err = pool.step(&[], 1.0, 1, 0, true, &Panicking { n })
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rank 2") && msg.contains("panicked"), "{msg}");
+        // the pool survives the panic and keeps working
+        let synth = Synth { n };
+        pool.step(&[], 1.0, 1, 1, true, &synth).unwrap();
+        let want = expected(3, n, 1, 1);
+        testkit::assert_allclose(&pool.leader_grads(), &want, 1e-3, 1e-5);
+    }
+
+    #[test]
+    fn f16_wire_quantizes_but_stays_close() {
+        let (world, n) = (2, 100);
+        let mut f32p =
+            CollectivePool::new(world, n, full_ranges(n, 2), WireFormat::F32);
+        let mut f16p =
+            CollectivePool::new(world, n, full_ranges(n, 2), WireFormat::F16);
+        let synth = Synth { n };
+        f32p.step(&[], 1.0, 1, 3, true, &synth).unwrap();
+        f16p.step(&[], 1.0, 1, 3, true, &synth).unwrap();
+        let (a, b) = (f32p.leader_grads(), f16p.leader_grads());
+        // one f16 rounding per hop: relative error bounded by ~2^-10
+        testkit::assert_allclose(&a, &b, 1e-2, 4e-3);
+        // and the f16 path still agrees bitwise across ranks
+        let b1 = f16p.rank_grads(1);
+        for (x, y) in b.iter().zip(b1.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

@@ -20,6 +20,11 @@ pub struct TrainConfig {
     pub accum_steps: usize,
     /// Overlap backward with bucketed allreduce (paper Fig. 2).
     pub overlap: bool,
+    /// Ship ring-allreduce payloads as IEEE f16 (paper §4.4 exchanges
+    /// FP16 gradients): halves wire bytes at one round-to-nearest-even
+    /// per hop.  Replicas stay bitwise identical; absolute gradient
+    /// values differ from the f32 wire by ~2^-11 relative.
+    pub grad_wire_f16: bool,
     /// Gradient bucket size threshold in elements (DDP-style).
     pub bucket_elems: usize,
     /// Total optimizer steps to run.
@@ -42,6 +47,7 @@ impl Default for TrainConfig {
             warmup_steps: 10,
             accum_steps: 4,
             overlap: true,
+            grad_wire_f16: false,
             bucket_elems: 1 << 20,
             steps: 100,
             init_loss_scale: 65536.0,
@@ -133,6 +139,8 @@ impl RunConfig {
         c.train.accum_steps =
             doc.int("train.accum_steps", c.train.accum_steps as i64) as usize;
         c.train.overlap = doc.bool("train.overlap", c.train.overlap);
+        c.train.grad_wire_f16 =
+            doc.bool("train.grad_wire_f16", c.train.grad_wire_f16);
         c.train.bucket_elems =
             doc.int("train.bucket_elems", c.train.bucket_elems as i64) as usize;
         c.train.steps = doc.int("train.steps", c.train.steps as i64) as usize;
@@ -172,6 +180,8 @@ impl RunConfig {
     /// Validate cross-field invariants.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.train.accum_steps >= 1, "accum_steps must be >= 1");
+        anyhow::ensure!(self.train.bucket_elems >= 1,
+                        "bucket_elems must be >= 1");
         anyhow::ensure!(self.train.steps >= 1, "steps must be >= 1");
         anyhow::ensure!(self.data.micro_batch >= 1, "micro_batch must be >= 1");
         anyhow::ensure!(
@@ -201,6 +211,7 @@ mod tests {
     fn toml_overrides_defaults() {
         let doc = TomlDoc::parse(
             "[train]\nsteps = 7\nlr = 0.5\noverlap = false\n\
+             grad_wire_f16 = true\n\
              [cluster]\ntopo = \"2M4G\"\nnetwork_gbps = 25.0\n\
              [data]\nseq_len = 512\n",
         ).unwrap();
@@ -208,6 +219,7 @@ mod tests {
         assert_eq!(c.train.steps, 7);
         assert_eq!(c.train.lr, 0.5);
         assert!(!c.train.overlap);
+        assert!(c.train.grad_wire_f16);
         assert_eq!(c.cluster.topo.machines, 2);
         assert_eq!(c.cluster.topo.gpus_per_machine, 4);
         assert_eq!(c.cluster.network_bps, 25e9);
@@ -230,6 +242,9 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = RunConfig::default();
         c.train.optimizer = "sgd9000".into();
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.train.bucket_elems = 0;
         assert!(c.validate().is_err());
     }
 }

@@ -45,9 +45,11 @@ pub fn train_run(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
         }
     }
     println!(
-        "phase 1: preset={} variant={} topo={} world={} batch={}x{} accum={}",
+        "phase 1: preset={} variant={} topo={} world={} batch={}x{} \
+         accum={} overlap={} wire={}",
         cfg.train.preset, cfg.train.variant, cfg.cluster.topo, world,
-        batch1, seq1, cfg.train.accum_steps
+        batch1, seq1, cfg.train.accum_steps, cfg.train.overlap,
+        if cfg.train.grad_wire_f16 { "f16" } else { "f32" }
     );
     let report1 = trainer.run(&datasets, steps1, steps1 + steps2)?;
     println!("phase 1 done: {}", report1.summary());
@@ -102,6 +104,16 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     cfg.train.log_every = args.get_parse("log-every", cfg.train.log_every)?;
     cfg.train.warmup_steps =
         args.get_parse("warmup", cfg.train.warmup_steps)?;
+    // Fig. 2 / §4.4 hot-loop knobs: `--overlap[=false]` toggles the
+    // eager bucketed exchange, `--wire-f16` ships ring payloads as f16.
+    if let Some(v) = args.flag_opt("overlap") {
+        cfg.train.overlap = v;
+    }
+    if let Some(v) = args.flag_opt("wire-f16") {
+        cfg.train.grad_wire_f16 = v;
+    }
+    cfg.train.bucket_elems =
+        args.get_parse("bucket-elems", cfg.train.bucket_elems)?;
     if let Some(t) = args.get_opt("topo") {
         cfg.cluster.topo = Topology::parse(&t)
             .map_err(|e| anyhow::anyhow!(e))?;

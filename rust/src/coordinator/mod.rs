@@ -27,6 +27,7 @@ COMMANDS:
                    --preset bert-tiny --topo 1M2G --steps 50 --accum 4
                    --variant fused_f32 --optimizer lamb --lr 1e-4
                    --data-dir data/quickstart [--phase2] [--ckpt path]
+                   [--overlap=false] [--wire-f16] [--bucket-elems N]
   shard-data     build bshard files from a synthetic or real corpus (§4.1)
                    --out data/quickstart --docs 64 --shards 8 [--text file]
   simulate       one-iteration timeline, overlap on/off (Figs. 2 & 5)

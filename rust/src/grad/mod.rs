@@ -42,6 +42,53 @@ impl Bucket {
     }
 }
 
+/// A bucket's flat range alone — the copy-free descriptor shared with
+/// the persistent collective workers.  [`Bucket`] drags its tensor-name
+/// `Vec<String>`s along; the hot path only ever needs `(start, end)`, so
+/// the trainer builds this table ONCE (as an `Arc` slice) instead of
+/// cloning per worker per step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BucketRange {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl BucketRange {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    /// Split `[0, n)` into `pieces` contiguous ranges (the last one
+    /// absorbs the remainder) — the synthetic bucket table used by
+    /// benches, examples, and pool tests.
+    pub fn even_split(n: usize, pieces: usize)
+        -> std::sync::Arc<[BucketRange]> {
+        assert!(pieces >= 1, "pieces must be >= 1");
+        let base = n / pieces;
+        let mut out = Vec::with_capacity(pieces);
+        let mut start = 0;
+        for p in 0..pieces {
+            let end = if p + 1 == pieces { n } else { start + base };
+            out.push(BucketRange { start, end });
+            start = end;
+        }
+        out.into_iter().collect()
+    }
+}
+
+/// Build the shared range table from a bucket plan (one allocation for
+/// the lifetime of the trainer).
+pub fn bucket_ranges(buckets: &[Bucket]) -> std::sync::Arc<[BucketRange]> {
+    buckets
+        .iter()
+        .map(|b| BucketRange { start: b.start, end: b.end })
+        .collect()
+}
+
 /// Partition a parameter layout into buckets of >= `threshold_elems`,
 /// walking tensors from the END of the layout (backward order).  Tensor
 /// boundaries are respected: a tensor is never split across buckets
@@ -243,6 +290,34 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn bucket_ranges_mirror_buckets_without_names() {
+        let layout = toy_layout();
+        let buckets = build_buckets(&layout, 1000);
+        let ranges = bucket_ranges(&buckets);
+        assert_eq!(ranges.len(), buckets.len());
+        for (b, r) in buckets.iter().zip(ranges.iter()) {
+            assert_eq!((b.start, b.end), (r.start, r.end));
+            assert_eq!(b.len(), r.len());
+        }
+        // the Arc is cheaply cloneable for the worker threads
+        let r2 = ranges.clone();
+        assert_eq!(r2[0], ranges[0]);
+    }
+
+    #[test]
+    fn even_split_tiles_the_range() {
+        for (n, pieces) in [(100, 4), (7, 3), (5, 5), (9, 1), (3, 4)] {
+            let r = BucketRange::even_split(n, pieces);
+            assert_eq!(r.len(), pieces);
+            assert_eq!(r[0].start, 0);
+            assert_eq!(r[pieces - 1].end, n);
+            for w in r.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+        }
     }
 
     #[test]

@@ -119,6 +119,70 @@ impl LossCurve {
     }
 }
 
+/// Exchange-timing accumulator for the persistent collective pool
+/// (paper §4.4 / Fig. 2): per-bucket ring-allreduce seconds plus the
+/// *exposed* communication — the tail a step actually waited on after
+/// its gradient accumulation finished.  The headline derived metric is
+/// [`ExchangeTimings::overlap_efficiency`], the fraction of exchange
+/// wall-clock hidden behind compute.
+#[derive(Debug, Default, Clone)]
+pub struct ExchangeTimings {
+    /// Summed exchange seconds per bucket (backward order, bucket 0
+    /// first), accumulated over steps.
+    pub bucket_s: Vec<f64>,
+    /// Total exchange seconds across all buckets and steps.
+    pub total_comm_s: f64,
+    /// Total exposed (non-overlapped) communication seconds.
+    pub exposed_comm_s: f64,
+    /// Steps recorded.
+    pub steps: usize,
+}
+
+impl ExchangeTimings {
+    /// Record one step's per-bucket exchange seconds and its exposed
+    /// communication tail.
+    pub fn record(&mut self, bucket_s: &[f64], exposed_s: f64) {
+        if self.bucket_s.len() < bucket_s.len() {
+            self.bucket_s.resize(bucket_s.len(), 0.0);
+        }
+        for (t, b) in self.bucket_s.iter_mut().zip(bucket_s) {
+            *t += *b;
+        }
+        self.total_comm_s += bucket_s.iter().sum::<f64>();
+        self.exposed_comm_s += exposed_s;
+        self.steps += 1;
+    }
+
+    /// `1 - exposed/total`: 1.0 means the exchange was fully hidden
+    /// behind compute, 0.0 means it was fully serialized (or there was
+    /// no communication at all).
+    pub fn overlap_efficiency(&self) -> f64 {
+        if self.total_comm_s <= 0.0 {
+            0.0
+        } else {
+            (1.0 - self.exposed_comm_s / self.total_comm_s).clamp(0.0, 1.0)
+        }
+    }
+
+    /// Mean exchange seconds per step for bucket `b`.
+    pub fn mean_bucket_s(&self, b: usize) -> f64 {
+        if self.steps == 0 || b >= self.bucket_s.len() {
+            0.0
+        } else {
+            self.bucket_s[b] / self.steps as f64
+        }
+    }
+
+    /// One-line log summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "buckets={} comm={:.3}s exposed={:.3}s overlap_eff={:.0}%",
+            self.bucket_s.len(), self.total_comm_s, self.exposed_comm_s,
+            self.overlap_efficiency() * 100.0
+        )
+    }
+}
+
 /// One span in a trace timeline (chrome trace "X" event).
 #[derive(Debug, Clone)]
 pub struct Span {
@@ -250,6 +314,29 @@ mod tests {
             c.push(i, 5.0);
         }
         assert!(!c.improved(3));
+    }
+
+    #[test]
+    fn exchange_timings_accumulate_and_rate() {
+        let mut t = ExchangeTimings::default();
+        // fully serialized step: everything exposed
+        t.record(&[0.2, 0.1], 0.3);
+        assert_eq!(t.steps, 1);
+        assert!((t.total_comm_s - 0.3).abs() < 1e-12);
+        assert!(t.overlap_efficiency() < 1e-9);
+        // fully hidden step
+        t.record(&[0.2, 0.1], 0.0);
+        assert!((t.overlap_efficiency() - 0.5).abs() < 1e-9);
+        assert!((t.mean_bucket_s(0) - 0.2).abs() < 1e-12);
+        assert_eq!(t.mean_bucket_s(9), 0.0);
+        assert!(t.summary().contains("overlap_eff=50%"));
+    }
+
+    #[test]
+    fn exchange_timings_no_comm_is_zero_efficiency() {
+        let mut t = ExchangeTimings::default();
+        t.record(&[], 0.0);
+        assert_eq!(t.overlap_efficiency(), 0.0);
     }
 
     #[test]

@@ -190,6 +190,14 @@ pub struct TrainStep {
     pub key: String,
 }
 
+// SAFETY: a compiled PJRT executable is immutable after compilation and
+// PJRT's CPU client supports concurrent `Execute` calls (that is how
+// multi-device dispatch works); `TrainStep::run` takes `&self` and keeps
+// no Rust-side mutable state.  The persistent collective pool shares one
+// compiled step across its per-rank workers.
+unsafe impl Send for TrainStep {}
+unsafe impl Sync for TrainStep {}
+
 impl TrainStep {
     /// Execute one micro-step.
     pub fn run(&self, params: &[f32], batch: &Batch, loss_scale: f32)

@@ -1,35 +1,50 @@
 //! The data-parallel trainer (paper §3.2, §4.4): the coordinator's hot
 //! loop gluing every piece together.
 //!
-//! Per optimizer step:
-//! 1. each data-parallel rank runs `accum_steps` micro-steps of the AOT
-//!    train step on its own shard stream (paper §4.1: data loading stays
-//!    on the "PCIe" path, i.e. local), summing gradients locally
-//!    (paper §4.4 gradient accumulation);
-//! 2. the summed flat gradients are exchanged with a REAL ring allreduce
-//!    across worker threads, bucket by bucket in backward order (paper
-//!    Fig. 2 bucketed overlap schedule — on this 1-core testbed buckets
-//!    pipeline the exchange, wall-clock overlap is studied in
-//!    [`crate::simulator`]);
+//! ## Hot-loop architecture (persistent step executor)
+//!
+//! All distributed machinery is wired ONCE at [`Trainer::new`]: a
+//! [`CollectivePool`] spawns two long-lived threads per rank (compute +
+//! comm) connected by reusable ring channels, and every scratch buffer —
+//! per-rank gradient accumulators, per-bucket wire payloads, the
+//! normalization vector — is preallocated and reused.  Per optimizer
+//! step the loop is:
+//!
+//! 1. the pool dispatches `accum_steps` micro-steps of the AOT train
+//!    step to every rank's compute worker **in parallel** (one shared
+//!    compiled executable, concurrent PJRT execute), each worker summing
+//!    gradients locally (paper §4.4 gradient accumulation);
+//! 2. on the final micro-step each worker accumulates bucket-by-bucket
+//!    in backward order and enqueues every bucket's REAL ring allreduce
+//!    **as soon as its accumulation completes**, overlapping exchange
+//!    with the remaining accumulation — the paper's Fig. 2 schedule
+//!    (`train.overlap = false` falls back to the barrier order, which is
+//!    bitwise identical, just slower; `train.grad_wire_f16` ships ring
+//!    payloads as IEEE f16, §4.4's FP16 exchange);
 //! 3. the AMP loss scaler inspects the unscaled gradients: on overflow
 //!    the step is skipped and the scale backs off (paper §4.2);
 //! 4. the leader applies LAMB via the AOT apply step; all replicas share
 //!    the post-update parameters (replicas are bitwise identical after
-//!    every sync, so one master copy is kept — asserted in tests).
+//!    every sync — asserted in tests).
 //!
-//! Rank micro-steps execute sequentially on this single-core testbed
-//! (parallel PJRT execution buys nothing at nproc=1); the ring exchange
-//! runs on real threads.  See DESIGN.md §2 for the substitution table.
+//! [`TrainReport`] carries the per-phase wall-clock split plus the
+//! pool's per-bucket exchange timings and the overlap-efficiency ratio
+//! (fraction of exchange hidden behind compute).  See DESIGN.md §2 for
+//! the substitution table.
 
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use crate::collectives::pool::{CollectivePool, MicroStats, RankCompute,
+                               WireFormat};
 use crate::collectives::CollectiveGroup;
 use crate::config::RunConfig;
 use crate::data::{MaskingConfig, ShardedDataset};
-use crate::grad::{build_buckets, Bucket, GradAccumulator};
-use crate::metrics::{LossCurve, ThroughputMeter};
+use crate::grad::{bucket_ranges, build_buckets, Bucket, BucketRange,
+                  GradAccumulator};
+use crate::metrics::{ExchangeTimings, LossCurve, ThroughputMeter};
 use crate::optimizer::lr_schedule;
 use crate::precision::{has_nonfinite, DynamicLossScaler, StepVerdict};
 use crate::runtime::{ApplyStep, Engine, TrainStep};
@@ -48,10 +63,19 @@ pub struct TrainReport {
     pub tokens_per_sec: f64,
     pub total_tokens: u64,
     /// Per-phase wall-clock totals: (compute, allreduce, apply) seconds.
+    /// `compute_s`/`allreduce_s` are critical-path times (max over the
+    /// parallel rank workers), summed over steps.
     pub compute_s: f64,
     pub allreduce_s: f64,
     pub apply_s: f64,
     pub wall_s: f64,
+    /// Per-bucket exchange timings + exposed-comm accounting from the
+    /// persistent pool.
+    pub exchange: ExchangeTimings,
+    /// 1 - exposed/total exchange time: fraction of the allreduce hidden
+    /// behind gradient accumulation (Fig. 2's win; 0 when world == 1 or
+    /// overlap is off).
+    pub overlap_efficiency: f64,
 }
 
 impl TrainReport {
@@ -59,24 +83,31 @@ impl TrainReport {
     pub fn summary(&self) -> String {
         format!(
             "steps={} skipped={} final_loss={:.4} tokens/s={:.1} \
-             compute={:.1}s allreduce={:.1}s apply={:.1}s wall={:.1}s",
+             compute={:.1}s allreduce={:.1}s apply={:.1}s wall={:.1}s \
+             overlap_eff={:.0}%",
             self.steps, self.skipped_steps, self.loss.tail_mean(5),
             self.tokens_per_sec, self.compute_s, self.allreduce_s,
-            self.apply_s, self.wall_s
+            self.apply_s, self.wall_s, self.overlap_efficiency * 100.0
         )
     }
 }
 
 /// The trainer: compiled steps + distributed state.
 pub struct Trainer {
+    // NOTE: `pool` is declared first so its Drop (which joins the worker
+    // threads) runs before the buffers below are freed.
+    pool: CollectivePool,
     train_step: TrainStep,
     apply_step: ApplyStep,
     buckets: Vec<Bucket>,
+    bucket_ranges: Arc<[BucketRange]>,
     world: usize,
     cfg: RunConfig,
     pub params: Vec<f32>,
     m: Vec<f32>,
     v: Vec<f32>,
+    /// Reused normalization scratch (reduced-sum grads / micro count).
+    grad_scratch: Vec<f32>,
     pub scaler: DynamicLossScaler,
     pub step: usize,
     mask_cfg: MaskingConfig,
@@ -84,6 +115,8 @@ pub struct Trainer {
 
 impl Trainer {
     /// Build a trainer for the given run config (artifacts must exist).
+    /// This wires the persistent collective pool — worker threads and
+    /// ring channels live for the trainer's lifetime; `run` never spawns.
     pub fn new(engine: &Engine, cfg: RunConfig, seq: usize, batch: usize)
         -> Result<Trainer> {
         cfg.validate()?;
@@ -95,7 +128,14 @@ impl Trainer {
         let apply_step =
             engine.apply_step(&cfg.train.preset, &cfg.train.optimizer)?;
         let buckets = build_buckets(&model.layout, cfg.train.bucket_elems);
+        let ranges = bucket_ranges(&buckets);
         let world = cfg.cluster.topo.world_size();
+        let wire = if cfg.train.grad_wire_f16 {
+            WireFormat::F16
+        } else {
+            WireFormat::F32
+        };
+        let pool = CollectivePool::new(world, n, ranges.clone(), wire);
         let mask_cfg = MaskingConfig {
             mask_prob: cfg.data.mask_prob,
             max_predictions: cfg.data.max_predictions,
@@ -105,15 +145,18 @@ impl Trainer {
         let mut init_rng = Pcg64::with_stream(cfg.train.seed, 0x1111);
         let params = init_params(&model.layout, &mut init_rng);
         Ok(Trainer {
+            pool,
             train_step,
             apply_step,
             buckets,
+            bucket_ranges: ranges,
             world,
             scaler: DynamicLossScaler::new(cfg.train.init_loss_scale)
                 .with_growth_interval(200),
             cfg,
             m: vec![0.0; n],
             v: vec![0.0; n],
+            grad_scratch: vec![0.0; n],
             params,
             step: 0,
             mask_cfg,
@@ -154,6 +197,11 @@ impl Trainer {
         &self.buckets
     }
 
+    /// The shared `(start, end)` bucket table the workers use.
+    pub fn bucket_ranges(&self) -> &Arc<[BucketRange]> {
+        &self.bucket_ranges
+    }
+
     /// Run `steps` optimizer steps over the per-rank datasets.
     /// `datasets.len()` must equal the topology world size.
     pub fn run(&mut self, datasets: &[ShardedDataset], steps: usize,
@@ -163,10 +211,10 @@ impl Trainer {
             "need {} datasets (one per rank), got {}",
             self.world, datasets.len()
         );
-        let n = self.params.len();
         let k = self.cfg.train.accum_steps;
         let batch = self.train_step.batch;
         let seq = self.train_step.seq;
+        let overlap = self.cfg.train.overlap;
         let mut report = TrainReport::default();
         let mut meter = ThroughputMeter::new();
         let mut sw = Stopwatch::new();
@@ -176,60 +224,46 @@ impl Trainer {
             .iter()
             .map(|d| d.epoch_order(self.step / 100, self.cfg.train.seed))
             .collect();
-        let mut mask_rngs: Vec<Pcg64> = (0..self.world)
-            .map(|r| Pcg64::with_stream(self.cfg.train.seed, 0xDA7A + r as u64))
-            .collect();
-
-        let mut accs: Vec<GradAccumulator> =
-            (0..self.world).map(|_| GradAccumulator::new(n)).collect();
+        let ctx = RankStepCtx {
+            step: &self.train_step,
+            datasets,
+            orders: &orders,
+            mask_cfg: &self.mask_cfg,
+            mask_rngs: (0..self.world)
+                .map(|r| {
+                    Mutex::new(Pcg64::with_stream(self.cfg.train.seed,
+                                                  0xDA7A + r as u64))
+                })
+                .collect(),
+            batch,
+            seq,
+            k,
+        };
 
         for local_step in 0..steps {
             sw.reset();
-            // ---- 1. per-rank micro-steps (compute) ----
+            // ---- 1+2. parallel rank micro-steps + overlapped bucketed
+            //           ring allreduce on the persistent pool ----
             let scale = self.scaler.scale() as f32;
-            let mut loss_sum = 0.0f64;
-            let mut mlm_sum = 0.0f64;
-            let mut nsp_sum = 0.0f64;
-            let mut acc_sum = 0.0f64;
-            let mut saw_overflow = false;
-            for r in 0..self.world {
-                for micro in 0..k {
-                    let b = datasets[r].batch(
-                        &orders[r],
-                        (self.step * k + micro) % usize::MAX,
-                        batch, seq, &self.mask_cfg, &mut mask_rngs[r],
-                    );
-                    let out = self.train_step.run(&self.params, &b, scale)?;
-                    if !out.grad_norm.is_finite() || !out.loss.is_finite() {
-                        saw_overflow = true;
-                    }
-                    loss_sum += out.loss as f64;
-                    mlm_sum += out.mlm_loss as f64;
-                    nsp_sum += out.nsp_loss as f64;
-                    acc_sum += out.mlm_acc as f64;
-                    accs[r].add(&out.grads);
-                    meter.add((batch * seq) as u64);
+            let out = self.pool.step(&self.params, scale, k, self.step,
+                                     overlap, &ctx)?;
+            report.compute_s += out.compute_s + out.accum_s;
+            report.allreduce_s += out.comm_s;
+            report.exchange.record(&out.bucket_s, out.exposed_comm_s);
+            meter.add((batch * seq * k * self.world) as u64);
+            sw.lap("pool");
+
+            // ---- 3. AMP verdict + normalization (reused scratch) ----
+            let mut saw_overflow = out.saw_overflow;
+            let micro_total = (k * self.world).max(1) as f32;
+            {
+                let acc0 = self.pool.leader_grads();
+                for (dst, g) in
+                    self.grad_scratch.iter_mut().zip(acc0.iter()) {
+                    *dst = *g / micro_total;
                 }
             }
-            report.compute_s += sw.lap("compute");
-
-            // ---- 2. bucketed ring allreduce across ranks (real threads) --
-            if self.world > 1 {
-                allreduce_buckets(&mut accs, &self.buckets);
-            }
-            report.allreduce_s += sw.lap("allreduce");
-
-            // ---- 3. AMP verdict + normalization ----
-            let micro_total = (k * self.world).max(1) as f32;
-            let grads: Vec<f32> = accs[0]
-                .buffer()
-                .iter()
-                .map(|g| g / micro_total)
-                .collect();
-            saw_overflow |= has_nonfinite(&grads);
-            for a in accs.iter_mut() {
-                a.reset();
-            }
+            saw_overflow |= has_nonfinite(&self.grad_scratch);
             let verdict = self.scaler.update(saw_overflow);
 
             // ---- 4. optimizer apply (leader) ----
@@ -238,8 +272,9 @@ impl Trainer {
                 let lr = lr_schedule(self.cfg.train.lr, self.step,
                                      self.cfg.train.warmup_steps,
                                      total_steps_for_lr) as f32;
-                self.apply_step.run(&mut self.params, &grads, &mut self.m,
-                                    &mut self.v, self.step as f32, lr)?;
+                self.apply_step.run(&mut self.params, &self.grad_scratch,
+                                    &mut self.m, &mut self.v,
+                                    self.step as f32, lr)?;
             } else {
                 report.skipped_steps += 1;
             }
@@ -247,24 +282,24 @@ impl Trainer {
 
             // ---- metrics ----
             let denom = (k * self.world) as f64;
-            report.loss.push(self.step, loss_sum / denom);
-            report.mlm_loss.push(self.step, mlm_sum / denom);
-            report.nsp_loss.push(self.step, nsp_sum / denom);
-            report.mlm_acc.push(self.step, acc_sum / denom);
+            report.loss.push(self.step, out.loss_sum / denom);
+            report.mlm_loss.push(self.step, out.mlm_sum / denom);
+            report.nsp_loss.push(self.step, out.nsp_sum / denom);
+            report.mlm_acc.push(self.step, out.acc_sum / denom);
             if self.cfg.train.log_every > 0
                 && (local_step + 1) % self.cfg.train.log_every == 0 {
                 log::info!(
                     "step {:>5} loss {:.4} mlm {:.4} nsp {:.4} acc {:.3} \
                      scale {} tok/s {:.0}",
-                    self.step, loss_sum / denom, mlm_sum / denom,
-                    nsp_sum / denom, acc_sum / denom,
+                    self.step, out.loss_sum / denom, out.mlm_sum / denom,
+                    out.nsp_sum / denom, out.acc_sum / denom,
                     self.scaler.scale(), meter.recent()
                 );
                 println!(
                     "step {:>5} | loss {:.4} | mlm {:.4} | nsp {:.4} | \
                      acc {:.3} | scale {:>8} | tok/s {:.0}",
-                    self.step, loss_sum / denom, mlm_sum / denom,
-                    nsp_sum / denom, acc_sum / denom,
+                    self.step, out.loss_sum / denom, out.mlm_sum / denom,
+                    out.nsp_sum / denom, out.acc_sum / denom,
                     self.scaler.scale(), meter.recent()
                 );
             }
@@ -275,7 +310,56 @@ impl Trainer {
         report.tokens_per_sec = meter.average();
         report.total_tokens = meter.total_tokens();
         report.wall_s = wall.elapsed();
+        report.overlap_efficiency = report.exchange.overlap_efficiency();
         Ok(report)
+    }
+}
+
+/// The trainer's per-run [`RankCompute`]: builds rank `r`'s masked batch
+/// and executes the shared compiled train step.  Per-rank mutable state
+/// (the masking RNG) sits behind per-rank locks, each touched only by
+/// its own worker, so the locks are uncontended.
+struct RankStepCtx<'a> {
+    step: &'a TrainStep,
+    datasets: &'a [ShardedDataset],
+    orders: &'a [Vec<usize>],
+    mask_cfg: &'a MaskingConfig,
+    mask_rngs: Vec<Mutex<Pcg64>>,
+    batch: usize,
+    seq: usize,
+    k: usize,
+}
+
+impl RankCompute for RankStepCtx<'_> {
+    fn micro(&self, rank: usize, step_index: usize, micro: usize,
+             params: &[f32], scale: f32, grads_out: &mut Vec<f32>)
+             -> Result<MicroStats> {
+        let d = &self.datasets[rank];
+        // Wrap the batch index on the rank's epoch length so long runs
+        // keep cycling the epoch order instead of walking off it (the
+        // old `% usize::MAX` wrap was a no-op and `idx * batch` could
+        // overflow).  Ceiling division so the tail examples that don't
+        // fill a whole batch are still visited (`ShardedDataset::batch`
+        // wraps the overhang back to the head of the order).
+        let bpe = (d.len() + self.batch - 1) / self.batch.max(1);
+        let idx = (step_index * self.k + micro) % bpe.max(1);
+        let b = {
+            let mut rng =
+                self.mask_rngs[rank].lock().expect("mask rng poisoned");
+            d.batch(&self.orders[rank], idx, self.batch, self.seq,
+                    self.mask_cfg, &mut rng)
+        };
+        let out = self.step.run(params, &b, scale)?;
+        let nonfinite =
+            !out.grad_norm.is_finite() || !out.loss.is_finite();
+        *grads_out = out.grads;
+        Ok(MicroStats {
+            loss: out.loss as f64,
+            mlm_loss: out.mlm_loss as f64,
+            nsp_loss: out.nsp_loss as f64,
+            mlm_acc: out.mlm_acc as f64,
+            nonfinite,
+        })
     }
 }
 
@@ -300,9 +384,12 @@ pub fn init_params(layout: &crate::model::layout::ParamLayout,
     out
 }
 
-/// Run the real threaded ring allreduce over each rank's accumulator,
-/// one bucket at a time in backward order (Fig. 2's schedule).
-fn allreduce_buckets(accs: &mut [GradAccumulator], buckets: &[Bucket]) {
+/// The OLD hot-loop exchange, kept as the per-step-spawn baseline the
+/// `perf_hotpath` bench compares the persistent pool against (and as a
+/// second implementation the pool is cross-checked with in tests): build
+/// a fresh [`CollectiveGroup`], spawn one thread per rank, run the
+/// bucketed ring allreduce, join, tear everything down.
+pub fn allreduce_buckets(accs: &mut [GradAccumulator], buckets: &[Bucket]) {
     let world = accs.len();
     // Move each rank's buffer out, run threads, move back.
     let mut bufs: Vec<Vec<f32>> = accs
@@ -373,6 +460,60 @@ mod tests {
         allreduce_buckets(&mut accs, &buckets);
         for acc in &accs {
             crate::testkit::assert_allclose(acc.buffer(), &want, 1e-4, 1e-5);
+        }
+    }
+
+    #[test]
+    fn pool_exchange_matches_per_step_spawn_baseline_bitwise() {
+        // The persistent pool and the old spawn-per-step path execute
+        // the SAME ring schedule, so their reduced gradients must agree
+        // bitwise (not just within tolerance).
+        use crate::collectives::pool::{CollectivePool, MicroStats,
+                                       RankCompute, WireFormat};
+
+        struct Fixed {
+            grads: Vec<Vec<f32>>, // per rank
+        }
+        impl RankCompute for Fixed {
+            fn micro(&self, rank: usize, _s: usize, _m: usize, _p: &[f32],
+                     _sc: f32, out: &mut Vec<f32>)
+                     -> anyhow::Result<MicroStats> {
+                out.clear();
+                out.extend_from_slice(&self.grads[rank]);
+                Ok(MicroStats::default())
+            }
+        }
+
+        let layout = crate::model::layout::ParamLayout::from_shapes(&[
+            ("a".into(), vec![90]),
+            ("b".into(), vec![67]),
+        ]);
+        let n = layout.total_len();
+        let world = 3;
+        let buckets = build_buckets(&layout, 64);
+        let mut rng = Pcg64::new(0xF00D);
+        let grads: Vec<Vec<f32>> = (0..world)
+            .map(|_| (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect())
+            .collect();
+
+        // baseline: per-step spawn
+        let mut accs: Vec<GradAccumulator> =
+            (0..world).map(|_| GradAccumulator::new(n)).collect();
+        for (a, g) in accs.iter_mut().zip(&grads) {
+            a.add(g);
+        }
+        allreduce_buckets(&mut accs, &buckets);
+
+        // persistent pool, overlap on
+        let mut pool = CollectivePool::new(world, n, bucket_ranges(&buckets),
+                                           WireFormat::F32);
+        pool.step(&[], 1.0, 1, 0, true, &Fixed { grads }).unwrap();
+
+        for r in 0..world {
+            let got = pool.rank_grads(r);
+            for (x, y) in got.iter().zip(accs[r].buffer().iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "rank {r}");
+            }
         }
     }
 }

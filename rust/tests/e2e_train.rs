@@ -104,6 +104,57 @@ fn two_phase_schedule_runs_seq512() {
 }
 
 #[test]
+fn overlap_modes_produce_identical_params() {
+    // Acceptance (ISSUE 1): the eager Fig. 2 schedule and the barrier
+    // schedule must train to BITWISE-identical parameters — overlap
+    // changes when buckets are exchanged, never what is computed.
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let dir = std::env::temp_dir().join("bertdist_it_overlap");
+    make_data(&dir, 512, 4);
+    let engine = Engine::cpu(&art).unwrap();
+    let datasets = prepare_datasets(&dir, 2).unwrap();
+    let mut finals: Vec<Vec<f32>> = Vec::new();
+    for overlap in [true, false] {
+        let mut cfg = base_cfg("1M2G");
+        cfg.train.overlap = overlap;
+        let mut t = bertdist::trainer::Trainer::new(&engine, cfg, 32, 2)
+            .unwrap();
+        let r = t.run(&datasets, 8, 8).unwrap();
+        assert_eq!(r.steps, 8);
+        finals.push(t.params.clone());
+    }
+    assert_eq!(finals[0].len(), finals[1].len());
+    for (i, (a, b)) in finals[0].iter().zip(finals[1].iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(),
+                   "param [{i}] diverged between overlap modes: {a} vs {b}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn f16_wire_training_converges() {
+    // §4.4 FP16 gradient exchange: quantized wire, same training story.
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let dir = std::env::temp_dir().join("bertdist_it_wire16");
+    make_data(&dir, 512, 2);
+    let engine = Engine::cpu(&art).unwrap();
+    let mut cfg = base_cfg("1M2G");
+    cfg.train.grad_wire_f16 = true;
+    let out = train_run(&engine, &cfg, &dir, 20, 0, 2, 32, None).unwrap();
+    let r = &out.phase1;
+    assert!(r.loss.tail_mean(5).is_finite());
+    assert!(r.loss.tail_mean(5) < r.loss.points[0].1,
+            "f16-wire training did not improve");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn checkpoint_resume_is_exact() {
     let Some(art) = artifacts() else {
         eprintln!("skipping: no artifacts");

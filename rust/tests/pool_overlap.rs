@@ -1,0 +1,202 @@
+//! Integration tests for the persistent collective pool (ISSUE 1):
+//!
+//! * property: across random worlds / layouts / bucket thresholds /
+//!   accumulation depths, the overlapped (eager, Fig. 2) pipeline
+//!   produces **bitwise-identical** reduced gradients to the barrier
+//!   path — for both the f32 and f16 wire formats — and the f32 wire
+//!   matches a serial oracle within tolerance;
+//! * endurance: one pool survives and reuses its workers across well
+//!   over 100 steps with correct results throughout.
+
+use std::sync::Arc;
+
+use bertdist::collectives::pool::{CollectivePool, MicroStats, RankCompute,
+                                  WireFormat};
+use bertdist::grad::{bucket_ranges, build_buckets, BucketRange};
+use bertdist::model::layout::ParamLayout;
+use bertdist::testkit;
+use bertdist::util::Pcg64;
+
+/// Deterministic synthetic gradients: a pure function of
+/// (salt, rank, step, micro, element) — identical no matter which
+/// schedule or thread executes it.
+struct Synth {
+    n: usize,
+    salt: u64,
+}
+
+impl RankCompute for Synth {
+    fn micro(&self, rank: usize, step_index: usize, micro: usize,
+             _params: &[f32], _scale: f32, out: &mut Vec<f32>)
+             -> anyhow::Result<MicroStats> {
+        out.resize(self.n, 0.0);
+        let stream = (rank as u64) << 32
+            | (step_index as u64) << 8
+            | micro as u64;
+        let mut rng = Pcg64::with_stream(self.salt, stream);
+        for v in out.iter_mut() {
+            *v = rng.next_f32() * 4.0 - 2.0;
+        }
+        Ok(MicroStats { loss: 1.0, ..Default::default() })
+    }
+}
+
+/// Serial oracle: the elementwise sum over all ranks and micro-steps.
+fn serial_sum(synth: &Synth, world: usize, step_index: usize, k: usize)
+              -> Vec<f32> {
+    let mut want = vec![0.0f32; synth.n];
+    let mut g = Vec::new();
+    for r in 0..world {
+        for m in 0..k {
+            synth.micro(r, step_index, m, &[], 1.0, &mut g).unwrap();
+            for (w, x) in want.iter_mut().zip(&g) {
+                *w += *x;
+            }
+        }
+    }
+    want
+}
+
+/// Run `steps` pooled steps and return every rank's reduced buffer.
+fn run_pool(world: usize, n: usize, ranges: Arc<[BucketRange]>,
+            wire: WireFormat, overlap: bool, k: usize, steps: usize,
+            salt: u64) -> Vec<Vec<f32>> {
+    let mut pool = CollectivePool::new(world, n, ranges, wire);
+    let synth = Synth { n, salt };
+    for s in 0..steps {
+        pool.step(&[], 1.0, k, s, overlap, &synth).unwrap();
+    }
+    (0..world).map(|r| pool.rank_grads(r).clone()).collect()
+}
+
+fn random_layout(rng: &mut Pcg64) -> ParamLayout {
+    let tensors = rng.range_usize(1, 12);
+    let shapes: Vec<(String, Vec<usize>)> = (0..tensors)
+        .map(|i| (format!("t{i}"), vec![rng.range_usize(1, 400)]))
+        .collect();
+    ParamLayout::from_shapes(&shapes)
+}
+
+#[test]
+fn prop_overlap_bitwise_equals_barrier_across_worlds_and_thresholds() {
+    testkit::check_msg(
+        "pool-overlap≡barrier", 0x0B1_7, 12,
+        |r: &mut Pcg64| {
+            let world = r.range_usize(1, 5);
+            let threshold = r.range_usize(1, 900);
+            let k = r.range_usize(1, 4);
+            let salt = r.next_u64();
+            (world, threshold, k, salt)
+        },
+        |&(world, threshold, k, salt)| {
+            let mut lrng = Pcg64::with_stream(salt, 0x1A7);
+            let layout = random_layout(&mut lrng);
+            let n = layout.total_len();
+            let ranges = bucket_ranges(&build_buckets(&layout, threshold));
+            let steps = 2;
+            for wire in [WireFormat::F32, WireFormat::F16] {
+                let eager = run_pool(world, n, ranges.clone(), wire, true,
+                                     k, steps, salt);
+                let barrier = run_pool(world, n, ranges.clone(), wire,
+                                       false, k, steps, salt);
+                for r in 0..world {
+                    for (i, (a, b)) in
+                        eager[r].iter().zip(barrier[r].iter()).enumerate() {
+                        if a.to_bits() != b.to_bits() {
+                            return Err(format!(
+                                "{wire:?} world={world} rank={r} [{i}]: \
+                                 {a} != {b}"
+                            ));
+                        }
+                    }
+                }
+                // every replica bitwise identical after the exchange
+                for r in 1..world {
+                    if eager[0] != eager[r] {
+                        return Err(format!(
+                            "{wire:?} replicas diverged (rank {r})"
+                        ));
+                    }
+                }
+            }
+            // f32 wire matches the serial oracle (last step's sums)
+            let synth = Synth { n, salt };
+            let want = serial_sum(&synth, world, steps - 1, k);
+            let got = run_pool(world, n, ranges, WireFormat::F32, true, k,
+                               steps, salt);
+            let d = testkit::max_abs_diff(&got[0], &want);
+            if d > 1e-2 {
+                return Err(format!("oracle mismatch: max diff {d}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pool_survives_and_reuses_workers_across_120_steps() {
+    let (world, k, salt) = (3usize, 2usize, 0xD06_F00Du64);
+    let layout = ParamLayout::from_shapes(&[
+        ("emb".into(), vec![64, 32]),   // 2048
+        ("w1".into(), vec![40, 40]),    // 1600
+        ("b1".into(), vec![40]),        // 40
+        ("head".into(), vec![300]),     // 300
+    ]);
+    let n = layout.total_len();
+    let ranges = bucket_ranges(&build_buckets(&layout, 1024));
+    assert!(ranges.len() >= 2, "need a multi-bucket plan");
+    let mut pool = CollectivePool::new(world, n, ranges, WireFormat::F32);
+    let synth = Synth { n, salt };
+    for s in 0..120 {
+        let out = pool.step(&[], 1.0, k, s, true, &synth).unwrap();
+        assert!((out.loss_sum - (world * k) as f64).abs() < 1e-9,
+                "step {s}: stats lost");
+        if s % 20 == 0 || s == 119 {
+            let want = serial_sum(&synth, world, s, k);
+            testkit::assert_allclose(&pool.leader_grads(), &want, 1e-2,
+                                     1e-4);
+            // replicas stay bitwise identical through heavy reuse
+            let leader = pool.leader_grads().clone();
+            for r in 1..world {
+                let other = pool.rank_grads(r);
+                for (a, b) in leader.iter().zip(other.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "step {s} rank {r}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn alternating_overlap_modes_on_one_pool_are_consistent() {
+    // The same pool can serve barrier and eager steps interchangeably —
+    // the schedules only differ in timing, never in result.
+    let (world, n, salt) = (2usize, 1500usize, 0xA17Eu64);
+    let layout =
+        ParamLayout::from_shapes(&[("a".into(), vec![n])]);
+    let ranges = bucket_ranges(&build_buckets(&layout, 256));
+    let mut pool =
+        CollectivePool::new(world, n, ranges.clone(), WireFormat::F32);
+    let synth = Synth { n, salt };
+    let mut per_mode: Vec<Vec<f32>> = Vec::new();
+    for overlap in [true, false] {
+        pool.step(&[], 1.0, 3, 7, overlap, &synth).unwrap();
+        per_mode.push(pool.leader_grads().clone());
+    }
+    for (a, b) in per_mode[0].iter().zip(per_mode[1].iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn f16_wire_stays_within_half_precision_tolerance() {
+    let (world, n, k, salt) = (3usize, 700usize, 2usize, 0xF16u64);
+    let layout = ParamLayout::from_shapes(&[("a".into(), vec![n])]);
+    let ranges = bucket_ranges(&build_buckets(&layout, 128));
+    let f32_out = run_pool(world, n, ranges.clone(), WireFormat::F32, true,
+                           k, 1, salt);
+    let f16_out = run_pool(world, n, ranges, WireFormat::F16, true, k, 1,
+                           salt);
+    // one rounding per hop over a world-3 ring: comfortably within 1%
+    testkit::assert_allclose(&f16_out[0], &f32_out[0], 5e-2, 1e-2);
+}

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Quick perf smoke for CI / PR trajectory tracking: runs the
+# `perf_hotpath` bench in quick mode (small payloads, few iterations)
+# and emits machine-readable rows to BENCH_hotpath.json so future PRs
+# can diff hot-path timings.
+#
+# Usage: scripts/bench_smoke.sh [output.json]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+OUT="${1:-BENCH_hotpath.json}"
+export BENCH_QUICK=1
+export BENCH_JSON_OUT="$OUT"
+
+cargo bench --bench perf_hotpath
+
+if [[ -f "$OUT" ]]; then
+    echo "bench rows -> $OUT"
+else
+    echo "ERROR: $OUT was not produced" >&2
+    exit 1
+fi
