@@ -4,6 +4,9 @@
 //!
 //! Run: `cargo bench --bench fig6_multinode_scaling`
 
+use bertdist::collectives::hierarchical::nic_bytes_per_node;
+use bertdist::netsim::{hierarchical_allreduce_phases, ring_allreduce_time,
+                       Fabric};
 use bertdist::simulator::scaling::{figure6_topologies, weak_scaling};
 use bertdist::simulator::IterationModel;
 use bertdist::topology::Topology;
@@ -49,5 +52,45 @@ fn main() {
     println!("headline: {:.0}x at 256 GPUs (paper: 165x, {:.0}% efficiency \
               claimed ~70%)", last.scaling_factor,
              last.efficiency * 100.0);
+
+    // ---- flat vs hierarchical exchange pricing (train.comm_mode) ----
+    // The same payload through both schedules the pooled executor can
+    // run, priced by netsim's executed-schedule model: the hierarchy
+    // always shrinks the time spent on the 10 Gb/s fabric (an m-leader
+    // ring instead of an 8m-rank ring), at the cost of 2(g-1) serialized
+    // full-payload PCIe transfers.
+    println!("\n=== flat vs hierarchical allreduce pricing (BERT-large \
+              grads, paper fabric) ===\n");
+    let fabric = Fabric::paper();
+    let bytes = 336_226_108.0 * 4.0;
+    let rows: Vec<Vec<String>> = figure6_topologies()
+        .iter()
+        .filter(|t| t.machines > 1)
+        .map(|t| {
+            let flat = ring_allreduce_time(t.world_size(), bytes,
+                                           fabric.network);
+            let p = hierarchical_allreduce_phases(t, bytes, &fabric);
+            assert!(p.net_s < flat,
+                    "{t}: hierarchy must shrink network time \
+                     ({} vs {flat})", p.net_s);
+            assert!(nic_bytes_per_node(t, bytes, true)
+                        < nic_bytes_per_node(t, bytes, false),
+                    "{t}: hierarchy must shrink per-NIC bytes");
+            vec![
+                t.to_string(),
+                format!("{:.2} s", flat),
+                format!("{:.2} s", p.total()),
+                format!("{:.2} s", p.pcie_s),
+                format!("{:.2} s", p.net_s),
+                format!("{:.2}x", flat / p.net_s),
+            ]
+        })
+        .collect();
+    println!("{}", render_table(
+        &["topology", "flat ring", "hier total", "hier pcie", "hier net",
+          "net-time relief"],
+        &rows));
+    println!("(hier pcie is the executed leader-accumulate/broadcast \
+              cost — see netsim::hierarchical_allreduce_phases)");
     println!("\nfig6_multinode_scaling OK");
 }

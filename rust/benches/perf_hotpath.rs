@@ -13,8 +13,9 @@
 
 use std::collections::BTreeMap;
 
-use bertdist::collectives::pool::{CollectivePool, MicroStats, RankCompute,
-                                  WireFormat};
+use bertdist::collectives::pool::{CollectivePool, CommMode, MicroStats,
+                                  RankCompute, WireFormat};
+use bertdist::topology::Topology;
 use bertdist::collectives::ring::ring_allreduce_inplace;
 use bertdist::collectives::CollectiveGroup;
 use bertdist::data::masking::{build_batch, MaskingConfig};
@@ -176,6 +177,30 @@ fn main() -> anyhow::Result<()> {
         format!("{:.1} steps/s", steps as f64 / p16_min),
     );
 
+    // ---- flat vs hierarchical pooled exchange (fixed 2M2G world) ----
+    // The same synthetic world through both `train.comm_mode` schedules;
+    // emitted to BENCH_hierarchical.json so the new path's perf
+    // trajectory is tracked across PRs alongside BENCH_hotpath.json.
+    let topo22 = Topology::parse("2M2G").unwrap();
+    let mut hier_rows: Vec<(String, f64, String)> = Vec::new();
+    for (label, mode) in [("flat", CommMode::Flat),
+                          ("hierarchical", CommMode::Hierarchical)] {
+        let mut p = CollectivePool::with_topology(
+            topo22, n, BucketRange::even_split(n, 4), WireFormat::F32,
+            mode);
+        assert_eq!(p.is_hierarchical(), mode == CommMode::Hierarchical);
+        p.step(&[], 1.0, 1, 0, true, &fill)?; // warmup
+        let (hmin, _, _) = bench_times(3, || {
+            for s in 0..steps {
+                p.step(&[], 1.0, 1, s, true, &fill).unwrap();
+            }
+        });
+        let name = format!("pooled {label} exchange 2M2G ({steps} steps)");
+        let rate = format!("{:.1} steps/s", steps as f64 / hmin);
+        rows.push(&name, hmin, rate.clone());
+        hier_rows.push((label.to_string(), hmin * 1e3, rate));
+    }
+
     // ---- single-threaded reference allreduce ----
     let (min, _, _) = bench_times(3, || {
         let mut bufs: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0f32; elems / 4])
@@ -291,6 +316,28 @@ fn main() -> anyhow::Result<()> {
         root.insert("rows".to_string(), Json::Arr(entries));
         std::fs::write(&path, Json::Obj(root).to_string())?;
         println!("wrote {path}");
+
+        // flat-vs-hierarchical section in its own file so the comm-mode
+        // trajectory can be diffed independently of the hot-path rows
+        let hier_path = std::env::var("BENCH_HIER_JSON_OUT")
+            .unwrap_or_else(|_| "BENCH_hierarchical.json".to_string());
+        let entries: Vec<Json> = hier_rows
+            .iter()
+            .map(|(name, ms, rate)| {
+                let mut m = BTreeMap::new();
+                m.insert("comm_mode".to_string(), Json::Str(name.clone()));
+                m.insert("min_ms".to_string(), Json::Num(*ms));
+                m.insert("rate".to_string(), Json::Str(rate.clone()));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(),
+                    Json::Str("pooled_comm_mode".to_string()));
+        root.insert("topology".to_string(), Json::Str("2M2G".to_string()));
+        root.insert("rows".to_string(), Json::Arr(entries));
+        std::fs::write(&hier_path, Json::Obj(root).to_string())?;
+        println!("wrote {hier_path}");
     }
 
     println!("perf_hotpath OK");

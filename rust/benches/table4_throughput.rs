@@ -10,9 +10,10 @@
 //!
 //! Run: `cargo bench --bench table4_throughput`
 
-use bertdist::collectives::pool::{CollectivePool, MicroStats, RankCompute,
-                                  WireFormat};
+use bertdist::collectives::pool::{CollectivePool, CommMode, MicroStats,
+                                  RankCompute, WireFormat};
 use bertdist::data::masking::{build_batch, MaskingConfig};
+use bertdist::topology::Topology;
 use bertdist::data::{Batch, PairExample};
 use bertdist::grad::BucketRange;
 use bertdist::runtime::{Engine, TrainStep};
@@ -145,6 +146,60 @@ fn main() -> anyhow::Result<()> {
         let g = pool.leader_grads();
         assert!(g.iter().all(|v| v.is_finite()),
                 "pooled exchange produced non-finite grads");
+    }
+
+    // ---- flat vs hierarchical pooled exchange (train.comm_mode) ----
+    // Same compiled step, same gradients, world 4 laid out as 2M2G: one
+    // pool runs the flat world ring, the other the §4.4 hierarchy
+    // (leader accumulate -> 2-leader ring -> broadcast).  Results must
+    // agree (different summation association, so allclose not bitwise);
+    // the timing split shows where the bytes traveled.
+    println!("=== pooled exchange: flat vs hierarchical (2M2G) ===\n");
+    let topo = Topology::parse("2M2G").unwrap();
+    let ranges22: std::sync::Arc<[BucketRange]> = BucketRange::even_split(n, 4);
+    let mut flat_pool = CollectivePool::with_topology(
+        topo, n, ranges22.clone(), WireFormat::F32, CommMode::Flat);
+    let mut hier_pool = CollectivePool::with_topology(
+        topo, n, ranges22, WireFormat::F32, CommMode::Hierarchical);
+    assert!(!flat_pool.is_hierarchical() && hier_pool.is_hierarchical());
+    flat_pool.step(&params, 1.0, 1, 0, true, &compute)?; // warmup
+    hier_pool.step(&params, 1.0, 1, 0, true, &compute)?;
+    let mut rows = Vec::new();
+    let mut idx = 0usize;
+    let (flat_min, _, _) = bench_times(5, || {
+        idx += 1;
+        flat_pool.step(&params, 1.0, 1, idx, true, &compute).unwrap();
+    });
+    let mut last_hier = None;
+    let (hier_min, _, _) = bench_times(5, || {
+        idx += 1;
+        last_hier = Some(
+            hier_pool.step(&params, 1.0, 1, idx, true, &compute).unwrap());
+    });
+    let hout = last_hier.unwrap();
+    rows.push(vec!["flat ring x4".to_string(),
+                   format!("{:.2} ms", flat_min * 1e3),
+                   format!("{:.0} tok/s", tokens * 4.0 / flat_min)]);
+    rows.push(vec!["hierarchical x4".to_string(),
+                   format!("{:.2} ms", hier_min * 1e3),
+                   format!("{:.0} tok/s", tokens * 4.0 / hier_min)]);
+    println!("{}", render_table(&["comm mode", "min step", "throughput"],
+                                &rows));
+    println!("hierarchical split: pcie {:.3} ms / net {:.3} ms per step",
+             hout.comm_pcie_s * 1e3, hout.comm_net_s * 1e3);
+    assert!(hout.comm_net_s <= hout.comm_s + 1e-12);
+    {
+        // both schedules compute the same sums (to rounding)
+        let a = flat_pool.leader_grads();
+        let b = hier_pool.leader_grads();
+        let max_rel = a.iter().zip(b.iter())
+            .map(|(x, y)| {
+                let d = (x - y).abs();
+                d / x.abs().max(y.abs()).max(1e-6)
+            })
+            .fold(0.0f32, f32::max);
+        assert!(max_rel < 1e-3,
+                "flat and hierarchical sums diverged: {max_rel}");
     }
 
     let f32_speedup = tput["fused_f32"] / tput["unfused_f32"];

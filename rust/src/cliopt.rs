@@ -84,6 +84,20 @@ impl Args {
         self.opts.get(key).cloned()
     }
 
+    /// Optional option under any of several spellings (e.g. `--topo` /
+    /// `--topology`).  All keys are consumed for strict checking; the
+    /// first key present wins.
+    pub fn get_opt_alias(&self, keys: &[&str]) -> Option<String> {
+        let mut found = None;
+        for key in keys {
+            let v = self.get_opt(key);
+            if found.is_none() {
+                found = v;
+            }
+        }
+        found
+    }
+
     /// Typed option with default.
     pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T)
         -> Result<T, CliError> {
@@ -185,6 +199,24 @@ mod tests {
         let a = Args::parse_from(["x", "--stps", "5"]).unwrap();
         let _ = a.get_parse("steps", 0usize);
         assert!(a.finish_strict().is_err());
+    }
+
+    #[test]
+    fn alias_options_consume_all_spellings() {
+        let a = Args::parse_from(["x", "--topology", "2M4G"]).unwrap();
+        assert_eq!(a.get_opt_alias(&["topo", "topology"]).as_deref(),
+                   Some("2M4G"));
+        a.finish_strict().unwrap();
+        // the first present spelling wins
+        let b = Args::parse_from(["x", "--topo=1M2G", "--topology=8M8G"])
+            .unwrap();
+        assert_eq!(b.get_opt_alias(&["topo", "topology"]).as_deref(),
+                   Some("1M2G"));
+        b.finish_strict().unwrap();
+        // absent everywhere -> None, still consumed
+        let c = Args::parse_from(["x"]).unwrap();
+        assert_eq!(c.get_opt_alias(&["topo", "topology"]), None);
+        c.finish_strict().unwrap();
     }
 
     #[test]

@@ -6,8 +6,17 @@
 //! a single NIC; the traffic crossing the network is `2(M−1)/M · bytes`
 //! regardless of the per-node GPU count — the property that makes the
 //! 10 Gb/s bottleneck survivable.  The result must equal the flat ring
-//! exactly (property-tested below); only the *where bytes travel*
-//! differs, which `netsim::hierarchical_allreduce_time` prices.
+//! to rounding (property-tested below — the summation association is
+//! machine-grouped, so bitwise equality holds exactly when the sums are
+//! exactly representable); only *where bytes travel* differs, which
+//! `netsim::hierarchical_allreduce_phases` prices phase by phase.
+//!
+//! This function is the offline single-threaded ORACLE.  The live,
+//! pooled version of the same schedule — leader accumulate over
+//! per-node channels, leader ring, broadcast — runs on the persistent
+//! comm workers in [`super::pool`] (`CommMode::Hierarchical`), and is
+//! property-tested against both this oracle's schedule and the flat
+//! ring in `tests/pool_overlap.rs`.
 
 use super::ring::ring_allreduce_inplace;
 use crate::topology::Topology;

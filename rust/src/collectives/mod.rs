@@ -17,8 +17,8 @@ pub mod ring;
 pub mod threaded;
 
 pub use hierarchical::hierarchical_allreduce_inplace;
-pub use pool::{CollectivePool, MicroStats, RankCompute, StepOutcome,
-               WireFormat};
+pub use pool::{CollectivePool, CommMode, MicroStats, RankCompute,
+               StepOutcome, WireFormat};
 pub use ring::{ring_allreduce_inplace, RingPlan};
 pub use threaded::{CollectiveGroup, GroupHandle};
 

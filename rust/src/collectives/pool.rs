@@ -8,32 +8,51 @@
 //!
 //! * **two long-lived threads per rank** — a *compute* worker that runs
 //!   the rank's micro-steps and accumulates gradients, and a *comm*
-//!   worker that owns the rank's endpoint in a reusable ring of mpsc
+//!   worker that owns the rank's endpoint in a reusable web of mpsc
 //!   channels (the in-process NCCL communicator, never re-created);
 //! * **overlapped bucket exchange** — on the final micro-step the compute
 //!   worker accumulates bucket-by-bucket in backward order and hands each
 //!   bucket to its comm worker *as soon as its accumulation completes*,
-//!   so the ring allreduce of bucket `b` overlaps the accumulation of
-//!   buckets `> b` (the Fig. 2 schedule; `overlap = false` degrades to
-//!   the accumulate-everything-then-exchange barrier order — bitwise
+//!   so the exchange of bucket `b` overlaps the accumulation of buckets
+//!   `> b` (the Fig. 2 schedule; `overlap = false` degrades to the
+//!   accumulate-everything-then-exchange barrier order — bitwise
 //!   identical results, only the timing differs);
+//! * **topology-aware exchange** ([`CommMode`], paper §4.4 resource
+//!   separation): on a `<X>M<Y>G` topology with multiple machines AND
+//!   multiple GPUs per machine, each bucket travels the hierarchical
+//!   schedule instead of one flat world-sized ring — intra-node leader
+//!   accumulate over per-node channels ("PCIe"), ring allreduce over the
+//!   node-leader comm workers only (reusing [`RingPlan`] at size
+//!   `machines`, the "network"), then intra-node broadcast back — so the
+//!   payload crosses the slow inter-node fabric `2(M-1)/M` times instead
+//!   of riding a 2(N-1)-step world ring in lockstep with the PCIe hops;
 //! * **preallocated, reused scratch** — per-rank gradient accumulators,
 //!   per-bucket payload buffers, ring chunk plans, and wire message
-//!   vectors (recycled through per-worker free lists) are all allocated
+//!   vectors (recycled through per-worker free lists; the hierarchical
+//!   broadcast recycles the member payload vectors) are all allocated
 //!   once; the steady-state step performs no gradient-sized heap
 //!   allocation and no thread spawn (only O(buckets) stats vectors);
 //! * **optional f16 wire format** (paper §4.4 exchanges FP16 gradients):
 //!   ring payloads are converted through [`crate::half::F16`] per hop,
 //!   halving wire bytes at one rounding per hop.  Each rank quantizes the
 //!   reduced chunk it owns before the all-gather so every replica still
-//!   ends bitwise identical.
+//!   ends bitwise identical.  In hierarchical mode the f16 wire applies
+//!   to the inter-node leader ring only — the intra-node "PCIe" channels
+//!   stay f32, exactly the paper's placement of the FP16 exchange on the
+//!   slow network.
 //!
 //! Determinism: given a deterministic [`RankCompute`], the reduced
-//! buffers are a pure function of the inputs — the eager (overlap) and
-//! barrier schedules produce bitwise-identical results because the
-//! element-wise accumulation order and the ring schedule are unchanged;
-//! only *when* each bucket's exchange runs differs.  This is asserted by
-//! `tests/pool_overlap.rs`.
+//! buffers are a pure function of the inputs and of the exchange
+//! schedule — the eager (overlap) and barrier orders are
+//! bitwise-identical to each other because the element-wise accumulation
+//! order is unchanged; the hierarchical schedule sums in a different
+//! (machine-grouped) association than the flat ring, so the two agree
+//! bitwise exactly when the gradient sums are exactly representable
+//! (asserted in tests) and to rounding error otherwise.  The
+//! leader-accumulate order is fixed (local rank 1, 2, … g-1 over
+//! dedicated per-member channels), so hierarchical results are
+//! reproducible run to run and bitwise identical across replicas.
+//! Asserted by `tests/pool_overlap.rs`.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -45,6 +64,7 @@ use anyhow::Result;
 use super::ring::RingPlan;
 use crate::grad::BucketRange;
 use crate::half::F16;
+use crate::topology::Topology;
 
 /// On-the-wire payload encoding for ring messages.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -55,6 +75,56 @@ pub enum WireFormat {
     /// IEEE binary16 payloads (paper §4.4): half the wire bytes, one
     /// round-to-nearest-even per hop.
     F16,
+}
+
+/// How each bucket's allreduce travels the cluster (`train.comm_mode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CommMode {
+    /// One flat world-sized ring regardless of topology (the PR-1
+    /// schedule; bitwise reference for the spawn-per-step baseline).
+    Flat,
+    /// The §4.4 hierarchy: PCIe leader-accumulate, network leader ring,
+    /// PCIe broadcast.  Falls back to flat on degenerate topologies
+    /// (`machines == 1` or `gpus_per_machine == 1`, where the hierarchy
+    /// IS a flat ring).
+    Hierarchical,
+    /// Hierarchical whenever the topology has both multiple machines and
+    /// multiple GPUs per machine, flat otherwise.
+    #[default]
+    Auto,
+}
+
+impl CommMode {
+    /// Parse the `flat | hierarchical | auto` config/CLI spelling.
+    pub fn parse(s: &str) -> std::result::Result<CommMode, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "flat" => Ok(CommMode::Flat),
+            "hierarchical" | "hier" => Ok(CommMode::Hierarchical),
+            "auto" => Ok(CommMode::Auto),
+            other => Err(format!(
+                "'{other}': expected flat | hierarchical | auto"
+            )),
+        }
+    }
+
+    /// Whether this mode runs the hierarchical schedule on `topo`.
+    pub fn resolves_hierarchical(self, topo: &Topology) -> bool {
+        let multi = topo.machines > 1 && topo.gpus_per_machine > 1;
+        match self {
+            CommMode::Flat => false,
+            CommMode::Hierarchical | CommMode::Auto => multi,
+        }
+    }
+}
+
+impl std::fmt::Display for CommMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            CommMode::Flat => "flat",
+            CommMode::Hierarchical => "hierarchical",
+            CommMode::Auto => "auto",
+        })
+    }
 }
 
 /// Per-micro-step scalar outputs a [`RankCompute`] reports back.
@@ -90,14 +160,30 @@ pub struct StepOutcome {
     pub compute_s: f64,
     /// Critical-path seconds accumulating gradients.
     pub accum_s: f64,
-    /// Critical-path seconds of ring exchange (sum over buckets).
+    /// Critical-path seconds of exchange (sum over buckets).
     pub comm_s: f64,
-    /// Critical-path seconds the step actually WAITED on comm after its
-    /// gradient accumulation finished — the exposed (non-overlapped)
-    /// communication of Fig. 2.
+    /// Network (inter-node) seconds, max over ranks: the leader-ring
+    /// phase in hierarchical mode; the whole exchange for a flat ring on
+    /// a multi-machine topology; 0 within a single node.
+    pub comm_net_s: f64,
+    /// PCIe (intra-node) seconds, max over ranks — leader accumulate +
+    /// broadcast in hierarchical mode.  Each component is a per-rank
+    /// maximum taken independently, so `comm_pcie_s + comm_net_s >=
+    /// comm_s` (never an understated split).
+    pub comm_pcie_s: f64,
+    /// Critical-path seconds the step spent *blocked* waiting for reduced
+    /// buckets after its gradient accumulation finished — the exposed
+    /// (non-overlapped) communication of Fig. 2.  Pure `recv` wait: the
+    /// copy-back of reduced data and loop bookkeeping are excluded, so
+    /// `1 - exposed/total` is a meaningful overlap ratio.
     pub exposed_comm_s: f64,
     /// Per-bucket exchange seconds (max over ranks).
     pub bucket_s: Vec<f64>,
+    /// Per-bucket PCIe-phase seconds (max over ranks of each rank's
+    /// `exchange - net` for that bucket).
+    pub bucket_pcie_s: Vec<f64>,
+    /// Per-bucket network-phase seconds (max over ranks).
+    pub bucket_net_s: Vec<f64>,
     /// Wall-clock of the whole pooled step.
     pub wall_s: f64,
 }
@@ -126,8 +212,12 @@ struct RankStats {
     compute_s: f64,
     accum_s: f64,
     comm_s: f64,
+    comm_pcie_s: f64,
+    comm_net_s: f64,
     exposed_comm_s: f64,
     bucket_s: Vec<f64>,
+    bucket_pcie_s: Vec<f64>,
+    bucket_net_s: Vec<f64>,
 }
 
 struct RankResult {
@@ -145,7 +235,53 @@ enum RingMsg {
 struct Reduced {
     idx: usize,
     data: Vec<f32>,
+    /// Total exchange seconds for this bucket at this rank.
     exchange_s: f64,
+    /// Seconds of `exchange_s` spent in the inter-node (network) phase.
+    net_s: f64,
+}
+
+/// Intra-node broadcast message (hierarchical phase 3): the reduced
+/// bucket plus the leader's network-phase timing so every rank reports
+/// the same PCIe/network split.
+struct Bcast {
+    idx: usize,
+    data: Vec<f32>,
+    net_s: f64,
+}
+
+/// The role-specific channel endpoints a comm worker owns; built once at
+/// pool construction (the topology decides which variant each rank gets).
+enum CommWiring {
+    /// Flat world ring: rank r sends to (r+1) % world.  `net` records
+    /// whether the topology pins this ring's bottleneck to the network
+    /// (machines > 1), for the PCIe/network timing split.
+    Flat {
+        rank: usize,
+        ring_size: usize,
+        net: bool,
+        tx_next: Sender<RingMsg>,
+        rx_prev: Receiver<RingMsg>,
+    },
+    /// Hierarchical node leader (local rank 0): gathers its node's
+    /// buckets over per-member channels, rings with the other leaders,
+    /// broadcasts the reduced bucket back.
+    Leader {
+        machine: usize,
+        machines: usize,
+        /// One receiver per node member, in local-rank order 1..g — the
+        /// fixed accumulate order that keeps the sum deterministic.
+        member_rxs: Vec<Receiver<(usize, Vec<f32>)>>,
+        member_txs: Vec<Sender<Bcast>>,
+        tx_next: Sender<RingMsg>,
+        rx_prev: Receiver<RingMsg>,
+    },
+    /// Hierarchical node member (local rank > 0): hands its bucket to
+    /// the node leader and waits for the reduced broadcast.
+    Member {
+        to_leader: Sender<(usize, Vec<f32>)>,
+        from_leader: Receiver<Bcast>,
+    },
 }
 
 /// The persistent pool: `2 * world` threads plus the channels between
@@ -155,6 +291,8 @@ pub struct CollectivePool {
     n_elems: usize,
     ranges: Arc<[BucketRange]>,
     wire: WireFormat,
+    topo: Topology,
+    hierarchical: bool,
     job_txs: Vec<Sender<Job>>,
     result_rx: Receiver<RankResult>,
     /// Per-rank accumulated (and, post-step, reduced) flat gradients.
@@ -166,42 +304,108 @@ pub struct CollectivePool {
 }
 
 impl CollectivePool {
-    /// Wire up the pool: `world` rank pairs (compute + comm worker), ring
-    /// channels between the comm workers, and per-rank flat buffers of
-    /// `n_elems`.  `ranges` is the shared bucket table (built once via
-    /// [`crate::grad::bucket_ranges`] — no per-step cloning).
+    /// Flat-ring pool over an anonymous `world` (single-node topology) —
+    /// the PR-1 constructor, kept for benches/tests and for callers that
+    /// have no cluster shape.
     pub fn new(world: usize, n_elems: usize, ranges: Arc<[BucketRange]>,
                wire: WireFormat) -> CollectivePool {
         assert!(world >= 1, "world must be >= 1");
+        Self::with_topology(Topology::new(1, world), n_elems, ranges, wire,
+                            CommMode::Flat)
+    }
+
+    /// Wire up the pool for a cluster topology: `world` rank pairs
+    /// (compute + comm worker), the exchange channels dictated by
+    /// `mode.resolves_hierarchical(&topo)` — either one flat world ring,
+    /// or per-node member channels plus a `machines`-sized leader ring —
+    /// and per-rank flat buffers of `n_elems`.  `ranges` is the shared
+    /// bucket table (built once via [`crate::grad::bucket_ranges`] — no
+    /// per-step cloning).
+    pub fn with_topology(topo: Topology, n_elems: usize,
+                         ranges: Arc<[BucketRange]>, wire: WireFormat,
+                         mode: CommMode) -> CollectivePool {
+        let world = topo.world_size();
+        assert!(world >= 1, "world must be >= 1");
+        let hierarchical = mode.resolves_hierarchical(&topo);
+        let g = topo.gpus_per_machine;
+        let m = topo.machines;
         let accs: Arc<Vec<Mutex<Vec<f32>>>> = Arc::new(
             (0..world).map(|_| Mutex::new(vec![0.0f32; n_elems])).collect(),
         );
-        // Ring channels: comm worker r sends to slot (r+1) % world and
-        // receives from slot r (same wiring as CollectiveGroup).
-        let mut ring_txs: Vec<Option<Sender<RingMsg>>> = Vec::new();
-        let mut ring_rxs: Vec<Option<Receiver<RingMsg>>> = Vec::new();
-        for _ in 0..world {
-            let (tx, rx) = channel::<RingMsg>();
-            ring_txs.push(Some(tx));
-            ring_rxs.push(Some(rx));
+
+        // Build each rank's comm wiring.  Flat: one world-sized ring
+        // (comm worker r sends to slot (r+1) % world, receives from slot
+        // r — same wiring as CollectiveGroup).  Hierarchical: a
+        // machines-sized ring over the node leaders plus dedicated
+        // member<->leader channels inside each node.
+        let mut wirings: Vec<Option<CommWiring>> =
+            (0..world).map(|_| None).collect();
+        if !hierarchical {
+            let mut ring_txs: Vec<Option<Sender<RingMsg>>> = Vec::new();
+            let mut ring_rxs: Vec<Option<Receiver<RingMsg>>> = Vec::new();
+            for _ in 0..world {
+                let (tx, rx) = channel::<RingMsg>();
+                ring_txs.push(Some(tx));
+                ring_rxs.push(Some(rx));
+            }
+            for (r, w) in wirings.iter_mut().enumerate() {
+                *w = Some(CommWiring::Flat {
+                    rank: r,
+                    ring_size: world,
+                    net: m > 1,
+                    tx_next: ring_txs[(r + 1) % world].take().unwrap(),
+                    rx_prev: ring_rxs[r].take().unwrap(),
+                });
+            }
+        } else {
+            let mut lead_txs: Vec<Option<Sender<RingMsg>>> = Vec::new();
+            let mut lead_rxs: Vec<Option<Receiver<RingMsg>>> = Vec::new();
+            for _ in 0..m {
+                let (tx, rx) = channel::<RingMsg>();
+                lead_txs.push(Some(tx));
+                lead_rxs.push(Some(rx));
+            }
+            for machine in 0..m {
+                let mut member_rxs = Vec::with_capacity(g - 1);
+                let mut member_txs = Vec::with_capacity(g - 1);
+                for local in 1..g {
+                    let (up_tx, up_rx) = channel::<(usize, Vec<f32>)>();
+                    let (down_tx, down_rx) = channel::<Bcast>();
+                    member_rxs.push(up_rx);
+                    member_txs.push(down_tx);
+                    wirings[machine * g + local] = Some(CommWiring::Member {
+                        to_leader: up_tx,
+                        from_leader: down_rx,
+                    });
+                }
+                wirings[machine * g] = Some(CommWiring::Leader {
+                    machine,
+                    machines: m,
+                    member_rxs,
+                    member_txs,
+                    tx_next: lead_txs[(machine + 1) % m].take().unwrap(),
+                    rx_prev: lead_rxs[machine].take().unwrap(),
+                });
+            }
         }
+
         let (result_tx, result_rx) = channel::<RankResult>();
         let mut job_txs = Vec::with_capacity(world);
         let mut compute_handles = Vec::with_capacity(world);
         let mut comm_handles = Vec::with_capacity(world);
+        let mut wirings = wirings.into_iter();
         for r in 0..world {
             let (job_tx, job_rx) = channel::<Job>();
             let (bucket_tx, bucket_rx) = channel::<(usize, Vec<f32>)>();
             let (reduced_tx, reduced_rx) = channel::<Reduced>();
-            let tx_next = ring_txs[(r + 1) % world].take().unwrap();
-            let rx_prev = ring_rxs[r].take().unwrap();
+            let wiring = wirings.next().unwrap().unwrap();
             let ranges_comm = ranges.clone();
             comm_handles.push(
                 std::thread::Builder::new()
                     .name(format!("pool-comm-{r}"))
                     .spawn(move || {
-                        comm_worker(r, world, wire, &ranges_comm, bucket_rx,
-                                    reduced_tx, tx_next, rx_prev);
+                        comm_worker(wire, &ranges_comm, bucket_rx,
+                                    reduced_tx, wiring);
                     })
                     .expect("spawn comm worker"),
             );
@@ -226,6 +430,8 @@ impl CollectivePool {
             n_elems,
             ranges,
             wire,
+            topo,
+            hierarchical,
             job_txs,
             result_rx,
             accs,
@@ -250,10 +456,20 @@ impl CollectivePool {
         self.wire
     }
 
+    pub fn topology(&self) -> Topology {
+        self.topo
+    }
+
+    /// Whether the pool's exchange runs the PCIe-then-network hierarchy
+    /// (the resolved [`CommMode`], not the requested one).
+    pub fn is_hierarchical(&self) -> bool {
+        self.hierarchical
+    }
+
     /// Run one optimizer step across all ranks: `micro_steps` calls to
     /// `compute.micro` per rank (in parallel across ranks on the
-    /// persistent workers), local accumulation, then the bucketed ring
-    /// allreduce — eagerly interleaved with the final accumulation when
+    /// persistent workers), local accumulation, then the bucketed
+    /// exchange — eagerly interleaved with the final accumulation when
     /// `overlap` is set, barrier-ordered otherwise.  After this returns,
     /// every rank's buffer (see [`Self::rank_grads`]) holds the summed
     /// gradients, bitwise identical across ranks.
@@ -294,6 +510,8 @@ impl CollectivePool {
         }
         let mut out = StepOutcome {
             bucket_s: vec![0.0; self.ranges.len()],
+            bucket_pcie_s: vec![0.0; self.ranges.len()],
+            bucket_net_s: vec![0.0; self.ranges.len()],
             ..Default::default()
         };
         let mut errs: Vec<String> = Vec::new();
@@ -312,9 +530,19 @@ impl CollectivePool {
                     out.compute_s = out.compute_s.max(s.compute_s);
                     out.accum_s = out.accum_s.max(s.accum_s);
                     out.comm_s = out.comm_s.max(s.comm_s);
+                    out.comm_pcie_s = out.comm_pcie_s.max(s.comm_pcie_s);
+                    out.comm_net_s = out.comm_net_s.max(s.comm_net_s);
                     out.exposed_comm_s =
                         out.exposed_comm_s.max(s.exposed_comm_s);
                     for (t, b) in out.bucket_s.iter_mut().zip(&s.bucket_s) {
+                        *t = t.max(*b);
+                    }
+                    for (t, b) in
+                        out.bucket_pcie_s.iter_mut().zip(&s.bucket_pcie_s) {
+                        *t = t.max(*b);
+                    }
+                    for (t, b) in
+                        out.bucket_net_s.iter_mut().zip(&s.bucket_net_s) {
                         *t = t.max(*b);
                     }
                 }
@@ -343,7 +571,10 @@ impl CollectivePool {
 impl Drop for CollectivePool {
     fn drop(&mut self) {
         // Closing the job channels unblocks the compute workers; their
-        // bucket channels then close, unblocking the comm workers.
+        // bucket channels then close, unblocking the comm workers (a
+        // hierarchical member's exit closes its leader-facing channels,
+        // which the leader only reads mid-bucket, so teardown order is
+        // safe in both modes).
         self.job_txs.clear();
         for h in self.compute_handles.drain(..) {
             let _ = h.join();
@@ -399,14 +630,18 @@ fn run_rank_step(rank: usize, world: usize, ranges: &[BucketRange],
     let mut stats = RankStats::default();
     let k = job.micro_steps.max(1);
     // On any failure we still complete the exchange protocol below so
-    // peer ranks blocked in the ring are released; the error is
+    // peer ranks blocked in the exchange are released; the error is
     // reported after.
     let mut failure: Option<anyhow::Error> = None;
-    let mut sent_eagerly = false;
+    // Buckets actually handed to the comm worker so far.  The reply loop
+    // below awaits exactly this many `Reduced` messages — never the full
+    // bucket count — so a partial eager send can't leave this rank
+    // waiting for replies its comm worker will never produce.
+    let mut sent = 0usize;
     for micro in 0..k {
         let t0 = Instant::now();
         // Catch panics from the user-supplied compute, not just Errs:
-        // a vanished rank would otherwise desynchronize the ring and
+        // a vanished rank would otherwise desynchronize the exchange and
         // hang every peer (and `step()`) forever.  A caught panic takes
         // the same still-complete-the-exchange path as an Err.
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
@@ -464,33 +699,45 @@ fn run_rank_step(rank: usize, world: usize, ranges: &[BucketRange],
                 }
                 stats.accum_s += tb.elapsed().as_secs_f64();
                 if world > 1 && job.overlap {
-                    if let Err(e) = send_bucket(idx, &acc[br.start..br.end],
-                                                &mut bucket_bufs[idx],
-                                                bucket_tx) {
-                        failure = Some(e);
-                        break;
+                    match send_bucket(idx, &acc[br.start..br.end],
+                                      &mut bucket_bufs[idx], bucket_tx) {
+                        Ok(()) => sent += 1,
+                        Err(e) => {
+                            failure = Some(e);
+                            break;
+                        }
                     }
-                    sent_eagerly = true;
                 }
             }
         }
     }
-    let acc_done = Instant::now();
     if world > 1 && !ranges.is_empty() {
-        if !sent_eagerly {
-            // Barrier mode — or the failure path, where we feed the ring
-            // whatever is accumulated so peers can finish their step.
-            for (idx, br) in ranges.iter().enumerate() {
-                if let Err(e) = send_bucket(idx, &acc[br.start..br.end],
-                                            &mut bucket_bufs[idx],
-                                            bucket_tx) {
+        // Feed every bucket not already enqueued: the barrier schedule
+        // feeds all of them here; the failure paths (compute error, or a
+        // send failure partway through the eager loop) feed the
+        // remainder with whatever is accumulated, so peer ranks'
+        // exchanges stay in lockstep instead of stranding mid-protocol.
+        for idx in sent..ranges.len() {
+            let br = ranges[idx];
+            match send_bucket(idx, &acc[br.start..br.end],
+                              &mut bucket_bufs[idx], bucket_tx) {
+                Ok(()) => sent += 1,
+                Err(e) => {
                     failure = failure.or(Some(e));
                     break;
                 }
             }
         }
         stats.bucket_s = vec![0.0; ranges.len()];
-        for idx in 0..ranges.len() {
+        stats.bucket_pcie_s = vec![0.0; ranges.len()];
+        stats.bucket_net_s = vec![0.0; ranges.len()];
+        // Await exactly the replies our comm worker owes us.  Exposed
+        // communication is the pure time spent BLOCKED in recv — the
+        // copy-back of reduced data and the loop bookkeeping are real
+        // work, not exposed exchange, and counting them used to push the
+        // overlap ratio negative.
+        for i in 0..sent {
+            let tw = Instant::now();
             let red = match reduced_rx.recv() {
                 Ok(r) => r,
                 Err(_) => {
@@ -500,15 +747,19 @@ fn run_rank_step(rank: usize, world: usize, ranges: &[BucketRange],
                     break;
                 }
             };
-            debug_assert_eq!(red.idx, idx, "bucket reply out of order");
+            stats.exposed_comm_s += tw.elapsed().as_secs_f64();
+            debug_assert_eq!(red.idx, i, "bucket reply out of order");
             let br = ranges[red.idx];
             acc[br.start..br.end].copy_from_slice(&red.data);
+            let pcie_s = (red.exchange_s - red.net_s).max(0.0);
             stats.bucket_s[red.idx] = red.exchange_s;
+            stats.bucket_pcie_s[red.idx] = pcie_s;
+            stats.bucket_net_s[red.idx] = red.net_s;
             stats.comm_s += red.exchange_s;
+            stats.comm_pcie_s += pcie_s;
+            stats.comm_net_s += red.net_s;
             bucket_bufs[red.idx] = red.data;
         }
-        stats.exposed_comm_s =
-            acc_done.elapsed().as_secs_f64();
     }
     drop(acc);
     match failure {
@@ -519,14 +770,42 @@ fn run_rank_step(rank: usize, world: usize, ranges: &[BucketRange],
 
 // -------------------------------------------------------- comm worker --
 
-fn comm_worker(rank: usize, world: usize, wire: WireFormat,
-               ranges: &[BucketRange], bucket_rx: Receiver<(usize, Vec<f32>)>,
-               reduced_tx: Sender<Reduced>, tx_next: Sender<RingMsg>,
-               rx_prev: Receiver<RingMsg>) {
-    // Chunk plans are a pure function of (world, bucket length): build
-    // them once and reuse forever.
-    let plans: Vec<RingPlan> =
-        ranges.iter().map(|b| RingPlan::new(world, b.len())).collect();
+/// Dispatch a comm worker into its role-specific loop.  Every role
+/// processes buckets strictly in the order its compute worker sends
+/// them, so `Reduced` replies arrive in bucket order.
+fn comm_worker(wire: WireFormat, ranges: &[BucketRange],
+               bucket_rx: Receiver<(usize, Vec<f32>)>,
+               reduced_tx: Sender<Reduced>, wiring: CommWiring) {
+    match wiring {
+        CommWiring::Flat { rank, ring_size, net, tx_next, rx_prev } => {
+            flat_comm_loop(rank, ring_size, wire, net, ranges, bucket_rx,
+                           reduced_tx, tx_next, rx_prev);
+        }
+        CommWiring::Leader { machine, machines, member_rxs, member_txs,
+                             tx_next, rx_prev } => {
+            leader_comm_loop(machine, machines, wire, ranges, bucket_rx,
+                             reduced_tx, &member_rxs, &member_txs, tx_next,
+                             rx_prev);
+        }
+        CommWiring::Member { to_leader, from_leader } => {
+            member_comm_loop(bucket_rx, reduced_tx, to_leader, from_leader);
+        }
+    }
+}
+
+/// Flat world-sized ring (the PR-1 schedule).
+#[allow(clippy::too_many_arguments)]
+fn flat_comm_loop(rank: usize, ring_size: usize, wire: WireFormat,
+                  net: bool, ranges: &[BucketRange],
+                  bucket_rx: Receiver<(usize, Vec<f32>)>,
+                  reduced_tx: Sender<Reduced>, tx_next: Sender<RingMsg>,
+                  rx_prev: Receiver<RingMsg>) {
+    // Chunk plans are a pure function of (ring size, bucket length):
+    // build them once and reuse forever.
+    let plans: Vec<RingPlan> = ranges
+        .iter()
+        .map(|b| RingPlan::new(ring_size, b.len()))
+        .collect();
     // Free lists recycle wire message vectors: every exchange sends and
     // receives the same number of chunks, so after the first step the
     // lists are self-sustaining (steady-state zero allocation).
@@ -534,19 +813,122 @@ fn comm_worker(rank: usize, world: usize, wire: WireFormat,
     let mut free_u16: Vec<Vec<u16>> = Vec::new();
     while let Ok((idx, mut data)) = bucket_rx.recv() {
         let t0 = Instant::now();
-        if world > 1 {
+        if ring_size > 1 {
             ring_exchange(&mut data, &plans[idx], rank, wire, &tx_next,
                           &rx_prev, &mut free_f32, &mut free_u16);
         }
         let exchange_s = t0.elapsed().as_secs_f64();
-        if reduced_tx.send(Reduced { idx, data, exchange_s }).is_err() {
+        // A flat ring on a multi-machine topology is paced by its
+        // network hops (paper §3.2), so the whole exchange bills to the
+        // network; within one node it is all PCIe.
+        let net_s = if net { exchange_s } else { 0.0 };
+        if reduced_tx.send(Reduced { idx, data, exchange_s, net_s }).is_err()
+        {
             break;
         }
     }
 }
 
-/// In-place ring allreduce (sum) of `buf` across the comm workers, using
-/// the NCCL reduce-scatter + all-gather schedule from [`RingPlan`].
+/// Hierarchical node leader: gather (PCIe) -> leader ring (network) ->
+/// broadcast (PCIe).
+#[allow(clippy::too_many_arguments)]
+fn leader_comm_loop(machine: usize, machines: usize, wire: WireFormat,
+                    ranges: &[BucketRange],
+                    bucket_rx: Receiver<(usize, Vec<f32>)>,
+                    reduced_tx: Sender<Reduced>,
+                    member_rxs: &[Receiver<(usize, Vec<f32>)>],
+                    member_txs: &[Sender<Bcast>], tx_next: Sender<RingMsg>,
+                    rx_prev: Receiver<RingMsg>) {
+    // Leader-ring chunk plans at size `machines` — a pure function of
+    // (machines, bucket length), built once and reused forever.
+    let plans: Vec<RingPlan> = ranges
+        .iter()
+        .map(|b| RingPlan::new(machines, b.len()))
+        .collect();
+    let mut free_f32: Vec<Vec<f32>> = Vec::new();
+    let mut free_u16: Vec<Vec<u16>> = Vec::new();
+    // Member payload vectors parked between gather and broadcast — the
+    // broadcast copies are written into these, so the steady-state step
+    // allocates nothing.
+    let mut parked: Vec<Vec<f32>> = Vec::with_capacity(member_rxs.len());
+    while let Ok((idx, mut data)) = bucket_rx.recv() {
+        let t0 = Instant::now();
+        // Phase 1 — intra-node leader accumulate ("PCIe"): add each
+        // member's bucket in fixed local-rank order (1, 2, … g-1) so the
+        // node sum is deterministic.
+        parked.clear();
+        for rx in member_rxs {
+            match rx.recv() {
+                Ok((midx, mv)) => {
+                    debug_assert_eq!(midx, idx, "member bucket skew");
+                    for (d, s) in data.iter_mut().zip(mv.iter()) {
+                        *d += *s;
+                    }
+                    parked.push(mv);
+                }
+                Err(_) => {
+                    // Member comm worker died; its own rank reports the
+                    // failure — keep the protocol moving for the rest.
+                }
+            }
+        }
+        // Phase 2 — inter-node ring allreduce over the leaders only
+        // ("network"): the §4.4 move that caps per-NIC traffic at
+        // 2(M-1)/M of the payload.
+        let tn = Instant::now();
+        ring_exchange(&mut data, &plans[idx], machine, wire, &tx_next,
+                      &rx_prev, &mut free_f32, &mut free_u16);
+        let net_s = tn.elapsed().as_secs_f64();
+        // Phase 3 — intra-node broadcast ("PCIe"), recycling the parked
+        // member vectors as the broadcast payloads.
+        for tx in member_txs {
+            let mut buf = parked.pop().unwrap_or_default();
+            buf.clear();
+            buf.extend_from_slice(&data);
+            // A dead member is its own rank's failure; ignore here.
+            let _ = tx.send(Bcast { idx, data: buf, net_s });
+        }
+        let exchange_s = t0.elapsed().as_secs_f64();
+        if reduced_tx.send(Reduced { idx, data, exchange_s, net_s }).is_err()
+        {
+            break;
+        }
+    }
+}
+
+/// Hierarchical node member: one PCIe hop up, one PCIe hop down.
+fn member_comm_loop(bucket_rx: Receiver<(usize, Vec<f32>)>,
+                    reduced_tx: Sender<Reduced>,
+                    to_leader: Sender<(usize, Vec<f32>)>,
+                    from_leader: Receiver<Bcast>) {
+    while let Ok((idx, data)) = bucket_rx.recv() {
+        let t0 = Instant::now();
+        if to_leader.send((idx, data)).is_err() {
+            // Leader gone: dropping reduced_tx surfaces the failure at
+            // our compute worker's recv.
+            break;
+        }
+        let b = match from_leader.recv() {
+            Ok(b) => b,
+            Err(_) => break,
+        };
+        debug_assert_eq!(b.idx, idx, "broadcast bucket skew");
+        let exchange_s = t0.elapsed().as_secs_f64();
+        // The member's wall covers the whole hierarchy; the network
+        // share is whatever the leader measured (capped by our wall).
+        let net_s = b.net_s.min(exchange_s);
+        if reduced_tx
+            .send(Reduced { idx, data: b.data, exchange_s, net_s })
+            .is_err()
+        {
+            break;
+        }
+    }
+}
+
+/// In-place ring allreduce (sum) of `buf` across a set of comm workers,
+/// using the NCCL reduce-scatter + all-gather schedule from [`RingPlan`]
+/// (the flat world ring, or the leader ring at size `machines`).
 #[allow(clippy::too_many_arguments)]
 fn ring_exchange(buf: &mut [f32], plan: &RingPlan, rank: usize,
                  wire: WireFormat, tx: &Sender<RingMsg>,
@@ -638,7 +1020,11 @@ mod tests {
     use super::*;
     use crate::testkit;
 
-    /// Deterministic synthetic gradients: f(rank, step, micro, i).
+    /// Deterministic synthetic gradients: f(rank, step, micro, i).  All
+    /// values are multiples of 0.25 with small magnitude, so every
+    /// partial sum over any association is exactly representable in f32
+    /// — which is what lets the hierarchical and flat schedules be
+    /// compared BITWISE below.
     struct Synth {
         n: usize,
     }
@@ -720,6 +1106,8 @@ mod tests {
         let synth = Synth { n };
         let out = pool.step(&[], 1.0, 2, 0, true, &synth).unwrap();
         assert_eq!(out.comm_s, 0.0);
+        assert_eq!(out.comm_net_s, 0.0);
+        assert_eq!(out.exposed_comm_s, 0.0);
         let want = expected(1, n, 0, 2);
         testkit::assert_allclose(&pool.leader_grads(), &want, 1e-4, 1e-5);
     }
@@ -796,6 +1184,249 @@ mod tests {
         let b1 = f16p.rank_grads(1);
         for (x, y) in b.iter().zip(b1.iter()) {
             assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    // ------------------------------------------- hierarchical exchange --
+
+    #[test]
+    fn comm_mode_parses_and_resolves() {
+        assert_eq!(CommMode::parse("flat").unwrap(), CommMode::Flat);
+        assert_eq!(CommMode::parse(" Hierarchical ").unwrap(),
+                   CommMode::Hierarchical);
+        assert_eq!(CommMode::parse("auto").unwrap(), CommMode::Auto);
+        assert!(CommMode::parse("ring-of-rings").is_err());
+        assert_eq!(CommMode::Auto.to_string(), "auto");
+
+        let multi = Topology::new(2, 4);
+        let one_node = Topology::new(1, 8);
+        let one_gpu = Topology::new(8, 1);
+        assert!(CommMode::Auto.resolves_hierarchical(&multi));
+        assert!(CommMode::Hierarchical.resolves_hierarchical(&multi));
+        assert!(!CommMode::Flat.resolves_hierarchical(&multi));
+        assert!(!CommMode::Auto.resolves_hierarchical(&one_node));
+        assert!(!CommMode::Hierarchical.resolves_hierarchical(&one_gpu));
+    }
+
+    #[test]
+    fn hierarchical_matches_flat_bitwise_on_exact_grads() {
+        // The synthetic gradients sum exactly in f32, so the
+        // machine-grouped association of the hierarchy and the flat
+        // ring's fold must agree to the bit.
+        let topo = Topology::new(2, 2);
+        let (n, k) = (157, 2);
+        let mut hier = CollectivePool::with_topology(
+            topo, n, full_ranges(n, 3), WireFormat::F32,
+            CommMode::Hierarchical);
+        assert!(hier.is_hierarchical());
+        let mut flat = CollectivePool::new(4, n, full_ranges(n, 3),
+                                           WireFormat::F32);
+        let synth = Synth { n };
+        hier.step(&[], 1.0, k, 5, true, &synth).unwrap();
+        flat.step(&[], 1.0, k, 5, true, &synth).unwrap();
+        let want = expected(4, n, 5, k);
+        for r in 0..4 {
+            let (gh, gf) = (hier.rank_grads(r), flat.rank_grads(r));
+            for (i, (x, y)) in gh.iter().zip(gf.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "rank {r} [{i}]");
+            }
+            testkit::assert_allclose(&gh, &want, 1e-3, 1e-5);
+        }
+    }
+
+    #[test]
+    fn hierarchical_overlap_and_barrier_are_bitwise_identical() {
+        let topo = Topology::new(3, 2);
+        let (n, k) = (211, 2);
+        for wire in [WireFormat::F32, WireFormat::F16] {
+            let mut a = CollectivePool::with_topology(
+                topo, n, full_ranges(n, 4), wire, CommMode::Auto);
+            let mut b = CollectivePool::with_topology(
+                topo, n, full_ranges(n, 4), wire, CommMode::Auto);
+            assert!(a.is_hierarchical() && b.is_hierarchical());
+            let synth = Synth { n };
+            a.step(&[], 1.0, k, 1, true, &synth).unwrap();
+            b.step(&[], 1.0, k, 1, false, &synth).unwrap();
+            for r in 0..topo.world_size() {
+                let (ga, gb) = (a.rank_grads(r), b.rank_grads(r));
+                for (x, y) in ga.iter().zip(gb.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{wire:?} rank {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_replicas_identical_and_f16_stays_close() {
+        let topo = Topology::new(2, 3);
+        let n = 120;
+        let mut f32p = CollectivePool::with_topology(
+            topo, n, full_ranges(n, 2), WireFormat::F32, CommMode::Auto);
+        let mut f16p = CollectivePool::with_topology(
+            topo, n, full_ranges(n, 2), WireFormat::F16, CommMode::Auto);
+        let synth = Synth { n };
+        f32p.step(&[], 1.0, 1, 3, true, &synth).unwrap();
+        f16p.step(&[], 1.0, 1, 3, true, &synth).unwrap();
+        let a = f32p.leader_grads();
+        let b = f16p.leader_grads();
+        testkit::assert_allclose(&a, &b, 1e-2, 4e-3);
+        for r in 1..topo.world_size() {
+            let br = f16p.rank_grads(r);
+            for (x, y) in b.iter().zip(br.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_topologies_fall_back_to_flat() {
+        for topo in [Topology::new(1, 4), Topology::new(4, 1)] {
+            let n = 64;
+            let mut pool = CollectivePool::with_topology(
+                topo, n, full_ranges(n, 2), WireFormat::F32,
+                CommMode::Hierarchical);
+            assert!(!pool.is_hierarchical(), "{topo}");
+            let synth = Synth { n };
+            pool.step(&[], 1.0, 1, 0, true, &synth).unwrap();
+            let want = expected(4, n, 0, 1);
+            testkit::assert_allclose(&pool.leader_grads(), &want, 1e-3,
+                                     1e-5);
+        }
+    }
+
+    #[test]
+    fn hierarchical_timing_split_is_consistent() {
+        let topo = Topology::new(2, 2);
+        let n = 400;
+        let mut pool = CollectivePool::with_topology(
+            topo, n, full_ranges(n, 3), WireFormat::F32, CommMode::Auto);
+        let synth = Synth { n };
+        let out = pool.step(&[], 1.0, 2, 0, true, &synth).unwrap();
+        assert_eq!(out.bucket_s.len(), 3);
+        assert_eq!(out.bucket_net_s.len(), 3);
+        for (t, nt) in out.bucket_s.iter().zip(&out.bucket_net_s) {
+            assert!(*nt >= 0.0 && nt <= t, "net {nt} total {t}");
+        }
+        assert!(out.comm_net_s <= out.comm_s + 1e-12);
+        assert!(out.comm_pcie_s >= 0.0);
+        assert!(out.exposed_comm_s >= 0.0);
+    }
+
+    #[test]
+    fn hierarchical_compute_error_is_reported_not_deadlocked() {
+        struct Failing {
+            n: usize,
+        }
+        impl RankCompute for Failing {
+            fn micro(&self, rank: usize, _s: usize, _m: usize, _p: &[f32],
+                     _sc: f32, out: &mut Vec<f32>) -> Result<MicroStats> {
+                // rank 3 is a node MEMBER on 2M2G (machine 1, local 1)
+                anyhow::ensure!(rank != 3, "injected failure on rank 3");
+                out.resize(self.n, 0.0);
+                out.fill(1.0);
+                Ok(MicroStats::default())
+            }
+        }
+        let topo = Topology::new(2, 2);
+        let n = 48;
+        let mut pool = CollectivePool::with_topology(
+            topo, n, full_ranges(n, 2), WireFormat::F32, CommMode::Auto);
+        let err = pool.step(&[], 1.0, 1, 0, true, &Failing { n })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("rank 3"));
+        // the pool must still be usable afterwards
+        let synth = Synth { n };
+        pool.step(&[], 1.0, 1, 1, true, &synth).unwrap();
+        let want = expected(4, n, 1, 1);
+        testkit::assert_allclose(&pool.leader_grads(), &want, 1e-3, 1e-5);
+    }
+
+    // --------------------------------------- eager-send failure paths --
+
+    /// Fixed-size deterministic fill for the hand-wired tests below.
+    struct Fill30;
+    impl RankCompute for Fill30 {
+        fn micro(&self, _r: usize, _s: usize, _m: usize, _p: &[f32],
+                 _sc: f32, out: &mut Vec<f32>) -> Result<MicroStats> {
+            out.resize(30, 0.0);
+            for (i, v) in out.iter_mut().enumerate() {
+                *v = i as f32;
+            }
+            Ok(MicroStats::default())
+        }
+    }
+    static FILL30: Fill30 = Fill30;
+
+    fn test_job(overlap: bool) -> Job {
+        Job {
+            params: &[],
+            compute: &FILL30,
+            scale: 1.0,
+            micro_steps: 1,
+            step_index: 0,
+            overlap,
+        }
+    }
+
+    /// Regression for the eager-send bug: when every send fails (comm
+    /// worker never ran), the reply loop must await ZERO replies instead
+    /// of `ranges.len()` — the old code blocked forever here because the
+    /// live `reduced_tx` in this scope would never produce a message.
+    #[test]
+    fn dead_comm_worker_fails_fast_without_awaiting_replies() {
+        let ranges = BucketRange::even_split(30, 3);
+        let accs = vec![Mutex::new(vec![0.0f32; 30])];
+        let (bucket_tx, bucket_rx) = channel::<(usize, Vec<f32>)>();
+        drop(bucket_rx); // comm worker "died" before the step
+        let (_reduced_tx, reduced_rx) = channel::<Reduced>();
+        let mut grads = Vec::new();
+        let mut bucket_bufs: Vec<Vec<f32>> =
+            ranges.iter().map(|b| Vec::with_capacity(b.len())).collect();
+        let job = test_job(true);
+        let err = run_rank_step(0, 2, &ranges, &accs, &job, &mut grads,
+                                &mut bucket_bufs, &bucket_tx, &reduced_rx)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("comm worker gone"), "{err:#}");
+    }
+
+    /// A comm worker that dies partway through the eager schedule: the
+    /// compute side must feed/await only what was actually enqueued,
+    /// apply the replies it did get, and report the failure — never
+    /// hang.  (Run under both schedules; the scripted peer serves one
+    /// bucket then drops its channels.)
+    #[test]
+    fn partial_exchange_failure_is_reported_not_deadlocked() {
+        for overlap in [true, false] {
+            let ranges = BucketRange::even_split(30, 3);
+            let accs = vec![Mutex::new(vec![0.0f32; 30])];
+            let (bucket_tx, bucket_rx) = channel::<(usize, Vec<f32>)>();
+            let (reduced_tx, reduced_rx) = channel::<Reduced>();
+            let peer = std::thread::spawn(move || {
+                // Serve bucket 0 with a recognizable "reduction"...
+                let (idx, mut data) = bucket_rx.recv().unwrap();
+                for v in data.iter_mut() {
+                    *v += 1000.0;
+                }
+                reduced_tx
+                    .send(Reduced { idx, data, exchange_s: 0.0, net_s: 0.0 })
+                    .unwrap();
+                // ...then die mid-exchange (drops bucket_rx/reduced_tx).
+            });
+            let mut grads = Vec::new();
+            let mut bucket_bufs: Vec<Vec<f32>> =
+                ranges.iter().map(|b| Vec::with_capacity(b.len())).collect();
+            let job = test_job(overlap);
+            let res = run_rank_step(0, 2, &ranges, &accs, &job, &mut grads,
+                                    &mut bucket_bufs, &bucket_tx,
+                                    &reduced_rx);
+            peer.join().unwrap();
+            let err = res.unwrap_err();
+            assert!(format!("{err:#}").contains("comm worker gone"),
+                    "overlap={overlap}: {err:#}");
+            // bucket 0's reply was applied before the failure surfaced
+            let acc = accs[0].lock().unwrap();
+            assert_eq!(acc[0], 1000.0, "overlap={overlap}");
+            assert_eq!(acc[9], 1009.0, "overlap={overlap}");
         }
     }
 }

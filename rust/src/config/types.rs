@@ -1,6 +1,7 @@
 //! Typed run configuration assembled from CLI + TOML (paper Tables 1/2/6).
 
 use super::toml::TomlDoc;
+use crate::collectives::pool::CommMode;
 use crate::topology::Topology;
 
 /// Training hyper-parameters (per-phase values live in `phases.rs`).
@@ -25,6 +26,12 @@ pub struct TrainConfig {
     /// per hop.  Replicas stay bitwise identical; absolute gradient
     /// values differ from the f32 wire by ~2^-11 relative.
     pub grad_wire_f16: bool,
+    /// How bucket allreduces travel the cluster (paper §4.4 resource
+    /// separation): `flat` = one world-sized ring, `hierarchical` =
+    /// PCIe leader-accumulate + network leader ring + PCIe broadcast,
+    /// `auto` = hierarchical whenever the topology has multiple machines
+    /// AND multiple GPUs per machine.
+    pub comm_mode: CommMode,
     /// Gradient bucket size threshold in elements (DDP-style).
     pub bucket_elems: usize,
     /// Total optimizer steps to run.
@@ -48,6 +55,7 @@ impl Default for TrainConfig {
             accum_steps: 4,
             overlap: true,
             grad_wire_f16: false,
+            comm_mode: CommMode::Auto,
             bucket_elems: 1 << 20,
             steps: 100,
             init_loss_scale: 65536.0,
@@ -141,6 +149,9 @@ impl RunConfig {
         c.train.overlap = doc.bool("train.overlap", c.train.overlap);
         c.train.grad_wire_f16 =
             doc.bool("train.grad_wire_f16", c.train.grad_wire_f16);
+        let comm = doc.str("train.comm_mode", &c.train.comm_mode.to_string());
+        c.train.comm_mode = CommMode::parse(&comm)
+            .map_err(|e| anyhow::anyhow!("train.comm_mode: {e}"))?;
         c.train.bucket_elems =
             doc.int("train.bucket_elems", c.train.bucket_elems as i64) as usize;
         c.train.steps = doc.int("train.steps", c.train.steps as i64) as usize;
@@ -211,7 +222,7 @@ mod tests {
     fn toml_overrides_defaults() {
         let doc = TomlDoc::parse(
             "[train]\nsteps = 7\nlr = 0.5\noverlap = false\n\
-             grad_wire_f16 = true\n\
+             grad_wire_f16 = true\ncomm_mode = \"hierarchical\"\n\
              [cluster]\ntopo = \"2M4G\"\nnetwork_gbps = 25.0\n\
              [data]\nseq_len = 512\n",
         ).unwrap();
@@ -220,6 +231,8 @@ mod tests {
         assert_eq!(c.train.lr, 0.5);
         assert!(!c.train.overlap);
         assert!(c.train.grad_wire_f16);
+        assert_eq!(c.train.comm_mode, CommMode::Hierarchical);
+        assert!(c.train.comm_mode.resolves_hierarchical(&c.cluster.topo));
         assert_eq!(c.cluster.topo.machines, 2);
         assert_eq!(c.cluster.topo.gpus_per_machine, 4);
         assert_eq!(c.cluster.network_bps, 25e9);
@@ -230,6 +243,15 @@ mod tests {
     fn bad_topology_is_error() {
         let doc = TomlDoc::parse("[cluster]\ntopo = \"banana\"\n").unwrap();
         assert!(RunConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn bad_comm_mode_is_error() {
+        let doc = TomlDoc::parse("[train]\ncomm_mode = \"rings\"\n").unwrap();
+        let err = RunConfig::from_toml(&doc).map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("comm_mode"));
+        // default is auto
+        assert_eq!(RunConfig::default().train.comm_mode, CommMode::Auto);
     }
 
     #[test]

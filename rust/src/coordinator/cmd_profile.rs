@@ -1,13 +1,69 @@
-//! `bertdist profile-grads` — Figure 4: gradient memory by layer group.
+//! `bertdist profile-grads` — Figure 4: gradient memory by layer group,
+//! plus (with `--trace`) a MEASURED bucket-exchange profile on the
+//! persistent collective pool: a few synthetic pooled steps on the
+//! requested `--topology`/`--comm-mode`, exported as chrome-trace spans
+//! split into PCIe and network phases (the `TrainReport.exchange`
+//! artifact, viewable in ui.perfetto.dev).
 
 use crate::cliopt::Args;
+use crate::collectives::pool::{CollectivePool, CommMode, MicroStats,
+                               RankCompute, WireFormat};
+use crate::grad::{bucket_ranges, build_buckets};
+use crate::metrics::ExchangeTimings;
 use crate::model::BertConfig;
+use crate::topology::Topology;
 use crate::util::ascii_plot::bar_chart;
 use crate::util::human_bytes;
 
+/// Deterministic synthetic gradients for the exchange profile: a pure
+/// function of (rank, step, micro, i) — no XLA artifacts needed.
+struct SynthGrads {
+    n: usize,
+}
+
+impl RankCompute for SynthGrads {
+    fn micro(&self, rank: usize, step_index: usize, micro: usize,
+             _params: &[f32], _scale: f32, out: &mut Vec<f32>)
+             -> anyhow::Result<MicroStats> {
+        out.resize(self.n, 0.0);
+        for (i, v) in out.iter_mut().enumerate() {
+            *v = ((rank * 31 + step_index * 7 + micro) % 13) as f32 * 0.25
+                + (i % 17) as f32 * 0.125;
+        }
+        Ok(MicroStats::default())
+    }
+}
+
 pub fn run(args: &Args) -> anyhow::Result<()> {
     let preset = args.get("preset", "bert-large");
+    let trace = args.get_opt("trace");
+    // `--topo` wins over its `--topology` alias — same precedence as
+    // `bertdist train`, so both commands honor the same spelling.
+    let topo_raw = args.get_opt_alias(&["topo", "topology"]);
+    let comm_raw = args.get_opt("comm-mode");
+    // These knobs only shape the --trace exchange profile; remember
+    // whether any was given so we can say so instead of silently
+    // ignoring them on a plain Figure-4 run.
+    let trace_knob_given = topo_raw.is_some() || comm_raw.is_some()
+        || args.get_opt("steps").is_some()
+        || args.get_opt("accum").is_some()
+        || args.get_opt("bucket-elems").is_some();
+    let topo =
+        Topology::parse(&topo_raw.unwrap_or_else(|| "2M2G".into()))
+            .map_err(|e| anyhow::anyhow!(e))?;
+    let comm_mode = CommMode::parse(comm_raw.as_deref().unwrap_or("auto"))
+        .map_err(|e| anyhow::anyhow!("--comm-mode: {e}"))?;
+    let steps = args.get_parse("steps", 4usize)?;
+    let accum = args.get_parse("accum", 2usize)?;
+    let bucket_elems = args.get_parse("bucket-elems", 1usize << 20)?;
     args.finish_strict()?;
+    if trace.is_none() && trace_knob_given {
+        println!(
+            "note: --topology/--comm-mode/--steps/--accum/--bucket-elems \
+             only shape the measured exchange profile — pass --trace \
+             <out.json> to run it\n"
+        );
+    }
 
     let cfg = BertConfig::preset(&preset)
         .ok_or_else(|| anyhow::anyhow!("unknown preset {preset}"))?;
@@ -32,5 +88,40 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
          paper's argument against sparsification (§4.4)",
         profile.dense_fraction() * 100.0
     );
+
+    // ---- measured bucket-exchange profile on the persistent pool ----
+    if let Some(path) = trace {
+        let n = layout.total_len();
+        let world = topo.world_size();
+        // One f32 accumulator per rank plus bucket scratch: refuse
+        // worlds that would not fit an interactive profiling run.
+        anyhow::ensure!(
+            n.saturating_mul(world) <= 64 * 1024 * 1024,
+            "exchange profile needs ~{} of rank buffers ({preset} x \
+             {world} ranks) — use a smaller preset (bert-tiny/bert-micro) \
+             or topology",
+            human_bytes((n * world * 4) as f64)
+        );
+        let ranges = bucket_ranges(&build_buckets(&layout, bucket_elems));
+        let mut pool = CollectivePool::with_topology(
+            topo, n, ranges.clone(), WireFormat::F32, comm_mode);
+        println!(
+            "\nexchange profile: topo={topo} world={world} comm={comm_mode} \
+             ({}) buckets={} accum={accum} steps={steps}",
+            if pool.is_hierarchical() { "hierarchical" } else { "flat" },
+            ranges.len()
+        );
+        let synth = SynthGrads { n };
+        let mut timings = ExchangeTimings::default();
+        for s in 0..steps.max(1) {
+            let out = pool.step(&[], 1.0, accum, s, true, &synth)?;
+            timings.record(&out.bucket_s, &out.bucket_pcie_s,
+                           &out.bucket_net_s, out.exposed_comm_s);
+        }
+        println!("{}", timings.summary());
+        let tl = timings.to_timeline();
+        std::fs::write(&path, tl.to_chrome_trace())?;
+        println!("exchange trace -> {path} (open in ui.perfetto.dev)");
+    }
     Ok(())
 }

@@ -6,6 +6,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::cliopt::Args;
+use crate::collectives::pool::CommMode;
 use crate::config::{RunConfig, TwoPhaseSchedule};
 use crate::data::ShardedDataset;
 use crate::runtime::Engine;
@@ -46,13 +47,16 @@ pub fn train_run(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
     }
     println!(
         "phase 1: preset={} variant={} topo={} world={} batch={}x{} \
-         accum={} overlap={} wire={}",
+         accum={} overlap={} wire={} comm={} ({})",
         cfg.train.preset, cfg.train.variant, cfg.cluster.topo, world,
         batch1, seq1, cfg.train.accum_steps, cfg.train.overlap,
-        if cfg.train.grad_wire_f16 { "f16" } else { "f32" }
+        if cfg.train.grad_wire_f16 { "f16" } else { "f32" },
+        cfg.train.comm_mode,
+        if trainer.is_hierarchical() { "hierarchical" } else { "flat" }
     );
     let report1 = trainer.run(&datasets, steps1, steps1 + steps2)?;
     println!("phase 1 done: {}", report1.summary());
+    println!("exchange: {}", report1.exchange.summary());
     if let Some(p) = ckpt {
         trainer.save(p)?;
         println!("checkpoint -> {}", p.display());
@@ -70,6 +74,7 @@ pub fn train_run(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
         println!("phase 2: batch={batch2}x{seq2} (Table 6 ratios)");
         let r = t2.run(&datasets, steps2, steps1 + steps2)?;
         println!("phase 2 done: {}", r.summary());
+        println!("exchange: {}", r.exchange.summary());
         if let Some(p) = ckpt {
             t2.save(p)?;
         }
@@ -105,19 +110,26 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     cfg.train.warmup_steps =
         args.get_parse("warmup", cfg.train.warmup_steps)?;
     // Fig. 2 / §4.4 hot-loop knobs: `--overlap[=false]` toggles the
-    // eager bucketed exchange, `--wire-f16` ships ring payloads as f16.
+    // eager bucketed exchange, `--wire-f16` ships ring payloads as f16,
+    // `--comm-mode flat|hierarchical|auto` picks the bucket route.
     if let Some(v) = args.flag_opt("overlap") {
         cfg.train.overlap = v;
     }
     if let Some(v) = args.flag_opt("wire-f16") {
         cfg.train.grad_wire_f16 = v;
     }
+    if let Some(m) = args.get_opt("comm-mode") {
+        cfg.train.comm_mode = CommMode::parse(&m)
+            .map_err(|e| anyhow::anyhow!("--comm-mode: {e}"))?;
+    }
     cfg.train.bucket_elems =
         args.get_parse("bucket-elems", cfg.train.bucket_elems)?;
-    if let Some(t) = args.get_opt("topo") {
+    // `--topology` is the paper-spelling alias of `--topo`.
+    if let Some(t) = args.get_opt_alias(&["topo", "topology"]) {
         cfg.cluster.topo = Topology::parse(&t)
             .map_err(|e| anyhow::anyhow!(e))?;
     }
+    let trace = args.get_opt("trace").map(PathBuf::from);
     let artifacts: PathBuf = args.get("artifacts", "artifacts").into();
     let data_dir: PathBuf = args.get("data-dir", "data/quickstart").into();
     let phase2_steps = args.get_parse(
@@ -152,6 +164,26 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     );
     let outcome = train_run(&engine, &cfg, &data_dir, cfg.train.steps,
                             phase2_steps, batch, seq, ckpt.as_deref())?;
+
+    // Exchange spans (TrainReport.exchange) as a chrome trace: the mean
+    // per-step bucket exchange, split into PCIe and network phases.
+    // Phase 2 (different batch/seq over the same payload) gets its own
+    // sibling file rather than being silently dropped.
+    if let Some(path) = &trace {
+        std::fs::write(path,
+                       outcome.phase1.exchange.to_timeline()
+                           .to_chrome_trace())?;
+        println!("exchange trace -> {} (open in ui.perfetto.dev)",
+                 path.display());
+        if let Some(r2) = &outcome.phase2 {
+            let mut p2 = path.as_os_str().to_owned();
+            p2.push(".phase2.json");
+            let p2 = PathBuf::from(p2);
+            std::fs::write(&p2,
+                           r2.exchange.to_timeline().to_chrome_trace())?;
+            println!("phase-2 exchange trace -> {}", p2.display());
+        }
+    }
 
     // Figure-7 style loss plot
     let p1 = outcome.phase1.loss.xy();

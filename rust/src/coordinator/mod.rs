@@ -28,14 +28,21 @@ COMMANDS:
                    --variant fused_f32 --optimizer lamb --lr 1e-4
                    --data-dir data/quickstart [--phase2] [--ckpt path]
                    [--overlap=false] [--wire-f16] [--bucket-elems N]
+                   [--comm-mode flat|hierarchical|auto] [--topology 2M4G]
+                   [--trace exchange.json]
   shard-data     build bshard files from a synthetic or real corpus (§4.1)
                    --out data/quickstart --docs 64 --shards 8 [--text file]
   simulate       one-iteration timeline, overlap on/off (Figs. 2 & 5)
                    --topo 2M1G --accum 1 [--no-overlap] [--trace out.json]
   scaling        weak-scaling sweeps (Figs. 3 & 6)
                    --mode intra-inter | multinode  [--accum 4]
-  profile-grads  gradient memory profile by layer group (Fig. 4)
-                   --preset bert-large
+  profile-grads  gradient memory profile by layer group (Fig. 4); with
+                 --trace, a measured bucket-exchange profile on the
+                 persistent pool (PCIe/network chrome-trace spans).  The
+                 trace runs REAL pooled steps, so use a small preset:
+                   --preset bert-large                       (Fig. 4)
+                   --preset bert-micro --trace exchange.json (profile)
+                   [--topology 2M2G] [--comm-mode auto] [--steps 4]
   cost           acquisition vs cloud cost tables (Tables 7 & 8)
                    [--days 12]
   amp-demo       mixed-precision walkthrough: op safety classes, loss

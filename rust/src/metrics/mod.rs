@@ -2,7 +2,7 @@
 //! a chrome-trace timeline exporter (load `chrome://tracing` /
 //! ui.perfetto.dev on the emitted JSON to see the Figure-2/5 spans).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::fmt::Write as _;
 use std::time::Instant;
 
@@ -13,7 +13,10 @@ use crate::jsonlite::Json;
 pub struct ThroughputMeter {
     start: Instant,
     total_tokens: u64,
-    window: Vec<(f64, u64)>,
+    /// Ring buffer: eviction is O(1) (`pop_front`) — this sits in the
+    /// trainer's hot loop, where a `Vec::remove(0)` front-shift cost
+    /// O(window) per sample.
+    window: VecDeque<(f64, u64)>,
     window_cap: usize,
 }
 
@@ -28,7 +31,7 @@ impl ThroughputMeter {
         Self {
             start: Instant::now(),
             total_tokens: 0,
-            window: Vec::new(),
+            window: VecDeque::with_capacity(65),
             window_cap: 64,
         }
     }
@@ -37,9 +40,9 @@ impl ThroughputMeter {
     pub fn add(&mut self, tokens: u64) {
         self.total_tokens += tokens;
         let t = self.start.elapsed().as_secs_f64();
-        self.window.push((t, tokens));
+        self.window.push_back((t, tokens));
         if self.window.len() > self.window_cap {
-            self.window.remove(0);
+            self.window.pop_front();
         }
     }
 
@@ -58,8 +61,8 @@ impl ThroughputMeter {
         if self.window.len() < 2 {
             return self.average();
         }
-        let t0 = self.window.first().unwrap().0;
-        let t1 = self.window.last().unwrap().0;
+        let t0 = self.window.front().unwrap().0;
+        let t1 = self.window.back().unwrap().0;
         let toks: u64 = self.window.iter().skip(1).map(|(_, n)| n).sum();
         if t1 <= t0 {
             self.average()
@@ -120,9 +123,11 @@ impl LossCurve {
 }
 
 /// Exchange-timing accumulator for the persistent collective pool
-/// (paper §4.4 / Fig. 2): per-bucket ring-allreduce seconds plus the
-/// *exposed* communication — the tail a step actually waited on after
-/// its gradient accumulation finished.  The headline derived metric is
+/// (paper §4.4 / Fig. 2): per-bucket exchange seconds split into the
+/// PCIe (intra-node) and network (inter-node) phases of the schedule,
+/// plus the *exposed* communication — the pure time a step was blocked
+/// waiting for reduced buckets after its gradient accumulation finished.
+/// The headline derived metric is
 /// [`ExchangeTimings::overlap_efficiency`], the fraction of exchange
 /// wall-clock hidden behind compute.
 #[derive(Debug, Default, Clone)]
@@ -130,8 +135,19 @@ pub struct ExchangeTimings {
     /// Summed exchange seconds per bucket (backward order, bucket 0
     /// first), accumulated over steps.
     pub bucket_s: Vec<f64>,
+    /// Summed PCIe-phase seconds per bucket.  Each phase component is a
+    /// per-rank maximum taken independently of the total, so
+    /// `bucket_pcie_s[b] + bucket_net_s[b] >= bucket_s[b]` (the split
+    /// never understates a phase).
+    pub bucket_pcie_s: Vec<f64>,
+    /// Summed network-phase seconds per bucket.
+    pub bucket_net_s: Vec<f64>,
     /// Total exchange seconds across all buckets and steps.
     pub total_comm_s: f64,
+    /// Network (inter-node) phase seconds.
+    pub net_comm_s: f64,
+    /// PCIe (intra-node) phase seconds.
+    pub pcie_comm_s: f64,
     /// Total exposed (non-overlapped) communication seconds.
     pub exposed_comm_s: f64,
     /// Steps recorded.
@@ -139,23 +155,39 @@ pub struct ExchangeTimings {
 }
 
 impl ExchangeTimings {
-    /// Record one step's per-bucket exchange seconds and its exposed
-    /// communication tail.
-    pub fn record(&mut self, bucket_s: &[f64], exposed_s: f64) {
+    /// Record one step's per-bucket exchange seconds (total plus the
+    /// PCIe and network phase components) and its exposed communication
+    /// tail.
+    pub fn record(&mut self, bucket_s: &[f64], bucket_pcie_s: &[f64],
+                  bucket_net_s: &[f64], exposed_s: f64) {
         if self.bucket_s.len() < bucket_s.len() {
             self.bucket_s.resize(bucket_s.len(), 0.0);
+        }
+        if self.bucket_pcie_s.len() < bucket_pcie_s.len() {
+            self.bucket_pcie_s.resize(bucket_pcie_s.len(), 0.0);
+        }
+        if self.bucket_net_s.len() < bucket_net_s.len() {
+            self.bucket_net_s.resize(bucket_net_s.len(), 0.0);
         }
         for (t, b) in self.bucket_s.iter_mut().zip(bucket_s) {
             *t += *b;
         }
+        for (t, b) in self.bucket_pcie_s.iter_mut().zip(bucket_pcie_s) {
+            *t += *b;
+        }
+        for (t, b) in self.bucket_net_s.iter_mut().zip(bucket_net_s) {
+            *t += *b;
+        }
         self.total_comm_s += bucket_s.iter().sum::<f64>();
+        self.pcie_comm_s += bucket_pcie_s.iter().sum::<f64>();
+        self.net_comm_s += bucket_net_s.iter().sum::<f64>();
         self.exposed_comm_s += exposed_s;
         self.steps += 1;
     }
 
     /// `1 - exposed/total`: 1.0 means the exchange was fully hidden
     /// behind compute, 0.0 means it was fully serialized (or there was
-    /// no communication at all).
+    /// no communication at all).  Always in `[0, 1]`.
     pub fn overlap_efficiency(&self) -> f64 {
         if self.total_comm_s <= 0.0 {
             0.0
@@ -173,13 +205,69 @@ impl ExchangeTimings {
         }
     }
 
+    /// Mean PCIe-phase seconds per step for bucket `b`.
+    pub fn mean_bucket_pcie_s(&self, b: usize) -> f64 {
+        if self.steps == 0 || b >= self.bucket_pcie_s.len() {
+            0.0
+        } else {
+            self.bucket_pcie_s[b] / self.steps as f64
+        }
+    }
+
+    /// Mean network-phase seconds per step for bucket `b`.
+    pub fn mean_bucket_net_s(&self, b: usize) -> f64 {
+        if self.steps == 0 || b >= self.bucket_net_s.len() {
+            0.0
+        } else {
+            self.bucket_net_s[b] / self.steps as f64
+        }
+    }
+
     /// One-line log summary.
     pub fn summary(&self) -> String {
         format!(
-            "buckets={} comm={:.3}s exposed={:.3}s overlap_eff={:.0}%",
-            self.bucket_s.len(), self.total_comm_s, self.exposed_comm_s,
+            "buckets={} comm={:.3}s (pcie {:.3}s / net {:.3}s) \
+             exposed={:.3}s overlap_eff={:.0}%",
+            self.bucket_s.len(), self.total_comm_s, self.pcie_comm_s,
+            self.net_comm_s, self.exposed_comm_s,
             self.overlap_efficiency() * 100.0
         )
+    }
+
+    /// Render the mean per-step exchange as a span [`Timeline`] on
+    /// "pcie" and "net" tracks, buckets laid out back-to-back in
+    /// backward-readiness order — the chrome-trace artifact
+    /// `cmd_profile`/`train --trace` export for ui.perfetto.dev.
+    ///
+    /// When a bucket has both phases (the hierarchical schedule), its
+    /// PCIe time is drawn as `gather` and `bcast` spans AROUND the
+    /// network span, matching the executed accumulate → leader-ring →
+    /// broadcast order.  The two halves are depicted as equal — the
+    /// phases execute the same `(g-1)` full-payload transfers, which is
+    /// also how `netsim::hierarchical_allreduce_phases` prices them;
+    /// only their sum is measured.
+    pub fn to_timeline(&self) -> Timeline {
+        let mut tl = Timeline::default();
+        let mut t = 0.0f64;
+        for b in 0..self.bucket_s.len() {
+            let pcie = self.mean_bucket_pcie_s(b);
+            let net = self.mean_bucket_net_s(b);
+            if pcie > 0.0 && net > 0.0 {
+                let half = pcie / 2.0;
+                tl.add("pcie", &format!("bucket{b}.pcie.gather"), t,
+                       t + half);
+                tl.add("net", &format!("bucket{b}.net"), t + half,
+                       t + half + net);
+                tl.add("pcie", &format!("bucket{b}.pcie.bcast"),
+                       t + half + net, t + pcie + net);
+            } else if pcie > 0.0 {
+                tl.add("pcie", &format!("bucket{b}.pcie"), t, t + pcie);
+            } else if net > 0.0 {
+                tl.add("net", &format!("bucket{b}.net"), t, t + net);
+            }
+            t += pcie + net;
+        }
+        tl
     }
 }
 
@@ -319,24 +407,69 @@ mod tests {
     #[test]
     fn exchange_timings_accumulate_and_rate() {
         let mut t = ExchangeTimings::default();
-        // fully serialized step: everything exposed
-        t.record(&[0.2, 0.1], 0.3);
+        // fully serialized step: everything exposed; 0.08s of the
+        // exchange crossed the network, 0.22s rode PCIe
+        t.record(&[0.2, 0.1], &[0.15, 0.07], &[0.05, 0.03], 0.3);
         assert_eq!(t.steps, 1);
         assert!((t.total_comm_s - 0.3).abs() < 1e-12);
+        assert!((t.net_comm_s - 0.08).abs() < 1e-12);
+        assert!((t.pcie_comm_s - 0.22).abs() < 1e-12);
         assert!(t.overlap_efficiency() < 1e-9);
         // fully hidden step
-        t.record(&[0.2, 0.1], 0.0);
+        t.record(&[0.2, 0.1], &[0.15, 0.07], &[0.05, 0.03], 0.0);
         assert!((t.overlap_efficiency() - 0.5).abs() < 1e-9);
         assert!((t.mean_bucket_s(0) - 0.2).abs() < 1e-12);
+        assert!((t.mean_bucket_pcie_s(0) - 0.15).abs() < 1e-12);
+        assert!((t.mean_bucket_net_s(0) - 0.05).abs() < 1e-12);
         assert_eq!(t.mean_bucket_s(9), 0.0);
         assert!(t.summary().contains("overlap_eff=50%"));
+        assert!(t.summary().contains("pcie"));
     }
 
     #[test]
     fn exchange_timings_no_comm_is_zero_efficiency() {
         let mut t = ExchangeTimings::default();
-        t.record(&[], 0.0);
+        t.record(&[], &[], &[], 0.0);
         assert_eq!(t.overlap_efficiency(), 0.0);
+    }
+
+    #[test]
+    fn exchange_timings_efficiency_clamped_to_unit_interval() {
+        // exposed wait can exceed measured exchange by channel overhead;
+        // the reported ratio must still land in [0, 1]
+        let mut t = ExchangeTimings::default();
+        t.record(&[0.1], &[0.0], &[0.1], 0.2);
+        let e = t.overlap_efficiency();
+        assert!((0.0..=1.0).contains(&e), "{e}");
+    }
+
+    #[test]
+    fn exchange_timeline_splits_pcie_and_net_spans() {
+        let mut t = ExchangeTimings::default();
+        // two steps so the means are exercised: bucket 0 all-PCIe,
+        // bucket 1 mixed, bucket 2 all-network
+        t.record(&[0.2, 0.3, 0.1], &[0.2, 0.2, 0.0], &[0.0, 0.1, 0.1], 0.0);
+        t.record(&[0.2, 0.3, 0.1], &[0.2, 0.2, 0.0], &[0.0, 0.1, 0.1], 0.0);
+        let tl = t.to_timeline();
+        assert!((tl.busy("pcie", "bucket0") - 0.2).abs() < 1e-12);
+        assert!((tl.busy("pcie", "bucket1") - 0.2).abs() < 1e-12);
+        assert!((tl.busy("net", "bucket1") - 0.1).abs() < 1e-12);
+        assert_eq!(tl.busy("pcie", "bucket2"), 0.0);
+        assert!((tl.busy("net", "bucket2") - 0.1).abs() < 1e-12);
+        // spans tile the mean step back to back
+        assert!((tl.horizon() - 0.6).abs() < 1e-12);
+        // mixed bucket 1 renders the executed order:
+        // gather -> leader ring -> broadcast
+        let find = |name: &str| {
+            tl.spans.iter().find(|s| s.name == name).unwrap()
+        };
+        let (g, n, bc) = (find("bucket1.pcie.gather"), find("bucket1.net"),
+                         find("bucket1.pcie.bcast"));
+        assert!(g.end <= n.start + 1e-12 && n.end <= bc.start + 1e-12,
+                "phase order wrong: {g:?} {n:?} {bc:?}");
+        // and the chrome trace renders
+        let j = Json::parse(&tl.to_chrome_trace()).unwrap();
+        assert!(j.get("traceEvents").unwrap().as_arr().unwrap().len() >= 4);
     }
 
     #[test]

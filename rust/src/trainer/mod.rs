@@ -15,12 +15,16 @@
 //!    compiled executable, concurrent PJRT execute), each worker summing
 //!    gradients locally (paper §4.4 gradient accumulation);
 //! 2. on the final micro-step each worker accumulates bucket-by-bucket
-//!    in backward order and enqueues every bucket's REAL ring allreduce
+//!    in backward order and enqueues every bucket's REAL exchange
 //!    **as soon as its accumulation completes**, overlapping exchange
 //!    with the remaining accumulation — the paper's Fig. 2 schedule
 //!    (`train.overlap = false` falls back to the barrier order, which is
 //!    bitwise identical, just slower; `train.grad_wire_f16` ships ring
-//!    payloads as IEEE f16, §4.4's FP16 exchange);
+//!    payloads as IEEE f16, §4.4's FP16 exchange).  `train.comm_mode`
+//!    picks the bucket route: a flat world ring, or the §4.4 hierarchy
+//!    (PCIe leader accumulate → network leader ring → PCIe broadcast)
+//!    whenever the topology has multiple machines AND multiple GPUs per
+//!    machine (`auto`, the default);
 //! 3. the AMP loss scaler inspects the unscaled gradients: on overflow
 //!    the step is skipped and the scale backs off (paper §4.2);
 //! 4. the leader applies LAMB via the AOT apply step; all replicas share
@@ -39,6 +43,7 @@ use anyhow::Result;
 
 use crate::collectives::pool::{CollectivePool, MicroStats, RankCompute,
                                WireFormat};
+pub use crate::collectives::pool::CommMode;
 use crate::collectives::CollectiveGroup;
 use crate::config::RunConfig;
 use crate::data::{MaskingConfig, ShardedDataset};
@@ -135,7 +140,9 @@ impl Trainer {
         } else {
             WireFormat::F32
         };
-        let pool = CollectivePool::new(world, n, ranges.clone(), wire);
+        let pool = CollectivePool::with_topology(cfg.cluster.topo, n,
+                                                 ranges.clone(), wire,
+                                                 cfg.train.comm_mode);
         let mask_cfg = MaskingConfig {
             mask_prob: cfg.data.mask_prob,
             max_predictions: cfg.data.max_predictions,
@@ -202,6 +209,12 @@ impl Trainer {
         &self.bucket_ranges
     }
 
+    /// Whether the pool resolved `train.comm_mode` to the hierarchical
+    /// (PCIe-then-network) exchange on this topology.
+    pub fn is_hierarchical(&self) -> bool {
+        self.pool.is_hierarchical()
+    }
+
     /// Run `steps` optimizer steps over the per-rank datasets.
     /// `datasets.len()` must equal the topology world size.
     pub fn run(&mut self, datasets: &[ShardedDataset], steps: usize,
@@ -249,7 +262,8 @@ impl Trainer {
                                      overlap, &ctx)?;
             report.compute_s += out.compute_s + out.accum_s;
             report.allreduce_s += out.comm_s;
-            report.exchange.record(&out.bucket_s, out.exposed_comm_s);
+            report.exchange.record(&out.bucket_s, &out.bucket_pcie_s,
+                                   &out.bucket_net_s, out.exposed_comm_s);
             meter.add((batch * seq * k * self.world) as u64);
             sw.lap("pool");
 

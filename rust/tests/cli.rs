@@ -79,6 +79,39 @@ fn profile_grads_matches_figure4() {
 }
 
 #[test]
+fn profile_grads_emits_exchange_trace() {
+    // The --trace path runs REAL pooled steps (no XLA artifacts needed)
+    // and writes PCIe/network chrome-trace spans.
+    let path = std::env::temp_dir().join("bertdist_cli_exchange.json");
+    let _ = std::fs::remove_file(&path);
+    let out = bin()
+        .args(["profile-grads", "--preset", "bert-micro", "--trace",
+               path.to_str().unwrap(), "--topology", "2M2G", "--comm-mode",
+               "hierarchical", "--steps", "2", "--accum", "1",
+               "--bucket-elems", "65536"])
+        .output().unwrap();
+    assert!(out.status.success(),
+            "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("exchange profile"));
+    assert!(text.contains("hierarchical"));
+    let trace = std::fs::read_to_string(&path).unwrap();
+    assert!(trace.contains("traceEvents"));
+    assert!(trace.contains("pcie") && trace.contains("net"), "{trace}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn bad_comm_mode_is_rejected() {
+    let out = bin()
+        .args(["profile-grads", "--preset", "bert-micro", "--comm-mode",
+               "rings"])
+        .output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("comm-mode"));
+}
+
+#[test]
 fn amp_demo_runs() {
     let out = bin().args(["amp-demo", "--steps", "50"]).output().unwrap();
     assert!(out.status.success());

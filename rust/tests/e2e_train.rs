@@ -299,3 +299,49 @@ fn dataset_partition_covers_everything_once() {
     assert_eq!(total, ds1[0].len());
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn comm_modes_train_to_close_params() {
+    // ISSUE 2: `train.comm_mode` picks the bucket route (flat world ring
+    // vs §4.4 PCIe-then-network hierarchy).  The two schedules associate
+    // the gradient sum differently, so trained parameters agree to
+    // rounding (bitwise equality on exact sums is covered by
+    // pool_overlap.rs) and both runs must be finite and learn.
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    use bertdist::trainer::CommMode;
+    let dir = std::env::temp_dir().join("bertdist_it_comm_mode");
+    make_data(&dir, 512, 4);
+    let engine = Engine::cpu(&art).unwrap();
+    let datasets = prepare_datasets(&dir, 4).unwrap();
+    let mut finals: Vec<Vec<f32>> = Vec::new();
+    for mode in [CommMode::Flat, CommMode::Hierarchical] {
+        let mut cfg = base_cfg("2M2G");
+        cfg.train.comm_mode = mode;
+        let mut t = bertdist::trainer::Trainer::new(&engine, cfg, 32, 2)
+            .unwrap();
+        assert_eq!(t.is_hierarchical(), mode == CommMode::Hierarchical);
+        let r = t.run(&datasets, 6, 6).unwrap();
+        assert_eq!(r.steps, 6);
+        assert!(r.loss.tail_mean(3).is_finite(), "{mode:?}");
+        // per-phase exchange accounting: hierarchical splits PCIe/net,
+        // and the overlap ratio is always a valid fraction
+        let eff = r.exchange.overlap_efficiency();
+        assert!((0.0..=1.0).contains(&eff), "{mode:?}: {eff}");
+        if mode == CommMode::Hierarchical {
+            assert!(r.exchange.pcie_comm_s > 0.0, "hier must bill PCIe");
+            assert!(r.exchange.net_comm_s > 0.0, "hier must bill network");
+        }
+        finals.push(t.params.clone());
+    }
+    let max_rel = finals[0]
+        .iter()
+        .zip(finals[1].iter())
+        .map(|(a, b)| (a - b).abs() / a.abs().max(b.abs()).max(1e-3))
+        .fold(0.0f32, f32::max);
+    assert!(max_rel < 5e-2,
+            "flat vs hierarchical training diverged: {max_rel}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -167,3 +167,85 @@ fn checkpoint_corruption_blocks_resume() {
     assert!(bertdist::checkpoint::Checkpoint::load(&path).is_err());
     let _ = std::fs::remove_file(&path);
 }
+
+// ---- pooled exchange failure paths (ISSUE 2 hardening) ----
+
+mod pool_failures {
+    use bertdist::collectives::pool::{CollectivePool, CommMode, MicroStats,
+                                      RankCompute, WireFormat};
+    use bertdist::grad::BucketRange;
+    use bertdist::topology::Topology;
+
+    /// Fails (or panics) on one designated rank at the FINAL micro-step
+    /// — after earlier micro-steps succeeded, the worst spot for the
+    /// exchange protocol: every healthy rank has already begun feeding
+    /// its comm worker eagerly.
+    struct FailLate {
+        n: usize,
+        bad_rank: usize,
+        panic: bool,
+    }
+
+    impl RankCompute for FailLate {
+        fn micro(&self, rank: usize, _s: usize, micro: usize, _p: &[f32],
+                 _sc: f32, out: &mut Vec<f32>)
+                 -> anyhow::Result<MicroStats> {
+            if rank == self.bad_rank && micro == 1 {
+                if self.panic {
+                    panic!("injected late panic on rank {rank}");
+                }
+                anyhow::bail!("injected late failure on rank {rank}");
+            }
+            out.resize(self.n, 0.0);
+            out.fill(0.5);
+            Ok(MicroStats::default())
+        }
+    }
+
+    /// Healthy compute for the recovery step.
+    struct Ones {
+        n: usize,
+    }
+    impl RankCompute for Ones {
+        fn micro(&self, _r: usize, _s: usize, _m: usize, _p: &[f32],
+                 _sc: f32, out: &mut Vec<f32>)
+                 -> anyhow::Result<MicroStats> {
+            out.resize(self.n, 0.0);
+            out.fill(1.0);
+            Ok(MicroStats::default())
+        }
+    }
+
+    /// A late failure on any rank — node leader, node member, or a flat
+    /// rank — must release every peer (no stranded exchange), surface
+    /// the failing rank in the error, and leave the pool usable.
+    #[test]
+    fn late_rank_failure_releases_peers_in_every_comm_mode() {
+        let topo = Topology::parse("2M2G").unwrap();
+        let n = 96;
+        let ranges = BucketRange::even_split(n, 3);
+        for mode in [CommMode::Flat, CommMode::Hierarchical] {
+            // rank 2 is machine 1's LEADER, rank 3 its member
+            for bad_rank in [2usize, 3] {
+                for panic in [false, true] {
+                    let mut pool = CollectivePool::with_topology(
+                        topo, n, ranges.clone(), WireFormat::F32, mode);
+                    let err = pool
+                        .step(&[], 1.0, 2, 0, true,
+                              &FailLate { n, bad_rank, panic })
+                        .unwrap_err();
+                    let msg = format!("{err:#}");
+                    assert!(msg.contains(&format!("rank {bad_rank}")),
+                            "{mode} bad={bad_rank} panic={panic}: {msg}");
+                    // pool survives: next step is correct on all ranks
+                    pool.step(&[], 1.0, 1, 1, true, &Ones { n }).unwrap();
+                    for r in 0..topo.world_size() {
+                        let g = pool.rank_grads(r);
+                        assert!(g.iter().all(|&v| v == 4.0),
+                                "{mode} rank {r} after recovery");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,20 +1,35 @@
-//! Integration tests for the persistent collective pool (ISSUE 1):
+//! Integration tests for the persistent collective pool (ISSUEs 1 & 2):
 //!
 //! * property: across random worlds / layouts / bucket thresholds /
 //!   accumulation depths, the overlapped (eager, Fig. 2) pipeline
 //!   produces **bitwise-identical** reduced gradients to the barrier
 //!   path — for both the f32 and f16 wire formats — and the f32 wire
 //!   matches a serial oracle within tolerance;
+//! * property (ISSUE 2): across random `<X>M<Y>G` topologies (including
+//!   the `g = 1` / `m = 1` degenerates), both overlap modes, and both
+//!   wire formats, the pooled **hierarchical** exchange, the pooled
+//!   **flat** ring, and the old **spawn-per-step baseline** all produce
+//!   bitwise-identical reduced gradients when the gradient sums are
+//!   exactly representable (values on a dyadic grid, so every partial
+//!   sum is exact in f32 AND f16 and the summation association cannot
+//!   matter) — and agree within rounding tolerance on arbitrary floats;
+//! * overlap-efficiency: the exposed-communication measurement is pure
+//!   recv wait, so the derived `1 - exposed/total` ratio lands in
+//!   `[0, 1]` in every mode;
 //! * endurance: one pool survives and reuses its workers across well
 //!   over 100 steps with correct results throughout.
 
 use std::sync::Arc;
 
-use bertdist::collectives::pool::{CollectivePool, MicroStats, RankCompute,
-                                  WireFormat};
-use bertdist::grad::{bucket_ranges, build_buckets, BucketRange};
+use bertdist::collectives::pool::{CollectivePool, CommMode, MicroStats,
+                                  RankCompute, WireFormat};
+use bertdist::grad::{bucket_ranges, build_buckets, BucketRange,
+                     GradAccumulator};
+use bertdist::metrics::ExchangeTimings;
 use bertdist::model::layout::ParamLayout;
 use bertdist::testkit;
+use bertdist::topology::Topology;
+use bertdist::trainer::allreduce_buckets;
 use bertdist::util::Pcg64;
 
 /// Deterministic synthetic gradients: a pure function of
@@ -199,4 +214,254 @@ fn f16_wire_stays_within_half_precision_tolerance() {
                            salt);
     // one rounding per hop over a world-3 ring: comfortably within 1%
     testkit::assert_allclose(&f16_out[0], &f32_out[0], 5e-2, 1e-2);
+}
+
+// ------------------------------------------------------ ISSUE 2 tests --
+
+/// Deterministic synthetic gradients on a dyadic grid: multiples of 0.25
+/// in [-2, 2].  With at most 4x4 ranks and 3 micro-steps, every partial
+/// sum (under ANY association) is a multiple of 0.25 with magnitude
+/// under 512, hence exactly representable in both f32 and f16 — so the
+/// flat ring, the hierarchy, and the spawn baseline must agree to the
+/// bit, on either wire format.
+struct ExactSynth {
+    n: usize,
+    salt: u64,
+}
+
+impl RankCompute for ExactSynth {
+    fn micro(&self, rank: usize, step_index: usize, micro: usize,
+             _params: &[f32], _scale: f32, out: &mut Vec<f32>)
+             -> anyhow::Result<MicroStats> {
+        out.resize(self.n, 0.0);
+        let stream = (rank as u64) << 32
+            | (step_index as u64) << 8
+            | micro as u64;
+        let mut rng = Pcg64::with_stream(self.salt, stream);
+        for v in out.iter_mut() {
+            *v = (rng.range_usize(0, 17) as f32 - 8.0) * 0.25;
+        }
+        Ok(MicroStats { loss: 1.0, ..Default::default() })
+    }
+}
+
+/// Run `steps` pooled steps under the given comm mode and return every
+/// rank's reduced buffer plus the accumulated exchange timings.
+#[allow(clippy::too_many_arguments)]
+fn run_pool_mode(topo: Topology, n: usize, ranges: Arc<[BucketRange]>,
+                 wire: WireFormat, mode: CommMode, overlap: bool, k: usize,
+                 steps: usize, compute: &dyn RankCompute)
+                 -> (Vec<Vec<f32>>, ExchangeTimings) {
+    let mut pool =
+        CollectivePool::with_topology(topo, n, ranges, wire, mode);
+    let mut timings = ExchangeTimings::default();
+    for s in 0..steps {
+        let out = pool.step(&[], 1.0, k, s, overlap, compute).unwrap();
+        assert!(out.exposed_comm_s >= 0.0);
+        assert!(out.exposed_comm_s <= out.wall_s + 1e-9,
+                "exposed {} > wall {}", out.exposed_comm_s, out.wall_s);
+        timings.record(&out.bucket_s, &out.bucket_pcie_s,
+                       &out.bucket_net_s, out.exposed_comm_s);
+    }
+    let grads = (0..topo.world_size())
+        .map(|r| pool.rank_grads(r).clone())
+        .collect();
+    (grads, timings)
+}
+
+/// The old spawn-per-step exchange over the same gradients (f32 only).
+fn run_spawn_baseline(topo: Topology, n: usize, threshold: usize,
+                      layout: &ParamLayout, k: usize, steps: usize,
+                      compute: &dyn RankCompute) -> Vec<Vec<f32>> {
+    let world = topo.world_size();
+    let buckets = build_buckets(layout, threshold);
+    let mut accs: Vec<GradAccumulator> =
+        (0..world).map(|_| GradAccumulator::new(n)).collect();
+    let mut g = Vec::new();
+    for s in 0..steps {
+        for (r, acc) in accs.iter_mut().enumerate() {
+            acc.reset();
+            for m in 0..k {
+                compute.micro(r, s, m, &[], 1.0, &mut g).unwrap();
+                acc.add(&g);
+            }
+        }
+        allreduce_buckets(&mut accs, &buckets);
+    }
+    accs.iter().map(|a| a.buffer().to_vec()).collect()
+}
+
+fn assert_bitwise(tag: &str, a: &[Vec<f32>], b: &[Vec<f32>])
+                  -> Result<(), String> {
+    for (r, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        for (i, (va, vb)) in x.iter().zip(y.iter()).enumerate() {
+            if va.to_bits() != vb.to_bits() {
+                return Err(format!("{tag}: rank {r} [{i}]: {va} != {vb}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_hierarchical_flat_and_spawn_baseline_bitwise_identical() {
+    testkit::check_msg(
+        "pool-hier≡flat≡spawn", 0x41E2_2, 8,
+        |r: &mut Pcg64| {
+            let machines = r.range_usize(1, 5);
+            let gpus = r.range_usize(1, 5);
+            let threshold = r.range_usize(1, 900);
+            let k = r.range_usize(1, 4);
+            let salt = r.next_u64();
+            (machines, gpus, threshold, k, salt)
+        },
+        |&(machines, gpus, threshold, k, salt)| {
+            let topo = Topology::new(machines, gpus);
+            let mut lrng = Pcg64::with_stream(salt, 0x1A7);
+            let layout = random_layout(&mut lrng);
+            let n = layout.total_len();
+            let ranges = bucket_ranges(&build_buckets(&layout, threshold));
+            let steps = 1;
+            let synth = ExactSynth { n, salt };
+
+            // spawn baseline (f32) is the reference
+            let base = run_spawn_baseline(topo, n, threshold, &layout, k,
+                                          steps, &synth);
+            for wire in [WireFormat::F32, WireFormat::F16] {
+                for overlap in [true, false] {
+                    let tag = format!(
+                        "{topo} {wire:?} overlap={overlap} k={k}");
+                    let (flat, flat_t) = run_pool_mode(
+                        topo, n, ranges.clone(), wire, CommMode::Flat,
+                        overlap, k, steps, &synth);
+                    let (hier, hier_t) = run_pool_mode(
+                        topo, n, ranges.clone(), wire,
+                        CommMode::Hierarchical, overlap, k, steps, &synth);
+                    assert_bitwise(&format!("{tag} hier vs flat"), &hier,
+                                   &flat)?;
+                    assert_bitwise(&format!("{tag} flat vs spawn"), &flat,
+                                   &base)?;
+                    // replicas identical within each mode
+                    for grads in [&flat, &hier] {
+                        for r in 1..topo.world_size() {
+                            if grads[0] != grads[r] {
+                                return Err(format!(
+                                    "{tag}: replicas diverged (rank {r})"
+                                ));
+                            }
+                        }
+                    }
+                    // the wait-only exposed measurement keeps the
+                    // overlap ratio in [0, 1] in every mode
+                    for t in [&flat_t, &hier_t] {
+                        let e = t.overlap_efficiency();
+                        if !(0.0..=1.0).contains(&e) {
+                            return Err(format!(
+                                "{tag}: overlap efficiency {e} not in \
+                                 [0,1]"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn hierarchical_matches_flat_within_rounding_on_arbitrary_floats() {
+    // On general floats the two schedules associate the sum differently,
+    // so require tolerance-equality (bitwise is covered above on the
+    // exact grid).
+    let topo = Topology::new(3, 3);
+    let (n, k, salt) = (801usize, 2usize, 0xFA57u64);
+    let layout = ParamLayout::from_shapes(&[("a".into(), vec![n])]);
+    let ranges = bucket_ranges(&build_buckets(&layout, 200));
+    let synth = Synth { n, salt }; // arbitrary floats in [-2, 2)
+    let (flat, _) = run_pool_mode(topo, n, ranges.clone(), WireFormat::F32,
+                                  CommMode::Flat, true, k, 1, &synth);
+    let (hier, _) = run_pool_mode(topo, n, ranges, WireFormat::F32,
+                                  CommMode::Hierarchical, true, k, 1,
+                                  &synth);
+    for r in 0..topo.world_size() {
+        testkit::assert_allclose(&hier[r], &flat[r], 1e-3, 1e-4);
+    }
+    // and both match the serial oracle
+    let want = serial_sum(&synth, topo.world_size(), 0, k);
+    testkit::assert_allclose(&hier[0], &want, 1e-2, 1e-3);
+}
+
+#[test]
+fn overlap_efficiency_in_unit_interval_both_modes_and_schedules() {
+    // The satellite-2 regression: exposed communication is measured as
+    // pure recv wait, so `1 - exposed/total` cannot go negative — in
+    // particular in BARRIER mode, where the old `acc_done.elapsed()`
+    // measurement (which included the reduced-data copy-back) reported
+    // nonzero "overlap" or negative ratios.
+    let topo = Topology::new(2, 2);
+    let (n, salt) = (2000usize, 0x0E_FFu64);
+    let layout = ParamLayout::from_shapes(&[("a".into(), vec![n])]);
+    let ranges = bucket_ranges(&build_buckets(&layout, 256));
+    let synth = Synth { n, salt };
+    for mode in [CommMode::Flat, CommMode::Hierarchical] {
+        for overlap in [true, false] {
+            let (_, t) = run_pool_mode(topo, n, ranges.clone(),
+                                       WireFormat::F32, mode, overlap, 2,
+                                       5, &synth);
+            let e = t.overlap_efficiency();
+            assert!((0.0..=1.0).contains(&e),
+                    "{mode} overlap={overlap}: efficiency {e}");
+            assert!(t.total_comm_s > 0.0);
+            assert!(t.exposed_comm_s >= 0.0);
+            // phase components are independent per-rank maxima: each is
+            // bounded by the total and together they cover it (the
+            // split can overstate across ranks, never understate)
+            assert!(t.pcie_comm_s <= t.total_comm_s + 1e-9,
+                    "{mode}: pcie exceeds total");
+            assert!(t.net_comm_s <= t.total_comm_s + 1e-9,
+                    "{mode}: net exceeds total");
+            assert!(t.pcie_comm_s + t.net_comm_s
+                        >= t.total_comm_s - 1e-9 * t.total_comm_s.max(1.0),
+                    "{mode}: split understates the total");
+        }
+    }
+}
+
+#[test]
+fn degenerate_and_square_topologies_bitwise_identical_deterministic() {
+    // The property test samples topologies randomly; pin the degenerate
+    // corners (g = 1, m = 1, 1x1) and the smallest true hierarchy (2x2)
+    // deterministically, in both overlap modes and both wire formats.
+    for (machines, gpus) in [(1usize, 1usize), (1, 4), (4, 1), (2, 2)] {
+        let topo = Topology::new(machines, gpus);
+        let salt = 0xD15C0u64 + (machines * 10 + gpus) as u64;
+        let layout = ParamLayout::from_shapes(&[
+            ("a".into(), vec![37]),
+            ("b".into(), vec![301]),
+            ("c".into(), vec![64]),
+        ]);
+        let n = layout.total_len();
+        let threshold = 128;
+        let ranges = bucket_ranges(&build_buckets(&layout, threshold));
+        let synth = ExactSynth { n, salt };
+        let k = 2;
+        let base =
+            run_spawn_baseline(topo, n, threshold, &layout, k, 1, &synth);
+        for wire in [WireFormat::F32, WireFormat::F16] {
+            for overlap in [true, false] {
+                let (flat, _) = run_pool_mode(topo, n, ranges.clone(), wire,
+                                              CommMode::Flat, overlap, k, 1,
+                                              &synth);
+                let (hier, _) = run_pool_mode(topo, n, ranges.clone(), wire,
+                                              CommMode::Hierarchical,
+                                              overlap, k, 1, &synth);
+                assert_bitwise(&format!("{topo} {wire:?} hier vs flat"),
+                               &hier, &flat)
+                    .unwrap();
+                assert_bitwise(&format!("{topo} {wire:?} flat vs spawn"),
+                               &flat, &base)
+                    .unwrap();
+            }
+        }
+    }
 }

@@ -1,23 +1,29 @@
 #!/usr/bin/env bash
 # Quick perf smoke for CI / PR trajectory tracking: runs the
 # `perf_hotpath` bench in quick mode (small payloads, few iterations)
-# and emits machine-readable rows to BENCH_hotpath.json so future PRs
-# can diff hot-path timings.
+# and emits machine-readable rows to BENCH_hotpath.json plus a
+# BENCH_hierarchical.json section (flat vs hierarchical pooled step time
+# at a fixed synthetic 2M2G world) so future PRs can diff both the
+# hot-path timings and the comm-mode trajectory.
 #
-# Usage: scripts/bench_smoke.sh [output.json]
+# Usage: scripts/bench_smoke.sh [output.json] [hier_output.json]
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
 OUT="${1:-BENCH_hotpath.json}"
+HIER_OUT="${2:-BENCH_hierarchical.json}"
 export BENCH_QUICK=1
 export BENCH_JSON_OUT="$OUT"
+export BENCH_HIER_JSON_OUT="$HIER_OUT"
 
 cargo bench --bench perf_hotpath
 
-if [[ -f "$OUT" ]]; then
-    echo "bench rows -> $OUT"
-else
-    echo "ERROR: $OUT was not produced" >&2
-    exit 1
-fi
+for f in "$OUT" "$HIER_OUT"; do
+    if [[ -f "$f" ]]; then
+        echo "bench rows -> $f"
+    else
+        echo "ERROR: $f was not produced" >&2
+        exit 1
+    fi
+done
