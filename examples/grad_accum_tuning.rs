@@ -47,8 +47,8 @@ fn main() -> anyhow::Result<()> {
     for k in [1usize, 4] {
         let m = IterationModel::paper(topo, k, true);
         let r = simulate_iteration(&m);
-        println!("Figure 5 timeline, k={k} (f=fwd, b=bwd, a=allreduce, \
-                  u=update):");
+        println!("Figure 5 timeline, k={k} (f=fwd, b=bwd on the gpu \
+                  track; b=bucket exchange on the net track, u=update):");
         println!("{}", r.timeline.ascii_gantt(100));
     }
     Ok(())

@@ -136,6 +136,12 @@ pub struct MicroStats {
     pub mlm_acc: f64,
     /// Any non-finite loss/grad-norm observed (AMP overflow signal).
     pub nonfinite: bool,
+    /// Seconds this micro-step spent waiting on its input batch — the
+    /// blocked `pop` on the prefetch ring, or the whole in-line batch
+    /// build when running synchronously.  Part of the compute worker's
+    /// wall (it happens inside `micro`), split out so data stalls can
+    /// sit next to the PCIe/network spans in the trace.
+    pub input_stall_s: f64,
 }
 
 /// One rank's micro-step: fill `grads_out` with the flat gradient of this
@@ -158,6 +164,10 @@ pub struct StepOutcome {
     pub saw_overflow: bool,
     /// Critical-path (max over ranks) seconds in `RankCompute::micro`.
     pub compute_s: f64,
+    /// Critical-path seconds `RankCompute::micro` spent blocked on input
+    /// batches (a subset of `compute_s` — the stall happens inside the
+    /// timed micro call).
+    pub input_stall_s: f64,
     /// Critical-path seconds accumulating gradients.
     pub accum_s: f64,
     /// Critical-path seconds of exchange (sum over buckets).
@@ -210,6 +220,7 @@ struct RankStats {
     acc_sum: f64,
     nonfinite: bool,
     compute_s: f64,
+    input_stall_s: f64,
     accum_s: f64,
     comm_s: f64,
     comm_pcie_s: f64,
@@ -514,6 +525,12 @@ impl CollectivePool {
             bucket_net_s: vec![0.0; self.ranges.len()],
             ..Default::default()
         };
+        // Collect every rank's result first, then fold in RANK order:
+        // the scalar sums are f64 additions, and folding in arrival
+        // order would make them depend on thread timing — the reduced
+        // gradients are deterministic, the reported losses must be too.
+        let mut results: Vec<Option<RankStats>> =
+            (0..self.world).map(|_| None).collect();
         let mut errs: Vec<String> = Vec::new();
         for _ in 0..self.world {
             let r = self
@@ -521,32 +538,32 @@ impl CollectivePool {
                 .recv()
                 .expect("collective pool workers died mid-step");
             match r.res {
-                Ok(s) => {
-                    out.loss_sum += s.loss_sum;
-                    out.mlm_sum += s.mlm_sum;
-                    out.nsp_sum += s.nsp_sum;
-                    out.acc_sum += s.acc_sum;
-                    out.saw_overflow |= s.nonfinite;
-                    out.compute_s = out.compute_s.max(s.compute_s);
-                    out.accum_s = out.accum_s.max(s.accum_s);
-                    out.comm_s = out.comm_s.max(s.comm_s);
-                    out.comm_pcie_s = out.comm_pcie_s.max(s.comm_pcie_s);
-                    out.comm_net_s = out.comm_net_s.max(s.comm_net_s);
-                    out.exposed_comm_s =
-                        out.exposed_comm_s.max(s.exposed_comm_s);
-                    for (t, b) in out.bucket_s.iter_mut().zip(&s.bucket_s) {
-                        *t = t.max(*b);
-                    }
-                    for (t, b) in
-                        out.bucket_pcie_s.iter_mut().zip(&s.bucket_pcie_s) {
-                        *t = t.max(*b);
-                    }
-                    for (t, b) in
-                        out.bucket_net_s.iter_mut().zip(&s.bucket_net_s) {
-                        *t = t.max(*b);
-                    }
-                }
+                Ok(s) => results[r.rank] = Some(s),
                 Err(e) => errs.push(format!("rank {}: {e}", r.rank)),
+            }
+        }
+        for s in results.into_iter().flatten() {
+            out.loss_sum += s.loss_sum;
+            out.mlm_sum += s.mlm_sum;
+            out.nsp_sum += s.nsp_sum;
+            out.acc_sum += s.acc_sum;
+            out.saw_overflow |= s.nonfinite;
+            out.compute_s = out.compute_s.max(s.compute_s);
+            out.input_stall_s = out.input_stall_s.max(s.input_stall_s);
+            out.accum_s = out.accum_s.max(s.accum_s);
+            out.comm_s = out.comm_s.max(s.comm_s);
+            out.comm_pcie_s = out.comm_pcie_s.max(s.comm_pcie_s);
+            out.comm_net_s = out.comm_net_s.max(s.comm_net_s);
+            out.exposed_comm_s = out.exposed_comm_s.max(s.exposed_comm_s);
+            for (t, b) in out.bucket_s.iter_mut().zip(&s.bucket_s) {
+                *t = t.max(*b);
+            }
+            for (t, b) in
+                out.bucket_pcie_s.iter_mut().zip(&s.bucket_pcie_s) {
+                *t = t.max(*b);
+            }
+            for (t, b) in out.bucket_net_s.iter_mut().zip(&s.bucket_net_s) {
+                *t = t.max(*b);
             }
         }
         out.wall_s = t0.elapsed().as_secs_f64();
@@ -679,6 +696,7 @@ fn run_rank_step(rank: usize, world: usize, ranges: &[BucketRange],
         stats.nsp_sum += m.nsp_loss;
         stats.acc_sum += m.mlm_acc;
         stats.nonfinite |= m.nonfinite;
+        stats.input_stall_s += m.input_stall_s;
         let t1 = Instant::now();
         if micro + 1 < k {
             // Not the last micro-step: plain full-range accumulation.

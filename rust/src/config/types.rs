@@ -34,6 +34,13 @@ pub struct TrainConfig {
     pub comm_mode: CommMode,
     /// Gradient bucket size threshold in elements (DDP-style).
     pub bucket_elems: usize,
+    /// Batch-prefetch ring depth per rank (paper §4.1: input prep must
+    /// overlap training): one long-lived producer thread per rank keeps
+    /// up to this many masked batches ready in reusable buffers.  `2` =
+    /// classic double buffering (the default); `0` disables the
+    /// producers and builds batches synchronously on the compute
+    /// workers (bitwise-identical results, only the timing differs).
+    pub prefetch_depth: usize,
     /// Total optimizer steps to run.
     pub steps: usize,
     /// Initial dynamic loss scale (paper §4.2).
@@ -57,6 +64,7 @@ impl Default for TrainConfig {
             grad_wire_f16: false,
             comm_mode: CommMode::Auto,
             bucket_elems: 1 << 20,
+            prefetch_depth: 2,
             steps: 100,
             init_loss_scale: 65536.0,
             seed: 42,
@@ -154,6 +162,9 @@ impl RunConfig {
             .map_err(|e| anyhow::anyhow!("train.comm_mode: {e}"))?;
         c.train.bucket_elems =
             doc.int("train.bucket_elems", c.train.bucket_elems as i64) as usize;
+        c.train.prefetch_depth =
+            doc.int("train.prefetch_depth",
+                    c.train.prefetch_depth as i64) as usize;
         c.train.steps = doc.int("train.steps", c.train.steps as i64) as usize;
         c.train.init_loss_scale =
             doc.float("train.init_loss_scale", c.train.init_loss_scale);
@@ -223,6 +234,7 @@ mod tests {
         let doc = TomlDoc::parse(
             "[train]\nsteps = 7\nlr = 0.5\noverlap = false\n\
              grad_wire_f16 = true\ncomm_mode = \"hierarchical\"\n\
+             prefetch_depth = 4\n\
              [cluster]\ntopo = \"2M4G\"\nnetwork_gbps = 25.0\n\
              [data]\nseq_len = 512\n",
         ).unwrap();
@@ -231,6 +243,9 @@ mod tests {
         assert_eq!(c.train.lr, 0.5);
         assert!(!c.train.overlap);
         assert!(c.train.grad_wire_f16);
+        assert_eq!(c.train.prefetch_depth, 4);
+        // default is double buffering
+        assert_eq!(RunConfig::default().train.prefetch_depth, 2);
         assert_eq!(c.train.comm_mode, CommMode::Hierarchical);
         assert!(c.train.comm_mode.resolves_hierarchical(&c.cluster.topo));
         assert_eq!(c.cluster.topo.machines, 2);

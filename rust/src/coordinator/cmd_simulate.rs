@@ -1,7 +1,15 @@
 //! `bertdist simulate` — one-iteration timeline on a modeled cluster
 //! (Figures 1, 2 and 5).
+//!
+//! The modeled trace mirrors the measured `train --trace` artifact: a
+//! hierarchical comm-mode resolve renders every bucket as the executed
+//! gather → leader-ring → broadcast per-phase spans
+//! (`bucket{i}.pcie.gather` / `bucket{i}.net` / `bucket{i}.pcie.bcast`),
+//! and the modeled input pipeline gets its own data-stall lane
+//! (`--batch-build-ms` + `--no-prefetch`).
 
 use crate::cliopt::Args;
+use crate::collectives::pool::CommMode;
 use crate::simulator::{simulate_iteration, IterationModel};
 use crate::topology::Topology;
 use crate::util::human_duration;
@@ -12,6 +20,10 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     let accum = args.get_parse("accum", 1usize)?;
     let overlap = !args.flag("no-overlap");
     let buckets = args.get_parse("buckets", 8usize)?;
+    let comm_mode = CommMode::parse(&args.get("comm-mode", "auto"))
+        .map_err(|e| anyhow::anyhow!("--comm-mode: {e}"))?;
+    let batch_build_ms = args.get_parse("batch-build-ms", 0.0f64)?;
+    let prefetch = !args.flag("no-prefetch");
     let trace = args.get_opt("trace");
     let print_topo = args.flag("print-topology");
     args.finish_strict()?;
@@ -23,16 +35,26 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
 
     let mut model = IterationModel::paper(topo, accum, overlap);
     model.buckets = buckets;
+    model.comm_mode = comm_mode;
+    model.batch_build_s = batch_build_ms / 1e3;
+    model.prefetch = prefetch;
     let r = simulate_iteration(&model);
 
     println!(
-        "iteration on {topo}: k={accum} overlap={overlap} buckets={buckets}"
+        "iteration on {topo}: k={accum} overlap={overlap} \
+         buckets={buckets} comm={comm_mode} ({}) prefetch={prefetch}",
+        if model.is_hierarchical() { "hierarchical" } else { "flat" }
     );
     println!("  micro compute      : {}",
              human_duration(model.micro_compute_s()));
+    if model.batch_build_s > 0.0 {
+        println!("  micro batch build  : {}",
+                 human_duration(model.batch_build_s));
+    }
     println!("  allreduce (total)  : {}", human_duration(model.allreduce_s()));
     println!("  iteration time     : {}", human_duration(r.iteration_s));
     println!("  exposed comm       : {}", human_duration(r.exposed_comm_s));
+    println!("  input stall        : {}", human_duration(r.input_stall_s));
     println!("  compute utilization: {:.1}%", r.compute_utilization * 100.0);
     println!("  tokens/s per GPU   : {:.1}", r.tokens_per_sec_per_gpu);
     println!("  cluster tokens/s   : {:.1}", r.cluster_tokens_per_sec);

@@ -47,12 +47,17 @@ pub fn train_run(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
     }
     println!(
         "phase 1: preset={} variant={} topo={} world={} batch={}x{} \
-         accum={} overlap={} wire={} comm={} ({})",
+         accum={} overlap={} wire={} comm={} ({}) prefetch={}",
         cfg.train.preset, cfg.train.variant, cfg.cluster.topo, world,
         batch1, seq1, cfg.train.accum_steps, cfg.train.overlap,
         if cfg.train.grad_wire_f16 { "f16" } else { "f32" },
         cfg.train.comm_mode,
-        if trainer.is_hierarchical() { "hierarchical" } else { "flat" }
+        if trainer.is_hierarchical() { "hierarchical" } else { "flat" },
+        if cfg.train.prefetch_depth == 0 {
+            "sync".to_string()
+        } else {
+            format!("x{}", cfg.train.prefetch_depth)
+        }
     );
     let report1 = trainer.run(&datasets, steps1, steps1 + steps2)?;
     println!("phase 1 done: {}", report1.summary());
@@ -124,6 +129,18 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     }
     cfg.train.bucket_elems =
         args.get_parse("bucket-elems", cfg.train.bucket_elems)?;
+    // `--prefetch[=N]` (paper §4.1): N sets the per-rank batch-prefetch
+    // ring depth (0 = build batches synchronously on the compute
+    // workers); a bare `--prefetch` turns the default double buffer
+    // back on when a config disabled it.
+    if let Some(v) = args.get_opt("prefetch") {
+        cfg.train.prefetch_depth = v.parse().map_err(|_| {
+            anyhow::anyhow!("--prefetch: '{v}' is not a ring depth \
+                             (expected an integer; 0 = synchronous)")
+        })?;
+    } else if args.flag("prefetch") {
+        cfg.train.prefetch_depth = cfg.train.prefetch_depth.max(2);
+    }
     // `--topology` is the paper-spelling alias of `--topo`.
     if let Some(t) = args.get_opt_alias(&["topo", "topology"]) {
         cfg.cluster.topo = Topology::parse(&t)

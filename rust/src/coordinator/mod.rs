@@ -29,11 +29,18 @@ COMMANDS:
                    --data-dir data/quickstart [--phase2] [--ckpt path]
                    [--overlap=false] [--wire-f16] [--bucket-elems N]
                    [--comm-mode flat|hierarchical|auto] [--topology 2M4G]
-                   [--trace exchange.json]
+                   [--prefetch N]  per-rank batch-prefetch ring depth
+                                   (default 2 = double buffer; 0 = build
+                                   batches on the compute workers)
+                   [--trace exchange.json]  exchange + data-stall spans
   shard-data     build bshard files from a synthetic or real corpus (§4.1)
                    --out data/quickstart --docs 64 --shards 8 [--text file]
-  simulate       one-iteration timeline, overlap on/off (Figs. 2 & 5)
+  simulate       one-iteration timeline, overlap on/off (Figs. 2 & 5);
+                 per-phase exchange spans (gather/ring/broadcast) and a
+                 data-stall lane mirror the measured `train --trace`
                    --topo 2M1G --accum 1 [--no-overlap] [--trace out.json]
+                   [--comm-mode flat|hierarchical|auto]
+                   [--batch-build-ms X] [--no-prefetch]
   scaling        weak-scaling sweeps (Figs. 3 & 6)
                    --mode intra-inter | multinode  [--accum 4]
   profile-grads  gradient memory profile by layer group (Fig. 4); with

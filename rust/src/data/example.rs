@@ -103,6 +103,24 @@ impl PairExample {
         }
     }
 
+    /// The `(tokens_a, tokens_b)` prefix lengths [`Self::truncate`]
+    /// would keep for `max_len` assembled tokens — the allocation-free
+    /// twin used by batch assembly: `truncate` only ever pops from the
+    /// tail of the longer side, so the surviving tokens are exactly
+    /// `tokens_a[..la]` / `tokens_b[..lb]`.
+    pub fn truncated_lens(&self, max_len: usize) -> (usize, usize) {
+        let budget = max_len.saturating_sub(3);
+        let (mut a, mut b) = (self.tokens_a.len(), self.tokens_b.len());
+        while a + b > budget {
+            if a >= b {
+                a -= 1;
+            } else {
+                b -= 1;
+            }
+        }
+        (a, b)
+    }
+
     /// NSP label in the model's convention: 0 = IsNext, 1 = NotNext.
     pub fn nsp_label(&self) -> i32 {
         if self.is_next {
@@ -175,6 +193,27 @@ mod tests {
         // longer side was trimmed
         assert_eq!(e.tokens_b.len(), 4);
         assert_eq!(e.tokens_a.len(), 9);
+    }
+
+    #[test]
+    fn prop_truncated_lens_match_truncate() {
+        testkit::check(
+            "truncated-lens", 0xCC, 64,
+            |r: &mut Pcg64| {
+                (r.range_usize(0, 40), r.range_usize(0, 40),
+                 r.range_usize(0, 64))
+            },
+            |&(a, b, max_len)| {
+                let mut e = PairExample {
+                    tokens_a: (0..a as u32).collect(),
+                    tokens_b: (0..b as u32).collect(),
+                    is_next: true,
+                };
+                let (la, lb) = e.truncated_lens(max_len);
+                e.truncate(max_len);
+                la == e.tokens_a.len() && lb == e.tokens_b.len()
+            },
+        );
     }
 
     #[test]

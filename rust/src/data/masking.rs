@@ -61,6 +61,25 @@ impl Batch {
         }
     }
 
+    /// Re-initialize a reused buffer to the `zeros` state in place —
+    /// the recycling half of the zero-copy batch path: capacity is kept,
+    /// so a batch buffer cycling through the prefetch ring performs no
+    /// heap allocation after its first use.
+    pub fn reset(&mut self, batch: usize, seq: usize) {
+        self.batch = batch;
+        self.seq = seq;
+        self.input_ids.clear();
+        self.input_ids.resize(batch * seq, special::PAD as i32);
+        self.token_type_ids.clear();
+        self.token_type_ids.resize(batch * seq, 0);
+        self.attention_mask.clear();
+        self.attention_mask.resize(batch * seq, 0);
+        self.mlm_labels.clear();
+        self.mlm_labels.resize(batch * seq, IGNORE);
+        self.nsp_labels.clear();
+        self.nsp_labels.resize(batch, 0);
+    }
+
     /// Number of prediction targets in the batch.
     pub fn num_predictions(&self) -> usize {
         self.mlm_labels.iter().filter(|&&l| l != IGNORE).count()
@@ -74,11 +93,16 @@ impl Batch {
 
 /// Assemble one sequence: [CLS] a [SEP] b [SEP], then apply MLM masking.
 /// Writes into row `row` of `out`.  Deterministic given `rng` state.
+///
+/// Copy-free: the example is read through slices bounded by
+/// [`PairExample::truncated_lens`] — the old clone-then-truncate of the
+/// whole example (two token `Vec`s per row per micro-step) is gone, and
+/// the emitted tokens are byte-identical (`truncate` pops from the tail,
+/// so the surviving tokens are exactly these prefixes).
 pub fn assemble_into(out: &mut Batch, row: usize, ex: &PairExample,
                      cfg: &MaskingConfig, rng: &mut Pcg64) {
     let seq = out.seq;
-    let mut ex = ex.clone();
-    ex.truncate(seq);
+    let (la, lb) = ex.truncated_lens(seq);
 
     let base = row * seq;
     // layout: CLS a... SEP b... SEP PAD...
@@ -90,11 +114,11 @@ pub fn assemble_into(out: &mut Batch, row: usize, ex: &PairExample,
         *pos += 1;
     };
     put(out, special::CLS, 0, &mut pos);
-    for &t in &ex.tokens_a {
+    for &t in &ex.tokens_a[..la] {
         put(out, t, 0, &mut pos);
     }
     put(out, special::SEP, 0, &mut pos);
-    for &t in &ex.tokens_b {
+    for &t in &ex.tokens_b[..lb] {
         put(out, t, 1, &mut pos);
     }
     put(out, special::SEP, 1, &mut pos);

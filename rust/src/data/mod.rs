@@ -8,11 +8,14 @@
 //! * [`example`]  — sentence-pair records, serialized for `bshard`
 //! * [`masking`]  — MLM 80/10/10 masking + NSP batch assembly
 //! * [`pipeline`] — end-to-end: corpus → shards; shards → batches
+//! * [`prefetch`] — per-rank producer threads + bounded ring of reusable
+//!                  batch buffers (§4.1: input prep overlaps training)
 
 pub mod corpus;
 pub mod example;
 pub mod masking;
 pub mod pipeline;
+pub mod prefetch;
 pub mod tokenizer;
 pub mod vocab;
 
@@ -20,6 +23,7 @@ pub use corpus::SyntheticCorpus;
 pub use example::PairExample;
 pub use masking::{Batch, MaskingConfig};
 pub use pipeline::{build_shards, ShardedDataset};
+pub use prefetch::{BatchCursor, Prefetcher};
 pub use tokenizer::Tokenizer;
 pub use vocab::Vocab;
 

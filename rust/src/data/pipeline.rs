@@ -12,7 +12,7 @@ use std::path::{Path, PathBuf};
 
 use super::corpus::Document;
 use super::example::PairExample;
-use super::masking::{build_batch, Batch, MaskingConfig};
+use super::masking::{Batch, MaskingConfig};
 use super::tokenizer::Tokenizer;
 use super::vocab::Vocab;
 use crate::shard::{round_robin_assignment, shard_file_name, ShardReader,
@@ -102,35 +102,67 @@ pub struct ShardedDataset {
     world: usize,
 }
 
+/// Whether `name` is a shard file of exactly this `stem`, i.e. matches
+/// the [`shard_file_name`] convention `<stem>-<idx>-of-<total>.bshard`.
+/// A plain `starts_with(stem)` test would also swallow the shards of a
+/// sibling dataset whose stem merely extends ours (`train` vs `train2`).
+fn is_shard_of(name: &str, stem: &str) -> bool {
+    let Some(rest) =
+        name.strip_prefix(stem).and_then(|r| r.strip_prefix('-'))
+    else {
+        return false;
+    };
+    let Some(mid) = rest.strip_suffix(".bshard") else {
+        return false;
+    };
+    match mid.split_once("-of-") {
+        Some((idx, total)) => {
+            !idx.is_empty()
+                && !total.is_empty()
+                && idx.bytes().all(|b| b.is_ascii_digit())
+                && total.bytes().all(|b| b.is_ascii_digit())
+        }
+        None => false,
+    }
+}
+
 impl ShardedDataset {
     /// Open the shards assigned to `rank` out of `world` (shards are
-    /// distributed round-robin over ranks).
+    /// distributed round-robin over ranks).  Errors up front when the
+    /// shard set cannot cover the world (fewer shard files than ranks),
+    /// so every rank fails the same way instead of only the starved ones.
     pub fn open(dir: &Path, stem: &str, rank: usize, world: usize)
         -> anyhow::Result<ShardedDataset> {
         anyhow::ensure!(rank < world, "rank {rank} >= world {world}");
-        // discover shard count from directory listing
+        anyhow::ensure!(world >= 1, "world must be >= 1");
+        // Discover the shard set from the directory listing: exact-stem
+        // matches only, sorted by file name (zero-padded indices, so the
+        // lexicographic order IS the shard order).  Paths are moved —
+        // never re-cloned — into the rank's slice.
         let mut all: Vec<PathBuf> = std::fs::read_dir(dir)?
             .filter_map(|e| e.ok().map(|e| e.path()))
             .filter(|p| {
                 p.file_name()
                     .and_then(|n| n.to_str())
-                    .map(|n| n.starts_with(stem) && n.ends_with(".bshard"))
+                    .map(|n| is_shard_of(n, stem))
                     .unwrap_or(false)
             })
             .collect();
         all.sort();
         anyhow::ensure!(!all.is_empty(), "no shards '{stem}-*' in {dir:?}");
-        let mine: Vec<PathBuf> = all
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| i % world == rank)
-            .map(|(_, p)| p.clone())
-            .collect();
         anyhow::ensure!(
-            !mine.is_empty(),
-            "rank {rank}: no shards (only {} shard files for world {world})",
+            all.len() >= world,
+            "world {world} needs at least one shard per rank but only {} \
+             '{stem}' shard files exist in {dir:?} — re-shard with more \
+             files or shrink the topology",
             all.len()
         );
+        let mine: Vec<PathBuf> = all
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| i % world == rank)
+            .map(|(_, p)| p)
+            .collect();
 
         // Load this rank's examples into memory (each shard is 1/world of
         // the data — exactly the paper's per-device stream).
@@ -172,14 +204,30 @@ impl ShardedDataset {
     }
 
     /// Build the `i`-th batch of an epoch (wraps around if needed).
+    /// Convenience wrapper over [`Self::batch_into`] that allocates a
+    /// fresh [`Batch`]; the hot path reuses one buffer instead.
     pub fn batch(&self, order: &[usize], i: usize, batch_size: usize,
                  seq: usize, cfg: &MaskingConfig, mask_rng: &mut Pcg64)
                  -> Batch {
+        let mut out = Batch::zeros(batch_size, seq);
+        self.batch_into(order, i, batch_size, seq, cfg, mask_rng, &mut out);
+        out
+    }
+
+    /// Build the `i`-th batch of an epoch straight into a caller-owned
+    /// buffer: no `PairExample` clones, no fresh `Batch` — each row is
+    /// assembled from example slices in place (the §4.1 zero-copy batch
+    /// path).  Bitwise-identical to [`Self::batch`] given the same rng.
+    #[allow(clippy::too_many_arguments)]
+    pub fn batch_into(&self, order: &[usize], i: usize, batch_size: usize,
+                      seq: usize, cfg: &MaskingConfig, mask_rng: &mut Pcg64,
+                      out: &mut Batch) {
+        out.reset(batch_size, seq);
         let n = order.len().max(1);
-        let exs: Vec<PairExample> = (0..batch_size)
-            .map(|k| self.examples[order[(i * batch_size + k) % n]].clone())
-            .collect();
-        build_batch(&exs, seq, cfg, mask_rng)
+        for row in 0..batch_size {
+            let ex = &self.examples[order[(i * batch_size + row) % n]];
+            crate::data::masking::assemble_into(out, row, ex, cfg, mask_rng);
+        }
     }
 
     /// Batches per epoch at `batch_size`.
@@ -189,6 +237,12 @@ impl ShardedDataset {
 
     pub fn world(&self) -> usize {
         self.world
+    }
+
+    /// The rank this view belongs to (fixes the masking-RNG stream and
+    /// the epoch-order seed in [`super::prefetch::BatchCursor`]).
+    pub fn rank(&self) -> usize {
+        self.rank
     }
 }
 
@@ -291,6 +345,77 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
         assert!(ShardedDataset::open(&dir, "train", 0, 1).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn stem_prefix_collision_is_excluded() {
+        // `train` must not swallow `train2`'s shards: the old
+        // starts_with(stem) filter mixed both datasets into one view.
+        let dir = std::env::temp_dir().join("bertdist_pipe_stem");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let docs = SyntheticCorpus::new(11, 800).documents(12, 6, 8);
+        let vocab = Vocab::from_documents(&docs, 2048);
+        let a = build_shards(&docs, &vocab, 2, &dir, "train", 5).unwrap();
+        let b = build_shards(&docs, &vocab, 2, &dir, "train2", 6).unwrap();
+        let ds = ShardedDataset::open(&dir, "train", 0, 1).unwrap();
+        assert_eq!(ds.shard_paths().len(), 2, "{:?}", ds.shard_paths());
+        assert_eq!(ds.len(), a.examples);
+        let ds2 = ShardedDataset::open(&dir, "train2", 0, 1).unwrap();
+        assert_eq!(ds2.shard_paths().len(), 2);
+        assert_eq!(ds2.len(), b.examples);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shard_name_filter_requires_exact_convention() {
+        assert!(is_shard_of("train-00001-of-00004.bshard", "train"));
+        assert!(!is_shard_of("train2-00001-of-00004.bshard", "train"));
+        assert!(!is_shard_of("train-extra-00001-of-00004.bshard", "train"));
+        assert!(!is_shard_of("train-00001-of-00004.bshard.bak", "train"));
+        assert!(!is_shard_of("train-x-of-00004.bshard", "train"));
+        assert!(!is_shard_of("train-00001.bshard", "train"));
+    }
+
+    #[test]
+    fn world_larger_than_shard_count_errors_on_every_rank() {
+        // 2 shard files cannot feed a 3-rank world; the old code only
+        // failed on the starved ranks, leaving rank 0 silently oversized.
+        let dir = std::env::temp_dir().join("bertdist_pipe_world");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (_v, _s) = setup(&dir, 2);
+        for rank in 0..3 {
+            let err = ShardedDataset::open(&dir, "train", rank, 3)
+                .err()
+                .unwrap_or_else(|| panic!("rank {rank} must fail"));
+            assert!(err.to_string().contains("world 3"), "{err}");
+        }
+        // exactly one shard per rank is still fine
+        assert!(ShardedDataset::open(&dir, "train", 1, 2).is_ok());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn batch_into_reuse_is_bitwise_identical_to_fresh() {
+        let dir = std::env::temp_dir().join("bertdist_pipe_binto");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (vocab, _s) = setup(&dir, 2);
+        let ds = ShardedDataset::open(&dir, "train", 0, 1).unwrap();
+        let order = ds.epoch_order(0, 1);
+        let cfg = MaskingConfig {
+            vocab_size: vocab.len() as u32,
+            ..Default::default()
+        };
+        let mut rng_a = Pcg64::new(9);
+        let mut rng_b = Pcg64::new(9);
+        // one buffer reused across batches vs a fresh Batch each time
+        let mut reused = Batch::zeros(4, 32);
+        for i in 0..6 {
+            let fresh = ds.batch(&order, i, 4, 32, &cfg, &mut rng_a);
+            ds.batch_into(&order, i, 4, 32, &cfg, &mut rng_b, &mut reused);
+            assert_eq!(fresh, reused, "batch {i} diverged");
+        }
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

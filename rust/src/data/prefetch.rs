@@ -1,0 +1,333 @@
+//! Per-rank batch prefetch (paper §4.1: data preparation must overlap
+//! training, never serialize it).
+//!
+//! Two pieces:
+//!
+//! * [`BatchCursor`] — the deterministic batch stream of one rank: a
+//!   pure function from the rank's monotone micro-batch counter to a
+//!   masked [`Batch`], including the per-epoch reshuffle (the epoch
+//!   order advances exactly when the counter wraps the rank's
+//!   batches-per-epoch — fixing the stale `step / 100` epoch derivation
+//!   the old trainer computed once before its step loop).  Both the
+//!   synchronous fallback and the prefetch producer run this SAME
+//!   cursor, which is what makes the two paths bitwise-identical.
+//! * [`Prefetcher`] — one long-lived producer thread per rank feeding
+//!   prebuilt batches over a bounded ring of reusable [`Batch`] buffers
+//!   (depth 2 = classic double buffering).  The ring is two mpsc
+//!   channels: `free` carries empty buffers back to the producer,
+//!   `ready` carries filled ones forward; the bound is the number of
+//!   buffers in circulation, so the producer can run at most `depth`
+//!   batches ahead and the steady state allocates nothing.
+//!
+//! The consumer side reports how long it was *blocked* waiting for a
+//! ready batch — the `input_stall_s` lane of the trainer's stall
+//! accounting (zero when the producer keeps up; the whole build time
+//! when running synchronously).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::thread::{Scope, ScopedJoinHandle};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::masking::{Batch, MaskingConfig};
+use super::pipeline::ShardedDataset;
+use crate::util::Pcg64;
+
+/// Deterministic per-rank batch stream: `fill_next` builds the batch for
+/// the cursor's current global micro-batch index and advances.  Epoch
+/// `e` covers indices `[e * bpe, (e + 1) * bpe)` where `bpe` is the
+/// rank's ceil batches-per-epoch (tail examples stay in rotation); the
+/// epoch order is re-drawn from [`ShardedDataset::epoch_order`] at every
+/// wrap, so long runs keep reshuffling deterministically.
+///
+/// The masking RNG stream is `(seed, 0xDA7A + rank)` and is consumed
+/// strictly sequentially — masking is therefore a function of the
+/// cursor's *consumption order within a run*, exactly as in the old
+/// in-line path (a fresh run restarts the stream).
+pub struct BatchCursor<'a> {
+    ds: &'a ShardedDataset,
+    cfg: MaskingConfig,
+    seed: u64,
+    batch: usize,
+    seq: usize,
+    rng: Pcg64,
+    epoch: usize,
+    order: Vec<usize>,
+    bpe: u64,
+    next: u64,
+}
+
+impl<'a> BatchCursor<'a> {
+    /// Cursor over `ds` starting at global micro-batch `start_micro`
+    /// (the trainer passes `data_step * accum_steps` so a resumed run
+    /// lands on the same epoch order it left off in).
+    pub fn new(ds: &'a ShardedDataset, cfg: MaskingConfig, seed: u64,
+               batch: usize, seq: usize, start_micro: u64)
+               -> BatchCursor<'a> {
+        let bpe = ((ds.len() + batch.max(1) - 1) / batch.max(1)).max(1)
+            as u64;
+        let epoch = (start_micro / bpe) as usize;
+        BatchCursor {
+            order: ds.epoch_order(epoch, seed),
+            rng: Pcg64::with_stream(seed, 0xDA7A + ds.rank() as u64),
+            ds,
+            cfg,
+            seed,
+            batch,
+            seq,
+            epoch,
+            bpe,
+            next: start_micro,
+        }
+    }
+
+    /// Global micro-batch index the next `fill_next` will produce.
+    pub fn position(&self) -> u64 {
+        self.next
+    }
+
+    /// Epoch the cursor is currently drawing from.
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Batches per epoch this cursor wraps on (ceil division — the tail
+    /// batch that wraps to the head of the order still counts).
+    pub fn batches_per_epoch(&self) -> u64 {
+        self.bpe
+    }
+
+    /// Build the next batch in the stream into `out` (recycled in
+    /// place) and advance the cursor.
+    pub fn fill_next(&mut self, out: &mut Batch) {
+        let epoch = (self.next / self.bpe) as usize;
+        if epoch != self.epoch {
+            self.epoch = epoch;
+            self.order = self.ds.epoch_order(epoch, self.seed);
+        }
+        let idx = (self.next % self.bpe) as usize;
+        self.ds.batch_into(&self.order, idx, self.batch, self.seq,
+                           &self.cfg, &mut self.rng, out);
+        self.next += 1;
+    }
+}
+
+/// One rank's consumer-side lane of the prefetch ring.  Endpoints sit
+/// behind a `Mutex` because the pool's compute workers reach them
+/// through a shared `&Prefetcher`; each lane is touched only by its own
+/// rank's worker, so the locks are uncontended.
+struct Lane {
+    ready_rx: Receiver<Batch>,
+    free_tx: Sender<Batch>,
+}
+
+/// One long-lived producer thread per rank, `depth` reusable batch
+/// buffers per ring.  Producers are **scoped** threads
+/// (`std::thread::scope`): the caller opens a scope around the
+/// training loop, so the dataset borrows are enforced by the compiler
+/// with no lifetime erasure — the scope cannot close until every
+/// producer has exited.  Dropping the prefetcher closes the rings and
+/// joins the producers right there; even a leaked prefetcher
+/// (`mem::forget`) can at worst deadlock the scope exit, never leave a
+/// thread reading freed data.
+pub struct Prefetcher<'scope> {
+    lanes: Vec<Mutex<Lane>>,
+    handles: Vec<ScopedJoinHandle<'scope, ()>>,
+    depth: usize,
+}
+
+impl<'scope> Prefetcher<'scope> {
+    /// Spawn one producer per dataset (= per rank) inside `scope`, each
+    /// primed with `depth >= 1` recycled [`Batch`] buffers and producing
+    /// the exact [`BatchCursor`] stream from `start_micro`.
+    pub fn spawn<'env>(scope: &'scope Scope<'scope, 'env>,
+                       datasets: &'env [ShardedDataset],
+                       cfg: &MaskingConfig, seed: u64, batch: usize,
+                       seq: usize, start_micro: u64, depth: usize)
+                       -> Prefetcher<'scope> {
+        assert!(depth >= 1, "prefetch depth must be >= 1 (0 = run sync)");
+        let mut lanes = Vec::with_capacity(datasets.len());
+        let mut handles = Vec::with_capacity(datasets.len());
+        for (r, ds) in datasets.iter().enumerate() {
+            let (free_tx, free_rx) = channel::<Batch>();
+            let (ready_tx, ready_rx) = channel::<Batch>();
+            for _ in 0..depth {
+                free_tx
+                    .send(Batch::zeros(batch, seq))
+                    .expect("prime prefetch ring");
+            }
+            let cfg = cfg.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("prefetch-{r}"))
+                    .spawn_scoped(scope, move || {
+                        let mut cursor = BatchCursor::new(
+                            ds, cfg, seed, batch, seq, start_micro);
+                        // Blocks on `free` until the consumer recycles a
+                        // buffer (the ring bound) and exits when either
+                        // channel closes (prefetcher dropped).
+                        while let Ok(mut buf) = free_rx.recv() {
+                            cursor.fill_next(&mut buf);
+                            if ready_tx.send(buf).is_err() {
+                                break;
+                            }
+                        }
+                    })
+                    .expect("spawn prefetch producer"),
+            );
+            lanes.push(Mutex::new(Lane { ready_rx, free_tx }));
+        }
+        Prefetcher { lanes, handles, depth }
+    }
+
+    pub fn world(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Pop rank `r`'s next ready batch, returning it together with the
+    /// seconds this call spent *blocked* on the producer (the exposed
+    /// input stall; ~0 when the producer keeps ahead).
+    pub fn pop(&self, rank: usize) -> Result<(Batch, f64)> {
+        let lane = self.lanes[rank].lock().expect("prefetch lane poisoned");
+        let t0 = Instant::now();
+        let b = lane.ready_rx.recv().map_err(|_| {
+            anyhow::anyhow!("prefetch producer for rank {rank} exited")
+        })?;
+        Ok((b, t0.elapsed().as_secs_f64()))
+    }
+
+    /// Hand a consumed batch buffer back to rank `r`'s producer for
+    /// reuse.  A producer that already exited (pool shutting down) just
+    /// drops the buffer.
+    pub fn recycle(&self, rank: usize, buf: Batch) {
+        let lane = self.lanes[rank].lock().expect("prefetch lane poisoned");
+        let _ = lane.free_tx.send(buf);
+    }
+}
+
+impl Drop for Prefetcher<'_> {
+    fn drop(&mut self) {
+        // Closing both ring endpoints unblocks a producer whether it is
+        // waiting on `free` or about to send on `ready`; then join.
+        self.lanes.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::SyntheticCorpus;
+    use crate::data::{build_shards, Vocab};
+    use std::path::Path;
+
+    fn setup(dir: &Path) -> (Vocab, Vec<ShardedDataset>) {
+        let _ = std::fs::remove_dir_all(dir);
+        let docs = SyntheticCorpus::new(3, 900).documents(10, 6, 8);
+        let vocab = Vocab::from_documents(&docs, 1024);
+        build_shards(&docs, &vocab, 2, dir, "train", 7).unwrap();
+        let ds = (0..2)
+            .map(|r| ShardedDataset::open(dir, "train", r, 2).unwrap())
+            .collect();
+        (vocab, ds)
+    }
+
+    fn cfg(vocab: &Vocab) -> MaskingConfig {
+        MaskingConfig { vocab_size: vocab.len() as u32, ..Default::default() }
+    }
+
+    #[test]
+    fn cursor_is_deterministic_and_advances_epochs_on_wrap() {
+        let dir = std::env::temp_dir().join("bertdist_prefetch_cursor");
+        let (vocab, ds) = setup(&dir);
+        let c = cfg(&vocab);
+        let mut a = BatchCursor::new(&ds[0], c.clone(), 42, 4, 32, 0);
+        let mut b = BatchCursor::new(&ds[0], c.clone(), 42, 4, 32, 0);
+        let bpe = a.batches_per_epoch();
+        assert_eq!(bpe, (ds[0].len() as u64 + 3) / 4);
+        let mut buf_a = Batch::zeros(4, 32);
+        let mut buf_b = Batch::zeros(4, 32);
+        // two full epochs: identical twin streams, epoch wraps exactly
+        // at bpe, and the order really is re-drawn (epoch() advances —
+        // lazily, on the fill that crosses the boundary).
+        for i in 0..(2 * bpe) {
+            assert_eq!(a.position(), i);
+            a.fill_next(&mut buf_a);
+            b.fill_next(&mut buf_b);
+            assert_eq!(a.epoch() as u64, i / bpe, "after filling micro {i}");
+            assert_eq!(buf_a, buf_b, "micro {i} diverged");
+        }
+        assert_eq!(a.epoch(), 1);
+        a.fill_next(&mut buf_a);
+        assert_eq!(a.epoch(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn cursor_resumes_at_the_right_epoch() {
+        let dir = std::env::temp_dir().join("bertdist_prefetch_resume");
+        let (vocab, ds) = setup(&dir);
+        let c = cfg(&vocab);
+        let probe = BatchCursor::new(&ds[1], c.clone(), 1, 4, 32, 0);
+        let bpe = probe.batches_per_epoch();
+        let resumed =
+            BatchCursor::new(&ds[1], c.clone(), 1, 4, 32, bpe + 2);
+        assert_eq!(resumed.epoch(), 1);
+        assert_eq!(resumed.position(), bpe + 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prefetched_stream_matches_synchronous_bitwise() {
+        // The acceptance invariant at the data layer: a depth-2
+        // prefetcher must hand every rank the exact batches the
+        // synchronous cursor builds, across epoch wraps.
+        let dir = std::env::temp_dir().join("bertdist_prefetch_bitwise");
+        let (vocab, ds) = setup(&dir);
+        let c = cfg(&vocab);
+        std::thread::scope(|scope| {
+            let pf = Prefetcher::spawn(scope, &ds, &c, 99, 4, 32, 0, 2);
+            assert_eq!(pf.world(), 2);
+            assert_eq!(pf.depth(), 2);
+            let mut cursors: Vec<BatchCursor> = ds
+                .iter()
+                .map(|d| BatchCursor::new(d, c.clone(), 99, 4, 32, 0))
+                .collect();
+            let steps = 2 * cursors[0].batches_per_epoch() + 3;
+            let mut want = Batch::zeros(4, 32);
+            for i in 0..steps {
+                for r in 0..2 {
+                    cursors[r].fill_next(&mut want);
+                    let (got, stall) = pf.pop(r).unwrap();
+                    assert!(stall >= 0.0);
+                    assert_eq!(got, want, "rank {r} micro {i}");
+                    pf.recycle(r, got);
+                }
+            }
+            drop(pf); // joins producers cleanly mid-stream
+        });
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn dropping_an_idle_prefetcher_does_not_hang() {
+        let dir = std::env::temp_dir().join("bertdist_prefetch_drop");
+        let (vocab, ds) = setup(&dir);
+        std::thread::scope(|scope| {
+            let pf =
+                Prefetcher::spawn(scope, &ds, &cfg(&vocab), 5, 2, 16, 0, 3);
+            // never popped: producers are parked mid-ring; drop must
+            // join (and the scope exit must not hang afterwards).
+            drop(pf);
+        });
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -13,7 +13,7 @@
 
 use crate::data::special;
 use crate::metrics::LossCurve;
-use crate::runtime::{Engine, QaBatch};
+use crate::runtime::{Engine, QaBatch, StepScratch};
 use crate::util::Pcg64;
 
 /// One synthetic QA example.
@@ -120,14 +120,20 @@ pub fn run_finetune(engine: &Engine, preset: &str, pre_params: &[f32],
     let mut report = FinetuneReport::default();
     let context_len = (seq - 8).min(16);
 
+    // Zero-copy hot path: one marshaling scratch + one gradient buffer
+    // for the whole run (params mutate in place each step, so the step
+    // counter versions the cached literal).
+    let mut scratch = StepScratch::new();
+    let mut grads = vec![0.0f32; n_ft];
     for s in 0..steps {
         let exs = gen_examples(&mut rng, batch, context_len,
                                model.config.vocab_size as u32);
         let qb = build_qa_batch(&exs, seq);
-        let out = step.run(&params, &qb, 1.0)?;
+        let out = step.run_scratch(&mut scratch, &params, s as u64, &qb,
+                                   1.0, &mut grads)?;
         report.loss.push(s, out.loss as f64);
         report.exact_match.push(s, out.exact as f64);
-        apply.run(&mut params, &out.grads, &mut m, &mut v, (s + 1) as f32,
+        apply.run(&mut params, &grads, &mut m, &mut v, (s + 1) as f32,
                   lr)?;
     }
     report.final_exact = report.exact_match.tail_mean(5);

@@ -150,6 +150,12 @@ pub struct ExchangeTimings {
     pub pcie_comm_s: f64,
     /// Total exposed (non-overlapped) communication seconds.
     pub exposed_comm_s: f64,
+    /// Total seconds compute workers spent blocked waiting on input
+    /// batches (critical-path max over ranks, summed over steps) — the
+    /// data-pipeline twin of `exposed_comm_s`, recorded via
+    /// [`Self::record_input_stall`] so data stalls render next to the
+    /// PCIe/network spans in [`Self::to_timeline`].
+    pub input_stall_s: f64,
     /// Steps recorded.
     pub steps: usize,
 }
@@ -183,6 +189,13 @@ impl ExchangeTimings {
         self.net_comm_s += bucket_net_s.iter().sum::<f64>();
         self.exposed_comm_s += exposed_s;
         self.steps += 1;
+    }
+
+    /// Record one step's input-stall seconds (paired with the same
+    /// step's [`Self::record`] call; kept separate so exchange-only
+    /// callers like `profile-grads` stay unchanged).
+    pub fn record_input_stall(&mut self, stall_s: f64) {
+        self.input_stall_s += stall_s;
     }
 
     /// `1 - exposed/total`: 1.0 means the exchange was fully hidden
@@ -227,10 +240,10 @@ impl ExchangeTimings {
     pub fn summary(&self) -> String {
         format!(
             "buckets={} comm={:.3}s (pcie {:.3}s / net {:.3}s) \
-             exposed={:.3}s overlap_eff={:.0}%",
+             exposed={:.3}s overlap_eff={:.0}% input_stall={:.3}s",
             self.bucket_s.len(), self.total_comm_s, self.pcie_comm_s,
             self.net_comm_s, self.exposed_comm_s,
-            self.overlap_efficiency() * 100.0
+            self.overlap_efficiency() * 100.0, self.input_stall_s
         )
     }
 
@@ -248,6 +261,14 @@ impl ExchangeTimings {
     /// only their sum is measured.
     pub fn to_timeline(&self) -> Timeline {
         let mut tl = Timeline::default();
+        // Data-stall lane: the mean per-step seconds a compute worker sat
+        // waiting on input batches, drawn from t=0 on its own "data"
+        // track so input starvation reads side by side with the
+        // PCIe/network exchange spans.
+        if self.steps > 0 && self.input_stall_s > 0.0 {
+            let stall = self.input_stall_s / self.steps as f64;
+            tl.add("data", "input_stall", 0.0, stall);
+        }
         let mut t = 0.0f64;
         for b in 0..self.bucket_s.len() {
             let pcie = self.mean_bucket_pcie_s(b);
@@ -470,6 +491,25 @@ mod tests {
         // and the chrome trace renders
         let j = Json::parse(&tl.to_chrome_trace()).unwrap();
         assert!(j.get("traceEvents").unwrap().as_arr().unwrap().len() >= 4);
+    }
+
+    #[test]
+    fn input_stall_records_and_renders_data_lane() {
+        let mut t = ExchangeTimings::default();
+        t.record(&[0.2], &[0.2], &[0.0], 0.0);
+        t.record_input_stall(0.05);
+        t.record(&[0.2], &[0.2], &[0.0], 0.0);
+        t.record_input_stall(0.15);
+        assert!((t.input_stall_s - 0.2).abs() < 1e-12);
+        assert!(t.summary().contains("input_stall=0.200s"));
+        let tl = t.to_timeline();
+        // mean per-step stall on its own lane, next to the pcie span
+        assert!((tl.busy("data", "input_stall") - 0.1).abs() < 1e-12);
+        assert!((tl.busy("pcie", "bucket0") - 0.2).abs() < 1e-12);
+        // no stall recorded -> no data lane
+        let mut q = ExchangeTimings::default();
+        q.record(&[0.1], &[0.1], &[0.0], 0.0);
+        assert_eq!(q.to_timeline().busy("data", ""), 0.0);
     }
 
     #[test]

@@ -25,6 +25,18 @@ pub struct StepOutput {
     pub grad_norm: f32,
 }
 
+/// Scalar outputs of the zero-copy step path — everything in
+/// [`StepOutput`] except the gradients, which land in the caller's
+/// `grads_out` buffer instead of a fresh `Vec`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepStats {
+    pub loss: f32,
+    pub mlm_loss: f32,
+    pub nsp_loss: f32,
+    pub mlm_acc: f32,
+    pub grad_norm: f32,
+}
+
 /// The engine: one PJRT client + the manifest it serves artifacts from.
 pub struct Engine {
     client: PjRtClient,
@@ -139,6 +151,70 @@ impl Engine {
 
 // ---------------------------------------------------------- marshaling --
 
+/// Reusable per-worker marshaling scratch for the zero-copy step paths
+/// ([`TrainStep::run_scratch`] / [`QaStep::run_scratch`]).
+///
+/// The two gradient-sized host↔device marshals of the old path are
+/// recycled here:
+///
+/// * the **params literal** (`n_params` f32s, rebuilt per micro-step
+///   before) is cached and rebuilt only when the caller-supplied
+///   `(buffer, version)` key changes — within one optimizer step every
+///   micro-step shares the same parameters, so the rebuild happens once
+///   per step instead of `accum_steps` times;
+/// * the **loss-scale scalar** is cached by value (it only changes on
+///   AMP back-off/growth).
+///
+/// The per-batch i32 tensors still get fresh (constant-shape, few-KB)
+/// literals each call — they change every micro-step and carry no
+/// gradient-sized payload.  The matching output-side recycling is
+/// [`TrainStep::run_scratch`]'s `grads_out` parameter: gradients are
+/// decoded straight into the caller's preallocated buffer instead of
+/// materializing a fresh `Vec<f32>` of `n_params` per micro-step.
+///
+/// Contract: `params_version` MUST change whenever the parameter
+/// contents change (the trainer passes its monotone data-step counter;
+/// an in-place optimizer apply does not move the buffer, so pointer
+/// identity alone cannot detect the update).
+#[derive(Default)]
+pub struct StepScratch {
+    params_lit: Option<Literal>,
+    params_key: Option<(usize, usize, u64)>,
+    scale_lit: Option<Literal>,
+    scale_val: f32,
+}
+
+// SAFETY: a `Literal` is host-side memory exclusively owned by this
+// scratch — nothing in it is thread-affine.  The raw-pointer wrapper
+// merely defeats the auto trait; the trainer parks each scratch behind a
+// per-rank `Mutex`, so only one worker ever touches it at a time (the
+// same reasoning as the `Send`/`Sync` impls on `TrainStep` below).
+unsafe impl Send for StepScratch {}
+
+impl StepScratch {
+    pub fn new() -> StepScratch {
+        StepScratch::default()
+    }
+
+    fn ensure_params(&mut self, params: &[f32], version: u64)
+        -> Result<()> {
+        let key = (params.as_ptr() as usize, params.len(), version);
+        if self.params_key != Some(key) {
+            self.params_lit = Some(lit_f32_vec(params)?);
+            self.params_key = Some(key);
+        }
+        Ok(())
+    }
+
+    fn ensure_scale(&mut self, v: f32) {
+        if self.scale_lit.is_none() || self.scale_val.to_bits() != v.to_bits()
+        {
+            self.scale_lit = Some(lit_f32_scalar(v));
+            self.scale_val = v;
+        }
+    }
+}
+
 fn lit_f32_vec(data: &[f32]) -> Result<Literal> {
     let bytes = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8,
@@ -171,8 +247,16 @@ fn lit_f32_scalar(v: f32) -> Literal {
     Literal::scalar(v)
 }
 
-fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
+/// Decode an f32 literal into a caller-owned buffer — the zero-copy
+/// replacement for `Literal::to_vec`: no fresh `Vec`, the bytes land
+/// straight in `dst` (PJRT's raw copy-out, same path `to_vec` uses
+/// internally).
+fn copy_f32_into(lit: &Literal, dst: &mut [f32]) -> Result<()> {
+    let n = lit.element_count();
+    anyhow::ensure!(n == dst.len(),
+                    "literal holds {n} f32s, buffer holds {}", dst.len());
+    lit.copy_raw_to::<f32>(dst)?;
+    Ok(())
 }
 
 fn scalar_f32(lit: &Literal) -> Result<f32> {
@@ -199,34 +283,69 @@ unsafe impl Send for TrainStep {}
 unsafe impl Sync for TrainStep {}
 
 impl TrainStep {
-    /// Execute one micro-step.
+    /// Execute one micro-step (compatibility path): fresh literals and a
+    /// fresh gradient `Vec`.  Delegates to [`Self::run_scratch`] through
+    /// a throwaway scratch, so the two paths execute identical code and
+    /// are bitwise-interchangeable.
     pub fn run(&self, params: &[f32], batch: &Batch, loss_scale: f32)
         -> Result<StepOutput> {
+        let mut scratch = StepScratch::new();
+        let mut grads = vec![0.0f32; self.n_params];
+        let s = self.run_scratch(&mut scratch, params, 0, batch, loss_scale,
+                                 &mut grads)?;
+        Ok(StepOutput {
+            loss: s.loss,
+            mlm_loss: s.mlm_loss,
+            nsp_loss: s.nsp_loss,
+            mlm_acc: s.mlm_acc,
+            grads,
+            grad_norm: s.grad_norm,
+        })
+    }
+
+    /// Execute one micro-step on the zero-copy hot path: the params
+    /// literal and loss-scale scalar are recycled through `scratch` (see
+    /// [`StepScratch`] for the `params_version` contract) and the
+    /// gradients are decoded straight into `grads_out` — the steady
+    /// state performs no gradient-sized allocation.
+    pub fn run_scratch(&self, scratch: &mut StepScratch, params: &[f32],
+                       params_version: u64, batch: &Batch, loss_scale: f32,
+                       grads_out: &mut [f32]) -> Result<StepStats> {
         anyhow::ensure!(params.len() == self.n_params,
                         "params len {} != {}", params.len(), self.n_params);
         anyhow::ensure!(batch.batch == self.batch && batch.seq == self.seq,
                         "batch shape {}x{} != step {}x{}", batch.batch,
                         batch.seq, self.batch, self.seq);
-        let inputs = [
-            lit_f32_vec(params)?,
-            lit_i32_2d(&batch.input_ids, self.batch, self.seq)?,
-            lit_i32_2d(&batch.token_type_ids, self.batch, self.seq)?,
-            lit_i32_2d(&batch.attention_mask, self.batch, self.seq)?,
-            lit_i32_2d(&batch.mlm_labels, self.batch, self.seq)?,
-            lit_i32_1d(&batch.nsp_labels)?,
-            lit_f32_scalar(loss_scale),
+        anyhow::ensure!(grads_out.len() == self.n_params,
+                        "grads buffer {} != {}", grads_out.len(),
+                        self.n_params);
+        scratch.ensure_params(params, params_version)?;
+        scratch.ensure_scale(loss_scale);
+        let ids = lit_i32_2d(&batch.input_ids, self.batch, self.seq)?;
+        let tts = lit_i32_2d(&batch.token_type_ids, self.batch, self.seq)?;
+        let att = lit_i32_2d(&batch.attention_mask, self.batch, self.seq)?;
+        let mlm = lit_i32_2d(&batch.mlm_labels, self.batch, self.seq)?;
+        let nsp = lit_i32_1d(&batch.nsp_labels)?;
+        let inputs: [&Literal; 7] = [
+            scratch.params_lit.as_ref().expect("params literal cached"),
+            &ids,
+            &tts,
+            &att,
+            &mlm,
+            &nsp,
+            scratch.scale_lit.as_ref().expect("scale literal cached"),
         ];
-        let result = self.exe.execute::<Literal>(&inputs)?[0][0]
+        let result = self.exe.execute::<&Literal>(&inputs)?[0][0]
             .to_literal_sync()?;
         let parts = result.to_tuple()?;
         anyhow::ensure!(parts.len() == 6,
                         "train step returned {} outputs", parts.len());
-        Ok(StepOutput {
+        copy_f32_into(&parts[4], grads_out)?;
+        Ok(StepStats {
             loss: scalar_f32(&parts[0])?,
             mlm_loss: scalar_f32(&parts[1])?,
             nsp_loss: scalar_f32(&parts[2])?,
             mlm_acc: scalar_f32(&parts[3])?,
-            grads: to_f32_vec(&parts[4])?,
             grad_norm: scalar_f32(&parts[5])?,
         })
     }
@@ -239,11 +358,20 @@ pub struct ApplyStep {
 }
 
 impl ApplyStep {
-    /// Execute; overwrites params/m/v in place.
+    /// Execute; overwrites params/m/v truly in place — the updated
+    /// state is decoded back into the existing buffers, so an optimizer
+    /// step allocates no fresh `Vec`s and the buffers never move or
+    /// drift in length (asserted up front for all four vectors).
     pub fn run(&self, params: &mut Vec<f32>, grads: &[f32],
                m: &mut Vec<f32>, v: &mut Vec<f32>, step: f32, lr: f32)
                -> Result<()> {
-        anyhow::ensure!(params.len() == self.n_params);
+        anyhow::ensure!(params.len() == self.n_params,
+                        "params len {} != {}", params.len(), self.n_params);
+        anyhow::ensure!(grads.len() == self.n_params,
+                        "grads len {} != {}", grads.len(), self.n_params);
+        anyhow::ensure!(m.len() == self.n_params && v.len() == self.n_params,
+                        "optimizer state {}/{} != {}", m.len(), v.len(),
+                        self.n_params);
         let inputs = [
             lit_f32_vec(params)?,
             lit_f32_vec(grads)?,
@@ -257,9 +385,9 @@ impl ApplyStep {
         let parts = result.to_tuple()?;
         anyhow::ensure!(parts.len() == 3,
                         "apply returned {} outputs", parts.len());
-        *params = to_f32_vec(&parts[0])?;
-        *m = to_f32_vec(&parts[1])?;
-        *v = to_f32_vec(&parts[2])?;
+        copy_f32_into(&parts[0], params)?;
+        copy_f32_into(&parts[1], m)?;
+        copy_f32_into(&parts[2], v)?;
         Ok(())
     }
 }
@@ -301,6 +429,17 @@ pub struct QaOutput {
     pub grad_norm: f32,
 }
 
+/// Scalar outputs of the QA zero-copy path (gradients go to the
+/// caller's buffer, mirroring [`StepStats`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QaStats {
+    pub loss: f32,
+    pub start_acc: f32,
+    pub end_acc: f32,
+    pub exact: f32,
+    pub grad_norm: f32,
+}
+
 /// Compiled QA fine-tuning step over the extended flat vector.
 pub struct QaStep {
     exe: PjRtLoadedExecutable,
@@ -310,31 +449,62 @@ pub struct QaStep {
 }
 
 impl QaStep {
+    /// Compatibility path: fresh literals + fresh gradient `Vec`.
     pub fn run(&self, params_ft: &[f32], batch: &QaBatch, loss_scale: f32)
         -> Result<QaOutput> {
+        let mut scratch = StepScratch::new();
+        let mut grads = vec![0.0f32; self.n_params];
+        let s = self.run_scratch(&mut scratch, params_ft, 0, batch,
+                                 loss_scale, &mut grads)?;
+        Ok(QaOutput {
+            loss: s.loss,
+            start_acc: s.start_acc,
+            end_acc: s.end_acc,
+            exact: s.exact,
+            grads,
+            grad_norm: s.grad_norm,
+        })
+    }
+
+    /// Zero-copy path: same recycling contract as
+    /// [`TrainStep::run_scratch`].
+    pub fn run_scratch(&self, scratch: &mut StepScratch, params_ft: &[f32],
+                       params_version: u64, batch: &QaBatch,
+                       loss_scale: f32, grads_out: &mut [f32])
+                       -> Result<QaStats> {
         anyhow::ensure!(params_ft.len() == self.n_params,
                         "ft params len {} != {}", params_ft.len(),
                         self.n_params);
         anyhow::ensure!(batch.batch == self.batch && batch.seq == self.seq);
-        let inputs = [
-            lit_f32_vec(params_ft)?,
-            lit_i32_2d(&batch.input_ids, self.batch, self.seq)?,
-            lit_i32_2d(&batch.token_type_ids, self.batch, self.seq)?,
-            lit_i32_2d(&batch.attention_mask, self.batch, self.seq)?,
-            lit_i32_1d(&batch.start_positions)?,
-            lit_i32_1d(&batch.end_positions)?,
-            lit_f32_scalar(loss_scale),
+        anyhow::ensure!(grads_out.len() == self.n_params,
+                        "grads buffer {} != {}", grads_out.len(),
+                        self.n_params);
+        scratch.ensure_params(params_ft, params_version)?;
+        scratch.ensure_scale(loss_scale);
+        let ids = lit_i32_2d(&batch.input_ids, self.batch, self.seq)?;
+        let tts = lit_i32_2d(&batch.token_type_ids, self.batch, self.seq)?;
+        let att = lit_i32_2d(&batch.attention_mask, self.batch, self.seq)?;
+        let sp = lit_i32_1d(&batch.start_positions)?;
+        let ep = lit_i32_1d(&batch.end_positions)?;
+        let inputs: [&Literal; 7] = [
+            scratch.params_lit.as_ref().expect("params literal cached"),
+            &ids,
+            &tts,
+            &att,
+            &sp,
+            &ep,
+            scratch.scale_lit.as_ref().expect("scale literal cached"),
         ];
-        let result = self.exe.execute::<Literal>(&inputs)?[0][0]
+        let result = self.exe.execute::<&Literal>(&inputs)?[0][0]
             .to_literal_sync()?;
         let parts = result.to_tuple()?;
         anyhow::ensure!(parts.len() == 6);
-        Ok(QaOutput {
+        copy_f32_into(&parts[4], grads_out)?;
+        Ok(QaStats {
             loss: scalar_f32(&parts[0])?,
             start_acc: scalar_f32(&parts[1])?,
             end_acc: scalar_f32(&parts[2])?,
             exact: scalar_f32(&parts[3])?,
-            grads: to_f32_vec(&parts[4])?,
             grad_norm: scalar_f32(&parts[5])?,
         })
     }

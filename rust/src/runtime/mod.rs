@@ -9,5 +9,6 @@ pub mod engine;
 pub mod manifest;
 
 pub use engine::{ApplyStep, Engine, ForwardStep, QaBatch, QaOutput,
-                 QaStep, StepOutput, TrainStep};
+                 QaStats, QaStep, StepOutput, StepScratch, StepStats,
+                 TrainStep};
 pub use manifest::{ArtifactInfo, Manifest, ModelInfo};

@@ -17,8 +17,10 @@
 //! (earlier micro-batches only produce partial sums — the exchange must
 //! wait for the final accumulation, §4.4).
 
+use crate::collectives::pool::CommMode;
 use crate::metrics::Timeline;
-use crate::netsim::{ring_allreduce_time, Fabric};
+use crate::netsim::{hierarchical_allreduce_phases, ring_allreduce_time,
+                    Fabric, HierPhases};
 use crate::topology::Topology;
 
 /// Inputs of the iteration model.
@@ -40,11 +42,28 @@ pub struct IterationModel {
     pub buckets: usize,
     /// Weight-update time as a fraction of one micro-batch compute.
     pub update_frac: f64,
+    /// How each bucket travels the cluster, mirroring
+    /// `train.comm_mode`: on a hierarchical resolve the bucket is priced
+    /// by the executed gather → leader-ring → broadcast schedule and
+    /// its timeline span splits into the same per-phase spans the
+    /// measured `--trace` exports.  `Flat` keeps the PR-1 world-ring
+    /// pricing (the paper-§5.2 calibration anchors).
+    pub comm_mode: CommMode,
+    /// Modeled host-side batch build (tokenize+mask+pack) per
+    /// micro-batch, seconds; 0 = free input.
+    pub batch_build_s: f64,
+    /// Whether the input pipeline is prefetched (§4.1 / the
+    /// `train.prefetch_depth` producers): a micro stalls only for the
+    /// build time not hidden behind the previous micro's compute.
+    /// `false` = the build serializes before every micro-batch.
+    pub prefetch: bool,
 }
 
 impl IterationModel {
     /// The paper's headline configuration on a given topology: T4
     /// fused-FP16 device, BERT-large gradients, phase-1 micro-batch.
+    /// Comm mode is `Flat` — the §5.2 weak-scaling anchors are
+    /// calibrated against the flat world ring.
     pub fn paper(topo: Topology, accum_steps: usize, overlap: bool) -> Self {
         IterationModel {
             topo,
@@ -57,6 +76,9 @@ impl IterationModel {
             overlap,
             buckets: 8,
             update_frac: 0.05,
+            comm_mode: CommMode::Flat,
+            batch_build_s: 0.0,
+            prefetch: true,
         }
     }
 
@@ -65,18 +87,52 @@ impl IterationModel {
         self.tokens_per_micro / self.device_tokens_per_sec
     }
 
-    /// Full-gradient ring allreduce time on this topology.
+    /// Whether the modeled exchange runs the §4.4 hierarchy on this
+    /// topology (the resolved comm mode, as in the real pool).
+    pub fn is_hierarchical(&self) -> bool {
+        self.comm_mode.resolves_hierarchical(&self.topo)
+    }
+
+    /// Per-bucket phase pricing of the modeled exchange.  Flat resolve:
+    /// everything is one ring on the topology's bottleneck link, billed
+    /// as the "net" phase (PCIe phases zero) — matching how the
+    /// measured flat path bills its exchange.  Hierarchical resolve:
+    /// the executed gather/leader-ring/broadcast schedule from
+    /// [`hierarchical_allreduce_phases`].
+    pub fn bucket_phases(&self) -> HierPhases {
+        let per_bucket = self.grad_bytes / self.buckets.max(1) as f64;
+        if self.is_hierarchical() {
+            hierarchical_allreduce_phases(&self.topo, per_bucket,
+                                          &self.fabric)
+        } else {
+            let link = self.fabric.ring_bottleneck(&self.topo);
+            HierPhases {
+                pcie_s: 0.0,
+                net_s: ring_allreduce_time(self.topo.world_size(),
+                                           per_bucket, link),
+            }
+        }
+    }
+
+    /// Full-gradient allreduce time on this topology (all buckets).
     pub fn allreduce_s(&self) -> f64 {
-        let n = self.topo.world_size();
-        if n <= 1 {
+        if self.topo.world_size() <= 1 {
             return 0.0;
         }
-        let link = self.fabric.ring_bottleneck(&self.topo);
         // per-bucket exchanges: same total bytes, more latency terms
-        let per_bucket = self.grad_bytes / self.buckets.max(1) as f64;
-        (0..self.buckets.max(1))
-            .map(|_| ring_allreduce_time(n, per_bucket, link))
-            .sum()
+        self.bucket_phases().total() * self.buckets.max(1) as f64
+    }
+
+    /// Exposed input stall per micro-batch: the whole build when the
+    /// pipeline is synchronous, only the overhang past one micro's
+    /// compute when prefetched (the producer builds batch `i + 1` while
+    /// the device runs batch `i`).
+    pub fn micro_input_stall_s(&self) -> f64 {
+        if self.prefetch {
+            (self.batch_build_s - self.micro_compute_s()).max(0.0)
+        } else {
+            self.batch_build_s.max(0.0)
+        }
     }
 }
 
@@ -89,6 +145,9 @@ pub struct IterationResult {
     pub compute_utilization: f64,
     /// Seconds of communication NOT hidden by compute.
     pub exposed_comm_s: f64,
+    /// Seconds the compute stream sat waiting on input batches (the
+    /// modeled data-stall lane; 0 when the prefetch producers keep up).
+    pub input_stall_s: f64,
     /// Tokens processed per second per GPU.
     pub tokens_per_sec_per_gpu: f64,
     /// Cluster-wide tokens/s.
@@ -97,50 +156,85 @@ pub struct IterationResult {
     pub timeline: Timeline,
 }
 
+/// Emit one bucket's exchange on the timeline, mirroring the span
+/// naming of the MEASURED trace (`ExchangeTimings::to_timeline`): a
+/// hierarchical bucket splits into `bucket{i}.pcie.gather` →
+/// `bucket{i}.net` → `bucket{i}.pcie.bcast`, a flat bucket is one
+/// `bucket{i}.net` span.
+fn add_bucket_spans(tl: &mut Timeline, i: usize, start: f64,
+                    phases: &HierPhases) {
+    if phases.pcie_s > 0.0 && phases.net_s > 0.0 {
+        let half = phases.pcie_s / 2.0;
+        tl.add("pcie", &format!("bucket{i}.pcie.gather"), start,
+               start + half);
+        tl.add("net", &format!("bucket{i}.net"), start + half,
+               start + half + phases.net_s);
+        tl.add("pcie", &format!("bucket{i}.pcie.bcast"),
+               start + half + phases.net_s, start + phases.total());
+    } else {
+        tl.add("net", &format!("bucket{i}.net"), start,
+               start + phases.total());
+    }
+}
+
 /// Simulate one iteration (Figures 2 and 5).
 pub fn simulate_iteration(m: &IterationModel) -> IterationResult {
     let c = m.micro_compute_s();
     let fwd = c / 3.0;
     let bwd = c - fwd;
     let k = m.accum_steps.max(1);
-    let comm_total = m.allreduce_s();
     let update = m.update_frac * c;
+    let stall = m.micro_input_stall_s();
 
     let mut tl = Timeline::default();
     let gpu = "gpu";
-    let net = "net";
 
-    // compute spans: k micro-batches back to back
+    // compute spans: k micro-batches back to back, each preceded by its
+    // exposed input stall (the data lane; empty when prefetch hides the
+    // batch build behind the previous micro's compute).
     let mut t = 0.0;
+    let mut input_stall_s = 0.0;
     for i in 0..k {
+        if stall > 0.0 {
+            tl.add("data", &format!("micro{i}.input_stall"), t, t + stall);
+            input_stall_s += stall;
+            t += stall;
+        }
         tl.add(gpu, &format!("fwd{i}"), t, t + fwd);
         tl.add(gpu, &format!("bwd{i}"), t + fwd, t + c);
         t += c;
     }
     let compute_end = t;
 
-    // communication: once per iteration (after accumulation), bucketed.
+    // communication: once per iteration (after accumulation), bucketed;
+    // each bucket priced and rendered per phase (gather/ring/broadcast
+    // on a hierarchical resolve, one network span on a flat one).
+    let nb = m.buckets.max(1);
+    let phases = m.bucket_phases();
+    let per_bucket = phases.total();
     let comm_end = if m.topo.world_size() <= 1 {
         compute_end
     } else if m.overlap {
         // Bucket i becomes ready at the point backward of the LAST micro
         // has produced it: ready_i = last_bwd_start + (i+1)/B * bwd.
         let last_bwd_start = compute_end - bwd;
-        let nb = m.buckets.max(1);
-        let per_bucket = comm_total / nb as f64;
         let mut net_free = 0.0f64;
         let mut end = compute_end;
         for i in 0..nb {
             let ready = last_bwd_start + (i + 1) as f64 / nb as f64 * bwd;
             let start = ready.max(net_free);
             end = start + per_bucket;
-            tl.add(net, &format!("allreduce_b{i}"), start, end);
+            add_bucket_spans(&mut tl, i, start, &phases);
             net_free = end;
         }
         end
     } else {
-        tl.add(net, "allreduce", compute_end, compute_end + comm_total);
-        compute_end + comm_total
+        let mut tcur = compute_end;
+        for i in 0..nb {
+            add_bucket_spans(&mut tl, i, tcur, &phases);
+            tcur += per_bucket;
+        }
+        tcur
     };
 
     let iter_end = comm_end.max(compute_end) + update;
@@ -152,6 +246,7 @@ pub fn simulate_iteration(m: &IterationModel) -> IterationResult {
         iteration_s: iter_end,
         compute_utilization: compute_busy / iter_end,
         exposed_comm_s: (iter_end - update - compute_end).max(0.0),
+        input_stall_s,
         tokens_per_sec_per_gpu: tokens / iter_end,
         cluster_tokens_per_sec: tokens * m.topo.world_size() as f64
             / iter_end,
@@ -223,6 +318,73 @@ mod tests {
         let fwd_total = r.timeline.busy("gpu", "fwd");
         let bwd_total = r.timeline.busy("gpu", "bwd");
         assert!((bwd_total / fwd_total - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hierarchical_spans_mirror_measured_trace_naming() {
+        // A hierarchical resolve must render every bucket as the
+        // executed gather -> leader ring -> broadcast, with the same
+        // span names `ExchangeTimings::to_timeline` exports, so the
+        // modeled and measured chrome traces line up in perfetto.
+        let m = IterationModel {
+            comm_mode: CommMode::Auto,
+            ..base("2M4G", 1, true)
+        };
+        assert!(m.is_hierarchical());
+        let r = simulate_iteration(&m);
+        let find = |name: &str| {
+            r.timeline.spans.iter().find(|s| s.name == name)
+                .unwrap_or_else(|| panic!("missing span {name}"))
+        };
+        let g = find("bucket0.pcie.gather");
+        let n = find("bucket0.net");
+        let bc = find("bucket0.pcie.bcast");
+        assert_eq!(g.track, "pcie");
+        assert_eq!(n.track, "net");
+        assert!(g.end <= n.start + 1e-12 && n.end <= bc.start + 1e-12,
+                "phase order wrong: {g:?} {n:?} {bc:?}");
+        // phase durations match the analytic pricing
+        let phases = m.bucket_phases();
+        assert!((r.timeline.busy("net", "bucket0")
+                 - phases.net_s).abs() < 1e-12);
+        assert!((r.timeline.busy("pcie", "bucket0")
+                 - phases.pcie_s).abs() < 1e-12);
+        // flat resolve on the same topology: single net span per bucket
+        let flat = simulate_iteration(&base("2M4G", 1, true));
+        assert!(flat.timeline.busy("pcie", "") == 0.0);
+        assert!(flat.timeline.busy("net", "bucket0") > 0.0);
+    }
+
+    #[test]
+    fn data_stall_lane_models_sync_vs_prefetched_input() {
+        let c = base("1M1G", 2, true).micro_compute_s();
+        // synchronous input: every micro pays the full build up front
+        let sync = IterationModel {
+            batch_build_s: 0.3 * c,
+            prefetch: false,
+            ..base("1M1G", 2, true)
+        };
+        let rs = simulate_iteration(&sync);
+        assert!((rs.input_stall_s - 0.6 * c).abs() < 1e-9);
+        assert!((rs.timeline.busy("data", "") - 0.6 * c).abs() < 1e-9);
+        // prefetched and build < compute: fully hidden, no data lane
+        let pf = IterationModel { prefetch: true, ..sync.clone() };
+        let rp = simulate_iteration(&pf);
+        assert_eq!(rp.input_stall_s, 0.0);
+        assert_eq!(rp.timeline.busy("data", ""), 0.0);
+        assert!(rp.iteration_s < rs.iteration_s);
+        // prefetched but data-bound (build > compute): only the
+        // overhang is exposed
+        let bound = IterationModel {
+            batch_build_s: 1.5 * c,
+            ..pf.clone()
+        };
+        let rb = simulate_iteration(&bound);
+        assert!((rb.input_stall_s - 2.0 * 0.5 * c).abs() < 1e-9);
+        // no modeled build (the default) leaves the iteration untouched
+        let r0 = simulate_iteration(&base("1M1G", 2, true));
+        assert_eq!(r0.input_stall_s, 0.0);
+        assert!((rp.iteration_s - r0.iteration_s).abs() < 1e-12);
     }
 
     #[test]

@@ -10,10 +10,22 @@
 //! normalization vector — is preallocated and reused.  Per optimizer
 //! step the loop is:
 //!
+//! 0. each rank's input batches are already waiting: one long-lived
+//!    producer thread per rank (`data::prefetch`, paper §4.1) builds
+//!    masked batches ahead of the compute workers over a bounded ring
+//!    of recycled [`Batch`] buffers (`train.prefetch_depth`, default 2 =
+//!    double buffering; 0 = build synchronously on the compute worker —
+//!    bitwise-identical, just exposed on the critical path).  The time a
+//!    compute worker does wait is reported as `input_stall_s` next to
+//!    the PCIe/network exchange spans;
 //! 1. the pool dispatches `accum_steps` micro-steps of the AOT train
 //!    step to every rank's compute worker **in parallel** (one shared
 //!    compiled executable, concurrent PJRT execute), each worker summing
-//!    gradients locally (paper §4.4 gradient accumulation);
+//!    gradients locally (paper §4.4 gradient accumulation).  Marshaling
+//!    rides the zero-copy path: the params literal is rebuilt once per
+//!    optimizer step (not per micro) through a per-rank
+//!    [`StepScratch`], and gradients are decoded straight into the
+//!    pool's preallocated per-rank buffer;
 //! 2. on the final micro-step each worker accumulates bucket-by-bucket
 //!    in backward order and enqueues every bucket's REAL exchange
 //!    **as soon as its accumulation completes**, overlapping exchange
@@ -38,6 +50,7 @@
 
 use std::path::Path;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -46,13 +59,14 @@ use crate::collectives::pool::{CollectivePool, MicroStats, RankCompute,
 pub use crate::collectives::pool::CommMode;
 use crate::collectives::CollectiveGroup;
 use crate::config::RunConfig;
-use crate::data::{MaskingConfig, ShardedDataset};
+use crate::data::prefetch::{BatchCursor, Prefetcher};
+use crate::data::{Batch, MaskingConfig, ShardedDataset};
 use crate::grad::{bucket_ranges, build_buckets, Bucket, BucketRange,
                   GradAccumulator};
 use crate::metrics::{ExchangeTimings, LossCurve, ThroughputMeter};
 use crate::optimizer::lr_schedule;
 use crate::precision::{has_nonfinite, DynamicLossScaler, StepVerdict};
-use crate::runtime::{ApplyStep, Engine, TrainStep};
+use crate::runtime::{ApplyStep, Engine, StepScratch, StepStats, TrainStep};
 use crate::util::{Pcg64, Stopwatch};
 
 /// Outcome of a training run.
@@ -81,6 +95,14 @@ pub struct TrainReport {
     /// behind gradient accumulation (Fig. 2's win; 0 when world == 1 or
     /// overlap is off).
     pub overlap_efficiency: f64,
+    /// Critical-path seconds compute workers spent blocked waiting on
+    /// input batches (summed over steps; a subset of `compute_s`).
+    pub input_stall_s: f64,
+    /// 1 - input_stall/compute: fraction of the compute workers'
+    /// critical-path time spent on real work rather than waiting for
+    /// data (paper §4.1's target).  Always in `[0, 1]`; 1.0 when the
+    /// prefetch ring keeps every worker fed.
+    pub data_efficiency: f64,
 }
 
 impl TrainReport {
@@ -89,10 +111,11 @@ impl TrainReport {
         format!(
             "steps={} skipped={} final_loss={:.4} tokens/s={:.1} \
              compute={:.1}s allreduce={:.1}s apply={:.1}s wall={:.1}s \
-             overlap_eff={:.0}%",
+             overlap_eff={:.0}% input_stall={:.2}s data_eff={:.0}%",
             self.steps, self.skipped_steps, self.loss.tail_mean(5),
             self.tokens_per_sec, self.compute_s, self.allreduce_s,
-            self.apply_s, self.wall_s, self.overlap_efficiency * 100.0
+            self.apply_s, self.wall_s, self.overlap_efficiency * 100.0,
+            self.input_stall_s, self.data_efficiency * 100.0
         )
     }
 }
@@ -115,6 +138,14 @@ pub struct Trainer {
     grad_scratch: Vec<f32>,
     pub scaler: DynamicLossScaler,
     pub step: usize,
+    /// Monotone data-consumption counter: one per attempted optimizer
+    /// step, *including* AMP-skipped steps (a skipped step consumed its
+    /// batches).  Drives the batch cursors — epoch orders advance when a
+    /// rank's batch index wraps its epoch length — and doubles as the
+    /// params-literal version for the marshaling scratch.  Unlike
+    /// `step`, it never stalls on overflow skips, so the data stream
+    /// keeps moving.
+    data_step: usize,
     mask_cfg: MaskingConfig,
 }
 
@@ -166,6 +197,7 @@ impl Trainer {
             grad_scratch: vec![0.0; n],
             params,
             step: 0,
+            data_step: 0,
             mask_cfg,
         })
     }
@@ -178,6 +210,10 @@ impl Trainer {
         self.m = ckpt.m;
         self.v = ckpt.v;
         self.step = ckpt.step as usize;
+        // Checkpoints predate the data counter; resume the stream at the
+        // applied-step count (skipped steps are not replayed — the only
+        // drift is the handful of overflow skips, same as before).
+        self.data_step = self.step;
         self.scaler = DynamicLossScaler::new(ckpt.loss_scale)
             .with_growth_interval(200);
         Ok(())
@@ -228,28 +264,48 @@ impl Trainer {
         let batch = self.train_step.batch;
         let seq = self.train_step.seq;
         let overlap = self.cfg.train.overlap;
+
+        // The whole step loop runs inside a thread scope so the
+        // prefetch producers can borrow `datasets` soundly: the scope
+        // cannot close (and this function cannot return) until every
+        // producer has been joined.
+        std::thread::scope(|scope| {
         let mut report = TrainReport::default();
         let mut meter = ThroughputMeter::new();
         let mut sw = Stopwatch::new();
         let wall = Stopwatch::new();
 
-        let orders: Vec<Vec<usize>> = datasets
-            .iter()
-            .map(|d| d.epoch_order(self.step / 100, self.cfg.train.seed))
-            .collect();
+        // ---- 0. input feed: per-rank prefetch producers over bounded
+        //         rings of recycled batch buffers, or the synchronous
+        //         fallback when `train.prefetch_depth` is 0.  Both paths
+        //         run the SAME BatchCursor stream from the same start
+        //         position, so they are bitwise-interchangeable. ----
+        let start_micro = self.data_step as u64 * k as u64;
+        let seed = self.cfg.train.seed;
+        let feed = match self.cfg.train.prefetch_depth {
+            0 => BatchFeed::Sync(
+                datasets
+                    .iter()
+                    .map(|d| {
+                        Mutex::new(SyncLane {
+                            cursor: BatchCursor::new(
+                                d, self.mask_cfg.clone(), seed, batch, seq,
+                                start_micro),
+                            buf: Batch::zeros(batch, seq),
+                        })
+                    })
+                    .collect(),
+            ),
+            depth => BatchFeed::Prefetch(Prefetcher::spawn(
+                scope, datasets, &self.mask_cfg, seed, batch, seq,
+                start_micro, depth)),
+        };
         let ctx = RankStepCtx {
             step: &self.train_step,
-            datasets,
-            orders: &orders,
-            mask_cfg: &self.mask_cfg,
-            mask_rngs: (0..self.world)
-                .map(|r| {
-                    Mutex::new(Pcg64::with_stream(self.cfg.train.seed,
-                                                  0xDA7A + r as u64))
-                })
+            feed,
+            scratches: (0..self.world)
+                .map(|_| Mutex::new(StepScratch::new()))
                 .collect(),
-            batch,
-            seq,
             k,
         };
 
@@ -258,12 +314,15 @@ impl Trainer {
             // ---- 1+2. parallel rank micro-steps + overlapped bucketed
             //           ring allreduce on the persistent pool ----
             let scale = self.scaler.scale() as f32;
-            let out = self.pool.step(&self.params, scale, k, self.step,
-                                     overlap, &ctx)?;
+            let out = self.pool.step(&self.params, scale, k,
+                                     self.data_step, overlap, &ctx)?;
+            self.data_step += 1;
             report.compute_s += out.compute_s + out.accum_s;
+            report.input_stall_s += out.input_stall_s;
             report.allreduce_s += out.comm_s;
             report.exchange.record(&out.bucket_s, &out.bucket_pcie_s,
                                    &out.bucket_net_s, out.exposed_comm_s);
+            report.exchange.record_input_stall(out.input_stall_s);
             meter.add((batch * seq * k * self.world) as u64);
             sw.lap("pool");
 
@@ -325,54 +384,108 @@ impl Trainer {
         report.total_tokens = meter.total_tokens();
         report.wall_s = wall.elapsed();
         report.overlap_efficiency = report.exchange.overlap_efficiency();
+        // The stall is timed inside the micro calls, so it is bounded by
+        // compute_s and the ratio is a true fraction (clamped against
+        // clock jitter).  No compute at all -> nothing stalled.
+        report.data_efficiency = if report.compute_s > 0.0 {
+            (1.0 - report.input_stall_s / report.compute_s).clamp(0.0, 1.0)
+        } else {
+            1.0
+        };
         Ok(report)
+        }) // thread scope: producers joined here at the latest
     }
 }
 
-/// The trainer's per-run [`RankCompute`]: builds rank `r`'s masked batch
-/// and executes the shared compiled train step.  Per-rank mutable state
-/// (the masking RNG) sits behind per-rank locks, each touched only by
-/// its own worker, so the locks are uncontended.
+/// One rank's synchronous input lane (`prefetch_depth = 0`): the batch
+/// cursor runs in-line on the compute worker, writing into one recycled
+/// buffer; the build time is the rank's exposed input stall.
+struct SyncLane<'a> {
+    cursor: BatchCursor<'a>,
+    buf: Batch,
+}
+
+/// How rank batches reach the compute workers.
+enum BatchFeed<'a> {
+    /// Per-rank producer threads over bounded rings of recycled buffers
+    /// (`train.prefetch_depth >= 1`) — batches are ready before the
+    /// worker asks.
+    Prefetch(Prefetcher<'a>),
+    /// Build each batch on the compute worker, synchronously.
+    Sync(Vec<Mutex<SyncLane<'a>>>),
+}
+
+/// The trainer's per-run [`RankCompute`]: feeds rank `r`'s next masked
+/// batch (prefetched or built in-line — bitwise-identical streams) into
+/// the shared compiled train step through the rank's recycled
+/// [`StepScratch`], decoding gradients straight into the pool's
+/// preallocated per-rank buffer.  Per-rank mutable state (cursor,
+/// scratch) sits behind per-rank locks, each touched only by its own
+/// worker, so the locks are uncontended.
 struct RankStepCtx<'a> {
     step: &'a TrainStep,
-    datasets: &'a [ShardedDataset],
-    orders: &'a [Vec<usize>],
-    mask_cfg: &'a MaskingConfig,
-    mask_rngs: Vec<Mutex<Pcg64>>,
-    batch: usize,
-    seq: usize,
+    feed: BatchFeed<'a>,
+    scratches: Vec<Mutex<StepScratch>>,
     k: usize,
+}
+
+impl RankStepCtx<'_> {
+    /// Run the compiled step on `b` through rank `r`'s marshaling
+    /// scratch; `step_index` (the trainer's monotone data counter)
+    /// versions the cached params literal.
+    fn exec(&self, rank: usize, step_index: usize, params: &[f32],
+            scale: f32, b: &Batch, grads_out: &mut [f32])
+            -> Result<StepStats> {
+        let mut scratch =
+            self.scratches[rank].lock().expect("step scratch poisoned");
+        self.step.run_scratch(&mut scratch, params, step_index as u64, b,
+                              scale, grads_out)
+    }
 }
 
 impl RankCompute for RankStepCtx<'_> {
     fn micro(&self, rank: usize, step_index: usize, micro: usize,
              params: &[f32], scale: f32, grads_out: &mut Vec<f32>)
              -> Result<MicroStats> {
-        let d = &self.datasets[rank];
-        // Wrap the batch index on the rank's epoch length so long runs
-        // keep cycling the epoch order instead of walking off it (the
-        // old `% usize::MAX` wrap was a no-op and `idx * batch` could
-        // overflow).  Ceiling division so the tail examples that don't
-        // fill a whole batch are still visited (`ShardedDataset::batch`
-        // wraps the overhang back to the head of the order).
-        let bpe = (d.len() + self.batch - 1) / self.batch.max(1);
-        let idx = (step_index * self.k + micro) % bpe.max(1);
-        let b = {
-            let mut rng =
-                self.mask_rngs[rank].lock().expect("mask rng poisoned");
-            d.batch(&self.orders[rank], idx, self.batch, self.seq,
-                    self.mask_cfg, &mut rng)
+        // The pool's per-rank gradient scratch: sized on first use, then
+        // decoded into in place forever (no per-micro Vec).
+        if grads_out.len() != self.step.n_params {
+            grads_out.resize(self.step.n_params, 0.0);
+        }
+        let (out, stall_s) = match &self.feed {
+            BatchFeed::Prefetch(p) => {
+                let (b, stall_s) = p.pop(rank)?;
+                let out = self.exec(rank, step_index, params, scale, &b,
+                                    grads_out)?;
+                p.recycle(rank, b);
+                (out, stall_s)
+            }
+            BatchFeed::Sync(lanes) => {
+                let mut lane =
+                    lanes[rank].lock().expect("sync input lane poisoned");
+                debug_assert_eq!(
+                    lane.cursor.position(),
+                    step_index as u64 * self.k as u64 + micro as u64,
+                    "rank {rank} input stream out of step"
+                );
+                let t0 = Instant::now();
+                let SyncLane { cursor, buf } = &mut *lane;
+                cursor.fill_next(buf);
+                let stall_s = t0.elapsed().as_secs_f64();
+                let out = self.exec(rank, step_index, params, scale, buf,
+                                    grads_out)?;
+                (out, stall_s)
+            }
         };
-        let out = self.step.run(params, &b, scale)?;
         let nonfinite =
             !out.grad_norm.is_finite() || !out.loss.is_finite();
-        *grads_out = out.grads;
         Ok(MicroStats {
             loss: out.loss as f64,
             mlm_loss: out.mlm_loss as f64,
             nsp_loss: out.nsp_loss as f64,
             mlm_acc: out.mlm_acc as f64,
             nonfinite,
+            input_stall_s: stall_s,
         })
     }
 }

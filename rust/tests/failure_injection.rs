@@ -141,17 +141,22 @@ fn dataset_open_with_more_ranks_than_shards_fails_clearly() {
     let dir = std::env::temp_dir().join("bertdist_fi_ranks");
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).unwrap();
-    // one shard, two ranks -> rank 1 has nothing
+    // One shard, two ranks: the shard set cannot cover the world, so
+    // EVERY rank must fail the same way up front (ISSUE 3: the old code
+    // let rank 0 open an oversized view and only starved rank 1).
     let path = dir.join(shard_file_name("train", 0, 1));
     let mut w = ShardWriter::create(&path).unwrap();
     w.append(&bertdist::data::PairExample {
         tokens_a: vec![10], tokens_b: vec![11], is_next: true,
     }.to_bytes()).unwrap();
     w.finish().unwrap();
-    assert!(ShardedDataset::open(&dir, "train", 0, 2).is_ok());
-    let err = ShardedDataset::open(&dir, "train", 1, 2).map(|_| ())
-        .unwrap_err();
-    assert!(err.to_string().contains("no shards"));
+    for rank in 0..2 {
+        let err = ShardedDataset::open(&dir, "train", rank, 2).map(|_| ())
+            .unwrap_err();
+        assert!(err.to_string().contains("world 2"), "rank {rank}: {err}");
+    }
+    // a world the shard set does cover still opens fine
+    assert!(ShardedDataset::open(&dir, "train", 0, 1).is_ok());
     let _ = std::fs::remove_dir_all(&dir);
 }
 

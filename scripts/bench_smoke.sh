@@ -3,23 +3,28 @@
 # `perf_hotpath` bench in quick mode (small payloads, few iterations)
 # and emits machine-readable rows to BENCH_hotpath.json plus a
 # BENCH_hierarchical.json section (flat vs hierarchical pooled step time
-# at a fixed synthetic 2M2G world) so future PRs can diff both the
-# hot-path timings and the comm-mode trajectory.
+# at a fixed synthetic 2M2G world) and a BENCH_input_pipeline.json
+# section (tokens/s, input_stall_s, data_efficiency for the synchronous
+# vs prefetched input path on a masking-heavy workload) so future PRs
+# can diff the hot-path, comm-mode, and input-pipeline trajectories.
 #
-# Usage: scripts/bench_smoke.sh [output.json] [hier_output.json]
+# Usage: scripts/bench_smoke.sh [output.json] [hier_output.json] \
+#                               [input_output.json]
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
 OUT="${1:-BENCH_hotpath.json}"
 HIER_OUT="${2:-BENCH_hierarchical.json}"
+INPUT_OUT="${3:-BENCH_input_pipeline.json}"
 export BENCH_QUICK=1
 export BENCH_JSON_OUT="$OUT"
 export BENCH_HIER_JSON_OUT="$HIER_OUT"
+export BENCH_INPUT_JSON_OUT="$INPUT_OUT"
 
 cargo bench --bench perf_hotpath
 
-for f in "$OUT" "$HIER_OUT"; do
+for f in "$OUT" "$HIER_OUT" "$INPUT_OUT"; do
     if [[ -f "$f" ]]; then
         echo "bench rows -> $f"
     else
