@@ -440,6 +440,93 @@ fn main() -> anyhow::Result<()> {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    // ---- checkpoint save: sync on-loop write vs async snapshot
+    //      (ISSUE 4: periodic saving must be off the hot loop) ----
+    {
+        use bertdist::checkpoint::{v2_file_len, AsyncCheckpointWriter,
+                                   Checkpoint};
+        let n = if quick { 1 << 20 } else { 1 << 23 };
+        let dir = std::env::temp_dir().join("bertdist_bench_ckpt");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir)?;
+        let mut state = Checkpoint::new(n);
+        for (i, x) in state.params.iter_mut().enumerate() {
+            *x = i as f32 * 1e-6;
+        }
+        let file_bytes = v2_file_len(n) as f64;
+        let iters = if quick { 3 } else { 8 };
+
+        // synchronous save: the whole atomic temp+rename on the caller
+        let sync_path = dir.join("sync.bckp");
+        let (sync_min, sync_mean, _) = bench_times(iters, || {
+            state.save(&sync_path).unwrap();
+        });
+        rows.push(
+            &format!("ckpt sync save ({:.0} MiB)",
+                     file_bytes / (1 << 20) as f64),
+            sync_min,
+            format!("{:.0} MiB/s", file_bytes / sync_min
+                        / (1 << 20) as f64),
+        );
+
+        // async path: the hot loop only pays the recycled-buffer
+        // snapshot; the write + rotation run on the writer thread
+        let mut w = AsyncCheckpointWriter::new(&dir.join("rot"), 2)?;
+        let mut step = 0u64;
+        let (async_min, async_mean, _) = bench_times(iters, || {
+            step += 1;
+            w.save(|c| {
+                c.step = step;
+                c.data_step = step;
+                c.fill_arrays(&state.params, &state.m, &state.v);
+            })
+            .unwrap();
+        });
+        let stats = w.finish()?;
+        rows.push(
+            "ckpt async snapshot (hot-loop cost)",
+            async_min,
+            format!("{:.0} MiB/s off-loop", stats.bytes_per_sec()
+                        / (1 << 20) as f64),
+        );
+        println!(
+            "checkpoint: sync save mean {:.2} ms vs async hot-loop mean \
+             {:.2} ms ({:.1}x less exposed); writer did {} files, {:.0} \
+             MiB/s",
+            sync_mean * 1e3, async_mean * 1e3,
+            sync_mean / async_mean.max(1e-9),
+            stats.writes,
+            stats.bytes_per_sec() / (1 << 20) as f64
+        );
+
+        if quick || std::env::var("BENCH_JSON_OUT").is_ok() {
+            let path = std::env::var("BENCH_CKPT_JSON_OUT")
+                .unwrap_or_else(|_| "BENCH_checkpoint.json".to_string());
+            let mut mk = |mode: &str, ms: f64, bps: f64| {
+                let mut m = BTreeMap::new();
+                m.insert("mode".to_string(), Json::Str(mode.to_string()));
+                m.insert("min_ms".to_string(), Json::Num(ms));
+                m.insert("bytes_per_s".to_string(), Json::Num(bps));
+                Json::Obj(m)
+            };
+            let entries = vec![
+                mk("sync_save", sync_min * 1e3, file_bytes / sync_min),
+                mk("async_hot_loop_snapshot", async_min * 1e3,
+                   stats.bytes_per_sec()),
+            ];
+            let mut root = BTreeMap::new();
+            root.insert("bench".to_string(),
+                        Json::Str("checkpoint".to_string()));
+            root.insert("file_bytes".to_string(), Json::Num(file_bytes));
+            root.insert("exposed_speedup".to_string(),
+                        Json::Num(sync_mean / async_mean.max(1e-9)));
+            root.insert("rows".to_string(), Json::Arr(entries));
+            std::fs::write(&path, Json::Obj(root).to_string())?;
+            println!("wrote {path}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     // ---- bucket planning on bert-large ----
     let layout = BertConfig::preset("bert-large").unwrap().param_layout();
     let (min, _, _) = bench_times(if quick { 5 } else { 20 }, || {

@@ -1,23 +1,318 @@
-//! Checkpointing: save/restore (params, optimizer moments, step, scaler)
-//! to a single binary file with CRC integrity.  Own format — no serde
-//! offline (DESIGN.md §10).
+//! Checkpointing: exact-state save/restore for the trainer, to a single
+//! binary file with CRC integrity.  Own format — no serde offline
+//! (DESIGN.md §10).
 //!
-//! Layout: `BCKP | version u32 | step u64 | scale f64 | n u64 |
-//! params f32*n | m f32*n | v f32*n | crc32 u32`.
+//! ## v2 format (this version) — the exact-resume contract
+//!
+//! A v2 checkpoint captures the FULL training stream position, so a
+//! resumed run is bitwise-indistinguishable from one that never
+//! stopped:
+//!
+//! * `step` — optimizer steps actually applied;
+//! * `data_step` — the monotone data-consumption counter, which keeps
+//!   moving across AMP-skipped steps (a skipped step consumed its
+//!   batches but applied nothing).  v1 checkpoints lacked this and
+//!   resumed with the `data_step = step` guess, silently replaying the
+//!   wrong batches after any overflow skip;
+//! * the dynamic loss scaler's complete state ([`ScalerState`]): scale,
+//!   growth/backoff factors and bounds, the growth-streak counter, and
+//!   the reporting counters — so the post-resume scale schedule is
+//!   identical, not merely "the same scale right now";
+//! * a config [`Fingerprint`] (topology, comm mode, wire format,
+//!   bucket layout, accumulation, prefetch depth, per-rank batch
+//!   geometry, seed, optimizer kind, artifact variant, lr, warmup,
+//!   masking config) that is validated on restore: a mismatched resume
+//!   fails loudly instead of diverging silently.
+//!
+//! Byte layout (all little-endian; see [`v2_sections`]):
+//!
+//! ```text
+//! BCKP | version u32 = 2 | step u64 | data_step u64 |
+//! scaler  (5 f64 + 6 u64 = 88 B) |
+//! fingerprint (10 u32 + 4 u64 + 2 f64 + 2 u64 = 104 B, first u32 is a
+//! present flag) |
+//! n u64 | params f32*n | m f32*n | v f32*n | crc32 u32
+//! ```
+//!
+//! v1 files (`version = 1`: `step, scale, n, params, m, v`) still load;
+//! they fall back to `data_step = step` and a fresh scaler at the saved
+//! scale, and `load` logs a one-line warning that the data position is
+//! inexact.
+//!
+//! Writes are always atomic (temp + rename), so a crash mid-save leaves
+//! the previous checkpoint intact plus at most a stale `.tmp` that the
+//! rotation layer ([`writer`]) cleans up.  Periodic hot-loop saving goes
+//! through [`AsyncCheckpointWriter`]: the trainer memcpys its state into
+//! a recycled snapshot buffer and a background thread does the write and
+//! the keep-last-K rotation off the hot loop.
+
+pub mod writer;
+
+pub use writer::{checkpoint_file_name, latest_checkpoint, list_checkpoints,
+                 prune_checkpoints, AsyncCheckpointWriter, SaveStats};
 
 use std::io::{Read, Write};
+use std::ops::Range;
 use std::path::Path;
 
+use crate::collectives::pool::CommMode;
+use crate::config::RunConfig;
+use crate::precision::ScalerState;
 use crate::util::crc32::Crc32;
 
 const MAGIC: &[u8; 4] = b"BCKP";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-/// Everything needed to resume training.
+/// v1 fixed-header bytes (magic, version, step, scale, n) + trailing crc.
+const V1_MIN_LEN: usize = 4 + 4 + 8 + 8 + 8 + 4;
+/// v2 fixed-header bytes (everything before the params array) — see
+/// [`v2_sections`] for the breakdown.
+const V2_HEADER: usize = 224;
+/// Smallest possible v2 file (`n = 0`).
+const V2_MIN_LEN: usize = V2_HEADER + 4;
+
+/// Total v2 file size for `n` parameters.
+pub fn v2_file_len(n: usize) -> usize {
+    V2_HEADER + 12 * n + 4
+}
+
+/// Named byte sections of the v2 layout, in file order — the corruption
+/// test matrix truncates and bit-flips at exactly these boundaries.
+pub fn v2_sections(n: usize) -> Vec<(&'static str, Range<usize>)> {
+    let p = V2_HEADER;
+    vec![
+        ("magic", 0..4),
+        ("version", 4..8),
+        ("step", 8..16),
+        ("data_step", 16..24),
+        ("scaler", 24..112),
+        ("fingerprint", 112..216),
+        ("n", 216..224),
+        ("params", p..p + 4 * n),
+        ("m", p + 4 * n..p + 8 * n),
+        ("v", p + 8 * n..p + 12 * n),
+        ("crc", p + 12 * n..p + 12 * n + 4),
+    ]
+}
+
+/// The run-configuration identity a checkpoint was produced under.
+/// Restore validates it against the resuming run and refuses to
+/// continue on any mismatch — every field here changes the training
+/// stream (data order, exchange schedule, or step semantics), so a
+/// silent mismatch means silent divergence.
+///
+/// Known limitation: the CORPUS identity (shard dir/contents) is not
+/// fingerprinted — the gate runs before any data is opened, and shard
+/// CRCs protect integrity, not identity.  Resuming the same config
+/// over a different corpus is therefore not detected; a shard-manifest
+/// hash is the planned fix (see ROADMAP follow-ups).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fingerprint {
+    pub machines: u32,
+    pub gpus_per_machine: u32,
+    /// [`CommMode`] as configured (not as resolved): 0 flat,
+    /// 1 hierarchical, 2 auto.
+    pub comm_mode: u32,
+    pub grad_wire_f16: bool,
+    /// Per-rank micro-batch size.
+    pub micro_batch: u32,
+    pub seq_len: u32,
+    /// Optimizer kind: 0 lamb, 1 adam (a swapped optimizer would
+    /// silently reinterpret the m/v moment buffers).
+    pub optimizer: u32,
+    /// Compiled-artifact variant: 0 unfused_f32, 1 fused_f32, 2 bf16,
+    /// 3 fused_bf16 (different kernels = different numerics).
+    pub variant: u32,
+    pub bucket_elems: u64,
+    pub accum_steps: u64,
+    pub prefetch_depth: u64,
+    pub seed: u64,
+    pub lr: f64,
+    pub warmup_steps: u64,
+    /// MLM mask probability — changes every batch's masked positions.
+    pub mask_prob: f64,
+    /// Max MLM predictions per sequence (paper Table 6: 20 @128,
+    /// 80 @512 — this also disambiguates phase-1 vs phase-2 snapshots).
+    pub max_predictions: u64,
+}
+
+fn comm_mode_code(m: CommMode) -> u32 {
+    match m {
+        CommMode::Flat => 0,
+        CommMode::Hierarchical => 1,
+        CommMode::Auto => 2,
+    }
+}
+
+fn comm_mode_name(code: u32) -> &'static str {
+    match code {
+        0 => "flat",
+        1 => "hierarchical",
+        2 => "auto",
+        _ => "unknown",
+    }
+}
+
+fn optimizer_code(name: &str) -> u32 {
+    match name {
+        "lamb" => 0,
+        "adam" => 1,
+        _ => u32::MAX,
+    }
+}
+
+fn optimizer_name(code: u32) -> &'static str {
+    match code {
+        0 => "lamb",
+        1 => "adam",
+        _ => "unknown",
+    }
+}
+
+fn variant_code(name: &str) -> u32 {
+    match name {
+        "unfused_f32" => 0,
+        "fused_f32" => 1,
+        "bf16" => 2,
+        "fused_bf16" => 3,
+        _ => u32::MAX,
+    }
+}
+
+fn variant_name(code: u32) -> &'static str {
+    match code {
+        0 => "unfused_f32",
+        1 => "fused_f32",
+        2 => "bf16",
+        3 => "fused_bf16",
+        _ => "unknown",
+    }
+}
+
+impl Fingerprint {
+    /// The fingerprint of a run: config + the trainer's per-rank batch
+    /// geometry (which is a constructor argument, not a config field).
+    pub fn of(cfg: &RunConfig, micro_batch: usize, seq_len: usize)
+        -> Fingerprint {
+        Fingerprint {
+            machines: cfg.cluster.topo.machines as u32,
+            gpus_per_machine: cfg.cluster.topo.gpus_per_machine as u32,
+            comm_mode: comm_mode_code(cfg.train.comm_mode),
+            grad_wire_f16: cfg.train.grad_wire_f16,
+            micro_batch: micro_batch as u32,
+            seq_len: seq_len as u32,
+            optimizer: optimizer_code(&cfg.train.optimizer),
+            variant: variant_code(&cfg.train.variant),
+            bucket_elems: cfg.train.bucket_elems as u64,
+            accum_steps: cfg.train.accum_steps as u64,
+            prefetch_depth: cfg.train.prefetch_depth as u64,
+            seed: cfg.train.seed,
+            lr: cfg.train.lr,
+            warmup_steps: cfg.train.warmup_steps as u64,
+            mask_prob: cfg.data.mask_prob,
+            max_predictions: cfg.data.max_predictions as u64,
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        (self.machines * self.gpus_per_machine) as usize
+    }
+
+    /// Human-readable list of differing fields (`checkpoint X, run Y`),
+    /// empty when the fingerprints agree.
+    pub fn mismatches(&self, run: &Fingerprint) -> Vec<String> {
+        let mut out = Vec::new();
+        if (self.machines, self.gpus_per_machine)
+            != (run.machines, run.gpus_per_machine) {
+            out.push(format!(
+                "topology: checkpoint {}M{}G, run {}M{}G",
+                self.machines, self.gpus_per_machine,
+                run.machines, run.gpus_per_machine
+            ));
+        }
+        if self.comm_mode != run.comm_mode {
+            out.push(format!(
+                "comm_mode: checkpoint {}, run {}",
+                comm_mode_name(self.comm_mode),
+                comm_mode_name(run.comm_mode)
+            ));
+        }
+        if self.grad_wire_f16 != run.grad_wire_f16 {
+            out.push(format!(
+                "grad_wire_f16: checkpoint {}, run {}",
+                self.grad_wire_f16, run.grad_wire_f16
+            ));
+        }
+        if self.micro_batch != run.micro_batch {
+            out.push(format!(
+                "micro_batch: checkpoint {}, run {}",
+                self.micro_batch, run.micro_batch
+            ));
+        }
+        if self.seq_len != run.seq_len {
+            out.push(format!("seq_len: checkpoint {}, run {}",
+                             self.seq_len, run.seq_len));
+        }
+        if self.bucket_elems != run.bucket_elems {
+            out.push(format!("bucket_elems: checkpoint {}, run {}",
+                             self.bucket_elems, run.bucket_elems));
+        }
+        if self.accum_steps != run.accum_steps {
+            out.push(format!("accum_steps: checkpoint {}, run {}",
+                             self.accum_steps, run.accum_steps));
+        }
+        if self.prefetch_depth != run.prefetch_depth {
+            out.push(format!("prefetch_depth: checkpoint {}, run {}",
+                             self.prefetch_depth, run.prefetch_depth));
+        }
+        if self.seed != run.seed {
+            out.push(format!("seed: checkpoint {}, run {}",
+                             self.seed, run.seed));
+        }
+        if self.optimizer != run.optimizer {
+            out.push(format!("optimizer: checkpoint {}, run {}",
+                             optimizer_name(self.optimizer),
+                             optimizer_name(run.optimizer)));
+        }
+        if self.variant != run.variant {
+            out.push(format!("variant: checkpoint {}, run {}",
+                             variant_name(self.variant),
+                             variant_name(run.variant)));
+        }
+        if self.lr != run.lr {
+            out.push(format!("lr: checkpoint {}, run {}", self.lr, run.lr));
+        }
+        if self.warmup_steps != run.warmup_steps {
+            out.push(format!("warmup_steps: checkpoint {}, run {}",
+                             self.warmup_steps, run.warmup_steps));
+        }
+        if self.mask_prob != run.mask_prob {
+            out.push(format!("mask_prob: checkpoint {}, run {}",
+                             self.mask_prob, run.mask_prob));
+        }
+        if self.max_predictions != run.max_predictions {
+            out.push(format!("max_predictions: checkpoint {}, run {}",
+                             self.max_predictions, run.max_predictions));
+        }
+        out
+    }
+}
+
+/// Everything needed to resume training exactly.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
+    /// Optimizer steps applied.
     pub step: u64,
-    pub loss_scale: f64,
+    /// Monotone data-consumption counter (includes AMP-skipped steps).
+    pub data_step: u64,
+    /// Complete dynamic-loss-scaler state.
+    pub scaler: ScalerState,
+    /// Config identity; `None` for v1 files and bare snapshots.
+    pub fingerprint: Option<Fingerprint>,
+    /// `false` when loaded from a v1 file: `data_step` is the legacy
+    /// `step` fallback, so the resumed stream does not replay batches
+    /// consumed by skipped steps.
+    pub exact_data_position: bool,
     pub params: Vec<f32>,
     pub m: Vec<f32>,
     pub v: Vec<f32>,
@@ -35,20 +330,74 @@ pub enum CkptError {
     Corrupt,
     #[error("state size mismatch")]
     SizeMismatch,
+    #[error("config fingerprint mismatch — refusing inexact resume: {0}")]
+    FingerprintMismatch(String),
+    #[error("checkpoint writer: {0}")]
+    Writer(String),
+}
+
+fn get_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(b[off..off + 4].try_into().unwrap())
+}
+
+fn get_u64(b: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(b[off..off + 8].try_into().unwrap())
+}
+
+fn get_f64(b: &[u8], off: usize) -> f64 {
+    f64::from_le_bytes(b[off..off + 8].try_into().unwrap())
 }
 
 impl Checkpoint {
     pub fn new(n: usize) -> Self {
         Self {
             step: 0,
-            loss_scale: 65536.0,
+            data_step: 0,
+            scaler: ScalerState::default(),
+            fingerprint: None,
+            exact_data_position: true,
             params: vec![0.0; n],
             m: vec![0.0; n],
             v: vec![0.0; n],
         }
     }
 
-    /// Save atomically (write temp + rename).
+    /// Current loss scale (convenience over `scaler.scale`).
+    pub fn loss_scale(&self) -> f64 {
+        self.scaler.scale
+    }
+
+    /// Copy a state triple into this (recycled) snapshot buffer —
+    /// resize-then-memcpy, so steady-state saves allocate nothing.
+    pub fn fill_arrays(&mut self, params: &[f32], m: &[f32], v: &[f32]) {
+        for (dst, src) in [(&mut self.params, params), (&mut self.m, m),
+                           (&mut self.v, v)] {
+            dst.resize(src.len(), 0.0);
+            dst.copy_from_slice(src);
+        }
+    }
+
+    /// Hard gate for resume: error (listing every differing field) when
+    /// this checkpoint carries a fingerprint that does not match the
+    /// resuming run's.  Fingerprint-less checkpoints (v1, bare
+    /// snapshots) pass — the caller decides how loudly to warn.
+    pub fn ensure_fingerprint(&self, run: &Fingerprint)
+        -> Result<(), CkptError> {
+        match &self.fingerprint {
+            None => Ok(()),
+            Some(saved) => {
+                let diffs = saved.mismatches(run);
+                if diffs.is_empty() {
+                    Ok(())
+                } else {
+                    Err(CkptError::FingerprintMismatch(diffs.join("; ")))
+                }
+            }
+        }
+    }
+
+    /// Save atomically (write temp + rename): a crash mid-save never
+    /// damages an existing checkpoint at `path`.
     pub fn save(&self, path: &Path) -> Result<(), CkptError> {
         if self.m.len() != self.params.len()
             || self.v.len() != self.params.len() {
@@ -66,7 +415,53 @@ impl Checkpoint {
             w(&mut f, &mut crc, MAGIC)?;
             w(&mut f, &mut crc, &VERSION.to_le_bytes())?;
             w(&mut f, &mut crc, &self.step.to_le_bytes())?;
-            w(&mut f, &mut crc, &self.loss_scale.to_le_bytes())?;
+            w(&mut f, &mut crc, &self.data_step.to_le_bytes())?;
+            // scaler section (5 f64 + 6 u64)
+            let s = &self.scaler;
+            for x in [s.scale, s.growth_factor, s.backoff_factor,
+                      s.max_scale, s.min_scale] {
+                w(&mut f, &mut crc, &x.to_le_bytes())?;
+            }
+            for x in [s.growth_interval, s.good_steps, s.total_steps,
+                      s.skipped_steps, s.growths, s.backoffs] {
+                w(&mut f, &mut crc, &x.to_le_bytes())?;
+            }
+            // fingerprint section (10 u32, 4 u64, lr f64, warmup u64,
+            // mask_prob f64, max_predictions u64; first u32 is a
+            // present flag, last u32 of the block is reserved padding)
+            let fp = self.fingerprint;
+            let d = Fingerprint {
+                machines: 0,
+                gpus_per_machine: 0,
+                comm_mode: 0,
+                grad_wire_f16: false,
+                micro_batch: 0,
+                seq_len: 0,
+                optimizer: 0,
+                variant: 0,
+                bucket_elems: 0,
+                accum_steps: 0,
+                prefetch_depth: 0,
+                seed: 0,
+                lr: 0.0,
+                warmup_steps: 0,
+                mask_prob: 0.0,
+                max_predictions: 0,
+            };
+            let p = fp.unwrap_or(d);
+            for x in [fp.is_some() as u32, p.machines, p.gpus_per_machine,
+                      p.comm_mode, p.grad_wire_f16 as u32, p.micro_batch,
+                      p.seq_len, p.optimizer, p.variant, 0u32] {
+                w(&mut f, &mut crc, &x.to_le_bytes())?;
+            }
+            for x in [p.bucket_elems, p.accum_steps, p.prefetch_depth,
+                      p.seed] {
+                w(&mut f, &mut crc, &x.to_le_bytes())?;
+            }
+            w(&mut f, &mut crc, &p.lr.to_le_bytes())?;
+            w(&mut f, &mut crc, &p.warmup_steps.to_le_bytes())?;
+            w(&mut f, &mut crc, &p.mask_prob.to_le_bytes())?;
+            w(&mut f, &mut crc, &p.max_predictions.to_le_bytes())?;
             w(&mut f, &mut crc, &(self.params.len() as u64).to_le_bytes())?;
             for arr in [&self.params, &self.m, &self.v] {
                 let bytes = unsafe {
@@ -77,17 +472,25 @@ impl Checkpoint {
             }
             f.write_all(&crc.finalize().to_le_bytes())?;
             f.flush()?;
+            // flush to stable storage BEFORE the rename makes the file
+            // visible: after a power loss the newest checkpoint must be
+            // either absent or fully intact, never renamed-but-hollow
+            f.get_ref().sync_all()?;
         }
         std::fs::rename(&tmp, path)?;
         Ok(())
     }
 
-    /// Load and verify.
+    /// Load and verify.  Never panics and never returns partial state:
+    /// magic and CRC are checked before any field is parsed, and every
+    /// length is validated with overflow-checked arithmetic, so a
+    /// truncated or bit-flipped file surfaces as [`CkptError::BadMagic`]
+    /// / [`CkptError::Corrupt`] / [`CkptError::SizeMismatch`].
     pub fn load(path: &Path) -> Result<Checkpoint, CkptError> {
         let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
         let mut bytes = Vec::new();
         f.read_to_end(&mut bytes)?;
-        if bytes.len() < 4 + 4 + 8 + 8 + 8 + 4 {
+        if bytes.len() < 12 {
             return Err(CkptError::BadMagic);
         }
         if &bytes[0..4] != MAGIC {
@@ -99,58 +502,247 @@ impl Checkpoint {
         if crate::util::crc32(body) != want_crc {
             return Err(CkptError::Corrupt);
         }
-        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
-        if version != VERSION {
-            return Err(CkptError::BadVersion(version));
+        match get_u32(&bytes, 4) {
+            1 => Self::load_v1(&bytes, path),
+            2 => Self::load_v2(&bytes),
+            v => Err(CkptError::BadVersion(v)),
         }
-        let step = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
-        let loss_scale =
-            f64::from_le_bytes(bytes[16..24].try_into().unwrap());
-        let n = u64::from_le_bytes(bytes[24..32].try_into().unwrap()) as usize;
-        let expect = 32 + 3 * n * 4 + 4;
-        if bytes.len() != expect {
+    }
+
+    /// Legacy v1 layout: `step u64 | scale f64 | n u64 | arrays | crc`.
+    fn load_v1(bytes: &[u8], path: &Path) -> Result<Checkpoint, CkptError> {
+        if bytes.len() < V1_MIN_LEN {
             return Err(CkptError::SizeMismatch);
         }
-        let read_arr = |off: usize| -> Vec<f32> {
-            bytes[off..off + n * 4]
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                .collect()
-        };
+        let step = get_u64(bytes, 8);
+        let loss_scale = get_f64(bytes, 16);
+        let n = get_u64(bytes, 24);
+        let expect = n
+            .checked_mul(12)
+            .and_then(|b| b.checked_add(V1_MIN_LEN as u64))
+            .ok_or(CkptError::SizeMismatch)?;
+        if bytes.len() as u64 != expect {
+            return Err(CkptError::SizeMismatch);
+        }
+        let n = n as usize;
+        log::warn!(
+            "v1 checkpoint {}: inexact data position — resume falls back \
+             to data_step = step (batches consumed by AMP-skipped steps \
+             are not replayed)",
+            path.display()
+        );
         Ok(Checkpoint {
             step,
-            loss_scale,
-            params: read_arr(32),
-            m: read_arr(32 + n * 4),
-            v: read_arr(32 + 2 * n * 4),
+            data_step: step,
+            scaler: ScalerState::legacy(loss_scale),
+            fingerprint: None,
+            exact_data_position: false,
+            params: read_arr(bytes, 32, n),
+            m: read_arr(bytes, 32 + n * 4, n),
+            v: read_arr(bytes, 32 + 2 * n * 4, n),
         })
     }
+
+    fn load_v2(bytes: &[u8]) -> Result<Checkpoint, CkptError> {
+        if bytes.len() < V2_MIN_LEN {
+            return Err(CkptError::SizeMismatch);
+        }
+        let n = get_u64(bytes, 216);
+        let expect = n
+            .checked_mul(12)
+            .and_then(|b| b.checked_add(V2_MIN_LEN as u64))
+            .ok_or(CkptError::SizeMismatch)?;
+        if bytes.len() as u64 != expect {
+            return Err(CkptError::SizeMismatch);
+        }
+        let n = n as usize;
+        let scaler = ScalerState {
+            scale: get_f64(bytes, 24),
+            growth_factor: get_f64(bytes, 32),
+            backoff_factor: get_f64(bytes, 40),
+            max_scale: get_f64(bytes, 48),
+            min_scale: get_f64(bytes, 56),
+            growth_interval: get_u64(bytes, 64),
+            good_steps: get_u64(bytes, 72),
+            total_steps: get_u64(bytes, 80),
+            skipped_steps: get_u64(bytes, 88),
+            growths: get_u64(bytes, 96),
+            backoffs: get_u64(bytes, 104),
+        };
+        let fingerprint = if get_u32(bytes, 112) != 0 {
+            Some(Fingerprint {
+                machines: get_u32(bytes, 116),
+                gpus_per_machine: get_u32(bytes, 120),
+                comm_mode: get_u32(bytes, 124),
+                grad_wire_f16: get_u32(bytes, 128) != 0,
+                micro_batch: get_u32(bytes, 132),
+                seq_len: get_u32(bytes, 136),
+                optimizer: get_u32(bytes, 140),
+                variant: get_u32(bytes, 144),
+                bucket_elems: get_u64(bytes, 152),
+                accum_steps: get_u64(bytes, 160),
+                prefetch_depth: get_u64(bytes, 168),
+                seed: get_u64(bytes, 176),
+                lr: get_f64(bytes, 184),
+                warmup_steps: get_u64(bytes, 192),
+                mask_prob: get_f64(bytes, 200),
+                max_predictions: get_u64(bytes, 208),
+            })
+        } else {
+            None
+        };
+        let p = V2_HEADER;
+        Ok(Checkpoint {
+            step: get_u64(bytes, 8),
+            data_step: get_u64(bytes, 16),
+            scaler,
+            fingerprint,
+            exact_data_position: true,
+            params: read_arr(bytes, p, n),
+            m: read_arr(bytes, p + n * 4, n),
+            v: read_arr(bytes, p + 2 * n * 4, n),
+        })
+    }
+}
+
+fn read_arr(bytes: &[u8], off: usize, n: usize) -> Vec<f32> {
+    bytes[off..off + n * 4]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testkit;
+    use crate::util::Pcg64;
 
-    #[test]
-    fn roundtrip() {
-        let mut c = Checkpoint::new(100);
+    fn fp(seed: u64) -> Fingerprint {
+        Fingerprint {
+            machines: 2,
+            gpus_per_machine: 4,
+            comm_mode: 1,
+            grad_wire_f16: true,
+            micro_batch: 8,
+            seq_len: 128,
+            optimizer: 0,
+            bucket_elems: 1 << 20,
+            accum_steps: 4,
+            prefetch_depth: 2,
+            seed,
+            lr: 1e-4,
+            warmup_steps: 10,
+            mask_prob: 0.15,
+            max_predictions: 20,
+            variant: 1,
+        }
+    }
+
+    fn full(n: usize) -> Checkpoint {
+        let mut c = Checkpoint::new(n);
         c.step = 42;
-        c.loss_scale = 1024.0;
-        for i in 0..100 {
+        c.data_step = 45; // 3 AMP skips
+        c.scaler = ScalerState {
+            scale: 1024.0,
+            good_steps: 17,
+            total_steps: 45,
+            skipped_steps: 3,
+            growths: 1,
+            backoffs: 3,
+            ..ScalerState::default()
+        };
+        c.fingerprint = Some(fp(9));
+        for i in 0..n {
             c.params[i] = i as f32 * 0.5;
             c.m[i] = -(i as f32);
             c.v[i] = i as f32 * i as f32;
         }
+        c
+    }
+
+    #[test]
+    fn roundtrip_v2_full_state() {
+        let c = full(100);
         let path = std::env::temp_dir().join("bertdist_ckpt_rt.bin");
         c.save(&path).unwrap();
+        assert_eq!(std::fs::metadata(&path).unwrap().len(),
+                   v2_file_len(100) as u64);
         let l = Checkpoint::load(&path).unwrap();
         assert_eq!(l, c);
+        assert!(l.exact_data_position);
+        assert_eq!(l.loss_scale(), 1024.0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn prop_roundtrip_random_state() {
+        let dir = std::env::temp_dir().join("bertdist_ckpt_prop");
+        let _ = std::fs::create_dir_all(&dir);
+        testkit::check_msg(
+            "ckpt-roundtrip", 0xC4C4, 32,
+            |r: &mut Pcg64| {
+                let n = r.range_usize(0, 40);
+                let mut c = Checkpoint::new(n);
+                c.step = r.next_u64() >> 20;
+                c.data_step = c.step + r.gen_range(50);
+                c.scaler.scale = 2.0f64.powi(r.gen_range(24) as i32);
+                c.scaler.good_steps = r.gen_range(2000);
+                if r.chance(0.5) {
+                    c.fingerprint = Some(fp(r.next_u64()));
+                }
+                for x in c.params.iter_mut() {
+                    *x = r.next_f32() - 0.5;
+                }
+                (c, r.next_u64())
+            },
+            |(c, tag)| {
+                let path = std::env::temp_dir()
+                    .join("bertdist_ckpt_prop")
+                    .join(format!("c{tag}.bckp"));
+                c.save(&path).map_err(|e| e.to_string())?;
+                let l = Checkpoint::load(&path).map_err(|e| e.to_string())?;
+                let _ = std::fs::remove_file(&path);
+                if &l == c { Ok(()) } else { Err("state drifted".into()) }
+            },
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn v1_file_loads_with_legacy_fallback() {
+        // Hand-rolled v1 bytes (the old layout) must still load, with
+        // data_step falling back to step and a legacy scaler state.
+        let n = 3usize;
+        let mut body = Vec::new();
+        body.extend_from_slice(MAGIC);
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&7u64.to_le_bytes());
+        body.extend_from_slice(&512.0f64.to_le_bytes());
+        body.extend_from_slice(&(n as u64).to_le_bytes());
+        for arr in [[1.0f32, 2.0, 3.0], [0.1, 0.2, 0.3], [9.0, 8.0, 7.0]] {
+            for x in arr {
+                body.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let crc = crate::util::crc32(&body);
+        body.extend_from_slice(&crc.to_le_bytes());
+        let path = std::env::temp_dir().join("bertdist_ckpt_v1.bin");
+        std::fs::write(&path, &body).unwrap();
+        let c = Checkpoint::load(&path).unwrap();
+        assert_eq!(c.step, 7);
+        assert_eq!(c.data_step, 7);
+        assert!(!c.exact_data_position);
+        assert!(c.fingerprint.is_none());
+        assert_eq!(c.scaler, ScalerState::legacy(512.0));
+        assert_eq!(c.params, vec![1.0, 2.0, 3.0]);
+        assert_eq!(c.v, vec![9.0, 8.0, 7.0]);
         std::fs::remove_file(&path).unwrap();
     }
 
     #[test]
     fn corruption_detected() {
-        let c = Checkpoint::new(10);
+        let c = full(10);
         let path = std::env::temp_dir().join("bertdist_ckpt_corrupt.bin");
         c.save(&path).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
@@ -175,5 +767,42 @@ mod tests {
         c.m.pop();
         let path = std::env::temp_dir().join("bertdist_ckpt_size.bin");
         assert!(matches!(c.save(&path), Err(CkptError::SizeMismatch)));
+    }
+
+    #[test]
+    fn fingerprint_mismatch_lists_every_divergence() {
+        let mut c = Checkpoint::new(4);
+        c.fingerprint = Some(fp(1));
+        let mut run = fp(1);
+        c.ensure_fingerprint(&run).unwrap();
+        run.seed = 2;
+        run.comm_mode = 0;
+        run.machines = 1;
+        run.optimizer = 1;
+        run.lr = 3e-4;
+        let err = c.ensure_fingerprint(&run).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("comm_mode"), "{msg}");
+        assert!(msg.contains("topology"), "{msg}");
+        assert!(msg.contains("optimizer: checkpoint lamb, run adam"),
+                "{msg}");
+        assert!(msg.contains("lr"), "{msg}");
+        assert!(!msg.contains("bucket_elems"), "{msg}");
+        // fingerprint-less checkpoints pass the gate
+        c.fingerprint = None;
+        c.ensure_fingerprint(&run).unwrap();
+    }
+
+    #[test]
+    fn sections_tile_the_file_exactly() {
+        let n = 13;
+        let secs = v2_sections(n);
+        let mut pos = 0;
+        for (name, r) in &secs {
+            assert_eq!(r.start, pos, "gap before section {name}");
+            pos = r.end;
+        }
+        assert_eq!(pos, v2_file_len(n));
     }
 }

@@ -1,0 +1,324 @@
+//! Background checkpoint writing + keep-last-K rotation.
+//!
+//! The hot loop must never pay for a disk write: at an optimizer-step
+//! boundary the trainer memcpys its state into a **recycled snapshot
+//! buffer** ([`AsyncCheckpointWriter::save`] — the only on-loop cost),
+//! and a long-lived writer thread performs the atomic temp+rename
+//! write, then prunes the rotation directory down to the newest K
+//! files.  Two snapshot buffers circulate (double buffering): the
+//! trainer can capture step N+1 while step N is still being written;
+//! only a writer that falls a full write behind ever blocks the loop,
+//! and that wait is timed and reported (`TrainReport.checkpoint_s`).
+//!
+//! Rotation files are named `ckpt-{data_step:010}.bckp` — `data_step`
+//! is the monotone attempted-step counter, so names are unique across
+//! AMP-skipped stretches where `step` stands still, and the
+//! lexicographically greatest file is always the newest.  A crash can
+//! leave at most a stale `.tmp` (the rename never happened);
+//! [`latest_checkpoint`] ignores those and [`prune_checkpoints`]
+//! deletes them.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::{v2_file_len, Checkpoint, CkptError};
+
+const FILE_PREFIX: &str = "ckpt-";
+const FILE_SUFFIX: &str = ".bckp";
+
+/// Rotation file name for a snapshot taken at `data_step`.
+pub fn checkpoint_file_name(data_step: u64) -> String {
+    format!("{FILE_PREFIX}{data_step:010}{FILE_SUFFIX}")
+}
+
+/// Parse a rotation file name back to its data_step.
+fn parse_file_name(name: &str) -> Option<u64> {
+    name.strip_prefix(FILE_PREFIX)?
+        .strip_suffix(FILE_SUFFIX)?
+        .parse()
+        .ok()
+}
+
+/// All rotation checkpoints in `dir`, sorted oldest → newest.  Stale
+/// `.tmp` files and foreign names are ignored.
+pub fn list_checkpoints(dir: &Path)
+    -> std::io::Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        if let Some(step) = entry
+            .file_name()
+            .to_str()
+            .and_then(parse_file_name) {
+            out.push((step, entry.path()));
+        }
+    }
+    out.sort_unstable_by_key(|(s, _)| *s);
+    Ok(out)
+}
+
+/// The newest rotation checkpoint in `dir`, if any (`--resume DIR`).
+pub fn latest_checkpoint(dir: &Path) -> std::io::Result<Option<PathBuf>> {
+    Ok(list_checkpoints(dir)?.pop().map(|(_, p)| p))
+}
+
+/// Delete all but the newest `keep_last` rotation files, plus any stale
+/// `ckpt-*.tmp` left behind by a crash between write and rename.
+/// Returns how many files were removed.
+pub fn prune_checkpoints(dir: &Path, keep_last: usize)
+    -> std::io::Result<usize> {
+    let mut removed = 0;
+    let ckpts = list_checkpoints(dir)?;
+    if ckpts.len() > keep_last {
+        for (_, path) in &ckpts[..ckpts.len() - keep_last] {
+            std::fs::remove_file(path)?;
+            removed += 1;
+        }
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if name.starts_with(FILE_PREFIX) && name.ends_with(".tmp") {
+            std::fs::remove_file(entry.path())?;
+            removed += 1;
+        }
+    }
+    Ok(removed)
+}
+
+/// What the writer thread did over its lifetime (bench + log grist).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SaveStats {
+    /// Checkpoints written.
+    pub writes: u64,
+    /// Bytes written (v2 file sizes).
+    pub bytes: u64,
+    /// Seconds the background thread spent inside atomic writes.
+    pub write_s: f64,
+    /// Old checkpoints / stale temp files removed by rotation.
+    pub pruned: u64,
+}
+
+impl SaveStats {
+    /// Off-loop write bandwidth.
+    pub fn bytes_per_sec(&self) -> f64 {
+        if self.write_s > 0.0 {
+            self.bytes as f64 / self.write_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Double-buffered background checkpoint writer (see module docs).
+pub struct AsyncCheckpointWriter {
+    job_tx: Option<Sender<Checkpoint>>,
+    free_rx: Receiver<Checkpoint>,
+    handle: Option<JoinHandle<Result<SaveStats, CkptError>>>,
+}
+
+impl AsyncCheckpointWriter {
+    /// Open (creating) the rotation directory and start the writer
+    /// thread, priming the ring with two empty snapshot buffers (they
+    /// size themselves to the model on first use, then recycle).
+    /// Stale `.tmp` crash leftovers in `dir` are removed up front.
+    pub fn new(dir: &Path, keep_last: usize)
+        -> Result<AsyncCheckpointWriter, CkptError> {
+        std::fs::create_dir_all(dir)?;
+        prune_checkpoints(dir, usize::MAX)?;
+        let keep_last = keep_last.max(1);
+        let (job_tx, job_rx) = channel::<Checkpoint>();
+        let (free_tx, free_rx) = channel::<Checkpoint>();
+        for _ in 0..2 {
+            free_tx.send(Checkpoint::new(0)).expect("prime snapshot ring");
+        }
+        let dir = dir.to_path_buf();
+        let handle = std::thread::Builder::new()
+            .name("ckpt-writer".into())
+            .spawn(move || worker(dir, keep_last, job_rx, free_tx))
+            .map_err(|e| CkptError::Writer(e.to_string()))?;
+        Ok(AsyncCheckpointWriter {
+            job_tx: Some(job_tx),
+            free_rx,
+            handle: Some(handle),
+        })
+    }
+
+    /// Snapshot on the hot loop: pop a recycled buffer (blocking only
+    /// when the writer is a full write behind), let `fill` capture the
+    /// trainer state into it, and hand it to the writer thread.
+    /// Returns the seconds this call spent — the checkpoint cost that
+    /// was actually exposed on the hot loop.
+    pub fn save<F: FnOnce(&mut Checkpoint)>(&mut self, fill: F)
+        -> Result<f64, CkptError> {
+        let t0 = Instant::now();
+        let mut snap = match self.free_rx.recv() {
+            Ok(s) => s,
+            Err(_) => return Err(self.worker_error()),
+        };
+        fill(&mut snap);
+        let tx = self
+            .job_tx
+            .as_ref()
+            .expect("save called after finish");
+        if tx.send(snap).is_err() {
+            return Err(self.worker_error());
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// Close the ring, drain pending writes, join the writer thread,
+    /// and return (or surface) what it did.
+    pub fn finish(mut self) -> Result<SaveStats, CkptError> {
+        self.job_tx = None;
+        match self.handle.take() {
+            // a prior save() already joined the failed worker
+            None => Err(CkptError::Writer("writer already failed".into())),
+            Some(h) => match h.join() {
+                Ok(r) => r,
+                Err(_) => {
+                    Err(CkptError::Writer("writer thread panicked".into()))
+                }
+            },
+        }
+    }
+
+    /// The ring closed under us: join the worker and surface its error.
+    fn worker_error(&mut self) -> CkptError {
+        self.job_tx = None;
+        match self.handle.take().map(|h| h.join()) {
+            Some(Ok(Err(e))) => e,
+            Some(Ok(Ok(_))) | None => {
+                CkptError::Writer("writer thread exited unexpectedly".into())
+            }
+            Some(Err(_)) => {
+                CkptError::Writer("writer thread panicked".into())
+            }
+        }
+    }
+}
+
+impl Drop for AsyncCheckpointWriter {
+    fn drop(&mut self) {
+        // Closing the job channel lets the worker drain and exit; join
+        // so no write is abandoned mid-flight.
+        self.job_tx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker(dir: PathBuf, keep_last: usize, job_rx: Receiver<Checkpoint>,
+          free_tx: Sender<Checkpoint>) -> Result<SaveStats, CkptError> {
+    let mut stats = SaveStats::default();
+    while let Ok(snap) = job_rx.recv() {
+        let path = dir.join(checkpoint_file_name(snap.data_step));
+        let t0 = Instant::now();
+        snap.save(&path)?;
+        stats.write_s += t0.elapsed().as_secs_f64();
+        stats.writes += 1;
+        stats.bytes += v2_file_len(snap.params.len()) as u64;
+        stats.pruned += prune_checkpoints(&dir, keep_last)? as u64;
+        // Receiver gone during shutdown: the buffer just drops.
+        let _ = free_tx.send(snap);
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("bertdist_ckpt_writer_{name}_{}",
+                          std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    fn snap_filler(n: usize, step: u64) -> impl FnOnce(&mut Checkpoint) {
+        move |c: &mut Checkpoint| {
+            c.step = step;
+            c.data_step = step;
+            c.params.resize(n, 0.0);
+            c.m.resize(n, 0.0);
+            c.v.resize(n, 0.0);
+            c.params.fill(step as f32);
+        }
+    }
+
+    #[test]
+    fn rotation_keeps_only_the_newest_k() {
+        let dir = tmp("rotate");
+        let mut w = AsyncCheckpointWriter::new(&dir, 2).unwrap();
+        for step in 1..=5u64 {
+            w.save(snap_filler(16, step)).unwrap();
+        }
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.writes, 5);
+        assert_eq!(stats.bytes, 5 * v2_file_len(16) as u64);
+        let left = list_checkpoints(&dir).unwrap();
+        let steps: Vec<u64> = left.iter().map(|(s, _)| *s).collect();
+        assert_eq!(steps, vec![4, 5]);
+        // the surviving newest file really holds the newest state
+        let c = Checkpoint::load(&latest_checkpoint(&dir).unwrap().unwrap())
+            .unwrap();
+        assert_eq!(c.step, 5);
+        assert!(c.params.iter().all(|&x| x == 5.0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_tmp_is_ignored_and_cleaned() {
+        let dir = tmp("staletmp");
+        std::fs::create_dir_all(&dir).unwrap();
+        // a valid checkpoint + a crash leftover with a HIGHER step
+        let mut c = Checkpoint::new(4);
+        c.step = 3;
+        c.data_step = 3;
+        c.save(&dir.join(checkpoint_file_name(3))).unwrap();
+        std::fs::write(dir.join("ckpt-0000000009.tmp"), b"partial write")
+            .unwrap();
+        // resume resolution never sees the tmp
+        let latest = latest_checkpoint(&dir).unwrap().unwrap();
+        assert!(latest.ends_with(checkpoint_file_name(3)));
+        assert_eq!(Checkpoint::load(&latest).unwrap().step, 3);
+        // pruning removes it
+        let removed = prune_checkpoints(&dir, 8).unwrap();
+        assert_eq!(removed, 1);
+        assert!(!dir.join("ckpt-0000000009.tmp").exists());
+        assert!(dir.join(checkpoint_file_name(3)).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn writer_failure_surfaces_as_error_not_panic() {
+        let dir = tmp("failure");
+        let mut w = AsyncCheckpointWriter::new(&dir, 2).unwrap();
+        // yank the directory out from under the worker
+        std::fs::remove_dir_all(&dir).unwrap();
+        // the enqueue may still succeed (the failure lands on the
+        // worker thread); the error must surface by finish at latest
+        let first = w.save(snap_filler(8, 1));
+        let second = w.save(snap_filler(8, 2));
+        let finished = w.finish();
+        assert!(
+            first.is_err() || second.is_err() || finished.is_err(),
+            "a write into a deleted dir must fail loudly"
+        );
+    }
+
+    #[test]
+    fn file_names_sort_with_steps() {
+        assert_eq!(checkpoint_file_name(7), "ckpt-0000000007.bckp");
+        assert_eq!(parse_file_name("ckpt-0000000007.bckp"), Some(7));
+        assert_eq!(parse_file_name("ckpt-0000000007.tmp"), None);
+        assert_eq!(parse_file_name("other.bckp"), None);
+        assert!(checkpoint_file_name(9) < checkpoint_file_name(10));
+    }
+}

@@ -43,6 +43,14 @@ pub struct TrainConfig {
     pub prefetch_depth: usize,
     /// Total optimizer steps to run.
     pub steps: usize,
+    /// Steps between periodic async checkpoints (0 = off).  Snapshots
+    /// are taken at optimizer-step boundaries into recycled buffers;
+    /// the atomic write + rotation run on a background thread (CLI
+    /// `--save-every`, with `--ckpt-dir` naming the rotation dir).
+    pub save_every: usize,
+    /// Rotation depth for periodic checkpoints: keep the newest K
+    /// `ckpt-*.bckp` files (CLI `--keep-last`).
+    pub keep_last: usize,
     /// Initial dynamic loss scale (paper §4.2).
     pub init_loss_scale: f64,
     /// RNG seed for data order + masking.
@@ -66,6 +74,8 @@ impl Default for TrainConfig {
             bucket_elems: 1 << 20,
             prefetch_depth: 2,
             steps: 100,
+            save_every: 0,
+            keep_last: 3,
             init_loss_scale: 65536.0,
             seed: 42,
             log_every: 10,
@@ -166,6 +176,10 @@ impl RunConfig {
             doc.int("train.prefetch_depth",
                     c.train.prefetch_depth as i64) as usize;
         c.train.steps = doc.int("train.steps", c.train.steps as i64) as usize;
+        c.train.save_every =
+            doc.int("train.save_every", c.train.save_every as i64) as usize;
+        c.train.keep_last =
+            doc.int("train.keep_last", c.train.keep_last as i64) as usize;
         c.train.init_loss_scale =
             doc.float("train.init_loss_scale", c.train.init_loss_scale);
         c.train.seed = doc.int("train.seed", c.train.seed as i64) as u64;
@@ -212,6 +226,8 @@ impl RunConfig {
         );
         anyhow::ensure!(self.train.init_loss_scale >= 1.0,
                         "init_loss_scale must be >= 1");
+        anyhow::ensure!(self.train.keep_last >= 1,
+                        "keep_last must be >= 1");
         anyhow::ensure!(
             matches!(self.train.optimizer.as_str(), "lamb" | "adam"),
             "optimizer must be lamb or adam"
@@ -234,13 +250,18 @@ mod tests {
         let doc = TomlDoc::parse(
             "[train]\nsteps = 7\nlr = 0.5\noverlap = false\n\
              grad_wire_f16 = true\ncomm_mode = \"hierarchical\"\n\
-             prefetch_depth = 4\n\
+             prefetch_depth = 4\nsave_every = 25\nkeep_last = 5\n\
              [cluster]\ntopo = \"2M4G\"\nnetwork_gbps = 25.0\n\
              [data]\nseq_len = 512\n",
         ).unwrap();
         let c = RunConfig::from_toml(&doc).unwrap();
         assert_eq!(c.train.steps, 7);
         assert_eq!(c.train.lr, 0.5);
+        assert_eq!(c.train.save_every, 25);
+        assert_eq!(c.train.keep_last, 5);
+        // checkpointing defaults: periodic saves off, keep 3 on rotation
+        assert_eq!(RunConfig::default().train.save_every, 0);
+        assert_eq!(RunConfig::default().train.keep_last, 3);
         assert!(!c.train.overlap);
         assert!(c.train.grad_wire_f16);
         assert_eq!(c.train.prefetch_depth, 4);
@@ -282,6 +303,9 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = RunConfig::default();
         c.train.bucket_elems = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.train.keep_last = 0;
         assert!(c.validate().is_err());
     }
 }

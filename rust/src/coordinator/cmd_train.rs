@@ -5,6 +5,8 @@
 
 use std::path::{Path, PathBuf};
 
+use crate::checkpoint::{self, AsyncCheckpointWriter, Checkpoint,
+                        Fingerprint};
 use crate::cliopt::Args;
 use crate::collectives::pool::CommMode;
 use crate::config::{RunConfig, TwoPhaseSchedule};
@@ -21,6 +23,24 @@ pub struct TrainOutcome {
     pub trainer_step: usize,
 }
 
+/// How a run interacts with checkpoints (CLI `--ckpt`, `--resume`,
+/// `--save-every` / `--keep-last` / `--ckpt-dir`).
+#[derive(Default)]
+pub struct CkptPlan<'a> {
+    /// Final checkpoint written at each phase end (`--ckpt`).
+    pub final_path: Option<&'a Path>,
+    /// Legacy `--ckpt` convenience: restore from `final_path` when the
+    /// file already exists.
+    pub auto_resume: bool,
+    /// Pre-loaded checkpoint to restore before phase 1 (`--resume` —
+    /// already fingerprint-gated by the CLI layer; the trainer gates
+    /// again on restore).
+    pub resume: Option<Checkpoint>,
+    /// Rotation directory for periodic async saves (`--ckpt-dir`);
+    /// active when `cfg.train.save_every > 0`.
+    pub rotate_dir: Option<&'a Path>,
+}
+
 /// Open one dataset view per rank.
 pub fn prepare_datasets(dir: &Path, world: usize)
     -> anyhow::Result<Vec<ShardedDataset>> {
@@ -29,73 +49,302 @@ pub fn prepare_datasets(dir: &Path, world: usize)
         .collect()
 }
 
+/// The phase-2 run shape derived from a phase-1 config (paper Table 6
+/// ratios): `(cfg2, batch2, seq2)`.  The single source both the CLI
+/// resume pre-gate and [`train_run_with`]'s phase routing/trainer
+/// construction use — they must agree or phase-2 resumes would be
+/// rejected against a fingerprint no real snapshot carries.
+fn phase2_shape(cfg: &RunConfig, batch1: usize)
+    -> (RunConfig, usize, usize) {
+    let mut cfg2 = cfg.clone();
+    cfg2.data.seq_len = 512;
+    cfg2.data.max_predictions = 80; // Table 6
+    (cfg2, (batch1 / 8).max(1), 512)
+}
+
 /// Drive a run: phase 1 (and optionally phase 2) with a shared trainer
-/// state, mirroring the paper's §3.3 schedule.
+/// state, mirroring the paper's §3.3 schedule.  Legacy entry point:
+/// `--ckpt` semantics only (final save + auto-resume when the file
+/// exists); [`train_run_with`] exposes the full v2 checkpoint plan.
 pub fn train_run(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
                  steps1: usize, steps2: usize, batch1: usize, seq1: usize,
                  ckpt: Option<&Path>) -> anyhow::Result<TrainOutcome> {
+    train_run_with(engine, cfg, data_dir, steps1, steps2, batch1, seq1,
+                   CkptPlan {
+                       final_path: ckpt,
+                       auto_resume: true,
+                       ..Default::default()
+                   })
+}
+
+/// [`train_run`] with the full checkpoint plan: exact `--resume`,
+/// periodic async rotation, and the legacy final-save path.
+#[allow(clippy::too_many_arguments)]
+pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
+                      steps1: usize, steps2: usize, batch1: usize,
+                      seq1: usize, mut plan: CkptPlan<'_>)
+                      -> anyhow::Result<TrainOutcome> {
     let world = cfg.cluster.topo.world_size();
     let datasets = prepare_datasets(data_dir, world)?;
 
-    // ---- phase 1 ----
-    let mut trainer = Trainer::new(engine, cfg.clone(), seq1, batch1)?;
-    if let Some(p) = ckpt {
-        if p.exists() {
-            println!("restoring checkpoint {}", p.display());
-            trainer.restore(crate::checkpoint::Checkpoint::load(p)?)?;
+    // Periodic rotation writer, shared by both phases: snapshots happen
+    // at step boundaries on the hot loop, writes on this background
+    // thread.
+    let mut writer = match (plan.rotate_dir, cfg.train.save_every) {
+        (Some(dir), every) if every > 0 => {
+            Some(AsyncCheckpointWriter::new(dir, cfg.train.keep_last)?)
         }
-    }
-    println!(
-        "phase 1: preset={} variant={} topo={} world={} batch={}x{} \
-         accum={} overlap={} wire={} comm={} ({}) prefetch={}",
-        cfg.train.preset, cfg.train.variant, cfg.cluster.topo, world,
-        batch1, seq1, cfg.train.accum_steps, cfg.train.overlap,
-        if cfg.train.grad_wire_f16 { "f16" } else { "f32" },
-        cfg.train.comm_mode,
-        if trainer.is_hierarchical() { "hierarchical" } else { "flat" },
-        if cfg.train.prefetch_depth == 0 {
-            "sync".to_string()
+        _ => None,
+    };
+    let save_every = cfg.train.save_every;
+
+    // Route an exact --resume to its phase: a snapshot taken during
+    // phase 2 carries the phase-2 batch geometry in its fingerprint (or,
+    // for fingerprint-less files, a data_step past the phase-1 budget)
+    // and must be restored into the phase-2 trainer — gating it against
+    // the phase-1 config would make every phase-2 crash unrecoverable.
+    let (cfg2, batch2, seq2) = phase2_shape(cfg, batch1);
+    let mut resume1: Option<Checkpoint> = None;
+    let mut resume2: Option<Checkpoint> = None;
+    if let Some(ck) = plan.resume.take() {
+        // A fingerprinted snapshot is routed by exact candidate match:
+        // it goes to phase 2 when it matches the phase-2 fingerprint —
+        // with the data_step counter as tie-break for configs where
+        // the two phases share a fingerprint (e.g. batch 1, seq 512,
+        // max_predictions forced to 80 in the TOML): a phase-2
+        // snapshot's data_step always exceeds the phase-1 budget.
+        // Anything matching neither candidate routes to phase 1, where
+        // restore fails loudly with the field list.  Fingerprint-less
+        // v1 files use the data_step heuristic alone.  (`steps` is
+        // deliberately NOT fingerprinted, so a phase-1 snapshot whose
+        // data_step exceeds a smaller --steps still routes to
+        // phase 1 when the fingerprints are distinguishable.)
+        let fp1 = Fingerprint::of(cfg, batch1, seq1);
+        let fp2 = Fingerprint::of(&cfg2, batch2, seq2);
+        let is_phase2 = steps2 > 0
+            && match ck.fingerprint {
+                Some(fp) => fp == fp2
+                    && (fp != fp1 || ck.data_step as usize > steps1),
+                None => ck.data_step as usize > steps1,
+            };
+        if is_phase2 {
+            resume2 = Some(ck);
         } else {
-            format!("x{}", cfg.train.prefetch_depth)
+            resume1 = Some(ck);
         }
-    );
-    let report1 = trainer.run(&datasets, steps1, steps1 + steps2)?;
-    println!("phase 1 done: {}", report1.summary());
-    println!("exchange: {}", report1.exchange.summary());
-    if let Some(p) = ckpt {
-        trainer.save(p)?;
-        println!("checkpoint -> {}", p.display());
     }
+    let resuming_into_phase2 = resume2.is_some();
+
+    // ---- phase 1 (skipped entirely — no trainer, no pool threads,
+    //      no model-sized buffers — when resuming into phase 2) ----
+    let mut trainer: Option<Trainer> = None;
+    let report1 = if resuming_into_phase2 {
+        println!("phase 1 already complete in the resumed run — skipping");
+        TrainReport::default()
+    } else {
+        let mut t = Trainer::new(engine, cfg.clone(), seq1, batch1)?;
+        // `--resume` finishes THE SAME run: already-consumed steps are
+        // subtracted while total_steps_for_lr keeps the original
+        // schedule, so the continuation is bitwise what the
+        // uninterrupted run would have done.
+        let mut run1 = steps1;
+        if let Some(ck) = resume1.take() {
+            println!(
+                "resuming exactly: step {}, data_step {}, loss scale {}",
+                ck.step, ck.data_step, ck.loss_scale()
+            );
+            t.restore(ck)?;
+            let done = t.data_step().min(steps1);
+            run1 = steps1 - done;
+            if done > 0 {
+                println!(
+                    "resume: {done}/{steps1} phase-1 steps already done \
+                     — running {run1} more"
+                );
+            }
+        } else if plan.auto_resume {
+            if let Some(p) = plan.final_path.filter(|p| p.exists()) {
+                println!("restoring checkpoint {}", p.display());
+                let ck = Checkpoint::load(p)?;
+                if ck.ensure_fingerprint(&t.fingerprint()).is_ok() {
+                    t.restore(ck)?;
+                } else {
+                    // legacy convenience path: a --ckpt file saved
+                    // under a different stream config (e.g. the
+                    // phase-2 save of a finished two-phase run) still
+                    // restarts — weights/step/scaler only, with the
+                    // divergence made explicit.  Exact-or-fail
+                    // semantics live behind --resume.
+                    println!(
+                        "note: checkpoint fingerprint differs from this \
+                         run — restoring weights/step only (use --resume \
+                         for exact-or-fail resume)"
+                    );
+                    t.restore_weights(ck)?;
+                }
+            }
+        }
+        println!(
+            "phase 1: preset={} variant={} topo={} world={} batch={}x{} \
+             accum={} overlap={} wire={} comm={} ({}) prefetch={}",
+            cfg.train.preset, cfg.train.variant, cfg.cluster.topo, world,
+            batch1, seq1, cfg.train.accum_steps, cfg.train.overlap,
+            if cfg.train.grad_wire_f16 { "f16" } else { "f32" },
+            cfg.train.comm_mode,
+            if t.is_hierarchical() { "hierarchical" } else { "flat" },
+            if cfg.train.prefetch_depth == 0 {
+                "sync".to_string()
+            } else {
+                format!("x{}", cfg.train.prefetch_depth)
+            }
+        );
+        let r = t.run_with_ckpt(
+            &datasets, run1, steps1 + steps2,
+            writer.as_mut().map(|w| (w, save_every)))?;
+        println!("phase 1 done: {}", r.summary());
+        println!("exchange: {}", r.exchange.summary());
+        if let Some(p) = plan.final_path {
+            t.save(p)?;
+            println!("checkpoint -> {}", p.display());
+        }
+        trainer = Some(t);
+        r
+    };
 
     // ---- phase 2 (seq 512, smaller batch — Table 6 ratios) ----
     let report2 = if steps2 > 0 {
-        let batch2 = (batch1 / 8).max(1);
-        let seq2 = 512;
-        let mut cfg2 = cfg.clone();
-        cfg2.data.seq_len = seq2;
-        cfg2.data.max_predictions = 80; // Table 6
         let mut t2 = Trainer::new(engine, cfg2, seq2, batch2)?;
-        t2.restore(trainer.checkpoint())?;
+        let mut run2 = steps2;
+        if let Some(ck) = resume2.take() {
+            println!(
+                "resuming exactly into phase 2: step {}, data_step {}, \
+                 loss scale {}",
+                ck.step, ck.data_step, ck.loss_scale()
+            );
+            // strict gate against the PHASE-2 fingerprint
+            t2.restore(ck)?;
+            let done = t2.data_step().saturating_sub(steps1).min(steps2);
+            run2 = steps2 - done;
+            if done > 0 {
+                println!(
+                    "resume: {done}/{steps2} phase-2 steps already done \
+                     — running {run2} more"
+                );
+            }
+        } else {
+            // phase change: same weights/step/scaler, new batch
+            // geometry — the fingerprint gate only pins a single
+            // stream, so this goes through the weights-only restore.
+            let t1 = trainer
+                .as_ref()
+                .expect("phase 1 ran (not resuming into phase 2)");
+            t2.restore_weights(t1.checkpoint())?;
+        }
         println!("phase 2: batch={batch2}x{seq2} (Table 6 ratios)");
-        let r = t2.run(&datasets, steps2, steps1 + steps2)?;
+        let r = t2.run_with_ckpt(&datasets, run2, steps1 + steps2,
+                                 writer.as_mut().map(|w| (w, save_every)))?;
         println!("phase 2 done: {}", r.summary());
         println!("exchange: {}", r.exchange.summary());
-        if let Some(p) = ckpt {
+        if let Some(p) = plan.final_path {
             t2.save(p)?;
         }
-        let step = t2.step;
-        trainer = t2;
-        let _ = step;
+        trainer = Some(t2);
         Some(r)
     } else {
         None
     };
 
+    if let Some(w) = writer {
+        let stats = w.finish()?;
+        let mib = stats.bytes as f64 / (1 << 20) as f64;
+        println!(
+            "async checkpoints: {} files, {:.1} MiB at {:.0} MiB/s \
+             off-loop (hot-loop stall {:.3}s)",
+            stats.writes, mib,
+            stats.bytes_per_sec() / (1 << 20) as f64,
+            report1.checkpoint_s
+                + report2.as_ref().map_or(0.0, |r| r.checkpoint_s)
+        );
+    }
+
     Ok(TrainOutcome {
         phase1: report1,
         phase2: report2,
-        trainer_step: trainer.step,
+        // `trainer` is always Some here: phase 1 sets it unless we
+        // resumed into phase 2, and that requires steps2 > 0, where
+        // phase 2 sets it.
+        trainer_step: trainer.map_or(0, |t| t.step),
     })
+}
+
+/// Load + gate a `--resume` target: a checkpoint file, or a rotation
+/// directory (tries its `ckpt-*.bckp` files NEWEST FIRST, falling back
+/// past unreadable/corrupt ones — that recovery depth is what the
+/// keep-last-K rotation exists for).  Runs BEFORE the engine/data setup
+/// so a missing file or a config-fingerprint mismatch fails in
+/// milliseconds with a clear message and a nonzero exit.  `candidates`
+/// holds one expected fingerprint per phase of this run (two-phase runs
+/// accept snapshots from either phase; routing happens in
+/// [`train_run_with`]).
+fn load_resume(path: &Path, candidates: &[Fingerprint])
+    -> anyhow::Result<Checkpoint> {
+    let files: Vec<std::path::PathBuf> = if path.is_dir() {
+        let mut list: Vec<_> = checkpoint::list_checkpoints(path)?
+            .into_iter()
+            .map(|(_, p)| p)
+            .collect();
+        anyhow::ensure!(
+            !list.is_empty(),
+            "--resume {}: no ckpt-*.bckp files in directory",
+            path.display()
+        );
+        list.reverse(); // newest first
+        list
+    } else {
+        vec![path.to_path_buf()]
+    };
+    let mut picked = None;
+    for (i, file) in files.iter().enumerate() {
+        match Checkpoint::load(file) {
+            Ok(ck) => {
+                if i > 0 {
+                    eprintln!(
+                        "warning: skipped {i} newer unreadable \
+                         checkpoint(s); resuming from {}",
+                        file.display()
+                    );
+                }
+                picked = Some((ck, file));
+                break;
+            }
+            Err(e) if i + 1 < files.len() => {
+                eprintln!("warning: cannot read {}: {e} — trying the \
+                           previous checkpoint", file.display());
+            }
+            Err(e) => anyhow::bail!("cannot resume from {}: {e}",
+                                    file.display()),
+        }
+    }
+    let (ck, file) = picked.expect("loop either picked or bailed");
+    if !candidates
+        .iter()
+        .any(|fp| ck.ensure_fingerprint(fp).is_ok()) {
+        // report the mismatch against this run's primary (phase-1) shape
+        ck.ensure_fingerprint(&candidates[0]).map_err(|e| {
+            anyhow::anyhow!("--resume {}: {e}", file.display())
+        })?;
+    }
+    if !ck.exact_data_position {
+        println!(
+            "note: v1 checkpoint — data position is inexact \
+             (data_step falls back to step)"
+        );
+    }
+    println!(
+        "resume checkpoint {}: step {}, data_step {}, loss scale {}",
+        file.display(), ck.step, ck.data_step, ck.loss_scale()
+    );
+    Ok(ck)
 }
 
 pub fn run(args: &Args) -> anyhow::Result<()> {
@@ -156,8 +405,41 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     let batch = args.get_parse("batch", 8usize)?;
     let seq = args.get_parse("seq", 128usize)?;
     let ckpt = args.get_opt("ckpt").map(PathBuf::from);
+    // v2 checkpoint knobs: periodic async rotation + exact resume.
+    cfg.train.save_every =
+        args.get_parse("save-every", cfg.train.save_every)?;
+    cfg.train.keep_last = args.get_parse("keep-last", cfg.train.keep_last)?;
+    let ckpt_dir = args.get_opt("ckpt-dir").map(PathBuf::from);
+    let resume = args.get_opt("resume").map(PathBuf::from);
     args.finish_strict()?;
     cfg.validate()?;
+    if cfg.train.save_every > 0 && ckpt_dir.is_none() {
+        anyhow::bail!(
+            "--save-every needs --ckpt-dir DIR to hold the rotated files"
+        );
+    }
+    if ckpt_dir.is_some() && cfg.train.save_every == 0 {
+        // the converse would be silently inert: a rotation dir that
+        // never receives a file, discovered only when --resume fails
+        anyhow::bail!(
+            "--ckpt-dir does nothing without --save-every N (or \
+             train.save_every in the config TOML); to resume from an \
+             existing rotation dir use --resume DIR"
+        );
+    }
+
+    // --resume is validated (load + config fingerprint) BEFORE data and
+    // engine setup: a bad resume must fail fast, loudly, and nonzero.
+    // A two-phase run accepts snapshots from either phase's geometry.
+    let mut expected_fps = vec![Fingerprint::of(&cfg, batch, seq)];
+    if phase2_steps > 0 {
+        let (cfg2, batch2, seq2) = phase2_shape(&cfg, batch);
+        expected_fps.push(Fingerprint::of(&cfg2, batch2, seq2));
+    }
+    let resume_ckpt = match &resume {
+        Some(p) => Some(load_resume(p, &expected_fps)?),
+        None => None,
+    };
 
     if !data_dir.join("vocab.txt").exists() {
         anyhow::bail!(
@@ -179,8 +461,14 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         vocab.len(), cfg.train.preset, model.config.vocab_size,
         model.config.vocab_size
     );
-    let outcome = train_run(&engine, &cfg, &data_dir, cfg.train.steps,
-                            phase2_steps, batch, seq, ckpt.as_deref())?;
+    let outcome = train_run_with(&engine, &cfg, &data_dir, cfg.train.steps,
+                                 phase2_steps, batch, seq,
+                                 CkptPlan {
+                                     final_path: ckpt.as_deref(),
+                                     auto_resume: resume.is_none(),
+                                     resume: resume_ckpt,
+                                     rotate_dir: ckpt_dir.as_deref(),
+                                 })?;
 
     // Exchange spans (TrainReport.exchange) as a chrome trace: the mean
     // per-step bucket exchange, split into PCIe and network phases.

@@ -13,7 +13,8 @@ mod cmd_shard;
 mod cmd_simulate;
 mod cmd_train;
 
-pub use cmd_train::{prepare_datasets, train_run, TrainOutcome};
+pub use cmd_train::{prepare_datasets, train_run, train_run_with, CkptPlan,
+                    TrainOutcome};
 
 use crate::cliopt::Args;
 
@@ -32,6 +33,22 @@ COMMANDS:
                    [--prefetch N]  per-rank batch-prefetch ring depth
                                    (default 2 = double buffer; 0 = build
                                    batches on the compute workers)
+                   [--save-every N --ckpt-dir DIR [--keep-last K]]
+                                   periodic v2 checkpoints: snapshot on
+                                   the step boundary, atomic write +
+                                   keep-newest-K rotation off the hot
+                                   loop (background writer thread)
+                   [--resume PATH] exact-state resume from a v2 file or
+                                   a --ckpt-dir rotation dir (newest);
+                                   bitwise-identical continuation —
+                                   data position, loss-scaler state and
+                                   config fingerprint are all restored,
+                                   and any config mismatch fails loudly.
+                                   Rerun the ORIGINAL command line plus
+                                   --resume: completed steps are
+                                   subtracted and the LR schedule keeps
+                                   the original total; phase-2 snapshots
+                                   of a --phase2 run resume into phase 2
                    [--trace exchange.json]  exchange + data-stall spans
   shard-data     build bshard files from a synthetic or real corpus (§4.1)
                    --out data/quickstart --docs 64 --shards 8 [--text file]

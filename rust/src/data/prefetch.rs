@@ -42,17 +42,20 @@ use crate::util::Pcg64;
 /// epoch order is re-drawn from [`ShardedDataset::epoch_order`] at every
 /// wrap, so long runs keep reshuffling deterministically.
 ///
-/// The masking RNG stream is `(seed, 0xDA7A + rank)` and is consumed
-/// strictly sequentially — masking is therefore a function of the
-/// cursor's *consumption order within a run*, exactly as in the old
-/// in-line path (a fresh run restarts the stream).
+/// The masking RNG is re-derived **per batch** from `(seed, rank, micro
+/// index)` — like the epoch order, masking is a pure function of the
+/// cursor *position*, never of run history.  This is what makes a
+/// checkpoint-resumed stream bitwise-identical to the uninterrupted one
+/// (the v2 resume-exactness guarantee): a cursor opened at micro `k`
+/// emits exactly the batches a from-zero cursor emits at `k, k+1, ...`.
+/// (The old sequentially-consumed stream made every restart replay
+/// different masks.)
 pub struct BatchCursor<'a> {
     ds: &'a ShardedDataset,
     cfg: MaskingConfig,
     seed: u64,
     batch: usize,
     seq: usize,
-    rng: Pcg64,
     epoch: usize,
     order: Vec<usize>,
     bpe: u64,
@@ -71,7 +74,6 @@ impl<'a> BatchCursor<'a> {
         let epoch = (start_micro / bpe) as usize;
         BatchCursor {
             order: ds.epoch_order(epoch, seed),
-            rng: Pcg64::with_stream(seed, 0xDA7A + ds.rank() as u64),
             ds,
             cfg,
             seed,
@@ -99,6 +101,15 @@ impl<'a> BatchCursor<'a> {
         self.bpe
     }
 
+    /// The position-keyed masking RNG for global micro-batch `micro`
+    /// (same idiom as [`ShardedDataset::epoch_order`]'s epoch keying).
+    fn mask_rng(&self, micro: u64) -> Pcg64 {
+        Pcg64::with_stream(
+            self.seed ^ micro.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            0xDA7A + self.ds.rank() as u64,
+        )
+    }
+
     /// Build the next batch in the stream into `out` (recycled in
     /// place) and advance the cursor.
     pub fn fill_next(&mut self, out: &mut Batch) {
@@ -108,8 +119,9 @@ impl<'a> BatchCursor<'a> {
             self.order = self.ds.epoch_order(epoch, self.seed);
         }
         let idx = (self.next % self.bpe) as usize;
+        let mut rng = self.mask_rng(self.next);
         self.ds.batch_into(&self.order, idx, self.batch, self.seq,
-                           &self.cfg, &mut self.rng, out);
+                           &self.cfg, &mut rng, out);
         self.next += 1;
     }
 }
@@ -268,6 +280,37 @@ mod tests {
         assert_eq!(a.epoch(), 1);
         a.fill_next(&mut buf_a);
         assert_eq!(a.epoch(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn cursor_resume_is_bitwise_identical_to_uninterrupted() {
+        // The data-layer half of the exact-resume guarantee: a cursor
+        // opened at micro k (what a restored trainer does) must emit
+        // exactly the batches the from-zero cursor emits from k on —
+        // masking included — across an epoch boundary.
+        let dir = std::env::temp_dir().join("bertdist_prefetch_exact");
+        let (vocab, ds) = setup(&dir);
+        let c = cfg(&vocab);
+        let mut full = BatchCursor::new(&ds[0], c.clone(), 77, 4, 32, 0);
+        let bpe = full.batches_per_epoch();
+        let n = 2 * bpe + 3;
+        let mut buf = Batch::zeros(4, 32);
+        let mut want: Vec<Batch> = Vec::new();
+        for _ in 0..n {
+            full.fill_next(&mut buf);
+            want.push(buf.clone());
+        }
+        // resume at every boundary, including mid-epoch and at the wrap
+        for k in [1, bpe - 1, bpe, bpe + 1, n - 1] {
+            let mut resumed =
+                BatchCursor::new(&ds[0], c.clone(), 77, 4, 32, k);
+            for i in k..n {
+                resumed.fill_next(&mut buf);
+                assert_eq!(buf, want[i as usize],
+                           "resume at {k}: micro {i} diverged");
+            }
+        }
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -11,6 +11,9 @@
 //! experiment needs: fine-tuning a pretrained checkpoint converges
 //! faster / lower than a random-init one.
 
+use std::path::Path;
+
+use crate::checkpoint::{self, AsyncCheckpointWriter, Checkpoint};
 use crate::data::special;
 use crate::metrics::LossCurve;
 use crate::runtime::{Engine, QaBatch, StepScratch};
@@ -85,11 +88,38 @@ pub fn build_qa_batch(examples: &[QaExample], seq: usize) -> QaBatch {
 }
 
 /// Fine-tuning outcome (the §5.3 artifact).
+///
+/// The curves (and `final_exact`, a tail mean over them) cover only
+/// the steps THIS call executed: a resumed run reports the post-resume
+/// span, so its curve metrics are not comparable to an uninterrupted
+/// run's even though `final_params` is bitwise identical.
 #[derive(Debug, Default)]
 pub struct FinetuneReport {
     pub loss: LossCurve,
     pub exact_match: LossCurve,
     pub final_exact: f64,
+    /// Fine-tuned parameters (encoder + QA head) after the last step —
+    /// what the resume-exactness tests compare bitwise.
+    pub final_params: Vec<f32>,
+}
+
+/// Checkpointing knobs for the fine-tune loop: the same v2 subsystem as
+/// the trainer (async rotated saves off the hot loop, exact resume from
+/// the newest rotation file).  Finetune snapshots carry a reduced
+/// fingerprint — (batch, seq, lr, seed), the fields that shape the
+/// synthetic example stream and update rule — validated on resume so a
+/// mismatched continuation fails loudly; with it, the per-step keyed
+/// example RNG makes a resumed run bitwise-identical to an
+/// uninterrupted one.
+pub struct FinetuneCkpt<'a> {
+    /// Rotation directory (`ckpt-*.bckp` files).
+    pub dir: &'a Path,
+    /// Steps between periodic saves (0 = only resume, never save).
+    pub save_every: usize,
+    /// Keep the newest K rotation files.
+    pub keep_last: usize,
+    /// Resume from the newest rotation file in `dir` when one exists.
+    pub resume: bool,
 }
 
 /// Extend a pretraining flat vector with a fresh QA head.
@@ -103,11 +133,59 @@ pub fn extend_with_head(pre_params: &[f32], n_ft: usize, rng: &mut Pcg64)
     out
 }
 
+/// The reduced fingerprint a finetune snapshot is stamped with: the
+/// knobs that shape the example stream and the update rule.  Unused
+/// trainer-only fields are zeroed (there is no distributed stream to
+/// pin here).
+fn finetune_fingerprint(batch: usize, seq: usize, lr: f32, seed: u64)
+    -> crate::checkpoint::Fingerprint {
+    crate::checkpoint::Fingerprint {
+        machines: 1,
+        gpus_per_machine: 1,
+        comm_mode: 0,
+        grad_wire_f16: false,
+        micro_batch: batch as u32,
+        seq_len: seq as u32,
+        optimizer: 0,
+        variant: 0,
+        bucket_elems: 0,
+        accum_steps: 1,
+        prefetch_depth: 0,
+        seed,
+        lr: lr as f64,
+        warmup_steps: 0,
+        mask_prob: 0.0,
+        max_predictions: 0,
+    }
+}
+
+/// The step-keyed example RNG: like the trainer's batch cursor, example
+/// generation is a pure function of `(seed, step index)`, never of run
+/// history — a resumed run regenerates exactly the batches the
+/// uninterrupted one would have seen.
+fn example_rng(seed: u64, step: usize) -> Pcg64 {
+    Pcg64::with_stream(
+        seed ^ (step as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        0x0A17,
+    )
+}
+
 /// Run QA fine-tuning for `steps` steps; `pre_params` is the pretrained
 /// checkpoint (or a random init for the from-scratch baseline).
 pub fn run_finetune(engine: &Engine, preset: &str, pre_params: &[f32],
                     steps: usize, batch: usize, seq: usize, lr: f32,
                     seed: u64) -> anyhow::Result<FinetuneReport> {
+    run_finetune_ckpt(engine, preset, pre_params, steps, batch, seq, lr,
+                      seed, None)
+}
+
+/// [`run_finetune`] with v2 checkpointing: periodic async rotated saves
+/// and exact resume from the newest rotation file.
+#[allow(clippy::too_many_arguments)]
+pub fn run_finetune_ckpt(engine: &Engine, preset: &str, pre_params: &[f32],
+                         steps: usize, batch: usize, seq: usize, lr: f32,
+                         seed: u64, ckpt: Option<FinetuneCkpt<'_>>)
+                         -> anyhow::Result<FinetuneReport> {
     let model = engine.model(preset)?;
     let n_ft = model.finetune_param_count;
     let step = engine.qa_step(preset, batch, seq)?;
@@ -117,6 +195,45 @@ pub fn run_finetune(engine: &Engine, preset: &str, pre_params: &[f32],
     let mut params = extend_with_head(pre_params, n_ft, &mut rng);
     let mut m = vec![0.0f32; n_ft];
     let mut v = vec![0.0f32; n_ft];
+    let mut start = 0usize;
+
+    // Checkpointing: resume first (overrides the fresh init), then
+    // stand up the background rotation writer.
+    let save_every = ckpt.as_ref().map_or(0, |c| c.save_every);
+    let stamp = finetune_fingerprint(batch, seq, lr, seed);
+    let mut writer = None;
+    if let Some(ck) = &ckpt {
+        if ck.resume {
+            if let Some(path) = checkpoint::latest_checkpoint(ck.dir)? {
+                let c = Checkpoint::load(&path)?;
+                anyhow::ensure!(
+                    c.params.len() == n_ft,
+                    "finetune checkpoint {} holds {} params, model wants {}",
+                    path.display(), c.params.len(), n_ft
+                );
+                // a snapshot from a different (batch, seq, lr, seed)
+                // run would silently diverge from both streams
+                c.ensure_fingerprint(&stamp)?;
+                anyhow::ensure!(
+                    (c.step as usize) < steps,
+                    "finetune checkpoint {} is already at step {} — \
+                     nothing left of the requested {} steps; raise \
+                     `steps` or start without resume",
+                    path.display(), c.step, steps
+                );
+                log::info!("finetune resume {}: step {}", path.display(),
+                           c.step);
+                start = c.step as usize;
+                params = c.params;
+                m = c.m;
+                v = c.v;
+            }
+        }
+        if ck.save_every > 0 {
+            writer = Some(AsyncCheckpointWriter::new(ck.dir, ck.keep_last)?);
+        }
+    }
+
     let mut report = FinetuneReport::default();
     let context_len = (seq - 8).min(16);
 
@@ -125,8 +242,9 @@ pub fn run_finetune(engine: &Engine, preset: &str, pre_params: &[f32],
     // counter versions the cached literal).
     let mut scratch = StepScratch::new();
     let mut grads = vec![0.0f32; n_ft];
-    for s in 0..steps {
-        let exs = gen_examples(&mut rng, batch, context_len,
+    for s in start..steps {
+        let mut ex_rng = example_rng(seed, s);
+        let exs = gen_examples(&mut ex_rng, batch, context_len,
                                model.config.vocab_size as u32);
         let qb = build_qa_batch(&exs, seq);
         let out = step.run_scratch(&mut scratch, &params, s as u64, &qb,
@@ -135,8 +253,23 @@ pub fn run_finetune(engine: &Engine, preset: &str, pre_params: &[f32],
         report.exact_match.push(s, out.exact as f64);
         apply.run(&mut params, &grads, &mut m, &mut v, (s + 1) as f32,
                   lr)?;
+        if let Some(w) = writer.as_mut() {
+            if (s + 1) % save_every == 0 {
+                w.save(|c| {
+                    c.step = (s + 1) as u64;
+                    c.data_step = (s + 1) as u64;
+                    c.fingerprint = Some(stamp);
+                    c.exact_data_position = true;
+                    c.fill_arrays(&params, &m, &v);
+                })?;
+            }
+        }
+    }
+    if let Some(w) = writer {
+        w.finish()?;
     }
     report.final_exact = report.exact_match.tail_mean(5);
+    report.final_params = params;
     Ok(report)
 }
 

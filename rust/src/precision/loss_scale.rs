@@ -16,6 +16,47 @@ pub enum StepVerdict {
     Skip,
 }
 
+/// The scaler's complete serializable state (checkpoint v2 §scaler
+/// section).  Restoring a scaler from this and feeding it the same
+/// overflow history produces bit-identical scales and verdicts as one
+/// that never stopped — the resume-exactness contract depends on the
+/// growth streak (`good_steps`) surviving a save/load, not just the
+/// scale itself.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScalerState {
+    pub scale: f64,
+    pub growth_factor: f64,
+    pub backoff_factor: f64,
+    pub max_scale: f64,
+    pub min_scale: f64,
+    pub growth_interval: u64,
+    pub good_steps: u64,
+    pub total_steps: u64,
+    pub skipped_steps: u64,
+    pub growths: u64,
+    pub backoffs: u64,
+}
+
+impl Default for ScalerState {
+    fn default() -> Self {
+        DynamicLossScaler::default().export()
+    }
+}
+
+impl ScalerState {
+    /// The state a v1 checkpoint implies: the saved scale under the
+    /// trainer's stock policy with zeroed counters (the growth streak
+    /// restarts — exactly what the legacy restore did).
+    pub fn legacy(scale: f64) -> ScalerState {
+        ScalerState {
+            scale,
+            ..DynamicLossScaler::new(65536.0)
+                .with_growth_interval(200)
+                .export()
+        }
+    }
+}
+
 /// Dynamic loss-scaler state machine.
 #[derive(Debug, Clone)]
 pub struct DynamicLossScaler {
@@ -92,6 +133,42 @@ impl DynamicLossScaler {
                 }
             }
             StepVerdict::Apply
+        }
+    }
+
+    /// Export the complete state for checkpointing (see [`ScalerState`]).
+    pub fn export(&self) -> ScalerState {
+        ScalerState {
+            scale: self.scale,
+            growth_factor: self.growth_factor,
+            backoff_factor: self.backoff_factor,
+            max_scale: self.max_scale,
+            min_scale: self.min_scale,
+            growth_interval: self.growth_interval as u64,
+            good_steps: self.good_steps as u64,
+            total_steps: self.total_steps as u64,
+            skipped_steps: self.skipped_steps as u64,
+            growths: self.growths as u64,
+            backoffs: self.backoffs as u64,
+        }
+    }
+
+    /// Rebuild a scaler from exported state.  Values are taken verbatim
+    /// (no asserts — the checkpoint layer has already CRC-validated the
+    /// bytes; a scaler must never panic on a loadable file).
+    pub fn from_state(s: &ScalerState) -> DynamicLossScaler {
+        DynamicLossScaler {
+            scale: s.scale,
+            growth_factor: s.growth_factor,
+            backoff_factor: s.backoff_factor,
+            growth_interval: (s.growth_interval as usize).max(1),
+            good_steps: s.good_steps as usize,
+            max_scale: s.max_scale,
+            min_scale: s.min_scale,
+            total_steps: s.total_steps as usize,
+            skipped_steps: s.skipped_steps as usize,
+            growths: s.growths as usize,
+            backoffs: s.backoffs as usize,
         }
     }
 
@@ -175,6 +252,52 @@ mod tests {
                     && s.scale() <= 2.0f64.powi(24)
             },
         );
+    }
+
+    #[test]
+    fn prop_export_import_is_future_exact() {
+        // The checkpoint contract: splitting a run at ANY step k —
+        // export the scaler, rebuild it from the state, continue — must
+        // be indistinguishable (scales, verdicts, counters) from never
+        // having stopped, including mid-growth-streak and mid-backoff.
+        testkit::check(
+            "scaler-resume-exact", 0xE5CA, 64,
+            |r: &mut Pcg64| {
+                let hist: Vec<bool> =
+                    (0..120).map(|_| r.chance(0.15)).collect();
+                let k = r.range_usize(0, hist.len() + 1);
+                (hist, k)
+            },
+            |(hist, k)| {
+                let mut a = DynamicLossScaler::new(4096.0)
+                    .with_growth_interval(7);
+                let mut b = DynamicLossScaler::new(4096.0)
+                    .with_growth_interval(7);
+                let mut verdicts_equal = true;
+                for &ov in &hist[..*k] {
+                    a.update(ov);
+                    b.update(ov);
+                }
+                let mut b = DynamicLossScaler::from_state(&b.export());
+                for &ov in &hist[*k..] {
+                    verdicts_equal &= a.update(ov) == b.update(ov);
+                }
+                verdicts_equal
+                    && a.scale().to_bits() == b.scale().to_bits()
+                    && a.export() == b.export()
+            },
+        );
+    }
+
+    #[test]
+    fn legacy_state_matches_trainer_stock_policy() {
+        let s = ScalerState::legacy(1024.0);
+        assert_eq!(s.scale, 1024.0);
+        assert_eq!(s.growth_interval, 200);
+        assert_eq!(s.good_steps, 0);
+        assert_eq!(s.total_steps, 0);
+        let sc = DynamicLossScaler::from_state(&s);
+        assert_eq!(sc.scale(), 1024.0);
     }
 
     #[test]

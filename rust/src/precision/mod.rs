@@ -15,7 +15,7 @@
 pub mod loss_scale;
 pub mod safety;
 
-pub use loss_scale::{DynamicLossScaler, StepVerdict};
+pub use loss_scale::{DynamicLossScaler, ScalerState, StepVerdict};
 pub use safety::{classify, rewrite_graph, DtypeAssignment, OpKind, Safety};
 
 /// Scan a gradient buffer for non-finite values (overflow check after

@@ -6,11 +6,72 @@
 //! to check invariants (allreduce ≡ serial sum, shard round-trip, bucket
 //! partition laws, tokenizer consistency, ...).
 
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::RunConfig;
+use crate::data::ShardedDataset;
+use crate::runtime::Engine;
+use crate::trainer::{TrainReport, Trainer};
 use crate::util::Pcg64;
 
 /// Number of random cases per property (kept modest: the suite has
 /// hundreds of properties and CI runs on one core).
 pub const DEFAULT_CASES: usize = 64;
+
+/// RAII temporary directory: created unique (name + pid + counter, so
+/// concurrent test binaries sharing a name never collide), removed on
+/// drop.  Replaces the hand-rolled `temp_dir().join(...)` +
+/// `remove_dir_all` dance the integration tests used to repeat.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn join<P: AsRef<Path>>(&self, name: P) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// Fresh unique temp directory under the system temp root.
+pub fn tmp_dir(name: &str) -> TempDir {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let c = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let path = std::env::temp_dir().join(format!(
+        "bertdist_{name}_{}_{c}", std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&path);
+    std::fs::create_dir_all(&path).expect("create temp dir");
+    TempDir { path }
+}
+
+/// Fresh unique temp directory for checkpoint files/rotation dirs (the
+/// resume tests' standard home).
+pub fn tmp_ckpt_dir(name: &str) -> TempDir {
+    tmp_dir(&format!("{name}_ckpt"))
+}
+
+/// Build a trainer for `cfg` and run it `steps` optimizer steps — the
+/// shared setup of the resume/e2e tests.  Argument order mirrors
+/// [`Trainer::new`] (`seq` before `batch`).
+pub fn train_to_step(engine: &Engine, cfg: &RunConfig,
+                     datasets: &[ShardedDataset], seq: usize, batch: usize,
+                     steps: usize, total_steps_for_lr: usize)
+                     -> anyhow::Result<(Trainer, TrainReport)> {
+    let mut t = Trainer::new(engine, cfg.clone(), seq, batch)?;
+    let report = t.run(datasets, steps, total_steps_for_lr)?;
+    Ok((t, report))
+}
 
 /// Run `prop` on `cases` random inputs drawn by `gen`.  Panics with the
 /// seed and case index on the first failure so it can be replayed.
@@ -103,6 +164,19 @@ pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tmp_dirs_are_unique_and_cleaned_on_drop() {
+        let a = tmp_dir("tk_unit");
+        let b = tmp_dir("tk_unit");
+        assert_ne!(a.path(), b.path());
+        assert!(a.path().is_dir() && b.path().is_dir());
+        std::fs::write(a.join("x"), b"1").unwrap();
+        let kept = a.path().to_path_buf();
+        drop(a);
+        assert!(!kept.exists(), "dropped TempDir must be removed");
+        assert!(b.path().is_dir());
+    }
 
     #[test]
     fn check_passes_valid_property() {

@@ -43,6 +43,13 @@
 //!    the post-update parameters (replicas are bitwise identical after
 //!    every sync — asserted in tests).
 //!
+//! 5. (optional) at the optimizer-step boundary the trainer snapshots
+//!    its complete resumable state — params/m/v, `step`, the monotone
+//!    `data_step`, the scaler's full state, and the config fingerprint —
+//!    into a recycled buffer; the atomic write and keep-last-K rotation
+//!    run on a background thread ([`crate::checkpoint`]).  Restoring a
+//!    v2 checkpoint resumes bitwise-identically to never having stopped.
+//!
 //! [`TrainReport`] carries the per-phase wall-clock split plus the
 //! pool's per-bucket exchange timings and the overlap-efficiency ratio
 //! (fraction of exchange hidden behind compute).  See DESIGN.md §2 for
@@ -54,6 +61,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::checkpoint::{AsyncCheckpointWriter, Checkpoint, Fingerprint};
 use crate::collectives::pool::{CollectivePool, MicroStats, RankCompute,
                                WireFormat};
 pub use crate::collectives::pool::CommMode;
@@ -103,12 +111,19 @@ pub struct TrainReport {
     /// data (paper §4.1's target).  Always in `[0, 1]`; 1.0 when the
     /// prefetch ring keeps every worker fed.
     pub data_efficiency: f64,
+    /// Periodic checkpoints snapshotted during the run (async rotation).
+    pub checkpoints: usize,
+    /// Hot-loop seconds those snapshots cost (recycled-buffer memcpy +
+    /// any wait for the background writer to free a buffer) — the
+    /// on-loop price of checkpointing; the writes themselves are off
+    /// the loop.
+    pub checkpoint_s: f64,
 }
 
 impl TrainReport {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "steps={} skipped={} final_loss={:.4} tokens/s={:.1} \
              compute={:.1}s allreduce={:.1}s apply={:.1}s wall={:.1}s \
              overlap_eff={:.0}% input_stall={:.2}s data_eff={:.0}%",
@@ -116,7 +131,12 @@ impl TrainReport {
             self.tokens_per_sec, self.compute_s, self.allreduce_s,
             self.apply_s, self.wall_s, self.overlap_efficiency * 100.0,
             self.input_stall_s, self.data_efficiency * 100.0
-        )
+        );
+        if self.checkpoints > 0 {
+            s.push_str(&format!(" ckpt={}x (stall {:.3}s)",
+                                self.checkpoints, self.checkpoint_s));
+        }
+        s
     }
 }
 
@@ -202,35 +222,91 @@ impl Trainer {
         })
     }
 
-    /// Restore parameters/optimizer state from a checkpoint.
-    pub fn restore(&mut self, ckpt: crate::checkpoint::Checkpoint) -> Result<()> {
-        anyhow::ensure!(ckpt.params.len() == self.params.len(),
-                        "checkpoint size mismatch");
+    /// This run's config identity — saved into every checkpoint and
+    /// validated against the checkpoint's on [`Self::restore`].
+    pub fn fingerprint(&self) -> Fingerprint {
+        Fingerprint::of(&self.cfg, self.train_step.batch,
+                        self.train_step.seq)
+    }
+
+    /// Exact-state restore: continuing from here is bitwise-identical
+    /// to the run that produced the checkpoint never having stopped.
+    ///
+    /// Fails loudly — BEFORE touching any trainer state — when the
+    /// checkpoint's config fingerprint does not match this run (a
+    /// mismatched resume would diverge silently).  v1 checkpoints have
+    /// no fingerprint and no `data_step`; they restore with the legacy
+    /// `data_step = step` fallback and a one-line warning (batches
+    /// consumed by AMP-skipped steps are not replayed).
+    pub fn restore(&mut self, ckpt: Checkpoint) -> Result<()> {
+        anyhow::ensure!(
+            ckpt.params.len() == self.params.len()
+                && ckpt.m.len() == self.m.len()
+                && ckpt.v.len() == self.v.len(),
+            "checkpoint holds {} params, model has {}",
+            ckpt.params.len(), self.params.len()
+        );
+        ckpt.ensure_fingerprint(&self.fingerprint())?;
+        self.data_step = if ckpt.exact_data_position {
+            ckpt.data_step as usize
+        } else {
+            log::warn!(
+                "v1 checkpoint: inexact data position — resuming the \
+                 data stream at data_step = step = {}",
+                ckpt.step
+            );
+            ckpt.step as usize
+        };
+        self.step = ckpt.step as usize;
+        self.scaler = DynamicLossScaler::from_state(&ckpt.scaler);
         self.params = ckpt.params;
         self.m = ckpt.m;
         self.v = ckpt.v;
-        self.step = ckpt.step as usize;
-        // Checkpoints predate the data counter; resume the stream at the
-        // applied-step count (skipped steps are not replayed — the only
-        // drift is the handful of overflow skips, same as before).
-        self.data_step = self.step;
-        self.scaler = DynamicLossScaler::new(ckpt.loss_scale)
-            .with_growth_interval(200);
         Ok(())
     }
 
-    /// Snapshot current state.
-    pub fn checkpoint(&self) -> crate::checkpoint::Checkpoint {
-        crate::checkpoint::Checkpoint {
-            step: self.step as u64,
-            loss_scale: self.scaler.scale(),
-            params: self.params.clone(),
-            m: self.m.clone(),
-            v: self.v.clone(),
-        }
+    /// Phase-change restore (paper §3.3): carry params/moments/step/
+    /// scaler into a trainer with a DIFFERENT batch geometry (phase 2
+    /// switches seq/batch), skipping the fingerprint gate that pins a
+    /// single training stream.  The monotone `data_step` counter is
+    /// carried over so rotation file names stay unique across phases.
+    pub fn restore_weights(&mut self, ckpt: Checkpoint) -> Result<()> {
+        anyhow::ensure!(
+            ckpt.params.len() == self.params.len()
+                && ckpt.m.len() == self.m.len()
+                && ckpt.v.len() == self.v.len(),
+            "checkpoint holds {} params, model has {}",
+            ckpt.params.len(), self.params.len()
+        );
+        self.step = ckpt.step as usize;
+        self.data_step = ckpt.data_step as usize;
+        self.scaler = DynamicLossScaler::from_state(&ckpt.scaler);
+        self.params = ckpt.params;
+        self.m = ckpt.m;
+        self.v = ckpt.v;
+        Ok(())
     }
 
-    /// Save a checkpoint to `path`.
+    /// Capture the complete resumable state into a recycled checkpoint
+    /// buffer (pure memcpy — what the hot loop pays per periodic save;
+    /// the background writer does the disk work).
+    pub fn snapshot_into(&self, out: &mut Checkpoint) {
+        out.step = self.step as u64;
+        out.data_step = self.data_step as u64;
+        out.scaler = self.scaler.export();
+        out.fingerprint = Some(self.fingerprint());
+        out.exact_data_position = true;
+        out.fill_arrays(&self.params, &self.m, &self.v);
+    }
+
+    /// Snapshot current state into a fresh checkpoint.
+    pub fn checkpoint(&self) -> Checkpoint {
+        let mut out = Checkpoint::new(0);
+        self.snapshot_into(&mut out);
+        out
+    }
+
+    /// Save a checkpoint to `path` (synchronous atomic write).
     pub fn save(&self, path: &Path) -> Result<()> {
         self.checkpoint().save(path)?;
         Ok(())
@@ -251,10 +327,30 @@ impl Trainer {
         self.pool.is_hierarchical()
     }
 
+    /// Monotone data-consumption counter (attempted optimizer steps,
+    /// including AMP-skipped ones) — the exact stream position a v2
+    /// checkpoint captures.
+    pub fn data_step(&self) -> usize {
+        self.data_step
+    }
+
     /// Run `steps` optimizer steps over the per-rank datasets.
     /// `datasets.len()` must equal the topology world size.
     pub fn run(&mut self, datasets: &[ShardedDataset], steps: usize,
                total_steps_for_lr: usize) -> Result<TrainReport> {
+        self.run_with_ckpt(datasets, steps, total_steps_for_lr, None)
+    }
+
+    /// [`Self::run`] with periodic async checkpointing: every
+    /// `save_every` steps (the second tuple field) the trainer
+    /// snapshots its state into one of the writer's recycled buffers at
+    /// the optimizer-step boundary; the atomic write + keep-last
+    /// rotation happen on the writer thread, off the hot loop.
+    pub fn run_with_ckpt(&mut self, datasets: &[ShardedDataset],
+                         steps: usize, total_steps_for_lr: usize,
+                         mut ckpt: Option<(&mut AsyncCheckpointWriter,
+                                           usize)>)
+                         -> Result<TrainReport> {
         anyhow::ensure!(
             datasets.len() == self.world,
             "need {} datasets (one per rank), got {}",
@@ -375,6 +471,17 @@ impl Trainer {
                     out.nsp_sum / denom, out.acc_sum / denom,
                     self.scaler.scale(), meter.recent()
                 );
+            }
+
+            // ---- 5. periodic async checkpoint at the optimizer-step
+            //         boundary: memcpy into a recycled snapshot buffer;
+            //         the atomic write runs on the writer thread ----
+            if let Some((writer, every)) = ckpt.as_mut() {
+                if *every > 0 && (local_step + 1) % *every == 0 {
+                    let stall = writer.save(|c| self.snapshot_into(c))?;
+                    report.checkpoint_s += stall;
+                    report.checkpoints += 1;
+                }
             }
         }
 

@@ -151,6 +151,190 @@ fn shard_then_train_roundtrip() {
 }
 
 #[test]
+fn train_resume_missing_file_is_a_clean_error() {
+    // --resume is validated before data/engine setup: a missing file
+    // must exit nonzero with a clear message, no artifacts required.
+    let out = bin()
+        .args(["train", "--resume", "/nonexistent/ckpt.bckp", "--steps",
+               "1"])
+        .output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("cannot resume from"), "{err}");
+    assert!(err.contains("/nonexistent/ckpt.bckp"), "{err}");
+}
+
+#[test]
+fn train_resume_empty_dir_is_a_clean_error() {
+    let dir = bertdist::testkit::tmp_ckpt_dir("cli_empty_resume");
+    let out = bin()
+        .args(["train", "--resume", dir.path().to_str().unwrap()])
+        .output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr)
+                .contains("no ckpt-*.bckp files"));
+}
+
+#[test]
+fn train_resume_fingerprint_mismatch_is_a_clean_error() {
+    // craft a v2 checkpoint pinned to topology 2M2G, then try to resume
+    // it on 1M1G: the config fingerprint must refuse, nonzero exit,
+    // before any artifacts or data are needed
+    use bertdist::checkpoint::{Checkpoint, Fingerprint};
+    use bertdist::config::RunConfig;
+    use bertdist::topology::Topology;
+    let dir = bertdist::testkit::tmp_ckpt_dir("cli_fp_mismatch");
+    let mut cfg = RunConfig::default();
+    cfg.cluster.topo = Topology::parse("2M2G").unwrap();
+    let mut ck = Checkpoint::new(16);
+    ck.fingerprint = Some(Fingerprint::of(&cfg, 8, 128));
+    let path = dir.join("pinned.bckp");
+    ck.save(&path).unwrap();
+    let out = bin()
+        .args(["train", "--resume", path.to_str().unwrap(), "--topo",
+               "1M1G"])
+        .output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("fingerprint"), "{err}");
+    assert!(err.contains("topology"), "{err}");
+}
+
+#[test]
+fn train_resume_falls_back_past_a_corrupt_newest_checkpoint() {
+    // the keep-last-K rotation's recovery depth: when the newest file
+    // is unreadable (e.g. power loss), --resume warns and uses the
+    // previous intact one instead of refusing to start
+    use bertdist::checkpoint::{self, Checkpoint, Fingerprint};
+    use bertdist::config::RunConfig;
+    let dir = bertdist::testkit::tmp_ckpt_dir("cli_fallback");
+    let empty = bertdist::testkit::tmp_dir("cli_fallback_nodata");
+    let mut ck = Checkpoint::new(8);
+    ck.step = 3;
+    ck.data_step = 3;
+    ck.fingerprint = Some(Fingerprint::of(&RunConfig::default(), 8, 128));
+    ck.save(&dir.join(checkpoint::checkpoint_file_name(3))).unwrap();
+    let mut bad =
+        std::fs::read(dir.join(checkpoint::checkpoint_file_name(3)))
+            .unwrap();
+    let mid = bad.len() / 2;
+    bad[mid] ^= 0x40;
+    std::fs::write(dir.join(checkpoint::checkpoint_file_name(9)), &bad)
+        .unwrap();
+    let out = bin()
+        .args(["train", "--resume", dir.path().to_str().unwrap(),
+               "--data-dir", empty.path().to_str().unwrap()])
+        .output().unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("warning: cannot read"), "{stderr}");
+    assert!(stdout.contains("resume checkpoint"), "{stdout}");
+    assert!(stdout.contains("step 3"), "{stdout}");
+    // the resume itself succeeded BEFORE data/engine setup; the run
+    // then stops at the (deliberately empty) data dir
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr.contains("no data at"), "{stderr}");
+}
+
+#[test]
+fn train_save_every_requires_ckpt_dir() {
+    let out = bin()
+        .args(["train", "--save-every", "2"])
+        .output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--ckpt-dir"));
+}
+
+#[test]
+fn train_ckpt_dir_without_save_every_is_rejected_not_inert() {
+    let dir = bertdist::testkit::tmp_ckpt_dir("cli_inert");
+    let out = bin()
+        .args(["train", "--ckpt-dir", dir.path().to_str().unwrap()])
+        .output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr)
+                .contains("--save-every"));
+}
+
+#[test]
+fn train_save_every_resume_round_trip() {
+    // run with periodic rotated checkpoints, then resume exactly from
+    // the rotation dir and check the reported starting step/loss scale
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    use bertdist::checkpoint;
+    let data = bertdist::testkit::tmp_dir("cli_rt_data");
+    let ckdir = bertdist::testkit::tmp_ckpt_dir("cli_rt");
+    let out = bin()
+        .args(["shard-data", "--out", data.path().to_str().unwrap(),
+               "--docs", "12", "--shards", "2", "--vocab-size", "512"])
+        .output().unwrap();
+    assert!(out.status.success(),
+            "{}", String::from_utf8_lossy(&out.stderr));
+
+    let train_args = |steps: &str| {
+        vec!["train".to_string(), "--preset".into(), "bert-micro".into(),
+             "--topo".into(), "1M2G".into(), "--steps".into(), steps.into(),
+             "--accum".into(), "1".into(), "--batch".into(), "2".into(),
+             "--seq".into(), "32".into(), "--lr".into(), "1e-3".into(),
+             "--log-every".into(), "0".into(),
+             "--data-dir".into(), data.path().to_str().unwrap().into()]
+    };
+    let mut first = train_args("4");
+    first.extend(["--ckpt-dir".into(),
+                  ckdir.path().to_str().unwrap().into(),
+                  "--save-every".into(), "2".into(), "--keep-last".into(),
+                  "2".into()]);
+    let out = bin()
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .args(&first)
+        .output().unwrap();
+    assert!(out.status.success(),
+            "stdout:\n{}\nstderr:\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout)
+                .contains("async checkpoints: 2 files"));
+
+    // rotation: exactly the two newest boundaries survive
+    let files = checkpoint::list_checkpoints(ckdir.path()).unwrap();
+    let steps: Vec<u64> = files.iter().map(|(s, _)| *s).collect();
+    assert_eq!(steps, vec![2, 4]);
+    let latest = checkpoint::latest_checkpoint(ckdir.path())
+        .unwrap().unwrap();
+    let ck = checkpoint::Checkpoint::load(&latest).unwrap();
+    assert_eq!(ck.step, 4);
+
+    // exact resume from the rotation dir toward a 6-step target: the
+    // reported starting step/scale must match the checkpoint on disk,
+    // and only the REMAINING steps run (completed ones are subtracted)
+    let mut second = train_args("6");
+    second.extend(["--resume".into(),
+                   ckdir.path().to_str().unwrap().into()]);
+    let out = bin()
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .args(&second)
+        .output().unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(),
+            "stdout:\n{text}\nstderr:\n{}",
+            String::from_utf8_lossy(&out.stderr));
+    assert!(text.contains("resume checkpoint"), "{text}");
+    assert!(text.contains(&format!("step {}, data_step {}, loss scale {}",
+                                   ck.step, ck.data_step,
+                                   ck.loss_scale())),
+            "{text}");
+    assert!(text.contains("resuming exactly"), "{text}");
+    assert!(text.contains("4/6 phase-1 steps already done — running 2 \
+                           more"),
+            "{text}");
+    assert!(text.contains("steps=2"), "only the remaining steps ran: \
+                                       {text}");
+}
+
+#[test]
 fn info_lists_artifacts() {
     if !have_artifacts() {
         eprintln!("skipping: no artifacts");

@@ -156,25 +156,31 @@ fn f16_wire_training_converges() {
 
 #[test]
 fn checkpoint_resume_is_exact() {
+    // (The deep resume-equivalence property sweep lives in
+    // checkpoint_resume.rs; this is the train_run-level smoke.)
     let Some(art) = artifacts() else {
         eprintln!("skipping: no artifacts");
         return;
     };
-    let dir = std::env::temp_dir().join("bertdist_it_ckpt");
-    make_data(&dir, 512, 2);
+    let dir = bertdist::testkit::tmp_dir("it_ckpt");
+    make_data(dir.path(), 512, 2);
     let engine = Engine::cpu(&art).unwrap();
     let cfg = base_cfg("1M2G");
-    let ck = dir.join("t.ckpt");
+    let ckdir = bertdist::testkit::tmp_ckpt_dir("it_ckpt");
+    let ck = ckdir.join("t.ckpt");
 
     // run 6 steps with a checkpoint at step 6
-    let out_a = train_run(&engine, &cfg, &dir, 6, 0, 2, 32, Some(&ck))
+    let out_a = train_run(&engine, &cfg, dir.path(), 6, 0, 2, 32, Some(&ck))
         .unwrap();
     assert!(ck.exists());
-    // resume and run 0 more steps: state must load cleanly
+    // the saved state is a v2 checkpoint with the full stream position
     let ckpt = bertdist::checkpoint::Checkpoint::load(&ck).unwrap();
     assert_eq!(ckpt.step as usize, out_a.trainer_step);
+    assert!(ckpt.exact_data_position);
+    assert_eq!(ckpt.data_step, 6, "no skips: data_step == attempted steps");
+    assert!(ckpt.fingerprint.is_some());
+    assert_eq!(ckpt.scaler.total_steps, 6);
     assert!(ckpt.params.iter().all(|p| p.is_finite()));
-    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -162,15 +162,17 @@ fn dataset_open_with_more_ranks_than_shards_fails_clearly() {
 
 #[test]
 fn checkpoint_corruption_blocks_resume() {
+    // (The full per-section truncate/flip matrix lives in
+    // checkpoint_resume.rs.)
+    let dir = bertdist::testkit::tmp_ckpt_dir("fi");
     let ck = bertdist::checkpoint::Checkpoint::new(64);
-    let path = std::env::temp_dir().join("bertdist_fi_ckpt.bin");
+    let path = dir.join("fi.bckp");
     ck.save(&path).unwrap();
     let mut bytes = std::fs::read(&path).unwrap();
     let mid = bytes.len() / 2;
     bytes[mid] ^= 0x10;
     std::fs::write(&path, &bytes).unwrap();
     assert!(bertdist::checkpoint::Checkpoint::load(&path).is_err());
-    let _ = std::fs::remove_file(&path);
 }
 
 // ---- pooled exchange failure paths (ISSUE 2 hardening) ----

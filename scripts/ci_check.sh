@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints (warnings are errors), and the full test
+# suite.  Run from anywhere; mirrors what a PR must pass.
+#
+# Usage: scripts/ci_check.sh
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "==> cargo clippy -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "ci_check OK"
