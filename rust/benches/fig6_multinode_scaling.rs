@@ -5,7 +5,8 @@
 //! Run: `cargo bench --bench fig6_multinode_scaling`
 
 use bertdist::collectives::hierarchical::nic_bytes_per_node;
-use bertdist::netsim::{hierarchical_allreduce_phases, ring_allreduce_time,
+use bertdist::netsim::{hierarchical_allreduce_phases,
+                       hierarchical_pipelined_phases, ring_allreduce_time,
                        Fabric};
 use bertdist::simulator::scaling::{figure6_topologies, weak_scaling};
 use bertdist::simulator::IterationModel;
@@ -54,15 +55,18 @@ fn main() {
              last.efficiency * 100.0);
 
     // ---- flat vs hierarchical exchange pricing (train.comm_mode) ----
-    // The same payload through both schedules the pooled executor can
-    // run, priced by netsim's executed-schedule model: the hierarchy
-    // always shrinks the time spent on the 10 Gb/s fabric (an m-leader
-    // ring instead of an 8m-rank ring), at the cost of 2(g-1) serialized
-    // full-payload PCIe transfers.
-    println!("\n=== flat vs hierarchical allreduce pricing (BERT-large \
-              grads, paper fabric) ===\n");
+    // The same payload through the three schedules the pooled executor
+    // can run, priced by netsim's executed-schedule models: the
+    // hierarchy always shrinks the time spent on the 10 Gb/s fabric (an
+    // m-leader ring instead of an 8m-rank ring) at the cost of 2(g-1)
+    // serialized full-payload PCIe transfers — and the chunked
+    // pipelined chain (`train.intra_node = ring`) amortizes those
+    // transfers across the members, overlapping them with the ring.
+    println!("\n=== flat vs hierarchical vs pipelined allreduce pricing \
+              (BERT-large grads, paper fabric) ===\n");
     let fabric = Fabric::paper();
     let bytes = 336_226_108.0 * 4.0;
+    let chunk_bytes = 4.0 * (1 << 20) as f64; // 1 Mi elems per chunk
     let rows: Vec<Vec<String>> = figure6_topologies()
         .iter()
         .filter(|t| t.machines > 1)
@@ -70,27 +74,37 @@ fn main() {
             let flat = ring_allreduce_time(t.world_size(), bytes,
                                            fabric.network);
             let p = hierarchical_allreduce_phases(t, bytes, &fabric);
+            let pipe = hierarchical_pipelined_phases(t, bytes, &fabric,
+                                                     chunk_bytes);
             assert!(p.net_s < flat,
                     "{t}: hierarchy must shrink network time \
                      ({} vs {flat})", p.net_s);
             assert!(nic_bytes_per_node(t, bytes, true)
                         < nic_bytes_per_node(t, bytes, false),
                     "{t}: hierarchy must shrink per-NIC bytes");
+            if t.gpus_per_machine > 1 {
+                assert!(pipe.wall_s < p.total(),
+                        "{t}: the pipelined chain must beat the \
+                         serialized leader ({} vs {})",
+                        pipe.wall_s, p.total());
+            }
             vec![
                 t.to_string(),
                 format!("{:.2} s", flat),
                 format!("{:.2} s", p.total()),
                 format!("{:.2} s", p.pcie_s),
                 format!("{:.2} s", p.net_s),
+                format!("{:.2} s ({})", pipe.wall_s, pipe.chunks),
                 format!("{:.2}x", flat / p.net_s),
             ]
         })
         .collect();
     println!("{}", render_table(
         &["topology", "flat ring", "hier total", "hier pcie", "hier net",
-          "net-time relief"],
+          "pipelined (chunks)", "net-time relief"],
         &rows));
     println!("(hier pcie is the executed leader-accumulate/broadcast \
-              cost — see netsim::hierarchical_allreduce_phases)");
+              cost; pipelined is the chunked intra-node chain at 4 MiB \
+              chunks — see netsim::hierarchical_pipelined_phases)");
     println!("\nfig6_multinode_scaling OK");
 }

@@ -17,8 +17,8 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
-use bertdist::collectives::pool::{CollectivePool, CommMode, MicroStats,
-                                  RankCompute, WireFormat};
+use bertdist::collectives::pool::{CollectivePool, CommMode, IntraNodeMode,
+                                  MicroStats, RankCompute, WireFormat};
 use bertdist::topology::Topology;
 use bertdist::collectives::ring::ring_allreduce_inplace;
 use bertdist::collectives::CollectiveGroup;
@@ -258,6 +258,65 @@ fn main() -> anyhow::Result<()> {
         let rate = format!("{:.1} steps/s", steps as f64 / hmin);
         rows.push(&name, hmin, rate.clone());
         hier_rows.push((label.to_string(), hmin * 1e3, rate));
+    }
+
+    // ---- serialized vs chunked-pipelined intra-node exchange (2M4G) --
+    // ISSUE 5 tentpole: under `intra_node = serial` the node leader
+    // pays (g-1) whole-bucket adds + (g-1) whole-bucket broadcast
+    // copies on ONE thread per bucket; the pipelined chain distributes
+    // that work across the member comm workers and overlaps it with
+    // the leader ring.  g = 4 here, so 3 members share the load.
+    let topo24 = Topology::parse("2M4G").unwrap();
+    let n_intra = if quick { 256 * 1024 } else { 1 << 21 };
+    let steps_intra = if quick { 10 } else { 25 };
+    let chunk_intra = n_intra / 32; // 4 buckets -> 8 chunks per bucket
+    let fill_intra = FillCompute { n: n_intra };
+    let mut intra_rows: Vec<(String, f64, String)> = Vec::new();
+    for (label, intra) in [("serial", IntraNodeMode::Serial),
+                           ("ring", IntraNodeMode::Ring)] {
+        let mut p = CollectivePool::with_intra(
+            topo24, n_intra, BucketRange::even_split(n_intra, 4),
+            WireFormat::F32, CommMode::Hierarchical, intra, chunk_intra);
+        assert!(p.is_hierarchical());
+        assert_eq!(p.is_intra_ring(), intra == IntraNodeMode::Ring);
+        p.step(&[], 1.0, 1, 0, true, &fill_intra)?; // warmup
+        let (imin, _, _) = bench_times(3, || {
+            for s in 0..steps_intra {
+                p.step(&[], 1.0, 1, s + 1, true, &fill_intra).unwrap();
+            }
+        });
+        let name =
+            format!("intra-node {label} exchange 2M4G ({steps_intra} steps)");
+        let rate = format!("{:.1} steps/s", steps_intra as f64 / imin);
+        rows.push(&name, imin, rate.clone());
+        intra_rows.push((label.to_string(), imin * 1e3, rate));
+    }
+    let (serial_min, ring_min) =
+        (intra_rows[0].1 / 1e3, intra_rows[1].1 / 1e3);
+    let intra_speedup = serial_min / ring_min;
+    println!("intra-node pipelined vs serialized @ 2M4G, {} KiB, chunk \
+              {} KiB: {intra_speedup:.2}x",
+             n_intra * 4 / 1024, chunk_intra * 4 / 1024);
+    // The win needs the member comm workers to actually run in
+    // parallel; on a core-starved box the chain physically cannot
+    // overlap, so only report there instead of failing on scheduling
+    // noise (same policy as the prefetch-vs-sync assertion).
+    let cores = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1);
+    if cores >= topo24.world_size() {
+        assert!(
+            ring_min < serial_min,
+            "chunked pipelined intra-node exchange must beat the \
+             serialized leader gather at g=4 (serial {serial_min:.4}s vs \
+             ring {ring_min:.4}s on {cores} cores)"
+        );
+    } else {
+        println!(
+            "note: only {cores} cores — skipping the pipelined-beats-\
+             serialized assertion (needs {})",
+            topo24.world_size()
+        );
     }
 
     // ---- single-threaded reference allreduce ----
@@ -635,6 +694,31 @@ fn main() -> anyhow::Result<()> {
         root.insert("rows".to_string(), Json::Arr(entries));
         std::fs::write(&hier_path, Json::Obj(root).to_string())?;
         println!("wrote {hier_path}");
+
+        // serialized-vs-pipelined intra-node section in its own file so
+        // the ISSUE-5 schedule's trajectory can be diffed independently
+        let intra_path = std::env::var("BENCH_INTRA_JSON_OUT")
+            .unwrap_or_else(|_| "BENCH_intranode.json".to_string());
+        let entries: Vec<Json> = intra_rows
+            .iter()
+            .map(|(name, ms, rate)| {
+                let mut m = BTreeMap::new();
+                m.insert("intra_node".to_string(), Json::Str(name.clone()));
+                m.insert("min_ms".to_string(), Json::Num(*ms));
+                m.insert("rate".to_string(), Json::Str(rate.clone()));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(),
+                    Json::Str("intra_node_exchange".to_string()));
+        root.insert("topology".to_string(), Json::Str("2M4G".to_string()));
+        root.insert("chunk_elems".to_string(),
+                    Json::Num(chunk_intra as f64));
+        root.insert("speedup".to_string(), Json::Num(intra_speedup));
+        root.insert("rows".to_string(), Json::Arr(entries));
+        std::fs::write(&intra_path, Json::Obj(root).to_string())?;
+        println!("wrote {intra_path}");
     }
 
     println!("perf_hotpath OK");

@@ -10,8 +10,8 @@
 //!
 //! Run: `cargo bench --bench table4_throughput`
 
-use bertdist::collectives::pool::{CollectivePool, CommMode, MicroStats,
-                                  RankCompute, WireFormat};
+use bertdist::collectives::pool::{CollectivePool, CommMode, IntraNodeMode,
+                                  MicroStats, RankCompute, WireFormat};
 use bertdist::data::masking::{build_batch, MaskingConfig};
 use bertdist::topology::Topology;
 use bertdist::data::{Batch, PairExample};
@@ -159,11 +159,18 @@ fn main() -> anyhow::Result<()> {
     let ranges22: std::sync::Arc<[BucketRange]> = BucketRange::even_split(n, 4);
     let mut flat_pool = CollectivePool::with_topology(
         topo, n, ranges22.clone(), WireFormat::F32, CommMode::Flat);
-    let mut hier_pool = CollectivePool::with_topology(
-        topo, n, ranges22, WireFormat::F32, CommMode::Hierarchical);
+    // serialized leader vs the chunked pipelined chain, same hierarchy
+    let mut hier_pool = CollectivePool::with_intra(
+        topo, n, ranges22.clone(), WireFormat::F32, CommMode::Hierarchical,
+        IntraNodeMode::Serial, n);
+    let mut ring_pool = CollectivePool::with_intra(
+        topo, n, ranges22, WireFormat::F32, CommMode::Hierarchical,
+        IntraNodeMode::Ring, (n / 16).max(1));
     assert!(!flat_pool.is_hierarchical() && hier_pool.is_hierarchical());
+    assert!(!hier_pool.is_intra_ring() && ring_pool.is_intra_ring());
     flat_pool.step(&params, 1.0, 1, 0, true, &compute)?; // warmup
     hier_pool.step(&params, 1.0, 1, 0, true, &compute)?;
+    ring_pool.step(&params, 1.0, 1, 0, true, &compute)?;
     let mut rows = Vec::new();
     let mut idx = 0usize;
     let (flat_min, _, _) = bench_times(5, || {
@@ -176,30 +183,38 @@ fn main() -> anyhow::Result<()> {
         last_hier = Some(
             hier_pool.step(&params, 1.0, 1, idx, true, &compute).unwrap());
     });
+    let (ring_min, _, _) = bench_times(5, || {
+        idx += 1;
+        ring_pool.step(&params, 1.0, 1, idx, true, &compute).unwrap();
+    });
     let hout = last_hier.unwrap();
     rows.push(vec!["flat ring x4".to_string(),
                    format!("{:.2} ms", flat_min * 1e3),
                    format!("{:.0} tok/s", tokens * 4.0 / flat_min)]);
-    rows.push(vec!["hierarchical x4".to_string(),
+    rows.push(vec!["hierarchical (serial) x4".to_string(),
                    format!("{:.2} ms", hier_min * 1e3),
                    format!("{:.0} tok/s", tokens * 4.0 / hier_min)]);
+    rows.push(vec!["hierarchical (pipelined) x4".to_string(),
+                   format!("{:.2} ms", ring_min * 1e3),
+                   format!("{:.0} tok/s", tokens * 4.0 / ring_min)]);
     println!("{}", render_table(&["comm mode", "min step", "throughput"],
                                 &rows));
     println!("hierarchical split: pcie {:.3} ms / net {:.3} ms per step",
              hout.comm_pcie_s * 1e3, hout.comm_net_s * 1e3);
     assert!(hout.comm_net_s <= hout.comm_s + 1e-12);
     {
-        // both schedules compute the same sums (to rounding)
+        // all three schedules compute the same sums (to rounding)
         let a = flat_pool.leader_grads();
         let b = hier_pool.leader_grads();
-        let max_rel = a.iter().zip(b.iter())
+        let c = ring_pool.leader_grads();
+        let max_rel = a.iter().zip(b.iter()).chain(a.iter().zip(c.iter()))
             .map(|(x, y)| {
                 let d = (x - y).abs();
                 d / x.abs().max(y.abs()).max(1e-6)
             })
             .fold(0.0f32, f32::max);
         assert!(max_rel < 1e-3,
-                "flat and hierarchical sums diverged: {max_rel}");
+                "flat/hierarchical/pipelined sums diverged: {max_rel}");
     }
 
     let f32_speedup = tput["fused_f32"] / tput["unfused_f32"];

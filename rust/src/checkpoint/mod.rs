@@ -29,10 +29,26 @@
 //! ```text
 //! BCKP | version u32 = 2 | step u64 | data_step u64 |
 //! scaler  (5 f64 + 6 u64 = 88 B) |
-//! fingerprint (10 u32 + 4 u64 + 2 f64 + 2 u64 = 104 B, first u32 is a
+//! fingerprint (10 u32 + 4 u64 + 2 f64 + 4 u64 = 120 B, first u32 is a
 //! present flag) |
 //! n u64 | params f32*n | m f32*n | v f32*n | crc32 u32
 //! ```
+//!
+//! **v2.1** (this revision) grew the fingerprint block in place: the
+//! formerly-reserved 10th u32 now carries the intra-node exchange mode
+//! (`train.intra_node`), and two u64 fields follow `max_predictions` —
+//! `chunk_elems` (the pipelined-exchange chunk size; like the intra
+//! mode it changes the reduction association, hence the numerics) and
+//! `data_manifest`, the CORPUS identity: a hash of the sorted shard
+//! manifest (`.bshard` names + sizes, see
+//! `data::pipeline::shard_manifest_hash`), so resuming the same config
+//! over a DIFFERENT dataset now fails loudly — the v2.0 gate covered
+//! config, not data.  A zero manifest means "unknown" (bare snapshots,
+//! tests) and is never produced by a real corpus; the gate only fires
+//! when both sides know their corpus.  The fixed header is now 240
+//! bytes (`n` moved from offset 216 to 232).  No v2.0 files exist
+//! outside this repo's own test runs, so the version number stays 2 —
+//! a truncated pre-v2.1 file surfaces as a clean `SizeMismatch`.
 //!
 //! v1 files (`version = 1`: `step, scale, n, params, m, v`) still load;
 //! they fall back to `data_step = step` and a fresh scaler at the saved
@@ -45,6 +61,23 @@
 //! through [`AsyncCheckpointWriter`]: the trainer memcpys its state into
 //! a recycled snapshot buffer and a background thread does the write and
 //! the keep-last-K rotation off the hot loop.
+//!
+//! ## Invariants
+//!
+//! * **Exact resume** — restoring a v2 checkpoint continues
+//!   bitwise-identically to the run never having stopped (masking is
+//!   position-keyed, the scaler state is complete, `data_step` is
+//!   monotone across AMP skips); asserted at every boundary by
+//!   `tests/checkpoint_resume.rs`.
+//! * **Never partial state** — `load` validates magic, CRC, and every
+//!   length before any field is parsed; a refused restore (fingerprint
+//!   or corpus mismatch) leaves the trainer untouched.
+//! * **Crash safety** — a crash can only lose the checkpoint being
+//!   written, never damage an existing one (write temp + fsync +
+//!   rename; stale `.tmp` files are pruned, never resumed from).
+//! * **Off-loop cost** — the hot loop pays one recycled-buffer memcpy
+//!   per periodic save; the only blocking case (writer a full write
+//!   behind) is timed and reported (`TrainReport.checkpoint_s`).
 
 pub mod writer;
 
@@ -55,7 +88,7 @@ use std::io::{Read, Write};
 use std::ops::Range;
 use std::path::Path;
 
-use crate::collectives::pool::CommMode;
+use crate::collectives::pool::{CommMode, IntraNodeMode};
 use crate::config::RunConfig;
 use crate::precision::ScalerState;
 use crate::util::crc32::Crc32;
@@ -67,7 +100,7 @@ const VERSION: u32 = 2;
 const V1_MIN_LEN: usize = 4 + 4 + 8 + 8 + 8 + 4;
 /// v2 fixed-header bytes (everything before the params array) — see
 /// [`v2_sections`] for the breakdown.
-const V2_HEADER: usize = 224;
+const V2_HEADER: usize = 240;
 /// Smallest possible v2 file (`n = 0`).
 const V2_MIN_LEN: usize = V2_HEADER + 4;
 
@@ -86,8 +119,8 @@ pub fn v2_sections(n: usize) -> Vec<(&'static str, Range<usize>)> {
         ("step", 8..16),
         ("data_step", 16..24),
         ("scaler", 24..112),
-        ("fingerprint", 112..216),
-        ("n", 216..224),
+        ("fingerprint", 112..232),
+        ("n", 232..240),
         ("params", p..p + 4 * n),
         ("m", p + 4 * n..p + 8 * n),
         ("v", p + 8 * n..p + 12 * n),
@@ -100,13 +133,7 @@ pub fn v2_sections(n: usize) -> Vec<(&'static str, Range<usize>)> {
 /// continue on any mismatch — every field here changes the training
 /// stream (data order, exchange schedule, or step semantics), so a
 /// silent mismatch means silent divergence.
-///
-/// Known limitation: the CORPUS identity (shard dir/contents) is not
-/// fingerprinted — the gate runs before any data is opened, and shard
-/// CRCs protect integrity, not identity.  Resuming the same config
-/// over a different corpus is therefore not detected; a shard-manifest
-/// hash is the planned fix (see ROADMAP follow-ups).
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Fingerprint {
     pub machines: u32,
     pub gpus_per_machine: u32,
@@ -123,6 +150,10 @@ pub struct Fingerprint {
     /// Compiled-artifact variant: 0 unfused_f32, 1 fused_f32, 2 bf16,
     /// 3 fused_bf16 (different kernels = different numerics).
     pub variant: u32,
+    /// [`IntraNodeMode`] as configured: 0 serial, 1 ring, 2 auto (the
+    /// chain and the serialized leader associate the node sum
+    /// differently, so the reduced low bits differ — v2.1 field).
+    pub intra_node: u32,
     pub bucket_elems: u64,
     pub accum_steps: u64,
     pub prefetch_depth: u64,
@@ -134,6 +165,16 @@ pub struct Fingerprint {
     /// Max MLM predictions per sequence (paper Table 6: 20 @128,
     /// 80 @512 — this also disambiguates phase-1 vs phase-2 snapshots).
     pub max_predictions: u64,
+    /// Pipelined-exchange chunk size (elements): chunk boundaries move
+    /// elements between leader-ring plan chunks, changing the ring's
+    /// reduction association (v2.1 field).
+    pub chunk_elems: u64,
+    /// CORPUS identity: hash of the sorted shard manifest (`.bshard`
+    /// file names + sizes; `data::pipeline::shard_manifest_hash`).
+    /// `0` = unknown — bare snapshots and data-less tests; the resume
+    /// gate only fires when BOTH sides know their corpus (v2.1 field;
+    /// the v2.0 gate covered config, not data).
+    pub data_manifest: u64,
 }
 
 fn comm_mode_code(m: CommMode) -> u32 {
@@ -148,6 +189,23 @@ fn comm_mode_name(code: u32) -> &'static str {
     match code {
         0 => "flat",
         1 => "hierarchical",
+        2 => "auto",
+        _ => "unknown",
+    }
+}
+
+fn intra_mode_code(m: IntraNodeMode) -> u32 {
+    match m {
+        IntraNodeMode::Serial => 0,
+        IntraNodeMode::Ring => 1,
+        IntraNodeMode::Auto => 2,
+    }
+}
+
+fn intra_mode_name(code: u32) -> &'static str {
+    match code {
+        0 => "serial",
+        1 => "ring",
         2 => "auto",
         _ => "unknown",
     }
@@ -203,6 +261,7 @@ impl Fingerprint {
             seq_len: seq_len as u32,
             optimizer: optimizer_code(&cfg.train.optimizer),
             variant: variant_code(&cfg.train.variant),
+            intra_node: intra_mode_code(cfg.train.intra_node),
             bucket_elems: cfg.train.bucket_elems as u64,
             accum_steps: cfg.train.accum_steps as u64,
             prefetch_depth: cfg.train.prefetch_depth as u64,
@@ -211,6 +270,8 @@ impl Fingerprint {
             warmup_steps: cfg.train.warmup_steps as u64,
             mask_prob: cfg.data.mask_prob,
             max_predictions: cfg.data.max_predictions as u64,
+            chunk_elems: cfg.train.chunk_elems as u64,
+            data_manifest: 0,
         }
     }
 
@@ -293,6 +354,26 @@ impl Fingerprint {
         if self.max_predictions != run.max_predictions {
             out.push(format!("max_predictions: checkpoint {}, run {}",
                              self.max_predictions, run.max_predictions));
+        }
+        if self.intra_node != run.intra_node {
+            out.push(format!("intra_node: checkpoint {}, run {}",
+                             intra_mode_name(self.intra_node),
+                             intra_mode_name(run.intra_node)));
+        }
+        if self.chunk_elems != run.chunk_elems {
+            out.push(format!("chunk_elems: checkpoint {}, run {}",
+                             self.chunk_elems, run.chunk_elems));
+        }
+        // Corpus identity gates only when BOTH sides know theirs — a
+        // zero manifest (bare snapshot, data-less test) never blocks.
+        if self.data_manifest != 0
+            && run.data_manifest != 0
+            && self.data_manifest != run.data_manifest {
+            out.push(format!(
+                "corpus: checkpoint shard manifest {:016x}, run {:016x} \
+                 (the dataset under the resume differs)",
+                self.data_manifest, run.data_manifest
+            ));
         }
         out
     }
@@ -427,31 +508,15 @@ impl Checkpoint {
                 w(&mut f, &mut crc, &x.to_le_bytes())?;
             }
             // fingerprint section (10 u32, 4 u64, lr f64, warmup u64,
-            // mask_prob f64, max_predictions u64; first u32 is a
-            // present flag, last u32 of the block is reserved padding)
+            // mask_prob f64, max_predictions/chunk_elems/data_manifest
+            // u64; first u32 is a present flag, the 10th u32 carries
+            // the intra-node mode — the v2.1 extensions).  An absent
+            // fingerprint writes the all-zero Default placeholder.
             let fp = self.fingerprint;
-            let d = Fingerprint {
-                machines: 0,
-                gpus_per_machine: 0,
-                comm_mode: 0,
-                grad_wire_f16: false,
-                micro_batch: 0,
-                seq_len: 0,
-                optimizer: 0,
-                variant: 0,
-                bucket_elems: 0,
-                accum_steps: 0,
-                prefetch_depth: 0,
-                seed: 0,
-                lr: 0.0,
-                warmup_steps: 0,
-                mask_prob: 0.0,
-                max_predictions: 0,
-            };
-            let p = fp.unwrap_or(d);
+            let p = fp.unwrap_or_default();
             for x in [fp.is_some() as u32, p.machines, p.gpus_per_machine,
                       p.comm_mode, p.grad_wire_f16 as u32, p.micro_batch,
-                      p.seq_len, p.optimizer, p.variant, 0u32] {
+                      p.seq_len, p.optimizer, p.variant, p.intra_node] {
                 w(&mut f, &mut crc, &x.to_le_bytes())?;
             }
             for x in [p.bucket_elems, p.accum_steps, p.prefetch_depth,
@@ -462,6 +527,8 @@ impl Checkpoint {
             w(&mut f, &mut crc, &p.warmup_steps.to_le_bytes())?;
             w(&mut f, &mut crc, &p.mask_prob.to_le_bytes())?;
             w(&mut f, &mut crc, &p.max_predictions.to_le_bytes())?;
+            w(&mut f, &mut crc, &p.chunk_elems.to_le_bytes())?;
+            w(&mut f, &mut crc, &p.data_manifest.to_le_bytes())?;
             w(&mut f, &mut crc, &(self.params.len() as u64).to_le_bytes())?;
             for arr in [&self.params, &self.m, &self.v] {
                 let bytes = unsafe {
@@ -547,7 +614,7 @@ impl Checkpoint {
         if bytes.len() < V2_MIN_LEN {
             return Err(CkptError::SizeMismatch);
         }
-        let n = get_u64(bytes, 216);
+        let n = get_u64(bytes, 232);
         let expect = n
             .checked_mul(12)
             .and_then(|b| b.checked_add(V2_MIN_LEN as u64))
@@ -579,6 +646,7 @@ impl Checkpoint {
                 seq_len: get_u32(bytes, 136),
                 optimizer: get_u32(bytes, 140),
                 variant: get_u32(bytes, 144),
+                intra_node: get_u32(bytes, 148),
                 bucket_elems: get_u64(bytes, 152),
                 accum_steps: get_u64(bytes, 160),
                 prefetch_depth: get_u64(bytes, 168),
@@ -587,6 +655,8 @@ impl Checkpoint {
                 warmup_steps: get_u64(bytes, 192),
                 mask_prob: get_f64(bytes, 200),
                 max_predictions: get_u64(bytes, 208),
+                chunk_elems: get_u64(bytes, 216),
+                data_manifest: get_u64(bytes, 224),
             })
         } else {
             None
@@ -627,6 +697,7 @@ mod tests {
             micro_batch: 8,
             seq_len: 128,
             optimizer: 0,
+            intra_node: 2,
             bucket_elems: 1 << 20,
             accum_steps: 4,
             prefetch_depth: 2,
@@ -635,6 +706,8 @@ mod tests {
             warmup_steps: 10,
             mask_prob: 0.15,
             max_predictions: 20,
+            chunk_elems: 1 << 16,
+            data_manifest: 0xFEED_0001,
             variant: 1,
         }
     }
@@ -792,6 +865,35 @@ mod tests {
         // fingerprint-less checkpoints pass the gate
         c.fingerprint = None;
         c.ensure_fingerprint(&run).unwrap();
+    }
+
+    #[test]
+    fn v21_fields_gate_intra_schedule_and_corpus() {
+        let mut c = Checkpoint::new(4);
+        c.fingerprint = Some(fp(1));
+        // intra-node schedule + chunk size changes are loud (they change
+        // the reduction association, hence the numerics)
+        let mut run = fp(1);
+        run.intra_node = 0;
+        run.chunk_elems = 4096;
+        let msg = c.ensure_fingerprint(&run).unwrap_err().to_string();
+        assert!(msg.contains("intra_node: checkpoint auto, run serial"),
+                "{msg}");
+        assert!(msg.contains("chunk_elems"), "{msg}");
+        // a different corpus (both manifests known) is loud
+        let mut run = fp(1);
+        run.data_manifest = 0xFEED_0002;
+        let msg = c.ensure_fingerprint(&run).unwrap_err().to_string();
+        assert!(msg.contains("corpus"), "{msg}");
+        // ...but an UNKNOWN manifest on either side never blocks
+        let mut run = fp(1);
+        run.data_manifest = 0;
+        c.ensure_fingerprint(&run).unwrap();
+        let mut c0 = Checkpoint::new(4);
+        let mut saved = fp(1);
+        saved.data_manifest = 0;
+        c0.fingerprint = Some(saved);
+        c0.ensure_fingerprint(&fp(1)).unwrap();
     }
 
     #[test]

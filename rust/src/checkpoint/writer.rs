@@ -125,6 +125,29 @@ impl AsyncCheckpointWriter {
     /// thread, priming the ring with two empty snapshot buffers (they
     /// size themselves to the model on first use, then recycle).
     /// Stale `.tmp` crash leftovers in `dir` are removed up front.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use bertdist::checkpoint::AsyncCheckpointWriter;
+    ///
+    /// let dir = std::env::temp_dir()
+    ///     .join(format!("bertdist_doc_writer_{}", std::process::id()));
+    /// # let _ = std::fs::remove_dir_all(&dir);
+    /// let mut writer = AsyncCheckpointWriter::new(&dir, 3)?;
+    /// // The hot loop pays only this memcpy into a recycled buffer;
+    /// // the atomic write + rotation run on the writer thread.
+    /// let exposed_s = writer.save(|c| {
+    ///     c.step = 1;
+    ///     c.data_step = 1;
+    ///     c.fill_arrays(&[0.5; 4], &[0.0; 4], &[0.0; 4]);
+    /// })?;
+    /// assert!(exposed_s >= 0.0);
+    /// let stats = writer.finish()?;
+    /// assert_eq!(stats.writes, 1);
+    /// # std::fs::remove_dir_all(&dir).ok();
+    /// # Ok::<(), bertdist::checkpoint::CkptError>(())
+    /// ```
     pub fn new(dir: &Path, keep_last: usize)
         -> Result<AsyncCheckpointWriter, CkptError> {
         std::fs::create_dir_all(dir)?;

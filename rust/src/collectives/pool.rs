@@ -26,6 +26,16 @@
 //!   `machines`, the "network"), then intra-node broadcast back — so the
 //!   payload crosses the slow inter-node fabric `2(M-1)/M` times instead
 //!   of riding a 2(N-1)-step world ring in lockstep with the PCIe hops;
+//! * **chunked pipelined intra-node exchange** ([`IntraNodeMode`],
+//!   `train.intra_node`, the default on multi-GPU nodes): instead of
+//!   `(g-1)` serialized whole-bucket transfers through the node leader
+//!   each way, every bucket splits into `chunk_elems`-sized chunks that
+//!   flow through a member chain — reduce-forward toward the leader,
+//!   copy-forward back — so per-member transfers overlap on their own
+//!   links, the leader ring starts on chunk 0 while chunk 1 is still
+//!   gathering, and reduced chunks broadcast while later chunks are
+//!   still ringing.  `intra_node = serial` keeps the old schedule (the
+//!   perf baseline `perf_hotpath` compares against);
 //! * **preallocated, reused scratch** — per-rank gradient accumulators,
 //!   per-bucket payload buffers, ring chunk plans, and wire message
 //!   vectors (recycled through per-worker free lists; the hierarchical
@@ -41,18 +51,33 @@
 //!   stay f32, exactly the paper's placement of the FP16 exchange on the
 //!   slow network.
 //!
-//! Determinism: given a deterministic [`RankCompute`], the reduced
-//! buffers are a pure function of the inputs and of the exchange
-//! schedule — the eager (overlap) and barrier orders are
-//! bitwise-identical to each other because the element-wise accumulation
-//! order is unchanged; the hierarchical schedule sums in a different
-//! (machine-grouped) association than the flat ring, so the two agree
-//! bitwise exactly when the gradient sums are exactly representable
-//! (asserted in tests) and to rounding error otherwise.  The
-//! leader-accumulate order is fixed (local rank 1, 2, … g-1 over
-//! dedicated per-member channels), so hierarchical results are
-//! reproducible run to run and bitwise identical across replicas.
-//! Asserted by `tests/pool_overlap.rs`.
+//! ## Invariants
+//!
+//! * **Bitwise determinism** — given a deterministic [`RankCompute`],
+//!   the reduced buffers are a pure function of the inputs and of the
+//!   exchange schedule: the eager (overlap) and barrier orders are
+//!   bitwise-identical to each other because the element-wise
+//!   accumulation order is unchanged; the hierarchical schedule sums in
+//!   a different (machine-grouped) association than the flat ring, so
+//!   the two agree bitwise exactly when the gradient sums are exactly
+//!   representable (asserted in tests) and to rounding error otherwise.
+//!   Every intra-node reduction order is fixed — serialized leader
+//!   accumulate adds local ranks 1, 2, … g-1 in order; the pipelined
+//!   chain reduces tail-to-head, `leader + (m1 + (m2 + …))`, with chunk
+//!   boundaries that never change the element-wise order — so results
+//!   are reproducible run to run and bitwise identical across replicas
+//!   in every mode.  Asserted by `tests/pool_overlap.rs` and
+//!   `tests/intra_node.rs`.
+//! * **Zero spawn, zero alloc** — the steady-state step spawns no
+//!   thread and performs no gradient-sized heap allocation in any
+//!   schedule (the chunk pipeline's payload vectors recycle through
+//!   per-worker free lists exactly like the ring wire messages; only
+//!   the first step primes them).
+//! * **Overlap efficiency ∈ [0, 1]** — exposed communication is
+//!   measured as pure `recv` wait, so the derived
+//!   `1 - exposed / total` ratio
+//!   ([`crate::metrics::ExchangeTimings::overlap_efficiency`]) is a
+//!   true fraction in every mode and schedule.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -125,6 +150,84 @@ impl std::fmt::Display for CommMode {
             CommMode::Auto => "auto",
         })
     }
+}
+
+/// Default chunk size (elements) for the pipelined intra-node exchange:
+/// 64 Ki f32 elements = 256 KiB per chunk, small enough that a bucket
+/// splits into several pipeline stages, large enough that per-chunk
+/// channel overhead stays negligible (`train.chunk_elems` overrides).
+pub const DEFAULT_CHUNK_ELEMS: usize = 1 << 16;
+
+/// How a bucket moves within a node under the hierarchical schedule
+/// (`train.intra_node`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IntraNodeMode {
+    /// The PR-2 schedule: `(g-1)` serialized whole-bucket transfers into
+    /// the node leader (gather) and back out (broadcast) — every byte
+    /// and every add funnels through the leader's port and thread.
+    Serial,
+    /// Chunked pipelined chain: each bucket splits into
+    /// `chunk_elems`-sized chunks that flow member-to-member toward the
+    /// leader (reduce-forward) and back (copy-forward), so per-member
+    /// transfers overlap on their own links instead of serializing
+    /// through the leader, and the inter-node ring starts on chunk 0
+    /// while chunk 1 is still gathering.
+    Ring,
+    /// Ring whenever the hierarchical schedule resolves (the topology
+    /// has node members to chain), serial otherwise.
+    #[default]
+    Auto,
+}
+
+impl IntraNodeMode {
+    /// Parse the `serial | ring | auto` config/CLI spelling.
+    pub fn parse(s: &str) -> std::result::Result<IntraNodeMode, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "serial" => Ok(IntraNodeMode::Serial),
+            "ring" | "chain" | "pipelined" => Ok(IntraNodeMode::Ring),
+            "auto" => Ok(IntraNodeMode::Auto),
+            other => Err(format!("'{other}': expected serial | ring | auto")),
+        }
+    }
+
+    /// Whether this mode runs the chunked pipelined chain on `topo`
+    /// (only meaningful when the hierarchical schedule resolves).
+    pub fn resolves_ring(self, topo: &Topology) -> bool {
+        match self {
+            IntraNodeMode::Serial => false,
+            IntraNodeMode::Ring | IntraNodeMode::Auto => {
+                topo.gpus_per_machine > 1
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for IntraNodeMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            IntraNodeMode::Serial => "serial",
+            IntraNodeMode::Ring => "ring",
+            IntraNodeMode::Auto => "auto",
+        })
+    }
+}
+
+/// Number of fixed-size chunks a bucket of `len` elements splits into
+/// (always >= 1, so zero-length buckets still move one sync message).
+fn num_chunks(len: usize, chunk_elems: usize) -> usize {
+    if len == 0 {
+        1
+    } else {
+        (len + chunk_elems - 1) / chunk_elems
+    }
+}
+
+/// Element range of chunk `c` within a bucket of `len` elements.
+fn chunk_span(len: usize, chunk_elems: usize, c: usize)
+    -> std::ops::Range<usize> {
+    let start = (c * chunk_elems).min(len);
+    let end = ((c + 1) * chunk_elems).min(len);
+    start..end
 }
 
 /// Per-micro-step scalar outputs a [`RankCompute`] reports back.
@@ -261,6 +364,18 @@ struct Bcast {
     net_s: f64,
 }
 
+/// One pipeline message of the chunked intra-node chain
+/// ([`IntraNodeMode::Ring`]): a (bucket, chunk) payload flowing
+/// leader-ward (partial node sums, `net_s = 0`) or member-ward (the
+/// reduced chunk, carrying the leader's per-chunk ring time so every
+/// rank reports the same PCIe/network split).
+struct ChunkMsg {
+    idx: usize,
+    chunk: usize,
+    data: Vec<f32>,
+    net_s: f64,
+}
+
 /// The role-specific channel endpoints a comm worker owns; built once at
 /// pool construction (the topology decides which variant each rank gets).
 enum CommWiring {
@@ -293,6 +408,31 @@ enum CommWiring {
         to_leader: Sender<(usize, Vec<f32>)>,
         from_leader: Receiver<Bcast>,
     },
+    /// Chunked pipelined node leader ([`IntraNodeMode::Ring`]): receives
+    /// pre-reduced chunk partials from the chain head (local rank 1),
+    /// rings each chunk over the other leaders, and sends the reduced
+    /// chunk back down the chain.
+    ChainLeader {
+        machine: usize,
+        machines: usize,
+        chunk_elems: usize,
+        up_rx: Receiver<ChunkMsg>,
+        down_tx: Sender<ChunkMsg>,
+        tx_next: Sender<RingMsg>,
+        rx_prev: Receiver<RingMsg>,
+    },
+    /// Chunked pipelined node member at local rank `l`: reduce-forwards
+    /// chunks toward the leader (adding its own slice to whatever the
+    /// tail-ward neighbours already summed) and copy-forwards reduced
+    /// chunks away from it.  `up_rx`/`down_tx` are `None` at the chain
+    /// tail (local rank g-1).
+    ChainMember {
+        chunk_elems: usize,
+        up_rx: Option<Receiver<ChunkMsg>>,
+        up_tx: Sender<ChunkMsg>,
+        down_rx: Receiver<ChunkMsg>,
+        down_tx: Option<Sender<ChunkMsg>>,
+    },
 }
 
 /// The persistent pool: `2 * world` threads plus the channels between
@@ -304,6 +444,8 @@ pub struct CollectivePool {
     wire: WireFormat,
     topo: Topology,
     hierarchical: bool,
+    intra_ring: bool,
+    chunk_elems: usize,
     job_txs: Vec<Sender<Job>>,
     result_rx: Receiver<RankResult>,
     /// Per-rank accumulated (and, post-step, reduced) flat gradients.
@@ -331,13 +473,64 @@ impl CollectivePool {
     /// or per-node member channels plus a `machines`-sized leader ring —
     /// and per-rank flat buffers of `n_elems`.  `ranges` is the shared
     /// bucket table (built once via [`crate::grad::bucket_ranges`] — no
-    /// per-step cloning).
+    /// per-step cloning).  The intra-node schedule defaults to
+    /// [`IntraNodeMode::Auto`] (the chunked pipelined chain whenever the
+    /// hierarchy resolves) at [`DEFAULT_CHUNK_ELEMS`]; use
+    /// [`Self::with_intra`] to pin it.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use bertdist::collectives::pool::{CollectivePool, CommMode,
+    ///                                   MicroStats, RankCompute,
+    ///                                   WireFormat};
+    /// use bertdist::grad::BucketRange;
+    /// use bertdist::topology::Topology;
+    ///
+    /// /// Every rank contributes a vector of ones.
+    /// struct Ones;
+    /// impl RankCompute for Ones {
+    ///     fn micro(&self, _rank: usize, _step: usize, _micro: usize,
+    ///              _params: &[f32], _scale: f32, out: &mut Vec<f32>)
+    ///              -> anyhow::Result<MicroStats> {
+    ///         out.resize(8, 0.0);
+    ///         out.fill(1.0);
+    ///         Ok(MicroStats::default())
+    ///     }
+    /// }
+    ///
+    /// // Two ranks on one node; workers and channels are wired ONCE
+    /// // here and reused by every subsequent `step`.
+    /// let ranges = BucketRange::even_split(8, 2);
+    /// let mut pool = CollectivePool::with_topology(
+    ///     Topology::new(1, 2), 8, ranges, WireFormat::F32,
+    ///     CommMode::Auto);
+    /// pool.step(&[], 1.0, 1, 0, true, &Ones)?;
+    /// // after the exchange every rank holds the cross-rank sum
+    /// assert!(pool.leader_grads().iter().all(|&gr| gr == 2.0));
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn with_topology(topo: Topology, n_elems: usize,
                          ranges: Arc<[BucketRange]>, wire: WireFormat,
                          mode: CommMode) -> CollectivePool {
+        Self::with_intra(topo, n_elems, ranges, wire, mode,
+                         IntraNodeMode::Auto, DEFAULT_CHUNK_ELEMS)
+    }
+
+    /// [`Self::with_topology`] with the intra-node schedule pinned:
+    /// `intra` picks serialized-leader vs chunked-pipelined-chain
+    /// transfers inside each node (`train.intra_node`), `chunk_elems`
+    /// the pipeline granularity (`train.chunk_elems`; values larger
+    /// than every bucket degrade gracefully to one chunk per bucket).
+    pub fn with_intra(topo: Topology, n_elems: usize,
+                      ranges: Arc<[BucketRange]>, wire: WireFormat,
+                      mode: CommMode, intra: IntraNodeMode,
+                      chunk_elems: usize) -> CollectivePool {
         let world = topo.world_size();
         assert!(world >= 1, "world must be >= 1");
         let hierarchical = mode.resolves_hierarchical(&topo);
+        let intra_ring = hierarchical && intra.resolves_ring(&topo);
+        let chunk_elems = chunk_elems.max(1);
         let g = topo.gpus_per_machine;
         let m = topo.machines;
         let accs: Arc<Vec<Mutex<Vec<f32>>>> = Arc::new(
@@ -377,26 +570,77 @@ impl CollectivePool {
                 lead_rxs.push(Some(rx));
             }
             for machine in 0..m {
-                let mut member_rxs = Vec::with_capacity(g - 1);
-                let mut member_txs = Vec::with_capacity(g - 1);
-                for local in 1..g {
-                    let (up_tx, up_rx) = channel::<(usize, Vec<f32>)>();
-                    let (down_tx, down_rx) = channel::<Bcast>();
-                    member_rxs.push(up_rx);
-                    member_txs.push(down_tx);
-                    wirings[machine * g + local] = Some(CommWiring::Member {
-                        to_leader: up_tx,
-                        from_leader: down_rx,
+                if intra_ring {
+                    // Chunked pipelined chain: adjacent-member channels
+                    // only.  `ups[l]` carries partial sums from local
+                    // rank l+1 to local rank l; `downs[l]` carries
+                    // reduced chunks from local rank l to l+1.
+                    let mut ups: Vec<(Option<Sender<ChunkMsg>>,
+                                      Option<Receiver<ChunkMsg>>)> =
+                        (0..g - 1)
+                            .map(|_| {
+                                let (tx, rx) = channel::<ChunkMsg>();
+                                (Some(tx), Some(rx))
+                            })
+                            .collect();
+                    let mut downs: Vec<(Option<Sender<ChunkMsg>>,
+                                        Option<Receiver<ChunkMsg>>)> =
+                        (0..g - 1)
+                            .map(|_| {
+                                let (tx, rx) = channel::<ChunkMsg>();
+                                (Some(tx), Some(rx))
+                            })
+                            .collect();
+                    for local in 1..g {
+                        wirings[machine * g + local] =
+                            Some(CommWiring::ChainMember {
+                                chunk_elems,
+                                up_rx: if local < g - 1 {
+                                    Some(ups[local].1.take().unwrap())
+                                } else {
+                                    None
+                                },
+                                up_tx: ups[local - 1].0.take().unwrap(),
+                                down_rx: downs[local - 1].1.take().unwrap(),
+                                down_tx: if local < g - 1 {
+                                    Some(downs[local].0.take().unwrap())
+                                } else {
+                                    None
+                                },
+                            });
+                    }
+                    wirings[machine * g] = Some(CommWiring::ChainLeader {
+                        machine,
+                        machines: m,
+                        chunk_elems,
+                        up_rx: ups[0].1.take().unwrap(),
+                        down_tx: downs[0].0.take().unwrap(),
+                        tx_next: lead_txs[(machine + 1) % m].take().unwrap(),
+                        rx_prev: lead_rxs[machine].take().unwrap(),
+                    });
+                } else {
+                    let mut member_rxs = Vec::with_capacity(g - 1);
+                    let mut member_txs = Vec::with_capacity(g - 1);
+                    for local in 1..g {
+                        let (up_tx, up_rx) = channel::<(usize, Vec<f32>)>();
+                        let (down_tx, down_rx) = channel::<Bcast>();
+                        member_rxs.push(up_rx);
+                        member_txs.push(down_tx);
+                        wirings[machine * g + local] =
+                            Some(CommWiring::Member {
+                                to_leader: up_tx,
+                                from_leader: down_rx,
+                            });
+                    }
+                    wirings[machine * g] = Some(CommWiring::Leader {
+                        machine,
+                        machines: m,
+                        member_rxs,
+                        member_txs,
+                        tx_next: lead_txs[(machine + 1) % m].take().unwrap(),
+                        rx_prev: lead_rxs[machine].take().unwrap(),
                     });
                 }
-                wirings[machine * g] = Some(CommWiring::Leader {
-                    machine,
-                    machines: m,
-                    member_rxs,
-                    member_txs,
-                    tx_next: lead_txs[(machine + 1) % m].take().unwrap(),
-                    rx_prev: lead_rxs[machine].take().unwrap(),
-                });
             }
         }
 
@@ -443,6 +687,8 @@ impl CollectivePool {
             wire,
             topo,
             hierarchical,
+            intra_ring,
+            chunk_elems,
             job_txs,
             result_rx,
             accs,
@@ -475,6 +721,34 @@ impl CollectivePool {
     /// (the resolved [`CommMode`], not the requested one).
     pub fn is_hierarchical(&self) -> bool {
         self.hierarchical
+    }
+
+    /// Whether the hierarchical exchange runs the chunked pipelined
+    /// chain inside each node (the resolved [`IntraNodeMode`]).
+    pub fn is_intra_ring(&self) -> bool {
+        self.intra_ring
+    }
+
+    /// Pipeline granularity of the intra-node chain, in elements.
+    pub fn chunk_elems(&self) -> usize {
+        self.chunk_elems
+    }
+
+    /// Chunks each bucket's exchange splits into: all 1 on a flat or
+    /// serialized-leader schedule, `ceil(len / chunk_elems)` per bucket
+    /// on the pipelined chain — what `--trace` uses to split the PCIe
+    /// spans per chunk.
+    pub fn chunks_per_bucket(&self) -> Vec<usize> {
+        self.ranges
+            .iter()
+            .map(|b| {
+                if self.intra_ring {
+                    num_chunks(b.len(), self.chunk_elems)
+                } else {
+                    1
+                }
+            })
+            .collect()
     }
 
     /// Run one optimizer step across all ranks: `micro_steps` calls to
@@ -808,6 +1082,17 @@ fn comm_worker(wire: WireFormat, ranges: &[BucketRange],
         CommWiring::Member { to_leader, from_leader } => {
             member_comm_loop(bucket_rx, reduced_tx, to_leader, from_leader);
         }
+        CommWiring::ChainLeader { machine, machines, chunk_elems, up_rx,
+                                  down_tx, tx_next, rx_prev } => {
+            chain_leader_comm_loop(machine, machines, wire, chunk_elems,
+                                   ranges, bucket_rx, reduced_tx, &up_rx,
+                                   &down_tx, tx_next, rx_prev);
+        }
+        CommWiring::ChainMember { chunk_elems, up_rx, up_tx, down_rx,
+                                  down_tx } => {
+            chain_member_comm_loop(chunk_elems, bucket_rx, reduced_tx,
+                                   up_rx, up_tx, down_rx, down_tx);
+        }
     }
 }
 
@@ -907,6 +1192,179 @@ fn leader_comm_loop(machine: usize, machines: usize, wire: WireFormat,
             let _ = tx.send(Bcast { idx, data: buf, net_s });
         }
         let exchange_s = t0.elapsed().as_secs_f64();
+        if reduced_tx.send(Reduced { idx, data, exchange_s, net_s }).is_err()
+        {
+            break;
+        }
+    }
+}
+
+/// Chunked pipelined node leader ([`IntraNodeMode::Ring`]): per chunk,
+/// one pre-reduced partial arrives from the chain head (local rank 1,
+/// already summing every tail-ward member), the chunk rings over the
+/// other node leaders, and the reduced chunk goes back down the chain —
+/// so the network starts on chunk 0 while the chain is still gathering
+/// chunk 1, and the leader's own work per bucket drops from `(g-1)`
+/// whole-bucket adds + copies to ONE add + ONE copy.
+#[allow(clippy::too_many_arguments)]
+fn chain_leader_comm_loop(machine: usize, machines: usize,
+                          wire: WireFormat, chunk_elems: usize,
+                          ranges: &[BucketRange],
+                          bucket_rx: Receiver<(usize, Vec<f32>)>,
+                          reduced_tx: Sender<Reduced>,
+                          up_rx: &Receiver<ChunkMsg>,
+                          down_tx: &Sender<ChunkMsg>,
+                          tx_next: Sender<RingMsg>,
+                          rx_prev: Receiver<RingMsg>) {
+    // Per-bucket chunk tables (range + leader-ring plan per chunk): a
+    // pure function of (machines, bucket length, chunk_elems), built
+    // once and reused forever.
+    let chunk_plans: Vec<Vec<(std::ops::Range<usize>, RingPlan)>> = ranges
+        .iter()
+        .map(|b| {
+            (0..num_chunks(b.len(), chunk_elems))
+                .map(|c| {
+                    let span = chunk_span(b.len(), chunk_elems, c);
+                    let plan = RingPlan::new(machines, span.len());
+                    (span, plan)
+                })
+                .collect()
+        })
+        .collect();
+    let mut free_f32: Vec<Vec<f32>> = Vec::new();
+    let mut free_u16: Vec<Vec<u16>> = Vec::new();
+    while let Ok((idx, mut data)) = bucket_rx.recv() {
+        let t0 = Instant::now();
+        let mut net_s = 0.0f64;
+        for (c, (span, plan)) in chunk_plans[idx].iter().enumerate() {
+            // The gather payload parked across the ring phase: its
+            // vector becomes this chunk's broadcast buffer, so the
+            // steady-state step allocates nothing.
+            let mut parked: Option<Vec<f32>> = None;
+            // Phase 1 — chunk gather ("PCIe"): the chain already summed
+            // local ranks g-1 .. 1 into this partial; adding our slice
+            // completes the node sum for the chunk.
+            match up_rx.recv() {
+                Ok(m) => {
+                    debug_assert_eq!((m.idx, m.chunk), (idx, c),
+                                     "chain chunk skew");
+                    for (d, s) in
+                        data[span.clone()].iter_mut().zip(m.data.iter()) {
+                        *d += *s;
+                    }
+                    parked = Some(m.data);
+                }
+                Err(_) => {
+                    // The chain head died; its own rank reports the
+                    // failure — keep the protocol moving with our
+                    // partial sum.
+                }
+            }
+            // Phase 2 — inter-node ring on this chunk only ("network"):
+            // starts while the chain is still gathering later chunks.
+            let tn = Instant::now();
+            ring_exchange(&mut data[span.clone()], plan, machine, wire,
+                          &tx_next, &rx_prev, &mut free_f32, &mut free_u16);
+            let chunk_net_s = tn.elapsed().as_secs_f64();
+            net_s += chunk_net_s;
+            // Phase 3 — chunk broadcast down the chain ("PCIe"),
+            // recycling the parked gather payload.
+            let mut buf = parked.unwrap_or_default();
+            buf.clear();
+            buf.extend_from_slice(&data[span.clone()]);
+            // A dead chain is its own ranks' failure; ignore here.
+            let _ = down_tx.send(ChunkMsg {
+                idx,
+                chunk: c,
+                data: buf,
+                net_s: chunk_net_s,
+            });
+        }
+        let exchange_s = t0.elapsed().as_secs_f64();
+        if reduced_tx.send(Reduced { idx, data, exchange_s, net_s }).is_err()
+        {
+            break;
+        }
+    }
+}
+
+/// Chunked pipelined node member: reduce-forward chunks toward the
+/// leader (fixed tail-to-head order, so the node sum stays
+/// deterministic: `leader + (m1 + (m2 + ... + m_{g-1}))` elementwise),
+/// then copy-forward the reduced chunks away from it.  Each member's
+/// sends ride its own link concurrently with every other member's —
+/// the serialized leader port of [`IntraNodeMode::Serial`] is gone.
+fn chain_member_comm_loop(chunk_elems: usize,
+                          bucket_rx: Receiver<(usize, Vec<f32>)>,
+                          reduced_tx: Sender<Reduced>,
+                          up_rx: Option<Receiver<ChunkMsg>>,
+                          up_tx: Sender<ChunkMsg>,
+                          down_rx: Receiver<ChunkMsg>,
+                          down_tx: Option<Sender<ChunkMsg>>) {
+    // Chunk payload free list: primed by the first bucket, then
+    // self-sustaining (up-pass pops are balanced by received partials
+    // on inner members and by the down pass at the chain tail).
+    let mut free: Vec<Vec<f32>> = Vec::new();
+    'buckets: while let Ok((idx, mut data)) = bucket_rx.recv() {
+        let t0 = Instant::now();
+        let len = data.len();
+        let nchunks = num_chunks(len, chunk_elems);
+        // Up pass — reduce-forward toward the leader.
+        for c in 0..nchunks {
+            let span = chunk_span(len, chunk_elems, c);
+            let mut buf = free.pop().unwrap_or_default();
+            buf.clear();
+            buf.extend_from_slice(&data[span]);
+            if let Some(rx) = &up_rx {
+                match rx.recv() {
+                    Ok(m) => {
+                        debug_assert_eq!((m.idx, m.chunk), (idx, c),
+                                         "chain chunk skew");
+                        for (d, s) in buf.iter_mut().zip(m.data.iter()) {
+                            *d += *s;
+                        }
+                        free.push(m.data);
+                    }
+                    Err(_) => {
+                        // Tail-ward neighbour died (its rank reports
+                        // it); forward our partial so the leader side
+                        // keeps moving.
+                    }
+                }
+            }
+            if up_tx
+                .send(ChunkMsg { idx, chunk: c, data: buf, net_s: 0.0 })
+                .is_err()
+            {
+                // Leader-ward neighbour gone: dropping reduced_tx
+                // surfaces the failure at our compute worker's recv.
+                break 'buckets;
+            }
+        }
+        // Down pass — copy-forward the reduced chunks; the tail keeps
+        // the payload vectors for the next bucket's up pass.
+        let mut net_s = 0.0f64;
+        for c in 0..nchunks {
+            let m = match down_rx.recv() {
+                Ok(m) => m,
+                Err(_) => break 'buckets,
+            };
+            debug_assert_eq!((m.idx, m.chunk), (idx, c),
+                             "chain chunk skew");
+            let span = chunk_span(len, chunk_elems, c);
+            data[span].copy_from_slice(&m.data);
+            net_s += m.net_s;
+            match &down_tx {
+                Some(tx) => {
+                    let _ = tx.send(m);
+                }
+                None => free.push(m.data),
+            }
+        }
+        let exchange_s = t0.elapsed().as_secs_f64();
+        // The member's wall covers the whole pipeline; the network
+        // share is what the leader measured (capped by our wall).
+        let net_s = net_s.min(exchange_s);
         if reduced_tx.send(Reduced { idx, data, exchange_s, net_s }).is_err()
         {
             break;
@@ -1356,6 +1814,185 @@ mod tests {
         let synth = Synth { n };
         pool.step(&[], 1.0, 1, 1, true, &synth).unwrap();
         let want = expected(4, n, 1, 1);
+        testkit::assert_allclose(&pool.leader_grads(), &want, 1e-3, 1e-5);
+    }
+
+    // ------------------------------- chunked pipelined intra exchange --
+
+    #[test]
+    fn intra_mode_parses_and_resolves() {
+        assert_eq!(IntraNodeMode::parse("serial").unwrap(),
+                   IntraNodeMode::Serial);
+        assert_eq!(IntraNodeMode::parse(" Ring ").unwrap(),
+                   IntraNodeMode::Ring);
+        assert_eq!(IntraNodeMode::parse("auto").unwrap(),
+                   IntraNodeMode::Auto);
+        assert!(IntraNodeMode::parse("tree").is_err());
+        assert_eq!(IntraNodeMode::Auto.to_string(), "auto");
+        assert_eq!(IntraNodeMode::Ring.to_string(), "ring");
+
+        let multi = Topology::new(2, 4);
+        let one_gpu = Topology::new(8, 1);
+        assert!(IntraNodeMode::Auto.resolves_ring(&multi));
+        assert!(IntraNodeMode::Ring.resolves_ring(&multi));
+        assert!(!IntraNodeMode::Serial.resolves_ring(&multi));
+        assert!(!IntraNodeMode::Auto.resolves_ring(&one_gpu));
+    }
+
+    #[test]
+    fn chunk_helpers_tile_buckets() {
+        assert_eq!(num_chunks(0, 8), 1);
+        assert_eq!(num_chunks(8, 8), 1);
+        assert_eq!(num_chunks(9, 8), 2);
+        assert_eq!(num_chunks(5, 100), 1); // chunk > bucket degenerate
+        let len = 23;
+        let chunk = 7;
+        let mut covered = 0;
+        for c in 0..num_chunks(len, chunk) {
+            let s = chunk_span(len, chunk, c);
+            assert_eq!(s.start, covered);
+            covered = s.end;
+        }
+        assert_eq!(covered, len);
+        assert_eq!(chunk_span(0, 8, 0), 0..0);
+    }
+
+    #[test]
+    fn chain_matches_serial_bitwise_on_exact_grads_across_chunk_sizes() {
+        // The Synth values are multiples of 0.25 with small magnitude,
+        // so every partial sum is exactly representable — the chain's
+        // tail-to-head association and the serialized leader's
+        // head-to-tail association must agree to the bit, at any chunk
+        // granularity (including 1 elem and chunk > bucket).
+        let topo = Topology::new(2, 3);
+        let (n, k) = (157, 2);
+        let synth = Synth { n };
+        let mut serial = CollectivePool::with_intra(
+            topo, n, full_ranges(n, 3), WireFormat::F32,
+            CommMode::Hierarchical, IntraNodeMode::Serial, 64);
+        assert!(serial.is_hierarchical() && !serial.is_intra_ring());
+        serial.step(&[], 1.0, k, 5, true, &synth).unwrap();
+        for chunk in [1usize, 7, 64, 10_000] {
+            let mut ring = CollectivePool::with_intra(
+                topo, n, full_ranges(n, 3), WireFormat::F32,
+                CommMode::Hierarchical, IntraNodeMode::Ring, chunk);
+            assert!(ring.is_intra_ring());
+            ring.step(&[], 1.0, k, 5, true, &synth).unwrap();
+            for r in 0..topo.world_size() {
+                let (a, b) = (serial.rank_grads(r), ring.rank_grads(r));
+                for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(),
+                               "chunk={chunk} rank {r} [{i}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chain_default_resolves_and_reports_chunks() {
+        let topo = Topology::new(2, 2);
+        let n = 300;
+        let pool = CollectivePool::with_intra(
+            topo, n, full_ranges(n, 2), WireFormat::F32, CommMode::Auto,
+            IntraNodeMode::Auto, 64);
+        assert!(pool.is_hierarchical() && pool.is_intra_ring());
+        assert_eq!(pool.chunk_elems(), 64);
+        // 2 buckets of 150 elems -> ceil(150/64) = 3 chunks each
+        assert_eq!(pool.chunks_per_bucket(), vec![3, 3]);
+        // serial mode reports 1 chunk per bucket
+        let serial = CollectivePool::with_intra(
+            topo, n, full_ranges(n, 2), WireFormat::F32, CommMode::Auto,
+            IntraNodeMode::Serial, 64);
+        assert_eq!(serial.chunks_per_bucket(), vec![1, 1]);
+        // and so does a flat pool regardless of intra mode
+        let flat = CollectivePool::with_intra(
+            topo, n, full_ranges(n, 2), WireFormat::F32, CommMode::Flat,
+            IntraNodeMode::Ring, 64);
+        assert!(!flat.is_intra_ring());
+        assert_eq!(flat.chunks_per_bucket(), vec![1, 1]);
+    }
+
+    #[test]
+    fn chain_overlap_and_barrier_are_bitwise_identical() {
+        let topo = Topology::new(2, 3);
+        let (n, k) = (211, 2);
+        for wire in [WireFormat::F32, WireFormat::F16] {
+            let mut a = CollectivePool::with_intra(
+                topo, n, full_ranges(n, 4), wire, CommMode::Auto,
+                IntraNodeMode::Ring, 32);
+            let mut b = CollectivePool::with_intra(
+                topo, n, full_ranges(n, 4), wire, CommMode::Auto,
+                IntraNodeMode::Ring, 32);
+            let synth = Synth { n };
+            a.step(&[], 1.0, k, 1, true, &synth).unwrap();
+            b.step(&[], 1.0, k, 1, false, &synth).unwrap();
+            for r in 0..topo.world_size() {
+                let (ga, gb) = (a.rank_grads(r), b.rank_grads(r));
+                for (x, y) in ga.iter().zip(gb.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{wire:?} rank {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chain_survives_reuse_and_stays_deterministic() {
+        // 40 steps through one chain pool: stats intact, replicas
+        // bitwise identical, results match the serial oracle.
+        let topo = Topology::new(2, 4);
+        let (n, k) = (523, 2);
+        let mut pool = CollectivePool::with_intra(
+            topo, n, full_ranges(n, 3), WireFormat::F32, CommMode::Auto,
+            IntraNodeMode::Ring, 100);
+        let synth = Synth { n };
+        let world = topo.world_size();
+        for s in 0..40 {
+            let out = pool.step(&[], 1.0, k, s, true, &synth).unwrap();
+            assert!((out.loss_sum - (world * k) as f64).abs() < 1e-9);
+            assert!(out.comm_net_s <= out.comm_s + 1e-12);
+            if s % 13 == 0 || s == 39 {
+                let want = expected(world, n, s, k);
+                testkit::assert_allclose(&pool.leader_grads(), &want, 1e-2,
+                                         1e-4);
+                let leader = pool.leader_grads().clone();
+                for r in 1..world {
+                    let other = pool.rank_grads(r);
+                    for (x, y) in leader.iter().zip(other.iter()) {
+                        assert_eq!(x.to_bits(), y.to_bits(),
+                                   "step {s} rank {r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chain_compute_error_is_reported_not_deadlocked() {
+        struct Failing {
+            n: usize,
+        }
+        impl RankCompute for Failing {
+            fn micro(&self, rank: usize, _s: usize, _m: usize, _p: &[f32],
+                     _sc: f32, out: &mut Vec<f32>) -> Result<MicroStats> {
+                // rank 5 is the chain TAIL on 2M3G (machine 1, local 2)
+                anyhow::ensure!(rank != 5, "injected failure on rank 5");
+                out.resize(self.n, 0.0);
+                out.fill(1.0);
+                Ok(MicroStats::default())
+            }
+        }
+        let topo = Topology::new(2, 3);
+        let n = 96;
+        let mut pool = CollectivePool::with_intra(
+            topo, n, full_ranges(n, 2), WireFormat::F32, CommMode::Auto,
+            IntraNodeMode::Ring, 16);
+        let err = pool.step(&[], 1.0, 1, 0, true, &Failing { n })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("rank 5"));
+        // the pool must still be usable afterwards
+        let synth = Synth { n };
+        pool.step(&[], 1.0, 1, 1, true, &synth).unwrap();
+        let want = expected(topo.world_size(), n, 1, 1);
         testkit::assert_allclose(&pool.leader_grads(), &want, 1e-3, 1e-5);
     }
 

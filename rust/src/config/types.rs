@@ -1,7 +1,8 @@
 //! Typed run configuration assembled from CLI + TOML (paper Tables 1/2/6).
 
 use super::toml::TomlDoc;
-use crate::collectives::pool::CommMode;
+use crate::collectives::pool::{CommMode, IntraNodeMode,
+                               DEFAULT_CHUNK_ELEMS};
 use crate::topology::Topology;
 
 /// Training hyper-parameters (per-phase values live in `phases.rs`).
@@ -32,6 +33,17 @@ pub struct TrainConfig {
     /// `auto` = hierarchical whenever the topology has multiple machines
     /// AND multiple GPUs per machine.
     pub comm_mode: CommMode,
+    /// Intra-node schedule of the hierarchical exchange: `serial` =
+    /// the (g-1) serialized whole-bucket leader transfers each way,
+    /// `ring` = the chunked pipelined member chain (per-member
+    /// transfers overlap; the inter-node ring starts on chunk 0 while
+    /// chunk 1 is still gathering), `auto` = ring whenever the
+    /// hierarchy resolves (CLI `--intra-node`).
+    pub intra_node: IntraNodeMode,
+    /// Chunk size (elements) of the pipelined intra-node exchange (CLI
+    /// `--chunk-elems`); values larger than a bucket degrade to one
+    /// chunk per bucket (the serialized schedule's granularity).
+    pub chunk_elems: usize,
     /// Gradient bucket size threshold in elements (DDP-style).
     pub bucket_elems: usize,
     /// Batch-prefetch ring depth per rank (paper §4.1: input prep must
@@ -71,6 +83,8 @@ impl Default for TrainConfig {
             overlap: true,
             grad_wire_f16: false,
             comm_mode: CommMode::Auto,
+            intra_node: IntraNodeMode::Auto,
+            chunk_elems: DEFAULT_CHUNK_ELEMS,
             bucket_elems: 1 << 20,
             prefetch_depth: 2,
             steps: 100,
@@ -170,6 +184,12 @@ impl RunConfig {
         let comm = doc.str("train.comm_mode", &c.train.comm_mode.to_string());
         c.train.comm_mode = CommMode::parse(&comm)
             .map_err(|e| anyhow::anyhow!("train.comm_mode: {e}"))?;
+        let intra =
+            doc.str("train.intra_node", &c.train.intra_node.to_string());
+        c.train.intra_node = IntraNodeMode::parse(&intra)
+            .map_err(|e| anyhow::anyhow!("train.intra_node: {e}"))?;
+        c.train.chunk_elems =
+            doc.int("train.chunk_elems", c.train.chunk_elems as i64) as usize;
         c.train.bucket_elems =
             doc.int("train.bucket_elems", c.train.bucket_elems as i64) as usize;
         c.train.prefetch_depth =
@@ -218,6 +238,8 @@ impl RunConfig {
         anyhow::ensure!(self.train.accum_steps >= 1, "accum_steps must be >= 1");
         anyhow::ensure!(self.train.bucket_elems >= 1,
                         "bucket_elems must be >= 1");
+        anyhow::ensure!(self.train.chunk_elems >= 1,
+                        "chunk_elems must be >= 1");
         anyhow::ensure!(self.train.steps >= 1, "steps must be >= 1");
         anyhow::ensure!(self.data.micro_batch >= 1, "micro_batch must be >= 1");
         anyhow::ensure!(
@@ -279,6 +301,28 @@ mod tests {
     fn bad_topology_is_error() {
         let doc = TomlDoc::parse("[cluster]\ntopo = \"banana\"\n").unwrap();
         assert!(RunConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn intra_node_knobs_parse_and_validate() {
+        let doc = TomlDoc::parse(
+            "[train]\nintra_node = \"serial\"\nchunk_elems = 4096\n",
+        ).unwrap();
+        let c = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.train.intra_node, IntraNodeMode::Serial);
+        assert_eq!(c.train.chunk_elems, 4096);
+        // defaults: pipelined chain at DEFAULT_CHUNK_ELEMS
+        let d = RunConfig::default();
+        assert_eq!(d.train.intra_node, IntraNodeMode::Auto);
+        assert_eq!(d.train.chunk_elems, DEFAULT_CHUNK_ELEMS);
+        // bad spellings fail loudly
+        let bad = TomlDoc::parse("[train]\nintra_node = \"tree\"\n").unwrap();
+        let err = RunConfig::from_toml(&bad).map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("intra_node"));
+        // chunk_elems = 0 is rejected
+        let mut c = RunConfig::default();
+        c.train.chunk_elems = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -6,8 +6,9 @@
 //! artifact, viewable in ui.perfetto.dev).
 
 use crate::cliopt::Args;
-use crate::collectives::pool::{CollectivePool, CommMode, MicroStats,
-                               RankCompute, WireFormat};
+use crate::collectives::pool::{CollectivePool, CommMode, IntraNodeMode,
+                               MicroStats, RankCompute, WireFormat,
+                               DEFAULT_CHUNK_ELEMS};
 use crate::grad::{bucket_ranges, build_buckets};
 use crate::metrics::ExchangeTimings;
 use crate::model::BertConfig;
@@ -44,7 +45,10 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     // These knobs only shape the --trace exchange profile; remember
     // whether any was given so we can say so instead of silently
     // ignoring them on a plain Figure-4 run.
+    let intra_raw = args.get_opt("intra-node");
     let trace_knob_given = topo_raw.is_some() || comm_raw.is_some()
+        || intra_raw.is_some()
+        || args.get_opt("chunk-elems").is_some()
         || args.get_opt("steps").is_some()
         || args.get_opt("accum").is_some()
         || args.get_opt("bucket-elems").is_some();
@@ -53,6 +57,10 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!(e))?;
     let comm_mode = CommMode::parse(comm_raw.as_deref().unwrap_or("auto"))
         .map_err(|e| anyhow::anyhow!("--comm-mode: {e}"))?;
+    let intra_mode =
+        IntraNodeMode::parse(intra_raw.as_deref().unwrap_or("auto"))
+            .map_err(|e| anyhow::anyhow!("--intra-node: {e}"))?;
+    let chunk_elems = args.get_parse("chunk-elems", DEFAULT_CHUNK_ELEMS)?;
     let steps = args.get_parse("steps", 4usize)?;
     let accum = args.get_parse("accum", 2usize)?;
     let bucket_elems = args.get_parse("bucket-elems", 1usize << 20)?;
@@ -103,16 +111,25 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             human_bytes((n * world * 4) as f64)
         );
         let ranges = bucket_ranges(&build_buckets(&layout, bucket_elems));
-        let mut pool = CollectivePool::with_topology(
-            topo, n, ranges.clone(), WireFormat::F32, comm_mode);
+        let mut pool = CollectivePool::with_intra(
+            topo, n, ranges.clone(), WireFormat::F32, comm_mode,
+            intra_mode, chunk_elems);
         println!(
             "\nexchange profile: topo={topo} world={world} comm={comm_mode} \
-             ({}) buckets={} accum={accum} steps={steps}",
+             ({}) intra={} buckets={} accum={accum} steps={steps}",
             if pool.is_hierarchical() { "hierarchical" } else { "flat" },
+            if pool.is_intra_ring() {
+                format!("ring (chunk {chunk_elems})")
+            } else {
+                "serial".to_string()
+            },
             ranges.len()
         );
         let synth = SynthGrads { n };
-        let mut timings = ExchangeTimings::default();
+        let mut timings = ExchangeTimings {
+            bucket_chunks: pool.chunks_per_bucket(),
+            ..Default::default()
+        };
         for s in 0..steps.max(1) {
             let out = pool.step(&[], 1.0, accum, s, true, &synth)?;
             timings.record(&out.bucket_s, &out.bucket_pcie_s,

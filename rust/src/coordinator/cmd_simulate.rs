@@ -4,12 +4,16 @@
 //! The modeled trace mirrors the measured `train --trace` artifact: a
 //! hierarchical comm-mode resolve renders every bucket as the executed
 //! gather → leader-ring → broadcast per-phase spans
-//! (`bucket{i}.pcie.gather` / `bucket{i}.net` / `bucket{i}.pcie.bcast`),
-//! and the modeled input pipeline gets its own data-stall lane
-//! (`--batch-build-ms` + `--no-prefetch`).
+//! (`bucket{i}.pcie.gather` / `bucket{i}.net` / `bucket{i}.pcie.bcast`,
+//! with per-chunk `.c{k}` variants when the pipelined intra-node
+//! schedule resolves — `--intra-node` / `--chunk-elems`), and the
+//! modeled input pipeline gets its own data-stall lane
+//! (`--batch-build-ms` + `--no-prefetch`).  See `docs/tracing.md` for
+//! the full lane/span naming.
 
 use crate::cliopt::Args;
-use crate::collectives::pool::CommMode;
+use crate::collectives::pool::{CommMode, IntraNodeMode,
+                               DEFAULT_CHUNK_ELEMS};
 use crate::simulator::{simulate_iteration, IterationModel};
 use crate::topology::Topology;
 use crate::util::human_duration;
@@ -22,6 +26,9 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     let buckets = args.get_parse("buckets", 8usize)?;
     let comm_mode = CommMode::parse(&args.get("comm-mode", "auto"))
         .map_err(|e| anyhow::anyhow!("--comm-mode: {e}"))?;
+    let intra_node = IntraNodeMode::parse(&args.get("intra-node", "auto"))
+        .map_err(|e| anyhow::anyhow!("--intra-node: {e}"))?;
+    let chunk_elems = args.get_parse("chunk-elems", DEFAULT_CHUNK_ELEMS)?;
     let batch_build_ms = args.get_parse("batch-build-ms", 0.0f64)?;
     let prefetch = !args.flag("no-prefetch");
     let trace = args.get_opt("trace");
@@ -36,14 +43,22 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     let mut model = IterationModel::paper(topo, accum, overlap);
     model.buckets = buckets;
     model.comm_mode = comm_mode;
+    model.intra_node = intra_node;
+    model.chunk_elems = chunk_elems;
     model.batch_build_s = batch_build_ms / 1e3;
     model.prefetch = prefetch;
     let r = simulate_iteration(&model);
 
     println!(
         "iteration on {topo}: k={accum} overlap={overlap} \
-         buckets={buckets} comm={comm_mode} ({}) prefetch={prefetch}",
-        if model.is_hierarchical() { "hierarchical" } else { "flat" }
+         buckets={buckets} comm={comm_mode} ({}) intra={intra_node} ({}) \
+         prefetch={prefetch}",
+        if model.is_hierarchical() { "hierarchical" } else { "flat" },
+        if model.is_intra_ring() {
+            format!("ring, {} chunks/bucket", model.bucket_chunks())
+        } else {
+            "serial".to_string()
+        }
     );
     println!("  micro compute      : {}",
              human_duration(model.micro_compute_s()));

@@ -8,8 +8,9 @@ use std::path::{Path, PathBuf};
 use crate::checkpoint::{self, AsyncCheckpointWriter, Checkpoint,
                         Fingerprint};
 use crate::cliopt::Args;
-use crate::collectives::pool::CommMode;
+use crate::collectives::pool::{CommMode, IntraNodeMode};
 use crate::config::{RunConfig, TwoPhaseSchedule};
+use crate::data::pipeline::shard_manifest_hash;
 use crate::data::ShardedDataset;
 use crate::runtime::Engine;
 use crate::topology::Topology;
@@ -86,6 +87,10 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
                       -> anyhow::Result<TrainOutcome> {
     let world = cfg.cluster.topo.world_size();
     let datasets = prepare_datasets(data_dir, world)?;
+    // Corpus identity: folded into every snapshot's fingerprint so a
+    // resume over a different dataset fails loudly (v2.1).  The
+    // datasets just opened, so the manifest cannot be missing.
+    let manifest = shard_manifest_hash(data_dir, "train")?;
 
     // Periodic rotation writer, shared by both phases: snapshots happen
     // at step boundaries on the hot loop, writes on this background
@@ -119,8 +124,10 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
         // deliberately NOT fingerprinted, so a phase-1 snapshot whose
         // data_step exceeds a smaller --steps still routes to
         // phase 1 when the fingerprints are distinguishable.)
-        let fp1 = Fingerprint::of(cfg, batch1, seq1);
-        let fp2 = Fingerprint::of(&cfg2, batch2, seq2);
+        let mut fp1 = Fingerprint::of(cfg, batch1, seq1);
+        fp1.data_manifest = manifest;
+        let mut fp2 = Fingerprint::of(&cfg2, batch2, seq2);
+        fp2.data_manifest = manifest;
         let is_phase2 = steps2 > 0
             && match ck.fingerprint {
                 Some(fp) => fp == fp2
@@ -143,6 +150,7 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
         TrainReport::default()
     } else {
         let mut t = Trainer::new(engine, cfg.clone(), seq1, batch1)?;
+        t.set_data_manifest(manifest);
         // `--resume` finishes THE SAME run: already-consumed steps are
         // subtracted while total_steps_for_lr keeps the original
         // schedule, so the continuation is bitwise what the
@@ -186,12 +194,19 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
         }
         println!(
             "phase 1: preset={} variant={} topo={} world={} batch={}x{} \
-             accum={} overlap={} wire={} comm={} ({}) prefetch={}",
+             accum={} overlap={} wire={} comm={} ({}) intra={} ({}) \
+             prefetch={}",
             cfg.train.preset, cfg.train.variant, cfg.cluster.topo, world,
             batch1, seq1, cfg.train.accum_steps, cfg.train.overlap,
             if cfg.train.grad_wire_f16 { "f16" } else { "f32" },
             cfg.train.comm_mode,
             if t.is_hierarchical() { "hierarchical" } else { "flat" },
+            cfg.train.intra_node,
+            if t.is_intra_ring() {
+                format!("ring, chunk {}", cfg.train.chunk_elems)
+            } else {
+                "serial".to_string()
+            },
             if cfg.train.prefetch_depth == 0 {
                 "sync".to_string()
             } else {
@@ -214,6 +229,7 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
     // ---- phase 2 (seq 512, smaller batch — Table 6 ratios) ----
     let report2 = if steps2 > 0 {
         let mut t2 = Trainer::new(engine, cfg2, seq2, batch2)?;
+        t2.set_data_manifest(manifest);
         let mut run2 = steps2;
         if let Some(ck) = resume2.take() {
             println!(
@@ -376,6 +392,16 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         cfg.train.comm_mode = CommMode::parse(&m)
             .map_err(|e| anyhow::anyhow!("--comm-mode: {e}"))?;
     }
+    // Intra-node schedule of the hierarchical exchange (ISSUE 5):
+    // `--intra-node serial|ring|auto` picks serialized-leader vs
+    // chunked-pipelined-chain transfers, `--chunk-elems N` the pipeline
+    // granularity.
+    if let Some(m) = args.get_opt("intra-node") {
+        cfg.train.intra_node = IntraNodeMode::parse(&m)
+            .map_err(|e| anyhow::anyhow!("--intra-node: {e}"))?;
+    }
+    cfg.train.chunk_elems =
+        args.get_parse("chunk-elems", cfg.train.chunk_elems)?;
     cfg.train.bucket_elems =
         args.get_parse("bucket-elems", cfg.train.bucket_elems)?;
     // `--prefetch[=N]` (paper §4.1): N sets the per-rank batch-prefetch
@@ -431,10 +457,17 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     // --resume is validated (load + config fingerprint) BEFORE data and
     // engine setup: a bad resume must fail fast, loudly, and nonzero.
     // A two-phase run accepts snapshots from either phase's geometry.
+    // The corpus manifest joins the gate when the data is readable —
+    // a missing/empty data dir falls through to the friendlier "no
+    // data at ..." error below rather than a corpus mismatch.
+    let manifest = shard_manifest_hash(&data_dir, "train").unwrap_or(0);
     let mut expected_fps = vec![Fingerprint::of(&cfg, batch, seq)];
     if phase2_steps > 0 {
         let (cfg2, batch2, seq2) = phase2_shape(&cfg, batch);
         expected_fps.push(Fingerprint::of(&cfg2, batch2, seq2));
+    }
+    for fp in &mut expected_fps {
+        fp.data_manifest = manifest;
     }
     let resume_ckpt = match &resume {
         Some(p) => Some(load_resume(p, &expected_fps)?),

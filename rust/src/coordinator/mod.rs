@@ -30,6 +30,13 @@ COMMANDS:
                    --data-dir data/quickstart [--phase2] [--ckpt path]
                    [--overlap=false] [--wire-f16] [--bucket-elems N]
                    [--comm-mode flat|hierarchical|auto] [--topology 2M4G]
+                   [--intra-node serial|ring|auto]  intra-node schedule
+                                   of the hierarchical exchange: ring =
+                                   chunked pipelined member chain (the
+                                   default on multi-GPU nodes), serial =
+                                   (g-1) whole-bucket leader transfers
+                   [--chunk-elems N]  pipeline chunk size in elements
+                                   (default 65536; > bucket = 1 chunk)
                    [--prefetch N]  per-rank batch-prefetch ring depth
                                    (default 2 = double buffer; 0 = build
                                    batches on the compute workers)
@@ -53,10 +60,13 @@ COMMANDS:
   shard-data     build bshard files from a synthetic or real corpus (§4.1)
                    --out data/quickstart --docs 64 --shards 8 [--text file]
   simulate       one-iteration timeline, overlap on/off (Figs. 2 & 5);
-                 per-phase exchange spans (gather/ring/broadcast) and a
-                 data-stall lane mirror the measured `train --trace`
+                 per-phase exchange spans (gather/ring/broadcast, split
+                 per chunk under the pipelined intra-node schedule) and
+                 a data-stall lane mirror the measured `train --trace`
+                 (span naming: docs/tracing.md)
                    --topo 2M1G --accum 1 [--no-overlap] [--trace out.json]
                    [--comm-mode flat|hierarchical|auto]
+                   [--intra-node serial|ring|auto] [--chunk-elems N]
                    [--batch-build-ms X] [--no-prefetch]
   scaling        weak-scaling sweeps (Figs. 3 & 6)
                    --mode intra-inter | multinode  [--accum 4]
@@ -67,6 +77,7 @@ COMMANDS:
                    --preset bert-large                       (Fig. 4)
                    --preset bert-micro --trace exchange.json (profile)
                    [--topology 2M2G] [--comm-mode auto] [--steps 4]
+                   [--intra-node serial|ring|auto] [--chunk-elems N]
   cost           acquisition vs cloud cost tables (Tables 7 & 8)
                    [--days 12]
   amp-demo       mixed-precision walkthrough: op safety classes, loss

@@ -126,6 +126,43 @@ fn is_shard_of(name: &str, stem: &str) -> bool {
     }
 }
 
+/// Identity hash of a shard set: FNV-1a over the sorted
+/// `<file name>, <byte size>` list of every `<stem>-N-of-M.bshard` in
+/// `dir`.  World-size independent — every rank's round-robin view
+/// partitions the same files — so it pins the CORPUS a run trains on.
+/// The checkpoint [`crate::checkpoint::Fingerprint`] folds it in
+/// (v2.1) so resuming the same config over a different dataset fails
+/// loudly instead of silently diverging.  Never returns 0 (the
+/// fingerprint's "unknown corpus" sentinel).
+pub fn shard_manifest_hash(dir: &Path, stem: &str) -> anyhow::Result<u64> {
+    let mut entries: Vec<(String, u64)> = Vec::new();
+    for e in std::fs::read_dir(dir)? {
+        let e = e?;
+        let name = e.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if is_shard_of(name, stem) {
+            entries.push((name.to_string(), e.metadata()?.len()));
+        }
+    }
+    anyhow::ensure!(!entries.is_empty(),
+                    "no shards '{stem}-*' in {dir:?} to fingerprint");
+    entries.sort();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a offset basis
+    let mut eat = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for (name, size) in &entries {
+        for &b in name.as_bytes() {
+            eat(b);
+        }
+        for b in size.to_le_bytes() {
+            eat(b);
+        }
+    }
+    Ok(if h == 0 { 1 } else { h })
+}
+
 impl ShardedDataset {
     /// Open the shards assigned to `rank` out of `world` (shards are
     /// distributed round-robin over ranks).  Errors up front when the
@@ -366,6 +403,35 @@ mod tests {
         assert_eq!(ds2.shard_paths().len(), 2);
         assert_eq!(ds2.len(), b.examples);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn manifest_hash_pins_the_corpus_identity() {
+        let dir = std::env::temp_dir().join("bertdist_pipe_manifest");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (_v, _s) = setup(&dir, 3);
+        let a = shard_manifest_hash(&dir, "train").unwrap();
+        let b = shard_manifest_hash(&dir, "train").unwrap();
+        assert_eq!(a, b, "hash must be deterministic");
+        assert_ne!(a, 0, "0 is the unknown-corpus sentinel");
+        // a sibling stem's shards do not leak into the hash
+        let docs = SyntheticCorpus::new(12, 800).documents(6, 6, 8);
+        let vocab = Vocab::from_documents(&docs, 2048);
+        build_shards(&docs, &vocab, 2, &dir, "train2", 6).unwrap();
+        assert_eq!(shard_manifest_hash(&dir, "train").unwrap(), a);
+        // growing a shard file changes the identity
+        let path = dir.join(shard_file_name("train", 0, 3));
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.push(0);
+        std::fs::write(&path, &bytes).unwrap();
+        assert_ne!(shard_manifest_hash(&dir, "train").unwrap(), a);
+        // empty / missing sets are loud
+        let empty = std::env::temp_dir().join("bertdist_pipe_manifest_e");
+        let _ = std::fs::remove_dir_all(&empty);
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(shard_manifest_hash(&empty, "train").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+        std::fs::remove_dir_all(&empty).unwrap();
     }
 
     #[test]

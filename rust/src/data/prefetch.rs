@@ -23,6 +23,19 @@
 //! ready batch — the `input_stall_s` lane of the trainer's stall
 //! accounting (zero when the producer keeps up; the whole build time
 //! when running synchronously).
+//!
+//! ## Invariants
+//!
+//! * **Bitwise determinism** — every batch is a pure function of the
+//!   cursor *position* (seed, rank, global micro index), never of run
+//!   history: prefetched and synchronous streams are bitwise
+//!   interchangeable, and a cursor opened at micro `k` (a resumed run)
+//!   emits exactly what a from-zero cursor emits from `k` on.
+//! * **Zero alloc, bounded memory** — `depth` recycled [`Batch`]
+//!   buffers circulate per rank; the producer can run at most `depth`
+//!   batches ahead and the steady state allocates nothing.
+//! * **No lifetime erasure** — producers are scoped threads; the
+//!   compiler proves the dataset borrows outlive them.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Mutex;

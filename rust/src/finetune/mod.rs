@@ -142,20 +142,12 @@ fn finetune_fingerprint(batch: usize, seq: usize, lr: f32, seed: u64)
     crate::checkpoint::Fingerprint {
         machines: 1,
         gpus_per_machine: 1,
-        comm_mode: 0,
-        grad_wire_f16: false,
         micro_batch: batch as u32,
         seq_len: seq as u32,
-        optimizer: 0,
-        variant: 0,
-        bucket_elems: 0,
         accum_steps: 1,
-        prefetch_depth: 0,
         seed,
         lr: lr as f64,
-        warmup_steps: 0,
-        mask_prob: 0.0,
-        max_predictions: 0,
+        ..Default::default()
     }
 }
 

@@ -156,6 +156,12 @@ pub struct ExchangeTimings {
     /// [`Self::record_input_stall`] so data stalls render next to the
     /// PCIe/network spans in [`Self::to_timeline`].
     pub input_stall_s: f64,
+    /// Chunks each bucket's exchange splits into under the pipelined
+    /// intra-node schedule (`CollectivePool::chunks_per_bucket`); empty
+    /// or 1 = unchunked.  [`Self::to_timeline`] splits a chunked
+    /// bucket's PCIe/network spans per chunk so the pipeline overlap is
+    /// visible in the trace.
+    pub bucket_chunks: Vec<usize>,
     /// Steps recorded.
     pub steps: usize,
 }
@@ -273,22 +279,75 @@ impl ExchangeTimings {
         for b in 0..self.bucket_s.len() {
             let pcie = self.mean_bucket_pcie_s(b);
             let net = self.mean_bucket_net_s(b);
-            if pcie > 0.0 && net > 0.0 {
-                let half = pcie / 2.0;
-                tl.add("pcie", &format!("bucket{b}.pcie.gather"), t,
-                       t + half);
-                tl.add("net", &format!("bucket{b}.net"), t + half,
-                       t + half + net);
-                tl.add("pcie", &format!("bucket{b}.pcie.bcast"),
-                       t + half + net, t + pcie + net);
-            } else if pcie > 0.0 {
-                tl.add("pcie", &format!("bucket{b}.pcie"), t, t + pcie);
-            } else if net > 0.0 {
-                tl.add("net", &format!("bucket{b}.net"), t, t + net);
-            }
-            t += pcie + net;
+            let chunks = self.bucket_chunks.get(b).copied().unwrap_or(1);
+            t = add_bucket_exchange_spans(&mut tl, b, t, pcie, net, chunks);
         }
         tl
+    }
+}
+
+/// Render one bucket's exchange onto `tl` starting at `start` and
+/// return the bucket's end time — the span-naming convention shared by
+/// the MEASURED trace ([`ExchangeTimings::to_timeline`], `train
+/// --trace` / `profile-grads --trace`) and the MODELED one
+/// (`cmd_simulate`), so the two line up in ui.perfetto.dev:
+///
+/// * flat (or single-phase) bucket — one `bucket{b}.net` (or
+///   `bucket{b}.pcie`) span;
+/// * hierarchical serialized bucket (`chunks <= 1`) — the executed
+///   order `bucket{b}.pcie.gather` → `bucket{b}.net` →
+///   `bucket{b}.pcie.bcast`, the two PCIe halves depicted equal (both
+///   execute the same `(g-1)` transfers);
+/// * hierarchical pipelined bucket (`chunks > 1`) — per-chunk spans
+///   `bucket{b}.pcie.gather.c{k}` / `bucket{b}.net.c{k}` /
+///   `bucket{b}.pcie.bcast.c{k}` laid out on the pipeline schedule:
+///   chunk k's ring starts once its gather lands (and the NIC frees
+///   up), its broadcast once its ring completes — so the gather of
+///   chunk k+1 visibly overlaps the ring of chunk k.  The end time
+///   never exceeds `start + pcie_s + net_s` (pipelining only shortens
+///   the depicted bucket).
+pub fn add_bucket_exchange_spans(tl: &mut Timeline, b: usize, start: f64,
+                                 pcie_s: f64, net_s: f64, chunks: usize)
+                                 -> f64 {
+    if pcie_s > 0.0 && net_s > 0.0 {
+        if chunks > 1 {
+            let c = chunks as f64;
+            let gc = pcie_s / 2.0 / c;
+            let nc = net_s / c;
+            let bc = pcie_s / 2.0 / c;
+            let mut net_free = 0.0f64;
+            let mut bcast_free = 0.0f64;
+            for k in 0..chunks {
+                let g0 = start + k as f64 * gc;
+                tl.add("pcie", &format!("bucket{b}.pcie.gather.c{k}"), g0,
+                       g0 + gc);
+                let n0 = (g0 + gc).max(net_free);
+                tl.add("net", &format!("bucket{b}.net.c{k}"), n0, n0 + nc);
+                net_free = n0 + nc;
+                let b0 = net_free.max(bcast_free);
+                tl.add("pcie", &format!("bucket{b}.pcie.bcast.c{k}"), b0,
+                       b0 + bc);
+                bcast_free = b0 + bc;
+            }
+            bcast_free
+        } else {
+            let half = pcie_s / 2.0;
+            tl.add("pcie", &format!("bucket{b}.pcie.gather"), start,
+                   start + half);
+            tl.add("net", &format!("bucket{b}.net"), start + half,
+                   start + half + net_s);
+            tl.add("pcie", &format!("bucket{b}.pcie.bcast"),
+                   start + half + net_s, start + pcie_s + net_s);
+            start + pcie_s + net_s
+        }
+    } else if pcie_s > 0.0 {
+        tl.add("pcie", &format!("bucket{b}.pcie"), start, start + pcie_s);
+        start + pcie_s
+    } else if net_s > 0.0 {
+        tl.add("net", &format!("bucket{b}.net"), start, start + net_s);
+        start + net_s
+    } else {
+        start
     }
 }
 
@@ -491,6 +550,42 @@ mod tests {
         // and the chrome trace renders
         let j = Json::parse(&tl.to_chrome_trace()).unwrap();
         assert!(j.get("traceEvents").unwrap().as_arr().unwrap().len() >= 4);
+    }
+
+    #[test]
+    fn chunked_bucket_renders_per_chunk_pipeline_spans() {
+        let mut t = ExchangeTimings::default();
+        t.record(&[0.3], &[0.2], &[0.1], 0.0);
+        t.bucket_chunks = vec![2];
+        let tl = t.to_timeline();
+        // the chunk spans partition the phase totals...
+        assert!((tl.busy("pcie", "bucket0.pcie.gather") - 0.1).abs() < 1e-12);
+        assert!((tl.busy("pcie", "bucket0.pcie.bcast") - 0.1).abs() < 1e-12);
+        assert!((tl.busy("net", "bucket0.net") - 0.1).abs() < 1e-12);
+        let find = |name: &str| {
+            tl.spans.iter().find(|s| s.name == name).unwrap()
+        };
+        // ...and lay out the pipeline: chunk 1 gathers WHILE chunk 0
+        // rings (the overlap the schedule exists for), each chunk's
+        // ring after its gather, each broadcast after its ring.
+        let (g0, g1) = (find("bucket0.pcie.gather.c0"),
+                        find("bucket0.pcie.gather.c1"));
+        let (n0, n1) = (find("bucket0.net.c0"), find("bucket0.net.c1"));
+        let (b0, b1) = (find("bucket0.pcie.bcast.c0"),
+                        find("bucket0.pcie.bcast.c1"));
+        assert!(g0.end <= n0.start + 1e-12 && g1.end <= n1.start + 1e-12);
+        assert!(n0.end <= b0.start + 1e-12 && n1.end <= b1.start + 1e-12);
+        assert!(g1.start < n0.end, "gather.c1 must overlap net.c0");
+        assert!(b1.end > b0.end);
+        // pipelining never stretches the bucket past the serial depiction
+        assert!(tl.horizon() <= 0.3 + 1e-12, "{}", tl.horizon());
+        // a second (unchunked) record path still uses the serial naming
+        let mut q = ExchangeTimings::default();
+        q.record(&[0.3], &[0.2], &[0.1], 0.0);
+        q.bucket_chunks = vec![1];
+        let qt = q.to_timeline();
+        assert!(qt.spans.iter().any(|s| s.name == "bucket0.pcie.gather"));
+        assert!((qt.horizon() - 0.3).abs() < 1e-12);
     }
 
     #[test]

@@ -10,6 +10,19 @@
 //! The data path in the trainer is real memory; this module only supplies
 //! *time*.  The discrete-event simulator composes these with compute
 //! spans to regenerate Figures 2/3/5/6.
+//!
+//! ## Invariants
+//!
+//! * Every model here prices the schedule the pool actually EXECUTES —
+//!   [`hierarchical_allreduce_phases`] the serialized-leader transfers,
+//!   [`hierarchical_pipelined_phases`] the chunked chain pipeline; when
+//!   the executed schedule changes, the model changes with it (the
+//!   fig6/table4 benches assert the correspondence).
+//! * Transfer times are strictly positive and monotone in payload;
+//!   [`Resource`] utilization is clamped to `[0, 1]`.
+//! * [`hierarchical_pipelined_phases`] degrades exactly to the
+//!   serialized pricing at one chunk (`chunk_bytes >= bytes`), so the
+//!   two models can never disagree on the unpipelined schedule.
 
 use crate::topology::{DeviceId, LinkKind, Topology};
 
@@ -178,6 +191,71 @@ pub fn hierarchical_allreduce_time(topo: &Topology, bytes: f64,
     hierarchical_allreduce_phases(topo, bytes, fabric).total()
 }
 
+/// Pricing of the chunked pipelined intra-node schedule
+/// (`train.intra_node = ring`, executed by the pool's chain workers).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PipelinedHier {
+    /// Chunks the payload splits into (`ceil(bytes / chunk_bytes)`).
+    pub chunks: usize,
+    /// One chunk's time through one PCIe chain link.
+    pub chunk_pcie_s: f64,
+    /// One chunk's leader-ring time on the network.
+    pub chunk_net_s: f64,
+    /// Critical-path wall of the pipelined gather → ring → broadcast.
+    pub wall_s: f64,
+    /// NIC busy seconds (`chunks * chunk_net_s`) — the network phase.
+    pub net_busy_s: f64,
+}
+
+impl PipelinedHier {
+    /// Exposed PCIe seconds: the wall not covered by network busy time
+    /// (chain fill/drain plus any steady-state PCIe-bound overhang).
+    pub fn pcie_exposed_s(&self) -> f64 {
+        (self.wall_s - self.net_busy_s).max(0.0)
+    }
+}
+
+/// Price the chunked pipelined hierarchical allreduce (the
+/// `IntraNodeMode::Ring` schedule `collectives::pool` executes): the
+/// payload splits into `ceil(bytes / chunk_bytes)` chunks that flow
+/// through the `(g-1)`-link member chain toward the leader, ring over
+/// the `m` leaders per chunk, and flow back.  The critical path is the
+/// classic pipeline formula — fill and drain the chain once
+/// (`2(g-1)` chunk link times) plus one chunk through the ring, with
+/// the remaining `C-1` chunks paced by the slower of the two stages:
+///
+/// ```text
+/// wall = 2(g-1)·t(s) + r(s) + (C-1)·max(t(s), r(s))
+/// ```
+///
+/// where `t(s)` is one chunk's PCIe link time and `r(s)` its m-leader
+/// ring time.  Degenerates exactly to the serialized-leader pricing
+/// ([`hierarchical_allreduce_phases`]) when `chunk_bytes >= bytes`
+/// (one chunk: no pipelining to exploit), and exposes the latency
+/// blow-up of over-chunking at large `m` — `C` rings pay `C` times the
+/// `2(m-1)` message latencies — so the knob has a real optimum the
+/// benches sweep.
+pub fn hierarchical_pipelined_phases(topo: &Topology, bytes: f64,
+                                     fabric: &Fabric, chunk_bytes: f64)
+                                     -> PipelinedHier {
+    let g = topo.gpus_per_machine;
+    let m = topo.machines;
+    let chunk_bytes = chunk_bytes.max(1.0).min(bytes.max(1.0));
+    let chunks = (bytes / chunk_bytes).ceil().max(1.0);
+    let s = bytes / chunks;
+    let t = if g > 1 { fabric.pcie.transfer_time(s) } else { 0.0 };
+    let r = ring_allreduce_time(m, s, fabric.network);
+    let fill = 2.0 * g.saturating_sub(1) as f64 * t;
+    let wall = fill + r + (chunks - 1.0) * t.max(r);
+    PipelinedHier {
+        chunks: chunks as usize,
+        chunk_pcie_s: t,
+        chunk_net_s: r,
+        wall_s: wall,
+        net_busy_s: chunks * r,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,6 +374,60 @@ mod tests {
         // flat ring here even though the NIC carries less.
         let hier8 = hierarchical_allreduce_time(&topo, bytes, &f);
         assert!(hier8 > flat, "hier={hier8} flat={flat}");
+    }
+
+    #[test]
+    fn pipelined_degenerates_to_serial_at_one_chunk() {
+        // chunk >= payload: no pipelining to exploit, so the pipelined
+        // model must price EXACTLY what the serialized-leader model
+        // prices (fill = 2(g-1) full-payload link times + one ring).
+        let topo = Topology::new(4, 3);
+        let f = Fabric::paper();
+        let bytes = 2.0e8;
+        let serial = hierarchical_allreduce_phases(&topo, bytes, &f);
+        for chunk in [bytes, bytes * 10.0] {
+            let p = hierarchical_pipelined_phases(&topo, bytes, &f, chunk);
+            assert_eq!(p.chunks, 1);
+            assert!((p.wall_s - serial.total()).abs() < 1e-12, "{p:?}");
+            assert!((p.net_busy_s - serial.net_s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pipelined_beats_serial_on_wide_nodes() {
+        // g=8, bandwidth-dominated: the serialized leader pays 14
+        // full-payload PCIe transfers; the pipeline amortizes the chain
+        // fill over many chunks, so total wall drops well below it.
+        let topo = Topology::new(32, 8);
+        let f = Fabric::paper();
+        let bytes = 1.36e9; // BERT-large f32 grads
+        let serial = hierarchical_allreduce_time(&topo, bytes, &f);
+        let p = hierarchical_pipelined_phases(&topo, bytes, &f,
+                                              4.0 * (1 << 20) as f64);
+        assert!(p.chunks > 100, "{p:?}");
+        assert!(p.wall_s < serial,
+                "pipelined {} vs serial {serial}", p.wall_s);
+        assert!(p.net_busy_s <= p.wall_s + 1e-12);
+        assert!(p.pcie_exposed_s() >= 0.0);
+    }
+
+    #[test]
+    fn over_chunking_pays_ring_latency() {
+        // The model must expose the tradeoff the knob controls: at
+        // m=32, every chunk's leader ring pays 2(m-1) message
+        // latencies, so tiny chunks are latency-dominated and WORSE
+        // than moderate ones (and than the serial schedule).
+        let topo = Topology::new(32, 8);
+        let f = Fabric::paper();
+        let bytes = 1.36e9;
+        let tiny =
+            hierarchical_pipelined_phases(&topo, bytes, &f, 64.0 * 1024.0);
+        let moderate = hierarchical_pipelined_phases(&topo, bytes, &f,
+                                                     4.0 * (1 << 20) as f64);
+        assert!(tiny.wall_s > moderate.wall_s,
+                "tiny {} vs moderate {}", tiny.wall_s, moderate.wall_s);
+        assert!(tiny.wall_s
+                    > hierarchical_allreduce_time(&topo, bytes, &f));
     }
 
     #[test]

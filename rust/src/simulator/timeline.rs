@@ -17,9 +17,11 @@
 //! (earlier micro-batches only produce partial sums — the exchange must
 //! wait for the final accumulation, §4.4).
 
-use crate::collectives::pool::CommMode;
-use crate::metrics::Timeline;
-use crate::netsim::{hierarchical_allreduce_phases, ring_allreduce_time,
+use crate::collectives::pool::{CommMode, IntraNodeMode,
+                               DEFAULT_CHUNK_ELEMS};
+use crate::metrics::{add_bucket_exchange_spans, Timeline};
+use crate::netsim::{hierarchical_allreduce_phases,
+                    hierarchical_pipelined_phases, ring_allreduce_time,
                     Fabric, HierPhases};
 use crate::topology::Topology;
 
@@ -49,6 +51,13 @@ pub struct IterationModel {
     /// measured `--trace` exports.  `Flat` keeps the PR-1 world-ring
     /// pricing (the paper-§5.2 calibration anchors).
     pub comm_mode: CommMode,
+    /// Intra-node schedule under a hierarchical resolve, mirroring
+    /// `train.intra_node`: `Ring` prices the chunked pipelined chain
+    /// ([`hierarchical_pipelined_phases`]) and renders per-chunk spans;
+    /// `Serial` prices the (g-1) serialized leader transfers.
+    pub intra_node: IntraNodeMode,
+    /// Pipeline chunk size in f32 elements (`train.chunk_elems`).
+    pub chunk_elems: usize,
     /// Modeled host-side batch build (tokenize+mask+pack) per
     /// micro-batch, seconds; 0 = free input.
     pub batch_build_s: f64,
@@ -77,6 +86,8 @@ impl IterationModel {
             buckets: 8,
             update_frac: 0.05,
             comm_mode: CommMode::Flat,
+            intra_node: IntraNodeMode::Auto,
+            chunk_elems: DEFAULT_CHUNK_ELEMS,
             batch_build_s: 0.0,
             prefetch: true,
         }
@@ -93,15 +104,41 @@ impl IterationModel {
         self.comm_mode.resolves_hierarchical(&self.topo)
     }
 
+    /// Whether the modeled hierarchy runs the chunked pipelined
+    /// intra-node chain (the resolved intra mode, as in the real pool).
+    pub fn is_intra_ring(&self) -> bool {
+        self.is_hierarchical() && self.intra_node.resolves_ring(&self.topo)
+    }
+
+    /// Chunks each modeled bucket splits into (1 unless the pipelined
+    /// chain resolves) — drives the per-chunk trace spans.
+    pub fn bucket_chunks(&self) -> usize {
+        if !self.is_intra_ring() {
+            return 1;
+        }
+        let per_bucket = self.grad_bytes / self.buckets.max(1) as f64;
+        hierarchical_pipelined_phases(&self.topo, per_bucket, &self.fabric,
+                                      self.chunk_elems as f64 * 4.0)
+            .chunks
+    }
+
     /// Per-bucket phase pricing of the modeled exchange.  Flat resolve:
     /// everything is one ring on the topology's bottleneck link, billed
     /// as the "net" phase (PCIe phases zero) — matching how the
     /// measured flat path bills its exchange.  Hierarchical resolve:
-    /// the executed gather/leader-ring/broadcast schedule from
-    /// [`hierarchical_allreduce_phases`].
+    /// the executed serialized gather/leader-ring/broadcast schedule
+    /// ([`hierarchical_allreduce_phases`]) — or, when the pipelined
+    /// chain resolves, [`hierarchical_pipelined_phases`] folded so that
+    /// `net_s` is the NIC busy time and `pcie_s` the exposed remainder
+    /// (so `total()` is the pipelined critical path).
     pub fn bucket_phases(&self) -> HierPhases {
         let per_bucket = self.grad_bytes / self.buckets.max(1) as f64;
-        if self.is_hierarchical() {
+        if self.is_intra_ring() {
+            let p = hierarchical_pipelined_phases(
+                &self.topo, per_bucket, &self.fabric,
+                self.chunk_elems as f64 * 4.0);
+            HierPhases { pcie_s: p.pcie_exposed_s(), net_s: p.net_busy_s }
+        } else if self.is_hierarchical() {
             hierarchical_allreduce_phases(&self.topo, per_bucket,
                                           &self.fabric)
         } else {
@@ -157,20 +194,16 @@ pub struct IterationResult {
 }
 
 /// Emit one bucket's exchange on the timeline, mirroring the span
-/// naming of the MEASURED trace (`ExchangeTimings::to_timeline`): a
-/// hierarchical bucket splits into `bucket{i}.pcie.gather` →
-/// `bucket{i}.net` → `bucket{i}.pcie.bcast`, a flat bucket is one
-/// `bucket{i}.net` span.
+/// naming of the MEASURED trace through the shared
+/// [`add_bucket_exchange_spans`] renderer: a hierarchical bucket
+/// splits into `bucket{i}.pcie.gather` → `bucket{i}.net` →
+/// `bucket{i}.pcie.bcast` (per-chunk `.c{k}` variants on a pipelined
+/// resolve), a flat bucket is one `bucket{i}.net` span.
 fn add_bucket_spans(tl: &mut Timeline, i: usize, start: f64,
-                    phases: &HierPhases) {
+                    phases: &HierPhases, chunks: usize) {
     if phases.pcie_s > 0.0 && phases.net_s > 0.0 {
-        let half = phases.pcie_s / 2.0;
-        tl.add("pcie", &format!("bucket{i}.pcie.gather"), start,
-               start + half);
-        tl.add("net", &format!("bucket{i}.net"), start + half,
-               start + half + phases.net_s);
-        tl.add("pcie", &format!("bucket{i}.pcie.bcast"),
-               start + half + phases.net_s, start + phases.total());
+        add_bucket_exchange_spans(tl, i, start, phases.pcie_s,
+                                  phases.net_s, chunks);
     } else {
         tl.add("net", &format!("bucket{i}.net"), start,
                start + phases.total());
@@ -211,6 +244,7 @@ pub fn simulate_iteration(m: &IterationModel) -> IterationResult {
     // on a hierarchical resolve, one network span on a flat one).
     let nb = m.buckets.max(1);
     let phases = m.bucket_phases();
+    let chunks = m.bucket_chunks();
     let per_bucket = phases.total();
     let comm_end = if m.topo.world_size() <= 1 {
         compute_end
@@ -224,14 +258,14 @@ pub fn simulate_iteration(m: &IterationModel) -> IterationResult {
             let ready = last_bwd_start + (i + 1) as f64 / nb as f64 * bwd;
             let start = ready.max(net_free);
             end = start + per_bucket;
-            add_bucket_spans(&mut tl, i, start, &phases);
+            add_bucket_spans(&mut tl, i, start, &phases, chunks);
             net_free = end;
         }
         end
     } else {
         let mut tcur = compute_end;
         for i in 0..nb {
-            add_bucket_spans(&mut tl, i, tcur, &phases);
+            add_bucket_spans(&mut tl, i, tcur, &phases, chunks);
             tcur += per_bucket;
         }
         tcur
@@ -322,15 +356,18 @@ mod tests {
 
     #[test]
     fn hierarchical_spans_mirror_measured_trace_naming() {
-        // A hierarchical resolve must render every bucket as the
+        // A hierarchical SERIAL resolve must render every bucket as the
         // executed gather -> leader ring -> broadcast, with the same
         // span names `ExchangeTimings::to_timeline` exports, so the
         // modeled and measured chrome traces line up in perfetto.
         let m = IterationModel {
             comm_mode: CommMode::Auto,
+            intra_node: IntraNodeMode::Serial,
             ..base("2M4G", 1, true)
         };
         assert!(m.is_hierarchical());
+        assert!(!m.is_intra_ring());
+        assert_eq!(m.bucket_chunks(), 1);
         let r = simulate_iteration(&m);
         let find = |name: &str| {
             r.timeline.spans.iter().find(|s| s.name == name)
@@ -353,6 +390,44 @@ mod tests {
         let flat = simulate_iteration(&base("2M4G", 1, true));
         assert!(flat.timeline.busy("pcie", "") == 0.0);
         assert!(flat.timeline.busy("net", "bucket0") > 0.0);
+    }
+
+    #[test]
+    fn pipelined_resolve_renders_per_chunk_spans_and_shrinks_comm() {
+        // The default intra mode on a multi-GPU-node hierarchy is the
+        // chunked pipelined chain: buckets render as per-chunk spans
+        // (the measured-trace naming) and the priced exchange beats the
+        // serialized leader schedule.
+        let chunked = IterationModel {
+            comm_mode: CommMode::Auto,
+            chunk_elems: 4 << 20, // keep the span count reviewable
+            ..base("2M8G", 1, true)
+        };
+        assert!(chunked.is_intra_ring());
+        let chunks = chunked.bucket_chunks();
+        assert!(chunks > 1, "{chunks}");
+        let serial = IterationModel {
+            intra_node: IntraNodeMode::Serial,
+            ..chunked.clone()
+        };
+        assert!(chunked.bucket_phases().total()
+                    < serial.bucket_phases().total(),
+                "pipelined pricing must beat serialized at g=8");
+        let r = simulate_iteration(&chunked);
+        assert!(r.iteration_s < simulate_iteration(&serial).iteration_s);
+        // per-chunk naming, first and last chunk present
+        let has = |name: &str| r.timeline.spans.iter()
+            .any(|s| s.name == name);
+        assert!(has("bucket0.pcie.gather.c0"));
+        assert!(has("bucket0.net.c0"));
+        assert!(has(&format!("bucket0.pcie.bcast.c{}", chunks - 1)));
+        // chunk spans still sum to the bucket's phase totals
+        let phases = chunked.bucket_phases();
+        assert!((r.timeline.busy("net", "bucket0.net")
+                 - phases.net_s).abs() < 1e-9);
+        assert!((r.timeline.busy("pcie", "bucket0.pcie")
+                 - phases.pcie_s).abs() < 1e-9);
+        assert!(r.timeline.horizon() <= r.iteration_s + 1e-9);
     }
 
     #[test]

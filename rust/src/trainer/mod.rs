@@ -166,6 +166,10 @@ pub struct Trainer {
     /// `step`, it never stalls on overflow skips, so the data stream
     /// keeps moving.
     data_step: usize,
+    /// Corpus identity ([`crate::data::pipeline::shard_manifest_hash`]),
+    /// folded into [`Self::fingerprint`]; 0 = unknown (the CLI sets it
+    /// before any restore, bare programmatic trainers may not).
+    data_manifest: u64,
     mask_cfg: MaskingConfig,
 }
 
@@ -191,9 +195,11 @@ impl Trainer {
         } else {
             WireFormat::F32
         };
-        let pool = CollectivePool::with_topology(cfg.cluster.topo, n,
-                                                 ranges.clone(), wire,
-                                                 cfg.train.comm_mode);
+        let pool = CollectivePool::with_intra(cfg.cluster.topo, n,
+                                              ranges.clone(), wire,
+                                              cfg.train.comm_mode,
+                                              cfg.train.intra_node,
+                                              cfg.train.chunk_elems);
         let mask_cfg = MaskingConfig {
             mask_prob: cfg.data.mask_prob,
             max_predictions: cfg.data.max_predictions,
@@ -218,6 +224,7 @@ impl Trainer {
             params,
             step: 0,
             data_step: 0,
+            data_manifest: 0,
             mask_cfg,
         })
     }
@@ -225,8 +232,19 @@ impl Trainer {
     /// This run's config identity — saved into every checkpoint and
     /// validated against the checkpoint's on [`Self::restore`].
     pub fn fingerprint(&self) -> Fingerprint {
-        Fingerprint::of(&self.cfg, self.train_step.batch,
-                        self.train_step.seq)
+        let mut fp = Fingerprint::of(&self.cfg, self.train_step.batch,
+                                     self.train_step.seq);
+        fp.data_manifest = self.data_manifest;
+        fp
+    }
+
+    /// Pin the corpus identity this trainer consumes (a
+    /// `data::pipeline::shard_manifest_hash`): snapshots carry it and
+    /// [`Self::restore`] refuses a checkpoint whose (known) manifest
+    /// differs — resuming over a different dataset would silently
+    /// diverge.  Call before any restore.
+    pub fn set_data_manifest(&mut self, manifest: u64) {
+        self.data_manifest = manifest;
     }
 
     /// Exact-state restore: continuing from here is bitwise-identical
@@ -327,6 +345,12 @@ impl Trainer {
         self.pool.is_hierarchical()
     }
 
+    /// Whether the hierarchical exchange runs the chunked pipelined
+    /// intra-node chain (the resolved `train.intra_node`).
+    pub fn is_intra_ring(&self) -> bool {
+        self.pool.is_intra_ring()
+    }
+
     /// Monotone data-consumption counter (attempted optimizer steps,
     /// including AMP-skipped ones) — the exact stream position a v2
     /// checkpoint captures.
@@ -370,6 +394,9 @@ impl Trainer {
         let mut meter = ThroughputMeter::new();
         let mut sw = Stopwatch::new();
         let wall = Stopwatch::new();
+        // Chunk counts let `--trace` split the PCIe spans per chunk
+        // when the pipelined intra-node schedule is active.
+        report.exchange.bucket_chunks = self.pool.chunks_per_bucket();
 
         // ---- 0. input feed: per-rank prefetch producers over bounded
         //         rings of recycled batch buffers, or the synchronous

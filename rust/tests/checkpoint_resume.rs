@@ -239,6 +239,39 @@ fn restore_rejects_fingerprint_mismatch_before_touching_state() {
 }
 
 #[test]
+fn restore_rejects_a_different_corpus_manifest() {
+    // v2.1: the fingerprint carries a shard-manifest hash, so resuming
+    // the same config over a DIFFERENT dataset fails loudly — and an
+    // unknown manifest on either side (bare snapshots, tests) never
+    // blocks.
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let engine = Engine::cpu(&art).unwrap();
+    let cfg = base_cfg("1M1G");
+    let mut saver = Trainer::new(&engine, cfg.clone(), 32, 2).unwrap();
+    saver.set_data_manifest(0xAAAA);
+    let ck = saver.checkpoint();
+    assert_eq!(ck.fingerprint.unwrap().data_manifest, 0xAAAA);
+
+    // a run over a different corpus refuses the checkpoint untouched
+    let mut t = Trainer::new(&engine, cfg.clone(), 32, 2).unwrap();
+    t.set_data_manifest(0xBBBB);
+    let before = t.checkpoint();
+    let err = t.restore(ck.clone()).unwrap_err();
+    assert!(err.to_string().contains("corpus"), "{err}");
+    assert_state_bitwise(&t.checkpoint(), &before, "corpus refusal");
+
+    // the same corpus accepts it; so does a manifest-less run
+    let mut same = Trainer::new(&engine, cfg.clone(), 32, 2).unwrap();
+    same.set_data_manifest(0xAAAA);
+    same.restore(ck.clone()).unwrap();
+    let mut unknown = Trainer::new(&engine, cfg, 32, 2).unwrap();
+    unknown.restore(ck).unwrap();
+}
+
+#[test]
 fn v1_restore_falls_back_to_step_and_warns() {
     let Some(art) = artifacts() else {
         eprintln!("skipping: no artifacts");

@@ -1,0 +1,307 @@
+//! ISSUE 5 (tentpole): chunked pipelined intra-node exchange.
+//!
+//! The headline property: across random `<X>M<Y>G` topologies
+//! (including the `g = 1` / `m = 1` degenerates), random bucket
+//! thresholds, accumulation depths, and chunk sizes (including 1
+//! element and chunk > bucket), both overlap modes and both wire
+//! formats, the **pipelined-ring** intra-node exchange, the
+//! **serialized-leader** schedule, and the old **spawn-per-step
+//! baseline** all produce bitwise-identical reduced gradients on
+//! exact-sum gradients (dyadic grid, so no summation association can
+//! matter) — and every replica within a mode is bitwise identical.
+//!
+//! Plus: chunk accounting (`chunks_per_bucket`), the timing split
+//! staying consistent under the chunk pipeline, and rounding-tolerance
+//! agreement on arbitrary floats.
+
+use std::sync::Arc;
+
+use bertdist::collectives::pool::{CollectivePool, CommMode, IntraNodeMode,
+                                  MicroStats, RankCompute, WireFormat};
+use bertdist::grad::{bucket_ranges, build_buckets, BucketRange,
+                     GradAccumulator};
+use bertdist::metrics::ExchangeTimings;
+use bertdist::model::layout::ParamLayout;
+use bertdist::testkit;
+use bertdist::topology::Topology;
+use bertdist::trainer::allreduce_buckets;
+use bertdist::util::Pcg64;
+
+/// Deterministic synthetic gradients on a dyadic grid: multiples of
+/// 0.25 in [-2, 2].  With at most 4x4 ranks and 3 micro-steps, every
+/// partial sum under ANY association is exactly representable in both
+/// f32 and f16 — so the chain, the serialized leader, the flat ring,
+/// and the spawn baseline must all agree to the bit.
+struct ExactSynth {
+    n: usize,
+    salt: u64,
+}
+
+impl RankCompute for ExactSynth {
+    fn micro(&self, rank: usize, step_index: usize, micro: usize,
+             _params: &[f32], _scale: f32, out: &mut Vec<f32>)
+             -> anyhow::Result<MicroStats> {
+        out.resize(self.n, 0.0);
+        let stream = (rank as u64) << 32
+            | (step_index as u64) << 8
+            | micro as u64;
+        let mut rng = Pcg64::with_stream(self.salt, stream);
+        for v in out.iter_mut() {
+            *v = (rng.range_usize(0, 17) as f32 - 8.0) * 0.25;
+        }
+        Ok(MicroStats { loss: 1.0, ..Default::default() })
+    }
+}
+
+/// Arbitrary-float variant (association differences show up as
+/// rounding, never as divergence).
+struct Synth {
+    n: usize,
+    salt: u64,
+}
+
+impl RankCompute for Synth {
+    fn micro(&self, rank: usize, step_index: usize, micro: usize,
+             _params: &[f32], _scale: f32, out: &mut Vec<f32>)
+             -> anyhow::Result<MicroStats> {
+        out.resize(self.n, 0.0);
+        let stream = (rank as u64) << 32
+            | (step_index as u64) << 8
+            | micro as u64;
+        let mut rng = Pcg64::with_stream(self.salt, stream);
+        for v in out.iter_mut() {
+            *v = rng.next_f32() * 4.0 - 2.0;
+        }
+        Ok(MicroStats { loss: 1.0, ..Default::default() })
+    }
+}
+
+fn random_layout(rng: &mut Pcg64) -> ParamLayout {
+    let tensors = rng.range_usize(1, 10);
+    let shapes: Vec<(String, Vec<usize>)> = (0..tensors)
+        .map(|i| (format!("t{i}"), vec![rng.range_usize(1, 400)]))
+        .collect();
+    ParamLayout::from_shapes(&shapes)
+}
+
+/// Run `steps` pooled steps under (mode, intra, chunk) and return every
+/// rank's reduced buffer plus the accumulated timings.
+#[allow(clippy::too_many_arguments)]
+fn run_pool(topo: Topology, n: usize, ranges: Arc<[BucketRange]>,
+            wire: WireFormat, intra: IntraNodeMode, chunk: usize,
+            overlap: bool, k: usize, steps: usize,
+            compute: &dyn RankCompute)
+            -> (Vec<Vec<f32>>, ExchangeTimings) {
+    let mut pool = CollectivePool::with_intra(
+        topo, n, ranges, wire, CommMode::Hierarchical, intra, chunk);
+    let mut timings = ExchangeTimings {
+        bucket_chunks: pool.chunks_per_bucket(),
+        ..Default::default()
+    };
+    for s in 0..steps {
+        let out = pool.step(&[], 1.0, k, s, overlap, compute).unwrap();
+        assert!(out.exposed_comm_s >= 0.0);
+        assert!(out.comm_net_s <= out.comm_s + 1e-9,
+                "net {} > total {}", out.comm_net_s, out.comm_s);
+        timings.record(&out.bucket_s, &out.bucket_pcie_s,
+                       &out.bucket_net_s, out.exposed_comm_s);
+    }
+    let grads = (0..topo.world_size())
+        .map(|r| pool.rank_grads(r).clone())
+        .collect();
+    (grads, timings)
+}
+
+/// The old spawn-per-step exchange over the same gradients (f32 only).
+fn run_spawn_baseline(topo: Topology, n: usize, threshold: usize,
+                      layout: &ParamLayout, k: usize, steps: usize,
+                      compute: &dyn RankCompute) -> Vec<Vec<f32>> {
+    let world = topo.world_size();
+    let buckets = build_buckets(layout, threshold);
+    let mut accs: Vec<GradAccumulator> =
+        (0..world).map(|_| GradAccumulator::new(n)).collect();
+    let mut g = Vec::new();
+    for s in 0..steps {
+        for (r, acc) in accs.iter_mut().enumerate() {
+            acc.reset();
+            for m in 0..k {
+                compute.micro(r, s, m, &[], 1.0, &mut g).unwrap();
+                acc.add(&g);
+            }
+        }
+        allreduce_buckets(&mut accs, &buckets);
+    }
+    accs.iter().map(|a| a.buffer().to_vec()).collect()
+}
+
+fn assert_bitwise(tag: &str, a: &[Vec<f32>], b: &[Vec<f32>])
+                  -> Result<(), String> {
+    for (r, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        for (i, (va, vb)) in x.iter().zip(y.iter()).enumerate() {
+            if va.to_bits() != vb.to_bits() {
+                return Err(format!("{tag}: rank {r} [{i}]: {va} != {vb}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_pipelined_serialized_and_spawn_baseline_bitwise_identical() {
+    testkit::check_msg(
+        "intra-ring≡serial≡spawn", 0x1A7_2A, 8,
+        |r: &mut Pcg64| {
+            let machines = r.range_usize(1, 5);
+            let gpus = r.range_usize(1, 5);
+            let threshold = r.range_usize(1, 900);
+            // chunk sizes spanning the degenerates: single-element
+            // chunks, mid-size, and chunk > any bucket
+            let chunk = [1usize, 13, 100, 1_000_000]
+                [r.range_usize(0, 4)];
+            let k = r.range_usize(1, 4);
+            let salt = r.next_u64();
+            (machines, gpus, threshold, chunk, k, salt)
+        },
+        |&(machines, gpus, threshold, chunk, k, salt)| {
+            let topo = Topology::new(machines, gpus);
+            let mut lrng = Pcg64::with_stream(salt, 0x1A7);
+            let layout = random_layout(&mut lrng);
+            let n = layout.total_len();
+            let ranges = bucket_ranges(&build_buckets(&layout, threshold));
+            let steps = 1;
+            let synth = ExactSynth { n, salt };
+
+            // spawn baseline (f32) is the reference
+            let base = run_spawn_baseline(topo, n, threshold, &layout, k,
+                                          steps, &synth);
+            for wire in [WireFormat::F32, WireFormat::F16] {
+                for overlap in [true, false] {
+                    let tag = format!(
+                        "{topo} {wire:?} chunk={chunk} overlap={overlap} \
+                         k={k}");
+                    let (serial, _) = run_pool(
+                        topo, n, ranges.clone(), wire,
+                        IntraNodeMode::Serial, chunk, overlap, k, steps,
+                        &synth);
+                    let (ring, ring_t) = run_pool(
+                        topo, n, ranges.clone(), wire, IntraNodeMode::Ring,
+                        chunk, overlap, k, steps, &synth);
+                    assert_bitwise(&format!("{tag} ring vs serial"), &ring,
+                                   &serial)?;
+                    assert_bitwise(&format!("{tag} serial vs spawn"),
+                                   &serial, &base)?;
+                    // replicas identical within the pipelined mode
+                    for r in 1..topo.world_size() {
+                        if ring[0] != ring[r] {
+                            return Err(format!(
+                                "{tag}: replicas diverged (rank {r})"));
+                        }
+                    }
+                    // the chunk pipeline keeps the overlap ratio a
+                    // true fraction
+                    let e = ring_t.overlap_efficiency();
+                    if !(0.0..=1.0).contains(&e) {
+                        return Err(format!(
+                            "{tag}: overlap efficiency {e} not in [0,1]"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn degenerate_topologies_and_chunks_pinned() {
+    // Pin the corners deterministically: g = 1 (no members — the
+    // hierarchy never resolves, chain irrelevant), m = 1 (flat
+    // fallback), 1x1, the smallest true chain (2M2G), a deeper chain
+    // (2M4G); chunk sizes 1 and far-larger-than-bucket.
+    for (machines, gpus) in [(1usize, 1usize), (1, 4), (4, 1), (2, 2),
+                             (2, 4)] {
+        let topo = Topology::new(machines, gpus);
+        let salt = 0x5EED_0u64 + (machines * 10 + gpus) as u64;
+        let layout = ParamLayout::from_shapes(&[
+            ("a".into(), vec![37]),
+            ("b".into(), vec![301]),
+            ("c".into(), vec![64]),
+        ]);
+        let n = layout.total_len();
+        let threshold = 128;
+        let ranges = bucket_ranges(&build_buckets(&layout, threshold));
+        let synth = ExactSynth { n, salt };
+        let k = 2;
+        let base =
+            run_spawn_baseline(topo, n, threshold, &layout, k, 1, &synth);
+        for chunk in [1usize, 50, 100_000] {
+            for wire in [WireFormat::F32, WireFormat::F16] {
+                let (serial, _) = run_pool(topo, n, ranges.clone(), wire,
+                                           IntraNodeMode::Serial, chunk,
+                                           true, k, 1, &synth);
+                let (ring, _) = run_pool(topo, n, ranges.clone(), wire,
+                                         IntraNodeMode::Ring, chunk, true,
+                                         k, 1, &synth);
+                assert_bitwise(&format!("{topo} {wire:?} chunk={chunk} \
+                                         ring vs serial"),
+                               &ring, &serial)
+                    .unwrap();
+                assert_bitwise(&format!("{topo} {wire:?} chunk={chunk} \
+                                         serial vs spawn"),
+                               &serial, &base)
+                    .unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn chunk_accounting_matches_the_bucket_table() {
+    let topo = Topology::new(2, 3);
+    let layout = ParamLayout::from_shapes(&[
+        ("a".into(), vec![100]),
+        ("b".into(), vec![57]),
+    ]);
+    let n = layout.total_len();
+    let ranges = bucket_ranges(&build_buckets(&layout, 64));
+    let pool = CollectivePool::with_intra(
+        topo, n, ranges.clone(), WireFormat::F32, CommMode::Auto,
+        IntraNodeMode::Ring, 30);
+    assert!(pool.is_intra_ring());
+    let chunks = pool.chunks_per_bucket();
+    assert_eq!(chunks.len(), ranges.len());
+    for (c, b) in chunks.iter().zip(ranges.iter()) {
+        assert_eq!(*c, (b.len() + 29) / 30, "bucket len {}", b.len());
+        assert!(*c >= 1);
+    }
+    // chunk > every bucket: one chunk each (the serialized granularity)
+    let one = CollectivePool::with_intra(
+        topo, n, ranges, WireFormat::F32, CommMode::Auto,
+        IntraNodeMode::Ring, 1_000_000);
+    assert!(one.chunks_per_bucket().iter().all(|&c| c == 1));
+}
+
+#[test]
+fn pipelined_matches_serial_within_rounding_on_arbitrary_floats() {
+    // On general floats the chain (tail-to-head) and the serialized
+    // leader (head-to-tail) associate the node sum differently, so
+    // require tolerance-equality; bitwise is covered on the exact grid.
+    let topo = Topology::new(2, 4);
+    let (n, k, salt) = (901usize, 2usize, 0xF1A7u64);
+    let layout = ParamLayout::from_shapes(&[("a".into(), vec![n])]);
+    let ranges = bucket_ranges(&build_buckets(&layout, 200));
+    let synth = Synth { n, salt };
+    let (serial, _) = run_pool(topo, n, ranges.clone(), WireFormat::F32,
+                               IntraNodeMode::Serial, 64, true, k, 1,
+                               &synth);
+    let (ring, timings) = run_pool(topo, n, ranges, WireFormat::F32,
+                                   IntraNodeMode::Ring, 64, true, k, 1,
+                                   &synth);
+    for r in 0..topo.world_size() {
+        testkit::assert_allclose(&ring[r], &serial[r], 1e-3, 1e-4);
+    }
+    // the chunked timings still render a coherent per-chunk timeline
+    let tl = timings.to_timeline();
+    assert!(tl.spans.iter().any(|s| s.name.contains(".c0")),
+            "expected per-chunk spans, got {:?}",
+            tl.spans.iter().map(|s| &s.name).collect::<Vec<_>>());
+}

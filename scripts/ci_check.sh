@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# CI gate: formatting, lints (warnings are errors), and the full test
-# suite.  Run from anywhere; mirrors what a PR must pass.
+# CI gate: formatting, lints (warnings are errors), docs (rustdoc
+# warnings are errors + doc-tests), and the full test suite.  Run from
+# anywhere; mirrors what a PR must pass.
 #
 # Usage: scripts/ci_check.sh
 set -euo pipefail
@@ -12,6 +13,12 @@ cargo fmt --check
 
 echo "==> cargo clippy -- -D warnings"
 cargo clippy --all-targets -- -D warnings
+
+echo "==> cargo doc --no-deps (rustdoc warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "==> cargo test --doc"
+cargo test --doc -q
 
 echo "==> cargo test -q"
 cargo test -q
