@@ -3,8 +3,9 @@
 //! per-step-spawn step executor comparison (ISSUE 1 tentpole), the
 //! data-bound prefetch-vs-synchronous input pipeline (ISSUE 3 tentpole,
 //! emitted to BENCH_input_pipeline.json), batch assembly, bucket
-//! planning, LAMB host step, f16 conversion throughput, and the
-//! end-to-end PJRT step overhead breakdown.
+//! planning, LAMB host step, f16 conversion throughput, the elastic
+//! checkpoint verify/restore path (ISSUE 6, emitted to
+//! BENCH_elastic.json), and the end-to-end PJRT step overhead breakdown.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 //!
@@ -579,6 +580,110 @@ fn main() -> anyhow::Result<()> {
             root.insert("file_bytes".to_string(), Json::Num(file_bytes));
             root.insert("exposed_speedup".to_string(),
                         Json::Num(sync_mean / async_mean.max(1e-9)));
+            root.insert("rows".to_string(), Json::Arr(entries));
+            std::fs::write(&path, Json::Obj(root).to_string())?;
+            println!("wrote {path}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // ---- elastic restore: post-write verify + restart latency
+    //      (ISSUE 6: the ledger must stay cheap off-loop, and the
+    //      supervised-relaunch path pays ledger consult + full load
+    //      before its first step) ----
+    {
+        use bertdist::checkpoint::{v2_file_len, verify_checkpoint,
+                                   AsyncCheckpointWriter, Checkpoint,
+                                   Ledger};
+        let n = if quick { 1 << 20 } else { 1 << 23 };
+        let dir = std::env::temp_dir().join("bertdist_bench_elastic");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir)?;
+        let mut state = Checkpoint::new(n);
+        for (i, x) in state.params.iter_mut().enumerate() {
+            *x = i as f32 * 1e-6;
+        }
+        let file_bytes = v2_file_len(n) as f64;
+
+        // a small rotation history through the verifying writer: its
+        // stats expose what the CRC re-read costs off the hot loop
+        let mut w = AsyncCheckpointWriter::new(&dir, 3)?;
+        for step in 1..=3u64 {
+            w.save(|c| {
+                c.step = step;
+                c.data_step = step;
+                c.fill_arrays(&state.params, &state.m, &state.v);
+            })?;
+        }
+        let stats = w.finish()?;
+        let per_verify = stats.verify_s / stats.verified.max(1) as f64;
+        rows.push(
+            &format!("ckpt post-write verify ({:.0} MiB, off-loop)",
+                     file_bytes / (1 << 20) as f64),
+            per_verify,
+            format!("{:.0} MiB/s", file_bytes / per_verify.max(1e-9)
+                        / (1 << 20) as f64),
+        );
+
+        // standalone verify throughput on the newest ledger entry
+        let ledger = Ledger::load(&dir);
+        let newest = ledger
+            .newest_verified()
+            .expect("writer left a verified entry")
+            .file
+            .clone();
+        let newest_path = dir.join(&newest);
+        let iters = if quick { 3 } else { 8 };
+        let (verify_min, _, _) = bench_times(iters, || {
+            verify_checkpoint(&newest_path).unwrap();
+        });
+        rows.push(
+            "ckpt verify re-read",
+            verify_min,
+            format!("{:.0} MiB/s", file_bytes / verify_min
+                        / (1 << 20) as f64),
+        );
+
+        // restart-to-restore latency: what a supervised relaunch
+        // (`--max-restarts`) pays between "attempt died" and "state in
+        // memory" — ledger consult, newest-verified selection, full load
+        let (restore_min, _, _) = bench_times(iters, || {
+            let l = Ledger::load(&dir);
+            let e = l.newest_verified().expect("verified entry");
+            let ck = Checkpoint::load(&dir.join(&e.file)).unwrap();
+            std::hint::black_box(ck.step);
+        });
+        rows.push(
+            "elastic restart restore (ledger + load)",
+            restore_min,
+            format!("{:.0} MiB/s", file_bytes / restore_min
+                        / (1 << 20) as f64),
+        );
+
+        if quick || std::env::var("BENCH_JSON_OUT").is_ok() {
+            let path = std::env::var("BENCH_ELASTIC_JSON_OUT")
+                .unwrap_or_else(|_| "BENCH_elastic.json".to_string());
+            let mut mk = |name: &str, ms: f64, bps: f64| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(name.to_string()));
+                m.insert("min_ms".to_string(), Json::Num(ms));
+                m.insert("bytes_per_s".to_string(), Json::Num(bps));
+                Json::Obj(m)
+            };
+            let entries = vec![
+                mk("post_write_verify", per_verify * 1e3,
+                   file_bytes / per_verify.max(1e-9)),
+                mk("verify_re_read", verify_min * 1e3,
+                   file_bytes / verify_min),
+                mk("restart_restore", restore_min * 1e3,
+                   file_bytes / restore_min),
+            ];
+            let mut root = BTreeMap::new();
+            root.insert("bench".to_string(),
+                        Json::Str("elastic".to_string()));
+            root.insert("file_bytes".to_string(), Json::Num(file_bytes));
+            root.insert("verified_files".to_string(),
+                        Json::Num(stats.verified as f64));
             root.insert("rows".to_string(), Json::Arr(entries));
             std::fs::write(&path, Json::Obj(root).to_string())?;
             println!("wrote {path}");

@@ -1,0 +1,296 @@
+//! The verified-checkpoint ledger: `ledger.json` in the rotation
+//! directory records, for every rotation file the writer produced,
+//! whether a post-write CRC re-read proved the on-disk bytes
+//! restorable.  Elastic restarts (`--max-restarts`, `--resume DIR`)
+//! consult it to pick the newest *known-good* checkpoint, so a torn or
+//! bit-flipped newest file degrades to the previous verified entry
+//! instead of aborting the run.
+//!
+//! Format (version 1):
+//!
+//! ```json
+//! {"version": 1, "entries": [
+//!   {"file": "ckpt-0000000004.bckp", "step": 4, "data_step": 4,
+//!    "bytes": 1244, "verified": true}
+//! ]}
+//! ```
+//!
+//! The ledger is advisory, never authoritative: losing or corrupting it
+//! loses only the verify verdicts (resume falls back to trying files
+//! newest-first), never the checkpoints themselves.  [`Ledger::load`]
+//! therefore treats a missing or unparsable file as empty instead of
+//! erroring.  Writes are atomic (temp + rename) with the same crash
+//! contract as the checkpoints: a crash mid-save leaves the previous
+//! ledger intact.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::CkptError;
+use crate::jsonlite::Json;
+
+/// Ledger file name inside a rotation directory.
+pub const LEDGER_FILE: &str = "ledger.json";
+
+/// One rotation checkpoint the writer produced, with its verify
+/// verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LedgerEntry {
+    /// Rotation file name (`ckpt-{data_step:010}.bckp`), relative to
+    /// the rotation directory.
+    pub file: String,
+    /// Optimizer steps applied at the snapshot.
+    pub step: u64,
+    /// Monotone data-consumption counter at the snapshot.
+    pub data_step: u64,
+    /// On-disk file size.
+    pub bytes: u64,
+    /// `true` when the post-write CRC re-read proved the bytes
+    /// restorable; `false` when the re-read failed (torn write, disk
+    /// error) — such a file is never selected for resume.
+    pub verified: bool,
+}
+
+/// The verified-checkpoint ledger for one rotation directory, kept
+/// sorted oldest → newest by `(data_step, file)`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Ledger {
+    pub entries: Vec<LedgerEntry>,
+}
+
+impl Ledger {
+    /// Path of the ledger file inside `dir`.
+    pub fn path(dir: &Path) -> PathBuf {
+        dir.join(LEDGER_FILE)
+    }
+
+    /// Load the ledger for `dir`.  Missing or unparsable files yield an
+    /// EMPTY ledger (with a warning for the unparsable case): the
+    /// ledger is advisory, and resume must keep working in a rotation
+    /// directory that predates it.
+    pub fn load(dir: &Path) -> Ledger {
+        let path = Self::path(dir);
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            return Ledger::default();
+        };
+        let Ok(doc) = Json::parse(&text) else {
+            log::warn!("unparsable {} — starting a fresh ledger",
+                       path.display());
+            return Ledger::default();
+        };
+        let mut out = Ledger::default();
+        if let Some(arr) = doc.get("entries").and_then(Json::as_arr) {
+            for e in arr {
+                let fields = (
+                    e.get("file").and_then(Json::as_str),
+                    e.get("step").and_then(Json::as_f64),
+                    e.get("data_step").and_then(Json::as_f64),
+                    e.get("bytes").and_then(Json::as_f64),
+                );
+                let (Some(file), Some(step), Some(data_step), Some(bytes)) =
+                    fields else { continue };
+                out.entries.push(LedgerEntry {
+                    file: file.to_string(),
+                    step: step as u64,
+                    data_step: data_step as u64,
+                    bytes: bytes as u64,
+                    verified: matches!(e.get("verified"),
+                                       Some(Json::Bool(true))),
+                });
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Save atomically (temp + rename) into `dir`.
+    pub fn save(&self, dir: &Path) -> Result<(), CkptError> {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut m = BTreeMap::new();
+                m.insert("file".into(), Json::Str(e.file.clone()));
+                m.insert("step".into(), Json::Num(e.step as f64));
+                m.insert("data_step".into(), Json::Num(e.data_step as f64));
+                m.insert("bytes".into(), Json::Num(e.bytes as f64));
+                m.insert("verified".into(), Json::Bool(e.verified));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("version".into(), Json::Num(1.0));
+        root.insert("entries".into(), Json::Arr(entries));
+        // NOT `ckpt-*.tmp`, so checkpoint rotation never touches it.
+        let tmp = dir.join(format!("{LEDGER_FILE}.tmp"));
+        std::fs::write(&tmp, Json::Obj(root).to_string())?;
+        std::fs::rename(&tmp, Self::path(dir))?;
+        Ok(())
+    }
+
+    fn sort(&mut self) {
+        self.entries
+            .sort_by(|a, b| (a.data_step, &a.file)
+                .cmp(&(b.data_step, &b.file)));
+    }
+
+    /// Insert `entry`, replacing any existing entry for the same file
+    /// (a re-written data_step keeps one verdict, the latest).
+    pub fn record(&mut self, entry: LedgerEntry) {
+        self.entries.retain(|e| e.file != entry.file);
+        self.entries.push(entry);
+        self.sort();
+    }
+
+    /// Drop entries whose file name fails `keep` (post-rotation sweep).
+    pub fn retain_files<F: FnMut(&str) -> bool>(&mut self, mut keep: F) {
+        self.entries.retain(|e| keep(&e.file));
+    }
+
+    /// The verify verdict for a rotation file name: `Some(true)`
+    /// verified, `Some(false)` known-bad, `None` unknown to the ledger
+    /// (pre-ledger file, foreign file — the caller decides).
+    pub fn status(&self, file: &str) -> Option<bool> {
+        self.entries.iter().find(|e| e.file == file).map(|e| e.verified)
+    }
+
+    /// The newest entry whose verify re-read passed — the elastic
+    /// restart target.
+    pub fn newest_verified(&self) -> Option<&LedgerEntry> {
+        self.entries.iter().rev().find(|e| e.verified)
+    }
+}
+
+/// CRC re-read of a just-written checkpoint: stream the file back from
+/// disk and validate the framing (magic, version, size arithmetic) and
+/// the trailing CRC-32 — the cheap proof that the bytes that actually
+/// hit the disk are restorable, without parsing the arrays.  Returns
+/// the verified byte count.
+pub fn verify_checkpoint(path: &Path) -> Result<u64, CkptError> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() < 12 || &bytes[0..4] != super::MAGIC {
+        return Err(CkptError::BadMagic);
+    }
+    let body = &bytes[..bytes.len() - 4];
+    let want = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into()
+        .unwrap());
+    if crate::util::crc32(body) != want {
+        return Err(CkptError::Corrupt);
+    }
+    let n_off = match u32::from_le_bytes(bytes[4..8].try_into().unwrap()) {
+        1 => 24usize,
+        2 => 232,
+        v => return Err(CkptError::BadVersion(v)),
+    };
+    if bytes.len() < n_off + 8 {
+        return Err(CkptError::SizeMismatch);
+    }
+    let n = u64::from_le_bytes(bytes[n_off..n_off + 8].try_into().unwrap());
+    let expect = n
+        .checked_mul(12)
+        .and_then(|b| b.checked_add(n_off as u64 + 8 + 4))
+        .ok_or(CkptError::SizeMismatch)?;
+    if bytes.len() as u64 != expect {
+        return Err(CkptError::SizeMismatch);
+    }
+    Ok(bytes.len() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Checkpoint;
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "bertdist_ledger_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn entry(file: &str, data_step: u64, verified: bool) -> LedgerEntry {
+        LedgerEntry {
+            file: file.to_string(),
+            step: data_step,
+            data_step,
+            bytes: 100,
+            verified,
+        }
+    }
+
+    #[test]
+    fn round_trips_and_sorts_entries() {
+        let dir = tmp("rt");
+        let mut l = Ledger::default();
+        l.record(entry("ckpt-0000000004.bckp", 4, true));
+        l.record(entry("ckpt-0000000002.bckp", 2, true));
+        l.record(entry("ckpt-0000000006.bckp", 6, false));
+        l.save(&dir).unwrap();
+        let back = Ledger::load(&dir);
+        assert_eq!(back, l);
+        let steps: Vec<u64> =
+            back.entries.iter().map(|e| e.data_step).collect();
+        assert_eq!(steps, vec![2, 4, 6]);
+        // re-recording the same file replaces, not duplicates
+        let mut l2 = back;
+        l2.record(entry("ckpt-0000000006.bckp", 6, true));
+        assert_eq!(l2.entries.len(), 3);
+        assert_eq!(l2.status("ckpt-0000000006.bckp"), Some(true));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn newest_verified_skips_known_bad_tail() {
+        let mut l = Ledger::default();
+        l.record(entry("ckpt-0000000002.bckp", 2, true));
+        l.record(entry("ckpt-0000000004.bckp", 4, true));
+        l.record(entry("ckpt-0000000006.bckp", 6, false));
+        assert_eq!(l.newest_verified().unwrap().data_step, 4);
+        assert_eq!(l.status("ckpt-0000000006.bckp"), Some(false));
+        assert_eq!(l.status("ckpt-9999999999.bckp"), None);
+        // an all-bad ledger has no restore target
+        let mut bad = Ledger::default();
+        bad.record(entry("ckpt-0000000001.bckp", 1, false));
+        assert!(bad.newest_verified().is_none());
+    }
+
+    #[test]
+    fn missing_or_garbage_ledger_loads_empty() {
+        let dir = tmp("garbage");
+        assert_eq!(Ledger::load(&dir), Ledger::default());
+        std::fs::write(Ledger::path(&dir), "{not json").unwrap();
+        assert_eq!(Ledger::load(&dir), Ledger::default());
+        // valid JSON with malformed entries: they are skipped, not fatal
+        std::fs::write(
+            Ledger::path(&dir),
+            r#"{"version": 1, "entries": [{"file": 7},
+                {"file": "ckpt-0000000003.bckp", "step": 3,
+                 "data_step": 3, "bytes": 50, "verified": true}]}"#,
+        ).unwrap();
+        let l = Ledger::load(&dir);
+        assert_eq!(l.entries.len(), 1);
+        assert_eq!(l.newest_verified().unwrap().data_step, 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn verify_accepts_intact_and_rejects_flipped_bytes() {
+        let dir = tmp("verify");
+        let mut c = Checkpoint::new(16);
+        c.step = 5;
+        c.data_step = 7;
+        let path = dir.join("v.bckp");
+        c.save(&path).unwrap();
+        let len = std::fs::metadata(&path).unwrap().len();
+        assert_eq!(verify_checkpoint(&path).unwrap(), len);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x08;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(verify_checkpoint(&path),
+                         Err(CkptError::Corrupt)));
+        assert!(verify_checkpoint(&dir.join("absent.bckp")).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -60,7 +60,23 @@
 //! rotation layer ([`writer`]) cleans up.  Periodic hot-loop saving goes
 //! through [`AsyncCheckpointWriter`]: the trainer memcpys its state into
 //! a recycled snapshot buffer and a background thread does the write and
-//! the keep-last-K rotation off the hot loop.
+//! the keep-last-K rotation off the hot loop.  After every write the
+//! background thread CRC re-reads the file ([`verify_checkpoint`]) and
+//! records the verdict in `ledger.json` ([`ledger`]), so elastic
+//! restarts always target the newest *known-good* checkpoint.
+//!
+//! ## Elastic (reshaped) restore
+//!
+//! The strict fingerprint gate refuses any topology change.  The
+//! reshaped gate ([`Checkpoint::ensure_reshape_fingerprint`], CLI
+//! `--resume-reshape`) relaxes exactly the world-shape fields —
+//! topology, comm/intra-node mode, bucket/chunk layout, prefetch depth
+//! — and keeps every stream-content field strict.  At restore, params /
+//! m / v / scaler / step / data_step are bitwise-preserved; afterwards
+//! the reduction association and the per-rank shard assignment +
+//! masking streams legitimately diverge from the old world (the new
+//! world re-derives them), while two runs on the SAME new world from
+//! the same checkpoint remain bitwise-identical (see `docs/elastic.md`).
 //!
 //! ## Invariants
 //!
@@ -79,10 +95,13 @@
 //!   per periodic save; the only blocking case (writer a full write
 //!   behind) is timed and reported (`TrainReport.checkpoint_s`).
 
+pub mod ledger;
 pub mod writer;
 
+pub use ledger::{verify_checkpoint, Ledger, LedgerEntry, LEDGER_FILE};
 pub use writer::{checkpoint_file_name, latest_checkpoint, list_checkpoints,
-                 prune_checkpoints, AsyncCheckpointWriter, SaveStats};
+                 prune_checkpoints, prune_checkpoints_protecting,
+                 AsyncCheckpointWriter, SaveStats};
 
 use std::io::{Read, Write};
 use std::ops::Range;
@@ -377,6 +396,29 @@ impl Fingerprint {
         }
         out
     }
+
+    /// The mismatch list under a RESHAPED (elastic) restore.  The
+    /// world-shape and exchange-association fields a reshape
+    /// legitimately changes — topology, comm/intra-node mode,
+    /// bucket/chunk layout, prefetch depth — are ignored; everything
+    /// that defines the training-stream CONTENT (seed, per-rank batch
+    /// geometry, accumulation, optimizer, variant, LR schedule,
+    /// masking, corpus) stays exactly as strict as [`Self::mismatches`]:
+    /// a reshape moves the same run to different hardware, it never
+    /// quietly changes what is being trained.
+    pub fn reshape_mismatches(&self, run: &Fingerprint) -> Vec<String> {
+        let neutral = |fp: &Fingerprint| Fingerprint {
+            machines: 0,
+            gpus_per_machine: 0,
+            comm_mode: 0,
+            intra_node: 0,
+            bucket_elems: 0,
+            chunk_elems: 0,
+            prefetch_depth: 0,
+            ..*fp
+        };
+        neutral(self).mismatches(&neutral(run))
+    }
 }
 
 /// Everything needed to resume training exactly.
@@ -468,6 +510,27 @@ impl Checkpoint {
             None => Ok(()),
             Some(saved) => {
                 let diffs = saved.mismatches(run);
+                if diffs.is_empty() {
+                    Ok(())
+                } else {
+                    Err(CkptError::FingerprintMismatch(diffs.join("; ")))
+                }
+            }
+        }
+    }
+
+    /// The relaxed gate for a RESHAPED (elastic) restore: like
+    /// [`Self::ensure_fingerprint`] but via
+    /// [`Fingerprint::reshape_mismatches`], so a different (machines,
+    /// gpus) topology — and the exchange-layout knobs that follow from
+    /// it — passes, while any field that changes the training-stream
+    /// content still refuses loudly.
+    pub fn ensure_reshape_fingerprint(&self, run: &Fingerprint)
+        -> Result<(), CkptError> {
+        match &self.fingerprint {
+            None => Ok(()),
+            Some(saved) => {
+                let diffs = saved.reshape_mismatches(run);
                 if diffs.is_empty() {
                     Ok(())
                 } else {
@@ -894,6 +957,45 @@ mod tests {
         saved.data_manifest = 0;
         c0.fingerprint = Some(saved);
         c0.ensure_fingerprint(&fp(1)).unwrap();
+    }
+
+    #[test]
+    fn reshape_gate_relaxes_world_shape_but_nothing_else() {
+        let mut c = Checkpoint::new(4);
+        c.fingerprint = Some(fp(1));
+        // a pure topology change (and the exchange knobs that follow
+        // from it) refuses a strict restore but passes a reshaped one
+        let mut run = fp(1);
+        run.machines = 1;
+        run.gpus_per_machine = 2;
+        run.comm_mode = 0;
+        run.intra_node = 0;
+        run.bucket_elems = 1 << 18;
+        run.chunk_elems = 4096;
+        run.prefetch_depth = 4;
+        let strict = c.ensure_fingerprint(&run).unwrap_err().to_string();
+        assert!(strict.contains("topology"), "{strict}");
+        c.ensure_reshape_fingerprint(&run).unwrap();
+        // ...but stream-content fields stay strict under reshape
+        for (name, mutate) in [
+            ("seed", (&|f: &mut Fingerprint| f.seed = 2)
+                 as &dyn Fn(&mut Fingerprint)),
+            ("micro_batch", &|f| f.micro_batch = 4),
+            ("accum_steps", &|f| f.accum_steps = 8),
+            ("optimizer", &|f| f.optimizer = 1),
+            ("lr", &|f| f.lr = 3e-4),
+            ("mask_prob", &|f| f.mask_prob = 0.2),
+            ("corpus", &|f| f.data_manifest = 0xFEED_0002),
+        ] {
+            let mut run = run;
+            mutate(&mut run);
+            let msg = c.ensure_reshape_fingerprint(&run)
+                .unwrap_err().to_string();
+            assert!(msg.contains(name), "{name}: {msg}");
+        }
+        // fingerprint-less checkpoints pass both gates
+        c.fingerprint = None;
+        c.ensure_reshape_fingerprint(&run).unwrap();
     }
 
     #[test]

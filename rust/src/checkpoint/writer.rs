@@ -17,13 +17,25 @@
 //! leave at most a stale `.tmp` (the rename never happened);
 //! [`latest_checkpoint`] ignores those and [`prune_checkpoints`]
 //! deletes them.
+//!
+//! After every write the worker CRC re-reads the file
+//! ([`super::verify_checkpoint`]) and records the verdict in the
+//! rotation directory's `ledger.json` ([`super::Ledger`]); rotation
+//! then runs with the newest *verified* file protected, so keep-last-K
+//! can never delete the only known-good restore target even when newer
+//! writes came back torn.  No `.tmp` cleanup ever races the verify
+//! re-read: the upfront sweep in [`AsyncCheckpointWriter::new`] runs
+//! before the worker thread spawns, and every later sweep runs on the
+//! worker thread itself, strictly after the save + verify of the file
+//! in flight.
 
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use super::{v2_file_len, Checkpoint, CkptError};
+use super::{v2_file_len, verify_checkpoint, Checkpoint, CkptError, Ledger,
+            LedgerEntry};
 
 const FILE_PREFIX: &str = "ckpt-";
 const FILE_SUFFIX: &str = ".bckp";
@@ -42,7 +54,11 @@ fn parse_file_name(name: &str) -> Option<u64> {
 }
 
 /// All rotation checkpoints in `dir`, sorted oldest → newest.  Stale
-/// `.tmp` files and foreign names are ignored.
+/// `.tmp` files and foreign names are ignored (skipped, never an
+/// error).  Two spellings of the same `data_step` (e.g. `ckpt-7.bckp`
+/// next to `ckpt-0000000007.bckp`) tie-break by file name, so resume
+/// selection and rotation order are deterministic regardless of
+/// directory-iteration order.
 pub fn list_checkpoints(dir: &Path)
     -> std::io::Result<Vec<(u64, PathBuf)>> {
     let mut out = Vec::new();
@@ -55,7 +71,7 @@ pub fn list_checkpoints(dir: &Path)
             out.push((step, entry.path()));
         }
     }
-    out.sort_unstable_by_key(|(s, _)| *s);
+    out.sort_unstable_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
     Ok(out)
 }
 
@@ -69,10 +85,24 @@ pub fn latest_checkpoint(dir: &Path) -> std::io::Result<Option<PathBuf>> {
 /// Returns how many files were removed.
 pub fn prune_checkpoints(dir: &Path, keep_last: usize)
     -> std::io::Result<usize> {
+    prune_checkpoints_protecting(dir, keep_last, None)
+}
+
+/// [`prune_checkpoints`] with one file name the rotation must never
+/// delete, whatever its age: the writer passes the newest
+/// ledger-VERIFIED checkpoint here, so even a run of torn newer writes
+/// cannot rotate away the only known-good restore target.
+pub fn prune_checkpoints_protecting(dir: &Path, keep_last: usize,
+                                    protect: Option<&str>)
+    -> std::io::Result<usize> {
     let mut removed = 0;
     let ckpts = list_checkpoints(dir)?;
     if ckpts.len() > keep_last {
         for (_, path) in &ckpts[..ckpts.len() - keep_last] {
+            if protect.is_some()
+                && path.file_name().and_then(|n| n.to_str()) == protect {
+                continue;
+            }
             std::fs::remove_file(path)?;
             removed += 1;
         }
@@ -100,6 +130,12 @@ pub struct SaveStats {
     pub write_s: f64,
     /// Old checkpoints / stale temp files removed by rotation.
     pub pruned: u64,
+    /// Checkpoints whose post-write CRC re-read passed (ledger
+    /// `verified: true`); `verified < writes` means torn/corrupt writes
+    /// were detected and quarantined.
+    pub verified: u64,
+    /// Seconds spent in post-write verify re-reads (off-loop).
+    pub verify_s: f64,
 }
 
 impl SaveStats {
@@ -238,14 +274,48 @@ impl Drop for AsyncCheckpointWriter {
 fn worker(dir: PathBuf, keep_last: usize, job_rx: Receiver<Checkpoint>,
           free_tx: Sender<Checkpoint>) -> Result<SaveStats, CkptError> {
     let mut stats = SaveStats::default();
+    // Reload any existing ledger so a restarted run keeps the prior
+    // verify verdicts for files it did not rewrite.
+    let mut ledger = Ledger::load(&dir);
     while let Ok(snap) = job_rx.recv() {
-        let path = dir.join(checkpoint_file_name(snap.data_step));
+        let name = checkpoint_file_name(snap.data_step);
+        let path = dir.join(&name);
+        let file_bytes = v2_file_len(snap.params.len()) as u64;
         let t0 = Instant::now();
         snap.save(&path)?;
         stats.write_s += t0.elapsed().as_secs_f64();
         stats.writes += 1;
-        stats.bytes += v2_file_len(snap.params.len()) as u64;
-        stats.pruned += prune_checkpoints(&dir, keep_last)? as u64;
+        stats.bytes += file_bytes;
+        // Verify re-read: CRC the bytes that actually hit the disk.  A
+        // torn or bit-flipped write is recorded as unverified — resume
+        // selection skips it and rotation keeps the last good file.
+        let tv = Instant::now();
+        let verified = match verify_checkpoint(&path) {
+            Ok(_) => true,
+            Err(e) => {
+                log::warn!("checkpoint {} failed post-write verify: {e} \
+                            — marked unverified in the ledger",
+                           path.display());
+                false
+            }
+        };
+        stats.verify_s += tv.elapsed().as_secs_f64();
+        stats.verified += verified as u64;
+        ledger.record(LedgerEntry {
+            file: name,
+            step: snap.step,
+            data_step: snap.data_step,
+            bytes: file_bytes,
+            verified,
+        });
+        // Rotate AFTER the verify so the protection target is current:
+        // the newest VERIFIED file survives keep-last-K regardless of
+        // how many unverified writes sit above it.
+        let protect = ledger.newest_verified().map(|e| e.file.clone());
+        stats.pruned += prune_checkpoints_protecting(
+            &dir, keep_last, protect.as_deref())? as u64;
+        ledger.retain_files(|f| dir.join(f).exists());
+        ledger.save(&dir)?;
         // Receiver gone during shutdown: the buffer just drops.
         let _ = free_tx.send(snap);
     }
@@ -334,6 +404,82 @@ mod tests {
             first.is_err() || second.is_err() || finished.is_err(),
             "a write into a deleted dir must fail loudly"
         );
+    }
+
+    #[test]
+    fn worker_maintains_a_verified_ledger() {
+        let dir = tmp("ledger");
+        let mut w = AsyncCheckpointWriter::new(&dir, 2).unwrap();
+        for step in 1..=3u64 {
+            w.save(snap_filler(16, step)).unwrap();
+        }
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.writes, 3);
+        assert_eq!(stats.verified, 3, "all intact writes verify");
+        assert!(stats.verify_s >= 0.0);
+        let ledger = Ledger::load(&dir);
+        // rotation swept file 1 out of the ledger too
+        let files: Vec<String> =
+            ledger.entries.iter().map(|e| e.file.clone()).collect();
+        assert_eq!(files, vec![checkpoint_file_name(2),
+                               checkpoint_file_name(3)]);
+        assert!(ledger.entries.iter().all(|e| e.verified));
+        assert_eq!(ledger.newest_verified().unwrap().data_step, 3);
+        assert_eq!(ledger.newest_verified().unwrap().bytes,
+                   v2_file_len(16) as u64);
+        // a fresh writer in the same dir resumes the ledger, keeping
+        // the verdicts for files it did not rewrite
+        let mut w = AsyncCheckpointWriter::new(&dir, 2).unwrap();
+        w.save(snap_filler(16, 4)).unwrap();
+        w.finish().unwrap();
+        let ledger = Ledger::load(&dir);
+        assert_eq!(ledger.newest_verified().unwrap().data_step, 4);
+        assert_eq!(ledger.status(&checkpoint_file_name(3)), Some(true));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prune_never_deletes_the_protected_file() {
+        let dir = tmp("protect");
+        std::fs::create_dir_all(&dir).unwrap();
+        for step in 1..=3u64 {
+            let mut c = Checkpoint::new(4);
+            c.data_step = step;
+            c.save(&dir.join(checkpoint_file_name(step))).unwrap();
+        }
+        // protect the OLDEST file (as if 2 and 3 failed their verify)
+        let name1 = checkpoint_file_name(1);
+        let removed =
+            prune_checkpoints_protecting(&dir, 1, Some(&name1)).unwrap();
+        assert_eq!(removed, 1, "only the unprotected old file goes");
+        assert!(dir.join(&name1).exists(), "protected file survives");
+        assert!(!dir.join(checkpoint_file_name(2)).exists());
+        assert!(dir.join(checkpoint_file_name(3)).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn duplicate_step_spellings_order_deterministically() {
+        let dir = tmp("ties");
+        std::fs::create_dir_all(&dir).unwrap();
+        // same data_step, two spellings, plus a foreign file to skip
+        for name in ["ckpt-7.bckp", "ckpt-0000000007.bckp"] {
+            let mut c = Checkpoint::new(2);
+            c.data_step = 7;
+            c.save(&dir.join(name)).unwrap();
+        }
+        std::fs::write(dir.join("notes.txt"), b"ignored").unwrap();
+        let a = list_checkpoints(&dir).unwrap();
+        let b = list_checkpoints(&dir).unwrap();
+        assert_eq!(a, b, "listing order is stable");
+        assert_eq!(a.len(), 2);
+        assert_eq!((a[0].0, a[1].0), (7, 7));
+        // ties break by name: zero-padded < short spelling, so latest
+        // is deterministic too
+        assert!(a[0].1 < a[1].1);
+        assert!(latest_checkpoint(&dir).unwrap().unwrap()
+            .ends_with("ckpt-7.bckp"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -31,6 +31,38 @@ pub enum CliError {
     Unknown(String),
 }
 
+/// `--resume`: the checkpoint exists and is readable, but was produced
+/// by a different run configuration (fix the config, not the disk).
+pub const EXIT_RESUME_MISMATCH: i32 = 3;
+/// `--resume`: the selected checkpoint bytes are corrupt or unreadable
+/// and no older candidate survived (fix the disk).
+pub const EXIT_RESUME_CORRUPT: i32 = 4;
+/// `--resume`: nothing restorable at the target — missing file, empty
+/// directory, or every candidate is ledger-unverified (nothing to fix;
+/// start fresh).
+pub const EXIT_RESUME_NONE: i32 = 5;
+
+/// An error carrying a specific process exit code.  `cli_main`
+/// downcasts the `anyhow` chain for one of these and exits with
+/// `code`; any other error exits 1.  Codes 0/1/2 keep their historical
+/// meanings (ok / generic error / usage), so the resume-failure
+/// taxonomy starts at [`EXIT_RESUME_MISMATCH`] — supervisors and
+/// scripts can tell "fix the config" from "fix the disk" from "nothing
+/// to resume" without parsing stderr.
+#[derive(thiserror::Error, Debug)]
+#[error("{msg}")]
+pub struct CliExit {
+    pub code: i32,
+    pub msg: String,
+}
+
+impl CliExit {
+    /// Build an `anyhow::Error` that exits with `code`.
+    pub fn err(code: i32, msg: impl Into<String>) -> anyhow::Error {
+        anyhow::Error::new(CliExit { code, msg: msg.into() })
+    }
+}
+
 impl Args {
     /// Parse from an explicit token list (tests) — `argv[0]` excluded.
     pub fn parse_from<I, S>(tokens: I) -> Result<Args, CliError>
@@ -168,6 +200,18 @@ impl Args {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn cli_exit_downcasts_through_an_anyhow_chain() {
+        use anyhow::Context as _;
+        let e = CliExit::err(EXIT_RESUME_CORRUPT, "ckpt unreadable")
+            .context("cannot resume");
+        assert_eq!(e.downcast_ref::<CliExit>().map(|x| x.code),
+                   Some(EXIT_RESUME_CORRUPT));
+        assert!(format!("{e:#}").contains("ckpt unreadable"));
+        let plain = anyhow::anyhow!("some other failure");
+        assert!(plain.downcast_ref::<CliExit>().is_none());
+    }
 
     #[test]
     fn parses_subcommand_options_flags_positionals() {

@@ -841,8 +841,11 @@ impl CollectivePool {
             }
         }
         out.wall_s = t0.elapsed().as_secs_f64();
-        anyhow::ensure!(errs.is_empty(), "pooled step failed: {}",
-                        errs.join("; "));
+        // Name the step as well as the ranks: an elastic supervisor's
+        // log must show WHERE the world was lost so "progress lost ≤
+        // save_every" is auditable from the error alone.
+        anyhow::ensure!(errs.is_empty(), "pooled step {step_index} \
+                        failed: {}", errs.join("; "));
         Ok(out)
     }
 

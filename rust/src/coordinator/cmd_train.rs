@@ -6,15 +6,16 @@
 use std::path::{Path, PathBuf};
 
 use crate::checkpoint::{self, AsyncCheckpointWriter, Checkpoint,
-                        Fingerprint};
-use crate::cliopt::Args;
+                        Fingerprint, Ledger};
+use crate::cliopt::{Args, CliExit, EXIT_RESUME_CORRUPT,
+                    EXIT_RESUME_MISMATCH, EXIT_RESUME_NONE};
 use crate::collectives::pool::{CommMode, IntraNodeMode};
 use crate::config::{RunConfig, TwoPhaseSchedule};
 use crate::data::pipeline::shard_manifest_hash;
 use crate::data::ShardedDataset;
 use crate::runtime::Engine;
 use crate::topology::Topology;
-use crate::trainer::{TrainReport, Trainer};
+use crate::trainer::{InjectFail, TrainReport, Trainer};
 use crate::util::ascii_plot::{plot_series, Series};
 
 /// Outcome of a (possibly two-phase) training run.
@@ -40,6 +41,15 @@ pub struct CkptPlan<'a> {
     /// Rotation directory for periodic async saves (`--ckpt-dir`);
     /// active when `cfg.train.save_every > 0`.
     pub rotate_dir: Option<&'a Path>,
+    /// Elastic restore (`--resume-reshape` / a `--max-restarts`
+    /// relaunch): `resume` may carry a DIFFERENT (machines, gpus)
+    /// topology — world-invariant state restores bitwise, per-rank
+    /// stream positions and bucket layout re-derive for this run's
+    /// world.
+    pub resume_reshape: bool,
+    /// Deterministic fault injection threaded into the trainer
+    /// (`--inject-fail step[:rank]` — the elastic-restart test hook).
+    pub inject_fail: Option<InjectFail>,
 }
 
 /// Open one dataset view per rank.
@@ -130,8 +140,18 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
         fp2.data_manifest = manifest;
         let is_phase2 = steps2 > 0
             && match ck.fingerprint {
-                Some(fp) => fp == fp2
-                    && (fp != fp1 || ck.data_step as usize > steps1),
+                Some(fp) => {
+                    // under a reshaped restore the topology fields
+                    // differ by design, so phase matching uses the
+                    // relaxed comparison
+                    let (m1, m2) = if plan.resume_reshape {
+                        (fp.reshape_mismatches(&fp1).is_empty(),
+                         fp.reshape_mismatches(&fp2).is_empty())
+                    } else {
+                        (fp == fp1, fp == fp2)
+                    };
+                    m2 && (!m1 || ck.data_step as usize > steps1)
+                }
                 None => ck.data_step as usize > steps1,
             };
         if is_phase2 {
@@ -151,17 +171,32 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
     } else {
         let mut t = Trainer::new(engine, cfg.clone(), seq1, batch1)?;
         t.set_data_manifest(manifest);
+        t.set_inject_fail(plan.inject_fail);
         // `--resume` finishes THE SAME run: already-consumed steps are
         // subtracted while total_steps_for_lr keeps the original
         // schedule, so the continuation is bitwise what the
         // uninterrupted run would have done.
         let mut run1 = steps1;
         if let Some(ck) = resume1.take() {
-            println!(
-                "resuming exactly: step {}, data_step {}, loss scale {}",
-                ck.step, ck.data_step, ck.loss_scale()
-            );
-            t.restore(ck)?;
+            if plan.resume_reshape {
+                let from = ck.fingerprint.map_or("?".into(), |f| {
+                    format!("{}M{}G", f.machines, f.gpus_per_machine)
+                });
+                println!(
+                    "resuming reshaped: step {}, data_step {}, loss \
+                     scale {} (checkpoint topology {from} -> run {})",
+                    ck.step, ck.data_step, ck.loss_scale(),
+                    cfg.cluster.topo
+                );
+                t.restore_reshape(ck)?;
+            } else {
+                println!(
+                    "resuming exactly: step {}, data_step {}, loss \
+                     scale {}",
+                    ck.step, ck.data_step, ck.loss_scale()
+                );
+                t.restore(ck)?;
+            }
             let done = t.data_step().min(steps1);
             run1 = steps1 - done;
             if done > 0 {
@@ -230,15 +265,25 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
     let report2 = if steps2 > 0 {
         let mut t2 = Trainer::new(engine, cfg2, seq2, batch2)?;
         t2.set_data_manifest(manifest);
+        t2.set_inject_fail(plan.inject_fail);
         let mut run2 = steps2;
         if let Some(ck) = resume2.take() {
-            println!(
-                "resuming exactly into phase 2: step {}, data_step {}, \
-                 loss scale {}",
-                ck.step, ck.data_step, ck.loss_scale()
-            );
-            // strict gate against the PHASE-2 fingerprint
-            t2.restore(ck)?;
+            if plan.resume_reshape {
+                println!(
+                    "resuming reshaped into phase 2: step {}, data_step \
+                     {}, loss scale {}",
+                    ck.step, ck.data_step, ck.loss_scale()
+                );
+                t2.restore_reshape(ck)?;
+            } else {
+                println!(
+                    "resuming exactly into phase 2: step {}, data_step \
+                     {}, loss scale {}",
+                    ck.step, ck.data_step, ck.loss_scale()
+                );
+                // strict gate against the PHASE-2 fingerprint
+                t2.restore(ck)?;
+            }
             let done = t2.data_step().saturating_sub(steps1).min(steps2);
             run2 = steps2 - done;
             if done > 0 {
@@ -274,12 +319,14 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
         let stats = w.finish()?;
         let mib = stats.bytes as f64 / (1 << 20) as f64;
         println!(
-            "async checkpoints: {} files, {:.1} MiB at {:.0} MiB/s \
-             off-loop (hot-loop stall {:.3}s)",
-            stats.writes, mib,
+            "async checkpoints: {} files, {} verified, {:.1} MiB at \
+             {:.0} MiB/s off-loop (hot-loop stall {:.3}s, verify \
+             {:.3}s off-loop)",
+            stats.writes, stats.verified, mib,
             stats.bytes_per_sec() / (1 << 20) as f64,
             report1.checkpoint_s
-                + report2.as_ref().map_or(0.0, |r| r.checkpoint_s)
+                + report2.as_ref().map_or(0.0, |r| r.checkpoint_s),
+            stats.verify_s
         );
     }
 
@@ -293,31 +340,69 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
     })
 }
 
-/// Load + gate a `--resume` target: a checkpoint file, or a rotation
-/// directory (tries its `ckpt-*.bckp` files NEWEST FIRST, falling back
-/// past unreadable/corrupt ones — that recovery depth is what the
-/// keep-last-K rotation exists for).  Runs BEFORE the engine/data setup
-/// so a missing file or a config-fingerprint mismatch fails in
-/// milliseconds with a clear message and a nonzero exit.  `candidates`
+/// Load + gate a `--resume` / `--resume-reshape` target: a checkpoint
+/// file, or a rotation directory (tries its `ckpt-*.bckp` files NEWEST
+/// FIRST — skipping any the directory's ledger marks unverified — and
+/// falls back past unreadable/corrupt ones; that recovery depth is what
+/// the keep-last-K rotation + post-write verify exist for).  Runs
+/// BEFORE the engine/data setup so a missing file or a
+/// config-fingerprint mismatch fails in milliseconds with a clear
+/// message and a DISTINCT exit code ([`EXIT_RESUME_NONE`] /
+/// [`EXIT_RESUME_CORRUPT`] / [`EXIT_RESUME_MISMATCH`]).  `candidates`
 /// holds one expected fingerprint per phase of this run (two-phase runs
 /// accept snapshots from either phase; routing happens in
-/// [`train_run_with`]).
-fn load_resume(path: &Path, candidates: &[Fingerprint])
+/// [`train_run_with`]); `reshape` swaps in the relaxed topology gate.
+fn load_resume(path: &Path, candidates: &[Fingerprint], reshape: bool)
     -> anyhow::Result<Checkpoint> {
     let files: Vec<std::path::PathBuf> = if path.is_dir() {
         let mut list: Vec<_> = checkpoint::list_checkpoints(path)?
             .into_iter()
             .map(|(_, p)| p)
             .collect();
-        anyhow::ensure!(
-            !list.is_empty(),
-            "--resume {}: no ckpt-*.bckp files in directory",
-            path.display()
-        );
+        if list.is_empty() {
+            return Err(CliExit::err(EXIT_RESUME_NONE, format!(
+                "--resume {}: no ckpt-*.bckp files in directory",
+                path.display()
+            )));
+        }
+        // Never select a file the ledger KNOWS failed its post-write
+        // verify.  Files unknown to the ledger (pre-ledger dirs,
+        // hand-copied checkpoints) are still tried, newest first.
+        let ledger = Ledger::load(path);
+        let before = list.len();
+        list.retain(|p| match p.file_name().and_then(|n| n.to_str()) {
+            Some(n) => ledger.status(n) != Some(false),
+            None => true,
+        });
+        if before > list.len() {
+            eprintln!(
+                "warning: ignoring {} checkpoint(s) marked unverified \
+                 in {}",
+                before - list.len(), Ledger::path(path).display()
+            );
+        }
+        if list.is_empty() {
+            return Err(CliExit::err(EXIT_RESUME_NONE, format!(
+                "--resume {}: every checkpoint in the directory failed \
+                 its post-write verify (see ledger.json) — nothing \
+                 restorable",
+                path.display()
+            )));
+        }
         list.reverse(); // newest first
         list
     } else {
+        if !path.exists() {
+            return Err(CliExit::err(EXIT_RESUME_NONE, format!(
+                "cannot resume from {}: no such file", path.display()
+            )));
+        }
         vec![path.to_path_buf()]
+    };
+    let gate = |ck: &Checkpoint, fp: &Fingerprint| if reshape {
+        ck.ensure_reshape_fingerprint(fp)
+    } else {
+        ck.ensure_fingerprint(fp)
     };
     let mut picked = None;
     for (i, file) in files.iter().enumerate() {
@@ -337,18 +422,18 @@ fn load_resume(path: &Path, candidates: &[Fingerprint])
                 eprintln!("warning: cannot read {}: {e} — trying the \
                            previous checkpoint", file.display());
             }
-            Err(e) => anyhow::bail!("cannot resume from {}: {e}",
-                                    file.display()),
+            Err(e) => return Err(CliExit::err(EXIT_RESUME_CORRUPT,
+                format!("cannot resume from {}: {e}", file.display()))),
         }
     }
-    let (ck, file) = picked.expect("loop either picked or bailed");
-    if !candidates
-        .iter()
-        .any(|fp| ck.ensure_fingerprint(fp).is_ok()) {
+    let (ck, file) = picked.expect("loop either picked or errored");
+    if !candidates.iter().any(|fp| gate(&ck, fp).is_ok()) {
         // report the mismatch against this run's primary (phase-1) shape
-        ck.ensure_fingerprint(&candidates[0]).map_err(|e| {
-            anyhow::anyhow!("--resume {}: {e}", file.display())
-        })?;
+        let e = gate(&ck, &candidates[0])
+            .expect_err("no candidate matched");
+        return Err(CliExit::err(EXIT_RESUME_MISMATCH, format!(
+            "--resume {}: {e}", file.display()
+        )));
     }
     if !ck.exact_data_position {
         println!(
@@ -437,6 +522,19 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     cfg.train.keep_last = args.get_parse("keep-last", cfg.train.keep_last)?;
     let ckpt_dir = args.get_opt("ckpt-dir").map(PathBuf::from);
     let resume = args.get_opt("resume").map(PathBuf::from);
+    // Elastic-resume knobs: reshaped restore onto a different topology,
+    // the supervised restart loop, and the deterministic fault hook.
+    let resume_reshape = args.get_opt("resume-reshape").map(PathBuf::from);
+    let max_restarts: usize = args.get_parse("max-restarts", 0usize)?;
+    let restart_topo = match args.get_opt("restart-topo") {
+        Some(t) => Some(Topology::parse(&t)
+            .map_err(|e| anyhow::anyhow!("--restart-topo: {e}"))?),
+        None => None,
+    };
+    let inject_fail = match args.get_opt("inject-fail") {
+        Some(s) => Some(InjectFail::parse(&s)?),
+        None => None,
+    };
     args.finish_strict()?;
     cfg.validate()?;
     if cfg.train.save_every > 0 && ckpt_dir.is_none() {
@@ -451,6 +549,25 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             "--ckpt-dir does nothing without --save-every N (or \
              train.save_every in the config TOML); to resume from an \
              existing rotation dir use --resume DIR"
+        );
+    }
+    if resume.is_some() && resume_reshape.is_some() {
+        anyhow::bail!(
+            "--resume and --resume-reshape are mutually exclusive (one \
+             exact restore target per run)"
+        );
+    }
+    if max_restarts > 0 && (cfg.train.save_every == 0 || ckpt_dir.is_none())
+    {
+        anyhow::bail!(
+            "--max-restarts needs --save-every N --ckpt-dir DIR: a \
+             restart resumes from the newest ledger-verified rotation \
+             checkpoint"
+        );
+    }
+    if restart_topo.is_some() && max_restarts == 0 {
+        anyhow::bail!(
+            "--restart-topo does nothing without --max-restarts N"
         );
     }
 
@@ -469,8 +586,10 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     for fp in &mut expected_fps {
         fp.data_manifest = manifest;
     }
-    let resume_ckpt = match &resume {
-        Some(p) => Some(load_resume(p, &expected_fps)?),
+    let reshape = resume_reshape.is_some();
+    let resume_path = resume.or(resume_reshape);
+    let resume_ckpt = match &resume_path {
+        Some(p) => Some(load_resume(p, &expected_fps, reshape)?),
         None => None,
     };
 
@@ -494,14 +613,74 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         vocab.len(), cfg.train.preset, model.config.vocab_size,
         model.config.vocab_size
     );
-    let outcome = train_run_with(&engine, &cfg, &data_dir, cfg.train.steps,
-                                 phase2_steps, batch, seq,
-                                 CkptPlan {
-                                     final_path: ckpt.as_deref(),
-                                     auto_resume: resume.is_none(),
-                                     resume: resume_ckpt,
-                                     rotate_dir: ckpt_dir.as_deref(),
-                                 })?;
+    // ---- supervised restart loop (`--max-restarts`, the elastic
+    //      workflow): on a mid-run failure with restarts left, reload
+    //      the newest ledger-verified rotation checkpoint — losing at
+    //      most save_every steps — optionally switch to the surviving
+    //      topology (`--restart-topo`, via the reshaped restore), and
+    //      relaunch.  max_restarts = 0 (the default) is the plain
+    //      single-attempt run. ----
+    let mut cur_cfg = cfg.clone();
+    let mut pending_resume = resume_ckpt;
+    let mut pending_reshape = reshape;
+    let mut inject = inject_fail;
+    let mut restarts_left = max_restarts;
+    let auto_resume = resume_path.is_none();
+    let mut attempt = 0usize;
+    let outcome = loop {
+        attempt += 1;
+        let result = train_run_with(
+            &engine, &cur_cfg, &data_dir, cur_cfg.train.steps,
+            phase2_steps, batch, seq,
+            CkptPlan {
+                final_path: ckpt.as_deref(),
+                auto_resume: auto_resume && attempt == 1,
+                resume: pending_resume.take(),
+                rotate_dir: ckpt_dir.as_deref(),
+                resume_reshape: pending_reshape,
+                inject_fail: inject,
+            });
+        match result {
+            Ok(o) => break o,
+            Err(e) if restarts_left > 0 => {
+                restarts_left -= 1;
+                eprintln!("warning: training attempt {attempt} failed: \
+                           {e:#}");
+                // The injected fault is one-shot: the relaunch models
+                // the world AFTER the node loss, where the fault (and
+                // possibly the node) is gone.
+                inject = None;
+                if let Some(t) = restart_topo {
+                    if cur_cfg.cluster.topo != t {
+                        cur_cfg.cluster.topo = t;
+                        pending_reshape = true;
+                    }
+                }
+                // Re-derive the expected fingerprints for the
+                // (possibly reshaped) surviving topology, then pick
+                // the newest ledger-verified rotation checkpoint.
+                let dir = ckpt_dir.as_deref()
+                    .expect("--max-restarts requires --ckpt-dir");
+                let mut fps =
+                    vec![Fingerprint::of(&cur_cfg, batch, seq)];
+                if phase2_steps > 0 {
+                    let (c2, b2, s2) = phase2_shape(&cur_cfg, batch);
+                    fps.push(Fingerprint::of(&c2, b2, s2));
+                }
+                for fp in &mut fps {
+                    fp.data_manifest = manifest;
+                }
+                let ck = load_resume(dir, &fps, pending_reshape)?;
+                println!(
+                    "restart {attempt}: relaunching on {} from \
+                     data_step {} ({restarts_left} restart(s) left)",
+                    cur_cfg.cluster.topo, ck.data_step
+                );
+                pending_resume = Some(ck);
+            }
+            Err(e) => return Err(e),
+        }
+    };
 
     // Exchange spans (TrainReport.exchange) as a chrome trace: the mean
     // per-step bucket exchange, split into PCIe and network phases.

@@ -56,7 +56,29 @@ COMMANDS:
                                    subtracted and the LR schedule keeps
                                    the original total; phase-2 snapshots
                                    of a --phase2 run resume into phase 2
+                   [--resume-reshape PATH]  elastic resume: like --resume
+                                   but relaxes the topology/exchange part
+                                   of the fingerprint gate, so a v2
+                                   checkpoint from one (machines, gpus)
+                                   shape restores onto another.  Params,
+                                   optimizer moments and the loss scaler
+                                   restore bitwise; per-rank data streams
+                                   and reduction association re-derive
+                                   for the new world (docs/elastic.md)
+                   [--max-restarts N]  supervise the run: on failure,
+                                   relaunch up to N times from the newest
+                                   ledger-verified checkpoint in
+                                   --ckpt-dir (requires --save-every)
+                   [--restart-topo 1M1G]  surviving-world topology for
+                                   supervised relaunches (reshaped
+                                   restore); default = keep the same
+                   [--inject-fail S[:R]]  deterministic fault injection
+                                   for tests: fail at data_step S, on
+                                   rank R's last microbatch if given
                    [--trace exchange.json]  exchange + data-stall spans
+                 resume exit codes: 3 = checkpoint/config mismatch,
+                 4 = corrupt and nothing older survived, 5 = nothing
+                 restorable (missing file / empty dir / all unverified)
   shard-data     build bshard files from a synthetic or real corpus (§4.1)
                    --out data/quickstart --docs 64 --shards 8 [--text file]
   simulate       one-iteration timeline, overlap on/off (Figs. 2 & 5);
@@ -124,7 +146,9 @@ pub fn cli_main() -> i32 {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e:#}");
-            1
+            // The resume-failure taxonomy (mismatch/corrupt/none) rides in
+            // a CliExit anywhere in the chain; everything else exits 1.
+            e.downcast_ref::<crate::cliopt::CliExit>().map_or(1, |x| x.code)
         }
     }
 }

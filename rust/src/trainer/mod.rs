@@ -140,6 +140,42 @@ impl TrainReport {
     }
 }
 
+/// Deterministic fault injection (CLI `--inject-fail step[:rank]`): the
+/// elastic-restart test hook.  With a rank, the failure fires inside
+/// that rank's compute worker at the FINAL micro-step of the given
+/// `data_step` — after the healthy ranks have begun feeding their comm
+/// workers, the worst spot for the exchange protocol (it exercises the
+/// pool's failure surfacing exactly like a node dying mid-step).
+/// Without a rank, the trainer itself fails just before dispatching
+/// that step.  Either way no optimizer state for the step is applied,
+/// so a supervised restart replays it from the last checkpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectFail {
+    /// The `data_step` at which to fail.
+    pub step: usize,
+    /// The rank whose compute worker fails; `None` fails the trainer
+    /// loop itself.
+    pub rank: Option<usize>,
+}
+
+impl InjectFail {
+    /// Parse the CLI form `step[:rank]` (e.g. `120` or `120:3`).
+    pub fn parse(s: &str) -> Result<InjectFail> {
+        let (step, rank) = match s.split_once(':') {
+            Some((a, b)) => (a, Some(b)),
+            None => (s, None),
+        };
+        let bad = || anyhow::anyhow!(
+            "--inject-fail: '{s}' is not of the form step[:rank]");
+        let step = step.trim().parse::<usize>().map_err(|_| bad())?;
+        let rank = match rank {
+            Some(r) => Some(r.trim().parse::<usize>().map_err(|_| bad())?),
+            None => None,
+        };
+        Ok(InjectFail { step, rank })
+    }
+}
+
 /// The trainer: compiled steps + distributed state.
 pub struct Trainer {
     // NOTE: `pool` is declared first so its Drop (which joins the worker
@@ -171,6 +207,9 @@ pub struct Trainer {
     /// before any restore, bare programmatic trainers may not).
     data_manifest: u64,
     mask_cfg: MaskingConfig,
+    /// Deterministic fault injection for elastic-restart testing
+    /// (`None` in production runs).
+    inject_fail: Option<InjectFail>,
 }
 
 impl Trainer {
@@ -226,7 +265,14 @@ impl Trainer {
             data_step: 0,
             data_manifest: 0,
             mask_cfg,
+            inject_fail: None,
         })
+    }
+
+    /// Arm (or clear) deterministic fault injection — see
+    /// [`InjectFail`].  Test/chaos hook; never set in production runs.
+    pub fn set_inject_fail(&mut self, inject: Option<InjectFail>) {
+        self.inject_fail = inject;
     }
 
     /// This run's config identity — saved into every checkpoint and
@@ -265,6 +311,58 @@ impl Trainer {
             ckpt.params.len(), self.params.len()
         );
         ckpt.ensure_fingerprint(&self.fingerprint())?;
+        self.adopt(ckpt);
+        Ok(())
+    }
+
+    /// Elastic (reshaped) restore: resume a checkpoint produced on a
+    /// DIFFERENT (machines, gpus) topology — the lost-node path.
+    ///
+    /// The gate relaxes exactly the world-shape fields
+    /// ([`Checkpoint::ensure_reshape_fingerprint`]); any stream-content
+    /// mismatch (seed, batch geometry, accumulation, optimizer, LR
+    /// schedule, masking, corpus) still refuses before touching trainer
+    /// state.  The contract:
+    ///
+    /// * **bitwise-preserved at restore** — params, m, v, the scaler's
+    ///   complete state, `step`, and `data_step`.  This trainer's own
+    ///   bucket layout and per-rank cursor positions were already
+    ///   derived for the NEW world at [`Trainer::new`]/`run` time, and
+    ///   the stream restarts at the checkpointed `data_step`;
+    /// * **legitimately diverges afterward** — the reduction
+    ///   association (different bucket/ring schedule) and the per-rank
+    ///   shard assignment + masking streams (rank r on the new world is
+    ///   not rank r on the old one).  Two runs on the SAME new world
+    ///   from the same checkpoint remain bitwise-identical — asserted
+    ///   in `tests/checkpoint_resume.rs`.
+    pub fn restore_reshape(&mut self, ckpt: Checkpoint) -> Result<()> {
+        anyhow::ensure!(
+            ckpt.params.len() == self.params.len()
+                && ckpt.m.len() == self.m.len()
+                && ckpt.v.len() == self.v.len(),
+            "checkpoint holds {} params, model has {}",
+            ckpt.params.len(), self.params.len()
+        );
+        ckpt.ensure_reshape_fingerprint(&self.fingerprint())?;
+        if let Some(saved) = &ckpt.fingerprint {
+            if saved.world() != self.world {
+                log::info!(
+                    "reshaped restore: checkpoint world {} ({}M{}G) -> \
+                     run world {} — params/m/v/scaler restore bitwise; \
+                     per-rank data streams and reduction association \
+                     re-derive for the new world",
+                    saved.world(), saved.machines, saved.gpus_per_machine,
+                    self.world
+                );
+            }
+        }
+        self.adopt(ckpt);
+        Ok(())
+    }
+
+    /// The state adoption shared by [`Self::restore`] and
+    /// [`Self::restore_reshape`], after their gates have passed.
+    fn adopt(&mut self, ckpt: Checkpoint) {
         self.data_step = if ckpt.exact_data_position {
             ckpt.data_step as usize
         } else {
@@ -280,7 +378,6 @@ impl Trainer {
         self.params = ckpt.params;
         self.m = ckpt.m;
         self.v = ckpt.v;
-        Ok(())
     }
 
     /// Phase-change restore (paper §3.3): carry params/moments/step/
@@ -430,10 +527,23 @@ impl Trainer {
                 .map(|_| Mutex::new(StepScratch::new()))
                 .collect(),
             k,
+            inject: self.inject_fail,
         };
 
         for local_step in 0..steps {
             sw.reset();
+            // Deterministic rank-less fault injection: die before the
+            // dispatch, like a coordinator crash between steps.  (The
+            // rank form lives in RankStepCtx::micro and dies inside
+            // the pool, like a node loss mid-exchange.)
+            if let Some(f) = self.inject_fail {
+                if f.rank.is_none() && self.data_step == f.step {
+                    anyhow::bail!(
+                        "injected failure at data_step {} (--inject-fail)",
+                        f.step
+                    );
+                }
+            }
             // ---- 1+2. parallel rank micro-steps + overlapped bucketed
             //           ring allreduce on the persistent pool ----
             let scale = self.scaler.scale() as f32;
@@ -561,6 +671,8 @@ struct RankStepCtx<'a> {
     feed: BatchFeed<'a>,
     scratches: Vec<Mutex<StepScratch>>,
     k: usize,
+    /// Rank-targeted deterministic fault injection ([`InjectFail`]).
+    inject: Option<InjectFail>,
 }
 
 impl RankStepCtx<'_> {
@@ -585,6 +697,18 @@ impl RankCompute for RankStepCtx<'_> {
         // decoded into in place forever (no per-micro Vec).
         if grads_out.len() != self.step.n_params {
             grads_out.resize(self.step.n_params, 0.0);
+        }
+        // Rank-targeted fault injection at the FINAL micro — after the
+        // healthy ranks have started feeding their comm workers, the
+        // worst spot for the exchange (a lost node mid-step).
+        if let Some(f) = self.inject {
+            if f.rank == Some(rank) && step_index == f.step
+                && micro + 1 == self.k {
+                anyhow::bail!(
+                    "injected failure on rank {rank} at data_step \
+                     {step_index} (--inject-fail)"
+                );
+            }
         }
         let (out, stall_s) = match &self.feed {
             BatchFeed::Prefetch(p) => {

@@ -16,8 +16,8 @@
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-use bertdist::checkpoint::{self, AsyncCheckpointWriter, Checkpoint,
-                           CkptError, Fingerprint};
+use bertdist::checkpoint::{self, verify_checkpoint, AsyncCheckpointWriter,
+                           Checkpoint, CkptError, Fingerprint};
 use bertdist::config::RunConfig;
 use bertdist::coordinator::prepare_datasets;
 use bertdist::data::corpus::SyntheticCorpus;
@@ -392,6 +392,129 @@ fn crash_leftover_tmp_never_shadows_a_real_checkpoint() {
     drop(w);
     assert!(!dir.join("ckpt-0000000042.tmp").exists());
     assert!(dir.join(&checkpoint::checkpoint_file_name(6)).exists());
+}
+
+// ---- reshaped (elastic) restore ----
+
+/// The elastic-restore contract, per world pair: train on `from`, save
+/// through the real file format, and restore onto `to`.
+///
+/// Asserted, in order: the strict gate refuses the topology change and
+/// leaves the target untouched; the reshape gate accepts it and the
+/// restore itself is BITWISE (params/m/v/scaler/step/data_step); and
+/// the reshaped stream is itself exactly resumable — a strict
+/// save/restore round trip one step after the reshape lands bitwise on
+/// the same final state as running straight through on the new world.
+fn check_reshape_restore(from: &str, to: &str) {
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let ctx = format!("reshape {from}->{to}");
+    let data = tmp_dir(&format!("reshape_{from}_{to}"));
+    // 8 shards: enough for the largest world in the matrix (2M4G)
+    make_data(data.path(), 512, 8);
+    let engine = Engine::cpu(&art).unwrap();
+    let cfg_a = base_cfg(from);
+    let cfg_b = base_cfg(to);
+    let datasets_a =
+        prepare_datasets(data.path(), cfg_a.cluster.topo.world_size())
+            .unwrap();
+    let datasets_b =
+        prepare_datasets(data.path(), cfg_b.cluster.topo.world_size())
+            .unwrap();
+
+    // 2 of 4 steps on the old world, through the real file format
+    let (ta, _) =
+        train_to_step(&engine, &cfg_a, &datasets_a, 32, 2, 2, 4).unwrap();
+    let ckdir = tmp_ckpt_dir(&format!("reshape_{from}_{to}"));
+    let path = ckdir.join("boundary.bckp");
+    ta.save(&path).unwrap();
+    drop(ta);
+    let ck = Checkpoint::load(&path).unwrap();
+
+    // strict gate refuses the topology change, target untouched
+    let mut tb = Trainer::new(&engine, cfg_b.clone(), 32, 2).unwrap();
+    let before = tb.checkpoint();
+    let err = tb.restore(ck.clone()).unwrap_err();
+    assert!(err.to_string().contains("topology"), "{ctx}: {err}");
+    assert_state_bitwise(&tb.checkpoint(), &before,
+                         &format!("{ctx}: strict refusal"));
+
+    // reshape gate accepts; the restore itself is bitwise
+    tb.restore_reshape(ck.clone()).unwrap();
+    assert_state_bitwise(&tb.checkpoint(), &ck,
+                         &format!("{ctx}: restore-time state"));
+    assert_eq!(tb.data_step(), 2, "{ctx}: stream restarts at data_step");
+
+    // finish the run on the new world
+    tb.run(&datasets_b, 2, 4).unwrap();
+    let straight_through = tb.checkpoint();
+    drop(tb);
+
+    // the reshaped stream is exactly resumable: one step after the
+    // reshape, a STRICT save/restore round trip (the snapshot now
+    // carries the new topology) must land bitwise on the same end state
+    let mut tc = Trainer::new(&engine, cfg_b.clone(), 32, 2).unwrap();
+    tc.restore_reshape(ck).unwrap();
+    tc.run(&datasets_b, 1, 4).unwrap();
+    let mid = ckdir.join("mid.bckp");
+    tc.save(&mid).unwrap();
+    drop(tc);
+    let mut td = Trainer::new(&engine, cfg_b, 32, 2).unwrap();
+    td.restore(Checkpoint::load(&mid).unwrap()).unwrap();
+    td.run(&datasets_b, 1, 4).unwrap();
+    assert_state_bitwise(&td.checkpoint(), &straight_through,
+                         &format!("{ctx}: reshaped stream resumability"));
+}
+
+#[test]
+fn reshaped_restore_world_4_to_2() {
+    check_reshape_restore("1M4G", "1M2G");
+}
+
+#[test]
+fn reshaped_restore_world_2_to_4() {
+    check_reshape_restore("1M2G", "1M4G");
+}
+
+#[test]
+fn reshaped_restore_2m4g_to_1m4g() {
+    // node loss: same per-node shape, half the machines
+    check_reshape_restore("2M4G", "1M4G");
+}
+
+#[test]
+fn verify_rejects_truncation_at_every_section_boundary() {
+    // the ledger's post-write verify must catch a checkpoint torn at
+    // ANY v2 field boundary (the mid-verify crash case), and report the
+    // full byte count for an intact file
+    let dir = tmp_ckpt_dir("verify_trunc");
+    let n = 6usize;
+    let mut c = Checkpoint::new(n);
+    c.step = 11;
+    c.data_step = 13;
+    c.fingerprint = Some(Fingerprint::of(&RunConfig::default(), 8, 128));
+    let good = dir.join("good.bckp");
+    c.save(&good).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+    assert_eq!(verify_checkpoint(&good).unwrap(), bytes.len() as u64);
+
+    for (name, range) in checkpoint::v2_sections(n) {
+        let bad = dir.join(format!("vtrunc_{name}.bckp"));
+        std::fs::write(&bad, &bytes[..range.start]).unwrap();
+        let err = verify_checkpoint(&bad).map(|_| ()).unwrap_err();
+        assert!(
+            matches!(err, CkptError::BadMagic | CkptError::Corrupt
+                          | CkptError::SizeMismatch),
+            "verify of a file truncated at {name} ({}) must fail \
+             cleanly, got {err:?}", range.start
+        );
+    }
+    // a torn tail mid-section (not on a boundary) fails too
+    let bad = dir.join("vtrunc_mid.bckp");
+    std::fs::write(&bad, &bytes[..bytes.len() - 7]).unwrap();
+    assert!(verify_checkpoint(&bad).is_err());
 }
 
 // ---- finetune-loop resume ----

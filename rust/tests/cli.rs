@@ -153,12 +153,13 @@ fn shard_then_train_roundtrip() {
 #[test]
 fn train_resume_missing_file_is_a_clean_error() {
     // --resume is validated before data/engine setup: a missing file
-    // must exit nonzero with a clear message, no artifacts required.
+    // must exit with the "nothing restorable" code and a clear message,
+    // no artifacts required.
     let out = bin()
         .args(["train", "--resume", "/nonexistent/ckpt.bckp", "--steps",
                "1"])
         .output().unwrap();
-    assert_eq!(out.status.code(), Some(1));
+    assert_eq!(out.status.code(), Some(5));
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("cannot resume from"), "{err}");
     assert!(err.contains("/nonexistent/ckpt.bckp"), "{err}");
@@ -170,7 +171,8 @@ fn train_resume_empty_dir_is_a_clean_error() {
     let out = bin()
         .args(["train", "--resume", dir.path().to_str().unwrap()])
         .output().unwrap();
-    assert_eq!(out.status.code(), Some(1));
+    // empty dir = "nothing restorable", not a generic failure
+    assert_eq!(out.status.code(), Some(5));
     assert!(String::from_utf8_lossy(&out.stderr)
                 .contains("no ckpt-*.bckp files"));
 }
@@ -194,7 +196,8 @@ fn train_resume_fingerprint_mismatch_is_a_clean_error() {
         .args(["train", "--resume", path.to_str().unwrap(), "--topo",
                "1M1G"])
         .output().unwrap();
-    assert_eq!(out.status.code(), Some(1));
+    // mismatch taxonomy: exit 3 = fix the config, not the disk
+    assert_eq!(out.status.code(), Some(3));
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("fingerprint"), "{err}");
     assert!(err.contains("topology"), "{err}");
@@ -234,6 +237,169 @@ fn train_resume_falls_back_past_a_corrupt_newest_checkpoint() {
     // then stops at the (deliberately empty) data dir
     assert_eq!(out.status.code(), Some(1));
     assert!(stderr.contains("no data at"), "{stderr}");
+}
+
+#[test]
+fn train_resume_single_corrupt_file_exits_with_corrupt_code() {
+    // a single named checkpoint with flipped bytes has no older sibling
+    // to fall back to: exit 4 = fix the disk
+    use bertdist::checkpoint::{Checkpoint, Fingerprint};
+    use bertdist::config::RunConfig;
+    let dir = bertdist::testkit::tmp_ckpt_dir("cli_corrupt_single");
+    let mut ck = Checkpoint::new(8);
+    ck.fingerprint = Some(Fingerprint::of(&RunConfig::default(), 8, 128));
+    let path = dir.join("only.bckp");
+    ck.save(&path).unwrap();
+    let mut bad = std::fs::read(&path).unwrap();
+    let mid = bad.len() / 2;
+    bad[mid] ^= 0x40;
+    std::fs::write(&path, &bad).unwrap();
+    let out = bin()
+        .args(["train", "--resume", path.to_str().unwrap(), "--steps",
+               "1"])
+        .output().unwrap();
+    assert_eq!(out.status.code(), Some(4));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("cannot resume from"), "{err}");
+}
+
+#[test]
+fn train_resume_never_selects_a_ledger_unverified_checkpoint() {
+    // the newest file has GOOD bytes now, but the ledger recorded that
+    // it failed its post-write verify — the torn write may have been
+    // "repaired" by a later partial flush.  --resume must not trust it:
+    // warn and select the newest ledger-clean candidate instead.
+    use bertdist::checkpoint::{self, Checkpoint, Fingerprint, Ledger,
+                               LedgerEntry};
+    use bertdist::config::RunConfig;
+    let dir = bertdist::testkit::tmp_ckpt_dir("cli_ledger_skip");
+    let empty = bertdist::testkit::tmp_dir("cli_ledger_skip_nodata");
+    let fp = Fingerprint::of(&RunConfig::default(), 8, 128);
+    for (step, data_step) in [(3u64, 3u64), (9, 9)] {
+        let mut ck = Checkpoint::new(8);
+        ck.step = step;
+        ck.data_step = data_step;
+        ck.fingerprint = Some(fp);
+        ck.save(&dir.join(checkpoint::checkpoint_file_name(data_step)))
+            .unwrap();
+    }
+    let mut ledger = Ledger::default();
+    ledger.record(LedgerEntry {
+        file: checkpoint::checkpoint_file_name(9),
+        step: 9,
+        data_step: 9,
+        bytes: 0,
+        verified: false,
+    });
+    ledger.save(&dir).unwrap();
+    let out = bin()
+        .args(["train", "--resume", dir.path().to_str().unwrap(),
+               "--data-dir", empty.path().to_str().unwrap()])
+        .output().unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("marked unverified"), "{stderr}");
+    assert!(stdout.contains("resume checkpoint"), "{stdout}");
+    assert!(stdout.contains("step 3"), "{stdout}");
+    // resume selection succeeded; the run then stops at the
+    // (deliberately empty) data dir
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr.contains("no data at"), "{stderr}");
+}
+
+#[test]
+fn train_inject_fail_restarts_reshaped_and_matches_clean_run() {
+    // the elasticity contract end to end: a deterministic mid-run
+    // failure on rank 1 is caught by --max-restarts, the run relaunches
+    // on the surviving --restart-topo world from the newest
+    // ledger-verified rotation checkpoint (losing at most --save-every
+    // steps of progress), and the final parameters are bitwise-equal to
+    // a clean run restarted at the same boundary on that same world.
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    use bertdist::checkpoint::{self, Checkpoint};
+    let data = bertdist::testkit::tmp_dir("cli_elastic_data");
+    let rot_a = bertdist::testkit::tmp_ckpt_dir("cli_elastic_rot_a");
+    let rot_b = bertdist::testkit::tmp_ckpt_dir("cli_elastic_rot_b");
+    let outdir = bertdist::testkit::tmp_dir("cli_elastic_out");
+    let out = bin()
+        .args(["shard-data", "--out", data.path().to_str().unwrap(),
+               "--docs", "12", "--shards", "2", "--vocab-size", "512"])
+        .output().unwrap();
+    assert!(out.status.success(),
+            "{}", String::from_utf8_lossy(&out.stderr));
+
+    let train_args = |topo: &str| {
+        vec!["train".to_string(), "--preset".into(), "bert-micro".into(),
+             "--topo".into(), topo.into(), "--steps".into(), "6".into(),
+             "--accum".into(), "1".into(), "--batch".into(), "2".into(),
+             "--seq".into(), "32".into(), "--lr".into(), "1e-3".into(),
+             "--log-every".into(), "0".into(),
+             "--data-dir".into(), data.path().to_str().unwrap().into()]
+    };
+
+    // run A: a 6-step 1M2G run that dies at data_step 5 on rank 1 and
+    // restarts once on the surviving 1M1G world
+    let final_a = outdir.path().join("final_a.bckp");
+    let mut a = train_args("1M2G");
+    a.extend(["--save-every".into(), "2".into(),
+              "--keep-last".into(), "3".into(),
+              "--ckpt-dir".into(), rot_a.path().to_str().unwrap().into(),
+              "--inject-fail".into(), "5:1".into(),
+              "--max-restarts".into(), "1".into(),
+              "--restart-topo".into(), "1M1G".into(),
+              "--ckpt".into(), final_a.to_str().unwrap().into()]);
+    let out = bin().current_dir(env!("CARGO_MANIFEST_DIR")).args(&a)
+        .output().unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(),
+            "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stderr.contains("training attempt 1 failed"), "{stderr}");
+    assert!(stderr.contains("injected failure"), "{stderr}");
+    assert!(stderr.contains("rank 1"), "{stderr}");
+    // progress lost <= --save-every: the relaunch resumes at data_step
+    // 4, the last verified rotation boundary before the fault at 5
+    assert!(stdout.contains("restart 1: relaunching on 1M1G from \
+                             data_step 4"),
+            "{stdout}");
+    assert!(stdout.contains("resuming reshaped"), "{stdout}");
+    assert!(stdout.contains("phase 1 done"), "{stdout}");
+
+    // baseline B: a CLEAN 6-step 1M2G run with the same rotation plan
+    // (its ckpt-4 is bitwise the same boundary run A restarted from),
+    // then a manual reshaped restart of that boundary on 1M1G
+    let mut b1 = train_args("1M2G");
+    b1.extend(["--save-every".into(), "2".into(),
+               "--keep-last".into(), "3".into(),
+               "--ckpt-dir".into(),
+               rot_b.path().to_str().unwrap().into()]);
+    let out = bin().current_dir(env!("CARGO_MANIFEST_DIR")).args(&b1)
+        .output().unwrap();
+    assert!(out.status.success(),
+            "{}", String::from_utf8_lossy(&out.stderr));
+    let boundary = rot_b.path().join(checkpoint::checkpoint_file_name(4));
+    let final_b = outdir.path().join("final_b.bckp");
+    let mut b2 = train_args("1M1G");
+    b2.extend(["--resume-reshape".into(),
+               boundary.to_str().unwrap().into(),
+               "--ckpt".into(), final_b.to_str().unwrap().into()]);
+    let out = bin().current_dir(env!("CARGO_MANIFEST_DIR")).args(&b2)
+        .output().unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(),
+            "stdout:\n{stdout}\nstderr:\n{}",
+            String::from_utf8_lossy(&out.stderr));
+    assert!(stdout.contains("resuming reshaped"), "{stdout}");
+
+    let ca = Checkpoint::load(&final_a).unwrap();
+    let cb = Checkpoint::load(&final_b).unwrap();
+    assert_eq!(ca.step, 6);
+    assert_eq!(ca, cb,
+               "elastic restart and a clean reshaped resume from the \
+                same boundary must converge bitwise");
 }
 
 #[test]

@@ -175,6 +175,123 @@ fn checkpoint_corruption_blocks_resume() {
     assert!(bertdist::checkpoint::Checkpoint::load(&path).is_err());
 }
 
+// ---- deterministic fault injection (ISSUE 6 elasticity hook) ----
+
+mod inject_fail {
+    use bertdist::checkpoint::Checkpoint;
+    use bertdist::config::RunConfig;
+    use bertdist::coordinator::prepare_datasets;
+    use bertdist::data::corpus::SyntheticCorpus;
+    use bertdist::data::{build_shards, Vocab};
+    use bertdist::runtime::Engine;
+    use bertdist::testkit::{tmp_dir, train_to_step};
+    use bertdist::topology::Topology;
+    use bertdist::trainer::{InjectFail, Trainer};
+
+    #[test]
+    fn parse_accepts_step_and_optional_rank() {
+        assert_eq!(InjectFail::parse("7").unwrap(),
+                   InjectFail { step: 7, rank: None });
+        assert_eq!(InjectFail::parse("7:2").unwrap(),
+                   InjectFail { step: 7, rank: Some(2) });
+        assert_eq!(InjectFail::parse(" 3 : 1 ").unwrap(),
+                   InjectFail { step: 3, rank: Some(1) });
+        for bad in ["", "x", "7:", ":1", "7:x", "1:2:3", "-1"] {
+            let err = InjectFail::parse(bad).unwrap_err();
+            assert!(err.to_string().contains("step[:rank]"),
+                    "{bad:?}: {err}");
+        }
+    }
+
+    fn bitwise(got: &Checkpoint, want: &Checkpoint, ctx: &str) {
+        assert_eq!(got.step, want.step, "{ctx}: step");
+        assert_eq!(got.data_step, want.data_step, "{ctx}: data_step");
+        assert_eq!(got.scaler, want.scaler, "{ctx}: scaler");
+        for (name, a, b) in [("params", &got.params, &want.params),
+                             ("m", &got.m, &want.m),
+                             ("v", &got.v, &want.v)] {
+            assert_eq!(a.len(), b.len(), "{ctx}: {name} length");
+            for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(),
+                           "{ctx}: {name}[{i}]: {x} vs {y}");
+            }
+        }
+    }
+
+    fn cfg_and_data(tag: &str) -> Option<(Engine, RunConfig,
+                                          Vec<bertdist::data::ShardedDataset>,
+                                          bertdist::testkit::TempDir)> {
+        let art = super::artifacts()?;
+        let dir = tmp_dir(tag);
+        let docs = SyntheticCorpus::new(9, 2_000).documents(24, 8, 10);
+        let vocab = Vocab::from_documents(&docs, 512);
+        vocab.save(&dir.join("vocab.txt")).unwrap();
+        build_shards(&docs, &vocab, 4, dir.path(), "train", 9).unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.train.preset = "bert-micro".into();
+        cfg.train.variant = "fused_f32".into();
+        cfg.train.lr = 1e-3;
+        cfg.train.warmup_steps = 2;
+        cfg.train.accum_steps = 2;
+        cfg.train.log_every = 0;
+        cfg.cluster.topo = Topology::parse("1M2G").unwrap();
+        let engine = Engine::cpu(&art).unwrap();
+        let datasets = prepare_datasets(dir.path(), 2).unwrap();
+        Some((engine, cfg, datasets, dir))
+    }
+
+    /// A rank-targeted injection fires inside the pool at the final
+    /// micro-step, names the rank and data_step in the error, applies
+    /// nothing for the failed step — and the SAME trainer finishes the
+    /// run bitwise-identically once the fault is cleared (replaying the
+    /// failed step from its recorded data position).
+    #[test]
+    fn rank_targeted_injection_is_recoverable_and_deterministic() {
+        let Some((engine, cfg, datasets, _dir)) =
+            cfg_and_data("fi_inject_rank") else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let (tw, _) =
+            train_to_step(&engine, &cfg, &datasets, 32, 2, 3, 3).unwrap();
+        let want = tw.checkpoint();
+        drop(tw);
+
+        let mut t = Trainer::new(&engine, cfg, 32, 2).unwrap();
+        t.set_inject_fail(Some(InjectFail { step: 1, rank: Some(1) }));
+        let err = t.run(&datasets, 3, 3).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("injected failure"), "{msg}");
+        assert!(msg.contains("rank 1"), "{msg}");
+        assert!(msg.contains("data_step 1"), "{msg}");
+        // step 0 applied; the failed step 1 did not advance the stream
+        assert_eq!(t.data_step(), 1);
+
+        t.set_inject_fail(None);
+        t.run(&datasets, 2, 3).unwrap();
+        bitwise(&t.checkpoint(), &want, "post-fault rerun");
+    }
+
+    /// A rank-less injection fails the trainer loop before the step is
+    /// dispatched: no pool traffic, no state change at all.
+    #[test]
+    fn rankless_injection_fails_before_touching_state() {
+        let Some((engine, cfg, datasets, _dir)) =
+            cfg_and_data("fi_inject_rankless") else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let mut t = Trainer::new(&engine, cfg, 32, 2).unwrap();
+        let before = t.checkpoint();
+        t.set_inject_fail(Some(InjectFail { step: 0, rank: None }));
+        let err = t.run(&datasets, 2, 2).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("injected failure at data_step 0"), "{msg}");
+        assert_eq!(t.data_step(), 0);
+        bitwise(&t.checkpoint(), &before, "rank-less refusal");
+    }
+}
+
 // ---- pooled exchange failure paths (ISSUE 2 hardening) ----
 
 mod pool_failures {

@@ -20,6 +20,12 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 echo "==> cargo test --doc"
 cargo test --doc -q
 
+# the elasticity/fault-injection suite is the robustness gate for the
+# supervised-restart path; run it explicitly so a filtered or flaky
+# harness cannot silently skip it before the full suite
+echo "==> cargo test -q --test failure_injection"
+cargo test -q --test failure_injection
+
 echo "==> cargo test -q"
 cargo test -q
 
