@@ -5,7 +5,9 @@
 //! emitted to BENCH_input_pipeline.json), batch assembly, bucket
 //! planning, LAMB host step, f16 conversion throughput, the elastic
 //! checkpoint verify/restore path (ISSUE 6, emitted to
-//! BENCH_elastic.json), and the end-to-end PJRT step overhead breakdown.
+//! BENCH_elastic.json), the in-proc vs loopback-socket transport cost
+//! (ISSUE 7, emitted to BENCH_transport.json), and the end-to-end PJRT
+//! step overhead breakdown.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 //!
@@ -22,7 +24,8 @@ use bertdist::collectives::pool::{CollectivePool, CommMode, IntraNodeMode,
                                   MicroStats, RankCompute, WireFormat};
 use bertdist::topology::Topology;
 use bertdist::collectives::ring::ring_allreduce_inplace;
-use bertdist::collectives::CollectiveGroup;
+use bertdist::collectives::{CollectiveGroup, InProcTransport,
+                            SocketTransport};
 use bertdist::data::corpus::SyntheticCorpus;
 use bertdist::data::masking::{build_batch, Batch, MaskingConfig};
 use bertdist::data::prefetch::{BatchCursor, Prefetcher};
@@ -318,6 +321,113 @@ fn main() -> anyhow::Result<()> {
              serialized assertion (needs {})",
             topo24.world_size()
         );
+    }
+
+    // ---- in-process channels vs loopback sockets (ISSUE 7) ----
+    // The pluggable Transport prices the process boundary: the SAME
+    // flat world=2 pooled exchange once over in-memory channels and
+    // once as two single-rank "processes" (threads here, each owning
+    // its own SocketTransport) over loopback TCP.  Socket ring hops
+    // bill to the network phase, so the mean per-bucket net latency
+    // falls out of the same StepOutcome counters the trainer reports.
+    let n_net = if quick { 64 * 1024 } else { 512 * 1024 };
+    let steps_net = if quick { 10 } else { 25 };
+    let nbuckets_net = 4usize;
+    let topo_net = Topology::parse("1M2G").unwrap();
+    let ranges_net = BucketRange::even_split(n_net, nbuckets_net);
+    let mut transport_rows: Vec<(String, f64, String, f64)> = Vec::new();
+    {
+        let fill_net = FillCompute { n: n_net };
+        let mut t = InProcTransport::new(2);
+        let mut p = CollectivePool::with_transport(
+            topo_net, n_net, ranges_net.clone(), WireFormat::F32,
+            CommMode::Flat, IntraNodeMode::Auto, 1 << 16, &mut t)?;
+        p.step(&[], 1.0, 1, 0, true, &fill_net)?; // warmup
+        let (tmin, _, _) = bench_times(3, || {
+            for s in 0..steps_net {
+                p.step(&[], 1.0, 1, s + 1, true, &fill_net).unwrap();
+            }
+        });
+        let rate = format!("{:.1} steps/s", steps_net as f64 / tmin);
+        rows.push(
+            &format!("transport in-proc exchange x2 ({steps_net} steps)"),
+            tmin, rate.clone());
+        transport_rows.push(("inproc".to_string(), tmin * 1e3, rate, 0.0));
+    }
+    {
+        let peers: Vec<String> = (0..2)
+            .map(|_| {
+                // probe a free loopback port; with_hosts rebinds it
+                let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+                let a = l.local_addr().unwrap().to_string();
+                drop(l);
+                a
+            })
+            .collect();
+        let barrier = std::sync::Barrier::new(2);
+        let reps = 3;
+        let results: Vec<(f64, f64)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..2)
+                .map(|pi| {
+                    let peers = peers.clone();
+                    let ranges = ranges_net.clone();
+                    let barrier = &barrier;
+                    scope.spawn(move || {
+                        let mut t = SocketTransport::with_hosts(
+                            2, &peers[pi], peers.clone(), 30.0)
+                            .expect("socket transport");
+                        let fill = FillCompute { n: n_net };
+                        let mut p = CollectivePool::with_transport(
+                            topo_net, n_net, ranges, WireFormat::F32,
+                            CommMode::Flat, IntraNodeMode::Auto, 1 << 16,
+                            &mut t)
+                            .expect("socket pool");
+                        p.step(&[], 1.0, 1, 0, true, &fill)
+                            .expect("warmup");
+                        // barrier-fenced reps so both "processes" time
+                        // the same synchronized window; keep the best
+                        let mut best = f64::INFINITY;
+                        let mut best_net = 0.0;
+                        for _ in 0..reps {
+                            barrier.wait();
+                            let t0 = Instant::now();
+                            let mut net = 0.0;
+                            for s in 0..steps_net {
+                                let out = p
+                                    .step(&[], 1.0, 1, s + 1, true, &fill)
+                                    .expect("socket step");
+                                net += out.bucket_net_s.iter()
+                                    .sum::<f64>();
+                            }
+                            barrier.wait();
+                            let wall = t0.elapsed().as_secs_f64();
+                            if wall < best {
+                                best = wall;
+                                best_net = net;
+                            }
+                        }
+                        (best, best_net)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let smin = results.iter().map(|r| r.0).fold(0.0f64, f64::max);
+        let net_bucket_ms =
+            results[0].1 / (steps_net * nbuckets_net) as f64 * 1e3;
+        let rate = format!("{:.1} steps/s, net/bucket {net_bucket_ms:.3} ms",
+                           steps_net as f64 / smin);
+        rows.push(
+            &format!("transport loopback-socket exchange x2 \
+                      ({steps_net} steps)"),
+            smin, rate.clone());
+        let inproc_s = transport_rows[0].1 / 1e3;
+        println!("transport loopback socket vs in-proc @ world=2, {} KiB: \
+                  {:.2}x the in-proc wall, per-bucket net \
+                  {net_bucket_ms:.3} ms",
+                 n_net * 4 / 1024, smin / inproc_s.max(1e-12));
+        transport_rows.push(("socket_loopback".to_string(), smin * 1e3,
+                             rate, net_bucket_ms));
     }
 
     // ---- single-threaded reference allreduce ----
@@ -824,6 +934,31 @@ fn main() -> anyhow::Result<()> {
         root.insert("rows".to_string(), Json::Arr(entries));
         std::fs::write(&intra_path, Json::Obj(root).to_string())?;
         println!("wrote {intra_path}");
+
+        // in-proc vs loopback-socket section in its own file so the
+        // ISSUE-7 transport cost can be diffed independently
+        let transport_path = std::env::var("BENCH_TRANSPORT_JSON_OUT")
+            .unwrap_or_else(|_| "BENCH_transport.json".to_string());
+        let entries: Vec<Json> = transport_rows
+            .iter()
+            .map(|(name, ms, rate, net_ms)| {
+                let mut m = BTreeMap::new();
+                m.insert("transport".to_string(), Json::Str(name.clone()));
+                m.insert("min_ms".to_string(), Json::Num(*ms));
+                m.insert("rate".to_string(), Json::Str(rate.clone()));
+                m.insert("net_per_bucket_ms".to_string(),
+                         Json::Num(*net_ms));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(),
+                    Json::Str("transport".to_string()));
+        root.insert("world".to_string(), Json::Num(2.0));
+        root.insert("payload_elems".to_string(), Json::Num(n_net as f64));
+        root.insert("rows".to_string(), Json::Arr(entries));
+        std::fs::write(&transport_path, Json::Obj(root).to_string())?;
+        println!("wrote {transport_path}");
     }
 
     println!("perf_hotpath OK");

@@ -178,6 +178,20 @@ impl Args {
         }
     }
 
+    /// Optional comma-separated list option: `None` when absent (so the
+    /// caller can tell "not given" from "given empty"), `Some(items)`
+    /// otherwise.
+    pub fn get_list_opt(&self, key: &str) -> Option<Vec<String>> {
+        self.mark(key);
+        self.opts.get(key).map(|v| {
+            if v.is_empty() {
+                Vec::new()
+            } else {
+                v.split(',').map(|s| s.trim().to_string()).collect()
+            }
+        })
+    }
+
     /// After all accessors ran, error on any unconsumed option/flag.
     pub fn finish_strict(&self) -> Result<(), CliError> {
         let seen = self.seen.borrow();
@@ -268,6 +282,17 @@ mod tests {
         let a = Args::parse_from(["x", "--v", "a, b,c"]).unwrap();
         assert_eq!(a.get_list("v", &[]), vec!["a", "b", "c"]);
         assert_eq!(a.get_list("w", &["d"]), vec!["d"]);
+    }
+
+    #[test]
+    fn optional_list_distinguishes_absent_from_empty() {
+        let a = Args::parse_from(["x", "--hosts", "h1:1, h2:2"]).unwrap();
+        assert_eq!(a.get_list_opt("hosts"),
+                   Some(vec!["h1:1".to_string(), "h2:2".to_string()]));
+        assert_eq!(a.get_list_opt("peers"), None);
+        a.finish_strict().unwrap();
+        let b = Args::parse_from(["x", "--hosts="]).unwrap();
+        assert_eq!(b.get_list_opt("hosts"), Some(Vec::new()));
     }
 
     #[test]

@@ -7,20 +7,27 @@
 //! carries at most one gradient's worth of traffic — the property the
 //! paper relies on for linear bandwidth scaling (§2.2).
 //!
-//! Data movement here is REAL (shared-memory channels between threads);
-//! wall-clock timing for cluster-scale runs comes from `netsim`'s
-//! analytic model, which `cost` re-exports for the simulator.
+//! Data movement here is REAL: shared-memory channels between threads
+//! by default, and — through the pluggable [`transport`] layer — TCP or
+//! Unix sockets between processes (`SocketTransport`), so comm workers
+//! can ring across real process and machine boundaries.  Wall-clock
+//! timing for cluster-scale runs comes from `netsim`'s analytic model,
+//! which `cost` re-exports for the simulator.
 
 pub mod hierarchical;
 pub mod pool;
 pub mod ring;
+pub mod socket;
 pub mod threaded;
+pub mod transport;
 
 pub use hierarchical::hierarchical_allreduce_inplace;
 pub use pool::{CollectivePool, CommMode, MicroStats, RankCompute,
                StepOutcome, WireFormat};
 pub use ring::{ring_allreduce_inplace, RingPlan};
+pub use socket::SocketTransport;
 pub use threaded::{CollectiveGroup, GroupHandle};
+pub use transport::{Frame, InProcTransport, Transport, TransportError};
 
 use crate::netsim::{Fabric, LinkModel};
 use crate::topology::Topology;

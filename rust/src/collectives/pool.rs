@@ -8,8 +8,12 @@
 //!
 //! * **two long-lived threads per rank** — a *compute* worker that runs
 //!   the rank's micro-steps and accumulates gradients, and a *comm*
-//!   worker that owns the rank's endpoint in a reusable web of mpsc
-//!   channels (the in-process NCCL communicator, never re-created);
+//!   worker that owns the rank's [`CommEndpoints`] in a reusable comm
+//!   graph wired once through a [`Transport`] (the communicator, never
+//!   re-created): in-process channels by default
+//!   ([`InProcTransport`]), or sockets to peer processes
+//!   ([`super::socket::SocketTransport`]) — same protocols, same
+//!   reduction order, bitwise-identical sums either way;
 //! * **overlapped bucket exchange** — on the final micro-step the compute
 //!   worker accumulates bucket-by-bucket in backward order and hands each
 //!   bucket to its comm worker *as soon as its accumulation completes*,
@@ -79,6 +83,7 @@
 //!   ([`crate::metrics::ExchangeTimings::overlap_efficiency`]) is a
 //!   true fraction in every mode and schedule.
 
+use std::ops::Range;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
@@ -87,6 +92,10 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::ring::RingPlan;
+use super::transport::{
+    build_endpoints, quantize_f16, CommEndpoints, Frame, FrameRx, FrameTx,
+    InProcTransport, PayloadPool, Transport, TransportError,
+};
 use crate::grad::BucketRange;
 use crate::half::F16;
 use crate::topology::Topology;
@@ -339,13 +348,10 @@ struct RankResult {
     res: std::result::Result<RankStats, String>,
 }
 
-/// Ring hop message: (step tag, wire payload).
-enum RingMsg {
-    F32(u32, Vec<f32>),
-    F16(u32, Vec<u16>),
-}
-
 /// Reduced bucket handed back from a comm worker to its compute worker.
+/// Intra-rank only (never crosses a transport); exchange failures travel
+/// the same channel as `Err(reason)` so the compute worker can name the
+/// step and bucket that lost the world.
 struct Reduced {
     idx: usize,
     data: Vec<f32>,
@@ -355,90 +361,20 @@ struct Reduced {
     net_s: f64,
 }
 
-/// Intra-node broadcast message (hierarchical phase 3): the reduced
-/// bucket plus the leader's network-phase timing so every rank reports
-/// the same PCIe/network split.
-struct Bcast {
-    idx: usize,
-    data: Vec<f32>,
-    net_s: f64,
-}
+/// What a comm worker hands back per bucket: the reduced payload, or the
+/// reason the exchange died (a peer disconnect/timeout surfaced by the
+/// transport).
+type ReducedResult = std::result::Result<Reduced, String>;
 
-/// One pipeline message of the chunked intra-node chain
-/// ([`IntraNodeMode::Ring`]): a (bucket, chunk) payload flowing
-/// leader-ward (partial node sums, `net_s = 0`) or member-ward (the
-/// reduced chunk, carrying the leader's per-chunk ring time so every
-/// rank reports the same PCIe/network split).
-struct ChunkMsg {
-    idx: usize,
-    chunk: usize,
-    data: Vec<f32>,
-    net_s: f64,
-}
-
-/// The role-specific channel endpoints a comm worker owns; built once at
-/// pool construction (the topology decides which variant each rank gets).
-enum CommWiring {
-    /// Flat world ring: rank r sends to (r+1) % world.  `net` records
-    /// whether the topology pins this ring's bottleneck to the network
-    /// (machines > 1), for the PCIe/network timing split.
-    Flat {
-        rank: usize,
-        ring_size: usize,
-        net: bool,
-        tx_next: Sender<RingMsg>,
-        rx_prev: Receiver<RingMsg>,
-    },
-    /// Hierarchical node leader (local rank 0): gathers its node's
-    /// buckets over per-member channels, rings with the other leaders,
-    /// broadcasts the reduced bucket back.
-    Leader {
-        machine: usize,
-        machines: usize,
-        /// One receiver per node member, in local-rank order 1..g — the
-        /// fixed accumulate order that keeps the sum deterministic.
-        member_rxs: Vec<Receiver<(usize, Vec<f32>)>>,
-        member_txs: Vec<Sender<Bcast>>,
-        tx_next: Sender<RingMsg>,
-        rx_prev: Receiver<RingMsg>,
-    },
-    /// Hierarchical node member (local rank > 0): hands its bucket to
-    /// the node leader and waits for the reduced broadcast.
-    Member {
-        to_leader: Sender<(usize, Vec<f32>)>,
-        from_leader: Receiver<Bcast>,
-    },
-    /// Chunked pipelined node leader ([`IntraNodeMode::Ring`]): receives
-    /// pre-reduced chunk partials from the chain head (local rank 1),
-    /// rings each chunk over the other leaders, and sends the reduced
-    /// chunk back down the chain.
-    ChainLeader {
-        machine: usize,
-        machines: usize,
-        chunk_elems: usize,
-        up_rx: Receiver<ChunkMsg>,
-        down_tx: Sender<ChunkMsg>,
-        tx_next: Sender<RingMsg>,
-        rx_prev: Receiver<RingMsg>,
-    },
-    /// Chunked pipelined node member at local rank `l`: reduce-forwards
-    /// chunks toward the leader (adding its own slice to whatever the
-    /// tail-ward neighbours already summed) and copy-forwards reduced
-    /// chunks away from it.  `up_rx`/`down_tx` are `None` at the chain
-    /// tail (local rank g-1).
-    ChainMember {
-        chunk_elems: usize,
-        up_rx: Option<Receiver<ChunkMsg>>,
-        up_tx: Sender<ChunkMsg>,
-        down_rx: Receiver<ChunkMsg>,
-        down_tx: Option<Sender<ChunkMsg>>,
-    },
-}
-
-/// The persistent pool: `2 * world` threads plus the channels between
-/// them, created once and reused for every step until drop.
+/// The persistent pool: two threads per *local* rank plus the links
+/// between them, created once and reused for every step until drop.  In
+/// a single-process run every rank is local (`2 * world` threads); in a
+/// multi-process run each process builds one pool over its contiguous
+/// rank slice and the transport carries the cross-process edges.
 pub struct CollectivePool {
     world: usize,
+    /// Global ranks hosted by this process (== `0..world` in-process).
+    local: Range<usize>,
     n_elems: usize,
     ranges: Arc<[BucketRange]>,
     wire: WireFormat,
@@ -526,141 +462,71 @@ impl CollectivePool {
                       ranges: Arc<[BucketRange]>, wire: WireFormat,
                       mode: CommMode, intra: IntraNodeMode,
                       chunk_elems: usize) -> CollectivePool {
+        let mut transport = InProcTransport::new(topo.world_size());
+        Self::with_transport(topo, n_elems, ranges, wire, mode, intra,
+                             chunk_elems, &mut transport)
+            .expect("in-process wiring cannot fail")
+    }
+
+    /// [`Self::with_intra`] over an explicit [`Transport`] — the
+    /// out-of-process entry point.  The transport decides which global
+    /// ranks live in THIS process ([`Transport::local_ranks`]); worker
+    /// threads are spawned for those ranks only, and every comm-graph
+    /// edge that crosses the process boundary rides the transport's
+    /// links (sockets) instead of in-process channels.  Multi-process
+    /// runs call this once per pool build and may reuse the same
+    /// transport for a later build (the phase-2 trainer does).
+    ///
+    /// Fails if the transport cannot wire the topology — world mismatch,
+    /// a process split that breaks machine alignment in hierarchical
+    /// mode, or a peer that never answered its dial/accept.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_transport(topo: Topology, n_elems: usize,
+                          ranges: Arc<[BucketRange]>, wire: WireFormat,
+                          mode: CommMode, intra: IntraNodeMode,
+                          chunk_elems: usize,
+                          transport: &mut dyn Transport)
+                          -> Result<CollectivePool> {
         let world = topo.world_size();
         assert!(world >= 1, "world must be >= 1");
         let hierarchical = mode.resolves_hierarchical(&topo);
         let intra_ring = hierarchical && intra.resolves_ring(&topo);
         let chunk_elems = chunk_elems.max(1);
-        let g = topo.gpus_per_machine;
-        let m = topo.machines;
+        let local = transport.local_ranks();
+        // Non-local ranks get empty buffers: their gradients live in the
+        // process that hosts them, and indexing stays global.
         let accs: Arc<Vec<Mutex<Vec<f32>>>> = Arc::new(
-            (0..world).map(|_| Mutex::new(vec![0.0f32; n_elems])).collect(),
+            (0..world)
+                .map(|r| {
+                    if local.contains(&r) {
+                        Mutex::new(vec![0.0f32; n_elems])
+                    } else {
+                        Mutex::new(Vec::new())
+                    }
+                })
+                .collect(),
         );
 
-        // Build each rank's comm wiring.  Flat: one world-sized ring
-        // (comm worker r sends to slot (r+1) % world, receives from slot
-        // r — same wiring as CollectiveGroup).  Hierarchical: a
-        // machines-sized ring over the node leaders plus dedicated
-        // member<->leader channels inside each node.
-        let mut wirings: Vec<Option<CommWiring>> =
-            (0..world).map(|_| None).collect();
-        if !hierarchical {
-            let mut ring_txs: Vec<Option<Sender<RingMsg>>> = Vec::new();
-            let mut ring_rxs: Vec<Option<Receiver<RingMsg>>> = Vec::new();
-            for _ in 0..world {
-                let (tx, rx) = channel::<RingMsg>();
-                ring_txs.push(Some(tx));
-                ring_rxs.push(Some(rx));
-            }
-            for (r, w) in wirings.iter_mut().enumerate() {
-                *w = Some(CommWiring::Flat {
-                    rank: r,
-                    ring_size: world,
-                    net: m > 1,
-                    tx_next: ring_txs[(r + 1) % world].take().unwrap(),
-                    rx_prev: ring_rxs[r].take().unwrap(),
-                });
-            }
-        } else {
-            let mut lead_txs: Vec<Option<Sender<RingMsg>>> = Vec::new();
-            let mut lead_rxs: Vec<Option<Receiver<RingMsg>>> = Vec::new();
-            for _ in 0..m {
-                let (tx, rx) = channel::<RingMsg>();
-                lead_txs.push(Some(tx));
-                lead_rxs.push(Some(rx));
-            }
-            for machine in 0..m {
-                if intra_ring {
-                    // Chunked pipelined chain: adjacent-member channels
-                    // only.  `ups[l]` carries partial sums from local
-                    // rank l+1 to local rank l; `downs[l]` carries
-                    // reduced chunks from local rank l to l+1.
-                    let mut ups: Vec<(Option<Sender<ChunkMsg>>,
-                                      Option<Receiver<ChunkMsg>>)> =
-                        (0..g - 1)
-                            .map(|_| {
-                                let (tx, rx) = channel::<ChunkMsg>();
-                                (Some(tx), Some(rx))
-                            })
-                            .collect();
-                    let mut downs: Vec<(Option<Sender<ChunkMsg>>,
-                                        Option<Receiver<ChunkMsg>>)> =
-                        (0..g - 1)
-                            .map(|_| {
-                                let (tx, rx) = channel::<ChunkMsg>();
-                                (Some(tx), Some(rx))
-                            })
-                            .collect();
-                    for local in 1..g {
-                        wirings[machine * g + local] =
-                            Some(CommWiring::ChainMember {
-                                chunk_elems,
-                                up_rx: if local < g - 1 {
-                                    Some(ups[local].1.take().unwrap())
-                                } else {
-                                    None
-                                },
-                                up_tx: ups[local - 1].0.take().unwrap(),
-                                down_rx: downs[local - 1].1.take().unwrap(),
-                                down_tx: if local < g - 1 {
-                                    Some(downs[local].0.take().unwrap())
-                                } else {
-                                    None
-                                },
-                            });
-                    }
-                    wirings[machine * g] = Some(CommWiring::ChainLeader {
-                        machine,
-                        machines: m,
-                        chunk_elems,
-                        up_rx: ups[0].1.take().unwrap(),
-                        down_tx: downs[0].0.take().unwrap(),
-                        tx_next: lead_txs[(machine + 1) % m].take().unwrap(),
-                        rx_prev: lead_rxs[machine].take().unwrap(),
-                    });
-                } else {
-                    let mut member_rxs = Vec::with_capacity(g - 1);
-                    let mut member_txs = Vec::with_capacity(g - 1);
-                    for local in 1..g {
-                        let (up_tx, up_rx) = channel::<(usize, Vec<f32>)>();
-                        let (down_tx, down_rx) = channel::<Bcast>();
-                        member_rxs.push(up_rx);
-                        member_txs.push(down_tx);
-                        wirings[machine * g + local] =
-                            Some(CommWiring::Member {
-                                to_leader: up_tx,
-                                from_leader: down_rx,
-                            });
-                    }
-                    wirings[machine * g] = Some(CommWiring::Leader {
-                        machine,
-                        machines: m,
-                        member_rxs,
-                        member_txs,
-                        tx_next: lead_txs[(machine + 1) % m].take().unwrap(),
-                        rx_prev: lead_rxs[machine].take().unwrap(),
-                    });
-                }
-            }
-        }
+        let endpoints =
+            build_endpoints(&topo, hierarchical, intra_ring, chunk_elems,
+                            transport)
+                .map_err(|e| anyhow::anyhow!("transport wiring: {e}"))?;
 
         let (result_tx, result_rx) = channel::<RankResult>();
-        let mut job_txs = Vec::with_capacity(world);
-        let mut compute_handles = Vec::with_capacity(world);
-        let mut comm_handles = Vec::with_capacity(world);
-        let mut wirings = wirings.into_iter();
-        for r in 0..world {
+        let mut job_txs = Vec::with_capacity(local.len());
+        let mut compute_handles = Vec::with_capacity(local.len());
+        let mut comm_handles = Vec::with_capacity(local.len());
+        for (r, endpoints) in endpoints {
             let (job_tx, job_rx) = channel::<Job>();
             let (bucket_tx, bucket_rx) = channel::<(usize, Vec<f32>)>();
-            let (reduced_tx, reduced_rx) = channel::<Reduced>();
-            let wiring = wirings.next().unwrap().unwrap();
+            let (reduced_tx, reduced_rx) = channel::<ReducedResult>();
             let ranges_comm = ranges.clone();
             comm_handles.push(
                 std::thread::Builder::new()
                     .name(format!("pool-comm-{r}"))
                     .spawn(move || {
                         comm_worker(wire, &ranges_comm, bucket_rx,
-                                    reduced_tx, wiring);
+                                    reduced_tx, endpoints);
                     })
                     .expect("spawn comm worker"),
             );
@@ -680,8 +546,9 @@ impl CollectivePool {
             job_txs.push(job_tx);
         }
         drop(result_tx);
-        CollectivePool {
+        Ok(CollectivePool {
             world,
+            local,
             n_elems,
             ranges,
             wire,
@@ -694,11 +561,22 @@ impl CollectivePool {
             accs,
             compute_handles,
             comm_handles,
-        }
+        })
     }
 
     pub fn world(&self) -> usize {
         self.world
+    }
+
+    /// Global ranks this process hosts workers (and gradients) for.
+    pub fn local_ranks(&self) -> Range<usize> {
+        self.local.clone()
+    }
+
+    /// Whether this process hosts global rank 0 — the process that owns
+    /// checkpointing, logging, and the final save in multi-process runs.
+    pub fn is_lead(&self) -> bool {
+        self.local.start == 0
     }
 
     pub fn n_elems(&self) -> usize {
@@ -769,10 +647,10 @@ impl CollectivePool {
         // SAFETY: the transmutes only erase lifetimes.  Workers use the
         // references strictly between receiving the Job and sending
         // their RankResult, and this function does not return until it
-        // has received exactly `world` results — so the borrows are live
-        // for every use.  Channel failures below are programming errors
-        // (a worker can only exit when the pool is dropped) and panic
-        // rather than return, keeping the invariant.
+        // has received exactly one result per local rank — so the
+        // borrows are live for every use.  Channel failures below are
+        // programming errors (a worker can only exit when the pool is
+        // dropped) and panic rather than return, keeping the invariant.
         let params_static: &'static [f32] =
             unsafe { std::mem::transmute::<&[f32], &'static [f32]>(params) };
         let compute_static: &'static (dyn RankCompute + 'static) = unsafe {
@@ -806,7 +684,7 @@ impl CollectivePool {
         let mut results: Vec<Option<RankStats>> =
             (0..self.world).map(|_| None).collect();
         let mut errs: Vec<String> = Vec::new();
-        for _ in 0..self.world {
+        for _ in 0..self.job_txs.len() {
             let r = self
                 .result_rx
                 .recv()
@@ -849,15 +727,21 @@ impl CollectivePool {
         Ok(out)
     }
 
-    /// Rank 0's buffer — the reduced gradients the leader normalizes and
-    /// applies.  Only call between steps (a worker holds the lock during
-    /// its step).
+    /// The lowest local rank's buffer — the reduced gradients this
+    /// process's trainer normalizes and applies (global rank 0 in a
+    /// single-process run; after the exchange every rank's buffer holds
+    /// the same global sum).  Only call between steps (a worker holds
+    /// the lock during its step).
     pub fn leader_grads(&self) -> MutexGuard<'_, Vec<f32>> {
-        self.rank_grads(0)
+        self.rank_grads(self.local.start)
     }
 
-    /// Any rank's buffer (tests assert cross-rank bitwise equality).
+    /// Any *local* rank's buffer (tests assert cross-rank bitwise
+    /// equality); non-local gradients live in the process hosting them.
     pub fn rank_grads(&self, rank: usize) -> MutexGuard<'_, Vec<f32>> {
+        assert!(self.local.contains(&rank),
+                "rank {rank} is not hosted by this process \
+                 (local {:?})", self.local);
         self.accs[rank].lock().expect("pool rank buffer poisoned")
     }
 }
@@ -885,7 +769,7 @@ impl Drop for CollectivePool {
 fn compute_worker(rank: usize, world: usize, ranges: &Arc<[BucketRange]>,
                   accs: &Arc<Vec<Mutex<Vec<f32>>>>, job_rx: Receiver<Job>,
                   bucket_tx: Sender<(usize, Vec<f32>)>,
-                  reduced_rx: Receiver<Reduced>,
+                  reduced_rx: Receiver<ReducedResult>,
                   result_tx: Sender<RankResult>) {
     // Persistent scratch: micro-step gradient vector and one payload
     // buffer per bucket, recycled every step.
@@ -918,7 +802,7 @@ fn run_rank_step(rank: usize, world: usize, ranges: &[BucketRange],
                  accs: &[Mutex<Vec<f32>>], job: &Job, grads: &mut Vec<f32>,
                  bucket_bufs: &mut [Vec<f32>],
                  bucket_tx: &Sender<(usize, Vec<f32>)>,
-                 reduced_rx: &Receiver<Reduced>) -> Result<RankStats> {
+                 reduced_rx: &Receiver<ReducedResult>) -> Result<RankStats> {
     let mut acc = accs[rank].lock().expect("rank buffer poisoned");
     acc.fill(0.0);
     let mut stats = RankStats::default();
@@ -1034,7 +918,15 @@ fn run_rank_step(rank: usize, world: usize, ranges: &[BucketRange],
         for i in 0..sent {
             let tw = Instant::now();
             let red = match reduced_rx.recv() {
-                Ok(r) => r,
+                Ok(Ok(r)) => r,
+                Ok(Err(msg)) => {
+                    // The comm worker named the transport failure (a
+                    // remote peer disconnect or timeout) before exiting.
+                    failure = failure.or_else(|| {
+                        Some(anyhow::anyhow!("exchange failed: {msg}"))
+                    });
+                    break;
+                }
                 Err(_) => {
                     failure = failure.or_else(|| {
                         Some(anyhow::anyhow!("comm worker gone mid-exchange"))
@@ -1068,31 +960,39 @@ fn run_rank_step(rank: usize, world: usize, ranges: &[BucketRange],
 /// Dispatch a comm worker into its role-specific loop.  Every role
 /// processes buckets strictly in the order its compute worker sends
 /// them, so `Reduced` replies arrive in bucket order.
+///
+/// Failure policy (the transport refactor's contract): an error on a
+/// link whose peer lives in THIS process is tolerated where the old
+/// channel wiring tolerated it — the dead peer's own rank reports the
+/// failure, so the protocol keeps moving.  An error on a **remote**
+/// link always propagates as an `Err` on the reduced channel (then the
+/// worker exits): the dead peer's process cannot report anything here,
+/// and tolerating it would silently drop its gradients from the sum.
 fn comm_worker(wire: WireFormat, ranges: &[BucketRange],
                bucket_rx: Receiver<(usize, Vec<f32>)>,
-               reduced_tx: Sender<Reduced>, wiring: CommWiring) {
-    match wiring {
-        CommWiring::Flat { rank, ring_size, net, tx_next, rx_prev } => {
+               reduced_tx: Sender<ReducedResult>, endpoints: CommEndpoints) {
+    match endpoints {
+        CommEndpoints::Flat { rank, ring_size, net, tx_next, rx_prev } => {
             flat_comm_loop(rank, ring_size, wire, net, ranges, bucket_rx,
                            reduced_tx, tx_next, rx_prev);
         }
-        CommWiring::Leader { machine, machines, member_rxs, member_txs,
-                             tx_next, rx_prev } => {
+        CommEndpoints::Leader { machine, machines, member_rxs, member_txs,
+                                tx_next, rx_prev } => {
             leader_comm_loop(machine, machines, wire, ranges, bucket_rx,
-                             reduced_tx, &member_rxs, &member_txs, tx_next,
+                             reduced_tx, member_rxs, member_txs, tx_next,
                              rx_prev);
         }
-        CommWiring::Member { to_leader, from_leader } => {
+        CommEndpoints::Member { to_leader, from_leader } => {
             member_comm_loop(bucket_rx, reduced_tx, to_leader, from_leader);
         }
-        CommWiring::ChainLeader { machine, machines, chunk_elems, up_rx,
-                                  down_tx, tx_next, rx_prev } => {
+        CommEndpoints::ChainLeader { machine, machines, chunk_elems, up_rx,
+                                     down_tx, tx_next, rx_prev } => {
             chain_leader_comm_loop(machine, machines, wire, chunk_elems,
-                                   ranges, bucket_rx, reduced_tx, &up_rx,
-                                   &down_tx, tx_next, rx_prev);
+                                   ranges, bucket_rx, reduced_tx, up_rx,
+                                   down_tx, tx_next, rx_prev);
         }
-        CommWiring::ChainMember { chunk_elems, up_rx, up_tx, down_rx,
-                                  down_tx } => {
+        CommEndpoints::ChainMember { chunk_elems, up_rx, up_tx, down_rx,
+                                     down_tx } => {
             chain_member_comm_loop(chunk_elems, bucket_rx, reduced_tx,
                                    up_rx, up_tx, down_rx, down_tx);
         }
@@ -1104,31 +1004,39 @@ fn comm_worker(wire: WireFormat, ranges: &[BucketRange],
 fn flat_comm_loop(rank: usize, ring_size: usize, wire: WireFormat,
                   net: bool, ranges: &[BucketRange],
                   bucket_rx: Receiver<(usize, Vec<f32>)>,
-                  reduced_tx: Sender<Reduced>, tx_next: Sender<RingMsg>,
-                  rx_prev: Receiver<RingMsg>) {
+                  reduced_tx: Sender<ReducedResult>,
+                  mut tx_next: Box<dyn FrameTx>,
+                  mut rx_prev: Box<dyn FrameRx>) {
     // Chunk plans are a pure function of (ring size, bucket length):
     // build them once and reuse forever.
     let plans: Vec<RingPlan> = ranges
         .iter()
         .map(|b| RingPlan::new(ring_size, b.len()))
         .collect();
-    // Free lists recycle wire message vectors: every exchange sends and
+    // The payload pool recycles wire buffers: every exchange sends and
     // receives the same number of chunks, so after the first step the
-    // lists are self-sustaining (steady-state zero allocation).
-    let mut free_f32: Vec<Vec<f32>> = Vec::new();
-    let mut free_u16: Vec<Vec<u16>> = Vec::new();
+    // pool is self-sustaining (steady-state zero allocation).
+    let mut pool = PayloadPool::default();
     while let Ok((idx, mut data)) = bucket_rx.recv() {
         let t0 = Instant::now();
         if ring_size > 1 {
-            ring_exchange(&mut data, &plans[idx], rank, wire, &tx_next,
-                          &rx_prev, &mut free_f32, &mut free_u16);
+            if let Err(e) = ring_exchange(&mut data, &plans[idx], rank, wire,
+                                          tx_next.as_mut(), rx_prev.as_mut(),
+                                          &mut pool) {
+                let _ = reduced_tx.send(Err(format!(
+                    "ring peer lost on bucket {idx}: {e}"
+                )));
+                break;
+            }
         }
         let exchange_s = t0.elapsed().as_secs_f64();
-        // A flat ring on a multi-machine topology is paced by its
-        // network hops (paper §3.2), so the whole exchange bills to the
-        // network; within one node it is all PCIe.
+        // A flat ring on a multi-machine (or multi-process) topology is
+        // paced by its network hops (paper §3.2), so the whole exchange
+        // bills to the network; within one node it is all PCIe.
         let net_s = if net { exchange_s } else { 0.0 };
-        if reduced_tx.send(Reduced { idx, data, exchange_s, net_s }).is_err()
+        if reduced_tx
+            .send(Ok(Reduced { idx, data, exchange_s, net_s }))
+            .is_err()
         {
             break;
         }
@@ -1141,40 +1049,54 @@ fn flat_comm_loop(rank: usize, ring_size: usize, wire: WireFormat,
 fn leader_comm_loop(machine: usize, machines: usize, wire: WireFormat,
                     ranges: &[BucketRange],
                     bucket_rx: Receiver<(usize, Vec<f32>)>,
-                    reduced_tx: Sender<Reduced>,
-                    member_rxs: &[Receiver<(usize, Vec<f32>)>],
-                    member_txs: &[Sender<Bcast>], tx_next: Sender<RingMsg>,
-                    rx_prev: Receiver<RingMsg>) {
+                    reduced_tx: Sender<ReducedResult>,
+                    mut member_rxs: Vec<Box<dyn FrameRx>>,
+                    mut member_txs: Vec<Box<dyn FrameTx>>,
+                    mut tx_next: Box<dyn FrameTx>,
+                    mut rx_prev: Box<dyn FrameRx>) {
     // Leader-ring chunk plans at size `machines` — a pure function of
     // (machines, bucket length), built once and reused forever.
     let plans: Vec<RingPlan> = ranges
         .iter()
         .map(|b| RingPlan::new(machines, b.len()))
         .collect();
-    let mut free_f32: Vec<Vec<f32>> = Vec::new();
-    let mut free_u16: Vec<Vec<u16>> = Vec::new();
+    let mut pool = PayloadPool::default();
     // Member payload vectors parked between gather and broadcast — the
     // broadcast copies are written into these, so the steady-state step
     // allocates nothing.
     let mut parked: Vec<Vec<f32>> = Vec::with_capacity(member_rxs.len());
-    while let Ok((idx, mut data)) = bucket_rx.recv() {
+    'buckets: while let Ok((idx, mut data)) = bucket_rx.recv() {
         let t0 = Instant::now();
         // Phase 1 — intra-node leader accumulate ("PCIe"): add each
         // member's bucket in fixed local-rank order (1, 2, … g-1) so the
         // node sum is deterministic.
         parked.clear();
-        for rx in member_rxs {
-            match rx.recv() {
-                Ok((midx, mv)) => {
-                    debug_assert_eq!(midx, idx, "member bucket skew");
+        for rx in member_rxs.iter_mut() {
+            match rx.recv(&mut pool) {
+                Ok(Frame::Bucket { idx: midx, data: mv }) => {
+                    debug_assert_eq!(midx as usize, idx,
+                                     "member bucket skew");
                     for (d, s) in data.iter_mut().zip(mv.iter()) {
                         *d += *s;
                     }
                     parked.push(mv);
                 }
+                Ok(other) => {
+                    pool.recycle(other);
+                    let _ = reduced_tx.send(Err(format!(
+                        "unexpected frame in member gather (bucket {idx})"
+                    )));
+                    break 'buckets;
+                }
+                Err(e) if rx.remote() => {
+                    let _ = reduced_tx.send(Err(format!(
+                        "node member lost mid-gather (bucket {idx}): {e}"
+                    )));
+                    break 'buckets;
+                }
                 Err(_) => {
-                    // Member comm worker died; its own rank reports the
-                    // failure — keep the protocol moving for the rest.
+                    // In-process member comm worker died; its own rank
+                    // reports the failure — keep the protocol moving.
                 }
             }
         }
@@ -1182,20 +1104,36 @@ fn leader_comm_loop(machine: usize, machines: usize, wire: WireFormat,
         // ("network"): the §4.4 move that caps per-NIC traffic at
         // 2(M-1)/M of the payload.
         let tn = Instant::now();
-        ring_exchange(&mut data, &plans[idx], machine, wire, &tx_next,
-                      &rx_prev, &mut free_f32, &mut free_u16);
+        if let Err(e) = ring_exchange(&mut data, &plans[idx], machine, wire,
+                                      tx_next.as_mut(), rx_prev.as_mut(),
+                                      &mut pool) {
+            let _ = reduced_tx.send(Err(format!(
+                "leader ring peer lost on bucket {idx}: {e}"
+            )));
+            break 'buckets;
+        }
         let net_s = tn.elapsed().as_secs_f64();
         // Phase 3 — intra-node broadcast ("PCIe"), recycling the parked
         // member vectors as the broadcast payloads.
-        for tx in member_txs {
+        for tx in member_txs.iter_mut() {
             let mut buf = parked.pop().unwrap_or_default();
             buf.clear();
             buf.extend_from_slice(&data);
-            // A dead member is its own rank's failure; ignore here.
-            let _ = tx.send(Bcast { idx, data: buf, net_s });
+            let frame = Frame::Bcast { idx: idx as u32, net_s, data: buf };
+            if let Err(e) = tx.send(frame, &mut pool) {
+                if tx.remote() {
+                    let _ = reduced_tx.send(Err(format!(
+                        "node member lost mid-broadcast (bucket {idx}): {e}"
+                    )));
+                    break 'buckets;
+                }
+                // A dead in-process member is its own rank's failure.
+            }
         }
         let exchange_s = t0.elapsed().as_secs_f64();
-        if reduced_tx.send(Reduced { idx, data, exchange_s, net_s }).is_err()
+        if reduced_tx
+            .send(Ok(Reduced { idx, data, exchange_s, net_s }))
+            .is_err()
         {
             break;
         }
@@ -1214,11 +1152,11 @@ fn chain_leader_comm_loop(machine: usize, machines: usize,
                           wire: WireFormat, chunk_elems: usize,
                           ranges: &[BucketRange],
                           bucket_rx: Receiver<(usize, Vec<f32>)>,
-                          reduced_tx: Sender<Reduced>,
-                          up_rx: &Receiver<ChunkMsg>,
-                          down_tx: &Sender<ChunkMsg>,
-                          tx_next: Sender<RingMsg>,
-                          rx_prev: Receiver<RingMsg>) {
+                          reduced_tx: Sender<ReducedResult>,
+                          mut up_rx: Box<dyn FrameRx>,
+                          mut down_tx: Box<dyn FrameTx>,
+                          mut tx_next: Box<dyn FrameTx>,
+                          mut rx_prev: Box<dyn FrameRx>) {
     // Per-bucket chunk tables (range + leader-ring plan per chunk): a
     // pure function of (machines, bucket length, chunk_elems), built
     // once and reused forever.
@@ -1234,9 +1172,8 @@ fn chain_leader_comm_loop(machine: usize, machines: usize,
                 .collect()
         })
         .collect();
-    let mut free_f32: Vec<Vec<f32>> = Vec::new();
-    let mut free_u16: Vec<Vec<u16>> = Vec::new();
-    while let Ok((idx, mut data)) = bucket_rx.recv() {
+    let mut pool = PayloadPool::default();
+    'buckets: while let Ok((idx, mut data)) = bucket_rx.recv() {
         let t0 = Instant::now();
         let mut net_s = 0.0f64;
         for (c, (span, plan)) in chunk_plans[idx].iter().enumerate() {
@@ -1247,27 +1184,46 @@ fn chain_leader_comm_loop(machine: usize, machines: usize,
             // Phase 1 — chunk gather ("PCIe"): the chain already summed
             // local ranks g-1 .. 1 into this partial; adding our slice
             // completes the node sum for the chunk.
-            match up_rx.recv() {
-                Ok(m) => {
-                    debug_assert_eq!((m.idx, m.chunk), (idx, c),
+            match up_rx.recv(&mut pool) {
+                Ok(Frame::Chunk { idx: midx, chunk: mc, data: mv, .. }) => {
+                    debug_assert_eq!((midx as usize, mc as usize), (idx, c),
                                      "chain chunk skew");
                     for (d, s) in
-                        data[span.clone()].iter_mut().zip(m.data.iter()) {
+                        data[span.clone()].iter_mut().zip(mv.iter()) {
                         *d += *s;
                     }
-                    parked = Some(m.data);
+                    parked = Some(mv);
+                }
+                Ok(other) => {
+                    pool.recycle(other);
+                    let _ = reduced_tx.send(Err(format!(
+                        "unexpected frame in chain gather (bucket {idx})"
+                    )));
+                    break 'buckets;
+                }
+                Err(e) if up_rx.remote() => {
+                    let _ = reduced_tx.send(Err(format!(
+                        "chain head lost mid-gather (bucket {idx} chunk \
+                         {c}): {e}"
+                    )));
+                    break 'buckets;
                 }
                 Err(_) => {
-                    // The chain head died; its own rank reports the
-                    // failure — keep the protocol moving with our
-                    // partial sum.
+                    // In-process chain head died; its own rank reports
+                    // the failure — keep moving with our partial sum.
                 }
             }
             // Phase 2 — inter-node ring on this chunk only ("network"):
             // starts while the chain is still gathering later chunks.
             let tn = Instant::now();
-            ring_exchange(&mut data[span.clone()], plan, machine, wire,
-                          &tx_next, &rx_prev, &mut free_f32, &mut free_u16);
+            if let Err(e) = ring_exchange(&mut data[span.clone()], plan,
+                                          machine, wire, tx_next.as_mut(),
+                                          rx_prev.as_mut(), &mut pool) {
+                let _ = reduced_tx.send(Err(format!(
+                    "leader ring peer lost on bucket {idx} chunk {c}: {e}"
+                )));
+                break 'buckets;
+            }
             let chunk_net_s = tn.elapsed().as_secs_f64();
             net_s += chunk_net_s;
             // Phase 3 — chunk broadcast down the chain ("PCIe"),
@@ -1275,16 +1231,27 @@ fn chain_leader_comm_loop(machine: usize, machines: usize,
             let mut buf = parked.unwrap_or_default();
             buf.clear();
             buf.extend_from_slice(&data[span.clone()]);
-            // A dead chain is its own ranks' failure; ignore here.
-            let _ = down_tx.send(ChunkMsg {
-                idx,
-                chunk: c,
-                data: buf,
+            let frame = Frame::Chunk {
+                idx: idx as u32,
+                chunk: c as u32,
                 net_s: chunk_net_s,
-            });
+                data: buf,
+            };
+            if let Err(e) = down_tx.send(frame, &mut pool) {
+                if down_tx.remote() {
+                    let _ = reduced_tx.send(Err(format!(
+                        "chain head lost mid-broadcast (bucket {idx} chunk \
+                         {c}): {e}"
+                    )));
+                    break 'buckets;
+                }
+                // A dead in-process chain is its own ranks' failure.
+            }
         }
         let exchange_s = t0.elapsed().as_secs_f64();
-        if reduced_tx.send(Reduced { idx, data, exchange_s, net_s }).is_err()
+        if reduced_tx
+            .send(Ok(Reduced { idx, data, exchange_s, net_s }))
+            .is_err()
         {
             break;
         }
@@ -1299,15 +1266,16 @@ fn chain_leader_comm_loop(machine: usize, machines: usize,
 /// the serialized leader port of [`IntraNodeMode::Serial`] is gone.
 fn chain_member_comm_loop(chunk_elems: usize,
                           bucket_rx: Receiver<(usize, Vec<f32>)>,
-                          reduced_tx: Sender<Reduced>,
-                          up_rx: Option<Receiver<ChunkMsg>>,
-                          up_tx: Sender<ChunkMsg>,
-                          down_rx: Receiver<ChunkMsg>,
-                          down_tx: Option<Sender<ChunkMsg>>) {
-    // Chunk payload free list: primed by the first bucket, then
-    // self-sustaining (up-pass pops are balanced by received partials
-    // on inner members and by the down pass at the chain tail).
-    let mut free: Vec<Vec<f32>> = Vec::new();
+                          reduced_tx: Sender<ReducedResult>,
+                          mut up_rx: Option<Box<dyn FrameRx>>,
+                          mut up_tx: Box<dyn FrameTx>,
+                          mut down_rx: Box<dyn FrameRx>,
+                          mut down_tx: Option<Box<dyn FrameTx>>) {
+    // Chunk payloads recycle through the pool: primed by the first
+    // bucket, then self-sustaining (up-pass takes are balanced by
+    // received partials on inner members and by the down pass at the
+    // chain tail).
+    let mut pool = PayloadPool::default();
     'buckets: while let Ok((idx, mut data)) = bucket_rx.recv() {
         let t0 = Instant::now();
         let len = data.len();
@@ -1315,32 +1283,52 @@ fn chain_member_comm_loop(chunk_elems: usize,
         // Up pass — reduce-forward toward the leader.
         for c in 0..nchunks {
             let span = chunk_span(len, chunk_elems, c);
-            let mut buf = free.pop().unwrap_or_default();
-            buf.clear();
+            let mut buf = pool.take_f32();
             buf.extend_from_slice(&data[span]);
-            if let Some(rx) = &up_rx {
-                match rx.recv() {
-                    Ok(m) => {
-                        debug_assert_eq!((m.idx, m.chunk), (idx, c),
-                                         "chain chunk skew");
-                        for (d, s) in buf.iter_mut().zip(m.data.iter()) {
+            if let Some(rx) = up_rx.as_mut() {
+                match rx.recv(&mut pool) {
+                    Ok(Frame::Chunk { idx: midx, chunk: mc,
+                                      data: mv, .. }) => {
+                        debug_assert_eq!((midx as usize, mc as usize),
+                                         (idx, c), "chain chunk skew");
+                        for (d, s) in buf.iter_mut().zip(mv.iter()) {
                             *d += *s;
                         }
-                        free.push(m.data);
+                        pool.put_f32(mv);
+                    }
+                    Ok(other) => {
+                        pool.recycle(other);
+                        let _ = reduced_tx.send(Err(format!(
+                            "unexpected frame in chain gather (bucket \
+                             {idx})"
+                        )));
+                        break 'buckets;
+                    }
+                    Err(e) if rx.remote() => {
+                        let _ = reduced_tx.send(Err(format!(
+                            "chain neighbour lost mid-gather (bucket {idx} \
+                             chunk {c}): {e}"
+                        )));
+                        break 'buckets;
                     }
                     Err(_) => {
-                        // Tail-ward neighbour died (its rank reports
-                        // it); forward our partial so the leader side
-                        // keeps moving.
+                        // In-process tail-ward neighbour died (its rank
+                        // reports it); forward our partial so the leader
+                        // side keeps moving.
                     }
                 }
             }
-            if up_tx
-                .send(ChunkMsg { idx, chunk: c, data: buf, net_s: 0.0 })
-                .is_err()
-            {
-                // Leader-ward neighbour gone: dropping reduced_tx
-                // surfaces the failure at our compute worker's recv.
+            let frame = Frame::Chunk {
+                idx: idx as u32,
+                chunk: c as u32,
+                net_s: 0.0,
+                data: buf,
+            };
+            if let Err(e) = up_tx.send(frame, &mut pool) {
+                let _ = reduced_tx.send(Err(format!(
+                    "chain neighbour lost on bucket {idx} chunk {c} \
+                     upload: {e}"
+                )));
                 break 'buckets;
             }
         }
@@ -1348,27 +1336,61 @@ fn chain_member_comm_loop(chunk_elems: usize,
         // the payload vectors for the next bucket's up pass.
         let mut net_s = 0.0f64;
         for c in 0..nchunks {
-            let m = match down_rx.recv() {
-                Ok(m) => m,
-                Err(_) => break 'buckets,
-            };
-            debug_assert_eq!((m.idx, m.chunk), (idx, c),
-                             "chain chunk skew");
-            let span = chunk_span(len, chunk_elems, c);
-            data[span].copy_from_slice(&m.data);
-            net_s += m.net_s;
-            match &down_tx {
-                Some(tx) => {
-                    let _ = tx.send(m);
+            let (mc_net_s, mv) = match down_rx.recv(&mut pool) {
+                Ok(Frame::Chunk { idx: midx, chunk: mc, net_s: ns,
+                                  data: mv }) => {
+                    debug_assert_eq!((midx as usize, mc as usize), (idx, c),
+                                     "chain chunk skew");
+                    (ns, mv)
                 }
-                None => free.push(m.data),
+                Ok(other) => {
+                    pool.recycle(other);
+                    let _ = reduced_tx.send(Err(format!(
+                        "unexpected frame in chain broadcast (bucket {idx})"
+                    )));
+                    break 'buckets;
+                }
+                Err(e) => {
+                    let _ = reduced_tx.send(Err(format!(
+                        "chain neighbour lost mid-broadcast (bucket {idx} \
+                         chunk {c}): {e}"
+                    )));
+                    break 'buckets;
+                }
+            };
+            let span = chunk_span(len, chunk_elems, c);
+            data[span].copy_from_slice(&mv);
+            net_s += mc_net_s;
+            match down_tx.as_mut() {
+                Some(tx) => {
+                    let frame = Frame::Chunk {
+                        idx: idx as u32,
+                        chunk: c as u32,
+                        net_s: mc_net_s,
+                        data: mv,
+                    };
+                    if let Err(e) = tx.send(frame, &mut pool) {
+                        if tx.remote() {
+                            let _ = reduced_tx.send(Err(format!(
+                                "chain neighbour lost mid-broadcast \
+                                 (bucket {idx} chunk {c}): {e}"
+                            )));
+                            break 'buckets;
+                        }
+                        // A dead in-process tail is its own rank's
+                        // failure.
+                    }
+                }
+                None => pool.put_f32(mv),
             }
         }
         let exchange_s = t0.elapsed().as_secs_f64();
         // The member's wall covers the whole pipeline; the network
         // share is what the leader measured (capped by our wall).
         let net_s = net_s.min(exchange_s);
-        if reduced_tx.send(Reduced { idx, data, exchange_s, net_s }).is_err()
+        if reduced_tx
+            .send(Ok(Reduced { idx, data, exchange_s, net_s }))
+            .is_err()
         {
             break;
         }
@@ -1377,27 +1399,45 @@ fn chain_member_comm_loop(chunk_elems: usize,
 
 /// Hierarchical node member: one PCIe hop up, one PCIe hop down.
 fn member_comm_loop(bucket_rx: Receiver<(usize, Vec<f32>)>,
-                    reduced_tx: Sender<Reduced>,
-                    to_leader: Sender<(usize, Vec<f32>)>,
-                    from_leader: Receiver<Bcast>) {
+                    reduced_tx: Sender<ReducedResult>,
+                    mut to_leader: Box<dyn FrameTx>,
+                    mut from_leader: Box<dyn FrameRx>) {
+    let mut pool = PayloadPool::default();
     while let Ok((idx, data)) = bucket_rx.recv() {
         let t0 = Instant::now();
-        if to_leader.send((idx, data)).is_err() {
-            // Leader gone: dropping reduced_tx surfaces the failure at
-            // our compute worker's recv.
+        let frame = Frame::Bucket { idx: idx as u32, data };
+        if let Err(e) = to_leader.send(frame, &mut pool) {
+            let _ = reduced_tx.send(Err(format!(
+                "node leader lost on bucket {idx} upload: {e}"
+            )));
             break;
         }
-        let b = match from_leader.recv() {
-            Ok(b) => b,
-            Err(_) => break,
+        let (bnet_s, bdata) = match from_leader.recv(&mut pool) {
+            Ok(Frame::Bcast { idx: bidx, net_s, data }) => {
+                debug_assert_eq!(bidx as usize, idx,
+                                 "broadcast bucket skew");
+                (net_s, data)
+            }
+            Ok(other) => {
+                pool.recycle(other);
+                let _ = reduced_tx.send(Err(format!(
+                    "unexpected frame in leader broadcast (bucket {idx})"
+                )));
+                break;
+            }
+            Err(e) => {
+                let _ = reduced_tx.send(Err(format!(
+                    "node leader lost mid-broadcast (bucket {idx}): {e}"
+                )));
+                break;
+            }
         };
-        debug_assert_eq!(b.idx, idx, "broadcast bucket skew");
         let exchange_s = t0.elapsed().as_secs_f64();
         // The member's wall covers the whole hierarchy; the network
         // share is whatever the leader measured (capped by our wall).
-        let net_s = b.net_s.min(exchange_s);
+        let net_s = bnet_s.min(exchange_s);
         if reduced_tx
-            .send(Reduced { idx, data: b.data, exchange_s, net_s })
+            .send(Ok(Reduced { idx, data: bdata, exchange_s, net_s }))
             .is_err()
         {
             break;
@@ -1407,22 +1447,24 @@ fn member_comm_loop(bucket_rx: Receiver<(usize, Vec<f32>)>,
 
 /// In-place ring allreduce (sum) of `buf` across a set of comm workers,
 /// using the NCCL reduce-scatter + all-gather schedule from [`RingPlan`]
-/// (the flat world ring, or the leader ring at size `machines`).
-#[allow(clippy::too_many_arguments)]
+/// (the flat world ring, or the leader ring at size `machines`).  A
+/// link failure (peer disconnect, net timeout) returns the transport's
+/// error instead of panicking, so the caller can name the bucket and
+/// surface it on the reduced channel.
 fn ring_exchange(buf: &mut [f32], plan: &RingPlan, rank: usize,
-                 wire: WireFormat, tx: &Sender<RingMsg>,
-                 rx: &Receiver<RingMsg>, free_f32: &mut Vec<Vec<f32>>,
-                 free_u16: &mut Vec<Vec<u16>>) {
+                 wire: WireFormat, tx: &mut dyn FrameTx,
+                 rx: &mut dyn FrameRx, pool: &mut PayloadPool)
+                 -> std::result::Result<(), TransportError> {
     let n = plan.n;
     if n <= 1 || buf.is_empty() {
-        return;
+        return Ok(());
     }
     // reduce-scatter
     for s in 0..n - 1 {
         let sc = plan.chunk(plan.send_chunk_rs(rank, s));
-        send_wire(&buf[sc], s as u32, wire, tx, free_f32, free_u16);
+        send_wire(&buf[sc], s as u32, wire, tx, pool)?;
         let rc = plan.chunk(plan.recv_chunk_rs(rank, s));
-        recv_apply(&mut buf[rc], s as u32, true, rx, free_f32, free_u16);
+        recv_apply(&mut buf[rc], s as u32, true, rx, pool)?;
     }
     if wire == WireFormat::F16 {
         // Quantize the fully-reduced chunk this rank owns before the
@@ -1436,39 +1478,45 @@ fn ring_exchange(buf: &mut [f32], plan: &RingPlan, rank: usize,
     // all-gather
     for s in 0..n - 1 {
         let sc = plan.chunk(plan.send_chunk_ag(rank, s));
-        send_wire(&buf[sc], 100 + s as u32, wire, tx, free_f32, free_u16);
+        send_wire(&buf[sc], 100 + s as u32, wire, tx, pool)?;
         let rc = plan.chunk(plan.recv_chunk_ag(rank, s));
-        recv_apply(&mut buf[rc], 100 + s as u32, false, rx, free_f32,
-                   free_u16);
+        recv_apply(&mut buf[rc], 100 + s as u32, false, rx, pool)?;
     }
+    Ok(())
 }
 
-fn send_wire(src: &[f32], tag: u32, wire: WireFormat, tx: &Sender<RingMsg>,
-             free_f32: &mut Vec<Vec<f32>>, free_u16: &mut Vec<Vec<u16>>) {
-    let msg = match wire {
+fn send_wire(src: &[f32], tag: u32, wire: WireFormat, tx: &mut dyn FrameTx,
+             pool: &mut PayloadPool)
+             -> std::result::Result<(), TransportError> {
+    let frame = match wire {
         WireFormat::F32 => {
-            let mut v = free_f32.pop().unwrap_or_default();
-            v.clear();
+            let mut v = pool.take_f32();
             v.extend_from_slice(src);
-            RingMsg::F32(tag, v)
+            Frame::RingF32 { tag, data: v }
         }
         WireFormat::F16 => {
-            let mut v = free_u16.pop().unwrap_or_default();
-            v.clear();
-            v.extend(src.iter().map(|&x| F16::from_f32(x).0));
-            RingMsg::F16(tag, v)
+            let mut v = pool.take_u16();
+            quantize_f16(src, &mut v);
+            Frame::RingF16 { tag, data: v }
         }
     };
-    tx.send(msg).expect("pool ring send");
+    tx.send(frame, pool)
 }
 
 /// Receive one ring hop and either reduce-add (`add = true`) or copy it
-/// into `dst`; the payload vector goes back on the free list.
-fn recv_apply(dst: &mut [f32], tag: u32, add: bool, rx: &Receiver<RingMsg>,
-              free_f32: &mut Vec<Vec<f32>>, free_u16: &mut Vec<Vec<u16>>) {
-    match rx.recv().expect("pool ring recv") {
-        RingMsg::F32(t, v) => {
-            debug_assert_eq!(t, tag, "ring schedule skew");
+/// into `dst`; the payload vector goes back on the pool.  A tag
+/// mismatch is a hard protocol error (a desynchronized peer would
+/// corrupt the sum silently).
+fn recv_apply(dst: &mut [f32], tag: u32, add: bool, rx: &mut dyn FrameRx,
+              pool: &mut PayloadPool)
+              -> std::result::Result<(), TransportError> {
+    match rx.recv(pool)? {
+        Frame::RingF32 { tag: t, data: v } => {
+            if t != tag {
+                return Err(TransportError::Protocol(format!(
+                    "ring schedule skew: got tag {t}, expected {tag}"
+                )));
+            }
             if add {
                 for (d, s) in dst.iter_mut().zip(v.iter()) {
                     *d += *s;
@@ -1476,10 +1524,14 @@ fn recv_apply(dst: &mut [f32], tag: u32, add: bool, rx: &Receiver<RingMsg>,
             } else {
                 dst.copy_from_slice(&v);
             }
-            free_f32.push(v);
+            pool.put_f32(v);
         }
-        RingMsg::F16(t, v) => {
-            debug_assert_eq!(t, tag, "ring schedule skew");
+        Frame::RingF16 { tag: t, data: v } => {
+            if t != tag {
+                return Err(TransportError::Protocol(format!(
+                    "ring schedule skew: got tag {t}, expected {tag}"
+                )));
+            }
             if add {
                 for (d, b) in dst.iter_mut().zip(v.iter()) {
                     *d += F16(*b).to_f32();
@@ -1489,9 +1541,16 @@ fn recv_apply(dst: &mut [f32], tag: u32, add: bool, rx: &Receiver<RingMsg>,
                     *d = F16(*b).to_f32();
                 }
             }
-            free_u16.push(v);
+            pool.put_u16(v);
+        }
+        other => {
+            pool.recycle(other);
+            return Err(TransportError::Protocol(
+                "unexpected frame kind on ring link".into(),
+            ));
         }
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -2036,7 +2095,7 @@ mod tests {
         let accs = vec![Mutex::new(vec![0.0f32; 30])];
         let (bucket_tx, bucket_rx) = channel::<(usize, Vec<f32>)>();
         drop(bucket_rx); // comm worker "died" before the step
-        let (_reduced_tx, reduced_rx) = channel::<Reduced>();
+        let (_reduced_tx, reduced_rx) = channel::<ReducedResult>();
         let mut grads = Vec::new();
         let mut bucket_bufs: Vec<Vec<f32>> =
             ranges.iter().map(|b| Vec::with_capacity(b.len())).collect();
@@ -2058,7 +2117,7 @@ mod tests {
             let ranges = BucketRange::even_split(30, 3);
             let accs = vec![Mutex::new(vec![0.0f32; 30])];
             let (bucket_tx, bucket_rx) = channel::<(usize, Vec<f32>)>();
-            let (reduced_tx, reduced_rx) = channel::<Reduced>();
+            let (reduced_tx, reduced_rx) = channel::<ReducedResult>();
             let peer = std::thread::spawn(move || {
                 // Serve bucket 0 with a recognizable "reduction"...
                 let (idx, mut data) = bucket_rx.recv().unwrap();
@@ -2066,7 +2125,12 @@ mod tests {
                     *v += 1000.0;
                 }
                 reduced_tx
-                    .send(Reduced { idx, data, exchange_s: 0.0, net_s: 0.0 })
+                    .send(Ok(Reduced {
+                        idx,
+                        data,
+                        exchange_s: 0.0,
+                        net_s: 0.0,
+                    }))
                     .unwrap();
                 // ...then die mid-exchange (drops bucket_rx/reduced_tx).
             });

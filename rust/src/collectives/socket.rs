@@ -1,0 +1,816 @@
+//! `SocketTransport`: the collective pool over real processes.
+//!
+//! Frames travel as the v1 length-prefixed binary layout from
+//! [`super::transport`] over TCP (`host:port`) or Unix domain sockets
+//! (`unix:/path` or any address containing `/`).  Each directed
+//! comm-graph edge gets its own connection, opened lazily when
+//! [`Transport::link`] reaches that edge and identified by a 14-byte
+//! handshake (`magic, version, kind, from, to`), so accept order never
+//! has to match dial order.
+//!
+//! # Peer discovery
+//!
+//! Two modes, mirroring torchrun's static and rendezvous launch:
+//!
+//! * **host list** — every process is started with `--listen <addr>
+//!   --connect <addr0,addr1,...>`; the position of its own listen
+//!   address in the (identical) list is its process index.
+//! * **rendezvous file** — every process is started with `--listen
+//!   <addr> --rendezvous <file> --nprocs <n>`; each appends its own
+//!   address (one line, `O_APPEND` so lines never interleave) and polls
+//!   until `n` lines exist.  Line order assigns process indices.
+//!
+//! The world is split contiguously and evenly across processes:
+//! process `i` of `p` hosts global ranks `i*world/p .. (i+1)*world/p`.
+//!
+//! # Why sends go through a writer thread
+//!
+//! In-process links are unbounded channels, so a ring rank can send its
+//! hop before blocking on its receive.  A naive blocking `write_all`
+//! breaks that: with payloads larger than the kernel socket buffers,
+//! every rank can block mid-send while its neighbor also blocks
+//! mid-send — classic ring deadlock.  [`SocketTx`] therefore hands
+//! serialized frames to a per-link writer thread over an unbounded
+//! queue; `send` never blocks, preserving the in-process progress
+//! property.  Drained byte buffers come back over a scratch channel so
+//! the steady state allocates nothing.  Dropping a `SocketTx` closes
+//! the queue and joins the writer, flushing any in-flight frames before
+//! process exit (the final all-gather hop must not be lost).
+//!
+//! # Failure behavior
+//!
+//! Receives use `SO_RCVTIMEO` from `train.net_timeout_s`: a peer that
+//! stops sending surfaces [`TransportError::Timeout`] instead of
+//! hanging the survivor, and a closed connection surfaces
+//! [`TransportError::Disconnected`].  Both `remote()` bits are true, so
+//! the pool's protocols propagate (never tolerate) remote failures.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::ops::Range;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::transport::{
+    decode_frame, encode_frame, Frame, FrameRx, FrameTx, LinkEnds, LinkId,
+    LinkKind, PayloadPool, Transport, TransportError, HANDSHAKE_MAGIC,
+    MAX_FRAME, WIRE_VERSION,
+};
+
+/// Poll interval while waiting for accepts, rendezvous lines, or a
+/// listening peer.
+const POLL: Duration = Duration::from_millis(10);
+
+/// Floor on the connection-setup deadline: peers may start seconds
+/// apart, so setup gets at least this long even with a tight frame
+/// timeout.
+const MIN_SETUP: Duration = Duration::from_secs(10);
+
+fn io_err(e: std::io::Error) -> TransportError {
+    match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+            // callers with a real timeout override this value
+            TransportError::Timeout(0.0)
+        }
+        ErrorKind::UnexpectedEof
+        | ErrorKind::ConnectionReset
+        | ErrorKind::ConnectionAborted
+        | ErrorKind::BrokenPipe => TransportError::Disconnected,
+        _ => TransportError::Io(e.to_string()),
+    }
+}
+
+/// True when `addr` names a Unix socket path rather than `host:port`.
+fn is_unix(addr: &str) -> bool {
+    addr.starts_with("unix:") || addr.contains('/')
+}
+
+/// Strip the optional `unix:` prefix.
+fn unix_path(addr: &str) -> &str {
+    addr.strip_prefix("unix:").unwrap_or(addr)
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn bind(addr: &str) -> Result<(Listener, String), TransportError> {
+        if is_unix(addr) {
+            #[cfg(unix)]
+            {
+                let path = unix_path(addr);
+                // a stale socket file from a crashed run blocks bind
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path).map_err(|e| {
+                    TransportError::Io(format!("bind {addr}: {e}"))
+                })?;
+                return Ok((Listener::Unix(l), format!("unix:{path}")));
+            }
+            #[cfg(not(unix))]
+            return Err(TransportError::Protocol(format!(
+                "unix socket address {addr} unsupported on this platform"
+            )));
+        }
+        let l = TcpListener::bind(addr)
+            .map_err(|e| TransportError::Io(format!("bind {addr}: {e}")))?;
+        let actual = l
+            .local_addr()
+            .map_err(|e| TransportError::Io(e.to_string()))?;
+        Ok((Listener::Tcp(l), actual.to_string()))
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nodelay(true)?;
+                Ok(Stream::Tcp(s))
+            }
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                Ok(Stream::Unix(s))
+            }
+        }
+    }
+}
+
+enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn connect(addr: &str) -> std::io::Result<Stream> {
+        if is_unix(addr) {
+            #[cfg(unix)]
+            {
+                return Ok(Stream::Unix(UnixStream::connect(unix_path(addr))?));
+            }
+            #[cfg(not(unix))]
+            return Err(std::io::Error::new(
+                ErrorKind::Unsupported,
+                "unix sockets unsupported on this platform",
+            ));
+        }
+        let s = TcpStream::connect(addr)?;
+        s.set_nodelay(true)?;
+        Ok(Stream::Tcp(s))
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(nb),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_nonblocking(nb),
+        }
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+
+    fn read_exact(&mut self, buf: &mut [u8]) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.read_exact(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read_exact(buf),
+        }
+    }
+
+    fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.write_all(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write_all(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// `[magic u32][version u8][kind u8][from u32][to u32]`, little-endian.
+const HANDSHAKE_LEN: usize = 14;
+
+fn encode_handshake(id: LinkId) -> [u8; HANDSHAKE_LEN] {
+    let mut b = [0u8; HANDSHAKE_LEN];
+    b[0..4].copy_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
+    b[4] = WIRE_VERSION;
+    b[5] = id.kind.to_u8();
+    b[6..10].copy_from_slice(&id.from.to_le_bytes());
+    b[10..14].copy_from_slice(&id.to.to_le_bytes());
+    b
+}
+
+fn decode_handshake(b: &[u8; HANDSHAKE_LEN]) -> Result<LinkId, TransportError> {
+    let magic = u32::from_le_bytes(b[0..4].try_into().unwrap());
+    if magic != HANDSHAKE_MAGIC {
+        return Err(TransportError::Protocol(format!(
+            "bad handshake magic {magic:#x}"
+        )));
+    }
+    if b[4] != WIRE_VERSION {
+        return Err(TransportError::Protocol(format!(
+            "wire version {} != {}",
+            b[4], WIRE_VERSION
+        )));
+    }
+    Ok(LinkId {
+        kind: LinkKind::from_u8(b[5])?,
+        from: u32::from_le_bytes(b[6..10].try_into().unwrap()),
+        to: u32::from_le_bytes(b[10..14].try_into().unwrap()),
+    })
+}
+
+/// Sending half of a socket link; see the module docs for why writes
+/// run on their own thread.
+pub struct SocketTx {
+    queue: Option<Sender<Vec<u8>>>,
+    scratch: Receiver<Vec<u8>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl SocketTx {
+    fn spawn(mut stream: Stream, id: LinkId) -> SocketTx {
+        let (q_tx, q_rx) = channel::<Vec<u8>>();
+        let (back_tx, back_rx) = channel::<Vec<u8>>();
+        let handle = std::thread::Builder::new()
+            .name(format!("net-tx-{}-{}", id.from, id.to))
+            .spawn(move || {
+                while let Ok(buf) = q_rx.recv() {
+                    if stream.write_all(&buf).is_err() {
+                        // peer gone: drain silently; send() learns of
+                        // the death when the queue closes on our exit
+                        break;
+                    }
+                    let _ = back_tx.send(buf);
+                }
+                let _ = stream.flush();
+            })
+            .expect("spawn net-tx thread");
+        SocketTx {
+            queue: Some(q_tx),
+            scratch: back_rx,
+            handle: Some(handle),
+        }
+    }
+}
+
+impl FrameTx for SocketTx {
+    fn send(&mut self, frame: Frame, pool: &mut PayloadPool)
+            -> Result<(), TransportError> {
+        let mut buf = match self.scratch.try_recv() {
+            Ok(b) => b,
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => {
+                Vec::new()
+            }
+        };
+        encode_frame(&frame, &mut buf);
+        pool.recycle(frame);
+        match &self.queue {
+            Some(q) => {
+                q.send(buf).map_err(|_| TransportError::Disconnected)
+            }
+            None => Err(TransportError::Disconnected),
+        }
+    }
+
+    fn remote(&self) -> bool {
+        true
+    }
+}
+
+impl Drop for SocketTx {
+    fn drop(&mut self) {
+        // closing the queue ends the writer loop; join so queued frames
+        // reach the wire before the link (or process) goes away
+        self.queue.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Receiving half of a socket link.
+pub struct SocketRx {
+    stream: Stream,
+    timeout_s: f64,
+    buf: Vec<u8>,
+}
+
+impl SocketRx {
+    fn new(stream: Stream, timeout_s: f64) -> Result<SocketRx, TransportError> {
+        let d = if timeout_s > 0.0 {
+            Some(Duration::from_secs_f64(timeout_s))
+        } else {
+            None
+        };
+        stream.set_read_timeout(d).map_err(io_err)?;
+        Ok(SocketRx { stream, timeout_s, buf: Vec::new() })
+    }
+
+    fn map(&self, e: std::io::Error) -> TransportError {
+        match io_err(e) {
+            TransportError::Timeout(_) => {
+                TransportError::Timeout(self.timeout_s)
+            }
+            other => other,
+        }
+    }
+}
+
+impl FrameRx for SocketRx {
+    fn recv(&mut self, pool: &mut PayloadPool)
+            -> Result<Frame, TransportError> {
+        let mut len = [0u8; 4];
+        self.stream.read_exact(&mut len).map_err(|e| self.map(e))?;
+        let body_len = u32::from_le_bytes(len) as usize;
+        if body_len == 0 || body_len > MAX_FRAME {
+            return Err(TransportError::Protocol(format!(
+                "frame length {body_len} outside 1..={MAX_FRAME}"
+            )));
+        }
+        self.buf.resize(body_len, 0);
+        self.stream
+            .read_exact(&mut self.buf)
+            .map_err(|e| self.map(e))?;
+        decode_frame(&self.buf, pool)
+    }
+
+    fn remote(&self) -> bool {
+        true
+    }
+}
+
+/// Multi-process transport over TCP or Unix sockets.
+pub struct SocketTransport {
+    world: usize,
+    local: Range<usize>,
+    per_proc: usize,
+    index: usize,
+    peers: Vec<String>,
+    listener: Listener,
+    /// Accepted-but-not-yet-claimed connections, keyed by handshake.
+    pending: HashMap<LinkId, Stream>,
+    timeout_s: f64,
+    /// Unix socket path to unlink on drop.
+    sock_path: Option<PathBuf>,
+}
+
+impl SocketTransport {
+    /// Static host-list discovery: `peers` is the identical ordered
+    /// address list every process was launched with; `listen` must
+    /// appear in it (that position is this process's index).
+    pub fn with_hosts(world: usize, listen: &str, peers: Vec<String>,
+                      timeout_s: f64)
+                      -> Result<SocketTransport, TransportError> {
+        let index = peers.iter().position(|p| p == listen).ok_or_else(|| {
+            TransportError::Protocol(format!(
+                "--listen {listen} does not appear in --connect list \
+                 {peers:?}"
+            ))
+        })?;
+        let (listener, _actual) = Listener::bind(listen)?;
+        Self::finish(world, peers, index, listener, listen, timeout_s)
+    }
+
+    /// Rendezvous-file discovery: bind first (TCP port 0 is resolved to
+    /// the real port before publishing), append our address, poll until
+    /// `nprocs` lines exist; our line number is our process index.
+    pub fn with_rendezvous(world: usize, listen: &str, file: &str,
+                           nprocs: usize, timeout_s: f64)
+                           -> Result<SocketTransport, TransportError> {
+        if nprocs == 0 {
+            return Err(TransportError::Protocol(
+                "--nprocs must be >= 1".into(),
+            ));
+        }
+        let (listener, actual) = Listener::bind(listen)?;
+        {
+            use std::fs::OpenOptions;
+            let mut f = OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(file)
+                .map_err(|e| {
+                    TransportError::Io(format!("rendezvous {file}: {e}"))
+                })?;
+            // one O_APPEND write per process: lines never interleave
+            writeln!(f, "{actual}").map_err(|e| {
+                TransportError::Io(format!("rendezvous {file}: {e}"))
+            })?;
+        }
+        let deadline = Instant::now()
+            + Duration::from_secs_f64(timeout_s).max(MIN_SETUP);
+        let peers = loop {
+            let text = std::fs::read_to_string(file).map_err(|e| {
+                TransportError::Io(format!("rendezvous {file}: {e}"))
+            })?;
+            let lines: Vec<String> = text
+                .lines()
+                .map(|l| l.trim().to_string())
+                .filter(|l| !l.is_empty())
+                .collect();
+            if lines.len() >= nprocs {
+                break lines;
+            }
+            if Instant::now() > deadline {
+                return Err(TransportError::Timeout(timeout_s));
+            }
+            std::thread::sleep(POLL);
+        };
+        if peers.len() > nprocs {
+            return Err(TransportError::Protocol(format!(
+                "rendezvous file {file} has {} addresses for --nprocs \
+                 {nprocs}; stale file from a previous run?",
+                peers.len()
+            )));
+        }
+        let mine: Vec<usize> = peers
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| **p == actual)
+            .map(|(i, _)| i)
+            .collect();
+        let index = match mine.as_slice() {
+            [i] => *i,
+            [] => {
+                return Err(TransportError::Protocol(format!(
+                    "own address {actual} missing from rendezvous file \
+                     {file}"
+                )))
+            }
+            _ => {
+                return Err(TransportError::Protocol(format!(
+                    "own address {actual} appears twice in rendezvous file \
+                     {file}; stale file from a previous run?"
+                )))
+            }
+        };
+        Self::finish(world, peers, index, listener, &actual, timeout_s)
+    }
+
+    fn finish(world: usize, peers: Vec<String>, index: usize,
+              listener: Listener, listen: &str, timeout_s: f64)
+              -> Result<SocketTransport, TransportError> {
+        let nprocs = peers.len();
+        if world == 0 || nprocs == 0 || world % nprocs != 0 {
+            return Err(TransportError::Protocol(format!(
+                "world {world} does not split evenly over {nprocs} \
+                 processes"
+            )));
+        }
+        let per_proc = world / nprocs;
+        let sock_path = if is_unix(listen) {
+            Some(PathBuf::from(unix_path(listen)))
+        } else {
+            None
+        };
+        Ok(SocketTransport {
+            world,
+            local: index * per_proc..(index + 1) * per_proc,
+            per_proc,
+            index,
+            peers,
+            listener,
+            pending: HashMap::new(),
+            timeout_s,
+            sock_path,
+        })
+    }
+
+    /// Which process hosts `rank`.
+    fn process_of(&self, rank: u32) -> usize {
+        rank as usize / self.per_proc
+    }
+
+    fn setup_deadline(&self) -> Instant {
+        Instant::now() + Duration::from_secs_f64(self.timeout_s).max(MIN_SETUP)
+    }
+
+    /// Dial the process hosting `id.to`, retrying while it may still be
+    /// starting up, then identify the edge with a handshake.
+    fn dial(&self, id: LinkId) -> Result<Stream, TransportError> {
+        let addr = &self.peers[self.process_of(id.to)];
+        let deadline = self.setup_deadline();
+        let mut stream = loop {
+            match Stream::connect(addr) {
+                Ok(s) => break s,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        ErrorKind::ConnectionRefused
+                            | ErrorKind::NotFound
+                            | ErrorKind::AddrNotAvailable
+                    ) =>
+                {
+                    if Instant::now() > deadline {
+                        return Err(TransportError::Io(format!(
+                            "dial {addr} for {id:?}: {e}"
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => {
+                    return Err(TransportError::Io(format!(
+                        "dial {addr} for {id:?}: {e}"
+                    )))
+                }
+            }
+        };
+        stream
+            .write_all(&encode_handshake(id))
+            .map_err(io_err)?;
+        stream.flush().map_err(io_err)?;
+        Ok(stream)
+    }
+
+    /// Accept until the connection whose handshake names `id` arrives;
+    /// strangers for other edges are parked in `pending`.
+    fn accept_match(&mut self, id: LinkId) -> Result<Stream, TransportError> {
+        if let Some(s) = self.pending.remove(&id) {
+            return Ok(s);
+        }
+        let deadline = self.setup_deadline();
+        self.listener.set_nonblocking(true).map_err(io_err)?;
+        loop {
+            match self.listener.accept() {
+                Ok(stream) => {
+                    stream.set_nonblocking(false).map_err(io_err)?;
+                    stream
+                        .set_read_timeout(Some(
+                            Duration::from_secs_f64(self.timeout_s)
+                                .max(MIN_SETUP),
+                        ))
+                        .map_err(io_err)?;
+                    let mut hs = [0u8; HANDSHAKE_LEN];
+                    let mut s = stream;
+                    s.read_exact(&mut hs).map_err(io_err)?;
+                    let got = decode_handshake(&hs)?;
+                    if got == id {
+                        return Ok(s);
+                    }
+                    self.pending.insert(got, s);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() > deadline {
+                        return Err(TransportError::Timeout(self.timeout_s));
+                    }
+                    std::thread::sleep(POLL);
+                }
+                Err(e) => return Err(io_err(e)),
+            }
+        }
+    }
+
+    /// This process's index in the peer list.
+    pub fn process_index(&self) -> usize {
+        self.index
+    }
+
+    /// Total processes in the run.
+    pub fn nprocs(&self) -> usize {
+        self.peers.len()
+    }
+}
+
+impl Transport for SocketTransport {
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn local_ranks(&self) -> Range<usize> {
+        self.local.clone()
+    }
+
+    fn link(&mut self, id: LinkId) -> Result<LinkEnds, TransportError> {
+        let from_local = self.local.contains(&(id.from as usize));
+        let to_local = self.local.contains(&(id.to as usize));
+        if from_local && to_local {
+            // both ends in-process: same zero-copy channel as InProc
+            let (tx, rx) = super::transport::chan_link();
+            return Ok(LinkEnds { tx: Some(tx), rx: Some(rx) });
+        }
+        if from_local {
+            let stream = self.dial(id)?;
+            return Ok(LinkEnds {
+                tx: Some(Box::new(SocketTx::spawn(stream, id))),
+                rx: None,
+            });
+        }
+        if to_local {
+            let stream = self.accept_match(id)?;
+            return Ok(LinkEnds {
+                tx: None,
+                rx: Some(Box::new(SocketRx::new(stream, self.timeout_s)?)),
+            });
+        }
+        Err(TransportError::Protocol(format!(
+            "link {id:?} touches no local rank \
+             (local {:?})",
+            self.local
+        )))
+    }
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        if let Some(p) = &self.sock_path {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_classification() {
+        assert!(is_unix("unix:/tmp/x.sock"));
+        assert!(is_unix("/tmp/x.sock"));
+        assert!(!is_unix("127.0.0.1:4000"));
+        assert!(!is_unix("node7:4000"));
+        assert_eq!(unix_path("unix:/tmp/x.sock"), "/tmp/x.sock");
+        assert_eq!(unix_path("/tmp/x.sock"), "/tmp/x.sock");
+    }
+
+    #[test]
+    fn handshake_round_trips() {
+        let id = LinkId { kind: LinkKind::LeaderRing, from: 6, to: 2 };
+        let b = encode_handshake(id);
+        assert_eq!(decode_handshake(&b).unwrap(), id);
+        let mut bad = b;
+        bad[0] ^= 0xff;
+        assert!(matches!(decode_handshake(&bad),
+                         Err(TransportError::Protocol(_))));
+    }
+
+    #[test]
+    fn world_must_split_evenly() {
+        let err = SocketTransport::with_hosts(
+            3,
+            "127.0.0.1:0",
+            vec!["127.0.0.1:0".into(), "127.0.0.1:1".into()],
+            1.0,
+        )
+        .err()
+        .expect("3 ranks over 2 procs must fail");
+        assert!(matches!(err, TransportError::Protocol(_)));
+    }
+
+    #[test]
+    fn listen_must_appear_in_peer_list() {
+        let err = SocketTransport::with_hosts(
+            2,
+            "127.0.0.1:59999",
+            vec!["10.0.0.1:4000".into(), "10.0.0.2:4000".into()],
+            1.0,
+        )
+        .err()
+        .expect("listen addr absent from peers must fail");
+        assert!(matches!(err, TransportError::Protocol(_)));
+    }
+
+    #[test]
+    fn loopback_pair_exchanges_frames() {
+        // Two single-rank "processes" on two threads: flat ring world=2.
+        let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a0 = l0.local_addr().unwrap().to_string();
+        let a1 = l1.local_addr().unwrap().to_string();
+        drop(l0);
+        drop(l1);
+        let peers = vec![a0.clone(), a1.clone()];
+
+        let mk = |listen: String, peers: Vec<String>| {
+            move || -> Vec<f32> {
+                let mut t =
+                    SocketTransport::with_hosts(2, &listen, peers, 5.0)
+                        .expect("transport");
+                let me = t.process_index() as u32;
+                let other = 1 - me;
+                let mut pool = PayloadPool::default();
+                // deterministic global link order: 0->1 then 1->0
+                let ids = [
+                    LinkId { kind: LinkKind::FlatRing, from: 0, to: 1 },
+                    LinkId { kind: LinkKind::FlatRing, from: 1, to: 0 },
+                ];
+                let mut tx = None;
+                let mut rx = None;
+                for id in ids {
+                    let ends = t.link(id).expect("link");
+                    if id.from == me {
+                        tx = ends.tx;
+                    }
+                    if id.to == me {
+                        rx = ends.rx;
+                    }
+                }
+                let (mut tx, mut rx) = (tx.unwrap(), rx.unwrap());
+                assert!(tx.remote() && rx.remote());
+                tx.send(
+                    Frame::RingF32 {
+                        tag: me,
+                        data: vec![me as f32, 10.0 + me as f32],
+                    },
+                    &mut pool,
+                )
+                .expect("send");
+                match rx.recv(&mut pool).expect("recv") {
+                    Frame::RingF32 { tag, data } => {
+                        assert_eq!(tag, other);
+                        data
+                    }
+                    other => panic!("wrong frame {other:?}"),
+                }
+            }
+        };
+
+        let h0 = std::thread::spawn(mk(a0, peers.clone()));
+        let h1 = std::thread::spawn(mk(a1, peers));
+        let d0 = h0.join().expect("proc 0");
+        let d1 = h1.join().expect("proc 1");
+        assert_eq!(d0, vec![1.0, 11.0]);
+        assert_eq!(d1, vec![0.0, 10.0]);
+    }
+
+    #[test]
+    fn recv_times_out_when_peer_goes_quiet() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let dialer = std::thread::spawn(move || {
+            // connect and then send nothing, keeping the socket open
+            let s = TcpStream::connect(addr).unwrap();
+            std::thread::sleep(Duration::from_millis(800));
+            drop(s);
+        });
+        let (s, _) = l.accept().unwrap();
+        let mut rx =
+            SocketRx::new(Stream::Tcp(s), 0.2).expect("rx");
+        let mut pool = PayloadPool::default();
+        let t0 = Instant::now();
+        match rx.recv(&mut pool) {
+            Err(TransportError::Timeout(s)) => {
+                assert!((s - 0.2).abs() < 1e-9);
+            }
+            other => panic!("expected timeout, got {other:?}"),
+        }
+        assert!(t0.elapsed() < Duration::from_millis(700));
+        dialer.join().unwrap();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn rendezvous_assigns_indices_by_line_order() {
+        let dir = crate::testkit::tmp_dir("rdzv");
+        let file = dir.join("peers.txt");
+        let file_s = file.to_string_lossy().to_string();
+        let mk = |sock: String, file: String| {
+            move || {
+                let t = SocketTransport::with_rendezvous(
+                    2, &sock, &file, 2, 5.0,
+                )
+                .expect("rendezvous transport");
+                (t.process_index(), t.local_ranks())
+            }
+        };
+        let s0 = dir.join("p0.sock").to_string_lossy().to_string();
+        let s1 = dir.join("p1.sock").to_string_lossy().to_string();
+        let h0 = std::thread::spawn(mk(s0, file_s.clone()));
+        let h1 = std::thread::spawn(mk(s1, file_s));
+        let (i0, r0) = h0.join().unwrap();
+        let (i1, r1) = h1.join().unwrap();
+        assert_ne!(i0, i1);
+        let mut ranges = [r0, r1];
+        ranges.sort_by_key(|r| r.start);
+        assert_eq!(ranges, [0..1, 1..2]);
+    }
+}

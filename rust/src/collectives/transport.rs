@@ -1,0 +1,1021 @@
+//! Pluggable transport for the collective pool (the "take the pool
+//! out-of-process" refactor from the ROADMAP).
+//!
+//! The pool's comm workers used to talk over hard-wired
+//! `std::sync::mpsc` channels carrying ad-hoc message enums.  This
+//! module extracts that plumbing into three layers:
+//!
+//! 1. **[`Frame`] + wire codec** — the canonical on-the-wire unit.  One
+//!    enum covers every payload the comm protocols exchange (ring
+//!    reduce-scatter/all-gather hops in f32 or f16, member bucket
+//!    uploads, leader broadcasts, chunked chain hops).  The v1 binary
+//!    layout is little-endian and length-prefixed so a reader can frame
+//!    a stream without knowing the kind in advance; it is pinned by the
+//!    `golden_frame_v1.bin` fixture the same way `golden_v1.bckp` pins
+//!    checkpoints.
+//! 2. **[`FrameTx`]/[`FrameRx`] links** — one directed edge of the comm
+//!    graph.  The in-process implementation wraps an mpsc channel and
+//!    moves `Frame`s without serialization; the socket implementation
+//!    (see [`super::socket`]) encodes to the v1 layout.  Both recycle
+//!    payload buffers through a [`PayloadPool`] so the steady state
+//!    stays free of gradient-sized allocation — the PR-1 invariant.
+//! 3. **[`Transport`] + [`build_endpoints`]** — owns the mapping from
+//!    topology to links.  [`build_endpoints`] enumerates every edge of
+//!    the comm graph in one deterministic global order (flat ring, or
+//!    the hierarchical member/leader/chain graph) and asks the
+//!    transport for each link's ends, producing a [`CommEndpoints`]
+//!    role bundle per *local* rank.  A transport that only hosts a
+//!    slice of the world (a multi-process run) returns remote halves
+//!    backed by sockets and simply skips links it does not touch.
+//!
+//! # Determinism
+//!
+//! Nothing in this module reorders arithmetic: the reduction order is
+//! fixed by the ring/chain schedules in `pool.rs`, and a frame's
+//! payload is bit-identical whether it crossed a channel or a socket
+//! (f32/f16 little-endian round-trip is exact).  Pooled exchange over
+//! `InProcTransport`, `SocketTransport`, and the spawn baseline is
+//! asserted bitwise-equal in `tests/transport.rs`.
+//!
+//! # Failure surfaces
+//!
+//! Every send/recv returns [`TransportError`] instead of panicking.
+//! Links also carry a [`FrameRx::remote`] bit: protocols may tolerate a
+//! *local* peer's disconnect (its own rank reports the failure — the
+//! PR-2 policy), but a **remote** disconnect must propagate, because
+//! the dead peer's process can no longer report anything on our result
+//! channel.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::ops::Range;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use crate::half::F16;
+use crate::topology::Topology;
+
+/// Sanity cap on a decoded frame body; anything larger is a corrupt or
+/// hostile length prefix, not a gradient bucket.
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// Wire-format version emitted by [`encode_frame`]; bumped only with a
+/// new golden fixture.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Connection-handshake magic ("BDTP" little-endian) — lets a listener
+/// reject strays that are not a bertdist peer before trusting a length
+/// prefix.
+pub const HANDSHAKE_MAGIC: u32 = 0x5054_4442;
+
+// ---------------------------------------------------------------------------
+// errors
+// ---------------------------------------------------------------------------
+
+/// Failure surfaced by a transport link or by endpoint wiring.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TransportError {
+    /// Peer hung up (channel dropped, socket EOF/reset).
+    Disconnected,
+    /// No frame arrived within the configured receive window (seconds).
+    Timeout(f64),
+    /// The bytes/topology were structurally wrong (bad magic, unknown
+    /// frame kind, oversized length, misaligned world split, ...).
+    Protocol(String),
+    /// An OS-level I/O error that is none of the above.
+    Io(String),
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Disconnected => write!(f, "peer disconnected"),
+            TransportError::Timeout(s) => {
+                write!(f, "no frame within {s:.1}s (net timeout)")
+            }
+            TransportError::Protocol(m) => write!(f, "protocol error: {m}"),
+            TransportError::Io(m) => write!(f, "io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+// ---------------------------------------------------------------------------
+// frames + codec
+// ---------------------------------------------------------------------------
+
+/// One unit of comm-protocol traffic.  Variants mirror the messages the
+/// pool's protocols exchange; `net_s` fields carry upstream link time
+/// so downstream ranks can attribute network vs PCIe spans exactly as
+/// the in-process path always has.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Ring hop (reduce-scatter tag `s`, all-gather tag `100+s`), f32.
+    RingF32 { tag: u32, data: Vec<f32> },
+    /// Ring hop with the f16 wire format.
+    RingF16 { tag: u32, data: Vec<u16> },
+    /// Member → leader bucket upload (hierarchical serial gather).
+    Bucket { idx: u32, data: Vec<f32> },
+    /// Leader → member bucket broadcast; `net_s` is the leader-ring
+    /// time the member folds into its own net span.
+    Bcast { idx: u32, net_s: f64, data: Vec<f32> },
+    /// Chunked-chain hop (up = reduce-forward, down = copy-forward).
+    Chunk { idx: u32, chunk: u32, net_s: f64, data: Vec<f32> },
+}
+
+impl Frame {
+    /// v1 kind byte.
+    fn kind(&self) -> u8 {
+        match self {
+            Frame::RingF32 { .. } => 1,
+            Frame::RingF16 { .. } => 2,
+            Frame::Bucket { .. } => 3,
+            Frame::Bcast { .. } => 4,
+            Frame::Chunk { .. } => 5,
+        }
+    }
+}
+
+/// Free-list of payload buffers, one per element type.  Links take
+/// buffers from here when materializing a received frame and protocols
+/// return them via [`PayloadPool::recycle`]; after warm-up no
+/// gradient-sized allocation happens on the hot path.
+#[derive(Default)]
+pub struct PayloadPool {
+    f32s: Vec<Vec<f32>>,
+    u16s: Vec<Vec<u16>>,
+}
+
+impl PayloadPool {
+    /// Pop a cleared f32 buffer (or allocate on a cold pool).
+    pub fn take_f32(&mut self) -> Vec<f32> {
+        let mut v = self.f32s.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    /// Pop a cleared u16 buffer (or allocate on a cold pool).
+    pub fn take_u16(&mut self) -> Vec<u16> {
+        let mut v = self.u16s.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    /// Return an f32 buffer to the free list.
+    pub fn put_f32(&mut self, mut v: Vec<f32>) {
+        v.clear();
+        self.f32s.push(v);
+    }
+
+    /// Return a u16 buffer to the free list.
+    pub fn put_u16(&mut self, mut v: Vec<u16>) {
+        v.clear();
+        self.u16s.push(v);
+    }
+
+    /// Strip a frame and recycle its payload buffer.
+    pub fn recycle(&mut self, frame: Frame) {
+        match frame {
+            Frame::RingF32 { data, .. }
+            | Frame::Bucket { data, .. }
+            | Frame::Bcast { data, .. }
+            | Frame::Chunk { data, .. } => self.put_f32(data),
+            Frame::RingF16 { data, .. } => self.put_u16(data),
+        }
+    }
+}
+
+/// Serialize `frame` into `out` in the v1 layout:
+/// `[body_len: u32][kind: u8][fields...][payload bytes]`, all
+/// little-endian, where `body_len` counts everything after itself.
+/// `out` is cleared first so callers can recycle byte buffers.
+pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) {
+    out.clear();
+    out.extend_from_slice(&0u32.to_le_bytes()); // patched below
+    out.push(frame.kind());
+    match frame {
+        Frame::RingF32 { tag, data } => {
+            out.extend_from_slice(&tag.to_le_bytes());
+            for x in data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Frame::RingF16 { tag, data } => {
+            out.extend_from_slice(&tag.to_le_bytes());
+            for x in data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Frame::Bucket { idx, data } => {
+            out.extend_from_slice(&idx.to_le_bytes());
+            for x in data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Frame::Bcast { idx, net_s, data } => {
+            out.extend_from_slice(&idx.to_le_bytes());
+            out.extend_from_slice(&net_s.to_le_bytes());
+            for x in data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Frame::Chunk { idx, chunk, net_s, data } => {
+            out.extend_from_slice(&idx.to_le_bytes());
+            out.extend_from_slice(&chunk.to_le_bytes());
+            out.extend_from_slice(&net_s.to_le_bytes());
+            for x in data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    let body = (out.len() - 4) as u32;
+    out[0..4].copy_from_slice(&body.to_le_bytes());
+}
+
+fn need_bytes(body: &[u8], at: usize, n: usize)
+              -> Result<(), TransportError> {
+    if body.len() < at + n {
+        return Err(TransportError::Protocol(format!(
+            "frame body truncated: need {} bytes at offset {at}, have {}",
+            n,
+            body.len()
+        )));
+    }
+    Ok(())
+}
+
+fn read_u32(body: &[u8], at: usize) -> Result<u32, TransportError> {
+    need_bytes(body, at, 4)?;
+    Ok(u32::from_le_bytes(body[at..at + 4].try_into().unwrap()))
+}
+
+fn read_f64(body: &[u8], at: usize) -> Result<f64, TransportError> {
+    need_bytes(body, at, 8)?;
+    Ok(f64::from_le_bytes(body[at..at + 8].try_into().unwrap()))
+}
+
+fn payload_f32(body: &[u8], at: usize, pool: &mut PayloadPool)
+               -> Result<Vec<f32>, TransportError> {
+    let rest = &body[at..];
+    if rest.len() % 4 != 0 {
+        return Err(TransportError::Protocol(format!(
+            "f32 payload length {} not a multiple of 4",
+            rest.len()
+        )));
+    }
+    let mut v = pool.take_f32();
+    v.reserve(rest.len() / 4);
+    for c in rest.chunks_exact(4) {
+        v.push(f32::from_le_bytes(c.try_into().unwrap()));
+    }
+    Ok(v)
+}
+
+fn payload_u16(body: &[u8], at: usize, pool: &mut PayloadPool)
+               -> Result<Vec<u16>, TransportError> {
+    let rest = &body[at..];
+    if rest.len() % 2 != 0 {
+        return Err(TransportError::Protocol(format!(
+            "u16 payload length {} not a multiple of 2",
+            rest.len()
+        )));
+    }
+    let mut v = pool.take_u16();
+    v.reserve(rest.len() / 2);
+    for c in rest.chunks_exact(2) {
+        v.push(u16::from_le_bytes(c.try_into().unwrap()));
+    }
+    Ok(v)
+}
+
+/// Decode one v1 frame *body* (everything after the 4-byte length
+/// prefix).  Payload buffers come from `pool`.
+pub fn decode_frame(body: &[u8], pool: &mut PayloadPool)
+                    -> Result<Frame, TransportError> {
+    need_bytes(body, 0, 1)?;
+    match body[0] {
+        1 => Ok(Frame::RingF32 {
+            tag: read_u32(body, 1)?,
+            data: payload_f32(body, 5, pool)?,
+        }),
+        2 => Ok(Frame::RingF16 {
+            tag: read_u32(body, 1)?,
+            data: payload_u16(body, 5, pool)?,
+        }),
+        3 => Ok(Frame::Bucket {
+            idx: read_u32(body, 1)?,
+            data: payload_f32(body, 5, pool)?,
+        }),
+        4 => Ok(Frame::Bcast {
+            idx: read_u32(body, 1)?,
+            net_s: read_f64(body, 5)?,
+            data: payload_f32(body, 13, pool)?,
+        }),
+        5 => Ok(Frame::Chunk {
+            idx: read_u32(body, 1)?,
+            chunk: read_u32(body, 5)?,
+            net_s: read_f64(body, 9)?,
+            data: payload_f32(body, 17, pool)?,
+        }),
+        k => Err(TransportError::Protocol(format!("unknown frame kind {k}"))),
+    }
+}
+
+/// Quantize a frame payload chunk to the f16 wire exactly as the
+/// in-process path does; centralized here so both transports share one
+/// rounding routine (bitwise determinism across transports).
+pub fn quantize_f16(src: &[f32], out: &mut Vec<u16>) {
+    out.clear();
+    out.reserve(src.len());
+    for &x in src {
+        out.push(F16::from_f32(x).0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// links
+// ---------------------------------------------------------------------------
+
+/// Sending half of one directed comm-graph edge.
+pub trait FrameTx: Send {
+    /// Queue `frame` for delivery.  The payload buffer is recycled into
+    /// `pool` when the transport is done with it (immediately for
+    /// serializing transports; on the receiver side for in-process
+    /// moves, so in-proc sends leave `pool` untouched).
+    fn send(&mut self, frame: Frame, pool: &mut PayloadPool)
+            -> Result<(), TransportError>;
+
+    /// True when the other end lives in a different process.  Protocols
+    /// use this to decide whether a peer failure can be tolerated
+    /// locally (the peer's own rank reports it) or must propagate.
+    fn remote(&self) -> bool {
+        false
+    }
+}
+
+/// Receiving half of one directed comm-graph edge.
+pub trait FrameRx: Send {
+    /// Block until the next frame (or the configured timeout elapses).
+    fn recv(&mut self, pool: &mut PayloadPool)
+            -> Result<Frame, TransportError>;
+
+    /// See [`FrameTx::remote`].
+    fn remote(&self) -> bool {
+        false
+    }
+}
+
+/// In-process link: a zero-copy mpsc move, exactly the pre-refactor
+/// wiring.
+pub struct ChanTx(Sender<Frame>);
+
+impl FrameTx for ChanTx {
+    fn send(&mut self, frame: Frame, _pool: &mut PayloadPool)
+            -> Result<(), TransportError> {
+        self.0.send(frame).map_err(|_| TransportError::Disconnected)
+    }
+}
+
+/// Receiving half of [`ChanTx`].
+pub struct ChanRx(Receiver<Frame>);
+
+impl FrameRx for ChanRx {
+    fn recv(&mut self, _pool: &mut PayloadPool)
+            -> Result<Frame, TransportError> {
+        self.0.recv().map_err(|_| TransportError::Disconnected)
+    }
+}
+
+/// Build one in-process link (unbounded, never blocks on send).
+pub fn chan_link() -> (Box<dyn FrameTx>, Box<dyn FrameRx>) {
+    let (tx, rx) = channel();
+    (Box::new(ChanTx(tx)), Box::new(ChanRx(rx)))
+}
+
+// ---------------------------------------------------------------------------
+// link identity + transport
+// ---------------------------------------------------------------------------
+
+/// Which protocol edge a link implements.  Part of the connection
+/// handshake, so a transport can match incoming sockets to graph edges
+/// regardless of connect order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    /// Flat-ring neighbor edge `r -> (r+1) % world`.
+    FlatRing,
+    /// Leader-ring neighbor edge between machine leaders.
+    LeaderRing,
+    /// Serial gather: member -> its leader.
+    MemberUp,
+    /// Serial broadcast: leader -> member.
+    MemberDown,
+    /// Chunked chain reduce-forward: local rank `l -> l-1`.
+    ChainUp,
+    /// Chunked chain copy-forward: local rank `l-1 -> l`.
+    ChainDown,
+}
+
+impl LinkKind {
+    /// Handshake byte.
+    pub fn to_u8(self) -> u8 {
+        match self {
+            LinkKind::FlatRing => 0,
+            LinkKind::LeaderRing => 1,
+            LinkKind::MemberUp => 2,
+            LinkKind::MemberDown => 3,
+            LinkKind::ChainUp => 4,
+            LinkKind::ChainDown => 5,
+        }
+    }
+
+    /// Inverse of [`LinkKind::to_u8`].
+    pub fn from_u8(b: u8) -> Result<Self, TransportError> {
+        Ok(match b {
+            0 => LinkKind::FlatRing,
+            1 => LinkKind::LeaderRing,
+            2 => LinkKind::MemberUp,
+            3 => LinkKind::MemberDown,
+            4 => LinkKind::ChainUp,
+            5 => LinkKind::ChainDown,
+            k => {
+                return Err(TransportError::Protocol(format!(
+                    "unknown link kind {k}"
+                )))
+            }
+        })
+    }
+}
+
+/// One directed edge of the comm graph, named by global ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LinkId {
+    /// Protocol role of the edge.
+    pub kind: LinkKind,
+    /// Sending global rank.
+    pub from: u32,
+    /// Receiving global rank.
+    pub to: u32,
+}
+
+/// The ends of a link that this process hosts.  A fully-local transport
+/// returns both; a multi-process transport returns only the half whose
+/// rank is local.
+pub struct LinkEnds {
+    /// Present iff `from` is a local rank.
+    pub tx: Option<Box<dyn FrameTx>>,
+    /// Present iff `to` is a local rank.
+    pub rx: Option<Box<dyn FrameRx>>,
+}
+
+/// Owns the mapping from comm-graph edges to concrete links.
+///
+/// `link` may be called more than once per edge across a transport's
+/// lifetime (the trainer rebuilds pools between phases over ONE
+/// transport); each call produces a fresh link.
+pub trait Transport {
+    /// Total ranks across all processes.
+    fn world(&self) -> usize;
+
+    /// Contiguous global-rank range hosted by this process.
+    fn local_ranks(&self) -> Range<usize>;
+
+    /// True when every rank is in-process (no socket ever involved).
+    fn fully_local(&self) -> bool {
+        self.local_ranks().len() == self.world()
+    }
+
+    /// Produce the local end(s) of `id`.  Called in the same
+    /// deterministic global order by every process (see
+    /// [`build_endpoints`]); edges with no local end are never passed.
+    fn link(&mut self, id: LinkId) -> Result<LinkEnds, TransportError>;
+}
+
+/// Default transport: the whole world in one process, links are plain
+/// channels — behaviorally identical to the pre-refactor pool.
+pub struct InProcTransport {
+    world: usize,
+}
+
+impl InProcTransport {
+    /// A fully in-process world of `world` ranks.
+    pub fn new(world: usize) -> Self {
+        InProcTransport { world }
+    }
+}
+
+impl Transport for InProcTransport {
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn local_ranks(&self) -> Range<usize> {
+        0..self.world
+    }
+
+    fn link(&mut self, _id: LinkId) -> Result<LinkEnds, TransportError> {
+        let (tx, rx) = chan_link();
+        Ok(LinkEnds { tx: Some(tx), rx: Some(rx) })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// endpoint wiring
+// ---------------------------------------------------------------------------
+
+/// Per-rank bundle of link ends, one variant per comm-protocol role.
+/// This is the boxed-transport successor of the pool's old private
+/// `CommWiring` enum; `pool.rs` consumes it in `comm_worker`.
+pub enum CommEndpoints {
+    /// Flat-ring participant (also the world==1 degenerate case).
+    Flat {
+        /// Global rank.
+        rank: usize,
+        /// Ring size (== world).
+        ring_size: usize,
+        /// Whether ring hops count as network time for metrics.
+        net: bool,
+        /// To `(rank+1) % world`.
+        tx_next: Box<dyn FrameTx>,
+        /// From `(rank-1) % world`.
+        rx_prev: Box<dyn FrameRx>,
+    },
+    /// Hierarchical serial-mode node leader.
+    Leader {
+        /// Machine index.
+        machine: usize,
+        /// Machine count (leader-ring size).
+        machines: usize,
+        /// From members, in local-rank order `1..g`.
+        member_rxs: Vec<Box<dyn FrameRx>>,
+        /// To members, same order.
+        member_txs: Vec<Box<dyn FrameTx>>,
+        /// Leader ring, to next machine's leader.
+        tx_next: Box<dyn FrameTx>,
+        /// Leader ring, from previous machine's leader.
+        rx_prev: Box<dyn FrameRx>,
+    },
+    /// Hierarchical serial-mode member.
+    Member {
+        /// Bucket uploads to the leader.
+        to_leader: Box<dyn FrameTx>,
+        /// Broadcasts back from the leader.
+        from_leader: Box<dyn FrameRx>,
+    },
+    /// Chunked-chain node leader (local rank 0).
+    ChainLeader {
+        /// Machine index.
+        machine: usize,
+        /// Machine count.
+        machines: usize,
+        /// Pipeline chunk size in elements.
+        chunk_elems: usize,
+        /// Reduce-forward chunks arriving from local rank 1.
+        up_rx: Box<dyn FrameRx>,
+        /// Copy-forward chunks departing to local rank 1.
+        down_tx: Box<dyn FrameTx>,
+        /// Leader ring, to next machine's leader.
+        tx_next: Box<dyn FrameTx>,
+        /// Leader ring, from previous machine's leader.
+        rx_prev: Box<dyn FrameRx>,
+    },
+    /// Chunked-chain member (local rank `1..g`).
+    ChainMember {
+        /// Pipeline chunk size in elements.
+        chunk_elems: usize,
+        /// From local rank `l+1` (None at the chain tail).
+        up_rx: Option<Box<dyn FrameRx>>,
+        /// To local rank `l-1`.
+        up_tx: Box<dyn FrameTx>,
+        /// From local rank `l-1`.
+        down_rx: Box<dyn FrameRx>,
+        /// To local rank `l+1` (None at the chain tail).
+        down_tx: Option<Box<dyn FrameTx>>,
+    },
+}
+
+/// Scratch used while distributing link ends to ranks.
+#[derive(Default)]
+struct Slots {
+    tx_next: Option<Box<dyn FrameTx>>,
+    rx_prev: Option<Box<dyn FrameRx>>,
+    member_rxs: Vec<Box<dyn FrameRx>>,
+    member_txs: Vec<Box<dyn FrameTx>>,
+    to_leader: Option<Box<dyn FrameTx>>,
+    from_leader: Option<Box<dyn FrameRx>>,
+    up_rx: Option<Box<dyn FrameRx>>,
+    up_tx: Option<Box<dyn FrameTx>>,
+    down_rx: Option<Box<dyn FrameRx>>,
+    down_tx: Option<Box<dyn FrameTx>>,
+}
+
+fn need<T>(slot: Option<T>, what: &str) -> Result<T, TransportError> {
+    slot.ok_or_else(|| {
+        TransportError::Protocol(format!("endpoint wiring missing {what}"))
+    })
+}
+
+/// Ask `transport` for `id` and drop its ends into the right per-rank
+/// slots.  `slots` is keyed by global rank; only local ranks have
+/// entries.
+fn place(slots: &mut HashMap<usize, Slots>, transport: &mut dyn Transport,
+         id: LinkId, local: &Range<usize>) -> Result<(), TransportError> {
+    let from_local = local.contains(&(id.from as usize));
+    let to_local = local.contains(&(id.to as usize));
+    if !from_local && !to_local {
+        return Ok(());
+    }
+    let ends = transport.link(id)?;
+    if from_local {
+        let tx = need(ends.tx, "tx end of a local-from link")?;
+        let s = slots.entry(id.from as usize).or_default();
+        match id.kind {
+            LinkKind::FlatRing | LinkKind::LeaderRing => s.tx_next = Some(tx),
+            LinkKind::MemberUp => s.to_leader = Some(tx),
+            LinkKind::MemberDown => s.member_txs.push(tx),
+            LinkKind::ChainUp => s.up_tx = Some(tx),
+            LinkKind::ChainDown => s.down_tx = Some(tx),
+        }
+    }
+    if to_local {
+        let rx = need(ends.rx, "rx end of a local-to link")?;
+        let s = slots.entry(id.to as usize).or_default();
+        match id.kind {
+            LinkKind::FlatRing | LinkKind::LeaderRing => s.rx_prev = Some(rx),
+            LinkKind::MemberUp => s.member_rxs.push(rx),
+            LinkKind::MemberDown => s.from_leader = Some(rx),
+            LinkKind::ChainUp => s.up_rx = Some(rx),
+            LinkKind::ChainDown => s.down_rx = Some(rx),
+        }
+    }
+    Ok(())
+}
+
+/// Enumerate the comm graph for `topo` in the canonical global order,
+/// pull every link touching a local rank out of `transport`, and
+/// assemble one [`CommEndpoints`] per local rank.
+///
+/// The link order is part of the wire protocol: every process walks the
+/// same sequence, so socket dial/accept pairs match up without any
+/// out-of-band coordination (see `docs/transport.md` for the
+/// deadlock-freedom argument).
+pub fn build_endpoints(topo: &Topology, hierarchical: bool, intra_ring: bool,
+                       chunk_elems: usize, transport: &mut dyn Transport)
+                       -> Result<Vec<(usize, CommEndpoints)>, TransportError> {
+    let world = topo.world_size();
+    if transport.world() != world {
+        return Err(TransportError::Protocol(format!(
+            "transport world {} != topology world {}",
+            transport.world(),
+            world
+        )));
+    }
+    let local = transport.local_ranks();
+    if local.is_empty() || local.end > world {
+        return Err(TransportError::Protocol(format!(
+            "transport local ranks {local:?} out of range for world {world}"
+        )));
+    }
+    let g = topo.gpus_per_machine;
+    let m = topo.machines;
+    if hierarchical && (local.start % g != 0 || local.len() % g != 0) {
+        return Err(TransportError::Protocol(format!(
+            "hierarchical comm needs machine-aligned process splits: \
+             local ranks {local:?} vs {g} gpus/machine"
+        )));
+    }
+
+    let mut slots: HashMap<usize, Slots> = HashMap::new();
+    for r in local.clone() {
+        slots.insert(r, Slots::default());
+    }
+
+    if !hierarchical {
+        if world > 1 {
+            for r in 0..world {
+                let id = LinkId {
+                    kind: LinkKind::FlatRing,
+                    from: r as u32,
+                    to: ((r + 1) % world) as u32,
+                };
+                place(&mut slots, transport, id, &local)?;
+            }
+        }
+    } else {
+        for machine in 0..m {
+            let leader = (machine * g) as u32;
+            for l in 1..g {
+                let rank = (machine * g + l) as u32;
+                if !intra_ring {
+                    place(&mut slots, transport,
+                          LinkId { kind: LinkKind::MemberUp,
+                                   from: rank, to: leader },
+                          &local)?;
+                    place(&mut slots, transport,
+                          LinkId { kind: LinkKind::MemberDown,
+                                   from: leader, to: rank },
+                          &local)?;
+                } else {
+                    // chain edges between local neighbors l and l-1
+                    place(&mut slots, transport,
+                          LinkId { kind: LinkKind::ChainUp,
+                                   from: rank, to: rank - 1 },
+                          &local)?;
+                    place(&mut slots, transport,
+                          LinkId { kind: LinkKind::ChainDown,
+                                   from: rank - 1, to: rank },
+                          &local)?;
+                }
+            }
+        }
+        for machine in 0..m {
+            let from = (machine * g) as u32;
+            let to = (((machine + 1) % m) * g) as u32;
+            place(&mut slots, transport,
+                  LinkId { kind: LinkKind::LeaderRing, from, to }, &local)?;
+        }
+    }
+
+    // Ring hops count as network time when machine boundaries (or
+    // process boundaries) are crossed.
+    let flat_net = m > 1 || !transport.fully_local();
+
+    let mut out = Vec::with_capacity(local.len());
+    for r in local.clone() {
+        let mut s = slots.remove(&r).unwrap_or_default();
+        let ep = if !hierarchical {
+            let (tx_next, rx_prev) = if world == 1 {
+                // degenerate ring: never used, but keeps one code path
+                let (tx, _rx) = chan_link();
+                let (_tx2, rx) = chan_link();
+                (tx, rx)
+            } else {
+                (need(s.tx_next.take(), "flat ring tx")?,
+                 need(s.rx_prev.take(), "flat ring rx")?)
+            };
+            CommEndpoints::Flat {
+                rank: r,
+                ring_size: world,
+                net: flat_net,
+                tx_next,
+                rx_prev,
+            }
+        } else {
+            let machine = r / g;
+            let l = r % g;
+            if l == 0 && !intra_ring {
+                CommEndpoints::Leader {
+                    machine,
+                    machines: m,
+                    member_rxs: std::mem::take(&mut s.member_rxs),
+                    member_txs: std::mem::take(&mut s.member_txs),
+                    tx_next: need(s.tx_next.take(), "leader ring tx")?,
+                    rx_prev: need(s.rx_prev.take(), "leader ring rx")?,
+                }
+            } else if l == 0 {
+                CommEndpoints::ChainLeader {
+                    machine,
+                    machines: m,
+                    chunk_elems,
+                    up_rx: need(s.up_rx.take(), "chain leader up rx")?,
+                    down_tx: need(s.down_tx.take(), "chain leader down tx")?,
+                    tx_next: need(s.tx_next.take(), "leader ring tx")?,
+                    rx_prev: need(s.rx_prev.take(), "leader ring rx")?,
+                }
+            } else if !intra_ring {
+                CommEndpoints::Member {
+                    to_leader: need(s.to_leader.take(), "member up tx")?,
+                    from_leader: need(s.from_leader.take(), "member down rx")?,
+                }
+            } else {
+                CommEndpoints::ChainMember {
+                    chunk_elems,
+                    up_rx: s.up_rx.take(), // None at the chain tail
+                    up_tx: need(s.up_tx.take(), "chain member up tx")?,
+                    down_rx: need(s.down_rx.take(), "chain member down rx")?,
+                    down_tx: s.down_tx.take(), // None at the chain tail
+                }
+            }
+        };
+        out.push((r, ep));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(f: &Frame) -> Frame {
+        let mut bytes = Vec::new();
+        encode_frame(f, &mut bytes);
+        let body_len =
+            u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        assert_eq!(body_len, bytes.len() - 4, "length prefix mismatch");
+        let mut pool = PayloadPool::default();
+        decode_frame(&bytes[4..], &mut pool).expect("decode")
+    }
+
+    #[test]
+    fn codec_round_trips_every_kind() {
+        let frames = vec![
+            Frame::RingF32 { tag: 7, data: vec![0.5, -0.5, 3.0] },
+            Frame::RingF16 { tag: 107, data: vec![0x3C00, 0xC100, 0] },
+            Frame::Bucket { idx: 3, data: vec![0.0, -1.5, 3.25, 65504.0] },
+            Frame::Bcast { idx: 2, net_s: 0.125, data: vec![1.0] },
+            Frame::Chunk { idx: 3, chunk: 1, net_s: 0.25,
+                           data: vec![1.0, -2.0] },
+        ];
+        for f in &frames {
+            assert_eq!(&round_trip(f), f);
+        }
+    }
+
+    #[test]
+    fn codec_round_trips_empty_payloads() {
+        for f in [
+            Frame::RingF32 { tag: 0, data: vec![] },
+            Frame::RingF16 { tag: 0, data: vec![] },
+            Frame::Bucket { idx: 0, data: vec![] },
+        ] {
+            assert_eq!(round_trip(&f), f);
+        }
+    }
+
+    #[test]
+    fn codec_preserves_nan_and_inf_bits() {
+        let weird = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0];
+        let got = round_trip(&Frame::Bucket { idx: 9, data: weird.clone() });
+        match got {
+            Frame::Bucket { idx, data } => {
+                assert_eq!(idx, 9);
+                assert_eq!(data.len(), weird.len());
+                for (a, b) in data.iter().zip(&weird) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        let mut pool = PayloadPool::default();
+        assert!(matches!(decode_frame(&[], &mut pool),
+                         Err(TransportError::Protocol(_))));
+        assert!(matches!(decode_frame(&[42, 0, 0, 0, 0], &mut pool),
+                         Err(TransportError::Protocol(_))));
+        // truncated field
+        assert!(matches!(decode_frame(&[1, 7], &mut pool),
+                         Err(TransportError::Protocol(_))));
+        // misaligned payload
+        assert!(matches!(decode_frame(&[1, 7, 0, 0, 0, 1, 2, 3], &mut pool),
+                         Err(TransportError::Protocol(_))));
+    }
+
+    #[test]
+    fn link_kind_u8_round_trips() {
+        for k in [LinkKind::FlatRing, LinkKind::LeaderRing,
+                  LinkKind::MemberUp, LinkKind::MemberDown,
+                  LinkKind::ChainUp, LinkKind::ChainDown] {
+            assert_eq!(LinkKind::from_u8(k.to_u8()).unwrap(), k);
+        }
+        assert!(LinkKind::from_u8(99).is_err());
+    }
+
+    #[test]
+    fn payload_pool_recycles_buffers() {
+        let mut pool = PayloadPool::default();
+        let mut v = pool.take_f32();
+        v.extend_from_slice(&[1.0; 64]);
+        let cap = v.capacity();
+        pool.recycle(Frame::Bucket { idx: 0, data: v });
+        let v2 = pool.take_f32();
+        assert!(v2.is_empty());
+        assert_eq!(v2.capacity(), cap, "buffer was not recycled");
+    }
+
+    #[test]
+    fn chan_link_moves_frames_and_reports_disconnect() {
+        let mut pool = PayloadPool::default();
+        let (mut tx, mut rx) = chan_link();
+        assert!(!tx.remote() && !rx.remote());
+        tx.send(Frame::Bucket { idx: 1, data: vec![2.0] }, &mut pool)
+            .unwrap();
+        match rx.recv(&mut pool).unwrap() {
+            Frame::Bucket { idx, data } => {
+                assert_eq!(idx, 1);
+                assert_eq!(data, vec![2.0]);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        drop(tx);
+        assert_eq!(rx.recv(&mut pool), Err(TransportError::Disconnected));
+    }
+
+    #[test]
+    fn inproc_endpoints_match_flat_topology() {
+        let topo = Topology::new(1, 4);
+        let mut t = InProcTransport::new(4);
+        let eps = build_endpoints(&topo, false, false, 1 << 16, &mut t)
+            .expect("wiring");
+        assert_eq!(eps.len(), 4);
+        for (i, (r, ep)) in eps.iter().enumerate() {
+            assert_eq!(*r, i);
+            match ep {
+                CommEndpoints::Flat { rank, ring_size, net, .. } => {
+                    assert_eq!(*rank, i);
+                    assert_eq!(*ring_size, 4);
+                    assert!(!net, "fully-local 1-machine ring is not net");
+                }
+                _ => panic!("expected flat endpoints"),
+            }
+        }
+    }
+
+    #[test]
+    fn inproc_endpoints_match_hierarchical_topology() {
+        let topo = Topology::new(2, 2);
+        let mut t = InProcTransport::new(4);
+        let eps = build_endpoints(&topo, true, false, 1 << 16, &mut t)
+            .expect("wiring");
+        let mut leaders = 0;
+        let mut members = 0;
+        for (r, ep) in &eps {
+            match ep {
+                CommEndpoints::Leader { machine, machines,
+                                        member_rxs, member_txs, .. } => {
+                    assert_eq!(*machine, r / 2);
+                    assert_eq!(*machines, 2);
+                    assert_eq!(member_rxs.len(), 1);
+                    assert_eq!(member_txs.len(), 1);
+                    leaders += 1;
+                }
+                CommEndpoints::Member { .. } => members += 1,
+                _ => panic!("unexpected endpoint role"),
+            }
+        }
+        assert_eq!((leaders, members), (2, 2));
+    }
+
+    #[test]
+    fn inproc_endpoints_match_chain_topology() {
+        let topo = Topology::new(2, 3);
+        let mut t = InProcTransport::new(6);
+        let eps = build_endpoints(&topo, true, true, 1 << 10, &mut t)
+            .expect("wiring");
+        for (r, ep) in &eps {
+            match ep {
+                CommEndpoints::ChainLeader { chunk_elems, .. } => {
+                    assert_eq!(r % 3, 0);
+                    assert_eq!(*chunk_elems, 1 << 10);
+                }
+                CommEndpoints::ChainMember { up_rx, down_tx, .. } => {
+                    let tail = r % 3 == 2;
+                    assert_eq!(up_rx.is_none(), tail);
+                    assert_eq!(down_tx.is_none(), tail);
+                }
+                _ => panic!("unexpected endpoint role"),
+            }
+        }
+    }
+
+    #[test]
+    fn misaligned_hierarchical_split_is_rejected() {
+        struct Half;
+        impl Transport for Half {
+            fn world(&self) -> usize {
+                4
+            }
+            fn local_ranks(&self) -> Range<usize> {
+                0..3 // not a multiple of gpus_per_machine=2
+            }
+            fn link(&mut self, _id: LinkId)
+                    -> Result<LinkEnds, TransportError> {
+                let (tx, rx) = chan_link();
+                Ok(LinkEnds { tx: Some(tx), rx: Some(rx) })
+            }
+        }
+        let topo = Topology::new(2, 2);
+        let err = build_endpoints(&topo, true, false, 1, &mut Half)
+            .err()
+            .expect("misaligned split must fail");
+        assert!(matches!(err, TransportError::Protocol(_)));
+    }
+
+    #[test]
+    fn world_mismatch_is_rejected() {
+        let topo = Topology::new(1, 4);
+        let mut t = InProcTransport::new(2);
+        assert!(build_endpoints(&topo, false, false, 1, &mut t).is_err());
+    }
+
+    #[test]
+    fn quantize_matches_f16_cast() {
+        let src = [0.0f32, 1.5, -2.25, 65504.0, 1e-8];
+        let mut out = Vec::new();
+        quantize_f16(&src, &mut out);
+        for (&x, &b) in src.iter().zip(&out) {
+            assert_eq!(b, F16::from_f32(x).0);
+        }
+    }
+}

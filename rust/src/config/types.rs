@@ -63,6 +63,13 @@ pub struct TrainConfig {
     /// Rotation depth for periodic checkpoints: keep the newest K
     /// `ckpt-*.bckp` files (CLI `--keep-last`).
     pub keep_last: usize,
+    /// Socket-transport receive timeout in seconds (CLI `--net-timeout`):
+    /// how long a comm worker waits on a quiet peer link before
+    /// surfacing a transport timeout instead of hanging.  Only consulted
+    /// when the run uses `--listen/--connect/--rendezvous`; the
+    /// in-process transport never times out.  `<= 0` disables the
+    /// timeout (wait forever).
+    pub net_timeout_s: f64,
     /// Initial dynamic loss scale (paper §4.2).
     pub init_loss_scale: f64,
     /// RNG seed for data order + masking.
@@ -90,6 +97,7 @@ impl Default for TrainConfig {
             steps: 100,
             save_every: 0,
             keep_last: 3,
+            net_timeout_s: 30.0,
             init_loss_scale: 65536.0,
             seed: 42,
             log_every: 10,
@@ -200,6 +208,8 @@ impl RunConfig {
             doc.int("train.save_every", c.train.save_every as i64) as usize;
         c.train.keep_last =
             doc.int("train.keep_last", c.train.keep_last as i64) as usize;
+        c.train.net_timeout_s =
+            doc.float("train.net_timeout_s", c.train.net_timeout_s);
         c.train.init_loss_scale =
             doc.float("train.init_loss_scale", c.train.init_loss_scale);
         c.train.seed = doc.int("train.seed", c.train.seed as i64) as u64;
@@ -323,6 +333,20 @@ mod tests {
         let mut c = RunConfig::default();
         c.train.chunk_elems = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn net_timeout_knob_parses() {
+        let doc =
+            TomlDoc::parse("[train]\nnet_timeout_s = 2.5\n").unwrap();
+        let c = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.train.net_timeout_s, 2.5);
+        // default: 30 s; <= 0 (wait forever) still validates — the
+        // knob only matters for socket runs.
+        assert_eq!(RunConfig::default().train.net_timeout_s, 30.0);
+        let mut c = RunConfig::default();
+        c.train.net_timeout_s = 0.0;
+        c.validate().unwrap();
     }
 
     #[test]

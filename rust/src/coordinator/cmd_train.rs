@@ -10,6 +10,7 @@ use crate::checkpoint::{self, AsyncCheckpointWriter, Checkpoint,
 use crate::cliopt::{Args, CliExit, EXIT_RESUME_CORRUPT,
                     EXIT_RESUME_MISMATCH, EXIT_RESUME_NONE};
 use crate::collectives::pool::{CommMode, IntraNodeMode};
+use crate::collectives::{InProcTransport, SocketTransport, Transport};
 use crate::config::{RunConfig, TwoPhaseSchedule};
 use crate::data::pipeline::shard_manifest_hash;
 use crate::data::ShardedDataset;
@@ -23,6 +24,45 @@ pub struct TrainOutcome {
     pub phase1: TrainReport,
     pub phase2: Option<TrainReport>,
     pub trainer_step: usize,
+    /// Whether this process hosted global rank 0 (always true for
+    /// in-process runs).  Run-level side effects — plots, traces,
+    /// schedule summaries — belong to the lead process only.
+    pub lead: bool,
+}
+
+/// Multi-process run shape (CLI `--listen` + `--connect`/`--rendezvous`):
+/// the world splits evenly over the participating processes and bucket
+/// exchanges travel a [`SocketTransport`] instead of in-memory channels.
+pub struct NetPlan {
+    /// This process's listen address: `host:port` TCP (`:0` picks a
+    /// free port under `--rendezvous`) or a `unix:/path` socket.
+    pub listen: String,
+    /// Static peer table, one listen address per process in RANK ORDER
+    /// (`--connect`); must contain `listen`.  Mutually exclusive with
+    /// `rendezvous`.
+    pub peers: Option<Vec<String>>,
+    /// Rendezvous file for dynamic discovery (`--rendezvous`): each
+    /// process appends its address; first line = process 0.
+    pub rendezvous: Option<String>,
+    /// Expected process count under `rendezvous`.
+    pub nprocs: usize,
+}
+
+impl NetPlan {
+    /// Open the socket transport this plan describes (binds the listen
+    /// address; rendezvous waits for all peers to publish).
+    fn open(&self, world: usize, timeout_s: f64)
+        -> anyhow::Result<SocketTransport> {
+        let t = match (&self.peers, &self.rendezvous) {
+            (Some(peers), _) => SocketTransport::with_hosts(
+                world, &self.listen, peers.clone(), timeout_s),
+            (None, Some(file)) => SocketTransport::with_rendezvous(
+                world, &self.listen, file, self.nprocs, timeout_s),
+            (None, None) => anyhow::bail!(
+                "--listen needs --connect HOSTS or --rendezvous FILE"),
+        };
+        t.map_err(|e| anyhow::anyhow!("socket transport setup: {e}"))
+    }
 }
 
 /// How a run interacts with checkpoints (CLI `--ckpt`, `--resume`,
@@ -85,17 +125,29 @@ pub fn train_run(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
                        final_path: ckpt,
                        auto_resume: true,
                        ..Default::default()
-                   })
+                   },
+                   None)
 }
 
-/// [`train_run`] with the full checkpoint plan: exact `--resume`,
-/// periodic async rotation, and the legacy final-save path.
+/// [`train_run`] with the full checkpoint plan — exact `--resume`,
+/// periodic async rotation, the legacy final-save path — and an
+/// optional [`NetPlan`] that takes the exchange out-of-process over
+/// sockets.  ONE transport serves both phases (links re-wire between
+/// trainers, the listener stays bound), and run-level side effects
+/// (checkpoint writes, plots, progress lines) happen only in the lead
+/// process.
 #[allow(clippy::too_many_arguments)]
 pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
                       steps1: usize, steps2: usize, batch1: usize,
-                      seq1: usize, mut plan: CkptPlan<'_>)
+                      seq1: usize, mut plan: CkptPlan<'_>,
+                      net: Option<&NetPlan>)
                       -> anyhow::Result<TrainOutcome> {
     let world = cfg.cluster.topo.world_size();
+    let mut transport: Box<dyn Transport> = match net {
+        None => Box::new(InProcTransport::new(world)),
+        Some(n) => Box::new(n.open(world, cfg.train.net_timeout_s)?),
+    };
+    let lead = transport.local_ranks().start == 0;
     let datasets = prepare_datasets(data_dir, world)?;
     // Corpus identity: folded into every snapshot's fingerprint so a
     // resume over a different dataset fails loudly (v2.1).  The
@@ -104,9 +156,12 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
 
     // Periodic rotation writer, shared by both phases: snapshots happen
     // at step boundaries on the hot loop, writes on this background
-    // thread.
+    // thread.  Replicas are bitwise identical after every exchange, so
+    // under a multi-process transport only the lead writes — peers
+    // passing the same --save-every/--ckpt-dir stay inert instead of
+    // racing the rotation.
     let mut writer = match (plan.rotate_dir, cfg.train.save_every) {
-        (Some(dir), every) if every > 0 => {
+        (Some(dir), every) if every > 0 && lead => {
             Some(AsyncCheckpointWriter::new(dir, cfg.train.keep_last)?)
         }
         _ => None,
@@ -169,7 +224,8 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
         println!("phase 1 already complete in the resumed run — skipping");
         TrainReport::default()
     } else {
-        let mut t = Trainer::new(engine, cfg.clone(), seq1, batch1)?;
+        let mut t = Trainer::with_transport(engine, cfg.clone(), seq1,
+                                            batch1, transport.as_mut())?;
         t.set_data_manifest(manifest);
         t.set_inject_fail(plan.inject_fail);
         // `--resume` finishes THE SAME run: already-consumed steps are
@@ -228,11 +284,12 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
             }
         }
         println!(
-            "phase 1: preset={} variant={} topo={} world={} batch={}x{} \
-             accum={} overlap={} wire={} comm={} ({}) intra={} ({}) \
-             prefetch={}",
+            "phase 1: preset={} variant={} topo={} world={} ranks={:?} \
+             batch={}x{} accum={} overlap={} wire={} comm={} ({}) \
+             intra={} ({}) prefetch={}",
             cfg.train.preset, cfg.train.variant, cfg.cluster.topo, world,
-            batch1, seq1, cfg.train.accum_steps, cfg.train.overlap,
+            t.local_ranks(), batch1, seq1, cfg.train.accum_steps,
+            cfg.train.overlap,
             if cfg.train.grad_wire_f16 { "f16" } else { "f32" },
             cfg.train.comm_mode,
             if t.is_hierarchical() { "hierarchical" } else { "flat" },
@@ -253,7 +310,7 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
             writer.as_mut().map(|w| (w, save_every)))?;
         println!("phase 1 done: {}", r.summary());
         println!("exchange: {}", r.exchange.summary());
-        if let Some(p) = plan.final_path {
+        if let Some(p) = plan.final_path.filter(|_| lead) {
             t.save(p)?;
             println!("checkpoint -> {}", p.display());
         }
@@ -263,7 +320,11 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
 
     // ---- phase 2 (seq 512, smaller batch — Table 6 ratios) ----
     let report2 = if steps2 > 0 {
-        let mut t2 = Trainer::new(engine, cfg2, seq2, batch2)?;
+        // Same transport, new trainer: the links re-wire for the
+        // phase-2 pool while the listener stays bound (no rebind race
+        // with the peers' phase hand-off).
+        let mut t2 = Trainer::with_transport(engine, cfg2, seq2, batch2,
+                                             transport.as_mut())?;
         t2.set_data_manifest(manifest);
         t2.set_inject_fail(plan.inject_fail);
         let mut run2 = steps2;
@@ -306,7 +367,7 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
                                  writer.as_mut().map(|w| (w, save_every)))?;
         println!("phase 2 done: {}", r.summary());
         println!("exchange: {}", r.exchange.summary());
-        if let Some(p) = plan.final_path {
+        if let Some(p) = plan.final_path.filter(|_| lead) {
             t2.save(p)?;
         }
         trainer = Some(t2);
@@ -337,6 +398,7 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
         // resumed into phase 2, and that requires steps2 > 0, where
         // phase 2 sets it.
         trainer_step: trainer.map_or(0, |t| t.step),
+        lead,
     })
 }
 
@@ -535,8 +597,56 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         Some(s) => Some(InjectFail::parse(&s)?),
         None => None,
     };
+    // Socket-transport knobs (docs/transport.md): `--listen` makes this
+    // process one participant of a multi-process world; peers come from
+    // a static `--connect` table or a `--rendezvous` file.
+    let listen = args.get_opt("listen");
+    let connect = args.get_list_opt("connect");
+    let rendezvous = args.get_opt("rendezvous");
+    let nprocs: usize = args.get_parse("nprocs", 0usize)?;
+    cfg.train.net_timeout_s =
+        args.get_parse("net-timeout", cfg.train.net_timeout_s)?;
     args.finish_strict()?;
     cfg.validate()?;
+    let net = match &listen {
+        None => {
+            anyhow::ensure!(
+                connect.is_none() && rendezvous.is_none() && nprocs == 0,
+                "--connect/--rendezvous/--nprocs need --listen ADDR (the \
+                 address THIS process serves)"
+            );
+            None
+        }
+        Some(listen) => {
+            anyhow::ensure!(
+                connect.is_some() != rendezvous.is_some(),
+                "--listen needs exactly one of --connect HOST,HOST,... \
+                 (static peer table) or --rendezvous FILE (dynamic \
+                 discovery)"
+            );
+            if let Some(peers) = &connect {
+                anyhow::ensure!(
+                    peers.contains(listen),
+                    "--connect must list this process's own --listen \
+                     address ({listen}); the list is the rank-ordered \
+                     peer table"
+                );
+            }
+            if rendezvous.is_some() {
+                anyhow::ensure!(
+                    nprocs >= 1,
+                    "--rendezvous needs --nprocs N (how many processes \
+                     share the world)"
+                );
+            }
+            Some(NetPlan {
+                listen: listen.clone(),
+                peers: connect.clone(),
+                rendezvous: rendezvous.clone(),
+                nprocs,
+            })
+        }
+    };
     if cfg.train.save_every > 0 && ckpt_dir.is_none() {
         anyhow::bail!(
             "--save-every needs --ckpt-dir DIR to hold the rotated files"
@@ -627,6 +737,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     let mut restarts_left = max_restarts;
     let auto_resume = resume_path.is_none();
     let mut attempt = 0usize;
+    let mut cur_net = net;
     let outcome = loop {
         attempt += 1;
         let result = train_run_with(
@@ -639,7 +750,8 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
                 rotate_dir: ckpt_dir.as_deref(),
                 resume_reshape: pending_reshape,
                 inject_fail: inject,
-            });
+            },
+            cur_net.as_ref());
         match result {
             Ok(o) => break o,
             Err(e) if restarts_left > 0 => {
@@ -650,6 +762,16 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
                 // the world AFTER the node loss, where the fault (and
                 // possibly the node) is gone.
                 inject = None;
+                // A socket-run restart means a peer is gone: the
+                // survivor relaunches alone, in-process, on the
+                // (usually shrunken) --restart-topo world — the
+                // lost-node elastic path of docs/elastic.md.
+                if cur_net.take().is_some() {
+                    println!(
+                        "restart: dropping the socket transport — \
+                         relaunching single-process"
+                    );
+                }
                 if let Some(t) = restart_topo {
                     if cur_cfg.cluster.topo != t {
                         cur_cfg.cluster.topo = t;
@@ -681,6 +803,12 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             Err(e) => return Err(e),
         }
     };
+
+    // Run-level outputs below (trace files, plots, schedule summary)
+    // belong to the lead process; a non-lead socket peer is done.
+    if !outcome.lead {
+        return Ok(());
+    }
 
     // Exchange spans (TrainReport.exchange) as a chrome trace: the mean
     // per-step bucket exchange, split into PCIe and network phases.

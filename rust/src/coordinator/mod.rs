@@ -14,7 +14,7 @@ mod cmd_simulate;
 mod cmd_train;
 
 pub use cmd_train::{prepare_datasets, train_run, train_run_with, CkptPlan,
-                    TrainOutcome};
+                    NetPlan, TrainOutcome};
 
 use crate::cliopt::Args;
 
@@ -75,6 +75,29 @@ COMMANDS:
                    [--inject-fail S[:R]]  deterministic fault injection
                                    for tests: fail at data_step S, on
                                    rank R's last microbatch if given
+                   [--listen ADDR]  make this process ONE participant of
+                                   a multi-process world: ranks split
+                                   evenly over the processes and bucket
+                                   exchanges travel length-prefixed
+                                   frames over TCP (host:port) or unix
+                                   sockets (unix:/path) instead of
+                                   in-memory channels.  Every process
+                                   runs the same command line; results
+                                   are bitwise-identical to the
+                                   single-process run (docs/transport.md)
+                   [--connect A,B,...]  static peer table: every
+                                   process's listen address in RANK
+                                   ORDER (must include this process's
+                                   own --listen)
+                   [--rendezvous FILE --nprocs N]  dynamic discovery à
+                                   la torchrun: each process appends its
+                                   bound address to FILE (so --listen
+                                   host:0 works), first line = ranks
+                                   0..world/N
+                   [--net-timeout S]  socket recv timeout, seconds
+                                   (default 30; <= 0 waits forever) —
+                                   a quiet peer surfaces a transport
+                                   timeout instead of hanging the run
                    [--trace exchange.json]  exchange + data-stall spans
                  resume exit codes: 3 = checkpoint/config mismatch,
                  4 = corrupt and nothing older survived, 5 = nothing

@@ -65,7 +65,7 @@ use crate::checkpoint::{AsyncCheckpointWriter, Checkpoint, Fingerprint};
 use crate::collectives::pool::{CollectivePool, MicroStats, RankCompute,
                                WireFormat};
 pub use crate::collectives::pool::CommMode;
-use crate::collectives::CollectiveGroup;
+use crate::collectives::{CollectiveGroup, InProcTransport, Transport};
 use crate::config::RunConfig;
 use crate::data::prefetch::{BatchCursor, Prefetcher};
 use crate::data::{Batch, MaskingConfig, ShardedDataset};
@@ -216,7 +216,25 @@ impl Trainer {
     /// Build a trainer for the given run config (artifacts must exist).
     /// This wires the persistent collective pool — worker threads and
     /// ring channels live for the trainer's lifetime; `run` never spawns.
+    ///
+    /// Ranks live in THIS process on in-memory channels; see
+    /// [`Self::with_transport`] for the multi-process form.
     pub fn new(engine: &Engine, cfg: RunConfig, seq: usize, batch: usize)
+        -> Result<Trainer> {
+        let mut transport =
+            InProcTransport::new(cfg.cluster.topo.world_size());
+        Self::with_transport(engine, cfg, seq, batch, &mut transport)
+    }
+
+    /// [`Self::new`] over an explicit [`Transport`]: the pool's comm
+    /// links are built by `transport`, so the world may span several
+    /// processes (`SocketTransport`) — this trainer then hosts only
+    /// `transport.local_ranks()` and exchanges with its peers over the
+    /// transport's links.  Every process must run the SAME config in
+    /// lockstep; the exchange keeps replicas bitwise identical exactly
+    /// as in-process.
+    pub fn with_transport(engine: &Engine, cfg: RunConfig, seq: usize,
+                          batch: usize, transport: &mut dyn Transport)
         -> Result<Trainer> {
         cfg.validate()?;
         let model = engine.model(&cfg.train.preset)?;
@@ -234,11 +252,12 @@ impl Trainer {
         } else {
             WireFormat::F32
         };
-        let pool = CollectivePool::with_intra(cfg.cluster.topo, n,
-                                              ranges.clone(), wire,
-                                              cfg.train.comm_mode,
-                                              cfg.train.intra_node,
-                                              cfg.train.chunk_elems);
+        let pool = CollectivePool::with_transport(cfg.cluster.topo, n,
+                                                  ranges.clone(), wire,
+                                                  cfg.train.comm_mode,
+                                                  cfg.train.intra_node,
+                                                  cfg.train.chunk_elems,
+                                                  transport)?;
         let mask_cfg = MaskingConfig {
             mask_prob: cfg.data.mask_prob,
             max_predictions: cfg.data.max_predictions,
@@ -455,6 +474,19 @@ impl Trainer {
         self.data_step
     }
 
+    /// The contiguous rank range this process hosts (the full world for
+    /// in-process runs; one process's slice under a `SocketTransport`).
+    pub fn local_ranks(&self) -> std::ops::Range<usize> {
+        self.pool.local_ranks()
+    }
+
+    /// Whether this process hosts global rank 0 — the process that
+    /// should own side effects done once per RUN (checkpoint writing,
+    /// plots, progress lines), not once per process.
+    pub fn is_lead(&self) -> bool {
+        self.pool.is_lead()
+    }
+
     /// Run `steps` optimizer steps over the per-rank datasets.
     /// `datasets.len()` must equal the topology world size.
     pub fn run(&mut self, datasets: &[ShardedDataset], steps: usize,
@@ -477,6 +509,14 @@ impl Trainer {
             "need {} datasets (one per rank), got {}",
             self.world, datasets.len()
         );
+        // Under a multi-process transport this trainer only hosts a
+        // contiguous rank slice: input lanes and marshaling scratches
+        // are built for those ranks alone (the peers feed their own).
+        // `datasets` stays world-sized so global rank r always maps to
+        // the same shard assignment regardless of the process split.
+        let local = self.pool.local_ranks();
+        let local_n = local.len();
+        let local_datasets = &datasets[local.clone()];
         let k = self.cfg.train.accum_steps;
         let batch = self.train_step.batch;
         let seq = self.train_step.seq;
@@ -504,7 +544,7 @@ impl Trainer {
         let seed = self.cfg.train.seed;
         let feed = match self.cfg.train.prefetch_depth {
             0 => BatchFeed::Sync(
-                datasets
+                local_datasets
                     .iter()
                     .map(|d| {
                         Mutex::new(SyncLane {
@@ -517,16 +557,17 @@ impl Trainer {
                     .collect(),
             ),
             depth => BatchFeed::Prefetch(Prefetcher::spawn(
-                scope, datasets, &self.mask_cfg, seed, batch, seq,
+                scope, local_datasets, &self.mask_cfg, seed, batch, seq,
                 start_micro, depth)),
         };
         let ctx = RankStepCtx {
             step: &self.train_step,
             feed,
-            scratches: (0..self.world)
+            scratches: (0..local_n)
                 .map(|_| Mutex::new(StepScratch::new()))
                 .collect(),
             k,
+            base: local.start,
             inject: self.inject_fail,
         };
 
@@ -587,13 +628,17 @@ impl Trainer {
             report.apply_s += sw.lap("apply");
 
             // ---- metrics ----
-            let denom = (k * self.world) as f64;
+            // Loss/accuracy sums only cover the ranks THIS process
+            // hosts (peers average their own); gradients above are the
+            // true global sums, normalized by k * world.
+            let denom = (k * local_n) as f64;
             report.loss.push(self.step, out.loss_sum / denom);
             report.mlm_loss.push(self.step, out.mlm_sum / denom);
             report.nsp_loss.push(self.step, out.nsp_sum / denom);
             report.mlm_acc.push(self.step, out.acc_sum / denom);
             if self.cfg.train.log_every > 0
-                && (local_step + 1) % self.cfg.train.log_every == 0 {
+                && (local_step + 1) % self.cfg.train.log_every == 0
+                && self.pool.is_lead() {
                 log::info!(
                     "step {:>5} loss {:.4} mlm {:.4} nsp {:.4} acc {:.3} \
                      scale {} tok/s {:.0}",
@@ -671,6 +716,9 @@ struct RankStepCtx<'a> {
     feed: BatchFeed<'a>,
     scratches: Vec<Mutex<StepScratch>>,
     k: usize,
+    /// First GLOBAL rank this process hosts: lanes and scratches are
+    /// indexed by `rank - base` (0 for in-process runs).
+    base: usize,
     /// Rank-targeted deterministic fault injection ([`InjectFail`]).
     inject: Option<InjectFail>,
 }
@@ -682,8 +730,9 @@ impl RankStepCtx<'_> {
     fn exec(&self, rank: usize, step_index: usize, params: &[f32],
             scale: f32, b: &Batch, grads_out: &mut [f32])
             -> Result<StepStats> {
-        let mut scratch =
-            self.scratches[rank].lock().expect("step scratch poisoned");
+        let mut scratch = self.scratches[rank - self.base]
+            .lock()
+            .expect("step scratch poisoned");
         self.step.run_scratch(&mut scratch, params, step_index as u64, b,
                               scale, grads_out)
     }
@@ -710,17 +759,18 @@ impl RankCompute for RankStepCtx<'_> {
                 );
             }
         }
+        let lane_ix = rank - self.base;
         let (out, stall_s) = match &self.feed {
             BatchFeed::Prefetch(p) => {
-                let (b, stall_s) = p.pop(rank)?;
+                let (b, stall_s) = p.pop(lane_ix)?;
                 let out = self.exec(rank, step_index, params, scale, &b,
                                     grads_out)?;
-                p.recycle(rank, b);
+                p.recycle(lane_ix, b);
                 (out, stall_s)
             }
             BatchFeed::Sync(lanes) => {
                 let mut lane =
-                    lanes[rank].lock().expect("sync input lane poisoned");
+                    lanes[lane_ix].lock().expect("sync input lane poisoned");
                 debug_assert_eq!(
                     lane.cursor.position(),
                     step_index as u64 * self.k as u64 + micro as u64,

@@ -516,6 +516,213 @@ fn info_lists_artifacts() {
     assert!(text.contains("apply_lamb"));
 }
 
+/// Base `train` arguments shared by the socket-transport tests: a tiny
+/// deterministic run whose results a second process must reproduce.
+#[cfg(unix)]
+fn socket_train_args(topo: &str, steps: &str, data: &std::path::Path)
+    -> Vec<String> {
+    vec!["train".to_string(), "--preset".into(), "bert-micro".into(),
+         "--topo".into(), topo.into(), "--steps".into(), steps.into(),
+         "--accum".into(), "1".into(), "--batch".into(), "2".into(),
+         "--seq".into(), "32".into(), "--lr".into(), "1e-3".into(),
+         "--log-every".into(), "0".into(),
+         "--data-dir".into(), data.to_str().unwrap().into()]
+}
+
+#[cfg(unix)]
+fn spawn_train(args: &[String]) -> std::process::Child {
+    use std::process::Stdio;
+    bin().current_dir(env!("CARGO_MANIFEST_DIR"))
+        .args(args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn train process")
+}
+
+#[cfg(unix)]
+#[test]
+fn train_two_process_socket_run_matches_inproc_bitwise() {
+    // the transport acceptance criterion: the SAME 1M2G config run as
+    // two real processes over loopback unix sockets (one rank each,
+    // --listen/--connect) must finish with final parameters bitwise
+    // identical to the single-process in-memory run.  The transport is
+    // allowed to change WHERE ranks live, never what they compute.
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    use bertdist::checkpoint::Checkpoint;
+    let data = bertdist::testkit::tmp_dir("cli_sock_data");
+    let outdir = bertdist::testkit::tmp_dir("cli_sock_out");
+    let out = bin()
+        .args(["shard-data", "--out", data.path().to_str().unwrap(),
+               "--docs", "12", "--shards", "2", "--vocab-size", "512"])
+        .output().unwrap();
+    assert!(out.status.success(),
+            "{}", String::from_utf8_lossy(&out.stderr));
+
+    let socks: Vec<String> = (0..2)
+        .map(|i| format!("unix:{}/p{i}.sock",
+                         outdir.path().to_str().unwrap()))
+        .collect();
+    let connect = socks.join(",");
+    let final_sock = outdir.path().join("final_sock.bckp");
+    let base = socket_train_args("1M2G", "4", data.path());
+
+    // process 0 hosts rank 0 (first --connect entry) and is the lead:
+    // it alone writes the final checkpoint
+    let mut a = base.clone();
+    a.extend(["--listen".into(), socks[0].clone(),
+              "--connect".into(), connect.clone(),
+              "--ckpt".into(), final_sock.to_str().unwrap().into()]);
+    let mut b = base.clone();
+    b.extend(["--listen".into(), socks[1].clone(),
+              "--connect".into(), connect]);
+    let pa = spawn_train(&a);
+    let pb = spawn_train(&b);
+    let oa = pa.wait_with_output().unwrap();
+    let ob = pb.wait_with_output().unwrap();
+    let (sa, ea) = (String::from_utf8_lossy(&oa.stdout),
+                    String::from_utf8_lossy(&oa.stderr));
+    let (sb, eb) = (String::from_utf8_lossy(&ob.stdout),
+                    String::from_utf8_lossy(&ob.stderr));
+    assert!(oa.status.success(), "proc 0 stdout:\n{sa}\nstderr:\n{ea}");
+    assert!(ob.status.success(), "proc 1 stdout:\n{sb}\nstderr:\n{eb}");
+    // each process hosts its contiguous slice of the world
+    assert!(sa.contains("ranks=0..1"), "{sa}");
+    assert!(sb.contains("ranks=1..2"), "{sb}");
+    assert!(sa.contains("phase 1 done"), "{sa}");
+
+    // the same config, single process, in-memory transport
+    let final_in = outdir.path().join("final_inproc.bckp");
+    let mut c = base;
+    c.extend(["--ckpt".into(), final_in.to_str().unwrap().into()]);
+    let out = bin().current_dir(env!("CARGO_MANIFEST_DIR")).args(&c)
+        .output().unwrap();
+    assert!(out.status.success(),
+            "stdout:\n{}\nstderr:\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr));
+
+    let ck_sock = Checkpoint::load(&final_sock).unwrap();
+    let ck_in = Checkpoint::load(&final_in).unwrap();
+    assert_eq!(ck_sock.step, 4);
+    assert_eq!(ck_sock, ck_in,
+               "a 2-process socket run must be bitwise identical to the \
+                single-process in-memory run");
+}
+
+#[cfg(unix)]
+#[test]
+fn train_socket_peer_loss_restarts_single_process_and_matches_clean_run() {
+    // the elasticity contract over REAL process loss: a 2-process
+    // socket run loses its peer (rank 1's process dies mid-step), the
+    // survivor's --max-restarts drops the socket transport, relaunches
+    // single-process on the surviving --restart-topo world from the
+    // newest verified rotation checkpoint, and its final parameters are
+    // bitwise-equal to a clean reshaped resume from the same boundary.
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    use bertdist::checkpoint::{self, Checkpoint};
+    let data = bertdist::testkit::tmp_dir("cli_sock_elastic_data");
+    let rot_a = bertdist::testkit::tmp_ckpt_dir("cli_sock_elastic_rot_a");
+    let rot_b = bertdist::testkit::tmp_ckpt_dir("cli_sock_elastic_rot_b");
+    let outdir = bertdist::testkit::tmp_dir("cli_sock_elastic_out");
+    let out = bin()
+        .args(["shard-data", "--out", data.path().to_str().unwrap(),
+               "--docs", "12", "--shards", "2", "--vocab-size", "512"])
+        .output().unwrap();
+    assert!(out.status.success(),
+            "{}", String::from_utf8_lossy(&out.stderr));
+
+    let socks: Vec<String> = (0..2)
+        .map(|i| format!("unix:{}/p{i}.sock",
+                         outdir.path().to_str().unwrap()))
+        .collect();
+    let connect = socks.join(",");
+    let base = socket_train_args("1M2G", "6", data.path());
+
+    // survivor: lead process hosting rank 0, supervised with one
+    // restart onto the shrunken 1M1G world
+    let final_a = outdir.path().join("final_a.bckp");
+    let mut a = base.clone();
+    a.extend(["--listen".into(), socks[0].clone(),
+              "--connect".into(), connect.clone(),
+              "--net-timeout".into(), "20".into(),
+              "--save-every".into(), "2".into(),
+              "--keep-last".into(), "3".into(),
+              "--ckpt-dir".into(), rot_a.path().to_str().unwrap().into(),
+              "--max-restarts".into(), "1".into(),
+              "--restart-topo".into(), "1M1G".into(),
+              "--ckpt".into(), final_a.to_str().unwrap().into()]);
+    // doomed peer: hosts rank 1 and dies deterministically at
+    // data_step 5 — from the survivor's side this is a real process
+    // loss (sockets close mid-exchange), not an in-process unwind
+    let mut b = base.clone();
+    b.extend(["--listen".into(), socks[1].clone(),
+              "--connect".into(), connect,
+              "--net-timeout".into(), "20".into(),
+              "--inject-fail".into(), "5:1".into()]);
+    let pa = spawn_train(&a);
+    let pb = spawn_train(&b);
+    let ob = pb.wait_with_output().unwrap();
+    let oa = pa.wait_with_output().unwrap();
+    let (sb, eb) = (String::from_utf8_lossy(&ob.stdout),
+                    String::from_utf8_lossy(&ob.stderr));
+    assert!(!ob.status.success(),
+            "the doomed peer must die: stdout:\n{sb}\nstderr:\n{eb}");
+    assert!(eb.contains("injected failure"), "{eb}");
+    let (sa, ea) = (String::from_utf8_lossy(&oa.stdout),
+                    String::from_utf8_lossy(&oa.stderr));
+    assert!(oa.status.success(),
+            "survivor stdout:\n{sa}\nstderr:\n{ea}");
+    assert!(ea.contains("training attempt 1 failed"), "{ea}");
+    assert!(ea.contains("pooled step 5 failed"), "{ea}");
+    // the relaunch leaves the dead peer's sockets behind and resumes at
+    // the last verified rotation boundary before the fault
+    assert!(sa.contains("restart: dropping the socket transport"),
+            "{sa}");
+    assert!(sa.contains("restart 1: relaunching on 1M1G from data_step 4"),
+            "{sa}");
+    assert!(sa.contains("resuming reshaped"), "{sa}");
+    assert!(sa.contains("phase 1 done"), "{sa}");
+
+    // baseline: a CLEAN single-process 1M2G run with the same rotation
+    // plan, then a manual reshaped restart of its step-4 boundary —
+    // exactly the state the survivor reconstructed the hard way
+    let mut b1 = base.clone();
+    b1.extend(["--save-every".into(), "2".into(),
+               "--keep-last".into(), "3".into(),
+               "--ckpt-dir".into(),
+               rot_b.path().to_str().unwrap().into()]);
+    let out = bin().current_dir(env!("CARGO_MANIFEST_DIR")).args(&b1)
+        .output().unwrap();
+    assert!(out.status.success(),
+            "{}", String::from_utf8_lossy(&out.stderr));
+    let boundary = rot_b.path().join(checkpoint::checkpoint_file_name(4));
+    let final_b = outdir.path().join("final_b.bckp");
+    let mut b2 = socket_train_args("1M1G", "6", data.path());
+    b2.extend(["--resume-reshape".into(),
+               boundary.to_str().unwrap().into(),
+               "--ckpt".into(), final_b.to_str().unwrap().into()]);
+    let out = bin().current_dir(env!("CARGO_MANIFEST_DIR")).args(&b2)
+        .output().unwrap();
+    assert!(out.status.success(),
+            "stdout:\n{}\nstderr:\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr));
+
+    let ca = Checkpoint::load(&final_a).unwrap();
+    let cb = Checkpoint::load(&final_b).unwrap();
+    assert_eq!(ca.step, 6);
+    assert_eq!(ca, cb,
+               "surviving a real peer loss and a clean reshaped resume \
+                from the same boundary must converge bitwise");
+}
+
 #[test]
 fn train_rejects_oversized_vocab() {
     if !have_artifacts() {

@@ -373,3 +373,203 @@ mod pool_failures {
         }
     }
 }
+
+// ---- socket-level failure paths (ISSUE 7: REAL disconnects) ----
+
+mod socket_failures {
+    use bertdist::collectives::pool::{CollectivePool, CommMode,
+                                      IntraNodeMode, MicroStats,
+                                      RankCompute, WireFormat};
+    use bertdist::collectives::SocketTransport;
+    use bertdist::grad::BucketRange;
+    use bertdist::topology::Topology;
+
+    struct Ones {
+        n: usize,
+    }
+    impl RankCompute for Ones {
+        fn micro(&self, _r: usize, _s: usize, _m: usize, _p: &[f32],
+                 _sc: f32, out: &mut Vec<f32>)
+                 -> anyhow::Result<MicroStats> {
+            out.resize(self.n, 0.0);
+            out.fill(1.0);
+            Ok(MicroStats::default())
+        }
+    }
+
+    /// Fails every micro of one designated step (the peer that "dies").
+    struct DieAt {
+        n: usize,
+        step: usize,
+    }
+    impl RankCompute for DieAt {
+        fn micro(&self, _r: usize, s: usize, _m: usize, _p: &[f32],
+                 _sc: f32, out: &mut Vec<f32>)
+                 -> anyhow::Result<MicroStats> {
+            anyhow::ensure!(s != self.step, "peer dying at step {s}");
+            out.resize(self.n, 0.0);
+            out.fill(1.0);
+            Ok(MicroStats::default())
+        }
+    }
+
+    fn probe_addrs(n: usize) -> Vec<String> {
+        let ls: Vec<std::net::TcpListener> = (0..n)
+            .map(|_| std::net::TcpListener::bind("127.0.0.1:0").unwrap())
+            .collect();
+        ls.iter()
+            .map(|l| format!("127.0.0.1:{}",
+                             l.local_addr().unwrap().port()))
+            .collect()
+    }
+
+    fn pool_on(peers: &[String], p: usize, n: usize, timeout_s: f64)
+        -> CollectivePool {
+        let mut t = SocketTransport::with_hosts(
+            2, &peers[p], peers.to_vec(), timeout_s).unwrap();
+        CollectivePool::with_transport(
+            Topology::new(2, 1), n, BucketRange::even_split(n, 2),
+            WireFormat::F32, CommMode::Flat, IntraNodeMode::Auto, 1 << 16,
+            &mut t).unwrap()
+    }
+
+    /// A peer process dying mid-exchange (its socket closes) must
+    /// surface the PR-2 stranded-peer shape on the survivor — the
+    /// failing step named in the error — instead of hanging the ring.
+    #[test]
+    fn dropped_socket_peer_surfaces_named_step_error() {
+        let peers = probe_addrs(2);
+        let n = 64;
+        std::thread::scope(|scope| {
+            let survivor = {
+                let peers = peers.clone();
+                scope.spawn(move || {
+                    let mut pool = pool_on(&peers, 0, n, 30.0);
+                    pool.step(&[], 1.0, 1, 0, true, &Ones { n }).unwrap();
+                    pool.step(&[], 1.0, 1, 1, true, &Ones { n })
+                        .map(|_| ())
+                        .unwrap_err()
+                })
+            };
+            let dying = {
+                let peers = peers.clone();
+                scope.spawn(move || {
+                    let mut pool = pool_on(&peers, 1, n, 30.0);
+                    pool.step(&[], 1.0, 1, 0, true, &Ones { n }).unwrap();
+                    // step 1: compute fails, the pool drops — comm
+                    // workers exit and the TCP links close mid-step
+                    pool.step(&[], 1.0, 1, 1, true,
+                              &DieAt { n, step: 1 })
+                        .map(|_| ())
+                        .unwrap_err();
+                })
+            };
+            dying.join().expect("dying peer thread panicked");
+            let err = survivor.join().expect("survivor thread panicked");
+            let msg = format!("{err:#}");
+            assert!(msg.contains("pooled step 1 failed"), "{msg}");
+            assert!(msg.contains("ring peer lost"), "{msg}");
+        });
+    }
+
+    /// A peer that wired up but never exchanges (hung process, dead
+    /// NIC) trips the `train.net_timeout_s` knob: the survivor's recv
+    /// times out with the configured horizon in the message rather
+    /// than blocking forever.
+    #[test]
+    fn quiet_socket_peer_trips_net_timeout() {
+        let peers = probe_addrs(2);
+        let n = 48;
+        std::thread::scope(|scope| {
+            let (quiet_tx, quiet_rx) = std::sync::mpsc::channel::<()>();
+            let survivor = {
+                let peers = peers.clone();
+                scope.spawn(move || {
+                    let mut pool = pool_on(&peers, 0, n, 0.3);
+                    let err = pool
+                        .step(&[], 1.0, 1, 0, true, &Ones { n })
+                        .map(|_| ())
+                        .unwrap_err();
+                    let _ = quiet_tx.send(()); // release the quiet peer
+                    err
+                })
+            };
+            let quiet = {
+                let peers = peers.clone();
+                scope.spawn(move || {
+                    // wires the links, then never steps
+                    let pool = pool_on(&peers, 1, n, 30.0);
+                    quiet_rx.recv().ok();
+                    drop(pool);
+                })
+            };
+            let err = survivor.join().expect("survivor thread panicked");
+            quiet.join().expect("quiet peer thread panicked");
+            let msg = format!("{err:#}");
+            assert!(msg.contains("pooled step 0 failed"), "{msg}");
+            assert!(msg.contains("net timeout"), "{msg}");
+            assert!(msg.contains("0.3"), "{msg}");
+        });
+    }
+
+    /// End to end over real processes: two `train` peers on loopback
+    /// sockets; one dies (deterministically, via --inject-fail — its
+    /// process exits and its sockets close).  The survivor must exit
+    /// nonzero with the stranded-peer error naming the step, within
+    /// the net timeout — not hang.
+    #[cfg(unix)]
+    #[test]
+    fn killed_train_peer_process_fails_survivor_loudly() {
+        use std::process::{Command, Stdio};
+
+        let Some(_art) = super::artifacts() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let dir = bertdist::testkit::tmp_dir("fi_socket_kill");
+        let data = dir.join("data");
+        let bin = env!("CARGO_BIN_EXE_bertdist");
+        let out = Command::new(bin)
+            .args(["shard-data", "--out", data.to_str().unwrap(),
+                   "--docs", "12", "--shards", "2", "--vocab-size", "512"])
+            .output().unwrap();
+        assert!(out.status.success(),
+                "{}", String::from_utf8_lossy(&out.stderr));
+
+        let socks = [dir.join("a.sock"), dir.join("b.sock")];
+        let table = format!("unix:{},unix:{}", socks[0].display(),
+                            socks[1].display());
+        let spawn = |i: usize, extra: &[&str]| {
+            let mut c = Command::new(bin);
+            c.args(["train", "--preset", "bert-micro", "--variant",
+                    "fused_f32", "--steps", "6", "--accum", "1",
+                    "--batch", "2", "--seq", "32", "--lr", "1e-3",
+                    "--log-every", "0", "--topo", "2M1G",
+                    "--data-dir", data.to_str().unwrap(),
+                    "--net-timeout", "20",
+                    "--listen",
+                    &format!("unix:{}", socks[i].display()),
+                    "--connect", &table])
+                .args(extra)
+                .stdout(Stdio::piped())
+                .stderr(Stdio::piped());
+            c.spawn().unwrap()
+        };
+        let survivor = spawn(0, &[]);
+        // the "killed" peer: its process exits at data_step 3, closing
+        // its sockets mid-run
+        let dying = spawn(1, &["--inject-fail", "3"]);
+
+        let dying = dying.wait_with_output().unwrap();
+        assert!(!dying.status.success(), "dying peer must exit nonzero");
+        assert!(String::from_utf8_lossy(&dying.stderr)
+                    .contains("injected failure"),
+                "{}", String::from_utf8_lossy(&dying.stderr));
+
+        let survivor = survivor.wait_with_output().unwrap();
+        let err = String::from_utf8_lossy(&survivor.stderr);
+        assert!(!survivor.status.success(),
+                "survivor must fail loudly, not finish: {err}");
+        assert!(err.contains("pooled step 3 failed"), "{err}");
+    }
+}

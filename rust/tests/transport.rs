@@ -1,0 +1,299 @@
+//! Transport-layer integration tests: the golden v1 wire fixture, and
+//! the ISSUE-7 property — a pooled exchange over `SocketTransport`
+//! (loopback, world split across transports) is BITWISE identical to
+//! the same exchange over `InProcTransport`, across comm modes and
+//! wire formats.
+
+use std::sync::Arc;
+
+use bertdist::collectives::pool::{CollectivePool, CommMode, IntraNodeMode,
+                                  MicroStats, RankCompute, WireFormat};
+use bertdist::collectives::transport::{decode_frame, encode_frame,
+                                       PayloadPool};
+use bertdist::collectives::{Frame, SocketTransport, Transport};
+use bertdist::grad::{bucket_ranges, build_buckets, BucketRange};
+use bertdist::model::layout::ParamLayout;
+use bertdist::topology::Topology;
+
+// ---------------------------------------------------------------------------
+// golden wire-format fixture
+// ---------------------------------------------------------------------------
+
+/// The four frames pinned in `tests/data/golden_frame_v1.bin`, in file
+/// order.  Values exercise sign, zero, and the f16 edge (65504 = f16
+/// MAX as an f32 payload; 0x3C00/0xC100 = f16 1.0/-2.5 on the wire).
+fn golden_frames() -> Vec<Frame> {
+    vec![
+        Frame::Bucket { idx: 3, data: vec![0.0, -1.5, 3.25, 65504.0] },
+        Frame::Chunk { idx: 3, chunk: 1, net_s: 0.25,
+                       data: vec![1.0, -2.0] },
+        Frame::RingF32 { tag: 7, data: vec![0.5, -0.5, 3.0] },
+        Frame::RingF16 { tag: 107, data: vec![0x3C00, 0xC100, 0x0000] },
+    ]
+}
+
+#[test]
+fn golden_frame_fixture_is_byte_exact() {
+    // Encoding today must reproduce the pinned v1 bytes exactly — any
+    // layout drift breaks cross-version/cross-machine rings and fails
+    // here, the way golden_v1.bckp pins checkpoints.
+    let golden: &[u8] = include_bytes!("data/golden_frame_v1.bin");
+    let mut ours = Vec::new();
+    let mut scratch = Vec::new();
+    for f in golden_frames() {
+        encode_frame(&f, &mut scratch);
+        ours.extend_from_slice(&scratch);
+    }
+    assert_eq!(ours.as_slice(), golden,
+               "wire layout drifted from golden_frame_v1.bin");
+}
+
+#[test]
+fn golden_frame_fixture_round_trips() {
+    // And decoding the pinned bytes must yield the original frames.
+    let golden: &[u8] = include_bytes!("data/golden_frame_v1.bin");
+    let mut pool = PayloadPool::default();
+    let mut at = 0;
+    let mut decoded = Vec::new();
+    while at < golden.len() {
+        let len = u32::from_le_bytes(golden[at..at + 4].try_into()
+            .unwrap()) as usize;
+        let body = &golden[at + 4..at + 4 + len];
+        decoded.push(decode_frame(body, &mut pool).unwrap());
+        at += 4 + len;
+    }
+    assert_eq!(at, golden.len(), "trailing bytes in fixture");
+    assert_eq!(decoded, golden_frames());
+}
+
+// ---------------------------------------------------------------------------
+// socket == in-proc, bitwise
+// ---------------------------------------------------------------------------
+
+/// Deterministic per-(rank, step, micro, index) gradients.  Every value
+/// is a small multiple of 0.125, so sums are exact in f32 under ANY
+/// association — bitwise differences can only come from the exchange
+/// itself.
+struct ExactGrads {
+    n: usize,
+}
+
+impl RankCompute for ExactGrads {
+    fn micro(&self, rank: usize, step_index: usize, micro: usize,
+             _p: &[f32], _sc: f32, out: &mut Vec<f32>)
+             -> anyhow::Result<MicroStats> {
+        out.resize(self.n, 0.0);
+        for (i, v) in out.iter_mut().enumerate() {
+            *v = (rank as f32 + 1.0) * 0.25
+                + (i % 29) as f32 * 0.5
+                + step_index as f32
+                + micro as f32 * 0.125;
+        }
+        Ok(MicroStats::default())
+    }
+}
+
+fn test_shape(n_a: usize, n_b: usize) -> (usize, Arc<[BucketRange]>) {
+    let layout = ParamLayout::from_shapes(&[
+        ("a".into(), vec![n_a]),
+        ("b".into(), vec![n_b]),
+    ]);
+    let ranges = bucket_ranges(&build_buckets(&layout, 64));
+    (layout.total_len(), ranges)
+}
+
+/// Fresh loopback TCP addresses: bind-to-:0 probes, then released for
+/// the transports to claim.
+fn probe_addrs(n: usize) -> Vec<String> {
+    let listeners: Vec<std::net::TcpListener> = (0..n)
+        .map(|_| std::net::TcpListener::bind("127.0.0.1:0").unwrap())
+        .collect();
+    listeners
+        .iter()
+        .map(|l| format!("127.0.0.1:{}", l.local_addr().unwrap().port()))
+        .collect()
+}
+
+/// Run `steps` pooled exchanges with the world split over `nprocs`
+/// socket transports (one thread standing in for each process) and
+/// return every rank's reduced gradients in world order.
+#[allow(clippy::too_many_arguments)]
+fn socket_world_grads(topo: Topology, nprocs: usize, wire: WireFormat,
+                      mode: CommMode, intra: IntraNodeMode, chunk: usize,
+                      n: usize, ranges: &Arc<[BucketRange]>, steps: usize,
+                      k: usize) -> Vec<Vec<f32>> {
+    let peers = probe_addrs(nprocs);
+    let world = topo.world_size();
+    let mut out: Vec<Vec<f32>> = vec![Vec::new(); world];
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..nprocs)
+            .map(|p| {
+                let peers = peers.clone();
+                let ranges = ranges.clone();
+                scope.spawn(move || {
+                    let mut t = SocketTransport::with_hosts(
+                        world, &peers[p], peers.clone(), 30.0).unwrap();
+                    let mut pool = CollectivePool::with_transport(
+                        topo, n, ranges, wire, mode, intra, chunk, &mut t)
+                        .unwrap();
+                    for s in 0..steps {
+                        pool.step(&[], 1.0, k, s, true, &ExactGrads { n })
+                            .unwrap();
+                    }
+                    pool.local_ranks()
+                        .map(|r| pool.rank_grads(r).clone())
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for (p, h) in handles.into_iter().enumerate() {
+            let grads = h.join().expect("socket world thread panicked");
+            let per = world / nprocs;
+            for (i, g) in grads.into_iter().enumerate() {
+                out[p * per + i] = g;
+            }
+        }
+    });
+    out
+}
+
+/// The in-proc reference for the same shape.
+fn inproc_world_grads(topo: Topology, wire: WireFormat, mode: CommMode,
+                      intra: IntraNodeMode, chunk: usize, n: usize,
+                      ranges: &Arc<[BucketRange]>, steps: usize, k: usize)
+                      -> Vec<Vec<f32>> {
+    let mut pool = CollectivePool::with_intra(topo, n, ranges.clone(),
+                                              wire, mode, intra, chunk);
+    for s in 0..steps {
+        pool.step(&[], 1.0, k, s, true, &ExactGrads { n }).unwrap();
+    }
+    (0..topo.world_size())
+        .map(|r| pool.rank_grads(r).clone())
+        .collect()
+}
+
+fn assert_bitwise(got: &[Vec<f32>], want: &[Vec<f32>], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: world size");
+    for (r, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.len(), w.len(), "{ctx}: rank {r} length");
+        for (i, (x, y)) in g.iter().zip(w).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "{ctx}: rank {r} [{i}]: {x} != {y}");
+        }
+    }
+}
+
+#[test]
+fn flat_socket_exchange_matches_inproc_bitwise() {
+    // 2 "processes", one rank each, flat ring over loopback TCP.
+    let topo = Topology::new(2, 1);
+    let (n, ranges) = test_shape(90, 67);
+    let sock = socket_world_grads(topo, 2, WireFormat::F32, CommMode::Flat,
+                                  IntraNodeMode::Auto, 1 << 16, n, &ranges,
+                                  2, 2);
+    let inproc = inproc_world_grads(topo, WireFormat::F32, CommMode::Flat,
+                                    IntraNodeMode::Auto, 1 << 16, n,
+                                    &ranges, 2, 2);
+    assert_bitwise(&sock, &inproc, "flat f32");
+}
+
+#[test]
+fn flat_socket_f16_wire_matches_inproc_bitwise() {
+    // The f16 quantize-own-chunk schedule must pick the same chunk on
+    // both transports — same bits after the lossy hop.
+    let topo = Topology::new(2, 1);
+    let (n, ranges) = test_shape(90, 67);
+    let sock = socket_world_grads(topo, 2, WireFormat::F16, CommMode::Flat,
+                                  IntraNodeMode::Auto, 1 << 16, n, &ranges,
+                                  2, 1);
+    let inproc = inproc_world_grads(topo, WireFormat::F16, CommMode::Flat,
+                                    IntraNodeMode::Auto, 1 << 16, n,
+                                    &ranges, 2, 1);
+    assert_bitwise(&sock, &inproc, "flat f16");
+}
+
+#[test]
+fn hierarchical_socket_exchange_matches_inproc_bitwise() {
+    // 2M2G split machine-per-process: the PCIe member links stay
+    // in-memory inside each process, only the leader ring crosses the
+    // sockets — exactly the paper's §4.4 resource split.
+    let topo = Topology::new(2, 2);
+    let (n, ranges) = test_shape(130, 77);
+    for intra in [IntraNodeMode::Serial, IntraNodeMode::Ring] {
+        let sock = socket_world_grads(topo, 2, WireFormat::F32,
+                                      CommMode::Hierarchical, intra, 48, n,
+                                      &ranges, 2, 1);
+        let inproc = inproc_world_grads(topo, WireFormat::F32,
+                                        CommMode::Hierarchical, intra, 48,
+                                        n, &ranges, 2, 1);
+        assert_bitwise(&sock, &inproc, &format!("hier {intra:?}"));
+    }
+}
+
+#[test]
+fn socket_exchange_matches_spawn_baseline_bitwise() {
+    // Close the ISSUE-7 triangle: socket pool == spawn-per-step
+    // baseline too (the in-proc pool == baseline leg lives in
+    // trainer::tests).
+    use bertdist::grad::GradAccumulator;
+    use bertdist::trainer::allreduce_buckets;
+
+    let topo = Topology::new(2, 1);
+    let layout = ParamLayout::from_shapes(&[
+        ("a".into(), vec![90]),
+        ("b".into(), vec![67]),
+    ]);
+    let n = layout.total_len();
+    let buckets = build_buckets(&layout, 64);
+    let ranges = bucket_ranges(&buckets);
+
+    let sock = socket_world_grads(topo, 2, WireFormat::F32, CommMode::Flat,
+                                  IntraNodeMode::Auto, 1 << 16, n, &ranges,
+                                  1, 1);
+
+    let grads = ExactGrads { n };
+    let mut accs: Vec<GradAccumulator> =
+        (0..2).map(|_| GradAccumulator::new(n)).collect();
+    for (r, acc) in accs.iter_mut().enumerate() {
+        let mut g = Vec::new();
+        grads.micro(r, 0, 0, &[], 1.0, &mut g).unwrap();
+        acc.add(&g);
+    }
+    allreduce_buckets(&mut accs, &buckets);
+    let baseline: Vec<Vec<f32>> =
+        accs.iter().map(|a| a.buffer().to_vec()).collect();
+    assert_bitwise(&sock, &baseline, "socket vs spawn baseline");
+}
+
+#[test]
+fn transport_reports_its_local_slice() {
+    // The pool only hosts (and only serves grads for) its transport's
+    // rank slice.
+    let topo = Topology::new(2, 1);
+    let (n, ranges) = test_shape(40, 25);
+    let peers = probe_addrs(2);
+    std::thread::scope(|scope| {
+        for p in 0..2 {
+            let peers = peers.clone();
+            let ranges = ranges.clone();
+            scope.spawn(move || {
+                let mut t = SocketTransport::with_hosts(
+                    2, &peers[p], peers.clone(), 30.0).unwrap();
+                assert_eq!(t.local_ranks(), p..p + 1);
+                assert!(!t.fully_local());
+                let mut pool = CollectivePool::with_transport(
+                    topo, n, ranges, WireFormat::F32, CommMode::Flat,
+                    IntraNodeMode::Auto, 1 << 16, &mut t).unwrap();
+                assert_eq!(pool.local_ranks(), p..p + 1);
+                assert_eq!(pool.is_lead(), p == 0);
+                pool.step(&[], 1.0, 1, 0, true, &ExactGrads { n }).unwrap();
+                let _ = pool.rank_grads(p); // local: fine
+                let other = 1 - p;
+                assert!(std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        let _ = pool.rank_grads(other);
+                    })).is_err(), "non-local rank_grads must panic");
+            });
+        }
+    });
+}

@@ -11,13 +11,17 @@
 # (serialized-leader vs chunked-pipelined intra-node exchange at a
 # fixed synthetic 2M4G world) and a BENCH_elastic.json section
 # (post-write verify throughput and the ledger-consult + full-load
-# restart-to-restore latency of the elastic resume path) so future PRs
-# can diff the hot-path, comm-mode, input-pipeline, checkpoint,
-# intra-node, and elastic trajectories.
+# restart-to-restore latency of the elastic resume path) and a
+# BENCH_transport.json section (in-proc vs loopback-socket pooled
+# exchange throughput plus the per-bucket network latency the socket
+# hop adds) so future PRs can diff the hot-path, comm-mode,
+# input-pipeline, checkpoint, intra-node, elastic, and transport
+# trajectories.
 #
 # Usage: scripts/bench_smoke.sh [output.json] [hier_output.json] \
 #                               [input_output.json] [ckpt_output.json] \
-#                               [intra_output.json] [elastic_output.json]
+#                               [intra_output.json] [elastic_output.json] \
+#                               [transport_output.json]
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -28,6 +32,7 @@ INPUT_OUT="${3:-BENCH_input_pipeline.json}"
 CKPT_OUT="${4:-BENCH_checkpoint.json}"
 INTRA_OUT="${5:-BENCH_intranode.json}"
 ELASTIC_OUT="${6:-BENCH_elastic.json}"
+TRANSPORT_OUT="${7:-BENCH_transport.json}"
 export BENCH_QUICK=1
 export BENCH_JSON_OUT="$OUT"
 export BENCH_HIER_JSON_OUT="$HIER_OUT"
@@ -35,11 +40,12 @@ export BENCH_INPUT_JSON_OUT="$INPUT_OUT"
 export BENCH_CKPT_JSON_OUT="$CKPT_OUT"
 export BENCH_INTRA_JSON_OUT="$INTRA_OUT"
 export BENCH_ELASTIC_JSON_OUT="$ELASTIC_OUT"
+export BENCH_TRANSPORT_JSON_OUT="$TRANSPORT_OUT"
 
 cargo bench --bench perf_hotpath
 
 for f in "$OUT" "$HIER_OUT" "$INPUT_OUT" "$CKPT_OUT" "$INTRA_OUT" \
-         "$ELASTIC_OUT"; do
+         "$ELASTIC_OUT" "$TRANSPORT_OUT"; do
     if [[ -f "$f" ]]; then
         echo "bench rows -> $f"
     else

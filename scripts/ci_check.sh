@@ -26,6 +26,12 @@ cargo test --doc -q
 echo "==> cargo test -q --test failure_injection"
 cargo test -q --test failure_injection
 
+# the transport suite proves the socket path bitwise-equal to the
+# in-process exchange (golden wire fixture + loopback worlds); run it
+# explicitly so the multi-process guarantees cannot be silently skipped
+echo "==> cargo test -q --test transport"
+cargo test -q --test transport
+
 echo "==> cargo test -q"
 cargo test -q
 
