@@ -6,8 +6,10 @@
 //! planning, LAMB host step, f16 conversion throughput, the elastic
 //! checkpoint verify/restore path (ISSUE 6, emitted to
 //! BENCH_elastic.json), the in-proc vs loopback-socket transport cost
-//! (ISSUE 7, emitted to BENCH_transport.json), and the end-to-end PJRT
-//! step overhead breakdown.
+//! (ISSUE 7, emitted to BENCH_transport.json), the socket-world
+//! rejoin/re-admission cost with and without the authenticated
+//! handshake (ISSUE 8, emitted to BENCH_rejoin.json), and the
+//! end-to-end PJRT step overhead breakdown.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 //!
@@ -24,8 +26,9 @@ use bertdist::collectives::pool::{CollectivePool, CommMode, IntraNodeMode,
                                   MicroStats, RankCompute, WireFormat};
 use bertdist::topology::Topology;
 use bertdist::collectives::ring::ring_allreduce_inplace;
+use bertdist::collectives::socket::write_stamp;
 use bertdist::collectives::{CollectiveGroup, InProcTransport,
-                            SocketTransport};
+                            RendezvousStamp, SocketTransport};
 use bertdist::data::corpus::SyntheticCorpus;
 use bertdist::data::masking::{build_batch, Batch, MaskingConfig};
 use bertdist::data::prefetch::{BatchCursor, Prefetcher};
@@ -429,6 +432,87 @@ fn main() -> anyhow::Result<()> {
         transport_rows.push(("socket_loopback".to_string(), smin * 1e3,
                              rate, net_bucket_ms));
     }
+
+    // ---- rejoin: socket-world re-admission cost (ISSUE 8) ----
+    // Prices the grow-back path: forming a fresh 2-process socket
+    // world at a stamped rendezvous (epoch 0), tearing it down and
+    // re-forming it at a republished epoch (what the supervised
+    // rejoin does at a restart boundary), and the same join with the
+    // authenticated v2 handshake — the per-connection MAC cost.
+    let n_rejoin = if quick { 16 * 1024 } else { 128 * 1024 };
+    let ranges_rejoin = BucketRange::even_split(n_rejoin, 4);
+    let rejoin_dir = std::env::temp_dir()
+        .join(format!("bertdist_bench_rejoin_{}", std::process::id()));
+    std::fs::create_dir_all(&rejoin_dir)?;
+    let rdv_s = rejoin_dir.join("rdv.txt").to_str().unwrap().to_string();
+    let rejoin_run_id = [0x42u8; 8];
+    // One timed join: republish the rendezvous at `epoch`, then both
+    // "processes" (threads) adopt it, build the pool (links dial and
+    // shake hands here), and run one step.  Returns the wall time of
+    // the whole world formation.
+    let join_world = |epoch: u64, key: Option<Vec<u8>>| -> f64 {
+        let _ = std::fs::remove_file(&rdv_s);
+        write_stamp(&rdv_s, rejoin_run_id, epoch).expect("stamp");
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let ranges = ranges_rejoin.clone();
+                    let key = key.clone();
+                    let rdv_s = rdv_s.clone();
+                    scope.spawn(move || {
+                        let stamp = RendezvousStamp {
+                            run_id: rejoin_run_id,
+                            min_generation: epoch,
+                            window_s: None,
+                        };
+                        let mut t =
+                            SocketTransport::with_rendezvous_stamped(
+                                2, "127.0.0.1:0", &rdv_s, 2, 30.0,
+                                Some(&stamp))
+                            .expect("rejoin rendezvous");
+                        if let Some(k) = &key {
+                            t.set_auth(k, [epoch as u8; 8]);
+                        }
+                        let fill = FillCompute { n: n_rejoin };
+                        let mut p = CollectivePool::with_transport(
+                            topo_net, n_rejoin, ranges, WireFormat::F32,
+                            CommMode::Flat, IntraNodeMode::Auto, 1 << 16,
+                            &mut t)
+                            .expect("rejoin pool");
+                        p.step(&[], 1.0, 1, 0, true, &fill)
+                            .expect("rejoin step");
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        t0.elapsed().as_secs_f64()
+    };
+    let best_of = |epoch0: u64, key: Option<&[u8]>| -> f64 {
+        (0..2)
+            .map(|i| join_world(epoch0 + i, key.map(|k| k.to_vec())))
+            .fold(f64::INFINITY, f64::min)
+    };
+    let mut rejoin_rows: Vec<(String, f64)> = Vec::new();
+    let t_join = best_of(0, None);
+    rows.push("rejoin: fresh rendezvous world + first step (x2)", t_join,
+              String::new());
+    rejoin_rows.push(("join_fresh".to_string(), t_join * 1e3));
+    let t_re = best_of(10, None);
+    rows.push("rejoin: republished-epoch world + first step (x2)", t_re,
+              String::new());
+    rejoin_rows.push(("rejoin_republished".to_string(), t_re * 1e3));
+    let t_auth = best_of(20, Some(b"bench-key"));
+    rows.push("rejoin: authenticated (--net-key) world + first step (x2)",
+              t_auth, String::new());
+    rejoin_rows.push(("join_authenticated".to_string(), t_auth * 1e3));
+    println!("rejoin @ world=2: fresh {:.1} ms, republished epoch {:.1} \
+              ms, authenticated {:.1} ms",
+             t_join * 1e3, t_re * 1e3, t_auth * 1e3);
+    let _ = std::fs::remove_dir_all(&rejoin_dir);
 
     // ---- single-threaded reference allreduce ----
     let (min, _, _) = bench_times(3, || {
@@ -959,6 +1043,28 @@ fn main() -> anyhow::Result<()> {
         root.insert("rows".to_string(), Json::Arr(entries));
         std::fs::write(&transport_path, Json::Obj(root).to_string())?;
         println!("wrote {transport_path}");
+
+        // rejoin/grow-back section in its own file so the ISSUE-8
+        // re-admission cost can be diffed independently
+        let rejoin_path = std::env::var("BENCH_REJOIN_JSON_OUT")
+            .unwrap_or_else(|_| "BENCH_rejoin.json".to_string());
+        let entries: Vec<Json> = rejoin_rows
+            .iter()
+            .map(|(name, ms)| {
+                let mut m = BTreeMap::new();
+                m.insert("phase".to_string(), Json::Str(name.clone()));
+                m.insert("min_ms".to_string(), Json::Num(*ms));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("rejoin".to_string()));
+        root.insert("world".to_string(), Json::Num(2.0));
+        root.insert("payload_elems".to_string(),
+                    Json::Num(n_rejoin as f64));
+        root.insert("rows".to_string(), Json::Arr(entries));
+        std::fs::write(&rejoin_path, Json::Obj(root).to_string())?;
+        println!("wrote {rejoin_path}");
     }
 
     println!("perf_hotpath OK");

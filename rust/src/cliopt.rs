@@ -41,6 +41,11 @@ pub const EXIT_RESUME_CORRUPT: i32 = 4;
 /// directory, or every candidate is ledger-unverified (nothing to fix;
 /// start fresh).
 pub const EXIT_RESUME_NONE: i32 = 5;
+/// `--rendezvous`: the rendezvous file belongs to a different run or an
+/// older generation of this one — a stale artifact that would wire this
+/// process into the wrong world (delete the file, or point the launch
+/// at a fresh path).
+pub const EXIT_STALE_RENDEZVOUS: i32 = 6;
 
 /// An error carrying a specific process exit code.  `cli_main`
 /// downcasts the `anyhow` chain for one of these and exits with

@@ -25,7 +25,7 @@ pub use hierarchical::hierarchical_allreduce_inplace;
 pub use pool::{CollectivePool, CommMode, MicroStats, RankCompute,
                StepOutcome, WireFormat};
 pub use ring::{ring_allreduce_inplace, RingPlan};
-pub use socket::SocketTransport;
+pub use socket::{RendezvousStamp, SocketTransport};
 pub use threaded::{CollectiveGroup, GroupHandle};
 pub use transport::{Frame, InProcTransport, Transport, TransportError};
 

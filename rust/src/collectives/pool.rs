@@ -84,6 +84,7 @@
 //!   true fraction in every mode and schedule.
 
 use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
@@ -299,6 +300,12 @@ pub struct StepOutcome {
     /// copy-back of reduced data and loop bookkeeping are excluded, so
     /// `1 - exposed/total` is a meaningful overlap ratio.
     pub exposed_comm_s: f64,
+    /// Seconds (max over ranks) the step's socket sends spent stalled on
+    /// a full per-link send queue — backpressure from a slow or
+    /// congested peer.  Always 0 for in-process links (unbounded
+    /// channels); a subset of `comm_s`, since the stall happens inside
+    /// the timed exchange.
+    pub net_backpressure_s: f64,
     /// Per-bucket exchange seconds (max over ranks).
     pub bucket_s: Vec<f64>,
     /// Per-bucket PCIe-phase seconds (max over ranks of each rank's
@@ -337,6 +344,7 @@ struct RankStats {
     comm_s: f64,
     comm_pcie_s: f64,
     comm_net_s: f64,
+    net_backpressure_s: f64,
     exposed_comm_s: f64,
     bucket_s: Vec<f64>,
     bucket_pcie_s: Vec<f64>,
@@ -359,12 +367,179 @@ struct Reduced {
     exchange_s: f64,
     /// Seconds of `exchange_s` spent in the inter-node (network) phase.
     net_s: f64,
+    /// Seconds of `exchange_s` this rank's sends spent stalled on a full
+    /// socket send queue (0 on in-process links).
+    backpressure_s: f64,
 }
 
 /// What a comm worker hands back per bucket: the reduced payload, or the
 /// reason the exchange died (a peer disconnect/timeout surfaced by the
 /// transport).
 type ReducedResult = std::result::Result<Reduced, String>;
+
+/// Shared trigger for `--inject-fail net:step[:rank]`: drop a rank's
+/// remote links at a chosen step so elasticity tests can exercise a
+/// REAL mid-exchange link loss (the peer process observes an actual
+/// socket close, not a simulated error).  `usize::MAX` means "disarmed"
+/// for `step` and "any local rank" for `rank`; `current` is the step
+/// index the pool is executing, stored by [`CollectivePool::step`].
+struct NetFault {
+    step: AtomicUsize,
+    rank: AtomicUsize,
+    current: AtomicUsize,
+}
+
+impl NetFault {
+    fn new() -> NetFault {
+        NetFault {
+            step: AtomicUsize::new(usize::MAX),
+            rank: AtomicUsize::new(usize::MAX),
+            current: AtomicUsize::new(usize::MAX),
+        }
+    }
+
+    /// Whether the fault fires for `rank` at the step now executing.
+    fn tripped(&self, rank: usize) -> bool {
+        let armed = self.step.load(Ordering::Relaxed);
+        if armed == usize::MAX || self.current.load(Ordering::Relaxed) != armed
+        {
+            return false;
+        }
+        let r = self.rank.load(Ordering::Relaxed);
+        r == usize::MAX || r == rank
+    }
+}
+
+/// Message both fault wrappers surface once tripped, so the failing
+/// rank's error names the injection rather than a mystery I/O fault.
+const NET_FAULT_MSG: &str = "injected network fault (--inject-fail net)";
+
+/// [`FrameTx`] wrapper that drops the wrapped socket end when its
+/// [`NetFault`] trips.  Dropping closes the underlying stream, so the
+/// remote peer sees a genuine disconnect — exactly what a killed
+/// process would produce.
+struct FaultTx {
+    inner: Option<Box<dyn FrameTx>>,
+    rank: usize,
+    fault: Arc<NetFault>,
+}
+
+impl FrameTx for FaultTx {
+    fn send(&mut self, frame: Frame, pool: &mut PayloadPool)
+            -> std::result::Result<(), TransportError> {
+        if self.fault.tripped(self.rank) {
+            self.inner = None;
+        }
+        match self.inner.as_mut() {
+            Some(tx) => tx.send(frame, pool),
+            None => Err(TransportError::Io(NET_FAULT_MSG.into())),
+        }
+    }
+
+    fn remote(&self) -> bool {
+        true
+    }
+
+    fn take_backpressure_s(&mut self) -> f64 {
+        self.inner.as_mut().map_or(0.0, |tx| tx.take_backpressure_s())
+    }
+}
+
+/// [`FrameRx`] counterpart of [`FaultTx`].
+struct FaultRx {
+    inner: Option<Box<dyn FrameRx>>,
+    rank: usize,
+    fault: Arc<NetFault>,
+}
+
+impl FrameRx for FaultRx {
+    fn recv(&mut self, pool: &mut PayloadPool)
+            -> std::result::Result<Frame, TransportError> {
+        if self.fault.tripped(self.rank) {
+            self.inner = None;
+        }
+        match self.inner.as_mut() {
+            Some(rx) => rx.recv(pool),
+            None => Err(TransportError::Io(NET_FAULT_MSG.into())),
+        }
+    }
+
+    fn remote(&self) -> bool {
+        true
+    }
+}
+
+/// Interpose the fault wrappers on every **remote** link end of `ep`
+/// (in-process ends pass through untouched: the injection models a lost
+/// network peer, and in-proc links cannot be "cut" realistically — nor
+/// does `--inject-fail net` apply without a socket transport).
+fn wrap_net_fault(ep: CommEndpoints, rank: usize, fault: &Arc<NetFault>)
+                  -> CommEndpoints {
+    let wtx = |tx: Box<dyn FrameTx>| -> Box<dyn FrameTx> {
+        if tx.remote() {
+            Box::new(FaultTx { inner: Some(tx), rank, fault: fault.clone() })
+        } else {
+            tx
+        }
+    };
+    let wrx = |rx: Box<dyn FrameRx>| -> Box<dyn FrameRx> {
+        if rx.remote() {
+            Box::new(FaultRx { inner: Some(rx), rank, fault: fault.clone() })
+        } else {
+            rx
+        }
+    };
+    match ep {
+        CommEndpoints::Flat { rank: r, ring_size, net, tx_next, rx_prev } => {
+            CommEndpoints::Flat {
+                rank: r,
+                ring_size,
+                net,
+                tx_next: wtx(tx_next),
+                rx_prev: wrx(rx_prev),
+            }
+        }
+        CommEndpoints::Leader { machine, machines, member_rxs, member_txs,
+                                tx_next, rx_prev } => {
+            CommEndpoints::Leader {
+                machine,
+                machines,
+                member_rxs: member_rxs.into_iter().map(wrx).collect(),
+                member_txs: member_txs.into_iter().map(wtx).collect(),
+                tx_next: wtx(tx_next),
+                rx_prev: wrx(rx_prev),
+            }
+        }
+        CommEndpoints::Member { to_leader, from_leader } => {
+            CommEndpoints::Member {
+                to_leader: wtx(to_leader),
+                from_leader: wrx(from_leader),
+            }
+        }
+        CommEndpoints::ChainLeader { machine, machines, chunk_elems, up_rx,
+                                     down_tx, tx_next, rx_prev } => {
+            CommEndpoints::ChainLeader {
+                machine,
+                machines,
+                chunk_elems,
+                up_rx: wrx(up_rx),
+                down_tx: wtx(down_tx),
+                tx_next: wtx(tx_next),
+                rx_prev: wrx(rx_prev),
+            }
+        }
+        CommEndpoints::ChainMember { chunk_elems, up_rx, up_tx, down_rx,
+                                     down_tx } => {
+            CommEndpoints::ChainMember {
+                chunk_elems,
+                up_rx: up_rx.map(wrx),
+                up_tx: wtx(up_tx),
+                down_rx: wrx(down_rx),
+                down_tx: down_tx.map(wtx),
+            }
+        }
+    }
+}
 
 /// The persistent pool: two threads per *local* rank plus the links
 /// between them, created once and reused for every step until drop.  In
@@ -390,6 +565,9 @@ pub struct CollectivePool {
     accs: Arc<Vec<Mutex<Vec<f32>>>>,
     compute_handles: Vec<JoinHandle<()>>,
     comm_handles: Vec<JoinHandle<()>>,
+    /// Shared `--inject-fail net` trigger; disarmed unless
+    /// [`Self::arm_net_fault`] is called.
+    net_fault: Arc<NetFault>,
 }
 
 impl CollectivePool {
@@ -513,10 +691,12 @@ impl CollectivePool {
                 .map_err(|e| anyhow::anyhow!("transport wiring: {e}"))?;
 
         let (result_tx, result_rx) = channel::<RankResult>();
+        let net_fault = Arc::new(NetFault::new());
         let mut job_txs = Vec::with_capacity(local.len());
         let mut compute_handles = Vec::with_capacity(local.len());
         let mut comm_handles = Vec::with_capacity(local.len());
         for (r, endpoints) in endpoints {
+            let endpoints = wrap_net_fault(endpoints, r, &net_fault);
             let (job_tx, job_rx) = channel::<Job>();
             let (bucket_tx, bucket_rx) = channel::<(usize, Vec<f32>)>();
             let (reduced_tx, reduced_rx) = channel::<ReducedResult>();
@@ -561,7 +741,22 @@ impl CollectivePool {
             accs,
             compute_handles,
             comm_handles,
+            net_fault,
         })
+    }
+
+    /// Arm the `--inject-fail net:step[:rank]` trigger: when the pool
+    /// executes `step`, every **remote** link end owned by `rank` (all
+    /// local ranks when `None`) is dropped mid-exchange — the peer
+    /// process observes a real socket close, and this rank's step fails
+    /// with a named injection error.  A no-op on a pool with no remote
+    /// links (in-process transport): there is no socket to cut, so
+    /// callers gate the flag on a socket transport being configured.
+    pub fn arm_net_fault(&mut self, step: usize, rank: Option<usize>) {
+        self.net_fault.step.store(step, Ordering::Relaxed);
+        self.net_fault
+            .rank
+            .store(rank.unwrap_or(usize::MAX), Ordering::Relaxed);
     }
 
     pub fn world(&self) -> usize {
@@ -660,6 +855,9 @@ impl CollectivePool {
             )
         };
         let t0 = Instant::now();
+        // Publish the executing step index so an armed net fault trips
+        // exactly at its target step (comm workers read it lock-free).
+        self.net_fault.current.store(step_index, Ordering::Relaxed);
         for tx in &self.job_txs {
             tx.send(Job {
                 params: params_static,
@@ -706,6 +904,8 @@ impl CollectivePool {
             out.comm_s = out.comm_s.max(s.comm_s);
             out.comm_pcie_s = out.comm_pcie_s.max(s.comm_pcie_s);
             out.comm_net_s = out.comm_net_s.max(s.comm_net_s);
+            out.net_backpressure_s =
+                out.net_backpressure_s.max(s.net_backpressure_s);
             out.exposed_comm_s = out.exposed_comm_s.max(s.exposed_comm_s);
             for (t, b) in out.bucket_s.iter_mut().zip(&s.bucket_s) {
                 *t = t.max(*b);
@@ -945,6 +1145,7 @@ fn run_rank_step(rank: usize, world: usize, ranges: &[BucketRange],
             stats.comm_s += red.exchange_s;
             stats.comm_pcie_s += pcie_s;
             stats.comm_net_s += red.net_s;
+            stats.net_backpressure_s += red.backpressure_s;
             bucket_bufs[red.idx] = red.data;
         }
     }
@@ -1034,8 +1235,10 @@ fn flat_comm_loop(rank: usize, ring_size: usize, wire: WireFormat,
         // paced by its network hops (paper §3.2), so the whole exchange
         // bills to the network; within one node it is all PCIe.
         let net_s = if net { exchange_s } else { 0.0 };
+        let backpressure_s = tx_next.take_backpressure_s();
         if reduced_tx
-            .send(Ok(Reduced { idx, data, exchange_s, net_s }))
+            .send(Ok(Reduced { idx, data, exchange_s, net_s,
+                               backpressure_s }))
             .is_err()
         {
             break;
@@ -1131,8 +1334,14 @@ fn leader_comm_loop(machine: usize, machines: usize, wire: WireFormat,
             }
         }
         let exchange_s = t0.elapsed().as_secs_f64();
+        let backpressure_s = tx_next.take_backpressure_s()
+            + member_txs
+                .iter_mut()
+                .map(|tx| tx.take_backpressure_s())
+                .sum::<f64>();
         if reduced_tx
-            .send(Ok(Reduced { idx, data, exchange_s, net_s }))
+            .send(Ok(Reduced { idx, data, exchange_s, net_s,
+                               backpressure_s }))
             .is_err()
         {
             break;
@@ -1249,8 +1458,11 @@ fn chain_leader_comm_loop(machine: usize, machines: usize,
             }
         }
         let exchange_s = t0.elapsed().as_secs_f64();
+        let backpressure_s =
+            tx_next.take_backpressure_s() + down_tx.take_backpressure_s();
         if reduced_tx
-            .send(Ok(Reduced { idx, data, exchange_s, net_s }))
+            .send(Ok(Reduced { idx, data, exchange_s, net_s,
+                               backpressure_s }))
             .is_err()
         {
             break;
@@ -1388,8 +1600,13 @@ fn chain_member_comm_loop(chunk_elems: usize,
         // The member's wall covers the whole pipeline; the network
         // share is what the leader measured (capped by our wall).
         let net_s = net_s.min(exchange_s);
+        let backpressure_s = up_tx.take_backpressure_s()
+            + down_tx
+                .as_mut()
+                .map_or(0.0, |tx| tx.take_backpressure_s());
         if reduced_tx
-            .send(Ok(Reduced { idx, data, exchange_s, net_s }))
+            .send(Ok(Reduced { idx, data, exchange_s, net_s,
+                               backpressure_s }))
             .is_err()
         {
             break;
@@ -1436,8 +1653,10 @@ fn member_comm_loop(bucket_rx: Receiver<(usize, Vec<f32>)>,
         // The member's wall covers the whole hierarchy; the network
         // share is whatever the leader measured (capped by our wall).
         let net_s = bnet_s.min(exchange_s);
+        let backpressure_s = to_leader.take_backpressure_s();
         if reduced_tx
-            .send(Ok(Reduced { idx, data: bdata, exchange_s, net_s }))
+            .send(Ok(Reduced { idx, data: bdata, exchange_s, net_s,
+                               backpressure_s }))
             .is_err()
         {
             break;
@@ -2130,6 +2349,7 @@ mod tests {
                         data,
                         exchange_s: 0.0,
                         net_s: 0.0,
+                        backpressure_s: 0.0,
                     }))
                     .unwrap();
                 // ...then die mid-exchange (drops bucket_rx/reduced_tx).

@@ -4,9 +4,9 @@
 //! [`super::transport`] over TCP (`host:port`) or Unix domain sockets
 //! (`unix:/path` or any address containing `/`).  Each directed
 //! comm-graph edge gets its own connection, opened lazily when
-//! [`Transport::link`] reaches that edge and identified by a 14-byte
-//! handshake (`magic, version, kind, from, to`), so accept order never
-//! has to match dial order.
+//! [`Transport::link`] reaches that edge and identified by a handshake
+//! (`magic, version, kind, from, to`), so accept order never has to
+//! match dial order.
 //!
 //! # Peer discovery
 //!
@@ -20,8 +20,25 @@
 //!   address (one line, `O_APPEND` so lines never interleave) and polls
 //!   until `n` lines exist.  Line order assigns process indices.
 //!
+//! Rendezvous files carry a sidecar stamp (`<file>.run`) holding the
+//! run fingerprint and a **generation** counter.  A leftover file from
+//! a different run fails loudly ([`TransportError::StaleRendezvous`])
+//! instead of being silently reused, and the supervised rejoin path
+//! bumps the generation to republish the world at a restart boundary —
+//! see [`SocketTransport::rejoin`].
+//!
 //! The world is split contiguously and evenly across processes:
 //! process `i` of `p` hosts global ranks `i*world/p .. (i+1)*world/p`.
+//!
+//! # Handshake authentication (`--net-key`)
+//!
+//! With a key set ([`SocketTransport::set_auth`]), dials send the
+//! authenticated v2 handshake: the 14 v1 fields (version byte 2), an
+//! 8-byte per-run nonce, and a 16-byte keyed BLAKE2s MAC over both.
+//! Accepts verify the MAC and nonce, so a stale process from an
+//! earlier generation or a foreign job on a shared network is rejected
+//! with a named error before it can touch an exchange.  Without a key,
+//! the unauthenticated v1 handshake is sent and accepted as before.
 //!
 //! # Why sends go through a writer thread
 //!
@@ -30,12 +47,19 @@
 //! breaks that: with payloads larger than the kernel socket buffers,
 //! every rank can block mid-send while its neighbor also blocks
 //! mid-send — classic ring deadlock.  [`SocketTx`] therefore hands
-//! serialized frames to a per-link writer thread over an unbounded
-//! queue; `send` never blocks, preserving the in-process progress
-//! property.  Drained byte buffers come back over a scratch channel so
-//! the steady state allocates nothing.  Dropping a `SocketTx` closes
-//! the queue and joins the writer, flushing any in-flight frames before
-//! process exit (the final all-gather hop must not be lost).
+//! serialized frames to a per-link writer thread over a **bounded**
+//! queue of [`SEND_QUEUE_FRAMES`] frames.  The lock-step ring/chain
+//! schedules keep only a handful of frames in flight per link, far
+//! below the bound, so `send` stays non-blocking on the healthy path;
+//! a full queue means a genuinely congested or stalled peer, and the
+//! sender then waits in a polled loop whose time is charged to the
+//! link's backpressure counter ([`FrameTx::take_backpressure_s`]) and
+//! bounded by the net timeout — a congested peer stalls *visibly*
+//! instead of growing the writer queue without bound.  Drained byte
+//! buffers come back over a scratch channel so the steady state
+//! allocates nothing.  Dropping a `SocketTx` closes the queue and
+//! joins the writer, flushing any in-flight frames before process exit
+//! (the final all-gather hop must not be lost).
 //!
 //! # Failure behavior
 //!
@@ -44,6 +68,8 @@
 //! hanging the survivor, and a closed connection surfaces
 //! [`TransportError::Disconnected`].  Both `remote()` bits are true, so
 //! the pool's protocols propagate (never tolerate) remote failures.
+//! Dials retry on a deterministic bounded-exponential backoff schedule
+//! (`--net-retries` / `--net-backoff-ms`) instead of a blind poll.
 
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
@@ -52,7 +78,9 @@ use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::ops::Range;
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, SyncSender, TryRecvError, TrySendError,
+};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -61,15 +89,32 @@ use super::transport::{
     LinkKind, PayloadPool, Transport, TransportError, HANDSHAKE_MAGIC,
     MAX_FRAME, WIRE_VERSION,
 };
+use crate::util::blake2s;
 
 /// Poll interval while waiting for accepts, rendezvous lines, or a
 /// listening peer.
 const POLL: Duration = Duration::from_millis(10);
 
+/// Poll interval while a full send queue drains; backpressure events
+/// are rare, so the granularity only bounds the accounting jitter.
+const SEND_POLL: Duration = Duration::from_micros(500);
+
 /// Floor on the connection-setup deadline: peers may start seconds
 /// apart, so setup gets at least this long even with a tight frame
 /// timeout.
 const MIN_SETUP: Duration = Duration::from_secs(10);
+
+/// Per-link bound on serialized-but-unwritten frames.  The ring/chain
+/// schedules keep at most a few frames in flight per link, so the
+/// healthy path never fills this; see the module docs.
+const SEND_QUEUE_FRAMES: usize = 64;
+
+/// Cap on one dial-backoff sleep, so the schedule stays responsive
+/// even after many doublings.
+const MAX_BACKOFF_MS: u64 = 500;
+
+/// Version byte of the authenticated handshake.
+const WIRE_VERSION_AUTH: u8 = 2;
 
 fn io_err(e: std::io::Error) -> TransportError {
     match e.kind() {
@@ -219,6 +264,16 @@ impl Stream {
 /// `[magic u32][version u8][kind u8][from u32][to u32]`, little-endian.
 const HANDSHAKE_LEN: usize = 14;
 
+/// v2 adds `[nonce: 8 bytes][mac: 16 bytes]`; the MAC is keyed BLAKE2s
+/// over the first 22 bytes (fields + nonce).
+const HANDSHAKE_AUTH_LEN: usize = HANDSHAKE_LEN + 8 + 16;
+
+/// Key + per-run nonce for the authenticated handshake.
+struct HandshakeAuth {
+    key: Vec<u8>,
+    nonce: [u8; 8],
+}
+
 fn encode_handshake(id: LinkId) -> [u8; HANDSHAKE_LEN] {
     let mut b = [0u8; HANDSHAKE_LEN];
     b[0..4].copy_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
@@ -227,6 +282,29 @@ fn encode_handshake(id: LinkId) -> [u8; HANDSHAKE_LEN] {
     b[6..10].copy_from_slice(&id.from.to_le_bytes());
     b[10..14].copy_from_slice(&id.to.to_le_bytes());
     b
+}
+
+fn encode_handshake_auth(id: LinkId, auth: &HandshakeAuth)
+                         -> [u8; HANDSHAKE_AUTH_LEN] {
+    let mut b = [0u8; HANDSHAKE_AUTH_LEN];
+    b[0..4].copy_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
+    b[4] = WIRE_VERSION_AUTH;
+    b[5] = id.kind.to_u8();
+    b[6..10].copy_from_slice(&id.from.to_le_bytes());
+    b[10..14].copy_from_slice(&id.to.to_le_bytes());
+    b[14..22].copy_from_slice(&auth.nonce);
+    let mac = blake2s::mac16(&auth.key, &b[..22]);
+    b[22..38].copy_from_slice(&mac);
+    b
+}
+
+/// Parse the `kind, from, to` fields shared by both handshake versions.
+fn decode_link_fields(b: &[u8]) -> Result<LinkId, TransportError> {
+    Ok(LinkId {
+        kind: LinkKind::from_u8(b[5])?,
+        from: u32::from_le_bytes(b[6..10].try_into().unwrap()),
+        to: u32::from_le_bytes(b[10..14].try_into().unwrap()),
+    })
 }
 
 fn decode_handshake(b: &[u8; HANDSHAKE_LEN]) -> Result<LinkId, TransportError> {
@@ -242,24 +320,210 @@ fn decode_handshake(b: &[u8; HANDSHAKE_LEN]) -> Result<LinkId, TransportError> {
             b[4], WIRE_VERSION
         )));
     }
-    Ok(LinkId {
-        kind: LinkKind::from_u8(b[5])?,
-        from: u32::from_le_bytes(b[6..10].try_into().unwrap()),
-        to: u32::from_le_bytes(b[10..14].try_into().unwrap()),
-    })
+    decode_link_fields(b)
+}
+
+/// The run fingerprint + generation a rendezvous file is stamped with.
+///
+/// `min_generation` is the lowest epoch this process will join: a fresh
+/// process passes 0 and **adopts** whatever generation the sidecar
+/// holds, while a survivor republishing after a peer loss passes the
+/// bumped epoch so leftovers from earlier generations fail loudly.
+/// `window_s` overrides the setup deadline during a rejoin (the
+/// `--rejoin-window`); `None` keeps the normal setup deadline.
+#[derive(Clone, Debug)]
+pub struct RendezvousStamp {
+    pub run_id: [u8; 8],
+    pub min_generation: u64,
+    pub window_s: Option<f64>,
+}
+
+fn hex8(b: &[u8; 8]) -> String {
+    b.iter().map(|x| format!("{x:02x}")).collect()
+}
+
+fn parse_hex8(s: &str) -> Option<[u8; 8]> {
+    if s.len() != 16 {
+        return None;
+    }
+    let mut out = [0u8; 8];
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = u8::from_str_radix(&s[2 * i..2 * i + 2], 16).ok()?;
+    }
+    Some(out)
+}
+
+/// Path of the sidecar stamp next to a rendezvous file.
+pub fn stamp_path(file: &str) -> String {
+    format!("{file}.run")
+}
+
+/// Read the `run=<hex> gen=<n>` sidecar stamp; `None` when absent.
+pub fn read_stamp(file: &str)
+                  -> Result<Option<([u8; 8], u64)>, TransportError> {
+    let path = stamp_path(file);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == ErrorKind::NotFound => return Ok(None),
+        Err(e) => {
+            return Err(TransportError::Io(format!("stamp {path}: {e}")))
+        }
+    };
+    let mut run = None;
+    let mut gen = None;
+    for tok in text.split_whitespace() {
+        if let Some(v) = tok.strip_prefix("run=") {
+            run = parse_hex8(v);
+        } else if let Some(v) = tok.strip_prefix("gen=") {
+            gen = v.parse::<u64>().ok();
+        }
+    }
+    match (run, gen) {
+        (Some(r), Some(g)) => Ok(Some((r, g))),
+        _ => Err(TransportError::StaleRendezvous(format!(
+            "malformed rendezvous stamp {path}: {text:?}"
+        ))),
+    }
+}
+
+/// Atomically (tmp + rename) write the sidecar stamp.
+pub fn write_stamp(file: &str, run_id: [u8; 8], generation: u64)
+                   -> Result<(), TransportError> {
+    let path = stamp_path(file);
+    let tmp = format!("{path}.tmp{}", std::process::id());
+    let body = format!("run={} gen={generation}\n", hex8(&run_id));
+    std::fs::write(&tmp, body)
+        .map_err(|e| TransportError::Io(format!("stamp {tmp}: {e}")))?;
+    std::fs::rename(&tmp, &path)
+        .map_err(|e| TransportError::Io(format!("stamp {path}: {e}")))
+}
+
+/// Claim or validate the stamp, append our address, poll until the
+/// world is full, and derive our process index.  Shared by first-time
+/// construction and in-place [`SocketTransport::rejoin`].
+fn rendezvous_join(file: &str, nprocs: usize, actual: &str, timeout_s: f64,
+                   stamp: Option<&RendezvousStamp>)
+                   -> Result<(Vec<String>, usize, u64), TransportError> {
+    let generation = match stamp {
+        None => 0,
+        Some(st) => match read_stamp(file)? {
+            None => {
+                // first process of the run claims the file; a racing
+                // same-run peer writes identical bytes, and a racing
+                // foreign run is caught by the address-count check
+                write_stamp(file, st.run_id, st.min_generation)?;
+                st.min_generation
+            }
+            Some((run, gen)) => {
+                if run != st.run_id {
+                    return Err(TransportError::StaleRendezvous(format!(
+                        "rendezvous file {file} is stamped for a different \
+                         run (run {} != {}); delete it or pass a fresh \
+                         --rendezvous path",
+                        hex8(&run),
+                        hex8(&st.run_id)
+                    )));
+                }
+                if gen < st.min_generation {
+                    return Err(TransportError::StaleRendezvous(format!(
+                        "rendezvous file {file} is at generation {gen} but \
+                         this process expects epoch {}; stale stamp from an \
+                         earlier generation?",
+                        st.min_generation
+                    )));
+                }
+                gen
+            }
+        },
+    };
+    {
+        use std::fs::OpenOptions;
+        let mut f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(file)
+            .map_err(|e| {
+                TransportError::Io(format!("rendezvous {file}: {e}"))
+            })?;
+        // one O_APPEND write per process: lines never interleave
+        writeln!(f, "{actual}").map_err(|e| {
+            TransportError::Io(format!("rendezvous {file}: {e}"))
+        })?;
+    }
+    let window = stamp.and_then(|s| s.window_s);
+    let deadline = Instant::now()
+        + match window {
+            Some(w) => Duration::from_secs_f64(w.max(0.0)),
+            None => Duration::from_secs_f64(timeout_s).max(MIN_SETUP),
+        };
+    let peers = loop {
+        let text = std::fs::read_to_string(file).map_err(|e| {
+            TransportError::Io(format!("rendezvous {file}: {e}"))
+        })?;
+        let lines: Vec<String> = text
+            .lines()
+            .map(|l| l.trim().to_string())
+            .filter(|l| !l.is_empty())
+            .collect();
+        if lines.len() >= nprocs {
+            break lines;
+        }
+        if Instant::now() > deadline {
+            return Err(match window {
+                Some(w) => TransportError::Protocol(format!(
+                    "rejoin window expired after {w:.1}s: {}/{nprocs} peers \
+                     republished to {file}",
+                    lines.len()
+                )),
+                None => TransportError::Timeout(timeout_s),
+            });
+        }
+        std::thread::sleep(POLL);
+    };
+    if peers.len() > nprocs {
+        return Err(TransportError::Protocol(format!(
+            "rendezvous file {file} has {} addresses for --nprocs \
+             {nprocs}; stale file from a previous run?",
+            peers.len()
+        )));
+    }
+    let mine: Vec<usize> = peers
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| **p == actual)
+        .map(|(i, _)| i)
+        .collect();
+    let index = match mine.as_slice() {
+        [i] => *i,
+        [] => {
+            return Err(TransportError::Protocol(format!(
+                "own address {actual} missing from rendezvous file \
+                 {file}"
+            )))
+        }
+        _ => {
+            return Err(TransportError::Protocol(format!(
+                "own address {actual} appears twice in rendezvous file \
+                 {file}; stale file from a previous run?"
+            )))
+        }
+    };
+    Ok((peers, index, generation))
 }
 
 /// Sending half of a socket link; see the module docs for why writes
-/// run on their own thread.
+/// run on their own thread and when `send` may stall.
 pub struct SocketTx {
-    queue: Option<Sender<Vec<u8>>>,
+    queue: Option<SyncSender<Vec<u8>>>,
     scratch: Receiver<Vec<u8>>,
     handle: Option<JoinHandle<()>>,
+    timeout_s: f64,
+    backpressure_s: f64,
 }
 
 impl SocketTx {
-    fn spawn(mut stream: Stream, id: LinkId) -> SocketTx {
-        let (q_tx, q_rx) = channel::<Vec<u8>>();
+    fn spawn(mut stream: Stream, id: LinkId, timeout_s: f64) -> SocketTx {
+        let (q_tx, q_rx) = sync_channel::<Vec<u8>>(SEND_QUEUE_FRAMES);
         let (back_tx, back_rx) = channel::<Vec<u8>>();
         let handle = std::thread::Builder::new()
             .name(format!("net-tx-{}-{}", id.from, id.to))
@@ -279,6 +543,8 @@ impl SocketTx {
             queue: Some(q_tx),
             scratch: back_rx,
             handle: Some(handle),
+            timeout_s,
+            backpressure_s: 0.0,
         }
     }
 }
@@ -294,16 +560,55 @@ impl FrameTx for SocketTx {
         };
         encode_frame(&frame, &mut buf);
         pool.recycle(frame);
-        match &self.queue {
-            Some(q) => {
-                q.send(buf).map_err(|_| TransportError::Disconnected)
+        let Some(q) = &self.queue else {
+            return Err(TransportError::Disconnected);
+        };
+        let mut buf = match q.try_send(buf) {
+            Ok(()) => return Ok(()),
+            Err(TrySendError::Disconnected(_)) => {
+                return Err(TransportError::Disconnected)
             }
-            None => Err(TransportError::Disconnected),
+            Err(TrySendError::Full(b)) => b,
+        };
+        // Queue full: a congested or stalled peer.  Wait (visibly) for
+        // the writer to drain, bounded by the net timeout so a dead
+        // peer cannot park us here forever.
+        let t0 = Instant::now();
+        let deadline = (self.timeout_s > 0.0)
+            .then(|| t0 + Duration::from_secs_f64(self.timeout_s));
+        loop {
+            match q.try_send(buf) {
+                Ok(()) => {
+                    self.backpressure_s += t0.elapsed().as_secs_f64();
+                    return Ok(());
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    self.backpressure_s += t0.elapsed().as_secs_f64();
+                    return Err(TransportError::Disconnected);
+                }
+                Err(TrySendError::Full(b)) => {
+                    buf = b;
+                    if let Some(d) = deadline {
+                        if Instant::now() > d {
+                            self.backpressure_s +=
+                                t0.elapsed().as_secs_f64();
+                            return Err(TransportError::Timeout(
+                                self.timeout_s,
+                            ));
+                        }
+                    }
+                    std::thread::sleep(SEND_POLL);
+                }
+            }
         }
     }
 
     fn remote(&self) -> bool {
         true
+    }
+
+    fn take_backpressure_s(&mut self) -> f64 {
+        std::mem::take(&mut self.backpressure_s)
     }
 }
 
@@ -377,9 +682,20 @@ pub struct SocketTransport {
     index: usize,
     peers: Vec<String>,
     listener: Listener,
+    /// The resolved address we published (and keep listening on).
+    listen_actual: String,
     /// Accepted-but-not-yet-claimed connections, keyed by handshake.
     pending: HashMap<LinkId, Stream>,
     timeout_s: f64,
+    /// Rendezvous generation this transport joined (0 in host-list
+    /// mode and for unstamped rendezvous).
+    generation: u64,
+    /// Handshake authentication; `None` keeps the v1 handshake.
+    auth: Option<HandshakeAuth>,
+    /// Dial attempts before giving up; 0 retries until the deadline.
+    net_retries: u32,
+    /// First dial-backoff sleep; doubles per attempt, capped.
+    net_backoff_ms: u64,
     /// Unix socket path to unlink on drop.
     sock_path: Option<PathBuf>,
 }
@@ -407,74 +723,31 @@ impl SocketTransport {
     pub fn with_rendezvous(world: usize, listen: &str, file: &str,
                            nprocs: usize, timeout_s: f64)
                            -> Result<SocketTransport, TransportError> {
+        Self::with_rendezvous_stamped(world, listen, file, nprocs, timeout_s,
+                                      None)
+    }
+
+    /// [`Self::with_rendezvous`] plus stamp validation: with a
+    /// [`RendezvousStamp`], a leftover file from a different run (or an
+    /// older generation than `min_generation`) fails with
+    /// [`TransportError::StaleRendezvous`], and the joined generation
+    /// is readable via [`Self::generation`].
+    pub fn with_rendezvous_stamped(world: usize, listen: &str, file: &str,
+                                   nprocs: usize, timeout_s: f64,
+                                   stamp: Option<&RendezvousStamp>)
+                                   -> Result<SocketTransport, TransportError> {
         if nprocs == 0 {
             return Err(TransportError::Protocol(
                 "--nprocs must be >= 1".into(),
             ));
         }
         let (listener, actual) = Listener::bind(listen)?;
-        {
-            use std::fs::OpenOptions;
-            let mut f = OpenOptions::new()
-                .create(true)
-                .append(true)
-                .open(file)
-                .map_err(|e| {
-                    TransportError::Io(format!("rendezvous {file}: {e}"))
-                })?;
-            // one O_APPEND write per process: lines never interleave
-            writeln!(f, "{actual}").map_err(|e| {
-                TransportError::Io(format!("rendezvous {file}: {e}"))
-            })?;
-        }
-        let deadline = Instant::now()
-            + Duration::from_secs_f64(timeout_s).max(MIN_SETUP);
-        let peers = loop {
-            let text = std::fs::read_to_string(file).map_err(|e| {
-                TransportError::Io(format!("rendezvous {file}: {e}"))
-            })?;
-            let lines: Vec<String> = text
-                .lines()
-                .map(|l| l.trim().to_string())
-                .filter(|l| !l.is_empty())
-                .collect();
-            if lines.len() >= nprocs {
-                break lines;
-            }
-            if Instant::now() > deadline {
-                return Err(TransportError::Timeout(timeout_s));
-            }
-            std::thread::sleep(POLL);
-        };
-        if peers.len() > nprocs {
-            return Err(TransportError::Protocol(format!(
-                "rendezvous file {file} has {} addresses for --nprocs \
-                 {nprocs}; stale file from a previous run?",
-                peers.len()
-            )));
-        }
-        let mine: Vec<usize> = peers
-            .iter()
-            .enumerate()
-            .filter(|(_, p)| **p == actual)
-            .map(|(i, _)| i)
-            .collect();
-        let index = match mine.as_slice() {
-            [i] => *i,
-            [] => {
-                return Err(TransportError::Protocol(format!(
-                    "own address {actual} missing from rendezvous file \
-                     {file}"
-                )))
-            }
-            _ => {
-                return Err(TransportError::Protocol(format!(
-                    "own address {actual} appears twice in rendezvous file \
-                     {file}; stale file from a previous run?"
-                )))
-            }
-        };
-        Self::finish(world, peers, index, listener, &actual, timeout_s)
+        let (peers, index, generation) =
+            rendezvous_join(file, nprocs, &actual, timeout_s, stamp)?;
+        let mut t =
+            Self::finish(world, peers, index, listener, &actual, timeout_s)?;
+        t.generation = generation;
+        Ok(t)
     }
 
     fn finish(world: usize, peers: Vec<String>, index: usize,
@@ -500,10 +773,72 @@ impl SocketTransport {
             index,
             peers,
             listener,
+            listen_actual: listen.to_string(),
             pending: HashMap::new(),
             timeout_s,
+            generation: 0,
+            auth: None,
+            net_retries: 0,
+            net_backoff_ms: 20,
             sock_path,
         })
+    }
+
+    /// Re-enter a republished rendezvous world **in place**: the
+    /// listener stays bound, strangers parked for the previous epoch
+    /// are dropped, and the peer list / process index / hosted rank
+    /// range are rebuilt from the file at `stamp.min_generation` (or
+    /// newer).  Per-edge links of the old epoch must already be gone —
+    /// dropping a pool joins every writer thread — so nothing leaks
+    /// across epochs.
+    pub fn rejoin(&mut self, file: &str, nprocs: usize,
+                  stamp: &RendezvousStamp) -> Result<(), TransportError> {
+        if nprocs == 0 {
+            return Err(TransportError::Protocol(
+                "--nprocs must be >= 1".into(),
+            ));
+        }
+        self.pending.clear();
+        let (peers, index, generation) = rendezvous_join(
+            file, nprocs, &self.listen_actual, self.timeout_s, Some(stamp),
+        )?;
+        if self.world % peers.len() != 0 {
+            return Err(TransportError::Protocol(format!(
+                "world {} does not split evenly over {} processes",
+                self.world,
+                peers.len()
+            )));
+        }
+        self.per_proc = self.world / peers.len();
+        self.local = index * self.per_proc..(index + 1) * self.per_proc;
+        self.index = index;
+        self.peers = peers;
+        self.generation = generation;
+        Ok(())
+    }
+
+    /// Require the authenticated v2 handshake on every subsequent
+    /// link: dials send it, accepts verify its MAC and nonce.  Both
+    /// sides derive `nonce` from the run fingerprint and rendezvous
+    /// generation, so a process from another run — or an earlier
+    /// generation of this one — is rejected loudly.  Set before the
+    /// first `link` call.
+    pub fn set_auth(&mut self, key: &[u8], nonce: [u8; 8]) {
+        self.auth = Some(HandshakeAuth { key: key.to_vec(), nonce });
+    }
+
+    /// Deterministic bounded-exponential dial backoff: sleep
+    /// `backoff_ms << (attempt-1)` (capped at 500 ms) between connect
+    /// attempts; `retries == 0` keeps retrying until the setup
+    /// deadline.
+    pub fn set_connect_backoff(&mut self, retries: u32, backoff_ms: u64) {
+        self.net_retries = retries;
+        self.net_backoff_ms = backoff_ms.max(1);
+    }
+
+    /// Rendezvous generation this transport joined (0 for host lists).
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     /// Which process hosts `rank`.
@@ -515,11 +850,13 @@ impl SocketTransport {
         Instant::now() + Duration::from_secs_f64(self.timeout_s).max(MIN_SETUP)
     }
 
-    /// Dial the process hosting `id.to`, retrying while it may still be
-    /// starting up, then identify the edge with a handshake.
+    /// Dial the process hosting `id.to` on the deterministic backoff
+    /// schedule (the peer may still be starting up), then identify the
+    /// edge with a handshake.
     fn dial(&self, id: LinkId) -> Result<Stream, TransportError> {
         let addr = &self.peers[self.process_of(id.to)];
         let deadline = self.setup_deadline();
+        let mut attempt: u32 = 0;
         let mut stream = loop {
             match Stream::connect(addr) {
                 Ok(s) => break s,
@@ -531,12 +868,21 @@ impl SocketTransport {
                             | ErrorKind::AddrNotAvailable
                     ) =>
                 {
-                    if Instant::now() > deadline {
+                    attempt += 1;
+                    let out_of_retries =
+                        self.net_retries > 0 && attempt >= self.net_retries;
+                    if out_of_retries || Instant::now() > deadline {
                         return Err(TransportError::Io(format!(
-                            "dial {addr} for {id:?}: {e}"
+                            "dial {addr} for {id:?}: {e} (gave up after \
+                             {attempt} attempt(s))"
                         )));
                     }
-                    std::thread::sleep(Duration::from_millis(20));
+                    let shift = (attempt - 1).min(16);
+                    let ms = self
+                        .net_backoff_ms
+                        .saturating_mul(1 << shift)
+                        .min(MAX_BACKOFF_MS);
+                    std::thread::sleep(Duration::from_millis(ms));
                 }
                 Err(e) => {
                     return Err(TransportError::Io(format!(
@@ -545,11 +891,73 @@ impl SocketTransport {
                 }
             }
         };
-        stream
-            .write_all(&encode_handshake(id))
-            .map_err(io_err)?;
+        match &self.auth {
+            Some(a) => stream
+                .write_all(&encode_handshake_auth(id, a))
+                .map_err(io_err)?,
+            None => stream
+                .write_all(&encode_handshake(id))
+                .map_err(io_err)?,
+        }
         stream.flush().map_err(io_err)?;
         Ok(stream)
+    }
+
+    /// Read and verify one handshake: v1 is accepted only when no key
+    /// is set, v2 only when one is, and the v2 MAC + nonce must match.
+    fn read_handshake(&self, s: &mut Stream) -> Result<LinkId, TransportError> {
+        let mut head = [0u8; HANDSHAKE_LEN];
+        s.read_exact(&mut head).map_err(io_err)?;
+        let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+        if magic != HANDSHAKE_MAGIC {
+            return Err(TransportError::Protocol(format!(
+                "bad handshake magic {magic:#x}"
+            )));
+        }
+        match (head[4], &self.auth) {
+            (v, None) if v == WIRE_VERSION => decode_link_fields(&head),
+            (v, Some(_)) if v == WIRE_VERSION => {
+                Err(TransportError::Protocol(
+                    "peer sent an unauthenticated v1 handshake but this \
+                     process requires --net-key (stale or foreign process?)"
+                        .into(),
+                ))
+            }
+            (v, auth) if v == WIRE_VERSION_AUTH => {
+                let mut tail = [0u8; HANDSHAKE_AUTH_LEN - HANDSHAKE_LEN];
+                s.read_exact(&mut tail).map_err(io_err)?;
+                let Some(auth) = auth else {
+                    return Err(TransportError::Protocol(
+                        "peer sent an authenticated handshake but no \
+                         --net-key is set on this process"
+                            .into(),
+                    ));
+                };
+                let mut signed = [0u8; HANDSHAKE_LEN + 8];
+                signed[..HANDSHAKE_LEN].copy_from_slice(&head);
+                signed[HANDSHAKE_LEN..].copy_from_slice(&tail[..8]);
+                let want = blake2s::mac16(&auth.key, &signed);
+                if !blake2s::ct_eq(&want, &tail[8..24]) {
+                    return Err(TransportError::Protocol(
+                        "handshake MAC mismatch (wrong --net-key or \
+                         foreign process)"
+                            .into(),
+                    ));
+                }
+                if tail[..8] != auth.nonce {
+                    return Err(TransportError::Protocol(
+                        "handshake nonce mismatch (stale generation or \
+                         foreign run)"
+                            .into(),
+                    ));
+                }
+                decode_link_fields(&head)
+            }
+            (v, _) => Err(TransportError::Protocol(format!(
+                "wire version {v} != {WIRE_VERSION} (or authenticated \
+                 {WIRE_VERSION_AUTH})"
+            ))),
+        }
     }
 
     /// Accept until the connection whose handshake names `id` arrives;
@@ -570,10 +978,8 @@ impl SocketTransport {
                                 .max(MIN_SETUP),
                         ))
                         .map_err(io_err)?;
-                    let mut hs = [0u8; HANDSHAKE_LEN];
                     let mut s = stream;
-                    s.read_exact(&mut hs).map_err(io_err)?;
-                    let got = decode_handshake(&hs)?;
+                    let got = self.read_handshake(&mut s)?;
                     if got == id {
                         return Ok(s);
                     }
@@ -621,7 +1027,8 @@ impl Transport for SocketTransport {
         if from_local {
             let stream = self.dial(id)?;
             return Ok(LinkEnds {
-                tx: Some(Box::new(SocketTx::spawn(stream, id))),
+                tx: Some(Box::new(SocketTx::spawn(stream, id,
+                                                  self.timeout_s))),
                 rx: None,
             });
         }
@@ -674,29 +1081,113 @@ mod tests {
     }
 
     #[test]
-    fn world_must_split_evenly() {
-        let err = SocketTransport::with_hosts(
-            3,
-            "127.0.0.1:0",
-            vec!["127.0.0.1:0".into(), "127.0.0.1:1".into()],
-            1.0,
-        )
-        .err()
-        .expect("3 ranks over 2 procs must fail");
-        assert!(matches!(err, TransportError::Protocol(_)));
+    fn auth_handshake_layout() {
+        let id = LinkId { kind: LinkKind::FlatRing, from: 0, to: 1 };
+        let auth = HandshakeAuth { key: b"k".to_vec(), nonce: [7u8; 8] };
+        let b = encode_handshake_auth(id, &auth);
+        assert_eq!(b.len(), HANDSHAKE_AUTH_LEN);
+        assert_eq!(b[4], WIRE_VERSION_AUTH);
+        assert_eq!(&b[0..4], &HANDSHAKE_MAGIC.to_le_bytes());
+        assert_eq!(&b[14..22], &[7u8; 8]);
+        assert_eq!(b[22..38], blake2s::mac16(b"k", &b[..22]));
+        // the v1 fields decode identically from the shared prefix
+        assert_eq!(decode_link_fields(&b).unwrap(), id);
     }
 
     #[test]
-    fn listen_must_appear_in_peer_list() {
-        let err = SocketTransport::with_hosts(
-            2,
-            "127.0.0.1:59999",
-            vec!["10.0.0.1:4000".into(), "10.0.0.2:4000".into()],
-            1.0,
+    fn stamp_round_trips() {
+        let dir = crate::testkit::tmp_dir("stamp");
+        let file = dir.join("peers.txt").to_string_lossy().to_string();
+        assert_eq!(read_stamp(&file).unwrap(), None);
+        let run = [1, 2, 3, 4, 5, 6, 7, 8];
+        write_stamp(&file, run, 3).unwrap();
+        assert_eq!(read_stamp(&file).unwrap(), Some((run, 3)));
+        write_stamp(&file, run, 4).unwrap();
+        assert_eq!(read_stamp(&file).unwrap(), Some((run, 4)));
+        std::fs::write(stamp_path(&file), "not a stamp").unwrap();
+        assert!(matches!(read_stamp(&file),
+                         Err(TransportError::StaleRendezvous(_))));
+    }
+
+    #[test]
+    fn stamped_rendezvous_rejects_foreign_run_and_old_generation() {
+        let dir = crate::testkit::tmp_dir("stamp_rdzv");
+        let file = dir.join("peers.txt").to_string_lossy().to_string();
+        write_stamp(&file, [0xaa; 8], 0).unwrap();
+        let stamp = RendezvousStamp {
+            run_id: [0xbb; 8],
+            min_generation: 0,
+            window_s: None,
+        };
+        let err = SocketTransport::with_rendezvous_stamped(
+            1, "127.0.0.1:0", &file, 1, 1.0, Some(&stamp),
         )
         .err()
-        .expect("listen addr absent from peers must fail");
-        assert!(matches!(err, TransportError::Protocol(_)));
+        .expect("foreign run stamp must fail");
+        match err {
+            TransportError::StaleRendezvous(m) => {
+                assert!(m.contains("different run"), "{m}");
+            }
+            other => panic!("expected StaleRendezvous, got {other:?}"),
+        }
+
+        let behind = RendezvousStamp {
+            run_id: [0xaa; 8],
+            min_generation: 2,
+            window_s: None,
+        };
+        let err = SocketTransport::with_rendezvous_stamped(
+            1, "127.0.0.1:0", &file, 1, 1.0, Some(&behind),
+        )
+        .err()
+        .expect("older generation than the epoch must fail");
+        assert!(matches!(err, TransportError::StaleRendezvous(_)));
+    }
+
+    #[test]
+    fn fresh_process_adopts_the_stamped_generation() {
+        let dir = crate::testkit::tmp_dir("stamp_adopt");
+        let file = dir.join("peers.txt").to_string_lossy().to_string();
+        write_stamp(&file, [0xcc; 8], 5).unwrap();
+        let stamp = RendezvousStamp {
+            run_id: [0xcc; 8],
+            min_generation: 0,
+            window_s: None,
+        };
+        let t = SocketTransport::with_rendezvous_stamped(
+            1, "127.0.0.1:0", &file, 1, 1.0, Some(&stamp),
+        )
+        .expect("matching run at a newer generation must join");
+        assert_eq!(t.generation(), 5);
+    }
+
+    #[test]
+    fn dial_gives_up_after_net_retries() {
+        // probe a port with nothing listening behind it
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let dead = l.local_addr().unwrap().to_string();
+        drop(l);
+        let me = TcpListener::bind("127.0.0.1:0").unwrap();
+        let listen = me.local_addr().unwrap().to_string();
+        drop(me);
+        let mut t = SocketTransport::with_hosts(
+            2,
+            &listen,
+            vec![listen.clone(), dead],
+            5.0,
+        )
+        .expect("transport");
+        t.set_connect_backoff(3, 1);
+        let err = t
+            .link(LinkId { kind: LinkKind::FlatRing, from: 0, to: 1 })
+            .err()
+            .expect("dialing a dead peer must fail");
+        match err {
+            TransportError::Io(m) => {
+                assert!(m.contains("gave up after 3 attempt(s)"), "{m}");
+            }
+            other => panic!("expected Io, got {other:?}"),
+        }
     }
 
     #[test]
@@ -787,6 +1278,39 @@ mod tests {
         dialer.join().unwrap();
     }
 
+    #[test]
+    fn bounded_send_queue_times_out_against_a_stalled_peer() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let s = TcpStream::connect(addr).unwrap();
+        // accept but never read: the writer thread eventually blocks
+        // on a full kernel buffer, then the bounded queue fills
+        let (peer, _) = l.accept().unwrap();
+        let id = LinkId { kind: LinkKind::FlatRing, from: 0, to: 1 };
+        let mut tx = SocketTx::spawn(Stream::Tcp(s), id, 0.2);
+        let mut pool = PayloadPool::default();
+        let mut hit = None;
+        for tag in 0..500u32 {
+            let frame = Frame::RingF32 {
+                tag,
+                data: vec![0.25f32; 16 * 1024],
+            };
+            if let Err(e) = tx.send(frame, &mut pool) {
+                hit = Some(e);
+                break;
+            }
+        }
+        match hit.expect("send against a stalled peer must time out") {
+            TransportError::Timeout(s) => assert!((s - 0.2).abs() < 1e-9),
+            other => panic!("expected timeout, got {other:?}"),
+        }
+        // the stall was charged to the backpressure counter, and
+        // take() drains it
+        assert!(tx.take_backpressure_s() > 0.0);
+        assert_eq!(tx.take_backpressure_s(), 0.0);
+        drop(peer);
+    }
+
     #[cfg(unix)]
     #[test]
     fn rendezvous_assigns_indices_by_line_order() {
@@ -812,5 +1336,84 @@ mod tests {
         let mut ranges = [r0, r1];
         ranges.sort_by_key(|r| r.start);
         assert_eq!(ranges, [0..1, 1..2]);
+    }
+
+    #[test]
+    fn rejoin_rebuilds_the_world_at_the_next_generation() {
+        use std::sync::{Arc, Barrier};
+
+        let dir = crate::testkit::tmp_dir("rejoin");
+        let file = dir.join("peers.txt").to_string_lossy().to_string();
+        let run = [0x42u8; 8];
+        let gate = Arc::new(Barrier::new(2));
+
+        let mk = |file: String, gate: Arc<Barrier>| {
+            move || {
+                let stamp = RendezvousStamp {
+                    run_id: run,
+                    min_generation: 0,
+                    window_s: None,
+                };
+                let mut t = SocketTransport::with_rendezvous_stamped(
+                    2, "127.0.0.1:0", &file, 2, 5.0, Some(&stamp),
+                )
+                .expect("epoch-0 transport");
+                assert_eq!(t.generation(), 0);
+                let exchange = |t: &mut SocketTransport| {
+                    let me = t.process_index() as u32;
+                    let mut pool = PayloadPool::default();
+                    let ids = [
+                        LinkId { kind: LinkKind::FlatRing, from: 0, to: 1 },
+                        LinkId { kind: LinkKind::FlatRing, from: 1, to: 0 },
+                    ];
+                    let (mut tx, mut rx) = (None, None);
+                    for id in ids {
+                        let ends = t.link(id).expect("link");
+                        if id.from == me {
+                            tx = ends.tx;
+                        }
+                        if id.to == me {
+                            rx = ends.rx;
+                        }
+                    }
+                    let (mut tx, mut rx) = (tx.unwrap(), rx.unwrap());
+                    tx.send(
+                        Frame::RingF32 { tag: me, data: vec![me as f32] },
+                        &mut pool,
+                    )
+                    .expect("send");
+                    match rx.recv(&mut pool).expect("recv") {
+                        Frame::RingF32 { tag, .. } => {
+                            assert_eq!(tag, 1 - me);
+                        }
+                        other => panic!("wrong frame {other:?}"),
+                    }
+                    // dropping tx joins the writer; no threads leak
+                    // into the next epoch
+                };
+                exchange(&mut t);
+                let winner = t.process_index() == 0;
+                gate.wait();
+                if winner {
+                    // republish epoch 1: truncate addresses, bump stamp
+                    std::fs::write(&file, "").unwrap();
+                    write_stamp(&file, run, 1).unwrap();
+                }
+                gate.wait();
+                let next = RendezvousStamp {
+                    run_id: run,
+                    min_generation: 1,
+                    window_s: Some(5.0),
+                };
+                t.rejoin(&file, 2, &next).expect("rejoin");
+                assert_eq!(t.generation(), 1);
+                exchange(&mut t);
+            }
+        };
+
+        let h0 = std::thread::spawn(mk(file.clone(), gate.clone()));
+        let h1 = std::thread::spawn(mk(file, gate));
+        h0.join().expect("proc 0");
+        h1.join().expect("proc 1");
     }
 }

@@ -83,6 +83,10 @@ pub enum TransportError {
     Protocol(String),
     /// An OS-level I/O error that is none of the above.
     Io(String),
+    /// A rendezvous file stamped for a different run (or an older
+    /// generation than this process's epoch) — a leftover that must be
+    /// refused loudly instead of silently reused.
+    StaleRendezvous(String),
 }
 
 impl fmt::Display for TransportError {
@@ -94,6 +98,9 @@ impl fmt::Display for TransportError {
             }
             TransportError::Protocol(m) => write!(f, "protocol error: {m}"),
             TransportError::Io(m) => write!(f, "io error: {m}"),
+            TransportError::StaleRendezvous(m) => {
+                write!(f, "stale rendezvous: {m}")
+            }
         }
     }
 }
@@ -350,6 +357,14 @@ pub trait FrameTx: Send {
     /// locally (the peer's own rank reports it) or must propagate.
     fn remote(&self) -> bool {
         false
+    }
+
+    /// Seconds this link spent stalled on a full send queue since the
+    /// last call, and reset the counter.  In-process links never stall
+    /// (unbounded channels), so the default is 0; socket links report
+    /// real backpressure — see `SocketTx`.
+    fn take_backpressure_s(&mut self) -> f64 {
+        0.0
     }
 }
 

@@ -70,6 +70,26 @@ pub struct TrainConfig {
     /// in-process transport never times out.  `<= 0` disables the
     /// timeout (wait forever).
     pub net_timeout_s: f64,
+    /// Shared secret authenticating socket handshakes (CLI `--net-key`):
+    /// when non-empty, every link carries a keyed MAC over its handshake
+    /// plus a per-run/per-generation nonce, and unauthenticated or
+    /// foreign peers are rejected at accept time.  Empty (the default)
+    /// keeps the v1 unauthenticated handshake.  Every process in the
+    /// world must agree on the key.
+    pub net_key: String,
+    /// Connect-side dial attempts before giving up (CLI `--net-retries`):
+    /// `0` retries on a deterministic bounded-exponential backoff until
+    /// the setup deadline; `N > 0` caps the attempts.
+    pub net_retries: u32,
+    /// Base backoff between dial attempts, milliseconds (CLI
+    /// `--net-backoff-ms`): doubles per attempt, capped at 500 ms.
+    pub net_backoff_ms: u64,
+    /// Seconds the restart supervisor keeps the rendezvous open for lost
+    /// ranks to rejoin at the SAME world size before degrading to a
+    /// shrink (CLI `--rejoin-window`; 0 disables grow-back and restarts
+    /// straight into the shrink path).  Only meaningful with
+    /// `--rendezvous` and `--max-restarts > 0`.
+    pub rejoin_window_s: f64,
     /// Initial dynamic loss scale (paper §4.2).
     pub init_loss_scale: f64,
     /// RNG seed for data order + masking.
@@ -98,6 +118,10 @@ impl Default for TrainConfig {
             save_every: 0,
             keep_last: 3,
             net_timeout_s: 30.0,
+            net_key: String::new(),
+            net_retries: 0,
+            net_backoff_ms: 20,
+            rejoin_window_s: 0.0,
             init_loss_scale: 65536.0,
             seed: 42,
             log_every: 10,
@@ -210,6 +234,14 @@ impl RunConfig {
             doc.int("train.keep_last", c.train.keep_last as i64) as usize;
         c.train.net_timeout_s =
             doc.float("train.net_timeout_s", c.train.net_timeout_s);
+        c.train.net_key = doc.str("train.net_key", &c.train.net_key);
+        c.train.net_retries =
+            doc.int("train.net_retries", c.train.net_retries as i64) as u32;
+        c.train.net_backoff_ms =
+            doc.int("train.net_backoff_ms",
+                    c.train.net_backoff_ms as i64) as u64;
+        c.train.rejoin_window_s =
+            doc.float("train.rejoin_window_s", c.train.rejoin_window_s);
         c.train.init_loss_scale =
             doc.float("train.init_loss_scale", c.train.init_loss_scale);
         c.train.seed = doc.int("train.seed", c.train.seed as i64) as u64;
@@ -264,6 +296,12 @@ impl RunConfig {
             matches!(self.train.optimizer.as_str(), "lamb" | "adam"),
             "optimizer must be lamb or adam"
         );
+        anyhow::ensure!(self.train.net_key.len() <= 32,
+                        "net_key must be at most 32 bytes");
+        anyhow::ensure!(self.train.net_backoff_ms >= 1,
+                        "net_backoff_ms must be >= 1");
+        anyhow::ensure!(self.train.rejoin_window_s >= 0.0,
+                        "rejoin_window_s must be >= 0");
         Ok(())
     }
 }
@@ -347,6 +385,36 @@ mod tests {
         let mut c = RunConfig::default();
         c.train.net_timeout_s = 0.0;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn rejoin_and_auth_knobs_parse_and_validate() {
+        let doc = TomlDoc::parse(
+            "[train]\nnet_key = \"sekrit\"\nnet_retries = 5\n\
+             net_backoff_ms = 40\nrejoin_window_s = 15.0\n",
+        ).unwrap();
+        let c = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.train.net_key, "sekrit");
+        assert_eq!(c.train.net_retries, 5);
+        assert_eq!(c.train.net_backoff_ms, 40);
+        assert_eq!(c.train.rejoin_window_s, 15.0);
+        c.validate().unwrap();
+        // defaults: unauthenticated, retry-until-deadline, no grow-back
+        let d = RunConfig::default();
+        assert_eq!(d.train.net_key, "");
+        assert_eq!(d.train.net_retries, 0);
+        assert_eq!(d.train.net_backoff_ms, 20);
+        assert_eq!(d.train.rejoin_window_s, 0.0);
+        // over-long keys and degenerate backoff are rejected
+        let mut c = RunConfig::default();
+        c.train.net_key = "k".repeat(33);
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.train.net_backoff_ms = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.train.rejoin_window_s = -1.0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

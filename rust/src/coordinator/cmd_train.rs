@@ -4,13 +4,16 @@
 //! integration tests can drive the exact same path programmatically.
 
 use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 
 use crate::checkpoint::{self, AsyncCheckpointWriter, Checkpoint,
                         Fingerprint, Ledger};
 use crate::cliopt::{Args, CliExit, EXIT_RESUME_CORRUPT,
-                    EXIT_RESUME_MISMATCH, EXIT_RESUME_NONE};
+                    EXIT_RESUME_MISMATCH, EXIT_RESUME_NONE,
+                    EXIT_STALE_RENDEZVOUS};
 use crate::collectives::pool::{CommMode, IntraNodeMode};
-use crate::collectives::{InProcTransport, SocketTransport, Transport};
+use crate::collectives::{socket, InProcTransport, RendezvousStamp,
+                         SocketTransport, Transport, TransportError};
 use crate::config::{RunConfig, TwoPhaseSchedule};
 use crate::data::pipeline::shard_manifest_hash;
 use crate::data::ShardedDataset;
@@ -46,22 +49,147 @@ pub struct NetPlan {
     pub rendezvous: Option<String>,
     /// Expected process count under `rendezvous`.
     pub nprocs: usize,
+    /// Shared handshake secret (`--net-key`); empty keeps the v1
+    /// unauthenticated handshake.
+    pub net_key: String,
+    /// Dial-attempt cap (`--net-retries`; 0 = keep retrying on backoff
+    /// until the setup deadline).
+    pub net_retries: u32,
+    /// Base dial backoff, milliseconds (`--net-backoff-ms`).
+    pub net_backoff_ms: u64,
+    /// Run fingerprint stamped into the rendezvous sidecar so a stale
+    /// file from another run is refused instead of joined.
+    pub run_id: [u8; 8],
+    /// Stamp-generation floor for this attempt: the supervisor bumps it
+    /// when it republishes a rejoin epoch, so a process cannot wire
+    /// itself into a pre-failure address list.
+    pub min_generation: u64,
+    /// Rendezvous-wait override for a rejoin attempt (`--rejoin-window`
+    /// seconds); `None` keeps the plain `net_timeout_s` deadline.
+    pub window_s: Option<f64>,
 }
+
+/// Marker wrapping a socket-transport **setup** failure (bind, dial,
+/// rendezvous timeout, rejoin-window expiry): the restart supervisor
+/// distinguishes "the new world never formed" — where another grow-back
+/// wait would just expire again, so it degrades to the shrink path —
+/// from a mid-run exchange failure, where grow-back is worth trying.
+#[derive(Debug)]
+struct TransportSetupError(String);
+
+impl std::fmt::Display for TransportSetupError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "socket transport setup: {}", self.0)
+    }
+}
+
+impl std::error::Error for TransportSetupError {}
 
 impl NetPlan {
     /// Open the socket transport this plan describes (binds the listen
-    /// address; rendezvous waits for all peers to publish).
+    /// address; rendezvous waits for all peers to publish), then arm
+    /// the connect backoff and — when a key is set — the authenticated
+    /// handshake, BEFORE any link dials (links are wired lazily at pool
+    /// build).  A stale rendezvous file maps to the
+    /// [`EXIT_STALE_RENDEZVOUS`] taxonomy exit; every other setup
+    /// failure wraps in [`TransportSetupError`] for the supervisor.
     fn open(&self, world: usize, timeout_s: f64)
         -> anyhow::Result<SocketTransport> {
         let t = match (&self.peers, &self.rendezvous) {
             (Some(peers), _) => SocketTransport::with_hosts(
                 world, &self.listen, peers.clone(), timeout_s),
-            (None, Some(file)) => SocketTransport::with_rendezvous(
-                world, &self.listen, file, self.nprocs, timeout_s),
+            (None, Some(file)) => {
+                let stamp = RendezvousStamp {
+                    run_id: self.run_id,
+                    min_generation: self.min_generation,
+                    window_s: self.window_s,
+                };
+                SocketTransport::with_rendezvous_stamped(
+                    world, &self.listen, file, self.nprocs, timeout_s,
+                    Some(&stamp))
+            }
             (None, None) => anyhow::bail!(
                 "--listen needs --connect HOSTS or --rendezvous FILE"),
         };
-        t.map_err(|e| anyhow::anyhow!("socket transport setup: {e}"))
+        let mut t = t.map_err(|e| match e {
+            TransportError::StaleRendezvous(_) => CliExit::err(
+                EXIT_STALE_RENDEZVOUS,
+                format!("socket transport setup: {e}")),
+            other => anyhow::Error::new(
+                TransportSetupError(other.to_string())),
+        })?;
+        t.set_connect_backoff(self.net_retries, self.net_backoff_ms);
+        if !self.net_key.is_empty() {
+            // Nonce = MAC(key, run_id || generation): every process
+            // derives the same value for the same epoch without it ever
+            // crossing the wire, so a peer from another run OR an older
+            // generation fails the handshake MAC/nonce check.
+            let mut msg = [0u8; 16];
+            msg[..8].copy_from_slice(&self.run_id);
+            msg[8..].copy_from_slice(&t.generation().to_le_bytes());
+            let mac = crate::util::blake2s::mac16(
+                self.net_key.as_bytes(), &msg);
+            let nonce: [u8; 8] = mac[..8].try_into().unwrap();
+            t.set_auth(self.net_key.as_bytes(), nonce);
+        }
+        Ok(t)
+    }
+}
+
+/// The fingerprint stamped into a rendezvous sidecar: an unkeyed 8-byte
+/// digest of the run identity (config shape + corpus manifest), so two
+/// launches of the SAME run agree on it without coordination while any
+/// other run — or the same config over different data — differs.
+fn derive_run_id(cfg: &RunConfig, batch: usize, seq: usize,
+                 manifest: u64) -> [u8; 8] {
+    let ident = format!(
+        "{}|{}|{}|{}|{}|{}|{}|{}|{:016x}",
+        cfg.train.preset, cfg.train.variant, cfg.train.seed,
+        cfg.cluster.topo, batch, seq, cfg.train.steps,
+        cfg.train.accum_steps, manifest
+    );
+    crate::util::blake2s::mac8(b"", ident.as_bytes())
+}
+
+/// Republish the rendezvous file for rejoin generation `gen`: exactly
+/// one surviving process wins an O_EXCL election on a per-generation
+/// marker, truncates the address list, and advances the stamp; the
+/// losers wait for the stamp to reach `gen`.  Peers only append their
+/// address AFTER validating the stamp, so the truncate cannot race a
+/// concurrent join.  Returns once the file is ready for a fresh join
+/// at the new generation.
+fn republish_epoch(file: &str, gen: u64, run_id: [u8; 8], window_s: f64)
+    -> anyhow::Result<()> {
+    let marker = format!("{file}.epoch{gen}");
+    match std::fs::OpenOptions::new()
+        .write(true)
+        .create_new(true)
+        .open(&marker)
+    {
+        Ok(_) => {
+            std::fs::write(file, b"")?;
+            socket::write_stamp(file, run_id, gen)?;
+            Ok(())
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+            let deadline =
+                Instant::now() + Duration::from_secs_f64(window_s.max(1.0));
+            loop {
+                if let Ok(Some((rid, g))) = socket::read_stamp(file) {
+                    if rid == run_id && g >= gen {
+                        return Ok(());
+                    }
+                }
+                anyhow::ensure!(
+                    Instant::now() <= deadline,
+                    "rejoin: epoch {gen} was claimed but never \
+                     republished to {file}"
+                );
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+        Err(e) => Err(anyhow::Error::new(e)
+            .context(format!("rejoin: cannot claim epoch marker {marker}"))),
     }
 }
 
@@ -606,9 +734,18 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     let nprocs: usize = args.get_parse("nprocs", 0usize)?;
     cfg.train.net_timeout_s =
         args.get_parse("net-timeout", cfg.train.net_timeout_s)?;
+    // Elastic scale-UP knobs (docs/elastic.md): handshake auth, dial
+    // backoff, and the supervised grow-back window.
+    cfg.train.net_key = args.get("net-key", &cfg.train.net_key);
+    cfg.train.net_retries =
+        args.get_parse("net-retries", cfg.train.net_retries)?;
+    cfg.train.net_backoff_ms =
+        args.get_parse("net-backoff-ms", cfg.train.net_backoff_ms)?;
+    cfg.train.rejoin_window_s =
+        args.get_parse("rejoin-window", cfg.train.rejoin_window_s)?;
     args.finish_strict()?;
     cfg.validate()?;
-    let net = match &listen {
+    let mut net = match &listen {
         None => {
             anyhow::ensure!(
                 connect.is_none() && rendezvous.is_none() && nprocs == 0,
@@ -644,9 +781,35 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
                 peers: connect.clone(),
                 rendezvous: rendezvous.clone(),
                 nprocs,
+                net_key: cfg.train.net_key.clone(),
+                net_retries: cfg.train.net_retries,
+                net_backoff_ms: cfg.train.net_backoff_ms,
+                run_id: [0; 8], // derived below once the corpus is known
+                min_generation: 0,
+                window_s: None,
             })
         }
     };
+    if cfg.train.rejoin_window_s > 0.0 {
+        anyhow::ensure!(
+            net.as_ref().map_or(false, |n| n.rendezvous.is_some()),
+            "--rejoin-window needs --rendezvous FILE: grow-back re-admits \
+             lost ranks through the republished rendezvous"
+        );
+        anyhow::ensure!(
+            max_restarts > 0,
+            "--rejoin-window does nothing without --max-restarts N"
+        );
+    }
+    if let Some(f) = inject_fail {
+        if f.net {
+            anyhow::ensure!(
+                listen.is_some(),
+                "--inject-fail net:step[:rank] needs --listen: it cuts \
+                 socket links, and the in-process transport has none"
+            );
+        }
+    }
     if cfg.train.save_every > 0 && ckpt_dir.is_none() {
         anyhow::bail!(
             "--save-every needs --ckpt-dir DIR to hold the rotated files"
@@ -688,6 +851,9 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     // a missing/empty data dir falls through to the friendlier "no
     // data at ..." error below rather than a corpus mismatch.
     let manifest = shard_manifest_hash(&data_dir, "train").unwrap_or(0);
+    if let Some(n) = net.as_mut() {
+        n.run_id = derive_run_id(&cfg, batch, seq, manifest);
+    }
     let mut expected_fps = vec![Fingerprint::of(&cfg, batch, seq)];
     if phase2_steps > 0 {
         let (cfg2, batch2, seq2) = phase2_shape(&cfg, batch);
@@ -738,6 +904,10 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     let auto_resume = resume_path.is_none();
     let mut attempt = 0usize;
     let mut cur_net = net;
+    // Rendezvous generation counter for grow-back: bumped on every
+    // republished epoch so stale peers (pre-failure world) cannot
+    // re-wire themselves into the new one.
+    let mut generation: u64 = 0;
     let outcome = loop {
         attempt += 1;
         let result = train_run_with(
@@ -754,6 +924,12 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             cur_net.as_ref());
         match result {
             Ok(o) => break o,
+            // Taxonomy exits (stale rendezvous, resume failures) are
+            // deliberate refusals, not crashes: retrying would hit the
+            // same wall, so they pass straight through to the caller.
+            Err(e) if e.downcast_ref::<CliExit>().is_some() => {
+                return Err(e)
+            }
             Err(e) if restarts_left > 0 => {
                 restarts_left -= 1;
                 eprintln!("warning: training attempt {attempt} failed: \
@@ -762,20 +938,53 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
                 // the world AFTER the node loss, where the fault (and
                 // possibly the node) is gone.
                 inject = None;
-                // A socket-run restart means a peer is gone: the
-                // survivor relaunches alone, in-process, on the
-                // (usually shrunken) --restart-topo world — the
-                // lost-node elastic path of docs/elastic.md.
-                if cur_net.take().is_some() {
+                // ---- grow-back first (`--rejoin-window`): keep the
+                //      socket world, republish the rendezvous at the
+                //      next generation, and wait for the lost rank to
+                //      be relaunched and re-admitted at the SAME world
+                //      size.  Skipped when the failed attempt never
+                //      formed its world (TransportSetupError — e.g. a
+                //      previous grow-back window expired): another
+                //      wait would just expire again, so the supervisor
+                //      degrades to the shrink path below. ----
+                let grow_back = cur_cfg.train.rejoin_window_s > 0.0
+                    && e.downcast_ref::<TransportSetupError>().is_none()
+                    && cur_net
+                        .as_ref()
+                        .map_or(false, |n| n.rendezvous.is_some());
+                if grow_back {
+                    let window = cur_cfg.train.rejoin_window_s;
+                    let n = cur_net.as_mut().expect("grow_back has a net");
+                    generation += 1;
+                    let file = n
+                        .rendezvous
+                        .clone()
+                        .expect("grow_back is rendezvous-gated");
+                    republish_epoch(&file, generation, n.run_id, window)?;
+                    n.min_generation = generation;
+                    n.window_s = Some(window);
                     println!(
-                        "restart: dropping the socket transport — \
-                         relaunching single-process"
+                        "rejoin: republished rendezvous epoch \
+                         {generation} to {file} — waiting up to \
+                         {window:.0}s for {} process(es)",
+                        n.nprocs
                     );
-                }
-                if let Some(t) = restart_topo {
-                    if cur_cfg.cluster.topo != t {
-                        cur_cfg.cluster.topo = t;
-                        pending_reshape = true;
+                } else {
+                    // A socket-run restart means a peer is gone for
+                    // good: the survivor relaunches alone, in-process,
+                    // on the (usually shrunken) --restart-topo world —
+                    // the lost-node elastic path of docs/elastic.md.
+                    if cur_net.take().is_some() {
+                        println!(
+                            "restart: dropping the socket transport — \
+                             relaunching single-process"
+                        );
+                    }
+                    if let Some(t) = restart_topo {
+                        if cur_cfg.cluster.topo != t {
+                            cur_cfg.cluster.topo = t;
+                            pending_reshape = true;
+                        }
                     }
                 }
                 // Re-derive the expected fingerprints for the

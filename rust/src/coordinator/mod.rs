@@ -72,9 +72,12 @@ COMMANDS:
                    [--restart-topo 1M1G]  surviving-world topology for
                                    supervised relaunches (reshaped
                                    restore); default = keep the same
-                   [--inject-fail S[:R]]  deterministic fault injection
-                                   for tests: fail at data_step S, on
-                                   rank R's last microbatch if given
+                   [--inject-fail [net:]S[:R]]  deterministic fault
+                                   injection for tests: fail at
+                                   data_step S, on rank R's last
+                                   microbatch if given; the net: form
+                                   cuts rank R's socket links mid-
+                                   exchange instead (needs --listen)
                    [--listen ADDR]  make this process ONE participant of
                                    a multi-process world: ranks split
                                    evenly over the processes and bucket
@@ -98,10 +101,29 @@ COMMANDS:
                                    (default 30; <= 0 waits forever) —
                                    a quiet peer surfaces a transport
                                    timeout instead of hanging the run
+                   [--net-key KEY]  authenticate the socket handshake
+                                   with a shared secret (keyed BLAKE2s
+                                   MAC over the handshake + a per-run
+                                   nonce); every process must pass the
+                                   same KEY, <= 32 bytes
+                   [--net-retries N]  extra connect attempts per link
+                                   before giving up (default 0)
+                   [--net-backoff-ms MS]  base backoff between connect
+                                   attempts, doubled per retry and
+                                   capped at 500ms (default 20)
+                   [--rejoin-window S]  with --max-restarts and
+                                   --rendezvous: after a failure, keep
+                                   the world SIZE and wait up to S
+                                   seconds for the lost rank to be
+                                   relaunched and re-admitted (grow-
+                                   back) before degrading to the
+                                   shrink/--restart-topo path
                    [--trace exchange.json]  exchange + data-stall spans
                  resume exit codes: 3 = checkpoint/config mismatch,
                  4 = corrupt and nothing older survived, 5 = nothing
-                 restorable (missing file / empty dir / all unverified)
+                 restorable (missing file / empty dir / all unverified),
+                 6 = stale rendezvous file (different run or older
+                 generation — delete it or use a fresh path)
   shard-data     build bshard files from a synthetic or real corpus (§4.1)
                    --out data/quickstart --docs 64 --shards 8 [--text file]
   simulate       one-iteration timeline, overlap on/off (Figs. 2 & 5);

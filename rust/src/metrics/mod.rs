@@ -156,6 +156,12 @@ pub struct ExchangeTimings {
     /// [`Self::record_input_stall`] so data stalls render next to the
     /// PCIe/network spans in [`Self::to_timeline`].
     pub input_stall_s: f64,
+    /// Total seconds socket sends spent stalled on a full per-link send
+    /// queue (critical-path max over ranks, summed over steps) —
+    /// backpressure from a slow or congested peer, recorded via
+    /// [`Self::record_net_backpressure`].  Always 0 for in-process
+    /// transports.
+    pub net_backpressure_s: f64,
     /// Chunks each bucket's exchange splits into under the pipelined
     /// intra-node schedule (`CollectivePool::chunks_per_bucket`); empty
     /// or 1 = unchunked.  [`Self::to_timeline`] splits a chunked
@@ -204,6 +210,13 @@ impl ExchangeTimings {
         self.input_stall_s += stall_s;
     }
 
+    /// Record one step's send-queue backpressure seconds (paired with
+    /// the same step's [`Self::record`] call, like
+    /// [`Self::record_input_stall`]).
+    pub fn record_net_backpressure(&mut self, stall_s: f64) {
+        self.net_backpressure_s += stall_s;
+    }
+
     /// `1 - exposed/total`: 1.0 means the exchange was fully hidden
     /// behind compute, 0.0 means it was fully serialized (or there was
     /// no communication at all).  Always in `[0, 1]`.
@@ -246,10 +259,12 @@ impl ExchangeTimings {
     pub fn summary(&self) -> String {
         format!(
             "buckets={} comm={:.3}s (pcie {:.3}s / net {:.3}s) \
-             exposed={:.3}s overlap_eff={:.0}% input_stall={:.3}s",
+             exposed={:.3}s overlap_eff={:.0}% input_stall={:.3}s \
+             backpressure={:.3}s",
             self.bucket_s.len(), self.total_comm_s, self.pcie_comm_s,
             self.net_comm_s, self.exposed_comm_s,
-            self.overlap_efficiency() * 100.0, self.input_stall_s
+            self.overlap_efficiency() * 100.0, self.input_stall_s,
+            self.net_backpressure_s
         )
     }
 
@@ -274,6 +289,13 @@ impl ExchangeTimings {
         if self.steps > 0 && self.input_stall_s > 0.0 {
             let stall = self.input_stall_s / self.steps as f64;
             tl.add("data", "input_stall", 0.0, stall);
+        }
+        // Backpressure lane: mean per-step seconds socket sends sat on
+        // a full send queue, on its own "backpressure" track so peer
+        // congestion reads side by side with the exchange spans.
+        if self.steps > 0 && self.net_backpressure_s > 0.0 {
+            let bp = self.net_backpressure_s / self.steps as f64;
+            tl.add("backpressure", "send_queue_full", 0.0, bp);
         }
         let mut t = 0.0f64;
         for b in 0..self.bucket_s.len() {
@@ -605,6 +627,25 @@ mod tests {
         let mut q = ExchangeTimings::default();
         q.record(&[0.1], &[0.1], &[0.0], 0.0);
         assert_eq!(q.to_timeline().busy("data", ""), 0.0);
+    }
+
+    #[test]
+    fn net_backpressure_records_and_renders_its_own_lane() {
+        let mut t = ExchangeTimings::default();
+        t.record(&[0.2], &[0.0], &[0.2], 0.0);
+        t.record_net_backpressure(0.04);
+        t.record(&[0.2], &[0.0], &[0.2], 0.0);
+        t.record_net_backpressure(0.06);
+        assert!((t.net_backpressure_s - 0.1).abs() < 1e-12);
+        assert!(t.summary().contains("backpressure=0.100s"));
+        let tl = t.to_timeline();
+        // mean per-step stall on its own lane
+        assert!((tl.busy("backpressure", "send_queue_full") - 0.05).abs()
+                < 1e-12);
+        // no backpressure recorded -> no lane
+        let mut q = ExchangeTimings::default();
+        q.record(&[0.1], &[0.1], &[0.0], 0.0);
+        assert_eq!(q.to_timeline().busy("backpressure", ""), 0.0);
     }
 
     #[test]

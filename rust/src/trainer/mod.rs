@@ -140,8 +140,8 @@ impl TrainReport {
     }
 }
 
-/// Deterministic fault injection (CLI `--inject-fail step[:rank]`): the
-/// elastic-restart test hook.  With a rank, the failure fires inside
+/// Deterministic fault injection (CLI `--inject-fail [net:]step[:rank]`):
+/// the elastic-restart test hook.  With a rank, the failure fires inside
 /// that rank's compute worker at the FINAL micro-step of the given
 /// `data_step` — after the healthy ranks have begun feeding their comm
 /// workers, the worst spot for the exchange protocol (it exercises the
@@ -149,30 +149,44 @@ impl TrainReport {
 /// Without a rank, the trainer itself fails just before dispatching
 /// that step.  Either way no optimizer state for the step is applied,
 /// so a supervised restart replays it from the last checkpoint.
+///
+/// The `net:` form cuts the **links** instead of the compute: at the
+/// given step the pool drops every remote socket end owned by `rank`
+/// (all local ranks without one) mid-exchange, so the peer process sees
+/// a genuine disconnect — the hook behind the rejoin e2e tests.  It
+/// requires a socket transport (`--listen`); the CLI rejects it
+/// otherwise.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct InjectFail {
     /// The `data_step` at which to fail.
     pub step: usize,
     /// The rank whose compute worker fails; `None` fails the trainer
-    /// loop itself.
+    /// loop itself (or, with `net`, cuts every local rank's links).
     pub rank: Option<usize>,
+    /// Cut the rank's remote transport links instead of failing compute.
+    pub net: bool,
 }
 
 impl InjectFail {
-    /// Parse the CLI form `step[:rank]` (e.g. `120` or `120:3`).
+    /// Parse the CLI form `[net:]step[:rank]` (e.g. `120`, `120:3`, or
+    /// `net:120:3`).
     pub fn parse(s: &str) -> Result<InjectFail> {
-        let (step, rank) = match s.split_once(':') {
-            Some((a, b)) => (a, Some(b)),
-            None => (s, None),
-        };
         let bad = || anyhow::anyhow!(
-            "--inject-fail: '{s}' is not of the form step[:rank]");
+            "--inject-fail: '{s}' is not of the form [net:]step[:rank]");
+        let (net, rest) = match s.trim().strip_prefix("net:") {
+            Some(r) => (true, r),
+            None => (false, s.trim()),
+        };
+        let (step, rank) = match rest.split_once(':') {
+            Some((a, b)) => (a, Some(b)),
+            None => (rest, None),
+        };
         let step = step.trim().parse::<usize>().map_err(|_| bad())?;
         let rank = match rank {
             Some(r) => Some(r.trim().parse::<usize>().map_err(|_| bad())?),
             None => None,
         };
-        Ok(InjectFail { step, rank })
+        Ok(InjectFail { step, rank, net })
     }
 }
 
@@ -290,7 +304,17 @@ impl Trainer {
 
     /// Arm (or clear) deterministic fault injection — see
     /// [`InjectFail`].  Test/chaos hook; never set in production runs.
+    /// The `net` form arms the pool's link-cut trigger instead of the
+    /// trainer-side compute failure (a global `rank` whose links live
+    /// in another process is that process's injection to run).
     pub fn set_inject_fail(&mut self, inject: Option<InjectFail>) {
+        if let Some(f) = inject {
+            if f.net {
+                self.pool.arm_net_fault(f.step, f.rank);
+                self.inject_fail = None;
+                return;
+            }
+        }
         self.inject_fail = inject;
     }
 
@@ -597,6 +621,7 @@ impl Trainer {
             report.exchange.record(&out.bucket_s, &out.bucket_pcie_s,
                                    &out.bucket_net_s, out.exposed_comm_s);
             report.exchange.record_input_stall(out.input_stall_s);
+            report.exchange.record_net_backpressure(out.net_backpressure_s);
             meter.add((batch * seq * k * self.world) as u64);
             sw.lap("pool");
 

@@ -1,0 +1,232 @@
+//! BLAKE2s (RFC 7693) with keyed-MAC support, hand-rolled because the
+//! offline build has no crypto crates (substrate per DESIGN.md §10).
+//!
+//! The transport layer uses the keyed mode to authenticate socket
+//! handshakes (`--net-key`): a 16-byte MAC over the handshake fields
+//! plus a per-run nonce rejects stale or foreign processes before they
+//! can join an exchange.  Only the sequential single-shot path is
+//! implemented — handshakes are tiny, so there is no streaming state.
+//!
+//! Correctness is pinned by golden vectors generated with an
+//! independent implementation (CPython's `hashlib.blake2s`).
+
+/// Initialization vector (RFC 7693 §2.6): the SHA-256 IV words.
+const IV: [u32; 8] = [
+    0x6a09_e667,
+    0xbb67_ae85,
+    0x3c6e_f372,
+    0xa54f_f53a,
+    0x510e_527f,
+    0x9b05_688c,
+    0x1f83_d9ab,
+    0x5be0_cd19,
+];
+
+/// Message-word permutation schedule (RFC 7693 §2.7).  BLAKE2s runs
+/// 10 rounds; row `r` gives the word order for round `r`.
+const SIGMA: [[usize; 16]; 10] = [
+    [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15],
+    [14, 10, 4, 8, 9, 15, 13, 6, 1, 12, 0, 2, 11, 7, 5, 3],
+    [11, 8, 12, 0, 5, 2, 15, 13, 10, 14, 3, 6, 7, 1, 9, 4],
+    [7, 9, 3, 1, 13, 12, 11, 14, 2, 6, 5, 10, 4, 0, 15, 8],
+    [9, 0, 5, 7, 2, 4, 10, 15, 14, 1, 11, 12, 6, 8, 3, 13],
+    [2, 12, 6, 10, 0, 11, 8, 3, 4, 13, 7, 5, 15, 14, 1, 9],
+    [12, 5, 1, 15, 14, 13, 4, 10, 0, 7, 6, 3, 9, 2, 8, 11],
+    [13, 11, 7, 14, 12, 1, 3, 9, 5, 0, 15, 4, 8, 6, 2, 10],
+    [6, 15, 14, 9, 11, 3, 0, 8, 12, 2, 13, 7, 1, 4, 10, 5],
+    [10, 2, 8, 4, 7, 6, 1, 5, 15, 11, 9, 14, 3, 12, 13, 0],
+];
+
+/// The G mixing function (RFC 7693 §3.1), BLAKE2s rotation constants.
+#[inline]
+fn g(v: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize, x: u32, y: u32) {
+    v[a] = v[a].wrapping_add(v[b]).wrapping_add(x);
+    v[d] = (v[d] ^ v[a]).rotate_right(16);
+    v[c] = v[c].wrapping_add(v[d]);
+    v[b] = (v[b] ^ v[c]).rotate_right(12);
+    v[a] = v[a].wrapping_add(v[b]).wrapping_add(y);
+    v[d] = (v[d] ^ v[a]).rotate_right(8);
+    v[c] = v[c].wrapping_add(v[d]);
+    v[b] = (v[b] ^ v[c]).rotate_right(7);
+}
+
+/// Compress one 64-byte block into the state.  `t` is the total byte
+/// count absorbed so far (including this block), `last` marks the final
+/// block of the input.
+fn compress(h: &mut [u32; 8], block: &[u8; 64], t: u64, last: bool) {
+    let mut m = [0u32; 16];
+    for (i, w) in m.iter_mut().enumerate() {
+        *w = u32::from_le_bytes(block[4 * i..4 * i + 4].try_into().unwrap());
+    }
+    let mut v = [0u32; 16];
+    v[..8].copy_from_slice(h);
+    v[8..].copy_from_slice(&IV);
+    v[12] ^= t as u32;
+    v[13] ^= (t >> 32) as u32;
+    if last {
+        v[14] ^= 0xffff_ffff;
+    }
+    for s in &SIGMA {
+        g(&mut v, 0, 4, 8, 12, m[s[0]], m[s[1]]);
+        g(&mut v, 1, 5, 9, 13, m[s[2]], m[s[3]]);
+        g(&mut v, 2, 6, 10, 14, m[s[4]], m[s[5]]);
+        g(&mut v, 3, 7, 11, 15, m[s[6]], m[s[7]]);
+        g(&mut v, 0, 5, 10, 15, m[s[8]], m[s[9]]);
+        g(&mut v, 1, 6, 11, 12, m[s[10]], m[s[11]]);
+        g(&mut v, 2, 7, 8, 13, m[s[12]], m[s[13]]);
+        g(&mut v, 3, 4, 9, 14, m[s[14]], m[s[15]]);
+    }
+    for i in 0..8 {
+        h[i] ^= v[i] ^ v[i + 8];
+    }
+}
+
+/// Single-shot BLAKE2s.  `out_len` is the digest length in bytes
+/// (1..=32); an empty `key` selects the plain hash, a non-empty key
+/// (at most 32 bytes) selects the keyed MAC mode.
+///
+/// Panics on out-of-range `out_len` or an over-long key — both are
+/// compile-time choices at every call site, never runtime input.
+pub fn blake2s(out_len: usize, key: &[u8], msg: &[u8]) -> Vec<u8> {
+    assert!(
+        (1..=32).contains(&out_len),
+        "blake2s digest length {out_len} not in 1..=32"
+    );
+    assert!(key.len() <= 32, "blake2s key longer than 32 bytes");
+
+    let mut h = IV;
+    h[0] ^= 0x0101_0000 ^ ((key.len() as u32) << 8) ^ out_len as u32;
+    let mut t: u64 = 0;
+
+    if !key.is_empty() {
+        // Keyed mode prepends the zero-padded key as a full first block.
+        let mut block = [0u8; 64];
+        block[..key.len()].copy_from_slice(key);
+        t += 64;
+        if msg.is_empty() {
+            compress(&mut h, &block, t, true);
+            return digest(&h, out_len);
+        }
+        compress(&mut h, &block, t, false);
+    }
+
+    if msg.is_empty() {
+        // Unkeyed empty input: one all-zero final block at t = 0.
+        compress(&mut h, &[0u8; 64], 0, true);
+        return digest(&h, out_len);
+    }
+
+    let mut chunks = msg.chunks(64).peekable();
+    while let Some(c) = chunks.next() {
+        let mut block = [0u8; 64];
+        block[..c.len()].copy_from_slice(c);
+        t += c.len() as u64;
+        compress(&mut h, &block, t, chunks.peek().is_none());
+    }
+    digest(&h, out_len)
+}
+
+fn digest(h: &[u32; 8], out_len: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(out_len);
+    for w in h {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out.truncate(out_len);
+    out
+}
+
+/// 16-byte keyed MAC — the handshake-authentication shape.
+pub fn mac16(key: &[u8], msg: &[u8]) -> [u8; 16] {
+    blake2s(16, key, msg).try_into().unwrap()
+}
+
+/// 8-byte keyed digest — run fingerprints and per-epoch nonces.
+pub fn mac8(key: &[u8], msg: &[u8]) -> [u8; 8] {
+    blake2s(8, key, msg).try_into().unwrap()
+}
+
+/// Constant-time equality for MAC comparison: never short-circuits on
+/// the first differing byte.
+pub fn ct_eq(a: &[u8], b: &[u8]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    let mut acc = 0u8;
+    for (x, y) in a.iter().zip(b) {
+        acc |= x ^ y;
+    }
+    acc == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    // Golden vectors generated with CPython: hashlib.blake2s(msg,
+    // digest_size=n, key=k).hexdigest().
+
+    #[test]
+    fn unkeyed_golden_vectors() {
+        assert_eq!(
+            hex(&blake2s(32, b"", b"")),
+            "69217a3079908094e11121d042354a7c1f55b6482ca1a51e1b250dfd1ed0eef9"
+        );
+        assert_eq!(
+            hex(&blake2s(32, b"", b"abc")),
+            "508c5e8c327c14e2e1a72ba34eeb452f37458b209ed63a294d999b4c86675982"
+        );
+    }
+
+    #[test]
+    fn keyed_mac16_golden_vectors() {
+        assert_eq!(
+            hex(&mac16(b"secret", b"hello")),
+            "2f259d17665eaf770e406b485cc47132"
+        );
+        let key: Vec<u8> = (0u8..=31).collect();
+        let msg: Vec<u8> = (0u8..=99).collect();
+        assert_eq!(hex(&mac16(&key, &msg)), "0b67d33f8b859c3157fbabd9e6e47ed0");
+        // Multi-block message (200 bytes > three 64-byte blocks).
+        let long = vec![b'a'; 200];
+        assert_eq!(
+            hex(&mac16(b"net-key", &long)),
+            "121a68c2c804d73ccd25c32388d1a64f"
+        );
+        // Keyed + empty message: the key block is the final block.
+        assert_eq!(hex(&mac16(b"x", b"")), "800238da92946d454ca5f7e878a6a907");
+    }
+
+    #[test]
+    fn keyed_full_width_golden_vector() {
+        assert_eq!(
+            hex(&blake2s(32, b"k", b"The quick brown fox jumps over the lazy dog")),
+            "e12d78ae15072ffa5b5c7464c8096a0ff57deab7489569d108c707b2f3756f5c"
+        );
+    }
+
+    #[test]
+    fn digest_length_is_part_of_the_parameter_block() {
+        // A 16-byte digest is NOT a truncated 32-byte digest.
+        let d16 = blake2s(16, b"", b"abc");
+        let d32 = blake2s(32, b"", b"abc");
+        assert_ne!(d16[..], d32[..16]);
+    }
+
+    #[test]
+    fn key_changes_the_digest() {
+        assert_ne!(mac16(b"a", b"msg"), mac16(b"b", b"msg"));
+        assert_ne!(mac8(b"a", b"msg")[..], mac16(b"a", b"msg")[..8]);
+    }
+
+    #[test]
+    fn ct_eq_matches_slice_equality() {
+        assert!(ct_eq(b"abcd", b"abcd"));
+        assert!(!ct_eq(b"abcd", b"abce"));
+        assert!(!ct_eq(b"abc", b"abcd"));
+        assert!(ct_eq(b"", b""));
+    }
+}

@@ -1,10 +1,12 @@
-//! Small shared utilities: deterministic PRNG, CRC32, formatting helpers,
-//! a stopwatch, and terminal plotting for the benchmark harnesses.
+//! Small shared utilities: deterministic PRNG, CRC32, BLAKE2s (keyed
+//! MAC for handshake auth), formatting helpers, a stopwatch, and
+//! terminal plotting for the benchmark harnesses.
 //!
 //! These exist because the offline build has no `rand`, `humantime`, or
 //! plotting crates — they are substrates per DESIGN.md §10.
 
 pub mod ascii_plot;
+pub mod blake2s;
 pub mod crc32;
 pub mod fmt;
 pub mod prng;

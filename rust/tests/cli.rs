@@ -723,6 +723,365 @@ fn train_socket_peer_loss_restarts_single_process_and_matches_clean_run() {
                 from the same boundary must converge bitwise");
 }
 
+/// Poll `file` until it holds exactly `n` non-empty lines (rendezvous
+/// rank order is append order, so tests serialize joins to pin which
+/// process becomes rank 0 / the lead).
+#[cfg(unix)]
+fn wait_for_rendezvous_lines(file: &std::path::Path, n: usize) {
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs(30);
+    loop {
+        let lines = std::fs::read_to_string(file)
+            .map(|t| t.lines().filter(|l| !l.trim().is_empty()).count())
+            .unwrap_or(0);
+        if lines == n {
+            return;
+        }
+        assert!(std::time::Instant::now() < deadline,
+                "rendezvous file {} never reached {n} line(s)",
+                file.display());
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn train_socket_peer_loss_rejoins_at_same_size_and_matches_clean_run() {
+    // the ISSUE-8 grow-back contract: a 2-process rendezvous run loses
+    // rank 1's process to a cut link mid-exchange; within
+    // --rejoin-window the supervisor republishes the rendezvous at
+    // epoch 1 instead of shrinking, a REPLACEMENT process joins at the
+    // SAME world size from the shared rotation checkpoint, and the
+    // final parameters are bitwise-equal to a clean resume of that
+    // boundary on the same topology.
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    use std::io::BufRead;
+    use bertdist::checkpoint::Checkpoint;
+    let data = bertdist::testkit::tmp_dir("cli_rejoin_data");
+    let rot_a = bertdist::testkit::tmp_ckpt_dir("cli_rejoin_rot_a");
+    let rot_b = bertdist::testkit::tmp_ckpt_dir("cli_rejoin_rot_b");
+    let outdir = bertdist::testkit::tmp_dir("cli_rejoin_out");
+    let out = bin()
+        .args(["shard-data", "--out", data.path().to_str().unwrap(),
+               "--docs", "12", "--shards", "2", "--vocab-size", "512"])
+        .output().unwrap();
+    assert!(out.status.success(),
+            "{}", String::from_utf8_lossy(&out.stderr));
+
+    let rdv = outdir.path().join("rdv.txt");
+    let rdv_s = rdv.to_str().unwrap().to_string();
+    let sock = |i: usize| {
+        format!("unix:{}/p{i}.sock", outdir.path().to_str().unwrap())
+    };
+    let base = socket_train_args("1M2G", "6", data.path());
+
+    // survivor: lead process (joins first => rank 0), supervised with
+    // one restart and a 20 s grow-back window
+    let final_a = outdir.path().join("final_a.bckp");
+    let mut a = base.clone();
+    a.extend(["--listen".into(), sock(0),
+              "--rendezvous".into(), rdv_s.clone(),
+              "--nprocs".into(), "2".into(),
+              "--net-timeout".into(), "20".into(),
+              "--save-every".into(), "2".into(),
+              "--keep-last".into(), "3".into(),
+              "--ckpt-dir".into(), rot_a.path().to_str().unwrap().into(),
+              "--max-restarts".into(), "1".into(),
+              "--rejoin-window".into(), "20".into(),
+              "--ckpt".into(), final_a.to_str().unwrap().into()]);
+    let mut pa = spawn_train(&a);
+    wait_for_rendezvous_lines(&rdv, 1);
+
+    // doomed peer: its socket links are CUT at data_step 5 (a real
+    // process loss from the survivor's side), and with no restarts of
+    // its own it dies
+    let mut b = base.clone();
+    b.extend(["--listen".into(), sock(1),
+              "--rendezvous".into(), rdv_s.clone(),
+              "--nprocs".into(), "2".into(),
+              "--net-timeout".into(), "20".into(),
+              "--inject-fail".into(), "net:5".into()]);
+    let pb = spawn_train(&b);
+    let ob = pb.wait_with_output().unwrap();
+    assert!(!ob.status.success(),
+            "the doomed peer must die: stdout:\n{}\nstderr:\n{}",
+            String::from_utf8_lossy(&ob.stdout),
+            String::from_utf8_lossy(&ob.stderr));
+    assert!(String::from_utf8_lossy(&ob.stderr)
+                .contains("injected network fault"),
+            "{}", String::from_utf8_lossy(&ob.stderr));
+
+    // watch the survivor's stdout for the republished epoch, THEN
+    // launch the replacement — it adopts generation 1 from the stamp
+    // and restores the same rotation boundary the survivor picked
+    let mut sa_lines: Vec<String> = Vec::new();
+    let mut reader = std::io::BufReader::new(
+        pa.stdout.take().expect("survivor stdout piped"));
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).unwrap();
+        assert!(n > 0,
+                "survivor exited before republishing: {}",
+                sa_lines.join("\n"));
+        sa_lines.push(line.trim_end().to_string());
+        if sa_lines.last().unwrap()
+            .contains("rejoin: republished rendezvous epoch 1") {
+            break;
+        }
+    }
+    wait_for_rendezvous_lines(&rdv, 1); // survivor re-registered first
+    let mut c = base.clone();
+    c.extend(["--listen".into(), sock(2),
+              "--rendezvous".into(), rdv_s.clone(),
+              "--nprocs".into(), "2".into(),
+              "--net-timeout".into(), "20".into(),
+              "--resume".into(), rot_a.path().to_str().unwrap().into()]);
+    let pc = spawn_train(&c);
+
+    for line in reader.lines() {
+        sa_lines.push(line.unwrap());
+    }
+    let status_a = pa.wait().unwrap();
+    let oc = pc.wait_with_output().unwrap();
+    let sa = sa_lines.join("\n");
+    let sc = String::from_utf8_lossy(&oc.stdout);
+    assert!(status_a.success(), "survivor stdout:\n{sa}");
+    assert!(oc.status.success(),
+            "replacement stdout:\n{sc}\nstderr:\n{}",
+            String::from_utf8_lossy(&oc.stderr));
+    // the grow-back kept the world size: same topology, boundary 4
+    assert!(sa.contains("restart 1: relaunching on 1M2G from data_step 4"),
+            "{sa}");
+    assert!(sa.contains("phase 1 done"), "{sa}");
+    assert!(sc.contains("resume checkpoint"), "{sc}");
+    assert!(sc.contains("4/6 phase-1 steps already done"), "{sc}");
+
+    // baseline: a clean 1M2G run with the same rotation plan, then an
+    // exact resume of its step-4 boundary — the state the survivor and
+    // replacement reconstructed across the rejoin
+    let mut b1 = base.clone();
+    b1.extend(["--save-every".into(), "2".into(),
+               "--keep-last".into(), "3".into(),
+               "--ckpt-dir".into(),
+               rot_b.path().to_str().unwrap().into()]);
+    let out = bin().current_dir(env!("CARGO_MANIFEST_DIR")).args(&b1)
+        .output().unwrap();
+    assert!(out.status.success(),
+            "{}", String::from_utf8_lossy(&out.stderr));
+    let final_b = outdir.path().join("final_b.bckp");
+    let mut b2 = base.clone();
+    b2.extend(["--resume".into(), rot_b.path().to_str().unwrap().into(),
+               "--ckpt".into(), final_b.to_str().unwrap().into()]);
+    let out = bin().current_dir(env!("CARGO_MANIFEST_DIR")).args(&b2)
+        .output().unwrap();
+    assert!(out.status.success(),
+            "stdout:\n{}\nstderr:\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr));
+
+    let ca = Checkpoint::load(&final_a).unwrap();
+    let cb = Checkpoint::load(&final_b).unwrap();
+    assert_eq!(ca.step, 6);
+    assert_eq!(ca, cb,
+               "a grow-back rejoin and a clean exact resume from the \
+                same boundary must converge bitwise");
+}
+
+#[cfg(unix)]
+#[test]
+fn train_rejoin_window_expiry_degrades_to_shrink_restart() {
+    // when nobody rejoins inside --rejoin-window, the supervisor must
+    // not hang: the expired window surfaces as a setup failure, the
+    // NEXT restart drops the socket transport, and the run finishes
+    // shrunken on --restart-topo — bitwise equal to a clean reshaped
+    // resume of the same boundary.
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    use bertdist::checkpoint::{self, Checkpoint};
+    let data = bertdist::testkit::tmp_dir("cli_rejoin_exp_data");
+    let rot_a = bertdist::testkit::tmp_ckpt_dir("cli_rejoin_exp_rot_a");
+    let rot_b = bertdist::testkit::tmp_ckpt_dir("cli_rejoin_exp_rot_b");
+    let outdir = bertdist::testkit::tmp_dir("cli_rejoin_exp_out");
+    let out = bin()
+        .args(["shard-data", "--out", data.path().to_str().unwrap(),
+               "--docs", "12", "--shards", "2", "--vocab-size", "512"])
+        .output().unwrap();
+    assert!(out.status.success(),
+            "{}", String::from_utf8_lossy(&out.stderr));
+
+    let rdv = outdir.path().join("rdv.txt");
+    let rdv_s = rdv.to_str().unwrap().to_string();
+    let sock = |i: usize| {
+        format!("unix:{}/p{i}.sock", outdir.path().to_str().unwrap())
+    };
+    let base = socket_train_args("1M2G", "6", data.path());
+
+    // survivor: two restarts — the first burns the 2 s rejoin window
+    // (no replacement will come), the second shrinks to 1M1G
+    let final_a = outdir.path().join("final_a.bckp");
+    let mut a = base.clone();
+    a.extend(["--listen".into(), sock(0),
+              "--rendezvous".into(), rdv_s.clone(),
+              "--nprocs".into(), "2".into(),
+              "--net-timeout".into(), "20".into(),
+              "--save-every".into(), "2".into(),
+              "--keep-last".into(), "3".into(),
+              "--ckpt-dir".into(), rot_a.path().to_str().unwrap().into(),
+              "--max-restarts".into(), "2".into(),
+              "--rejoin-window".into(), "2".into(),
+              "--restart-topo".into(), "1M1G".into(),
+              "--ckpt".into(), final_a.to_str().unwrap().into()]);
+    let pa = spawn_train(&a);
+    wait_for_rendezvous_lines(&rdv, 1);
+    let mut b = base.clone();
+    b.extend(["--listen".into(), sock(1),
+              "--rendezvous".into(), rdv_s.clone(),
+              "--nprocs".into(), "2".into(),
+              "--net-timeout".into(), "20".into(),
+              "--inject-fail".into(), "net:5".into()]);
+    let pb = spawn_train(&b);
+    let ob = pb.wait_with_output().unwrap();
+    assert!(!ob.status.success(),
+            "the doomed peer must die: {}",
+            String::from_utf8_lossy(&ob.stderr));
+    let oa = pa.wait_with_output().unwrap();
+    let (sa, ea) = (String::from_utf8_lossy(&oa.stdout),
+                    String::from_utf8_lossy(&oa.stderr));
+    assert!(oa.status.success(), "survivor stdout:\n{sa}\nstderr:\n{ea}");
+    // restart 1: grow-back attempted at the same size...
+    assert!(sa.contains("rejoin: republished rendezvous epoch 1"), "{sa}");
+    assert!(sa.contains("restart 1: relaunching on 1M2G from data_step 4"),
+            "{sa}");
+    // ...which expires (nobody rejoined) and degrades to the shrink
+    assert!(ea.contains("rejoin window expired"), "{ea}");
+    assert!(sa.contains("restart: dropping the socket transport"), "{sa}");
+    assert!(sa.contains("restart 2: relaunching on 1M1G from data_step 4"),
+            "{sa}");
+    assert!(sa.contains("phase 1 done"), "{sa}");
+
+    // baseline: clean rotation run, then a manual reshaped restart of
+    // the step-4 boundary on the surviving 1M1G world
+    let mut b1 = base.clone();
+    b1.extend(["--save-every".into(), "2".into(),
+               "--keep-last".into(), "3".into(),
+               "--ckpt-dir".into(),
+               rot_b.path().to_str().unwrap().into()]);
+    let out = bin().current_dir(env!("CARGO_MANIFEST_DIR")).args(&b1)
+        .output().unwrap();
+    assert!(out.status.success(),
+            "{}", String::from_utf8_lossy(&out.stderr));
+    let boundary = rot_b.path().join(checkpoint::checkpoint_file_name(4));
+    let final_b = outdir.path().join("final_b.bckp");
+    let mut b2 = socket_train_args("1M1G", "6", data.path());
+    b2.extend(["--resume-reshape".into(),
+               boundary.to_str().unwrap().into(),
+               "--ckpt".into(), final_b.to_str().unwrap().into()]);
+    let out = bin().current_dir(env!("CARGO_MANIFEST_DIR")).args(&b2)
+        .output().unwrap();
+    assert!(out.status.success(),
+            "stdout:\n{}\nstderr:\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr));
+
+    let ca = Checkpoint::load(&final_a).unwrap();
+    let cb = Checkpoint::load(&final_b).unwrap();
+    assert_eq!(ca.step, 6);
+    assert_eq!(ca, cb,
+               "an expired rejoin window must fall back to the same \
+                state as a clean reshaped resume");
+}
+
+#[cfg(unix)]
+#[test]
+fn train_wrong_net_key_is_rejected_loudly() {
+    // two processes with DIFFERENT --net-key must refuse to form a
+    // world: the accept side names the MAC mismatch and both exit
+    // nonzero, long before any gradient crosses the wire.
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let data = bertdist::testkit::tmp_dir("cli_badkey_data");
+    let outdir = bertdist::testkit::tmp_dir("cli_badkey_out");
+    let out = bin()
+        .args(["shard-data", "--out", data.path().to_str().unwrap(),
+               "--docs", "12", "--shards", "2", "--vocab-size", "512"])
+        .output().unwrap();
+    assert!(out.status.success(),
+            "{}", String::from_utf8_lossy(&out.stderr));
+
+    let socks: Vec<String> = (0..2)
+        .map(|i| format!("unix:{}/p{i}.sock",
+                         outdir.path().to_str().unwrap()))
+        .collect();
+    let connect = socks.join(",");
+    let base = socket_train_args("1M2G", "1", data.path());
+    let mut a = base.clone();
+    a.extend(["--listen".into(), socks[0].clone(),
+              "--connect".into(), connect.clone(),
+              "--net-timeout".into(), "5".into(),
+              "--net-key".into(), "right-key".into()]);
+    let mut b = base;
+    b.extend(["--listen".into(), socks[1].clone(),
+              "--connect".into(), connect,
+              "--net-timeout".into(), "5".into(),
+              "--net-key".into(), "wrong-key".into()]);
+    let pa = spawn_train(&a);
+    let pb = spawn_train(&b);
+    let oa = pa.wait_with_output().unwrap();
+    let ob = pb.wait_with_output().unwrap();
+    assert!(!oa.status.success() && !ob.status.success(),
+            "mismatched keys must fail both processes");
+    let errs = format!("{}{}",
+                       String::from_utf8_lossy(&oa.stderr),
+                       String::from_utf8_lossy(&ob.stderr));
+    assert!(errs.contains("MAC mismatch"), "{errs}");
+}
+
+#[cfg(unix)]
+#[test]
+fn train_stale_rendezvous_file_exits_with_its_own_code() {
+    // a rendezvous file stamped by a DIFFERENT run must be refused
+    // with the dedicated taxonomy exit (6), never silently adopted —
+    // and never retried by the supervisor.
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let data = bertdist::testkit::tmp_dir("cli_stale_data");
+    let outdir = bertdist::testkit::tmp_dir("cli_stale_out");
+    let out = bin()
+        .args(["shard-data", "--out", data.path().to_str().unwrap(),
+               "--docs", "12", "--shards", "2", "--vocab-size", "512"])
+        .output().unwrap();
+    assert!(out.status.success(),
+            "{}", String::from_utf8_lossy(&out.stderr));
+
+    let rdv = outdir.path().join("rdv.txt");
+    let rdv_s = rdv.to_str().unwrap().to_string();
+    // stamp the file as a foreign run's, generation 0
+    bertdist::collectives::socket::write_stamp(&rdv_s, [0xAA; 8], 0)
+        .unwrap();
+    let mut a = socket_train_args("1M2G", "1", data.path());
+    a.extend(["--listen".into(),
+              format!("unix:{}/p0.sock", outdir.path().to_str().unwrap()),
+              "--rendezvous".into(), rdv_s,
+              "--nprocs".into(), "2".into(),
+              "--net-timeout".into(), "5".into()]);
+    let out = bin().current_dir(env!("CARGO_MANIFEST_DIR")).args(&a)
+        .output().unwrap();
+    assert_eq!(out.status.code(), Some(6),
+               "stderr:\n{}", String::from_utf8_lossy(&out.stderr));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("stale rendezvous"), "{err}");
+    assert!(err.contains("different run"), "{err}");
+}
+
 #[test]
 fn train_rejects_oversized_vocab() {
     if !have_artifacts() {

@@ -191,12 +191,27 @@ mod inject_fail {
     #[test]
     fn parse_accepts_step_and_optional_rank() {
         assert_eq!(InjectFail::parse("7").unwrap(),
-                   InjectFail { step: 7, rank: None });
+                   InjectFail { step: 7, rank: None, net: false });
         assert_eq!(InjectFail::parse("7:2").unwrap(),
-                   InjectFail { step: 7, rank: Some(2) });
+                   InjectFail { step: 7, rank: Some(2), net: false });
         assert_eq!(InjectFail::parse(" 3 : 1 ").unwrap(),
-                   InjectFail { step: 3, rank: Some(1) });
+                   InjectFail { step: 3, rank: Some(1), net: false });
         for bad in ["", "x", "7:", ":1", "7:x", "1:2:3", "-1"] {
+            let err = InjectFail::parse(bad).unwrap_err();
+            assert!(err.to_string().contains("step[:rank]"),
+                    "{bad:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn parse_accepts_the_net_link_cut_form() {
+        assert_eq!(InjectFail::parse("net:5").unwrap(),
+                   InjectFail { step: 5, rank: None, net: true });
+        assert_eq!(InjectFail::parse("net:5:1").unwrap(),
+                   InjectFail { step: 5, rank: Some(1), net: true });
+        assert_eq!(InjectFail::parse(" net:0 ").unwrap(),
+                   InjectFail { step: 0, rank: None, net: true });
+        for bad in ["net:", "net:x", "net:1:2:3", "net"] {
             let err = InjectFail::parse(bad).unwrap_err();
             assert!(err.to_string().contains("step[:rank]"),
                     "{bad:?}: {err}");
@@ -258,7 +273,8 @@ mod inject_fail {
         drop(tw);
 
         let mut t = Trainer::new(&engine, cfg, 32, 2).unwrap();
-        t.set_inject_fail(Some(InjectFail { step: 1, rank: Some(1) }));
+        t.set_inject_fail(Some(InjectFail { step: 1, rank: Some(1),
+                                            net: false }));
         let err = t.run(&datasets, 3, 3).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("injected failure"), "{msg}");
@@ -283,7 +299,8 @@ mod inject_fail {
         };
         let mut t = Trainer::new(&engine, cfg, 32, 2).unwrap();
         let before = t.checkpoint();
-        t.set_inject_fail(Some(InjectFail { step: 0, rank: None }));
+        t.set_inject_fail(Some(InjectFail { step: 0, rank: None,
+                                            net: false }));
         let err = t.run(&datasets, 2, 2).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("injected failure at data_step 0"), "{msg}");

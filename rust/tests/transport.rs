@@ -265,6 +265,138 @@ fn socket_exchange_matches_spawn_baseline_bitwise() {
     assert_bitwise(&sock, &baseline, "socket vs spawn baseline");
 }
 
+// ---------------------------------------------------------------------------
+// authenticated handshake (ISSUE 8)
+// ---------------------------------------------------------------------------
+
+use bertdist::collectives::transport::{LinkId, LinkKind};
+
+/// Drive one cross-process edge: rank 0 dials (sends the handshake),
+/// rank 1 accepts (verifies it).  Returns the accept side's result —
+/// where every auth failure surfaces, since the dialer never waits for
+/// an acknowledgement.
+fn handshake_pair(auth0: Option<(&[u8], [u8; 8])>,
+                  auth1: Option<(&[u8], [u8; 8])>)
+                  -> Result<(), String> {
+    let peers = probe_addrs(2);
+    let id = LinkId { kind: LinkKind::FlatRing, from: 0, to: 1 };
+    let auth0 = auth0.map(|(k, n)| (k.to_vec(), n));
+    let auth1 = auth1.map(|(k, n)| (k.to_vec(), n));
+    std::thread::scope(|scope| {
+        let p = peers.clone();
+        let dialer = scope.spawn(move || {
+            let mut t = SocketTransport::with_hosts(
+                2, &p[0], p.clone(), 10.0).unwrap();
+            if let Some((k, n)) = auth0 {
+                t.set_auth(&k, n);
+            }
+            // dial returns as soon as the handshake bytes are written
+            t.link(id).map(|_| ()).map_err(|e| e.to_string())
+        });
+        let p = peers.clone();
+        let acceptor = scope.spawn(move || {
+            let mut t = SocketTransport::with_hosts(
+                2, &p[1], p.clone(), 10.0).unwrap();
+            if let Some((k, n)) = auth1 {
+                t.set_auth(&k, n);
+            }
+            t.link(id).map(|_| ()).map_err(|e| e.to_string())
+        });
+        dialer.join().unwrap().expect("dial side never verifies");
+        acceptor.join().unwrap()
+    })
+}
+
+#[test]
+fn matching_keys_and_nonce_shake_hands() {
+    handshake_pair(Some((b"shared-secret", [9u8; 8])),
+                   Some((b"shared-secret", [9u8; 8])))
+        .expect("matching v2 handshake must be accepted");
+}
+
+#[test]
+fn unauthenticated_pair_still_shakes_hands() {
+    // No key on either side: the v1 handshake keeps working.
+    handshake_pair(None, None)
+        .expect("v1 handshake must stay accepted when no key is set");
+}
+
+#[test]
+fn wrong_key_is_rejected_as_mac_mismatch() {
+    let err = handshake_pair(Some((b"key-a", [9u8; 8])),
+                             Some((b"key-b", [9u8; 8])))
+        .expect_err("wrong key must be rejected");
+    assert!(err.contains("MAC mismatch"), "got: {err}");
+}
+
+#[test]
+fn stale_nonce_is_rejected_as_nonce_mismatch() {
+    // Same key, different per-run nonce: a process from an earlier
+    // generation (or a foreign run of the same job) is named as such.
+    let err = handshake_pair(Some((b"shared-secret", [1u8; 8])),
+                             Some((b"shared-secret", [2u8; 8])))
+        .expect_err("stale nonce must be rejected");
+    assert!(err.contains("nonce mismatch"), "got: {err}");
+}
+
+#[test]
+fn v1_peer_is_rejected_when_a_key_is_required() {
+    let err = handshake_pair(None, Some((b"shared-secret", [9u8; 8])))
+        .expect_err("unauthenticated peer must be rejected");
+    assert!(err.contains("unauthenticated v1 handshake"), "got: {err}");
+}
+
+#[test]
+fn v2_peer_is_rejected_when_no_key_is_set() {
+    let err = handshake_pair(Some((b"shared-secret", [9u8; 8])), None)
+        .expect_err("authenticated peer must be rejected by keyless side");
+    assert!(err.contains("no --net-key"), "got: {err}");
+}
+
+#[test]
+fn authenticated_socket_exchange_matches_inproc_bitwise() {
+    // With matching keys on every process, the full pooled exchange is
+    // untouched by authentication: same bits as the in-proc pool.
+    let topo = Topology::new(2, 1);
+    let (n, ranges) = test_shape(90, 67);
+    let peers = probe_addrs(2);
+    let world = topo.world_size();
+    let mut out: Vec<Vec<f32>> = vec![Vec::new(); world];
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..2)
+            .map(|p| {
+                let peers = peers.clone();
+                let ranges = ranges.clone();
+                scope.spawn(move || {
+                    let mut t = SocketTransport::with_hosts(
+                        world, &peers[p], peers.clone(), 30.0).unwrap();
+                    t.set_auth(b"run-secret", [0x42; 8]);
+                    t.set_connect_backoff(5, 10);
+                    let mut pool = CollectivePool::with_transport(
+                        topo, n, ranges, WireFormat::F32, CommMode::Flat,
+                        IntraNodeMode::Auto, 1 << 16, &mut t).unwrap();
+                    for s in 0..2 {
+                        pool.step(&[], 1.0, 2, s, true, &ExactGrads { n })
+                            .unwrap();
+                    }
+                    pool.local_ranks()
+                        .map(|r| pool.rank_grads(r).clone())
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for (p, h) in handles.into_iter().enumerate() {
+            for (i, g) in h.join().unwrap().into_iter().enumerate() {
+                out[p + i] = g;
+            }
+        }
+    });
+    let inproc = inproc_world_grads(topo, WireFormat::F32, CommMode::Flat,
+                                    IntraNodeMode::Auto, 1 << 16, n,
+                                    &ranges, 2, 2);
+    assert_bitwise(&out, &inproc, "authenticated flat f32");
+}
+
 #[test]
 fn transport_reports_its_local_slice() {
     // The pool only hosts (and only serves grads for) its transport's

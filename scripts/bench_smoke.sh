@@ -14,14 +14,16 @@
 # restart-to-restore latency of the elastic resume path) and a
 # BENCH_transport.json section (in-proc vs loopback-socket pooled
 # exchange throughput plus the per-bucket network latency the socket
-# hop adds) so future PRs can diff the hot-path, comm-mode,
-# input-pipeline, checkpoint, intra-node, elastic, and transport
-# trajectories.
+# hop adds) and a BENCH_rejoin.json section (socket-world teardown +
+# re-establish latency at a republished rendezvous epoch, and the
+# authenticated vs plain handshake cost) so future PRs can diff the
+# hot-path, comm-mode, input-pipeline, checkpoint, intra-node,
+# elastic, transport, and rejoin trajectories.
 #
 # Usage: scripts/bench_smoke.sh [output.json] [hier_output.json] \
 #                               [input_output.json] [ckpt_output.json] \
 #                               [intra_output.json] [elastic_output.json] \
-#                               [transport_output.json]
+#                               [transport_output.json] [rejoin_output.json]
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -33,6 +35,7 @@ CKPT_OUT="${4:-BENCH_checkpoint.json}"
 INTRA_OUT="${5:-BENCH_intranode.json}"
 ELASTIC_OUT="${6:-BENCH_elastic.json}"
 TRANSPORT_OUT="${7:-BENCH_transport.json}"
+REJOIN_OUT="${8:-BENCH_rejoin.json}"
 export BENCH_QUICK=1
 export BENCH_JSON_OUT="$OUT"
 export BENCH_HIER_JSON_OUT="$HIER_OUT"
@@ -41,11 +44,12 @@ export BENCH_CKPT_JSON_OUT="$CKPT_OUT"
 export BENCH_INTRA_JSON_OUT="$INTRA_OUT"
 export BENCH_ELASTIC_JSON_OUT="$ELASTIC_OUT"
 export BENCH_TRANSPORT_JSON_OUT="$TRANSPORT_OUT"
+export BENCH_REJOIN_JSON_OUT="$REJOIN_OUT"
 
 cargo bench --bench perf_hotpath
 
 for f in "$OUT" "$HIER_OUT" "$INPUT_OUT" "$CKPT_OUT" "$INTRA_OUT" \
-         "$ELASTIC_OUT" "$TRANSPORT_OUT"; do
+         "$ELASTIC_OUT" "$TRANSPORT_OUT" "$REJOIN_OUT"; do
     if [[ -f "$f" ]]; then
         echo "bench rows -> $f"
     else

@@ -27,10 +27,19 @@ echo "==> cargo test -q --test failure_injection"
 cargo test -q --test failure_injection
 
 # the transport suite proves the socket path bitwise-equal to the
-# in-process exchange (golden wire fixture + loopback worlds); run it
-# explicitly so the multi-process guarantees cannot be silently skipped
+# in-process exchange (golden wire fixture + loopback worlds) and the
+# authenticated-handshake accept/reject matrix; run it explicitly so
+# the multi-process guarantees cannot be silently skipped
 echo "==> cargo test -q --test transport"
 cargo test -q --test transport
+
+# the rejoin e2e pair is the grow-back gate: a killed peer re-admitted
+# at the same world size inside --rejoin-window (bitwise-equal finish),
+# and a window expiry degrading to the shrink restart instead of
+# hanging.  Run them by name so a filtered harness cannot skip the
+# scale-UP elasticity contract.
+echo "==> cargo test -q --test cli rejoin"
+cargo test -q --test cli rejoin
 
 echo "==> cargo test -q"
 cargo test -q
