@@ -6,7 +6,8 @@
 
 use bertdist::collectives::hierarchical::nic_bytes_per_node;
 use bertdist::netsim::{hierarchical_allreduce_phases,
-                       hierarchical_pipelined_phases, ring_allreduce_time,
+                       hierarchical_pipelined_phases,
+                       hierarchical_rs_phases, ring_allreduce_time,
                        Fabric};
 use bertdist::simulator::scaling::{figure6_topologies, weak_scaling};
 use bertdist::simulator::IterationModel;
@@ -55,15 +56,17 @@ fn main() {
              last.efficiency * 100.0);
 
     // ---- flat vs hierarchical exchange pricing (train.comm_mode) ----
-    // The same payload through the three schedules the pooled executor
+    // The same payload through the four schedules the pooled executor
     // can run, priced by netsim's executed-schedule models: the
     // hierarchy always shrinks the time spent on the 10 Gb/s fabric (an
     // m-leader ring instead of an 8m-rank ring) at the cost of 2(g-1)
-    // serialized full-payload PCIe transfers — and the chunked
-    // pipelined chain (`train.intra_node = ring`) amortizes those
-    // transfers across the members, overlapping them with the ring.
-    println!("\n=== flat vs hierarchical vs pipelined allreduce pricing \
-              (BERT-large grads, paper fabric) ===\n");
+    // serialized full-payload PCIe transfers — the chunked pipelined
+    // chain (`train.intra_node = ring`) amortizes those transfers
+    // across the members, overlapping them with the ring, and the
+    // 2-level reduce-scatter (`train.intra_node = rs`) drops the
+    // per-link payload to O(n/g) on BOTH fabrics.
+    println!("\n=== flat vs hierarchical vs pipelined vs rs allreduce \
+              pricing (BERT-large grads, paper fabric) ===\n");
     let fabric = Fabric::paper();
     let bytes = 336_226_108.0 * 4.0;
     let chunk_bytes = 4.0 * (1 << 20) as f64; // 1 Mi elems per chunk
@@ -76,6 +79,7 @@ fn main() {
             let p = hierarchical_allreduce_phases(t, bytes, &fabric);
             let pipe = hierarchical_pipelined_phases(t, bytes, &fabric,
                                                      chunk_bytes);
+            let rs = hierarchical_rs_phases(t, bytes, &fabric);
             assert!(p.net_s < flat,
                     "{t}: hierarchy must shrink network time \
                      ({} vs {flat})", p.net_s);
@@ -87,6 +91,14 @@ fn main() {
                         "{t}: the pipelined chain must beat the \
                          serialized leader ({} vs {})",
                         pipe.wall_s, p.total());
+                assert!(rs.pcie_s < p.pcie_s && rs.net_s < p.net_s,
+                        "{t}: the 2-level reduce-scatter must shrink \
+                         BOTH phases vs the serialized leader \
+                         (pcie {} vs {}, net {} vs {})",
+                        rs.pcie_s, p.pcie_s, rs.net_s, p.net_s);
+                assert!(rs.total() < p.total(),
+                        "{t}: rs must beat the serialized leader \
+                         ({} vs {})", rs.total(), p.total());
             }
             vec![
                 t.to_string(),
@@ -95,16 +107,19 @@ fn main() {
                 format!("{:.2} s", p.pcie_s),
                 format!("{:.2} s", p.net_s),
                 format!("{:.2} s ({})", pipe.wall_s, pipe.chunks),
-                format!("{:.2}x", flat / p.net_s),
+                format!("{:.2} s", rs.total()),
+                format!("{:.2}x", flat / rs.net_s.max(1e-12)),
             ]
         })
         .collect();
     println!("{}", render_table(
         &["topology", "flat ring", "hier total", "hier pcie", "hier net",
-          "pipelined (chunks)", "net-time relief"],
+          "pipelined (chunks)", "rs total", "rs net relief"],
         &rows));
     println!("(hier pcie is the executed leader-accumulate/broadcast \
               cost; pipelined is the chunked intra-node chain at 4 MiB \
-              chunks — see netsim::hierarchical_pipelined_phases)");
+              chunks — see netsim::hierarchical_pipelined_phases; rs is \
+              the 2-level reduce-scatter moving 1/g of the payload per \
+              link — see netsim::hierarchical_rs_phases)");
     println!("\nfig6_multinode_scaling OK");
 }

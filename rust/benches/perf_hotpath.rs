@@ -8,8 +8,10 @@
 //! BENCH_elastic.json), the in-proc vs loopback-socket transport cost
 //! (ISSUE 7, emitted to BENCH_transport.json), the socket-world
 //! rejoin/re-admission cost with and without the authenticated
-//! handshake (ISSUE 8, emitted to BENCH_rejoin.json), and the
-//! end-to-end PJRT step overhead breakdown.
+//! handshake (ISSUE 8, emitted to BENCH_rejoin.json), the 2-level
+//! reduce-scatter vs serialized-leader exchange (ISSUE 9, emitted to
+//! BENCH_exchange_rs.json), and the end-to-end PJRT step overhead
+//! breakdown.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 //!
@@ -280,12 +282,14 @@ fn main() -> anyhow::Result<()> {
     let fill_intra = FillCompute { n: n_intra };
     let mut intra_rows: Vec<(String, f64, String)> = Vec::new();
     for (label, intra) in [("serial", IntraNodeMode::Serial),
-                           ("ring", IntraNodeMode::Ring)] {
+                           ("ring", IntraNodeMode::Ring),
+                           ("rs", IntraNodeMode::ReduceScatter)] {
         let mut p = CollectivePool::with_intra(
             topo24, n_intra, BucketRange::even_split(n_intra, 4),
             WireFormat::F32, CommMode::Hierarchical, intra, chunk_intra);
         assert!(p.is_hierarchical());
         assert_eq!(p.is_intra_ring(), intra == IntraNodeMode::Ring);
+        assert_eq!(p.is_intra_rs(), intra == IntraNodeMode::ReduceScatter);
         p.step(&[], 1.0, 1, 0, true, &fill_intra)?; // warmup
         let (imin, _, _) = bench_times(3, || {
             for s in 0..steps_intra {
@@ -322,6 +326,30 @@ fn main() -> anyhow::Result<()> {
         println!(
             "note: only {cores} cores — skipping the pipelined-beats-\
              serialized assertion (needs {})",
+            topo24.world_size()
+        );
+    }
+
+    // ---- 2-level reduce-scatter vs serialized leader (ISSUE 9) ----
+    // Same 2M4G world: the rs schedule moves O(n/g) bytes per link
+    // where the serialized leader funnels O(n) through one thread, so
+    // its wall clock must win whenever the node is wide.
+    let rs_min = intra_rows[2].1 / 1e3;
+    let rs_speedup = serial_min / rs_min;
+    println!("intra-node reduce-scatter vs serialized @ 2M4G, {} KiB: \
+              {rs_speedup:.2}x",
+             n_intra * 4 / 1024);
+    if cores >= topo24.world_size() {
+        assert!(
+            rs_min < serial_min,
+            "2-level reduce-scatter exchange must beat the serialized \
+             leader gather at g=4 (serial {serial_min:.4}s vs rs \
+             {rs_min:.4}s on {cores} cores)"
+        );
+    } else {
+        println!(
+            "note: only {cores} cores — skipping the rs-beats-serialized \
+             assertion (needs {})",
             topo24.world_size()
         );
     }
@@ -1065,6 +1093,33 @@ fn main() -> anyhow::Result<()> {
         root.insert("rows".to_string(), Json::Arr(entries));
         std::fs::write(&rejoin_path, Json::Obj(root).to_string())?;
         println!("wrote {rejoin_path}");
+
+        // 2-level reduce-scatter section in its own file so the ISSUE-9
+        // schedule's trajectory can be diffed independently; carries all
+        // three intra-node schedules so the rs row always ships with its
+        // comparators
+        let rs_path = std::env::var("BENCH_EXCHANGE_RS_JSON_OUT")
+            .unwrap_or_else(|_| "BENCH_exchange_rs.json".to_string());
+        let entries: Vec<Json> = intra_rows
+            .iter()
+            .map(|(name, ms, rate)| {
+                let mut m = BTreeMap::new();
+                m.insert("intra_node".to_string(), Json::Str(name.clone()));
+                m.insert("min_ms".to_string(), Json::Num(*ms));
+                m.insert("rate".to_string(), Json::Str(rate.clone()));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(),
+                    Json::Str("exchange_rs".to_string()));
+        root.insert("topology".to_string(), Json::Str("2M4G".to_string()));
+        root.insert("payload_elems".to_string(),
+                    Json::Num(n_intra as f64));
+        root.insert("speedup_vs_serial".to_string(), Json::Num(rs_speedup));
+        root.insert("rows".to_string(), Json::Arr(entries));
+        std::fs::write(&rs_path, Json::Obj(root).to_string())?;
+        println!("wrote {rs_path}");
     }
 
     println!("perf_hotpath OK");

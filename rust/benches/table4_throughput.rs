@@ -150,10 +150,11 @@ fn main() -> anyhow::Result<()> {
 
     // ---- flat vs hierarchical pooled exchange (train.comm_mode) ----
     // Same compiled step, same gradients, world 4 laid out as 2M2G: one
-    // pool runs the flat world ring, the other the §4.4 hierarchy
-    // (leader accumulate -> 2-leader ring -> broadcast).  Results must
-    // agree (different summation association, so allclose not bitwise);
-    // the timing split shows where the bytes traveled.
+    // pool runs the flat world ring, the others the §4.4 hierarchy
+    // (serialized leader, chunked pipelined chain, and the 2-level
+    // reduce-scatter).  Results must agree (different summation
+    // association, so allclose not bitwise); the timing split shows
+    // where the bytes traveled.
     println!("=== pooled exchange: flat vs hierarchical (2M2G) ===\n");
     let topo = Topology::parse("2M2G").unwrap();
     let ranges22: std::sync::Arc<[BucketRange]> = BucketRange::even_split(n, 4);
@@ -164,13 +165,18 @@ fn main() -> anyhow::Result<()> {
         topo, n, ranges22.clone(), WireFormat::F32, CommMode::Hierarchical,
         IntraNodeMode::Serial, n);
     let mut ring_pool = CollectivePool::with_intra(
-        topo, n, ranges22, WireFormat::F32, CommMode::Hierarchical,
+        topo, n, ranges22.clone(), WireFormat::F32, CommMode::Hierarchical,
         IntraNodeMode::Ring, (n / 16).max(1));
+    let mut rs_pool = CollectivePool::with_intra(
+        topo, n, ranges22, WireFormat::F32, CommMode::Hierarchical,
+        IntraNodeMode::ReduceScatter, n);
     assert!(!flat_pool.is_hierarchical() && hier_pool.is_hierarchical());
     assert!(!hier_pool.is_intra_ring() && ring_pool.is_intra_ring());
+    assert!(rs_pool.is_intra_rs() && !rs_pool.is_intra_ring());
     flat_pool.step(&params, 1.0, 1, 0, true, &compute)?; // warmup
     hier_pool.step(&params, 1.0, 1, 0, true, &compute)?;
     ring_pool.step(&params, 1.0, 1, 0, true, &compute)?;
+    rs_pool.step(&params, 1.0, 1, 0, true, &compute)?;
     let mut rows = Vec::new();
     let mut idx = 0usize;
     let (flat_min, _, _) = bench_times(5, || {
@@ -187,6 +193,10 @@ fn main() -> anyhow::Result<()> {
         idx += 1;
         ring_pool.step(&params, 1.0, 1, idx, true, &compute).unwrap();
     });
+    let (rs_min, _, _) = bench_times(5, || {
+        idx += 1;
+        rs_pool.step(&params, 1.0, 1, idx, true, &compute).unwrap();
+    });
     let hout = last_hier.unwrap();
     rows.push(vec!["flat ring x4".to_string(),
                    format!("{:.2} ms", flat_min * 1e3),
@@ -197,24 +207,30 @@ fn main() -> anyhow::Result<()> {
     rows.push(vec!["hierarchical (pipelined) x4".to_string(),
                    format!("{:.2} ms", ring_min * 1e3),
                    format!("{:.0} tok/s", tokens * 4.0 / ring_min)]);
+    rows.push(vec!["hierarchical (rs) x4".to_string(),
+                   format!("{:.2} ms", rs_min * 1e3),
+                   format!("{:.0} tok/s", tokens * 4.0 / rs_min)]);
     println!("{}", render_table(&["comm mode", "min step", "throughput"],
                                 &rows));
     println!("hierarchical split: pcie {:.3} ms / net {:.3} ms per step",
              hout.comm_pcie_s * 1e3, hout.comm_net_s * 1e3);
     assert!(hout.comm_net_s <= hout.comm_s + 1e-12);
     {
-        // all three schedules compute the same sums (to rounding)
+        // all four schedules compute the same sums (to rounding)
         let a = flat_pool.leader_grads();
         let b = hier_pool.leader_grads();
         let c = ring_pool.leader_grads();
-        let max_rel = a.iter().zip(b.iter()).chain(a.iter().zip(c.iter()))
+        let d = rs_pool.leader_grads();
+        let max_rel = a.iter().zip(b.iter())
+            .chain(a.iter().zip(c.iter()))
+            .chain(a.iter().zip(d.iter()))
             .map(|(x, y)| {
                 let d = (x - y).abs();
                 d / x.abs().max(y.abs()).max(1e-6)
             })
             .fold(0.0f32, f32::max);
         assert!(max_rel < 1e-3,
-                "flat/hierarchical/pipelined sums diverged: {max_rel}");
+                "flat/hierarchical/pipelined/rs sums diverged: {max_rel}");
     }
 
     let f32_speedup = tput["fused_f32"] / tput["unfused_f32"];

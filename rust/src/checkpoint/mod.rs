@@ -169,9 +169,10 @@ pub struct Fingerprint {
     /// Compiled-artifact variant: 0 unfused_f32, 1 fused_f32, 2 bf16,
     /// 3 fused_bf16 (different kernels = different numerics).
     pub variant: u32,
-    /// [`IntraNodeMode`] as configured: 0 serial, 1 ring, 2 auto (the
-    /// chain and the serialized leader associate the node sum
-    /// differently, so the reduced low bits differ — v2.1 field).
+    /// [`IntraNodeMode`] as configured: 0 serial, 1 ring, 2 auto,
+    /// 3 rs (the chain, the serialized leader, and the 2-level
+    /// reduce-scatter each associate the node sum differently, so the
+    /// reduced low bits differ — v2.1 field).
     pub intra_node: u32,
     pub bucket_elems: u64,
     pub accum_steps: u64,
@@ -218,6 +219,7 @@ fn intra_mode_code(m: IntraNodeMode) -> u32 {
         IntraNodeMode::Serial => 0,
         IntraNodeMode::Ring => 1,
         IntraNodeMode::Auto => 2,
+        IntraNodeMode::ReduceScatter => 3,
     }
 }
 
@@ -226,6 +228,7 @@ fn intra_mode_name(code: u32) -> &'static str {
         0 => "serial",
         1 => "ring",
         2 => "auto",
+        3 => "rs",
         _ => "unknown",
     }
 }

@@ -40,6 +40,15 @@
 //!   gathering, and reduced chunks broadcast while later chunks are
 //!   still ringing.  `intra_node = serial` keeps the old schedule (the
 //!   perf baseline `perf_hotpath` compares against);
+//! * **bandwidth-optimal 2-level reduce-scatter** (`intra_node = rs`,
+//!   opt-in): drops the node leader entirely — intra-node ring
+//!   reduce-scatter (each of the `g` ranks ends owning `1/g` of the
+//!   bucket), cross-machine ring allreduce over each rank's owned shard
+//!   (`g` parallel `m`-sized rings running concurrently), then
+//!   intra-node ring allgather — so per-link bytes drop from `O(n)` to
+//!   `O(n/g)` on BOTH the PCIe links and the network ring, the
+//!   NCCL-style schedule *Scaling Performance of LLM Pretraining*
+//!   motivates;
 //! * **preallocated, reused scratch** — per-rank gradient accumulators,
 //!   per-bucket payload buffers, ring chunk plans, and wire message
 //!   vectors (recycled through per-worker free lists; the hierarchical
@@ -68,10 +77,12 @@
 //!   Every intra-node reduction order is fixed — serialized leader
 //!   accumulate adds local ranks 1, 2, … g-1 in order; the pipelined
 //!   chain reduces tail-to-head, `leader + (m1 + (m2 + …))`, with chunk
-//!   boundaries that never change the element-wise order — so results
-//!   are reproducible run to run and bitwise identical across replicas
-//!   in every mode.  Asserted by `tests/pool_overlap.rs` and
-//!   `tests/intra_node.rs`.
+//!   boundaries that never change the element-wise order; the 2-level
+//!   reduce-scatter sums every shard in fixed ring order at both levels
+//!   — so results are reproducible run to run and bitwise identical
+//!   across replicas in every mode.  Asserted by
+//!   `tests/pool_overlap.rs`, `tests/intra_node.rs`, and
+//!   `tests/exchange_rs.rs`.
 //! * **Zero spawn, zero alloc** — the steady-state step spawns no
 //!   thread and performs no gradient-sized heap allocation in any
 //!   schedule (the chunk pipeline's payload vectors recycle through
@@ -95,7 +106,7 @@ use anyhow::Result;
 use super::ring::RingPlan;
 use super::transport::{
     build_endpoints, quantize_f16, CommEndpoints, Frame, FrameRx, FrameTx,
-    InProcTransport, PayloadPool, Transport, TransportError,
+    InProcTransport, PayloadPool, Schedule, Transport, TransportError,
 };
 use crate::grad::BucketRange;
 use crate::half::F16;
@@ -183,6 +194,13 @@ pub enum IntraNodeMode {
     /// through the leader, and the inter-node ring starts on chunk 0
     /// while chunk 1 is still gathering.
     Ring,
+    /// Bandwidth-optimal NCCL-style 2-level schedule (`rs`): intra-node
+    /// ring reduce-scatter (each of the `g` ranks ends owning `1/g` of
+    /// the bucket), cross-machine ring allreduce over each rank's owned
+    /// shard (`g` parallel `m`-sized rings), then intra-node allgather
+    /// — per-link bytes drop from `O(n)` to `O(n/g)` on PCIe AND on the
+    /// network ring.
+    ReduceScatter,
     /// Ring whenever the hierarchical schedule resolves (the topology
     /// has node members to chain), serial otherwise.
     #[default]
@@ -190,13 +208,16 @@ pub enum IntraNodeMode {
 }
 
 impl IntraNodeMode {
-    /// Parse the `serial | ring | auto` config/CLI spelling.
+    /// Parse the `serial | ring | rs | auto` config/CLI spelling.
     pub fn parse(s: &str) -> std::result::Result<IntraNodeMode, String> {
         match s.trim().to_ascii_lowercase().as_str() {
             "serial" => Ok(IntraNodeMode::Serial),
             "ring" | "chain" | "pipelined" => Ok(IntraNodeMode::Ring),
+            "rs" | "reduce-scatter" => Ok(IntraNodeMode::ReduceScatter),
             "auto" => Ok(IntraNodeMode::Auto),
-            other => Err(format!("'{other}': expected serial | ring | auto")),
+            other => Err(format!(
+                "'{other}': expected serial | ring | rs | auto"
+            )),
         }
     }
 
@@ -204,11 +225,18 @@ impl IntraNodeMode {
     /// (only meaningful when the hierarchical schedule resolves).
     pub fn resolves_ring(self, topo: &Topology) -> bool {
         match self {
-            IntraNodeMode::Serial => false,
+            IntraNodeMode::Serial | IntraNodeMode::ReduceScatter => false,
             IntraNodeMode::Ring | IntraNodeMode::Auto => {
                 topo.gpus_per_machine > 1
             }
         }
+    }
+
+    /// Whether this mode runs the 2-level reduce-scatter schedule on
+    /// `topo` (only meaningful when the hierarchical schedule resolves;
+    /// opt-in — `Auto` keeps resolving to the chain).
+    pub fn resolves_rs(self, topo: &Topology) -> bool {
+        self == IntraNodeMode::ReduceScatter && topo.gpus_per_machine > 1
     }
 }
 
@@ -217,6 +245,7 @@ impl std::fmt::Display for IntraNodeMode {
         f.write_str(match self {
             IntraNodeMode::Serial => "serial",
             IntraNodeMode::Ring => "ring",
+            IntraNodeMode::ReduceScatter => "rs",
             IntraNodeMode::Auto => "auto",
         })
     }
@@ -538,6 +567,19 @@ fn wrap_net_fault(ep: CommEndpoints, rank: usize, fault: &Arc<NetFault>)
                 down_tx: down_tx.map(wtx),
             }
         }
+        CommEndpoints::RsNode { machine, machines, gpus, local, intra_tx,
+                                intra_rx, cross_tx, cross_rx } => {
+            CommEndpoints::RsNode {
+                machine,
+                machines,
+                gpus,
+                local,
+                intra_tx: wtx(intra_tx),
+                intra_rx: wrx(intra_rx),
+                cross_tx: wtx(cross_tx),
+                cross_rx: wrx(cross_rx),
+            }
+        }
     }
 }
 
@@ -556,6 +598,7 @@ pub struct CollectivePool {
     topo: Topology,
     hierarchical: bool,
     intra_ring: bool,
+    intra_rs: bool,
     chunk_elems: usize,
     job_txs: Vec<Sender<Job>>,
     result_rx: Receiver<RankResult>,
@@ -668,7 +711,17 @@ impl CollectivePool {
         let world = topo.world_size();
         assert!(world >= 1, "world must be >= 1");
         let hierarchical = mode.resolves_hierarchical(&topo);
+        let intra_rs = hierarchical && intra.resolves_rs(&topo);
         let intra_ring = hierarchical && intra.resolves_ring(&topo);
+        let schedule = if !hierarchical {
+            Schedule::Flat
+        } else if intra_rs {
+            Schedule::ReduceScatter
+        } else if intra_ring {
+            Schedule::Chain
+        } else {
+            Schedule::Leader
+        };
         let chunk_elems = chunk_elems.max(1);
         let local = transport.local_ranks();
         // Non-local ranks get empty buffers: their gradients live in the
@@ -686,8 +739,7 @@ impl CollectivePool {
         );
 
         let endpoints =
-            build_endpoints(&topo, hierarchical, intra_ring, chunk_elems,
-                            transport)
+            build_endpoints(&topo, schedule, chunk_elems, transport)
                 .map_err(|e| anyhow::anyhow!("transport wiring: {e}"))?;
 
         let (result_tx, result_rx) = channel::<RankResult>();
@@ -735,6 +787,7 @@ impl CollectivePool {
             topo,
             hierarchical,
             intra_ring,
+            intra_rs,
             chunk_elems,
             job_txs,
             result_rx,
@@ -800,6 +853,14 @@ impl CollectivePool {
     /// chain inside each node (the resolved [`IntraNodeMode`]).
     pub fn is_intra_ring(&self) -> bool {
         self.intra_ring
+    }
+
+    /// Whether the exchange runs the bandwidth-optimal 2-level
+    /// reduce-scatter schedule (the resolved [`IntraNodeMode`]):
+    /// intra-node reduce-scatter, per-shard cross-machine rings,
+    /// intra-node allgather.
+    pub fn is_intra_rs(&self) -> bool {
+        self.intra_rs
     }
 
     /// Pipeline granularity of the intra-node chain, in elements.
@@ -1197,6 +1258,12 @@ fn comm_worker(wire: WireFormat, ranges: &[BucketRange],
             chain_member_comm_loop(chunk_elems, bucket_rx, reduced_tx,
                                    up_rx, up_tx, down_rx, down_tx);
         }
+        CommEndpoints::RsNode { machine, machines, gpus, local, intra_tx,
+                                intra_rx, cross_tx, cross_rx } => {
+            rs_comm_loop(machine, machines, gpus, local, wire, ranges,
+                         bucket_rx, reduced_tx, intra_tx, intra_rx,
+                         cross_tx, cross_rx);
+        }
     }
 }
 
@@ -1277,8 +1344,25 @@ fn leader_comm_loop(machine: usize, machines: usize, wire: WireFormat,
         for rx in member_rxs.iter_mut() {
             match rx.recv(&mut pool) {
                 Ok(Frame::Bucket { idx: midx, data: mv }) => {
-                    debug_assert_eq!(midx as usize, idx,
-                                     "member bucket skew");
+                    // Skewed or short member payloads are a real protocol
+                    // error, not a debug assert: a release build that
+                    // summed the wrong bucket (or let the `zip` truncate)
+                    // would corrupt the gradients silently.
+                    if midx as usize != idx {
+                        let _ = reduced_tx.send(Err(format!(
+                            "member bucket skew: got bucket {midx}, \
+                             expected {idx}"
+                        )));
+                        break 'buckets;
+                    }
+                    if mv.len() != data.len() {
+                        let _ = reduced_tx.send(Err(format!(
+                            "member payload length skew on bucket {idx}: \
+                             got {} elems, expected {}",
+                            mv.len(), data.len()
+                        )));
+                        break 'buckets;
+                    }
                     for (d, s) in data.iter_mut().zip(mv.iter()) {
                         *d += *s;
                     }
@@ -1395,8 +1479,21 @@ fn chain_leader_comm_loop(machine: usize, machines: usize,
             // completes the node sum for the chunk.
             match up_rx.recv(&mut pool) {
                 Ok(Frame::Chunk { idx: midx, chunk: mc, data: mv, .. }) => {
-                    debug_assert_eq!((midx as usize, mc as usize), (idx, c),
-                                     "chain chunk skew");
+                    if (midx as usize, mc as usize) != (idx, c) {
+                        let _ = reduced_tx.send(Err(format!(
+                            "chain chunk skew: got bucket {midx} chunk \
+                             {mc}, expected bucket {idx} chunk {c}"
+                        )));
+                        break 'buckets;
+                    }
+                    if mv.len() != span.len() {
+                        let _ = reduced_tx.send(Err(format!(
+                            "chain payload length skew on bucket {idx} \
+                             chunk {c}: got {} elems, expected {}",
+                            mv.len(), span.len()
+                        )));
+                        break 'buckets;
+                    }
                     for (d, s) in
                         data[span.clone()].iter_mut().zip(mv.iter()) {
                         *d += *s;
@@ -1501,8 +1598,22 @@ fn chain_member_comm_loop(chunk_elems: usize,
                 match rx.recv(&mut pool) {
                     Ok(Frame::Chunk { idx: midx, chunk: mc,
                                       data: mv, .. }) => {
-                        debug_assert_eq!((midx as usize, mc as usize),
-                                         (idx, c), "chain chunk skew");
+                        if (midx as usize, mc as usize) != (idx, c) {
+                            let _ = reduced_tx.send(Err(format!(
+                                "chain chunk skew: got bucket {midx} \
+                                 chunk {mc}, expected bucket {idx} chunk \
+                                 {c}"
+                            )));
+                            break 'buckets;
+                        }
+                        if mv.len() != buf.len() {
+                            let _ = reduced_tx.send(Err(format!(
+                                "chain payload length skew on bucket \
+                                 {idx} chunk {c}: got {} elems, expected \
+                                 {}", mv.len(), buf.len()
+                            )));
+                            break 'buckets;
+                        }
                         for (d, s) in buf.iter_mut().zip(mv.iter()) {
                             *d += *s;
                         }
@@ -1548,11 +1659,25 @@ fn chain_member_comm_loop(chunk_elems: usize,
         // the payload vectors for the next bucket's up pass.
         let mut net_s = 0.0f64;
         for c in 0..nchunks {
+            let span = chunk_span(len, chunk_elems, c);
             let (mc_net_s, mv) = match down_rx.recv(&mut pool) {
                 Ok(Frame::Chunk { idx: midx, chunk: mc, net_s: ns,
                                   data: mv }) => {
-                    debug_assert_eq!((midx as usize, mc as usize), (idx, c),
-                                     "chain chunk skew");
+                    if (midx as usize, mc as usize) != (idx, c) {
+                        let _ = reduced_tx.send(Err(format!(
+                            "chain chunk skew: got bucket {midx} chunk \
+                             {mc}, expected bucket {idx} chunk {c}"
+                        )));
+                        break 'buckets;
+                    }
+                    if mv.len() != span.len() {
+                        let _ = reduced_tx.send(Err(format!(
+                            "chain payload length skew on bucket {idx} \
+                             chunk {c}: got {} elems, expected {}",
+                            mv.len(), span.len()
+                        )));
+                        break 'buckets;
+                    }
                     (ns, mv)
                 }
                 Ok(other) => {
@@ -1570,7 +1695,6 @@ fn chain_member_comm_loop(chunk_elems: usize,
                     break 'buckets;
                 }
             };
-            let span = chunk_span(len, chunk_elems, c);
             data[span].copy_from_slice(&mv);
             net_s += mc_net_s;
             match down_tx.as_mut() {
@@ -1622,6 +1746,7 @@ fn member_comm_loop(bucket_rx: Receiver<(usize, Vec<f32>)>,
     let mut pool = PayloadPool::default();
     while let Ok((idx, data)) = bucket_rx.recv() {
         let t0 = Instant::now();
+        let bucket_len = data.len();
         let frame = Frame::Bucket { idx: idx as u32, data };
         if let Err(e) = to_leader.send(frame, &mut pool) {
             let _ = reduced_tx.send(Err(format!(
@@ -1631,8 +1756,20 @@ fn member_comm_loop(bucket_rx: Receiver<(usize, Vec<f32>)>,
         }
         let (bnet_s, bdata) = match from_leader.recv(&mut pool) {
             Ok(Frame::Bcast { idx: bidx, net_s, data }) => {
-                debug_assert_eq!(bidx as usize, idx,
-                                 "broadcast bucket skew");
+                if bidx as usize != idx {
+                    let _ = reduced_tx.send(Err(format!(
+                        "broadcast bucket skew: got bucket {bidx}, \
+                         expected {idx}"
+                    )));
+                    break;
+                }
+                if data.len() != bucket_len {
+                    let _ = reduced_tx.send(Err(format!(
+                        "broadcast payload length skew on bucket {idx}: \
+                         got {} elems, expected {bucket_len}", data.len()
+                    )));
+                    break;
+                }
                 (net_s, data)
             }
             Ok(other) => {
@@ -1664,6 +1801,106 @@ fn member_comm_loop(bucket_rx: Receiver<(usize, Vec<f32>)>,
     }
 }
 
+/// Per-bucket plan for the 2-level reduce-scatter schedule: the
+/// intra-node ring plan at size `g`, the shard of the bucket this rank
+/// owns after the reduce-scatter (chunk `(local + 1) % g` of the intra
+/// plan), and the cross-machine ring plan over that shard at size `m`.
+/// A pure function of (topology, local index, bucket length) — built
+/// once per comm worker and reused forever.
+struct RsPlan {
+    intra: RingPlan,
+    own: std::ops::Range<usize>,
+    cross: RingPlan,
+}
+
+/// Bandwidth-optimal NCCL-style 2-level schedule
+/// ([`IntraNodeMode::ReduceScatter`]): every rank plays the same role —
+/// there is no leader.  Per bucket:
+///
+/// 1. **intra-node ring reduce-scatter** ("PCIe", always f32): after
+///    `g-1` hops this rank owns the node-summed shard `own`
+///    (`~1/g` of the bucket — per-link bytes drop from the serialized
+///    leader's `O(n)` to `O(n/g)`);
+/// 2. **cross-machine ring allreduce over the owned shard only**
+///    ("network"; the f16 wire applies here, exactly like the leader
+///    ring): the `g` parallel `m`-sized rings together move the same
+///    `O(n/g)` per link — and unlike the leader schedule, all `g` NICs'
+///    worth of links carry traffic concurrently;
+/// 3. **intra-node ring allgather** ("PCIe", f32): every rank
+///    broadcasts its globally-reduced shard around the node ring, so
+///    all replicas end bitwise identical.
+///
+/// Shard lengths are a pure function of (g, bucket length), so every
+/// machine's ring at a given local index agrees on chunk sizes (and on
+/// empty-shard early-returns) without coordination.  All link errors
+/// are fatal, like every ring link: a lost peer cannot be summed
+/// around.
+#[allow(clippy::too_many_arguments)]
+fn rs_comm_loop(machine: usize, machines: usize, gpus: usize, local: usize,
+                wire: WireFormat, ranges: &[BucketRange],
+                bucket_rx: Receiver<(usize, Vec<f32>)>,
+                reduced_tx: Sender<ReducedResult>,
+                mut intra_tx: Box<dyn FrameTx>,
+                mut intra_rx: Box<dyn FrameRx>,
+                mut cross_tx: Box<dyn FrameTx>,
+                mut cross_rx: Box<dyn FrameRx>) {
+    let plans: Vec<RsPlan> = ranges
+        .iter()
+        .map(|b| {
+            let intra = RingPlan::new(gpus, b.len());
+            let own = intra.chunk((local + 1) % gpus);
+            let cross = RingPlan::new(machines, own.len());
+            RsPlan { intra, own, cross }
+        })
+        .collect();
+    let mut pool = PayloadPool::default();
+    while let Ok((idx, mut data)) = bucket_rx.recv() {
+        let t0 = Instant::now();
+        let p = &plans[idx];
+        // Phase 1 — intra-node reduce-scatter ("PCIe").
+        if let Err(e) = ring_reduce_scatter(&mut data, &p.intra, local,
+                                            WireFormat::F32,
+                                            intra_tx.as_mut(),
+                                            intra_rx.as_mut(), &mut pool) {
+            let _ = reduced_tx.send(Err(format!(
+                "intra reduce-scatter peer lost on bucket {idx}: {e}"
+            )));
+            break;
+        }
+        // Phase 2 — cross-machine ring allreduce over the owned shard
+        // only ("network").
+        let tn = Instant::now();
+        if let Err(e) = ring_exchange(&mut data[p.own.clone()], &p.cross,
+                                      machine, wire, cross_tx.as_mut(),
+                                      cross_rx.as_mut(), &mut pool) {
+            let _ = reduced_tx.send(Err(format!(
+                "cross ring peer lost on bucket {idx}: {e}"
+            )));
+            break;
+        }
+        let net_s = tn.elapsed().as_secs_f64();
+        // Phase 3 — intra-node allgather ("PCIe").
+        if let Err(e) = ring_all_gather(&mut data, &p.intra, local,
+                                        WireFormat::F32, intra_tx.as_mut(),
+                                        intra_rx.as_mut(), &mut pool) {
+            let _ = reduced_tx.send(Err(format!(
+                "intra allgather peer lost on bucket {idx}: {e}"
+            )));
+            break;
+        }
+        let exchange_s = t0.elapsed().as_secs_f64();
+        let backpressure_s = intra_tx.take_backpressure_s()
+            + cross_tx.take_backpressure_s();
+        if reduced_tx
+            .send(Ok(Reduced { idx, data, exchange_s, net_s,
+                               backpressure_s }))
+            .is_err()
+        {
+            break;
+        }
+    }
+}
+
 /// In-place ring allreduce (sum) of `buf` across a set of comm workers,
 /// using the NCCL reduce-scatter + all-gather schedule from [`RingPlan`]
 /// (the flat world ring, or the leader ring at size `machines`).  A
@@ -1674,16 +1911,42 @@ fn ring_exchange(buf: &mut [f32], plan: &RingPlan, rank: usize,
                  wire: WireFormat, tx: &mut dyn FrameTx,
                  rx: &mut dyn FrameRx, pool: &mut PayloadPool)
                  -> std::result::Result<(), TransportError> {
+    ring_reduce_scatter(buf, plan, rank, wire, tx, rx, pool)?;
+    ring_all_gather(buf, plan, rank, wire, tx, rx, pool)
+}
+
+/// The reduce-scatter half of the ring schedule: after `n-1` hops rank
+/// `r` owns the fully-summed chunk `(r + 1) % n` (tags `0..n-1`).  The
+/// 2-level schedule runs this alone at node scope; [`ring_exchange`]
+/// composes it with [`ring_all_gather`].
+fn ring_reduce_scatter(buf: &mut [f32], plan: &RingPlan, rank: usize,
+                       wire: WireFormat, tx: &mut dyn FrameTx,
+                       rx: &mut dyn FrameRx, pool: &mut PayloadPool)
+                       -> std::result::Result<(), TransportError> {
     let n = plan.n;
     if n <= 1 || buf.is_empty() {
         return Ok(());
     }
-    // reduce-scatter
     for s in 0..n - 1 {
         let sc = plan.chunk(plan.send_chunk_rs(rank, s));
         send_wire(&buf[sc], s as u32, wire, tx, pool)?;
         let rc = plan.chunk(plan.recv_chunk_rs(rank, s));
         recv_apply(&mut buf[rc], s as u32, true, rx, pool)?;
+    }
+    Ok(())
+}
+
+/// The all-gather half of the ring schedule (tags `100..100+n-1`):
+/// circulates each rank's owned chunk until every rank holds all of
+/// them.  Assumes the owned chunks are already reduced — the 2-level
+/// schedule calls this after its cross-machine rings finish.
+fn ring_all_gather(buf: &mut [f32], plan: &RingPlan, rank: usize,
+                   wire: WireFormat, tx: &mut dyn FrameTx,
+                   rx: &mut dyn FrameRx, pool: &mut PayloadPool)
+                   -> std::result::Result<(), TransportError> {
+    let n = plan.n;
+    if n <= 1 || buf.is_empty() {
+        return Ok(());
     }
     if wire == WireFormat::F16 {
         // Quantize the fully-reduced chunk this rank owns before the
@@ -1694,7 +1957,6 @@ fn ring_exchange(buf: &mut [f32], plan: &RingPlan, rank: usize,
             *v = F16::from_f32(*v).to_f32();
         }
     }
-    // all-gather
     for s in 0..n - 1 {
         let sc = plan.chunk(plan.send_chunk_ag(rank, s));
         send_wire(&buf[sc], 100 + s as u32, wire, tx, pool)?;
@@ -1724,8 +1986,10 @@ fn send_wire(src: &[f32], tag: u32, wire: WireFormat, tx: &mut dyn FrameTx,
 
 /// Receive one ring hop and either reduce-add (`add = true`) or copy it
 /// into `dst`; the payload vector goes back on the pool.  A tag
-/// mismatch is a hard protocol error (a desynchronized peer would
-/// corrupt the sum silently).
+/// mismatch OR a payload-length mismatch is a hard protocol error: a
+/// desynchronized peer would corrupt the sum silently, and a truncated
+/// payload would silently leave the tail of the chunk unreduced (the
+/// `zip` below stops at the shorter side).
 fn recv_apply(dst: &mut [f32], tag: u32, add: bool, rx: &mut dyn FrameRx,
               pool: &mut PayloadPool)
               -> std::result::Result<(), TransportError> {
@@ -1734,6 +1998,12 @@ fn recv_apply(dst: &mut [f32], tag: u32, add: bool, rx: &mut dyn FrameRx,
             if t != tag {
                 return Err(TransportError::Protocol(format!(
                     "ring schedule skew: got tag {t}, expected {tag}"
+                )));
+            }
+            if v.len() != dst.len() {
+                return Err(TransportError::Protocol(format!(
+                    "ring payload length skew: got {} elems, chunk holds \
+                     {} (tag {tag})", v.len(), dst.len()
                 )));
             }
             if add {
@@ -1749,6 +2019,12 @@ fn recv_apply(dst: &mut [f32], tag: u32, add: bool, rx: &mut dyn FrameRx,
             if t != tag {
                 return Err(TransportError::Protocol(format!(
                     "ring schedule skew: got tag {t}, expected {tag}"
+                )));
+            }
+            if v.len() != dst.len() {
+                return Err(TransportError::Protocol(format!(
+                    "ring payload length skew: got {} elems, chunk holds \
+                     {} (tag {tag})", v.len(), dst.len()
                 )));
             }
             if add {
@@ -2108,9 +2384,14 @@ mod tests {
                    IntraNodeMode::Ring);
         assert_eq!(IntraNodeMode::parse("auto").unwrap(),
                    IntraNodeMode::Auto);
+        assert_eq!(IntraNodeMode::parse("rs").unwrap(),
+                   IntraNodeMode::ReduceScatter);
+        assert_eq!(IntraNodeMode::parse("Reduce-Scatter").unwrap(),
+                   IntraNodeMode::ReduceScatter);
         assert!(IntraNodeMode::parse("tree").is_err());
         assert_eq!(IntraNodeMode::Auto.to_string(), "auto");
         assert_eq!(IntraNodeMode::Ring.to_string(), "ring");
+        assert_eq!(IntraNodeMode::ReduceScatter.to_string(), "rs");
 
         let multi = Topology::new(2, 4);
         let one_gpu = Topology::new(8, 1);
@@ -2118,6 +2399,12 @@ mod tests {
         assert!(IntraNodeMode::Ring.resolves_ring(&multi));
         assert!(!IntraNodeMode::Serial.resolves_ring(&multi));
         assert!(!IntraNodeMode::Auto.resolves_ring(&one_gpu));
+        // rs is opt-in: Auto keeps resolving to the chain, and rs
+        // itself never resolves the chain.
+        assert!(IntraNodeMode::ReduceScatter.resolves_rs(&multi));
+        assert!(!IntraNodeMode::ReduceScatter.resolves_ring(&multi));
+        assert!(!IntraNodeMode::Auto.resolves_rs(&multi));
+        assert!(!IntraNodeMode::ReduceScatter.resolves_rs(&one_gpu));
     }
 
     #[test]
@@ -2270,6 +2557,171 @@ mod tests {
         let err = pool.step(&[], 1.0, 1, 0, true, &Failing { n })
             .unwrap_err();
         assert!(format!("{err:#}").contains("rank 5"));
+        // the pool must still be usable afterwards
+        let synth = Synth { n };
+        pool.step(&[], 1.0, 1, 1, true, &synth).unwrap();
+        let want = expected(topo.world_size(), n, 1, 1);
+        testkit::assert_allclose(&pool.leader_grads(), &want, 1e-3, 1e-5);
+    }
+
+    // --------------------------------- 2-level reduce-scatter exchange --
+
+    #[test]
+    fn rs_matches_serial_and_flat_bitwise_on_exact_grads() {
+        // The Synth values are multiples of 0.25 with small magnitude,
+        // so every partial sum is exactly representable — the 2-level
+        // schedule's shard association must agree to the bit with both
+        // the serialized leader and the flat ring.
+        let topo = Topology::new(2, 3);
+        let (n, k) = (157, 2);
+        let synth = Synth { n };
+        let mut serial = CollectivePool::with_intra(
+            topo, n, full_ranges(n, 3), WireFormat::F32,
+            CommMode::Hierarchical, IntraNodeMode::Serial, 64);
+        serial.step(&[], 1.0, k, 5, true, &synth).unwrap();
+        let mut flat = CollectivePool::new(topo.world_size(), n,
+                                           full_ranges(n, 3),
+                                           WireFormat::F32);
+        flat.step(&[], 1.0, k, 5, true, &synth).unwrap();
+        let mut rs = CollectivePool::with_intra(
+            topo, n, full_ranges(n, 3), WireFormat::F32,
+            CommMode::Hierarchical, IntraNodeMode::ReduceScatter, 64);
+        assert!(rs.is_hierarchical() && rs.is_intra_rs());
+        assert!(!rs.is_intra_ring());
+        // rs phases aren't chunk-pipelined: one span per bucket.
+        assert_eq!(rs.chunks_per_bucket(), vec![1, 1, 1]);
+        rs.step(&[], 1.0, k, 5, true, &synth).unwrap();
+        let want = expected(topo.world_size(), n, 5, k);
+        for r in 0..topo.world_size() {
+            let (a, b, c) =
+                (serial.rank_grads(r), rs.rank_grads(r), flat.rank_grads(r));
+            for (i, ((x, y), z)) in
+                a.iter().zip(b.iter()).zip(c.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "serial/rs r{r} [{i}]");
+                assert_eq!(y.to_bits(), z.to_bits(), "rs/flat r{r} [{i}]");
+            }
+            testkit::assert_allclose(&b, &want, 1e-3, 1e-5);
+        }
+    }
+
+    #[test]
+    fn rs_handles_buckets_smaller_than_node_and_empty_shards() {
+        // 2M4G with a 3-element bucket: the intra plan at g=4 leaves at
+        // least one rank with an EMPTY shard, whose cross ring must
+        // early-skip consistently on every machine.
+        let topo = Topology::new(2, 4);
+        let n = 67;
+        // uneven split: one bucket is 3 elems (< g), one is 64
+        let ranges: Arc<[BucketRange]> = vec![
+            BucketRange { start: 0, end: 3 },
+            BucketRange { start: 3, end: 67 },
+        ]
+        .into();
+        let synth = Synth { n };
+        let mut rs = CollectivePool::with_intra(
+            topo, n, ranges.clone(), WireFormat::F32,
+            CommMode::Hierarchical, IntraNodeMode::ReduceScatter, 64);
+        let mut flat = CollectivePool::new(topo.world_size(), n, ranges,
+                                           WireFormat::F32);
+        rs.step(&[], 1.0, 1, 2, true, &synth).unwrap();
+        flat.step(&[], 1.0, 1, 2, true, &synth).unwrap();
+        for r in 0..topo.world_size() {
+            let (a, b) = (rs.rank_grads(r), flat.rank_grads(r));
+            for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "rank {r} [{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn rs_overlap_and_barrier_are_bitwise_identical() {
+        let topo = Topology::new(3, 2);
+        let (n, k) = (211, 2);
+        for wire in [WireFormat::F32, WireFormat::F16] {
+            let mut a = CollectivePool::with_intra(
+                topo, n, full_ranges(n, 4), wire, CommMode::Auto,
+                IntraNodeMode::ReduceScatter, 32);
+            let mut b = CollectivePool::with_intra(
+                topo, n, full_ranges(n, 4), wire, CommMode::Auto,
+                IntraNodeMode::ReduceScatter, 32);
+            assert!(a.is_intra_rs() && b.is_intra_rs());
+            let synth = Synth { n };
+            a.step(&[], 1.0, k, 1, true, &synth).unwrap();
+            b.step(&[], 1.0, k, 1, false, &synth).unwrap();
+            for r in 0..topo.world_size() {
+                let (ga, gb) = (a.rank_grads(r), b.rank_grads(r));
+                for (x, y) in ga.iter().zip(gb.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{wire:?} rank {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rs_f16_replicas_identical_and_close_to_f32() {
+        let topo = Topology::new(2, 3);
+        let n = 120;
+        let mut f32p = CollectivePool::with_intra(
+            topo, n, full_ranges(n, 2), WireFormat::F32, CommMode::Auto,
+            IntraNodeMode::ReduceScatter, 64);
+        let mut f16p = CollectivePool::with_intra(
+            topo, n, full_ranges(n, 2), WireFormat::F16, CommMode::Auto,
+            IntraNodeMode::ReduceScatter, 64);
+        let synth = Synth { n };
+        f32p.step(&[], 1.0, 1, 3, true, &synth).unwrap();
+        f16p.step(&[], 1.0, 1, 3, true, &synth).unwrap();
+        let a = f32p.leader_grads();
+        let b = f16p.leader_grads();
+        // the f16 wire rides the cross ring only — one rounding per hop
+        testkit::assert_allclose(&a, &b, 1e-2, 4e-3);
+        for r in 1..topo.world_size() {
+            let br = f16p.rank_grads(r);
+            for (x, y) in b.iter().zip(br.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn rs_degenerate_topologies_fall_back_to_flat() {
+        for topo in [Topology::new(1, 4), Topology::new(4, 1)] {
+            let n = 64;
+            let mut pool = CollectivePool::with_intra(
+                topo, n, full_ranges(n, 2), WireFormat::F32,
+                CommMode::Hierarchical, IntraNodeMode::ReduceScatter, 64);
+            assert!(!pool.is_hierarchical() && !pool.is_intra_rs(),
+                    "{topo}");
+            let synth = Synth { n };
+            pool.step(&[], 1.0, 1, 0, true, &synth).unwrap();
+            let want = expected(4, n, 0, 1);
+            testkit::assert_allclose(&pool.leader_grads(), &want, 1e-3,
+                                     1e-5);
+        }
+    }
+
+    #[test]
+    fn rs_compute_error_is_reported_not_deadlocked() {
+        struct Failing {
+            n: usize,
+        }
+        impl RankCompute for Failing {
+            fn micro(&self, rank: usize, _s: usize, _m: usize, _p: &[f32],
+                     _sc: f32, out: &mut Vec<f32>) -> Result<MicroStats> {
+                // rank 4 sits mid-ring on 2M3G (machine 1, local 1)
+                anyhow::ensure!(rank != 4, "injected failure on rank 4");
+                out.resize(self.n, 0.0);
+                out.fill(1.0);
+                Ok(MicroStats::default())
+            }
+        }
+        let topo = Topology::new(2, 3);
+        let n = 96;
+        let mut pool = CollectivePool::with_intra(
+            topo, n, full_ranges(n, 2), WireFormat::F32, CommMode::Auto,
+            IntraNodeMode::ReduceScatter, 16);
+        let err = pool.step(&[], 1.0, 1, 0, true, &Failing { n })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("rank 4"));
         // the pool must still be usable afterwards
         let synth = Synth { n };
         pool.step(&[], 1.0, 1, 1, true, &synth).unwrap();

@@ -60,15 +60,19 @@ impl RingPlan {
         (r + self.n - s) % self.n
     }
 
-    /// Total elements a single rank transmits (2*(n-1)/n * len, ±rounding).
-    pub fn bytes_sent_per_rank(&self) -> usize {
+    /// Total ELEMENTS rank `r` transmits over the full schedule —
+    /// roughly `2*(n-1)/n * len`, but uneven chunk splits give ranks
+    /// different totals (a rank repeatedly sending the `+1`-sized
+    /// chunks transmits more).  Multiply by the element width to get
+    /// bytes.
+    pub fn elems_sent(&self, r: usize) -> usize {
         if self.n == 1 {
             return 0;
         }
         let mut total = 0;
         for s in 0..self.n - 1 {
-            total += self.chunk(self.send_chunk_rs(0, s)).len();
-            total += self.chunk(self.send_chunk_ag(0, s)).len();
+            total += self.chunk(self.send_chunk_rs(r, s)).len();
+            total += self.chunk(self.send_chunk_ag(r, s)).len();
         }
         total
     }
@@ -166,11 +170,22 @@ mod tests {
 
     #[test]
     fn traffic_matches_2nm1_over_n() {
-        // Each rank transmits 2*(n-1)/n of the payload (paper §2.2).
+        // Each rank transmits 2*(n-1)/n of the payload in ELEMENTS
+        // (paper §2.2) when chunks divide evenly — and every rank the
+        // same amount.
         let p = RingPlan::new(4, 400);
-        assert_eq!(p.bytes_sent_per_rank(), 2 * 3 * 100);
+        for r in 0..4 {
+            assert_eq!(p.elems_sent(r), 2 * 3 * 100);
+        }
         let p1 = RingPlan::new(1, 100);
-        assert_eq!(p1.bytes_sent_per_rank(), 0);
+        assert_eq!(p1.elems_sent(0), 0);
+        // Uneven split: per-rank totals differ but each stays within
+        // one chunk of the even-share estimate, and the schedule-wide
+        // total is exactly 2*(n-1)*len.
+        let pu = RingPlan::new(4, 10); // chunks 3,3,2,2
+        let total: usize = (0..4).map(|r| pu.elems_sent(r)).sum();
+        assert_eq!(total, 2 * 3 * 10);
+        assert!((0..4).any(|r| pu.elems_sent(r) != pu.elems_sent(0)));
     }
 
     #[test]

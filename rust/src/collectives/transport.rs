@@ -428,6 +428,12 @@ pub enum LinkKind {
     ChainUp,
     /// Chunked chain copy-forward: local rank `l-1 -> l`.
     ChainDown,
+    /// 2-level reduce-scatter intra-node ring: local rank
+    /// `l -> (l+1) % g` within one machine.
+    RsIntra,
+    /// 2-level reduce-scatter cross-machine ring: same local index on
+    /// machine `M -> (M+1) % m`.
+    RsCross,
 }
 
 impl LinkKind {
@@ -440,6 +446,8 @@ impl LinkKind {
             LinkKind::MemberDown => 3,
             LinkKind::ChainUp => 4,
             LinkKind::ChainDown => 5,
+            LinkKind::RsIntra => 6,
+            LinkKind::RsCross => 7,
         }
     }
 
@@ -452,6 +460,8 @@ impl LinkKind {
             3 => LinkKind::MemberDown,
             4 => LinkKind::ChainUp,
             5 => LinkKind::ChainDown,
+            6 => LinkKind::RsIntra,
+            7 => LinkKind::RsCross,
             k => {
                 return Err(TransportError::Protocol(format!(
                     "unknown link kind {k}"
@@ -537,6 +547,24 @@ impl Transport for InProcTransport {
 // endpoint wiring
 // ---------------------------------------------------------------------------
 
+/// The RESOLVED exchange schedule [`build_endpoints`] wires — what the
+/// pool decided from `CommMode`/`IntraNodeMode` and the topology, not
+/// the raw knobs (degenerate topologies resolve to `Flat` before this
+/// enum is built).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// One flat world-sized ring.
+    Flat,
+    /// Hierarchical serialized-leader gather / leader ring / broadcast.
+    Leader,
+    /// Hierarchical chunked member chain feeding the leader ring.
+    Chain,
+    /// Bandwidth-optimal 2-level reduce-scatter: intra-node ring
+    /// reduce-scatter, per-local-index cross-machine rings, intra-node
+    /// allgather.  Requires `machines > 1 && gpus_per_machine > 1`.
+    ReduceScatter,
+}
+
 /// Per-rank bundle of link ends, one variant per comm-protocol role.
 /// This is the boxed-transport successor of the pool's old private
 /// `CommWiring` enum; `pool.rs` consumes it in `comm_worker`.
@@ -606,6 +634,29 @@ pub enum CommEndpoints {
         /// To local rank `l+1` (None at the chain tail).
         down_tx: Option<Box<dyn FrameTx>>,
     },
+    /// 2-level reduce-scatter participant — EVERY rank plays the same
+    /// role (there is no leader): it rides the intra-node ring for the
+    /// reduce-scatter and allgather phases, and the cross-machine ring
+    /// at its own local index for the shard allreduce in between.
+    RsNode {
+        /// Machine index (cross-ring rank).
+        machine: usize,
+        /// Machine count (cross-ring size).
+        machines: usize,
+        /// GPUs per machine (intra-ring size).
+        gpus: usize,
+        /// Local index within the node (intra-ring rank).
+        local: usize,
+        /// Intra-node ring, to local `(l+1) % g` ("PCIe").
+        intra_tx: Box<dyn FrameTx>,
+        /// Intra-node ring, from local `(l-1) % g`.
+        intra_rx: Box<dyn FrameRx>,
+        /// Cross-machine ring at this local index, to machine
+        /// `(M+1) % m` ("network").
+        cross_tx: Box<dyn FrameTx>,
+        /// Cross-machine ring, from machine `(M-1) % m`.
+        cross_rx: Box<dyn FrameRx>,
+    },
 }
 
 /// Scratch used while distributing link ends to ranks.
@@ -621,6 +672,8 @@ struct Slots {
     up_tx: Option<Box<dyn FrameTx>>,
     down_rx: Option<Box<dyn FrameRx>>,
     down_tx: Option<Box<dyn FrameTx>>,
+    cross_tx: Option<Box<dyn FrameTx>>,
+    cross_rx: Option<Box<dyn FrameRx>>,
 }
 
 fn need<T>(slot: Option<T>, what: &str) -> Result<T, TransportError> {
@@ -644,22 +697,26 @@ fn place(slots: &mut HashMap<usize, Slots>, transport: &mut dyn Transport,
         let tx = need(ends.tx, "tx end of a local-from link")?;
         let s = slots.entry(id.from as usize).or_default();
         match id.kind {
-            LinkKind::FlatRing | LinkKind::LeaderRing => s.tx_next = Some(tx),
+            LinkKind::FlatRing | LinkKind::LeaderRing
+            | LinkKind::RsIntra => s.tx_next = Some(tx),
             LinkKind::MemberUp => s.to_leader = Some(tx),
             LinkKind::MemberDown => s.member_txs.push(tx),
             LinkKind::ChainUp => s.up_tx = Some(tx),
             LinkKind::ChainDown => s.down_tx = Some(tx),
+            LinkKind::RsCross => s.cross_tx = Some(tx),
         }
     }
     if to_local {
         let rx = need(ends.rx, "rx end of a local-to link")?;
         let s = slots.entry(id.to as usize).or_default();
         match id.kind {
-            LinkKind::FlatRing | LinkKind::LeaderRing => s.rx_prev = Some(rx),
+            LinkKind::FlatRing | LinkKind::LeaderRing
+            | LinkKind::RsIntra => s.rx_prev = Some(rx),
             LinkKind::MemberUp => s.member_rxs.push(rx),
             LinkKind::MemberDown => s.from_leader = Some(rx),
             LinkKind::ChainUp => s.up_rx = Some(rx),
             LinkKind::ChainDown => s.down_rx = Some(rx),
+            LinkKind::RsCross => s.cross_rx = Some(rx),
         }
     }
     Ok(())
@@ -667,13 +724,15 @@ fn place(slots: &mut HashMap<usize, Slots>, transport: &mut dyn Transport,
 
 /// Enumerate the comm graph for `topo` in the canonical global order,
 /// pull every link touching a local rank out of `transport`, and
-/// assemble one [`CommEndpoints`] per local rank.
+/// assemble one [`CommEndpoints`] per local rank.  `schedule` is the
+/// RESOLVED exchange shape (the pool maps `CommMode`/`IntraNodeMode`
+/// and the topology to it before calling here).
 ///
 /// The link order is part of the wire protocol: every process walks the
 /// same sequence, so socket dial/accept pairs match up without any
 /// out-of-band coordination (see `docs/transport.md` for the
 /// deadlock-freedom argument).
-pub fn build_endpoints(topo: &Topology, hierarchical: bool, intra_ring: bool,
+pub fn build_endpoints(topo: &Topology, schedule: Schedule,
                        chunk_elems: usize, transport: &mut dyn Transport)
                        -> Result<Vec<(usize, CommEndpoints)>, TransportError> {
     let world = topo.world_size();
@@ -692,10 +751,20 @@ pub fn build_endpoints(topo: &Topology, hierarchical: bool, intra_ring: bool,
     }
     let g = topo.gpus_per_machine;
     let m = topo.machines;
-    if hierarchical && (local.start % g != 0 || local.len() % g != 0) {
+    if schedule != Schedule::Flat
+        && (local.start % g != 0 || local.len() % g != 0)
+    {
         return Err(TransportError::Protocol(format!(
             "hierarchical comm needs machine-aligned process splits: \
              local ranks {local:?} vs {g} gpus/machine"
+        )));
+    }
+    if schedule == Schedule::ReduceScatter && (m < 2 || g < 2) {
+        // The pool resolves degenerate topologies to Flat before wiring;
+        // reaching here with one is a caller bug worth failing loudly.
+        return Err(TransportError::Protocol(format!(
+            "reduce-scatter schedule needs machines > 1 and \
+             gpus/machine > 1, got {m}M{g}G"
         )));
     }
 
@@ -704,49 +773,77 @@ pub fn build_endpoints(topo: &Topology, hierarchical: bool, intra_ring: bool,
         slots.insert(r, Slots::default());
     }
 
-    if !hierarchical {
-        if world > 1 {
-            for r in 0..world {
-                let id = LinkId {
-                    kind: LinkKind::FlatRing,
-                    from: r as u32,
-                    to: ((r + 1) % world) as u32,
-                };
-                place(&mut slots, transport, id, &local)?;
-            }
-        }
-    } else {
-        for machine in 0..m {
-            let leader = (machine * g) as u32;
-            for l in 1..g {
-                let rank = (machine * g + l) as u32;
-                if !intra_ring {
-                    place(&mut slots, transport,
-                          LinkId { kind: LinkKind::MemberUp,
-                                   from: rank, to: leader },
-                          &local)?;
-                    place(&mut slots, transport,
-                          LinkId { kind: LinkKind::MemberDown,
-                                   from: leader, to: rank },
-                          &local)?;
-                } else {
-                    // chain edges between local neighbors l and l-1
-                    place(&mut slots, transport,
-                          LinkId { kind: LinkKind::ChainUp,
-                                   from: rank, to: rank - 1 },
-                          &local)?;
-                    place(&mut slots, transport,
-                          LinkId { kind: LinkKind::ChainDown,
-                                   from: rank - 1, to: rank },
-                          &local)?;
+    match schedule {
+        Schedule::Flat => {
+            if world > 1 {
+                for r in 0..world {
+                    let id = LinkId {
+                        kind: LinkKind::FlatRing,
+                        from: r as u32,
+                        to: ((r + 1) % world) as u32,
+                    };
+                    place(&mut slots, transport, id, &local)?;
                 }
             }
         }
-        for machine in 0..m {
-            let from = (machine * g) as u32;
-            let to = (((machine + 1) % m) * g) as u32;
-            place(&mut slots, transport,
-                  LinkId { kind: LinkKind::LeaderRing, from, to }, &local)?;
+        Schedule::Leader | Schedule::Chain => {
+            for machine in 0..m {
+                let leader = (machine * g) as u32;
+                for l in 1..g {
+                    let rank = (machine * g + l) as u32;
+                    if schedule == Schedule::Leader {
+                        place(&mut slots, transport,
+                              LinkId { kind: LinkKind::MemberUp,
+                                       from: rank, to: leader },
+                              &local)?;
+                        place(&mut slots, transport,
+                              LinkId { kind: LinkKind::MemberDown,
+                                       from: leader, to: rank },
+                              &local)?;
+                    } else {
+                        // chain edges between local neighbors l and l-1
+                        place(&mut slots, transport,
+                              LinkId { kind: LinkKind::ChainUp,
+                                       from: rank, to: rank - 1 },
+                              &local)?;
+                        place(&mut slots, transport,
+                              LinkId { kind: LinkKind::ChainDown,
+                                       from: rank - 1, to: rank },
+                              &local)?;
+                    }
+                }
+            }
+            for machine in 0..m {
+                let from = (machine * g) as u32;
+                let to = (((machine + 1) % m) * g) as u32;
+                place(&mut slots, transport,
+                      LinkId { kind: LinkKind::LeaderRing, from, to },
+                      &local)?;
+            }
+        }
+        Schedule::ReduceScatter => {
+            // Intra-node rings first (one g-sized ring per machine),
+            // then the g cross-machine rings (one m-sized ring per
+            // local index) — one deterministic global order, like every
+            // other schedule.
+            for machine in 0..m {
+                for l in 0..g {
+                    let from = (machine * g + l) as u32;
+                    let to = (machine * g + (l + 1) % g) as u32;
+                    place(&mut slots, transport,
+                          LinkId { kind: LinkKind::RsIntra, from, to },
+                          &local)?;
+                }
+            }
+            for l in 0..g {
+                for machine in 0..m {
+                    let from = (machine * g + l) as u32;
+                    let to = (((machine + 1) % m) * g + l) as u32;
+                    place(&mut slots, transport,
+                          LinkId { kind: LinkKind::RsCross, from, to },
+                          &local)?;
+                }
+            }
         }
     }
 
@@ -757,59 +854,66 @@ pub fn build_endpoints(topo: &Topology, hierarchical: bool, intra_ring: bool,
     let mut out = Vec::with_capacity(local.len());
     for r in local.clone() {
         let mut s = slots.remove(&r).unwrap_or_default();
-        let ep = if !hierarchical {
-            let (tx_next, rx_prev) = if world == 1 {
-                // degenerate ring: never used, but keeps one code path
-                let (tx, _rx) = chan_link();
-                let (_tx2, rx) = chan_link();
-                (tx, rx)
-            } else {
-                (need(s.tx_next.take(), "flat ring tx")?,
-                 need(s.rx_prev.take(), "flat ring rx")?)
-            };
-            CommEndpoints::Flat {
-                rank: r,
-                ring_size: world,
-                net: flat_net,
-                tx_next,
-                rx_prev,
-            }
-        } else {
-            let machine = r / g;
-            let l = r % g;
-            if l == 0 && !intra_ring {
-                CommEndpoints::Leader {
-                    machine,
-                    machines: m,
-                    member_rxs: std::mem::take(&mut s.member_rxs),
-                    member_txs: std::mem::take(&mut s.member_txs),
-                    tx_next: need(s.tx_next.take(), "leader ring tx")?,
-                    rx_prev: need(s.rx_prev.take(), "leader ring rx")?,
-                }
-            } else if l == 0 {
-                CommEndpoints::ChainLeader {
-                    machine,
-                    machines: m,
-                    chunk_elems,
-                    up_rx: need(s.up_rx.take(), "chain leader up rx")?,
-                    down_tx: need(s.down_tx.take(), "chain leader down tx")?,
-                    tx_next: need(s.tx_next.take(), "leader ring tx")?,
-                    rx_prev: need(s.rx_prev.take(), "leader ring rx")?,
-                }
-            } else if !intra_ring {
-                CommEndpoints::Member {
-                    to_leader: need(s.to_leader.take(), "member up tx")?,
-                    from_leader: need(s.from_leader.take(), "member down rx")?,
-                }
-            } else {
-                CommEndpoints::ChainMember {
-                    chunk_elems,
-                    up_rx: s.up_rx.take(), // None at the chain tail
-                    up_tx: need(s.up_tx.take(), "chain member up tx")?,
-                    down_rx: need(s.down_rx.take(), "chain member down rx")?,
-                    down_tx: s.down_tx.take(), // None at the chain tail
+        let machine = r / g;
+        let l = r % g;
+        let ep = match schedule {
+            Schedule::Flat => {
+                let (tx_next, rx_prev) = if world == 1 {
+                    // degenerate ring: never used, but keeps one code
+                    // path
+                    let (tx, _rx) = chan_link();
+                    let (_tx2, rx) = chan_link();
+                    (tx, rx)
+                } else {
+                    (need(s.tx_next.take(), "flat ring tx")?,
+                     need(s.rx_prev.take(), "flat ring rx")?)
+                };
+                CommEndpoints::Flat {
+                    rank: r,
+                    ring_size: world,
+                    net: flat_net,
+                    tx_next,
+                    rx_prev,
                 }
             }
+            Schedule::Leader if l == 0 => CommEndpoints::Leader {
+                machine,
+                machines: m,
+                member_rxs: std::mem::take(&mut s.member_rxs),
+                member_txs: std::mem::take(&mut s.member_txs),
+                tx_next: need(s.tx_next.take(), "leader ring tx")?,
+                rx_prev: need(s.rx_prev.take(), "leader ring rx")?,
+            },
+            Schedule::Leader => CommEndpoints::Member {
+                to_leader: need(s.to_leader.take(), "member up tx")?,
+                from_leader: need(s.from_leader.take(), "member down rx")?,
+            },
+            Schedule::Chain if l == 0 => CommEndpoints::ChainLeader {
+                machine,
+                machines: m,
+                chunk_elems,
+                up_rx: need(s.up_rx.take(), "chain leader up rx")?,
+                down_tx: need(s.down_tx.take(), "chain leader down tx")?,
+                tx_next: need(s.tx_next.take(), "leader ring tx")?,
+                rx_prev: need(s.rx_prev.take(), "leader ring rx")?,
+            },
+            Schedule::Chain => CommEndpoints::ChainMember {
+                chunk_elems,
+                up_rx: s.up_rx.take(), // None at the chain tail
+                up_tx: need(s.up_tx.take(), "chain member up tx")?,
+                down_rx: need(s.down_rx.take(), "chain member down rx")?,
+                down_tx: s.down_tx.take(), // None at the chain tail
+            },
+            Schedule::ReduceScatter => CommEndpoints::RsNode {
+                machine,
+                machines: m,
+                gpus: g,
+                local: l,
+                intra_tx: need(s.tx_next.take(), "rs intra ring tx")?,
+                intra_rx: need(s.rx_prev.take(), "rs intra ring rx")?,
+                cross_tx: need(s.cross_tx.take(), "rs cross ring tx")?,
+                cross_rx: need(s.cross_rx.take(), "rs cross ring rx")?,
+            },
         };
         out.push((r, ep));
     }
@@ -891,7 +995,8 @@ mod tests {
     fn link_kind_u8_round_trips() {
         for k in [LinkKind::FlatRing, LinkKind::LeaderRing,
                   LinkKind::MemberUp, LinkKind::MemberDown,
-                  LinkKind::ChainUp, LinkKind::ChainDown] {
+                  LinkKind::ChainUp, LinkKind::ChainDown,
+                  LinkKind::RsIntra, LinkKind::RsCross] {
             assert_eq!(LinkKind::from_u8(k.to_u8()).unwrap(), k);
         }
         assert!(LinkKind::from_u8(99).is_err());
@@ -931,7 +1036,7 @@ mod tests {
     fn inproc_endpoints_match_flat_topology() {
         let topo = Topology::new(1, 4);
         let mut t = InProcTransport::new(4);
-        let eps = build_endpoints(&topo, false, false, 1 << 16, &mut t)
+        let eps = build_endpoints(&topo, Schedule::Flat, 1 << 16, &mut t)
             .expect("wiring");
         assert_eq!(eps.len(), 4);
         for (i, (r, ep)) in eps.iter().enumerate() {
@@ -951,7 +1056,7 @@ mod tests {
     fn inproc_endpoints_match_hierarchical_topology() {
         let topo = Topology::new(2, 2);
         let mut t = InProcTransport::new(4);
-        let eps = build_endpoints(&topo, true, false, 1 << 16, &mut t)
+        let eps = build_endpoints(&topo, Schedule::Leader, 1 << 16, &mut t)
             .expect("wiring");
         let mut leaders = 0;
         let mut members = 0;
@@ -976,7 +1081,7 @@ mod tests {
     fn inproc_endpoints_match_chain_topology() {
         let topo = Topology::new(2, 3);
         let mut t = InProcTransport::new(6);
-        let eps = build_endpoints(&topo, true, true, 1 << 10, &mut t)
+        let eps = build_endpoints(&topo, Schedule::Chain, 1 << 10, &mut t)
             .expect("wiring");
         for (r, ep) in &eps {
             match ep {
@@ -1011,7 +1116,7 @@ mod tests {
             }
         }
         let topo = Topology::new(2, 2);
-        let err = build_endpoints(&topo, true, false, 1, &mut Half)
+        let err = build_endpoints(&topo, Schedule::Leader, 1, &mut Half)
             .err()
             .expect("misaligned split must fail");
         assert!(matches!(err, TransportError::Protocol(_)));
@@ -1021,7 +1126,44 @@ mod tests {
     fn world_mismatch_is_rejected() {
         let topo = Topology::new(1, 4);
         let mut t = InProcTransport::new(2);
-        assert!(build_endpoints(&topo, false, false, 1, &mut t).is_err());
+        assert!(build_endpoints(&topo, Schedule::Flat, 1, &mut t).is_err());
+    }
+
+    #[test]
+    fn inproc_endpoints_match_rs_topology() {
+        let topo = Topology::new(3, 2);
+        let mut t = InProcTransport::new(6);
+        let eps =
+            build_endpoints(&topo, Schedule::ReduceScatter, 1 << 16, &mut t)
+                .expect("wiring");
+        assert_eq!(eps.len(), 6);
+        for (r, ep) in &eps {
+            match ep {
+                CommEndpoints::RsNode { machine, machines, gpus,
+                                        local, .. } => {
+                    assert_eq!(*machine, r / 2);
+                    assert_eq!(*machines, 3);
+                    assert_eq!(*gpus, 2);
+                    assert_eq!(*local, r % 2);
+                }
+                _ => panic!("expected RsNode endpoints"),
+            }
+        }
+    }
+
+    #[test]
+    fn rs_schedule_rejects_degenerate_topologies() {
+        // The pool resolves 1-machine / 1-GPU shapes to Flat before
+        // wiring; asking for reduce-scatter on one is a loud error.
+        for (m, g) in [(1, 4), (4, 1), (1, 1)] {
+            let topo = Topology::new(m, g);
+            let mut t = InProcTransport::new(m * g);
+            let err =
+                build_endpoints(&topo, Schedule::ReduceScatter, 1, &mut t)
+                    .err()
+                    .expect("degenerate rs must fail");
+            assert!(matches!(err, TransportError::Protocol(_)));
+        }
     }
 
     #[test]

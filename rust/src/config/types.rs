@@ -37,8 +37,11 @@ pub struct TrainConfig {
     /// the (g-1) serialized whole-bucket leader transfers each way,
     /// `ring` = the chunked pipelined member chain (per-member
     /// transfers overlap; the inter-node ring starts on chunk 0 while
-    /// chunk 1 is still gathering), `auto` = ring whenever the
-    /// hierarchy resolves (CLI `--intra-node`).
+    /// chunk 1 is still gathering), `rs` = the bandwidth-optimal
+    /// 2-level reduce-scatter (intra reduce-scatter, per-shard
+    /// cross-machine rings, intra allgather — `O(n/g)` bytes per link),
+    /// `auto` = ring whenever the hierarchy resolves (CLI
+    /// `--intra-node`).
     pub intra_node: IntraNodeMode,
     /// Chunk size (elements) of the pipelined intra-node exchange (CLI
     /// `--chunk-elems`); values larger than a bucket degrade to one
@@ -359,6 +362,10 @@ mod tests {
         let c = RunConfig::from_toml(&doc).unwrap();
         assert_eq!(c.train.intra_node, IntraNodeMode::Serial);
         assert_eq!(c.train.chunk_elems, 4096);
+        // the 2-level reduce-scatter schedule is a first-class spelling
+        let rs = TomlDoc::parse("[train]\nintra_node = \"rs\"\n").unwrap();
+        let c_rs = RunConfig::from_toml(&rs).unwrap();
+        assert_eq!(c_rs.train.intra_node, IntraNodeMode::ReduceScatter);
         // defaults: pipelined chain at DEFAULT_CHUNK_ELEMS
         let d = RunConfig::default();
         assert_eq!(d.train.intra_node, IntraNodeMode::Auto);

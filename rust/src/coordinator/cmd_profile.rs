@@ -118,7 +118,9 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             "\nexchange profile: topo={topo} world={world} comm={comm_mode} \
              ({}) intra={} buckets={} accum={accum} steps={steps}",
             if pool.is_hierarchical() { "hierarchical" } else { "flat" },
-            if pool.is_intra_ring() {
+            if pool.is_intra_rs() {
+                "rs".to_string()
+            } else if pool.is_intra_ring() {
                 format!("ring (chunk {chunk_elems})")
             } else {
                 "serial".to_string()

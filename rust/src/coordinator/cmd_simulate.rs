@@ -54,7 +54,9 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
          buckets={buckets} comm={comm_mode} ({}) intra={intra_node} ({}) \
          prefetch={prefetch}",
         if model.is_hierarchical() { "hierarchical" } else { "flat" },
-        if model.is_intra_ring() {
+        if model.is_intra_rs() {
+            "rs".to_string()
+        } else if model.is_intra_ring() {
             format!("ring, {} chunks/bucket", model.bucket_chunks())
         } else {
             "serial".to_string()

@@ -422,7 +422,9 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
             cfg.train.comm_mode,
             if t.is_hierarchical() { "hierarchical" } else { "flat" },
             cfg.train.intra_node,
-            if t.is_intra_ring() {
+            if t.is_intra_rs() {
+                "rs".to_string()
+            } else if t.is_intra_ring() {
                 format!("ring, chunk {}", cfg.train.chunk_elems)
             } else {
                 "serial".to_string()
@@ -667,9 +669,10 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         cfg.train.comm_mode = CommMode::parse(&m)
             .map_err(|e| anyhow::anyhow!("--comm-mode: {e}"))?;
     }
-    // Intra-node schedule of the hierarchical exchange (ISSUE 5):
-    // `--intra-node serial|ring|auto` picks serialized-leader vs
-    // chunked-pipelined-chain transfers, `--chunk-elems N` the pipeline
+    // Intra-node schedule of the hierarchical exchange (ISSUE 5, rs
+    // added in ISSUE 9): `--intra-node serial|ring|rs|auto` picks
+    // serialized-leader vs chunked-pipelined-chain vs 2-level
+    // reduce-scatter transfers, `--chunk-elems N` the pipeline
     // granularity.
     if let Some(m) = args.get_opt("intra-node") {
         cfg.train.intra_node = IntraNodeMode::parse(&m)

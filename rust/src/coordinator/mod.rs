@@ -30,11 +30,15 @@ COMMANDS:
                    --data-dir data/quickstart [--phase2] [--ckpt path]
                    [--overlap=false] [--wire-f16] [--bucket-elems N]
                    [--comm-mode flat|hierarchical|auto] [--topology 2M4G]
-                   [--intra-node serial|ring|auto]  intra-node schedule
-                                   of the hierarchical exchange: ring =
-                                   chunked pipelined member chain (the
-                                   default on multi-GPU nodes), serial =
-                                   (g-1) whole-bucket leader transfers
+                   [--intra-node serial|ring|rs|auto]  intra-node
+                                   schedule of the hierarchical
+                                   exchange: ring = chunked pipelined
+                                   member chain (the default on
+                                   multi-GPU nodes), serial = (g-1)
+                                   whole-bucket leader transfers, rs =
+                                   bandwidth-optimal 2-level reduce-
+                                   scatter (O(n/g) bytes per link on
+                                   PCIe and the network)
                    [--chunk-elems N]  pipeline chunk size in elements
                                    (default 65536; > bucket = 1 chunk)
                    [--prefetch N]  per-rank batch-prefetch ring depth
@@ -133,7 +137,7 @@ COMMANDS:
                  (span naming: docs/tracing.md)
                    --topo 2M1G --accum 1 [--no-overlap] [--trace out.json]
                    [--comm-mode flat|hierarchical|auto]
-                   [--intra-node serial|ring|auto] [--chunk-elems N]
+                   [--intra-node serial|ring|rs|auto] [--chunk-elems N]
                    [--batch-build-ms X] [--no-prefetch]
   scaling        weak-scaling sweeps (Figs. 3 & 6)
                    --mode intra-inter | multinode  [--accum 4]
@@ -144,7 +148,7 @@ COMMANDS:
                    --preset bert-large                       (Fig. 4)
                    --preset bert-micro --trace exchange.json (profile)
                    [--topology 2M2G] [--comm-mode auto] [--steps 4]
-                   [--intra-node serial|ring|auto] [--chunk-elems N]
+                   [--intra-node serial|ring|rs|auto] [--chunk-elems N]
   cost           acquisition vs cloud cost tables (Tables 7 & 8)
                    [--days 12]
   amp-demo       mixed-precision walkthrough: op safety classes, loss

@@ -15,7 +15,8 @@
 //!
 //! * Every model here prices the schedule the pool actually EXECUTES —
 //!   [`hierarchical_allreduce_phases`] the serialized-leader transfers,
-//!   [`hierarchical_pipelined_phases`] the chunked chain pipeline; when
+//!   [`hierarchical_pipelined_phases`] the chunked chain pipeline,
+//!   [`hierarchical_rs_phases`] the 2-level reduce-scatter shards; when
 //!   the executed schedule changes, the model changes with it (the
 //!   fig6/table4 benches assert the correspondence).
 //! * Transfer times are strictly positive and monotone in payload;
@@ -189,6 +190,39 @@ pub fn hierarchical_allreduce_phases(topo: &Topology, bytes: f64,
 pub fn hierarchical_allreduce_time(topo: &Topology, bytes: f64,
                                    fabric: &Fabric) -> f64 {
     hierarchical_allreduce_phases(topo, bytes, fabric).total()
+}
+
+/// Price the bandwidth-optimal 2-level reduce-scatter schedule
+/// (`train.intra_node = rs`, executed by the pool's `rs_comm_loop`):
+///
+/// 1. intra-node reduce-scatter — `(g-1)` ring steps, each moving one
+///    `bytes/g` chunk per PCIe link (every member transmits
+///    concurrently, unlike the serialized leader funnel);
+/// 2. cross-machine shard rings — every rank runs an `m`-machine ring
+///    allreduce over ONLY its owned `bytes/g` shard; the `g` rings run
+///    concurrently over distinct same-local-index links, so the priced
+///    per-link payload is `bytes/g`, not `bytes`;
+/// 3. intra-node allgather — `(g-1)` more `bytes/g` ring steps.
+///
+/// Per-link traffic is therefore `O(n/g)` on BOTH fabrics — the NCCL
+/// 2-level form — versus the serialized leader's `O(n)` full-payload
+/// hops ([`hierarchical_allreduce_phases`]).  Degenerates exactly to
+/// the leader pricing at `g = 1` (no intra phases; the shard IS the
+/// bucket).
+pub fn hierarchical_rs_phases(topo: &Topology, bytes: f64,
+                              fabric: &Fabric) -> HierPhases {
+    let g = topo.gpus_per_machine;
+    let m = topo.machines;
+    let shard = bytes / g.max(1) as f64;
+    let pcie_s = if g > 1 {
+        2.0 * (g - 1) as f64 * fabric.pcie.transfer_time(shard)
+    } else {
+        0.0
+    };
+    HierPhases {
+        pcie_s,
+        net_s: ring_allreduce_time(m, shard, fabric.network),
+    }
 }
 
 /// Pricing of the chunked pipelined intra-node schedule
@@ -374,6 +408,60 @@ mod tests {
         // flat ring here even though the NIC carries less.
         let hier8 = hierarchical_allreduce_time(&topo, bytes, &f);
         assert!(hier8 > flat, "hier={hier8} flat={flat}");
+    }
+
+    #[test]
+    fn rs_phases_price_the_shard_schedule() {
+        // Both fabrics move bytes/g per link: 2(g-1) intra ring steps of
+        // one shard each, and an m-ring over one shard on the network.
+        let topo = Topology::new(4, 3);
+        let f = Fabric::paper();
+        let bytes = 2.0e8;
+        let p = hierarchical_rs_phases(&topo, bytes, &f);
+        let shard = bytes / 3.0;
+        let want_pcie = 2.0 * 2.0 * f.pcie.transfer_time(shard);
+        let want_net = ring_allreduce_time(4, shard, f.network);
+        assert!((p.pcie_s - want_pcie).abs() < 1e-12, "{p:?}");
+        assert!((p.net_s - want_net).abs() < 1e-12, "{p:?}");
+    }
+
+    #[test]
+    fn rs_beats_serialized_leader_whenever_nodes_are_wide() {
+        // O(n/g) per link: every g > 1 topology prices strictly below
+        // the serialized-leader schedule on BOTH phases — including the
+        // perf_hotpath 2M4G anchor.
+        let f = Fabric::paper();
+        for (m, g) in [(2, 4), (4, 3), (32, 8), (2, 2)] {
+            let topo = Topology::new(m, g);
+            for bytes in [1e6, 2e8, 1.36e9] {
+                let rs = hierarchical_rs_phases(&topo, bytes, &f);
+                let leader = hierarchical_allreduce_phases(&topo, bytes, &f);
+                assert!(rs.pcie_s < leader.pcie_s,
+                        "{m}M{g}G {bytes}: {rs:?} vs {leader:?}");
+                assert!(rs.net_s < leader.net_s,
+                        "{m}M{g}G {bytes}: {rs:?} vs {leader:?}");
+            }
+        }
+        // Bandwidth-dominated regime: the shard ring carries 1/g of the
+        // leader ring's per-link bytes, so net time shrinks ~g-fold.
+        let topo = Topology::new(4, 8);
+        let rs = hierarchical_rs_phases(&topo, 1.36e9, &f);
+        let leader = hierarchical_allreduce_phases(&topo, 1.36e9, &f);
+        assert!(rs.net_s < leader.net_s / 6.0,
+                "rs {} vs leader {}", rs.net_s, leader.net_s);
+    }
+
+    #[test]
+    fn rs_degenerates_to_leader_ring_at_g1() {
+        // One GPU per machine: the shard IS the bucket, no intra phases
+        // — identical pricing to the serialized-leader degenerate form.
+        let topo = Topology::new(8, 1);
+        let f = Fabric::paper();
+        let bytes = 1e8;
+        let p = hierarchical_rs_phases(&topo, bytes, &f);
+        let leader = hierarchical_allreduce_phases(&topo, bytes, &f);
+        assert_eq!(p.pcie_s, 0.0);
+        assert!((p.total() - leader.total()).abs() < 1e-12);
     }
 
     #[test]

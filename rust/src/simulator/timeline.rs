@@ -21,8 +21,8 @@ use crate::collectives::pool::{CommMode, IntraNodeMode,
                                DEFAULT_CHUNK_ELEMS};
 use crate::metrics::{add_bucket_exchange_spans, Timeline};
 use crate::netsim::{hierarchical_allreduce_phases,
-                    hierarchical_pipelined_phases, ring_allreduce_time,
-                    Fabric, HierPhases};
+                    hierarchical_pipelined_phases, hierarchical_rs_phases,
+                    ring_allreduce_time, Fabric, HierPhases};
 use crate::topology::Topology;
 
 /// Inputs of the iteration model.
@@ -54,7 +54,9 @@ pub struct IterationModel {
     /// Intra-node schedule under a hierarchical resolve, mirroring
     /// `train.intra_node`: `Ring` prices the chunked pipelined chain
     /// ([`hierarchical_pipelined_phases`]) and renders per-chunk spans;
-    /// `Serial` prices the (g-1) serialized leader transfers.
+    /// `Serial` prices the (g-1) serialized leader transfers;
+    /// `ReduceScatter` prices the 2-level shard schedule
+    /// ([`hierarchical_rs_phases`] — `O(n/g)` per-link bytes).
     pub intra_node: IntraNodeMode,
     /// Pipeline chunk size in f32 elements (`train.chunk_elems`).
     pub chunk_elems: usize,
@@ -110,6 +112,12 @@ impl IterationModel {
         self.is_hierarchical() && self.intra_node.resolves_ring(&self.topo)
     }
 
+    /// Whether the modeled exchange runs the 2-level reduce-scatter
+    /// schedule (the resolved intra mode, as in the real pool).
+    pub fn is_intra_rs(&self) -> bool {
+        self.is_hierarchical() && self.intra_node.resolves_rs(&self.topo)
+    }
+
     /// Chunks each modeled bucket splits into (1 unless the pipelined
     /// chain resolves) — drives the per-chunk trace spans.
     pub fn bucket_chunks(&self) -> usize {
@@ -130,10 +138,14 @@ impl IterationModel {
     /// ([`hierarchical_allreduce_phases`]) — or, when the pipelined
     /// chain resolves, [`hierarchical_pipelined_phases`] folded so that
     /// `net_s` is the NIC busy time and `pcie_s` the exposed remainder
-    /// (so `total()` is the pipelined critical path).
+    /// (so `total()` is the pipelined critical path) — or, when the
+    /// 2-level reduce-scatter resolves, [`hierarchical_rs_phases`]
+    /// (shard-sized transfers on both fabrics).
     pub fn bucket_phases(&self) -> HierPhases {
         let per_bucket = self.grad_bytes / self.buckets.max(1) as f64;
-        if self.is_intra_ring() {
+        if self.is_intra_rs() {
+            hierarchical_rs_phases(&self.topo, per_bucket, &self.fabric)
+        } else if self.is_intra_ring() {
             let p = hierarchical_pipelined_phases(
                 &self.topo, per_bucket, &self.fabric,
                 self.chunk_elems as f64 * 4.0);
@@ -428,6 +440,52 @@ mod tests {
         assert!((r.timeline.busy("pcie", "bucket0.pcie")
                  - phases.pcie_s).abs() < 1e-9);
         assert!(r.timeline.horizon() <= r.iteration_s + 1e-9);
+    }
+
+    #[test]
+    fn rs_resolve_prices_shard_schedule_and_beats_serial() {
+        // `--intra-node rs` on a multi-GPU hierarchy: bucket phases come
+        // from the 2-level shard pricing (O(n/g) per link), buckets stay
+        // single-span (no per-chunk naming — that's the chain's), and
+        // the iteration beats the serialized-leader resolve.
+        let rs = IterationModel {
+            comm_mode: CommMode::Auto,
+            intra_node: IntraNodeMode::ReduceScatter,
+            ..base("2M4G", 1, true)
+        };
+        assert!(rs.is_hierarchical());
+        assert!(rs.is_intra_rs());
+        assert!(!rs.is_intra_ring());
+        assert_eq!(rs.bucket_chunks(), 1);
+        let phases = rs.bucket_phases();
+        let want = crate::netsim::hierarchical_rs_phases(
+            &rs.topo, rs.grad_bytes / rs.buckets as f64, &rs.fabric);
+        assert!((phases.pcie_s - want.pcie_s).abs() < 1e-12);
+        assert!((phases.net_s - want.net_s).abs() < 1e-12);
+        let serial = IterationModel {
+            intra_node: IntraNodeMode::Serial,
+            ..rs.clone()
+        };
+        assert!(phases.total() < serial.bucket_phases().total(),
+                "rs pricing must beat serialized leader at 2M4G");
+        let r = simulate_iteration(&rs);
+        assert!(r.iteration_s < simulate_iteration(&serial).iteration_s);
+        // same gather/net/bcast span naming as the measured trace
+        let has = |name: &str| r.timeline.spans.iter()
+            .any(|s| s.name == name);
+        assert!(has("bucket0.pcie.gather"));
+        assert!(has("bucket0.net"));
+        assert!(has("bucket0.pcie.bcast"));
+        assert!((r.timeline.busy("net", "bucket0")
+                 - phases.net_s).abs() < 1e-9);
+        // degenerate g=1: rs falls back to the flat-equivalent leader
+        // ring, not an intra schedule
+        let g1 = IterationModel {
+            comm_mode: CommMode::Auto,
+            intra_node: IntraNodeMode::ReduceScatter,
+            ..base("4M1G", 1, true)
+        };
+        assert!(!g1.is_intra_rs());
     }
 
     #[test]

@@ -491,6 +491,12 @@ impl Trainer {
         self.pool.is_intra_ring()
     }
 
+    /// Whether the exchange runs the bandwidth-optimal 2-level
+    /// reduce-scatter schedule (`train.intra_node = rs`).
+    pub fn is_intra_rs(&self) -> bool {
+        self.pool.is_intra_rs()
+    }
+
     /// Monotone data-consumption counter (attempted optimizer steps,
     /// including AMP-skipped ones) — the exact stream position a v2
     /// checkpoint captures.

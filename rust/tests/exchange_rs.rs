@@ -1,0 +1,584 @@
+//! ISSUE 9 (tentpole): bandwidth-optimal 2-level reduce-scatter
+//! exchange, plus the loud-fail protocol regressions.
+//!
+//! The headline property: across random `<X>M<Y>G` topologies
+//! (including the `g = 1` / `m = 1` degenerates where the schedule
+//! falls back to flat), random bucket thresholds (including buckets
+//! smaller than a node — empty shards), accumulation depths, both
+//! overlap modes and both wire formats, the **2-level reduce-scatter**
+//! exchange, the **serialized-leader** schedule, the **flat world
+//! ring**, and the old **spawn-per-step baseline** all produce
+//! bitwise-identical reduced gradients on exact-sum gradients (dyadic
+//! grid, so no summation association can matter).  The same equality
+//! holds over `SocketTransport`.
+//!
+//! Plus the ISSUE-9 bugfix regressions: a peer that ships a truncated
+//! ring payload, a skewed/short member bucket, a skewed chain chunk, or
+//! a skewed broadcast now surfaces a NAMED protocol error — on both
+//! transports — instead of silently truncating the reduce `zip` (or
+//! only tripping a debug assert).
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use bertdist::collectives::pool::{CollectivePool, CommMode, IntraNodeMode,
+                                  MicroStats, RankCompute, WireFormat};
+use bertdist::collectives::transport::{FrameTx, InProcTransport, LinkEnds,
+                                       LinkId, LinkKind, PayloadPool,
+                                       Transport, TransportError};
+use bertdist::collectives::{Frame, SocketTransport};
+use bertdist::grad::{bucket_ranges, build_buckets, BucketRange,
+                     GradAccumulator};
+use bertdist::model::layout::ParamLayout;
+use bertdist::testkit;
+use bertdist::topology::Topology;
+use bertdist::trainer::allreduce_buckets;
+use bertdist::util::Pcg64;
+
+// ---------------------------------------------------------------------------
+// shared fixtures
+// ---------------------------------------------------------------------------
+
+/// Deterministic synthetic gradients on a dyadic grid: multiples of
+/// 0.25 in [-2, 2].  Every partial sum under ANY association is exactly
+/// representable in both f32 and f16, so the 2-level reduce-scatter,
+/// the serialized leader, the flat ring, and the spawn baseline must
+/// all agree to the bit.
+struct ExactSynth {
+    n: usize,
+    salt: u64,
+}
+
+impl RankCompute for ExactSynth {
+    fn micro(&self, rank: usize, step_index: usize, micro: usize,
+             _params: &[f32], _scale: f32, out: &mut Vec<f32>)
+             -> anyhow::Result<MicroStats> {
+        out.resize(self.n, 0.0);
+        let stream = (rank as u64) << 32
+            | (step_index as u64) << 8
+            | micro as u64;
+        let mut rng = Pcg64::with_stream(self.salt, stream);
+        for v in out.iter_mut() {
+            *v = (rng.range_usize(0, 17) as f32 - 8.0) * 0.25;
+        }
+        Ok(MicroStats { loss: 1.0, ..Default::default() })
+    }
+}
+
+fn random_layout(rng: &mut Pcg64) -> ParamLayout {
+    let tensors = rng.range_usize(1, 10);
+    let shapes: Vec<(String, Vec<usize>)> = (0..tensors)
+        .map(|i| (format!("t{i}"), vec![rng.range_usize(1, 400)]))
+        .collect();
+    ParamLayout::from_shapes(&shapes)
+}
+
+/// Run `steps` pooled steps under (mode, intra) and return every rank's
+/// reduced buffer.
+#[allow(clippy::too_many_arguments)]
+fn run_pool(topo: Topology, n: usize, ranges: Arc<[BucketRange]>,
+            wire: WireFormat, mode: CommMode, intra: IntraNodeMode,
+            overlap: bool, k: usize, steps: usize,
+            compute: &dyn RankCompute) -> Vec<Vec<f32>> {
+    let mut pool = CollectivePool::with_intra(
+        topo, n, ranges, wire, mode, intra, 1 << 16);
+    for s in 0..steps {
+        let out = pool.step(&[], 1.0, k, s, overlap, compute).unwrap();
+        assert!(out.comm_net_s <= out.comm_s + 1e-9,
+                "net {} > total {}", out.comm_net_s, out.comm_s);
+    }
+    (0..topo.world_size())
+        .map(|r| pool.rank_grads(r).clone())
+        .collect()
+}
+
+/// The old spawn-per-step exchange over the same gradients (f32 only).
+fn run_spawn_baseline(topo: Topology, n: usize, threshold: usize,
+                      layout: &ParamLayout, k: usize, steps: usize,
+                      compute: &dyn RankCompute) -> Vec<Vec<f32>> {
+    let world = topo.world_size();
+    let buckets = build_buckets(layout, threshold);
+    let mut accs: Vec<GradAccumulator> =
+        (0..world).map(|_| GradAccumulator::new(n)).collect();
+    let mut g = Vec::new();
+    for s in 0..steps {
+        for (r, acc) in accs.iter_mut().enumerate() {
+            acc.reset();
+            for m in 0..k {
+                compute.micro(r, s, m, &[], 1.0, &mut g).unwrap();
+                acc.add(&g);
+            }
+        }
+        allreduce_buckets(&mut accs, &buckets);
+    }
+    accs.iter().map(|a| a.buffer().to_vec()).collect()
+}
+
+fn assert_bitwise(tag: &str, a: &[Vec<f32>], b: &[Vec<f32>])
+                  -> Result<(), String> {
+    for (r, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        if x.len() != y.len() {
+            return Err(format!("{tag}: rank {r} length {} != {}",
+                               x.len(), y.len()));
+        }
+        for (i, (va, vb)) in x.iter().zip(y.iter()).enumerate() {
+            if va.to_bits() != vb.to_bits() {
+                return Err(format!("{tag}: rank {r} [{i}]: {va} != {vb}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// the headline property: rs ≡ serial ≡ flat ≡ spawn baseline, bitwise
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_rs_serial_flat_and_spawn_baseline_bitwise_identical() {
+    testkit::check_msg(
+        "rs≡serial≡flat≡spawn", 0x25C4, 8,
+        |r: &mut Pcg64| {
+            let machines = r.range_usize(1, 5);
+            let gpus = r.range_usize(1, 5);
+            let threshold = r.range_usize(1, 900);
+            let k = r.range_usize(1, 4);
+            let salt = r.next_u64();
+            (machines, gpus, threshold, k, salt)
+        },
+        |&(machines, gpus, threshold, k, salt)| {
+            let topo = Topology::new(machines, gpus);
+            let mut lrng = Pcg64::with_stream(salt, 0x25C);
+            let layout = random_layout(&mut lrng);
+            let n = layout.total_len();
+            let ranges = bucket_ranges(&build_buckets(&layout, threshold));
+            let synth = ExactSynth { n, salt };
+            let steps = 1;
+
+            // spawn baseline (f32) is the reference
+            let base = run_spawn_baseline(topo, n, threshold, &layout, k,
+                                          steps, &synth);
+            for wire in [WireFormat::F32, WireFormat::F16] {
+                for overlap in [true, false] {
+                    let tag =
+                        format!("{topo} {wire:?} overlap={overlap} k={k}");
+                    let rs = run_pool(
+                        topo, n, ranges.clone(), wire,
+                        CommMode::Hierarchical,
+                        IntraNodeMode::ReduceScatter, overlap, k, steps,
+                        &synth);
+                    let serial = run_pool(
+                        topo, n, ranges.clone(), wire,
+                        CommMode::Hierarchical, IntraNodeMode::Serial,
+                        overlap, k, steps, &synth);
+                    let flat = run_pool(
+                        topo, n, ranges.clone(), wire, CommMode::Flat,
+                        IntraNodeMode::Auto, overlap, k, steps, &synth);
+                    assert_bitwise(&format!("{tag} rs vs serial"), &rs,
+                                   &serial)?;
+                    assert_bitwise(&format!("{tag} rs vs flat"), &rs,
+                                   &flat)?;
+                    assert_bitwise(&format!("{tag} serial vs spawn"),
+                                   &serial, &base)?;
+                    // replicas identical within the rs mode
+                    for r in 1..topo.world_size() {
+                        if rs[0] != rs[r] {
+                            return Err(format!(
+                                "{tag}: rs replicas diverged (rank {r})"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn rs_corner_topologies_and_tiny_buckets_pinned() {
+    // Pin the corners deterministically: g = 1 and m = 1 (rs falls back
+    // to flat), the smallest true 2-level shape (2M2G), a wider node
+    // (2M4G) — with a layout whose first bucket (3 elems) is SMALLER
+    // than a 4-GPU node, so some shards and some cross-ring chunks are
+    // empty.
+    for (machines, gpus) in [(1usize, 1usize), (1, 4), (4, 1), (2, 2),
+                             (2, 4)] {
+        let topo = Topology::new(machines, gpus);
+        let salt = 0x25EE_Du64 + (machines * 10 + gpus) as u64;
+        let layout = ParamLayout::from_shapes(&[
+            ("tiny".into(), vec![3]),
+            ("a".into(), vec![301]),
+            ("b".into(), vec![64]),
+        ]);
+        let n = layout.total_len();
+        let threshold = 4; // "tiny" becomes its own 3-element bucket
+        let ranges = bucket_ranges(&build_buckets(&layout, threshold));
+        assert!(ranges.iter().any(|b| b.len() < 4),
+                "fixture must include a bucket smaller than a node");
+        let synth = ExactSynth { n, salt };
+        let k = 2;
+        let base =
+            run_spawn_baseline(topo, n, threshold, &layout, k, 1, &synth);
+        for wire in [WireFormat::F32, WireFormat::F16] {
+            let rs = run_pool(topo, n, ranges.clone(), wire,
+                              CommMode::Hierarchical,
+                              IntraNodeMode::ReduceScatter, true, k, 1,
+                              &synth);
+            let serial = run_pool(topo, n, ranges.clone(), wire,
+                                  CommMode::Hierarchical,
+                                  IntraNodeMode::Serial, true, k, 1,
+                                  &synth);
+            assert_bitwise(&format!("{topo} {wire:?} rs vs serial"), &rs,
+                           &serial)
+                .unwrap();
+            assert_bitwise(&format!("{topo} {wire:?} serial vs spawn"),
+                           &serial, &base)
+                .unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// socket == in-proc for the rs schedule, bitwise
+// ---------------------------------------------------------------------------
+
+/// Fresh loopback TCP addresses: bind-to-:0 probes, then released for
+/// the transports to claim.
+fn probe_addrs(n: usize) -> Vec<String> {
+    let listeners: Vec<std::net::TcpListener> = (0..n)
+        .map(|_| std::net::TcpListener::bind("127.0.0.1:0").unwrap())
+        .collect();
+    listeners
+        .iter()
+        .map(|l| format!("127.0.0.1:{}", l.local_addr().unwrap().port()))
+        .collect()
+}
+
+/// Run `steps` pooled exchanges with the world split over `nprocs`
+/// socket transports (one thread standing in for each process) and
+/// return every rank's reduced gradients in world order.
+#[allow(clippy::too_many_arguments)]
+fn socket_world_grads(topo: Topology, nprocs: usize, wire: WireFormat,
+                      mode: CommMode, intra: IntraNodeMode, n: usize,
+                      ranges: &Arc<[BucketRange]>, steps: usize, k: usize,
+                      salt: u64) -> Vec<Vec<f32>> {
+    let peers = probe_addrs(nprocs);
+    let world = topo.world_size();
+    let mut out: Vec<Vec<f32>> = vec![Vec::new(); world];
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..nprocs)
+            .map(|p| {
+                let peers = peers.clone();
+                let ranges = ranges.clone();
+                scope.spawn(move || {
+                    let mut t = SocketTransport::with_hosts(
+                        world, &peers[p], peers.clone(), 30.0).unwrap();
+                    let mut pool = CollectivePool::with_transport(
+                        topo, n, ranges, wire, mode, intra, 1 << 16,
+                        &mut t).unwrap();
+                    for s in 0..steps {
+                        pool.step(&[], 1.0, k, s, true,
+                                  &ExactSynth { n, salt })
+                            .unwrap();
+                    }
+                    pool.local_ranks()
+                        .map(|r| pool.rank_grads(r).clone())
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for (p, h) in handles.into_iter().enumerate() {
+            let grads = h.join().expect("socket world thread panicked");
+            let per = world / nprocs;
+            for (i, g) in grads.into_iter().enumerate() {
+                out[p * per + i] = g;
+            }
+        }
+    });
+    out
+}
+
+#[test]
+fn rs_socket_exchange_matches_inproc_bitwise() {
+    // 2M2G split machine-per-process: the intra-node rings stay
+    // in-memory inside each process, the per-shard cross-machine rings
+    // travel the sockets — and the reduced bits must not care.
+    let topo = Topology::new(2, 2);
+    let salt = 0x5_0C4E7u64;
+    let layout = ParamLayout::from_shapes(&[
+        ("a".into(), vec![130]),
+        ("b".into(), vec![77]),
+    ]);
+    let n = layout.total_len();
+    let ranges = bucket_ranges(&build_buckets(&layout, 64));
+    for wire in [WireFormat::F32, WireFormat::F16] {
+        let sock = socket_world_grads(topo, 2, wire, CommMode::Hierarchical,
+                                      IntraNodeMode::ReduceScatter, n,
+                                      &ranges, 2, 2, salt);
+        let inproc = run_pool(topo, n, ranges.clone(), wire,
+                              CommMode::Hierarchical,
+                              IntraNodeMode::ReduceScatter, true, 2, 2,
+                              &ExactSynth { n, salt });
+        assert_bitwise(&format!("rs socket vs inproc {wire:?}"), &sock,
+                       &inproc)
+            .unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// loud-fail regressions: tampered frames surface named protocol errors
+// ---------------------------------------------------------------------------
+
+/// Wraps another transport and tampers with every frame sent on links
+/// of one [`LinkKind`] — a stand-in for the desynchronized/buggy peer
+/// the ISSUE-9 protocol checks must catch.
+struct TamperTransport<T: Transport> {
+    inner: T,
+    kind: LinkKind,
+    mutate: fn(&mut Frame),
+}
+
+struct TamperTx {
+    inner: Box<dyn FrameTx>,
+    mutate: fn(&mut Frame),
+}
+
+impl FrameTx for TamperTx {
+    fn send(&mut self, mut frame: Frame, pool: &mut PayloadPool)
+            -> Result<(), TransportError> {
+        (self.mutate)(&mut frame);
+        self.inner.send(frame, pool)
+    }
+
+    fn remote(&self) -> bool {
+        self.inner.remote()
+    }
+
+    fn take_backpressure_s(&mut self) -> f64 {
+        self.inner.take_backpressure_s()
+    }
+}
+
+impl<T: Transport> Transport for TamperTransport<T> {
+    fn world(&self) -> usize {
+        self.inner.world()
+    }
+
+    fn local_ranks(&self) -> Range<usize> {
+        self.inner.local_ranks()
+    }
+
+    fn link(&mut self, id: LinkId) -> Result<LinkEnds, TransportError> {
+        let mut ends = self.inner.link(id)?;
+        if id.kind == self.kind {
+            if let Some(tx) = ends.tx.take() {
+                ends.tx = Some(Box::new(TamperTx {
+                    inner: tx,
+                    mutate: self.mutate,
+                }));
+            }
+        }
+        Ok(ends)
+    }
+}
+
+fn truncate_ring(f: &mut Frame) {
+    match f {
+        Frame::RingF32 { data, .. } => {
+            data.pop();
+        }
+        Frame::RingF16 { data, .. } => {
+            data.pop();
+        }
+        _ => {}
+    }
+}
+
+fn skew_bucket(f: &mut Frame) {
+    if let Frame::Bucket { idx, .. } = f {
+        *idx += 1;
+    }
+}
+
+fn truncate_bucket(f: &mut Frame) {
+    if let Frame::Bucket { data, .. } = f {
+        data.pop();
+    }
+}
+
+fn skew_chunk(f: &mut Frame) {
+    if let Frame::Chunk { chunk, .. } = f {
+        *chunk += 1;
+    }
+}
+
+fn skew_bcast(f: &mut Frame) {
+    if let Frame::Bcast { idx, .. } = f {
+        *idx += 1;
+    }
+}
+
+/// One pooled step over an in-proc world whose `kind` links tamper with
+/// every frame; returns the step error's full message.
+fn tampered_step_err(topo: Topology, wire: WireFormat, mode: CommMode,
+                     intra: IntraNodeMode, kind: LinkKind,
+                     mutate: fn(&mut Frame)) -> String {
+    let world = topo.world_size();
+    let mut t = TamperTransport {
+        inner: InProcTransport::new(world),
+        kind,
+        mutate,
+    };
+    let n = 96;
+    let ranges = BucketRange::even_split(n, 2);
+    let mut pool = CollectivePool::with_transport(
+        topo, n, ranges, wire, mode, intra, 1 << 16, &mut t).unwrap();
+    let err = pool
+        .step(&[], 1.0, 1, 0, true, &ExactSynth { n, salt: 1 })
+        .map(|_| ())
+        .unwrap_err();
+    format!("{err:#}")
+}
+
+#[test]
+fn truncated_ring_payload_fails_loudly_f32_and_f16() {
+    // Pre-fix, the recv_apply add-path `zip` silently dropped the tail
+    // of a short ring payload (and the copy path panicked).
+    for wire in [WireFormat::F32, WireFormat::F16] {
+        let msg = tampered_step_err(Topology::new(2, 1), wire,
+                                    CommMode::Flat, IntraNodeMode::Auto,
+                                    LinkKind::FlatRing, truncate_ring);
+        assert!(msg.contains("ring payload length skew"),
+                "{wire:?}: {msg}");
+        assert!(msg.contains("pooled step 0 failed"), "{wire:?}: {msg}");
+    }
+}
+
+#[test]
+fn skewed_member_bucket_fails_loudly_in_release() {
+    // Pre-fix this was a debug_assert: a release build summed the WRONG
+    // bucket's data silently.
+    let msg = tampered_step_err(Topology::new(2, 2), WireFormat::F32,
+                                CommMode::Hierarchical,
+                                IntraNodeMode::Serial, LinkKind::MemberUp,
+                                skew_bucket);
+    assert!(msg.contains("member bucket skew"), "{msg}");
+}
+
+#[test]
+fn short_member_payload_fails_loudly() {
+    let msg = tampered_step_err(Topology::new(2, 2), WireFormat::F32,
+                                CommMode::Hierarchical,
+                                IntraNodeMode::Serial, LinkKind::MemberUp,
+                                truncate_bucket);
+    assert!(msg.contains("member payload length skew"), "{msg}");
+}
+
+#[test]
+fn skewed_chain_chunk_fails_loudly() {
+    let msg = tampered_step_err(Topology::new(2, 2), WireFormat::F32,
+                                CommMode::Hierarchical,
+                                IntraNodeMode::Ring, LinkKind::ChainUp,
+                                skew_chunk);
+    assert!(msg.contains("chain chunk skew"), "{msg}");
+}
+
+#[test]
+fn skewed_broadcast_fails_loudly() {
+    let msg = tampered_step_err(Topology::new(2, 2), WireFormat::F32,
+                                CommMode::Hierarchical,
+                                IntraNodeMode::Serial,
+                                LinkKind::MemberDown, skew_bcast);
+    assert!(msg.contains("broadcast bucket skew"), "{msg}");
+}
+
+#[test]
+fn rs_truncated_intra_and_cross_frames_fail_loudly() {
+    // The new schedule inherits the hardened ring protocol on BOTH of
+    // its levels.
+    let intra_msg = tampered_step_err(Topology::new(2, 2), WireFormat::F32,
+                                      CommMode::Hierarchical,
+                                      IntraNodeMode::ReduceScatter,
+                                      LinkKind::RsIntra, truncate_ring);
+    assert!(intra_msg.contains("ring payload length skew"), "{intra_msg}");
+    assert!(intra_msg.contains("intra reduce-scatter"), "{intra_msg}");
+    let cross_msg = tampered_step_err(Topology::new(2, 2), WireFormat::F32,
+                                      CommMode::Hierarchical,
+                                      IntraNodeMode::ReduceScatter,
+                                      LinkKind::RsCross, truncate_ring);
+    assert!(cross_msg.contains("ring payload length skew"), "{cross_msg}");
+    assert!(cross_msg.contains("cross ring"), "{cross_msg}");
+}
+
+/// Two socket processes where process `bad` tampers its `kind` sends;
+/// returns (good process's step error, bad process's step error).
+fn socket_tampered_errs(topo: Topology, mode: CommMode,
+                        intra: IntraNodeMode, kind: LinkKind,
+                        mutate: fn(&mut Frame)) -> (String, String) {
+    let peers = probe_addrs(2);
+    let world = topo.world_size();
+    let n = 96;
+    let ranges = BucketRange::even_split(n, 2);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..2)
+            .map(|p| {
+                let peers = peers.clone();
+                let ranges = ranges.clone();
+                scope.spawn(move || {
+                    let mut sock = SocketTransport::with_hosts(
+                        world, &peers[p], peers.clone(), 30.0).unwrap();
+                    let err = if p == 0 {
+                        let mut t = TamperTransport {
+                            inner: sock,
+                            kind,
+                            mutate,
+                        };
+                        let mut pool = CollectivePool::with_transport(
+                            topo, n, ranges, WireFormat::F32, mode, intra,
+                            1 << 16, &mut t).unwrap();
+                        pool.step(&[], 1.0, 1, 0, true,
+                                  &ExactSynth { n, salt: 1 })
+                            .map(|_| ())
+                            .unwrap_err()
+                    } else {
+                        let mut pool = CollectivePool::with_transport(
+                            topo, n, ranges, WireFormat::F32, mode, intra,
+                            1 << 16, &mut sock).unwrap();
+                        pool.step(&[], 1.0, 1, 0, true,
+                                  &ExactSynth { n, salt: 1 })
+                            .map(|_| ())
+                            .unwrap_err()
+                    };
+                    format!("{err:#}")
+                })
+            })
+            .collect();
+        let mut msgs = handles
+            .into_iter()
+            .map(|h| h.join().expect("socket thread panicked"));
+        let bad = msgs.next().unwrap();
+        let good = msgs.next().unwrap();
+        (good, bad)
+    })
+}
+
+#[test]
+fn truncated_ring_payload_fails_loudly_over_sockets() {
+    // The tampering process hosts rank 0; its flat-ring frame crosses a
+    // REAL socket, and the receiving process must name the corruption.
+    let (good, _bad) = socket_tampered_errs(
+        Topology::new(2, 1), CommMode::Flat, IntraNodeMode::Auto,
+        LinkKind::FlatRing, truncate_ring);
+    assert!(good.contains("ring payload length skew"), "{good}");
+}
+
+#[test]
+fn rs_truncated_cross_frame_fails_loudly_over_sockets() {
+    // 2M2G machine-per-process: the tampered rs cross-ring frames cross
+    // the sockets; the peer machine's ranks must fail loudly.
+    let (good, _bad) = socket_tampered_errs(
+        Topology::new(2, 2), CommMode::Hierarchical,
+        IntraNodeMode::ReduceScatter, LinkKind::RsCross, truncate_ring);
+    assert!(good.contains("ring payload length skew"), "{good}");
+    assert!(good.contains("cross ring"), "{good}");
+}

@@ -16,14 +16,17 @@
 # exchange throughput plus the per-bucket network latency the socket
 # hop adds) and a BENCH_rejoin.json section (socket-world teardown +
 # re-establish latency at a republished rendezvous epoch, and the
-# authenticated vs plain handshake cost) so future PRs can diff the
-# hot-path, comm-mode, input-pipeline, checkpoint, intra-node,
-# elastic, transport, and rejoin trajectories.
+# authenticated vs plain handshake cost) and a BENCH_exchange_rs.json
+# section (2-level reduce-scatter vs serialized-leader vs pipelined
+# exchange at the fixed synthetic 2M4G world) so future PRs can diff
+# the hot-path, comm-mode, input-pipeline, checkpoint, intra-node,
+# elastic, transport, rejoin, and exchange-schedule trajectories.
 #
 # Usage: scripts/bench_smoke.sh [output.json] [hier_output.json] \
 #                               [input_output.json] [ckpt_output.json] \
 #                               [intra_output.json] [elastic_output.json] \
-#                               [transport_output.json] [rejoin_output.json]
+#                               [transport_output.json] [rejoin_output.json] \
+#                               [exchange_rs_output.json]
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -36,6 +39,7 @@ INTRA_OUT="${5:-BENCH_intranode.json}"
 ELASTIC_OUT="${6:-BENCH_elastic.json}"
 TRANSPORT_OUT="${7:-BENCH_transport.json}"
 REJOIN_OUT="${8:-BENCH_rejoin.json}"
+RS_OUT="${9:-BENCH_exchange_rs.json}"
 export BENCH_QUICK=1
 export BENCH_JSON_OUT="$OUT"
 export BENCH_HIER_JSON_OUT="$HIER_OUT"
@@ -45,11 +49,12 @@ export BENCH_INTRA_JSON_OUT="$INTRA_OUT"
 export BENCH_ELASTIC_JSON_OUT="$ELASTIC_OUT"
 export BENCH_TRANSPORT_JSON_OUT="$TRANSPORT_OUT"
 export BENCH_REJOIN_JSON_OUT="$REJOIN_OUT"
+export BENCH_EXCHANGE_RS_JSON_OUT="$RS_OUT"
 
 cargo bench --bench perf_hotpath
 
 for f in "$OUT" "$HIER_OUT" "$INPUT_OUT" "$CKPT_OUT" "$INTRA_OUT" \
-         "$ELASTIC_OUT" "$TRANSPORT_OUT" "$REJOIN_OUT"; do
+         "$ELASTIC_OUT" "$TRANSPORT_OUT" "$REJOIN_OUT" "$RS_OUT"; do
     if [[ -f "$f" ]]; then
         echo "bench rows -> $f"
     else

@@ -33,6 +33,14 @@ cargo test -q --test failure_injection
 echo "==> cargo test -q --test transport"
 cargo test -q --test transport
 
+# the exchange-schedule suite proves the 2-level reduce-scatter bitwise
+# equal to the serialized/flat/spawn-baseline schedules (both wires,
+# both transports) and that truncated or skewed frames fail loudly with
+# named protocol errors; run it explicitly so the ISSUE-9 determinism
+# and loud-fail contracts cannot be silently skipped
+echo "==> cargo test -q --test exchange_rs"
+cargo test -q --test exchange_rs
+
 # the rejoin e2e pair is the grow-back gate: a killed peer re-admitted
 # at the same world size inside --rejoin-window (bitwise-equal finish),
 # and a window expiry degrading to the shrink restart instead of
