@@ -8,7 +8,7 @@ use bertdist::collectives::hierarchical::nic_bytes_per_node;
 use bertdist::netsim::{hierarchical_allreduce_phases,
                        hierarchical_pipelined_phases,
                        hierarchical_rs_phases, ring_allreduce_time,
-                       Fabric};
+                       sparse_allgather_time, sparse_ratio_sweep, Fabric};
 use bertdist::simulator::scaling::{figure6_topologies, weak_scaling};
 use bertdist::simulator::IterationModel;
 use bertdist::topology::Topology;
@@ -70,6 +70,11 @@ fn main() {
     let fabric = Fabric::paper();
     let bytes = 336_226_108.0 * 4.0;
     let chunk_bytes = 4.0 * (1 << 20) as f64; // 1 Mi elems per chunk
+    // ratio grid for the sparse-ring pricing (train.sparsify = topk):
+    // wide enough that the interior optimum never saturates an edge
+    let sp_grid: Vec<f64> = (0..60)
+        .map(|i| 10f64.powf(-6.0 + i as f64 * 6.0 / 59.0))
+        .collect();
     let rows: Vec<Vec<String>> = figure6_topologies()
         .iter()
         .filter(|t| t.machines > 1)
@@ -100,6 +105,24 @@ fn main() {
                         "{t}: rs must beat the serialized leader \
                          ({} vs {})", rs.total(), p.total());
             }
+            // sparse-ring pricing of the leader ring (train.sparsify):
+            // topk:1.0 must cost MORE net than the dense leader ring
+            // (8 B/entry index tax, m-1 whole-message hops), while the
+            // EF-inflation-weighted sweep bottoms out strictly inside
+            // the ratio grid — the knob has a real optimum.
+            let elems = (bytes / 4.0) as usize;
+            let sparse_full =
+                sparse_allgather_time(t.machines, elems, 1.0, fabric.network);
+            let dense_ring =
+                ring_allreduce_time(t.machines, bytes, fabric.network);
+            assert!(sparse_full > dense_ring,
+                    "{t}: topk:1.0 must price above the dense leader \
+                     ring ({sparse_full} vs {dense_ring})");
+            let (_, sp_best) = sparse_ratio_sweep(
+                t.machines, elems, fabric.network, 0.05, &sp_grid);
+            assert!(sp_best.ratio > sp_grid[0] && sp_best.ratio < 1.0,
+                    "{t}: sparse ratio optimum saturated an edge \
+                     ({sp_best:?})");
             vec![
                 t.to_string(),
                 format!("{:.2} s", flat),
@@ -109,17 +132,22 @@ fn main() {
                 format!("{:.2} s ({})", pipe.wall_s, pipe.chunks),
                 format!("{:.2} s", rs.total()),
                 format!("{:.2}x", flat / rs.net_s.max(1e-12)),
+                format!("{:.4} ({:.2} s)", sp_best.ratio, sp_best.wire_s),
             ]
         })
         .collect();
     println!("{}", render_table(
         &["topology", "flat ring", "hier total", "hier pcie", "hier net",
-          "pipelined (chunks)", "rs total", "rs net relief"],
+          "pipelined (chunks)", "rs total", "rs net relief",
+          "topk optimum (net)"],
         &rows));
     println!("(hier pcie is the executed leader-accumulate/broadcast \
               cost; pipelined is the chunked intra-node chain at 4 MiB \
               chunks — see netsim::hierarchical_pipelined_phases; rs is \
               the 2-level reduce-scatter moving 1/g of the payload per \
-              link — see netsim::hierarchical_rs_phases)");
+              link — see netsim::hierarchical_rs_phases; topk optimum is \
+              the EF-inflation-weighted sparse-ring ratio sweep — \
+              netsim::sparse_ratio_sweep — whose topk:1.0 endpoint \
+              always prices ABOVE the dense leader ring)");
     println!("\nfig6_multinode_scaling OK");
 }

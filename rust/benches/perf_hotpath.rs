@@ -10,8 +10,10 @@
 //! rejoin/re-admission cost with and without the authenticated
 //! handshake (ISSUE 8, emitted to BENCH_rejoin.json), the 2-level
 //! reduce-scatter vs serialized-leader exchange (ISSUE 9, emitted to
-//! BENCH_exchange_rs.json), and the end-to-end PJRT step overhead
-//! breakdown.
+//! BENCH_exchange_rs.json), the top-k sparsified network ring — select
+//! cost, sparse-vs-dense pooled exchange, netsim ratio sweep (ISSUE 10,
+//! emitted to BENCH_sparsify.json) — and the end-to-end PJRT step
+//! overhead breakdown.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 //!
@@ -35,10 +37,12 @@ use bertdist::data::corpus::SyntheticCorpus;
 use bertdist::data::masking::{build_batch, Batch, MaskingConfig};
 use bertdist::data::prefetch::{BatchCursor, Prefetcher};
 use bertdist::data::{build_shards, PairExample, ShardedDataset, Vocab};
+use bertdist::grad::sparsify::{top_k_into, Sparsify};
 use bertdist::grad::{build_buckets, Bucket, BucketRange, GradAccumulator};
 use bertdist::half::F16;
 use bertdist::jsonlite::Json;
 use bertdist::model::BertConfig;
+use bertdist::netsim;
 use bertdist::optimizer::{lamb_step, OptHyper, OptState};
 use bertdist::runtime::Engine;
 use bertdist::trainer::{allreduce_buckets, init_params};
@@ -372,7 +376,8 @@ fn main() -> anyhow::Result<()> {
         let mut t = InProcTransport::new(2);
         let mut p = CollectivePool::with_transport(
             topo_net, n_net, ranges_net.clone(), WireFormat::F32,
-            CommMode::Flat, IntraNodeMode::Auto, 1 << 16, &mut t)?;
+            CommMode::Flat, IntraNodeMode::Auto, 1 << 16, Sparsify::None,
+            &mut t)?;
         p.step(&[], 1.0, 1, 0, true, &fill_net)?; // warmup
         let (tmin, _, _) = bench_times(3, || {
             for s in 0..steps_net {
@@ -411,7 +416,7 @@ fn main() -> anyhow::Result<()> {
                         let mut p = CollectivePool::with_transport(
                             topo_net, n_net, ranges, WireFormat::F32,
                             CommMode::Flat, IntraNodeMode::Auto, 1 << 16,
-                            &mut t)
+                            Sparsify::None, &mut t)
                             .expect("socket pool");
                         p.step(&[], 1.0, 1, 0, true, &fill)
                             .expect("warmup");
@@ -506,7 +511,7 @@ fn main() -> anyhow::Result<()> {
                         let mut p = CollectivePool::with_transport(
                             topo_net, n_rejoin, ranges, WireFormat::F32,
                             CommMode::Flat, IntraNodeMode::Auto, 1 << 16,
-                            &mut t)
+                            Sparsify::None, &mut t)
                             .expect("rejoin pool");
                         p.step(&[], 1.0, 1, 0, true, &fill)
                             .expect("rejoin step");
@@ -541,6 +546,111 @@ fn main() -> anyhow::Result<()> {
               ms, authenticated {:.1} ms",
              t_join * 1e3, t_re * 1e3, t_auth * 1e3);
     let _ = std::fs::remove_dir_all(&rejoin_dir);
+
+    // ---- top-k sparsified network ring (ISSUE 10) ----
+    // The three costs of `train.sparsify = topk`: the O(n) magnitude
+    // select (top_k_into over recycled scratch), the executed sparse
+    // exchange vs the dense ring at 2M1G (a flat 2-rank world whose
+    // single ring link crosses machines, so the sparsifier is ACTIVE),
+    // and the netsim-priced ratio sweep whose interior optimum lands in
+    // BENCH_sparsify.json.
+    let n_sp = if quick { 64 * 1024 } else { 512 * 1024 };
+    let steps_sp = if quick { 10 } else { 25 };
+    let topo_sp = Topology::parse("2M1G").unwrap();
+    let ranges_sp = BucketRange::even_split(n_sp, 4);
+    let sel_grads: Vec<f32> = {
+        let mut rng = Pcg64::new(0x5A);
+        (0..n_sp).map(|_| rng.next_f32() - 0.5).collect()
+    };
+    let k_sel = (n_sp / 100).max(1);
+    let (mut sel_order, mut sel_idx, mut sel_val) =
+        (Vec::new(), Vec::new(), Vec::new());
+    let (sel_min, _, _) = bench_times(if quick { 5 } else { 20 }, || {
+        top_k_into(&sel_grads, k_sel, &mut sel_order, &mut sel_idx,
+                   &mut sel_val);
+        std::hint::black_box(sel_idx.len());
+    });
+    rows.push(
+        &format!("top-k select 1% of {} KiB grads", n_sp * 4 / 1024),
+        sel_min,
+        format!("{:.1} Melem/s", n_sp as f64 / sel_min / 1e6),
+    );
+    // (mode, min ms, modeled per-rank network bytes per step)
+    let mut sparsify_rows: Vec<(String, f64, f64)> = Vec::new();
+    for (label, sp) in [("dense", Sparsify::None),
+                        ("topk_1.0", Sparsify::TopK(1.0)),
+                        ("topk_0.01", Sparsify::TopK(0.01))] {
+        let fill = FillCompute { n: n_sp };
+        let mut t = InProcTransport::new(2);
+        let mut p = CollectivePool::with_transport(
+            topo_sp, n_sp, ranges_sp.clone(), WireFormat::F32,
+            CommMode::Flat, IntraNodeMode::Auto, 1 << 16, sp, &mut t)?;
+        p.step(&[], 1.0, 1, 0, true, &fill)?; // warmup
+        let (tmin, _, _) = bench_times(3, || {
+            for s in 0..steps_sp {
+                p.step(&[], 1.0, 1, s + 1, true, &fill).unwrap();
+            }
+        });
+        // per-rank network bytes each step, by the wire's own
+        // accounting: dense ring 2(w-1)/w of the payload; sparse
+        // allgather (w-1) messages of k 8B entries + 17B frame header
+        let w = topo_sp.world_size();
+        let wire_bytes: f64 = ranges_sp
+            .iter()
+            .map(|r| {
+                let len = r.end - r.start;
+                match sp {
+                    Sparsify::None => {
+                        2.0 * (w - 1) as f64 / w as f64 * (len * 4) as f64
+                    }
+                    Sparsify::TopK(_) => {
+                        (w - 1) as f64
+                            * (sp.entries(len) as f64
+                                * netsim::SPARSE_ENTRY_BYTES
+                                + netsim::SPARSE_FRAME_OVERHEAD_BYTES)
+                    }
+                }
+            })
+            .sum();
+        rows.push(
+            &format!("sparsify {label} pooled x2 2M1G ({steps_sp} steps)"),
+            tmin,
+            format!("{:.1} steps/s, {:.0} KiB/step net",
+                    steps_sp as f64 / tmin, wire_bytes / 1024.0),
+        );
+        sparsify_rows.push((label.to_string(), tmin * 1e3, wire_bytes));
+    }
+    // topk:1.0 pays the 8B/entry index tax over the dense wire — the
+    // accounting must show it, and the 1% ratio must undercut dense
+    assert!(sparsify_rows[1].2 > sparsify_rows[0].2,
+            "topk:1.0 must cost MORE wire than dense ({:?})",
+            sparsify_rows);
+    assert!(sparsify_rows[2].2 < sparsify_rows[0].2 / 10.0,
+            "topk:0.01 must cut the wire >10x ({:?})", sparsify_rows);
+    // netsim ratio sweep: wire time grows with the ratio, EF staleness
+    // shrinks with it — the effective cost bottoms out strictly inside
+    // the grid (the acceptance optimum BENCH_sparsify.json carries)
+    let sp_grid: Vec<f64> = (0..40)
+        .map(|i| 10f64.powf(-4.0 + i as f64 * 4.0 / 39.0))
+        .collect();
+    let sp_elems = 336_226_108usize / 26; // one of ~26 BERT-large buckets
+    let sp_machines = 4usize;
+    let (sp_pts, sp_best) = netsim::sparse_ratio_sweep(
+        sp_machines, sp_elems, netsim::Fabric::paper().network, 0.05,
+        &sp_grid);
+    assert!(sp_best.ratio > sp_grid[0] && sp_best.ratio < 1.0,
+            "sparse ratio optimum must be interior, got {sp_best:?}");
+    let sp_dense_s = netsim::ring_allreduce_time(
+        sp_machines, (sp_elems * 4) as f64,
+        netsim::Fabric::paper().network);
+    assert!(sp_pts.last().unwrap().wire_s > sp_dense_s,
+            "priced topk:1.0 must exceed the dense ring");
+    println!("sparsify model @ {sp_machines}M, {:.1}M elems: optimum \
+              topk:{:.4} ({} entries, {:.2}x inflation), dense ring \
+              {:.1} ms vs topk:1.0 {:.1} ms",
+             sp_elems as f64 / 1e6, sp_best.ratio, sp_best.entries,
+             sp_best.inflation, sp_dense_s * 1e3,
+             sp_pts.last().unwrap().wire_s * 1e3);
 
     // ---- single-threaded reference allreduce ----
     let (min, _, _) = bench_times(3, || {
@@ -1120,6 +1230,65 @@ fn main() -> anyhow::Result<()> {
         root.insert("rows".to_string(), Json::Arr(entries));
         std::fs::write(&rs_path, Json::Obj(root).to_string())?;
         println!("wrote {rs_path}");
+
+        // sparsified-ring section in its own file: executed dense vs
+        // sparse exchange, select cost, and the netsim ratio sweep with
+        // its interior optimum (ISSUE 10 acceptance artifact)
+        let sp_path = std::env::var("BENCH_SPARSIFY_JSON_OUT")
+            .unwrap_or_else(|_| "BENCH_sparsify.json".to_string());
+        let entries: Vec<Json> = sparsify_rows
+            .iter()
+            .map(|(name, ms, wire_bytes)| {
+                let mut m = BTreeMap::new();
+                m.insert("sparsify".to_string(), Json::Str(name.clone()));
+                m.insert("min_ms".to_string(), Json::Num(*ms));
+                m.insert("net_bytes_per_step".to_string(),
+                         Json::Num(*wire_bytes));
+                Json::Obj(m)
+            })
+            .collect();
+        let sweep: Vec<Json> = sp_pts
+            .iter()
+            .map(|p| {
+                let mut m = BTreeMap::new();
+                m.insert("ratio".to_string(), Json::Num(p.ratio));
+                m.insert("entries".to_string(),
+                         Json::Num(p.entries as f64));
+                m.insert("wire_ms".to_string(), Json::Num(p.wire_s * 1e3));
+                m.insert("inflation".to_string(), Json::Num(p.inflation));
+                m.insert("effective_ms".to_string(),
+                         Json::Num(p.effective_s * 1e3));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("sparsify".to_string()));
+        root.insert("topology".to_string(), Json::Str("2M1G".to_string()));
+        root.insert("payload_elems".to_string(), Json::Num(n_sp as f64));
+        root.insert("select_melem_per_s".to_string(),
+                    Json::Num(n_sp as f64 / sel_min / 1e6));
+        root.insert("entry_bytes".to_string(),
+                    Json::Num(netsim::SPARSE_ENTRY_BYTES));
+        root.insert("frame_overhead_bytes".to_string(),
+                    Json::Num(netsim::SPARSE_FRAME_OVERHEAD_BYTES));
+        // net bytes saved per step at topk:0.01 vs dense, after the
+        // 8 B/entry index overhead the sparse wire pays
+        root.insert("net_bytes_saved_topk_0.01".to_string(),
+                    Json::Num(sparsify_rows[0].2 - sparsify_rows[2].2));
+        root.insert("compression_topk_0.01".to_string(),
+                    Json::Num(sparsify_rows[0].2
+                              / sparsify_rows[2].2.max(1.0)));
+        root.insert("rows".to_string(), Json::Arr(entries));
+        root.insert("model_machines".to_string(),
+                    Json::Num(sp_machines as f64));
+        root.insert("model_elems".to_string(), Json::Num(sp_elems as f64));
+        root.insert("model_dense_ring_ms".to_string(),
+                    Json::Num(sp_dense_s * 1e3));
+        root.insert("model_optimal_ratio".to_string(),
+                    Json::Num(sp_best.ratio));
+        root.insert("model_sweep".to_string(), Json::Arr(sweep));
+        std::fs::write(&sp_path, Json::Obj(root).to_string())?;
+        println!("wrote {sp_path}");
     }
 
     println!("perf_hotpath OK");

@@ -15,6 +15,7 @@ use bertdist::collectives::pool::{CollectivePool, CommMode, IntraNodeMode,
 use bertdist::data::masking::{build_batch, MaskingConfig};
 use bertdist::topology::Topology;
 use bertdist::data::{Batch, PairExample};
+use bertdist::grad::sparsify::Sparsify;
 use bertdist::grad::BucketRange;
 use bertdist::runtime::{Engine, TrainStep};
 use bertdist::simulator::{Variant, DEVICES};
@@ -168,15 +169,24 @@ fn main() -> anyhow::Result<()> {
         topo, n, ranges22.clone(), WireFormat::F32, CommMode::Hierarchical,
         IntraNodeMode::Ring, (n / 16).max(1));
     let mut rs_pool = CollectivePool::with_intra(
-        topo, n, ranges22, WireFormat::F32, CommMode::Hierarchical,
+        topo, n, ranges22.clone(), WireFormat::F32, CommMode::Hierarchical,
         IntraNodeMode::ReduceScatter, n);
+    // topk:1.0 sparsifies the leader ring without dropping anything:
+    // the sums must agree with the dense schedules (to rounding — the
+    // allgather-of-messages reconstruction associates differently)
+    let mut sp_pool = CollectivePool::with_sparsify(
+        topo, n, ranges22, WireFormat::F32, CommMode::Hierarchical,
+        IntraNodeMode::Serial, n, Sparsify::TopK(1.0));
     assert!(!flat_pool.is_hierarchical() && hier_pool.is_hierarchical());
     assert!(!hier_pool.is_intra_ring() && ring_pool.is_intra_ring());
     assert!(rs_pool.is_intra_rs() && !rs_pool.is_intra_ring());
+    assert!(sp_pool.sparsify_active(),
+            "2M2G crosses machines: topk must be live on the leader ring");
     flat_pool.step(&params, 1.0, 1, 0, true, &compute)?; // warmup
     hier_pool.step(&params, 1.0, 1, 0, true, &compute)?;
     ring_pool.step(&params, 1.0, 1, 0, true, &compute)?;
     rs_pool.step(&params, 1.0, 1, 0, true, &compute)?;
+    sp_pool.step(&params, 1.0, 1, 0, true, &compute)?;
     let mut rows = Vec::new();
     let mut idx = 0usize;
     let (flat_min, _, _) = bench_times(5, || {
@@ -197,6 +207,10 @@ fn main() -> anyhow::Result<()> {
         idx += 1;
         rs_pool.step(&params, 1.0, 1, idx, true, &compute).unwrap();
     });
+    let (sp_min, _, _) = bench_times(5, || {
+        idx += 1;
+        sp_pool.step(&params, 1.0, 1, idx, true, &compute).unwrap();
+    });
     let hout = last_hier.unwrap();
     rows.push(vec!["flat ring x4".to_string(),
                    format!("{:.2} ms", flat_min * 1e3),
@@ -210,27 +224,35 @@ fn main() -> anyhow::Result<()> {
     rows.push(vec!["hierarchical (rs) x4".to_string(),
                    format!("{:.2} ms", rs_min * 1e3),
                    format!("{:.0} tok/s", tokens * 4.0 / rs_min)]);
+    rows.push(vec!["hierarchical (serial, topk:1.0) x4".to_string(),
+                   format!("{:.2} ms", sp_min * 1e3),
+                   format!("{:.0} tok/s", tokens * 4.0 / sp_min)]);
     println!("{}", render_table(&["comm mode", "min step", "throughput"],
                                 &rows));
     println!("hierarchical split: pcie {:.3} ms / net {:.3} ms per step",
              hout.comm_pcie_s * 1e3, hout.comm_net_s * 1e3);
     assert!(hout.comm_net_s <= hout.comm_s + 1e-12);
     {
-        // all four schedules compute the same sums (to rounding)
+        // all five schedules compute the same sums (to rounding) —
+        // topk:1.0 drops nothing, so its EF residual stays zero and the
+        // sparse reconstruction is just another association order
         let a = flat_pool.leader_grads();
         let b = hier_pool.leader_grads();
         let c = ring_pool.leader_grads();
         let d = rs_pool.leader_grads();
+        let e = sp_pool.leader_grads();
         let max_rel = a.iter().zip(b.iter())
             .chain(a.iter().zip(c.iter()))
             .chain(a.iter().zip(d.iter()))
+            .chain(a.iter().zip(e.iter()))
             .map(|(x, y)| {
                 let d = (x - y).abs();
                 d / x.abs().max(y.abs()).max(1e-6)
             })
             .fold(0.0f32, f32::max);
         assert!(max_rel < 1e-3,
-                "flat/hierarchical/pipelined/rs sums diverged: {max_rel}");
+                "flat/hierarchical/pipelined/rs/topk sums diverged: \
+                 {max_rel}");
     }
 
     let f32_speedup = tput["fused_f32"] / tput["unfused_f32"];

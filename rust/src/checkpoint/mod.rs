@@ -29,12 +29,27 @@
 //! ```text
 //! BCKP | version u32 = 2 | step u64 | data_step u64 |
 //! scaler  (5 f64 + 6 u64 = 88 B) |
-//! fingerprint (10 u32 + 4 u64 + 2 f64 + 4 u64 = 120 B, first u32 is a
-//! present flag) |
-//! n u64 | params f32*n | m f32*n | v f32*n | crc32 u32
+//! fingerprint (10 u32 + 4 u64 + 2 f64 + 4 u64 + sparsify (u32 + f64)
+//! = 132 B, first u32 is a present flag) |
+//! n u64 | params f32*n | m f32*n | v f32*n |
+//! ef_ranks u32 | per rank: len u32 + residual f32*len | crc32 u32
 //! ```
 //!
-//! **v2.1** (this revision) grew the fingerprint block in place: the
+//! **v2.2** (this revision) adds the sparsification state, following
+//! the v2.1 in-place-growth precedent: the fingerprint block gains
+//! `train.sparsify` (a u32 kind + f64 ratio — the knob changes the
+//! gradient values, so resume gates on it STRICTLY, even under
+//! `--resume-reshape`), and a variable-length error-feedback section
+//! follows the `v` moments: one residual vector per local rank
+//! ([`Checkpoint::ef_residuals`]), empty (4 bytes) for dense runs.  The
+//! residuals must round-trip bitwise — with `topk(ratio < 1)` the
+//! dropped gradient mass lives there, and an exact resume replays it
+//! into the next step.  The fixed header is now 252 bytes (`n` moved
+//! from 232 to 244).  As with v2.1, no pre-v2.2 files exist outside
+//! this repo's own runs, so the version stays 2 — an old file surfaces
+//! as a clean `SizeMismatch`.
+//!
+//! **v2.1** grew the fingerprint block in place: the
 //! formerly-reserved 10th u32 now carries the intra-node exchange mode
 //! (`train.intra_node`), and two u64 fields follow `max_predictions` —
 //! `chunk_elems` (the pipelined-exchange chunk size; like the intra
@@ -45,10 +60,7 @@
 //! over a DIFFERENT dataset now fails loudly — the v2.0 gate covered
 //! config, not data.  A zero manifest means "unknown" (bare snapshots,
 //! tests) and is never produced by a real corpus; the gate only fires
-//! when both sides know their corpus.  The fixed header is now 240
-//! bytes (`n` moved from offset 216 to 232).  No v2.0 files exist
-//! outside this repo's own test runs, so the version number stays 2 —
-//! a truncated pre-v2.1 file surfaces as a clean `SizeMismatch`.
+//! when both sides know their corpus.
 //!
 //! v1 files (`version = 1`: `step, scale, n, params, m, v`) still load;
 //! they fall back to `data_step = step` and a fresh scaler at the saved
@@ -109,6 +121,7 @@ use std::path::Path;
 
 use crate::collectives::pool::{CommMode, IntraNodeMode};
 use crate::config::RunConfig;
+use crate::grad::sparsify::Sparsify;
 use crate::precision::ScalerState;
 use crate::util::crc32::Crc32;
 
@@ -119,31 +132,53 @@ const VERSION: u32 = 2;
 const V1_MIN_LEN: usize = 4 + 4 + 8 + 8 + 8 + 4;
 /// v2 fixed-header bytes (everything before the params array) — see
 /// [`v2_sections`] for the breakdown.
-const V2_HEADER: usize = 240;
-/// Smallest possible v2 file (`n = 0`).
-const V2_MIN_LEN: usize = V2_HEADER + 4;
+const V2_HEADER: usize = 252;
+/// Smallest possible v2 file (`n = 0`, no error-feedback residuals):
+/// header + the empty EF section's rank count + crc.
+const V2_MIN_LEN: usize = V2_HEADER + 4 + 4;
 
-/// Total v2 file size for `n` parameters.
+/// Total v2 file size for `n` parameters and NO error-feedback
+/// residuals (dense runs — the common case).
 pub fn v2_file_len(n: usize) -> usize {
-    V2_HEADER + 12 * n + 4
+    v2_file_len_with_ef(n, &[])
+}
+
+/// Total v2 file size for `n` parameters plus one error-feedback
+/// residual section per entry of `ef_lens` (element counts).
+pub fn v2_file_len_with_ef(n: usize, ef_lens: &[usize]) -> usize {
+    V2_HEADER + 12 * n + 4 + ef_lens.iter().map(|l| 4 + 4 * l).sum::<usize>()
+        + 4
 }
 
 /// Named byte sections of the v2 layout, in file order — the corruption
 /// test matrix truncates and bit-flips at exactly these boundaries.
+/// Covers a file with no error-feedback residuals; see
+/// [`v2_sections_with_ef`] (or [`Checkpoint::sections`]) for the
+/// sparsified shape.
 pub fn v2_sections(n: usize) -> Vec<(&'static str, Range<usize>)> {
+    v2_sections_with_ef(n, &[])
+}
+
+/// [`v2_sections`] for a file carrying error-feedback residuals of the
+/// given element counts (one per local rank, in rank order).
+pub fn v2_sections_with_ef(n: usize, ef_lens: &[usize])
+    -> Vec<(&'static str, Range<usize>)> {
     let p = V2_HEADER;
+    let ef_end = p + 12 * n + 4
+        + ef_lens.iter().map(|l| 4 + 4 * l).sum::<usize>();
     vec![
         ("magic", 0..4),
         ("version", 4..8),
         ("step", 8..16),
         ("data_step", 16..24),
         ("scaler", 24..112),
-        ("fingerprint", 112..232),
-        ("n", 232..240),
+        ("fingerprint", 112..244),
+        ("n", 244..252),
         ("params", p..p + 4 * n),
         ("m", p + 4 * n..p + 8 * n),
         ("v", p + 8 * n..p + 12 * n),
-        ("crc", p + 12 * n..p + 12 * n + 4),
+        ("ef", p + 12 * n..ef_end),
+        ("crc", ef_end..ef_end + 4),
     ]
 }
 
@@ -195,6 +230,11 @@ pub struct Fingerprint {
     /// gate only fires when BOTH sides know their corpus (v2.1 field;
     /// the v2.0 gate covered config, not data).
     pub data_manifest: u64,
+    /// Network-ring sparsification knob (`train.sparsify`, v2.2 field).
+    /// Strict under BOTH resume gates — a different top-k ratio changes
+    /// every exchanged gradient and the meaning of the error-feedback
+    /// residuals, on any topology.
+    pub sparsify: Sparsify,
 }
 
 fn comm_mode_code(m: CommMode) -> u32 {
@@ -294,6 +334,7 @@ impl Fingerprint {
             max_predictions: cfg.data.max_predictions as u64,
             chunk_elems: cfg.train.chunk_elems as u64,
             data_manifest: 0,
+            sparsify: cfg.train.sparsify,
         }
     }
 
@@ -386,6 +427,10 @@ impl Fingerprint {
             out.push(format!("chunk_elems: checkpoint {}, run {}",
                              self.chunk_elems, run.chunk_elems));
         }
+        if self.sparsify != run.sparsify {
+            out.push(format!("sparsify: checkpoint {}, run {}",
+                             self.sparsify, run.sparsify));
+        }
         // Corpus identity gates only when BOTH sides know theirs — a
         // zero manifest (bare snapshot, data-less test) never blocks.
         if self.data_manifest != 0
@@ -442,6 +487,11 @@ pub struct Checkpoint {
     pub params: Vec<f32>,
     pub m: Vec<f32>,
     pub v: Vec<f32>,
+    /// Error-feedback residuals of the top-k sparsifier, one full-length
+    /// vector per local rank (v2.2 section).  Empty for dense runs and
+    /// for files written before v2.2 — restoring an empty set zeroes the
+    /// live accumulators.
+    pub ef_residuals: Vec<Vec<f32>>,
 }
 
 #[derive(thiserror::Error, Debug)]
@@ -485,6 +535,7 @@ impl Checkpoint {
             params: vec![0.0; n],
             m: vec![0.0; n],
             v: vec![0.0; n],
+            ef_residuals: Vec::new(),
         }
     }
 
@@ -595,11 +646,33 @@ impl Checkpoint {
             w(&mut f, &mut crc, &p.max_predictions.to_le_bytes())?;
             w(&mut f, &mut crc, &p.chunk_elems.to_le_bytes())?;
             w(&mut f, &mut crc, &p.data_manifest.to_le_bytes())?;
+            // sparsify fingerprint block (v2.2): kind u32 + ratio f64.
+            // The ratio is stored as the config's full f64 — an f32
+            // round-trip would make the strict gate reject its own file.
+            let (sp_kind, sp_ratio) = match p.sparsify {
+                Sparsify::None => (0u32, 0.0f64),
+                Sparsify::TopK(r) => (1u32, r),
+            };
+            w(&mut f, &mut crc, &sp_kind.to_le_bytes())?;
+            w(&mut f, &mut crc, &sp_ratio.to_le_bytes())?;
             w(&mut f, &mut crc, &(self.params.len() as u64).to_le_bytes())?;
             for arr in [&self.params, &self.m, &self.v] {
                 let bytes = unsafe {
                     std::slice::from_raw_parts(arr.as_ptr() as *const u8,
                                                arr.len() * 4)
+                };
+                w(&mut f, &mut crc, bytes)?;
+            }
+            // error-feedback section (v2.2, variable length):
+            // `ef_ranks u32 | per rank: len u32 + residual f32*len`.
+            // Dense runs write the 4-byte zero count.
+            w(&mut f, &mut crc,
+              &(self.ef_residuals.len() as u32).to_le_bytes())?;
+            for res in &self.ef_residuals {
+                w(&mut f, &mut crc, &(res.len() as u32).to_le_bytes())?;
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(res.as_ptr() as *const u8,
+                                               res.len() * 4)
                 };
                 w(&mut f, &mut crc, bytes)?;
             }
@@ -673,6 +746,7 @@ impl Checkpoint {
             params: read_arr(bytes, 32, n),
             m: read_arr(bytes, 32 + n * 4, n),
             v: read_arr(bytes, 32 + 2 * n * 4, n),
+            ef_residuals: Vec::new(),
         })
     }
 
@@ -680,12 +754,16 @@ impl Checkpoint {
         if bytes.len() < V2_MIN_LEN {
             return Err(CkptError::SizeMismatch);
         }
-        let n = get_u64(bytes, 232);
-        let expect = n
+        let n = get_u64(bytes, 244);
+        // The EF section is variable-length, so the array block gives a
+        // LOWER bound; the section parse below must then land exactly on
+        // the CRC.  Files from before v2.2 (240-byte header) fail here
+        // cleanly: their `n` offset reads garbage that misses the bound.
+        let base = n
             .checked_mul(12)
             .and_then(|b| b.checked_add(V2_MIN_LEN as u64))
             .ok_or(CkptError::SizeMismatch)?;
-        if bytes.len() as u64 != expect {
+        if (bytes.len() as u64) < base {
             return Err(CkptError::SizeMismatch);
         }
         let n = n as usize;
@@ -701,6 +779,10 @@ impl Checkpoint {
             skipped_steps: get_u64(bytes, 88),
             growths: get_u64(bytes, 96),
             backoffs: get_u64(bytes, 104),
+        };
+        let sparsify = match get_u32(bytes, 232) {
+            1 => Sparsify::TopK(get_f64(bytes, 236)),
+            _ => Sparsify::None,
         };
         let fingerprint = if get_u32(bytes, 112) != 0 {
             Some(Fingerprint {
@@ -723,11 +805,40 @@ impl Checkpoint {
                 max_predictions: get_u64(bytes, 208),
                 chunk_elems: get_u64(bytes, 216),
                 data_manifest: get_u64(bytes, 224),
+                sparsify,
             })
         } else {
             None
         };
         let p = V2_HEADER;
+        // error-feedback section: `ef_ranks u32 | per rank: len u32 +
+        // f32*len`, ending exactly at the CRC.  Every length is
+        // overflow-checked; a hostile count cannot index out of bounds
+        // or pre-allocate unbounded memory (plain push, no reserve).
+        let end = bytes.len() - 4;
+        let mut at = p + 12 * n;
+        if at + 4 > end {
+            return Err(CkptError::SizeMismatch);
+        }
+        let ef_ranks = get_u32(bytes, at);
+        at += 4;
+        let mut ef_residuals: Vec<Vec<f32>> = Vec::new();
+        for _ in 0..ef_ranks {
+            if at + 4 > end {
+                return Err(CkptError::SizeMismatch);
+            }
+            let len = get_u32(bytes, at) as usize;
+            at += 4;
+            let blen = len.checked_mul(4).ok_or(CkptError::SizeMismatch)?;
+            if at.checked_add(blen).map_or(true, |e| e > end) {
+                return Err(CkptError::SizeMismatch);
+            }
+            ef_residuals.push(read_arr(bytes, at, len));
+            at += blen;
+        }
+        if at != end {
+            return Err(CkptError::SizeMismatch);
+        }
         Ok(Checkpoint {
             step: get_u64(bytes, 8),
             data_step: get_u64(bytes, 16),
@@ -737,6 +848,7 @@ impl Checkpoint {
             params: read_arr(bytes, p, n),
             m: read_arr(bytes, p + n * 4, n),
             v: read_arr(bytes, p + 2 * n * 4, n),
+            ef_residuals,
         })
     }
 }
@@ -775,6 +887,7 @@ mod tests {
             chunk_elems: 1 << 16,
             data_manifest: 0xFEED_0001,
             variant: 1,
+            sparsify: Sparsify::TopK(0.25),
         }
     }
 
@@ -1011,5 +1124,94 @@ mod tests {
             pos = r.end;
         }
         assert_eq!(pos, v2_file_len(n));
+        // ...and with a non-trivial EF section
+        let lens = [13usize, 0, 7];
+        let secs = v2_sections_with_ef(n, &lens);
+        let mut pos = 0;
+        for (name, r) in &secs {
+            assert_eq!(r.start, pos, "gap before section {name}");
+            pos = r.end;
+        }
+        assert_eq!(pos, v2_file_len_with_ef(n, &lens));
+    }
+
+    #[test]
+    fn roundtrip_ef_residuals_bitwise() {
+        let mut c = full(20);
+        c.ef_residuals = vec![
+            (0..20).map(|i| (i as f32) * 0.125 - 1.0).collect(),
+            (0..20).map(|i| -(i as f32) * 0.0625).collect(),
+        ];
+        let path = std::env::temp_dir().join("bertdist_ckpt_ef_rt.bin");
+        c.save(&path).unwrap();
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            v2_file_len_with_ef(20, &[20, 20]) as u64
+        );
+        let l = Checkpoint::load(&path).unwrap();
+        assert_eq!(l, c);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncated_ef_section_is_a_clean_size_mismatch() {
+        // A file whose EF lengths claim more data than exists must fail
+        // as SizeMismatch, never panic.  Rebuild the CRC so the length
+        // check (not the CRC) is what fires.
+        let mut c = full(8);
+        c.ef_residuals = vec![vec![0.5f32; 8]];
+        let path = std::env::temp_dir().join("bertdist_ckpt_ef_trunc.bin");
+        c.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let ef_start = V2_HEADER + 12 * 8;
+        for cut in [ef_start + 2, ef_start + 6, bytes.len() - 8] {
+            let mut t = bytes[..cut].to_vec();
+            let crc = crate::util::crc32(&t);
+            t.extend_from_slice(&crc.to_le_bytes());
+            std::fs::write(&path, &t).unwrap();
+            assert!(
+                matches!(Checkpoint::load(&path),
+                         Err(CkptError::SizeMismatch)),
+                "cut at {cut} not detected"
+            );
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn sparsify_gates_resume_strictly_even_under_reshape() {
+        let mut c = Checkpoint::new(4);
+        c.fingerprint = Some(fp(1));
+        // same ratio passes both gates
+        c.ensure_fingerprint(&fp(1)).unwrap();
+        // a different ratio — or dropping to dense — is loud, and stays
+        // loud under the relaxed reshape gate: the knob changes every
+        // exchanged gradient on any topology.
+        for sp in [Sparsify::TopK(0.5), Sparsify::None] {
+            let mut run = fp(1);
+            run.sparsify = sp;
+            let msg = c.ensure_fingerprint(&run).unwrap_err().to_string();
+            assert!(msg.contains("sparsify"), "{msg}");
+            let msg =
+                c.ensure_reshape_fingerprint(&run).unwrap_err().to_string();
+            assert!(msg.contains("sparsify"), "{msg}");
+        }
+        // the ratio survives the file round-trip at full f64 precision,
+        // so a checkpoint gates cleanly against its own config
+        let mut full_c = full(4);
+        full_c.fingerprint = Some(Fingerprint {
+            sparsify: Sparsify::TopK(0.1),
+            ..fp(1)
+        });
+        let path = std::env::temp_dir().join("bertdist_ckpt_sp_gate.bin");
+        full_c.save(&path).unwrap();
+        let l = Checkpoint::load(&path).unwrap();
+        assert_eq!(l.fingerprint.unwrap().sparsify, Sparsify::TopK(0.1));
+        l.ensure_fingerprint(&Fingerprint {
+            sparsify: Sparsify::TopK(0.1),
+            ..fp(9)
+        })
+        .unwrap();
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -34,8 +34,10 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use super::{v2_file_len, verify_checkpoint, Checkpoint, CkptError, Ledger,
-            LedgerEntry};
+#[cfg(test)]
+use super::v2_file_len;
+use super::{v2_file_len_with_ef, verify_checkpoint, Checkpoint, CkptError,
+            Ledger, LedgerEntry};
 
 const FILE_PREFIX: &str = "ckpt-";
 const FILE_SUFFIX: &str = ".bckp";
@@ -280,7 +282,10 @@ fn worker(dir: PathBuf, keep_last: usize, job_rx: Receiver<Checkpoint>,
     while let Ok(snap) = job_rx.recv() {
         let name = checkpoint_file_name(snap.data_step);
         let path = dir.join(&name);
-        let file_bytes = v2_file_len(snap.params.len()) as u64;
+        let ef_lens: Vec<usize> =
+            snap.ef_residuals.iter().map(|r| r.len()).collect();
+        let file_bytes =
+            v2_file_len_with_ef(snap.params.len(), &ef_lens) as u64;
         let t0 = Instant::now();
         snap.save(&path)?;
         stats.write_s += t0.elapsed().as_secs_f64();

@@ -108,6 +108,7 @@ use super::transport::{
     build_endpoints, quantize_f16, CommEndpoints, Frame, FrameRx, FrameTx,
     InProcTransport, PayloadPool, Schedule, Transport, TransportError,
 };
+use crate::grad::sparsify::{top_k_into, Sparsify};
 use crate::grad::BucketRange;
 use crate::half::F16;
 use crate::topology::Topology;
@@ -600,12 +601,18 @@ pub struct CollectivePool {
     intra_ring: bool,
     intra_rs: bool,
     chunk_elems: usize,
+    sparsify: Sparsify,
     job_txs: Vec<Sender<Job>>,
     result_rx: Receiver<RankResult>,
     /// Per-rank accumulated (and, post-step, reduced) flat gradients.
     /// Locked by rank `r`'s compute worker for the duration of a step;
     /// free for inspection between steps.
     accs: Arc<Vec<Mutex<Vec<f32>>>>,
+    /// Per-rank error-feedback residuals for `train.sparsify` (empty
+    /// vectors when sparsification is inactive, and for non-local
+    /// ranks).  Locked by rank `r`'s comm worker per network exchange;
+    /// free for snapshot/restore between steps.
+    ef: Arc<Vec<Mutex<Vec<f32>>>>,
     compute_handles: Vec<JoinHandle<()>>,
     comm_handles: Vec<JoinHandle<()>>,
     /// Shared `--inject-fail net` trigger; disarmed unless
@@ -683,9 +690,21 @@ impl CollectivePool {
                       ranges: Arc<[BucketRange]>, wire: WireFormat,
                       mode: CommMode, intra: IntraNodeMode,
                       chunk_elems: usize) -> CollectivePool {
+        Self::with_sparsify(topo, n_elems, ranges, wire, mode, intra,
+                            chunk_elems, Sparsify::None)
+    }
+
+    /// [`Self::with_intra`] with the network sparsification knob pinned
+    /// (`train.sparsify`), over an in-process transport.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_sparsify(topo: Topology, n_elems: usize,
+                         ranges: Arc<[BucketRange]>, wire: WireFormat,
+                         mode: CommMode, intra: IntraNodeMode,
+                         chunk_elems: usize, sparsify: Sparsify)
+                         -> CollectivePool {
         let mut transport = InProcTransport::new(topo.world_size());
         Self::with_transport(topo, n_elems, ranges, wire, mode, intra,
-                             chunk_elems, &mut transport)
+                             chunk_elems, sparsify, &mut transport)
             .expect("in-process wiring cannot fail")
     }
 
@@ -705,7 +724,7 @@ impl CollectivePool {
     pub fn with_transport(topo: Topology, n_elems: usize,
                           ranges: Arc<[BucketRange]>, wire: WireFormat,
                           mode: CommMode, intra: IntraNodeMode,
-                          chunk_elems: usize,
+                          chunk_elems: usize, sparsify: Sparsify,
                           transport: &mut dyn Transport)
                           -> Result<CollectivePool> {
         let world = topo.world_size();
@@ -737,6 +756,28 @@ impl CollectivePool {
                 })
                 .collect(),
         );
+        // Sparsification lives on network-crossing rings only, and its
+        // placement is a pure function of the TOPOLOGY (never of the
+        // transport): a single-machine world has no network ring, so the
+        // knob is inert there and both transports agree bitwise.
+        let sparse_ratio = match sparsify {
+            Sparsify::TopK(r) if topo.machines > 1 => Some(r),
+            _ => None,
+        };
+        // Error-feedback residuals: one full-length vector per local
+        // rank whenever sparsification is active (ranks whose role never
+        // touches a network ring simply keep theirs at zero).
+        let ef: Arc<Vec<Mutex<Vec<f32>>>> = Arc::new(
+            (0..world)
+                .map(|r| {
+                    if sparse_ratio.is_some() && local.contains(&r) {
+                        Mutex::new(vec![0.0f32; n_elems])
+                    } else {
+                        Mutex::new(Vec::new())
+                    }
+                })
+                .collect(),
+        );
 
         let endpoints =
             build_endpoints(&topo, schedule, chunk_elems, transport)
@@ -753,12 +794,18 @@ impl CollectivePool {
             let (bucket_tx, bucket_rx) = channel::<(usize, Vec<f32>)>();
             let (reduced_tx, reduced_rx) = channel::<ReducedResult>();
             let ranges_comm = ranges.clone();
+            let sparse = SparseCtx {
+                ratio: sparse_ratio,
+                rank: r,
+                ef: ef.clone(),
+                scratch: SparseScratch::default(),
+            };
             comm_handles.push(
                 std::thread::Builder::new()
                     .name(format!("pool-comm-{r}"))
                     .spawn(move || {
                         comm_worker(wire, &ranges_comm, bucket_rx,
-                                    reduced_tx, endpoints);
+                                    reduced_tx, endpoints, sparse);
                     })
                     .expect("spawn comm worker"),
             );
@@ -789,9 +836,11 @@ impl CollectivePool {
             intra_ring,
             intra_rs,
             chunk_elems,
+            sparsify,
             job_txs,
             result_rx,
             accs,
+            ef,
             compute_handles,
             comm_handles,
             net_fault,
@@ -866,6 +915,70 @@ impl CollectivePool {
     /// Pipeline granularity of the intra-node chain, in elements.
     pub fn chunk_elems(&self) -> usize {
         self.chunk_elems
+    }
+
+    /// The requested network sparsification knob (`train.sparsify`).
+    pub fn sparsify(&self) -> Sparsify {
+        self.sparsify
+    }
+
+    /// Whether sparsification actually runs on this pool's exchange —
+    /// `topk` resolved against a topology that HAS a network ring
+    /// (`machines > 1`).  Inert knobs keep residuals empty.
+    pub fn sparsify_active(&self) -> bool {
+        matches!(self.sparsify, Sparsify::TopK(_)) && self.topo.machines > 1
+    }
+
+    /// Clone every local rank's error-feedback residual, in local-rank
+    /// order — the checkpoint payload that makes a sparsified run
+    /// resumable bitwise.  Empty when sparsification is inactive.  Only
+    /// call between steps (comm workers hold the locks mid-exchange).
+    pub fn ef_snapshot(&self) -> Vec<Vec<f32>> {
+        if !self.sparsify_active() {
+            return Vec::new();
+        }
+        self.local
+            .clone()
+            .map(|r| {
+                self.ef[r].lock().expect("ef residual poisoned").clone()
+            })
+            .collect()
+    }
+
+    /// Restore error-feedback residuals from a checkpoint, one vector
+    /// per local rank in local-rank order.  An empty slice zeroes them
+    /// (the reshape path — per-rank residuals cannot be remapped across
+    /// world shapes).
+    pub fn restore_ef(&self, residuals: &[Vec<f32>]) -> Result<()> {
+        if residuals.is_empty() {
+            self.zero_ef();
+            return Ok(());
+        }
+        anyhow::ensure!(self.sparsify_active(),
+                        "checkpoint carries {} error-feedback residuals \
+                         but sparsification is inactive",
+                        residuals.len());
+        anyhow::ensure!(residuals.len() == self.local.len(),
+                        "checkpoint carries {} error-feedback residuals, \
+                         pool hosts {} local ranks",
+                        residuals.len(), self.local.len());
+        for (r, src) in self.local.clone().zip(residuals) {
+            anyhow::ensure!(src.len() == self.n_elems,
+                            "error-feedback residual for rank {r} has {} \
+                             elems, model has {}",
+                            src.len(), self.n_elems);
+            let mut dst = self.ef[r].lock().expect("ef residual poisoned");
+            dst.copy_from_slice(src);
+        }
+        Ok(())
+    }
+
+    /// Zero every local rank's error-feedback residual.
+    pub fn zero_ef(&self) {
+        for r in self.local.clone() {
+            let mut v = self.ef[r].lock().expect("ef residual poisoned");
+            v.fill(0.0);
+        }
     }
 
     /// Chunks each bucket's exchange splits into: all 1 on a flat or
@@ -1232,17 +1345,18 @@ fn run_rank_step(rank: usize, world: usize, ranges: &[BucketRange],
 /// and tolerating it would silently drop its gradients from the sum.
 fn comm_worker(wire: WireFormat, ranges: &[BucketRange],
                bucket_rx: Receiver<(usize, Vec<f32>)>,
-               reduced_tx: Sender<ReducedResult>, endpoints: CommEndpoints) {
+               reduced_tx: Sender<ReducedResult>, endpoints: CommEndpoints,
+               mut sparse: SparseCtx) {
     match endpoints {
         CommEndpoints::Flat { rank, ring_size, net, tx_next, rx_prev } => {
             flat_comm_loop(rank, ring_size, wire, net, ranges, bucket_rx,
-                           reduced_tx, tx_next, rx_prev);
+                           reduced_tx, tx_next, rx_prev, &mut sparse);
         }
         CommEndpoints::Leader { machine, machines, member_rxs, member_txs,
                                 tx_next, rx_prev } => {
             leader_comm_loop(machine, machines, wire, ranges, bucket_rx,
                              reduced_tx, member_rxs, member_txs, tx_next,
-                             rx_prev);
+                             rx_prev, &mut sparse);
         }
         CommEndpoints::Member { to_leader, from_leader } => {
             member_comm_loop(bucket_rx, reduced_tx, to_leader, from_leader);
@@ -1251,7 +1365,7 @@ fn comm_worker(wire: WireFormat, ranges: &[BucketRange],
                                      down_tx, tx_next, rx_prev } => {
             chain_leader_comm_loop(machine, machines, wire, chunk_elems,
                                    ranges, bucket_rx, reduced_tx, up_rx,
-                                   down_tx, tx_next, rx_prev);
+                                   down_tx, tx_next, rx_prev, &mut sparse);
         }
         CommEndpoints::ChainMember { chunk_elems, up_rx, up_tx, down_rx,
                                      down_tx } => {
@@ -1262,7 +1376,7 @@ fn comm_worker(wire: WireFormat, ranges: &[BucketRange],
                                 intra_rx, cross_tx, cross_rx } => {
             rs_comm_loop(machine, machines, gpus, local, wire, ranges,
                          bucket_rx, reduced_tx, intra_tx, intra_rx,
-                         cross_tx, cross_rx);
+                         cross_tx, cross_rx, &mut sparse);
         }
     }
 }
@@ -1274,7 +1388,8 @@ fn flat_comm_loop(rank: usize, ring_size: usize, wire: WireFormat,
                   bucket_rx: Receiver<(usize, Vec<f32>)>,
                   reduced_tx: Sender<ReducedResult>,
                   mut tx_next: Box<dyn FrameTx>,
-                  mut rx_prev: Box<dyn FrameRx>) {
+                  mut rx_prev: Box<dyn FrameRx>,
+                  sparse: &mut SparseCtx) {
     // Chunk plans are a pure function of (ring size, bucket length):
     // build them once and reuse forever.
     let plans: Vec<RingPlan> = ranges
@@ -1288,9 +1403,15 @@ fn flat_comm_loop(rank: usize, ring_size: usize, wire: WireFormat,
     while let Ok((idx, mut data)) = bucket_rx.recv() {
         let t0 = Instant::now();
         if ring_size > 1 {
-            if let Err(e) = ring_exchange(&mut data, &plans[idx], rank, wire,
-                                          tx_next.as_mut(), rx_prev.as_mut(),
-                                          &mut pool) {
+            // The flat ring is a network ring exactly when the topology
+            // spans machines (the same condition that activates
+            // sparsification in the pool constructor).
+            if let Err(e) = sparse.net_exchange(&mut data,
+                                                ranges[idx].start,
+                                                &plans[idx], rank, wire,
+                                                tx_next.as_mut(),
+                                                rx_prev.as_mut(),
+                                                &mut pool) {
                 let _ = reduced_tx.send(Err(format!(
                     "ring peer lost on bucket {idx}: {e}"
                 )));
@@ -1323,7 +1444,8 @@ fn leader_comm_loop(machine: usize, machines: usize, wire: WireFormat,
                     mut member_rxs: Vec<Box<dyn FrameRx>>,
                     mut member_txs: Vec<Box<dyn FrameTx>>,
                     mut tx_next: Box<dyn FrameTx>,
-                    mut rx_prev: Box<dyn FrameRx>) {
+                    mut rx_prev: Box<dyn FrameRx>,
+                    sparse: &mut SparseCtx) {
     // Leader-ring chunk plans at size `machines` — a pure function of
     // (machines, bucket length), built once and reused forever.
     let plans: Vec<RingPlan> = ranges
@@ -1391,9 +1513,10 @@ fn leader_comm_loop(machine: usize, machines: usize, wire: WireFormat,
         // ("network"): the §4.4 move that caps per-NIC traffic at
         // 2(M-1)/M of the payload.
         let tn = Instant::now();
-        if let Err(e) = ring_exchange(&mut data, &plans[idx], machine, wire,
-                                      tx_next.as_mut(), rx_prev.as_mut(),
-                                      &mut pool) {
+        if let Err(e) = sparse.net_exchange(&mut data, ranges[idx].start,
+                                            &plans[idx], machine, wire,
+                                            tx_next.as_mut(),
+                                            rx_prev.as_mut(), &mut pool) {
             let _ = reduced_tx.send(Err(format!(
                 "leader ring peer lost on bucket {idx}: {e}"
             )));
@@ -1449,7 +1572,8 @@ fn chain_leader_comm_loop(machine: usize, machines: usize,
                           mut up_rx: Box<dyn FrameRx>,
                           mut down_tx: Box<dyn FrameTx>,
                           mut tx_next: Box<dyn FrameTx>,
-                          mut rx_prev: Box<dyn FrameRx>) {
+                          mut rx_prev: Box<dyn FrameRx>,
+                          sparse: &mut SparseCtx) {
     // Per-bucket chunk tables (range + leader-ring plan per chunk): a
     // pure function of (machines, bucket length, chunk_elems), built
     // once and reused forever.
@@ -1522,9 +1646,10 @@ fn chain_leader_comm_loop(machine: usize, machines: usize,
             // Phase 2 — inter-node ring on this chunk only ("network"):
             // starts while the chain is still gathering later chunks.
             let tn = Instant::now();
-            if let Err(e) = ring_exchange(&mut data[span.clone()], plan,
-                                          machine, wire, tx_next.as_mut(),
-                                          rx_prev.as_mut(), &mut pool) {
+            if let Err(e) = sparse.net_exchange(
+                &mut data[span.clone()],
+                ranges[idx].start + span.start, plan, machine, wire,
+                tx_next.as_mut(), rx_prev.as_mut(), &mut pool) {
                 let _ = reduced_tx.send(Err(format!(
                     "leader ring peer lost on bucket {idx} chunk {c}: {e}"
                 )));
@@ -1843,7 +1968,8 @@ fn rs_comm_loop(machine: usize, machines: usize, gpus: usize, local: usize,
                 mut intra_tx: Box<dyn FrameTx>,
                 mut intra_rx: Box<dyn FrameRx>,
                 mut cross_tx: Box<dyn FrameTx>,
-                mut cross_rx: Box<dyn FrameRx>) {
+                mut cross_rx: Box<dyn FrameRx>,
+                sparse: &mut SparseCtx) {
     let plans: Vec<RsPlan> = ranges
         .iter()
         .map(|b| {
@@ -1870,9 +1996,10 @@ fn rs_comm_loop(machine: usize, machines: usize, gpus: usize, local: usize,
         // Phase 2 — cross-machine ring allreduce over the owned shard
         // only ("network").
         let tn = Instant::now();
-        if let Err(e) = ring_exchange(&mut data[p.own.clone()], &p.cross,
-                                      machine, wire, cross_tx.as_mut(),
-                                      cross_rx.as_mut(), &mut pool) {
+        if let Err(e) = sparse.net_exchange(
+            &mut data[p.own.clone()], ranges[idx].start + p.own.start,
+            &p.cross, machine, wire, cross_tx.as_mut(),
+            cross_rx.as_mut(), &mut pool) {
             let _ = reduced_tx.send(Err(format!(
                 "cross ring peer lost on bucket {idx}: {e}"
             )));
@@ -2046,6 +2173,202 @@ fn recv_apply(dst: &mut [f32], tag: u32, add: bool, rx: &mut dyn FrameRx,
         }
     }
     Ok(())
+}
+
+// --------------------------------------------------- sparse exchange --
+
+/// Reusable scratch for the sparse exchange: the top-k selection order
+/// and one parked message slot per ring peer.  Owned by each comm
+/// worker — primed on the first sparse bucket, then steady-state
+/// allocation-free (message index/value buffers recycle through the
+/// [`PayloadPool`]).
+#[derive(Default)]
+struct SparseScratch {
+    order: Vec<u32>,
+    msgs: Vec<Option<(Vec<u32>, Vec<f32>)>>,
+}
+
+/// Per-comm-worker sparsification context: the resolved top-k ratio
+/// (`None` = dense wire on every link) and this rank's error-feedback
+/// residual, indexed by global flat element offset.
+struct SparseCtx {
+    ratio: Option<f64>,
+    rank: usize,
+    ef: Arc<Vec<Mutex<Vec<f32>>>>,
+    scratch: SparseScratch,
+}
+
+impl SparseCtx {
+    /// Run the NETWORK ring exchange for `buf`, whose first element
+    /// lives at global flat offset `at`: the sparse top-k allgather
+    /// when sparsification is active, the dense ring allreduce
+    /// otherwise.  Callers only route network-crossing rings here —
+    /// PCIe-class intra-node links always stay dense.
+    #[allow(clippy::too_many_arguments)]
+    fn net_exchange(&mut self, buf: &mut [f32], at: usize, plan: &RingPlan,
+                    ring_rank: usize, wire: WireFormat,
+                    tx: &mut dyn FrameTx, rx: &mut dyn FrameRx,
+                    pool: &mut PayloadPool)
+                    -> std::result::Result<(), TransportError> {
+        match self.ratio {
+            None => ring_exchange(buf, plan, ring_rank, wire, tx, rx, pool),
+            Some(ratio) => {
+                let mut res = self.ef[self.rank]
+                    .lock()
+                    .expect("ef residual poisoned");
+                sparse_exchange(buf, &mut res[at..at + buf.len()], plan.n,
+                                ring_rank, ratio, wire, tx, rx, pool,
+                                &mut self.scratch)
+            }
+        }
+    }
+}
+
+/// Sparse top-k ring exchange (`train.sparsify = topk(ratio)`): the
+/// lossy-compression counterpart of [`ring_exchange`] for
+/// network-crossing rings.  Top-k does not commute with reduce-scatter
+/// (summing two sparse messages densifies them), so the schedule is an
+/// **allgather of sparse messages**: each of the `n` ring members folds
+/// its error-feedback residual into its segment, selects the top
+/// `k = max(1, ceil(ratio * len))` coordinates by magnitude, and
+/// circulates the (index, value) message `n-1` hops (tags
+/// `200..200+n-1`).  Every member then reconstructs the SAME sum —
+/// `Σ over origins 0..n of densify(msg)` in fixed origin order — so
+/// replicas stay bitwise identical on either transport.  The dropped
+/// mass stays in `res` and rides into the next step (error feedback).
+///
+/// With the f16 wire the selected values are rounded through [`F16`]
+/// before the send (they still ship as f32 — 8B per entry either way)
+/// and the quantization error joins the residual.
+///
+/// `ratio = 1.0` sends every coordinate: the reconstruction equals the
+/// rank-ordered dense sum and the residual stays zero, which is what
+/// lets the property wall compare it bitwise against the dense path on
+/// exactly-representable gradients.
+#[allow(clippy::too_many_arguments)]
+fn sparse_exchange(buf: &mut [f32], res: &mut [f32], n: usize, rank: usize,
+                   ratio: f64, wire: WireFormat, tx: &mut dyn FrameTx,
+                   rx: &mut dyn FrameRx, pool: &mut PayloadPool,
+                   scratch: &mut SparseScratch)
+                   -> std::result::Result<(), TransportError> {
+    let len = buf.len();
+    if n <= 1 || len == 0 {
+        return Ok(());
+    }
+    debug_assert_eq!(res.len(), len, "residual segment skew");
+    // 1. Error feedback: fold the mass dropped by earlier steps back in.
+    for (b, r) in buf.iter_mut().zip(res.iter()) {
+        *b += *r;
+    }
+    // 2. Top-k select into pool-recycled buffers (growth floor: at
+    //    least one entry, so every hop always carries a frame).
+    let k = ((ratio * len as f64).ceil() as usize).clamp(1, len);
+    let mut idx = pool.take_u32();
+    let mut val = pool.take_f32();
+    top_k_into(buf, k, &mut scratch.order, &mut idx, &mut val);
+    // 3. The f16 wire rounds the survivors exactly like the dense
+    //    all-gather rounds owned chunks (idempotent round-trip, so
+    //    replicas agree); the rounding error joins the residual below.
+    if wire == WireFormat::F16 {
+        for v in val.iter_mut() {
+            *v = F16::from_f32(*v).to_f32();
+        }
+    }
+    // 4. residual = corrected - sent: zero at the surviving indices on
+    //    the f32 wire, the quantization error there on the f16 wire,
+    //    the full corrected value everywhere else.
+    res.copy_from_slice(buf);
+    for (&i, &v) in idx.iter().zip(val.iter()) {
+        res[i as usize] -= v;
+    }
+    // 5. Allgather: hop `s` forwards the message that originated at
+    //    ring member `(rank - s) mod n` and receives the one from
+    //    `(rank - s - 1) mod n`; messages park in origin-indexed slots
+    //    until all `n` arrived.
+    if scratch.msgs.len() < n {
+        scratch.msgs.resize_with(n, || None);
+    }
+    scratch.msgs[rank] = Some((idx, val));
+    for s in 0..n - 1 {
+        let send_origin = (rank + n - s) % n;
+        let (sidx, sval) = scratch.msgs[send_origin]
+            .as_ref()
+            .expect("sparse allgather slot empty (schedule bug)");
+        // Sends consume their buffers (in-proc frames move), so the
+        // parked copy forwards through fresh pool buffers.
+        let mut fidx = pool.take_u32();
+        fidx.extend_from_slice(sidx);
+        let mut fval = pool.take_f32();
+        fval.extend_from_slice(sval);
+        let tag = 200 + s as u32;
+        tx.send(Frame::Sparse { tag, n: len as u32, indices: fidx,
+                                values: fval }, pool)?;
+        let recv_origin = (rank + n - s - 1) % n;
+        scratch.msgs[recv_origin] = Some(recv_sparse(tag, len, rx, pool)?);
+    }
+    // 6. Reconstruct the sum in fixed origin order 0..n — identical on
+    //    every rank and every transport.
+    buf.fill(0.0);
+    for slot in scratch.msgs.iter_mut() {
+        let (idx, val) = slot.take().expect("sparse allgather hole");
+        for (&i, &v) in idx.iter().zip(val.iter()) {
+            buf[i as usize] += v;
+        }
+        pool.put_u32(idx);
+        pool.put_f32(val);
+    }
+    Ok(())
+}
+
+/// Receive one sparse allgather hop, with the loud-fail checks both
+/// transports share: schedule tag, dense dimension, index/value
+/// parallelism, and index bounds — each a named protocol error, because
+/// a corrupt sparse frame applied silently would scatter garbage into
+/// the gradient sum (or out of the segment entirely).
+fn recv_sparse(tag: u32, len: usize, rx: &mut dyn FrameRx,
+               pool: &mut PayloadPool)
+               -> std::result::Result<(Vec<u32>, Vec<f32>), TransportError> {
+    let (t, n, indices, values) = match rx.recv(pool)? {
+        Frame::Sparse { tag: t, n, indices, values } => {
+            (t, n, indices, values)
+        }
+        other => {
+            pool.recycle(other);
+            return Err(TransportError::Protocol(
+                "unexpected frame kind on sparse ring link".into(),
+            ));
+        }
+    };
+    let err = if t != tag {
+        Some(format!("sparse schedule skew: got tag {t}, expected {tag}"))
+    } else if n as usize != len {
+        Some(format!(
+            "sparse payload dimension skew: message addresses {n} elems, \
+             segment holds {len} (tag {tag})"
+        ))
+    } else if indices.len() != values.len() {
+        Some(format!(
+            "sparse index/value length skew: {} indices vs {} values \
+             (tag {tag})",
+            indices.len(),
+            values.len()
+        ))
+    } else if let Some(&bad) =
+        indices.iter().find(|&&i| i as usize >= len)
+    {
+        Some(format!(
+            "sparse index out of bounds: index {bad} >= segment {len} \
+             (tag {tag})"
+        ))
+    } else {
+        None
+    };
+    if let Some(msg) = err {
+        pool.put_u32(indices);
+        pool.put_f32(values);
+        return Err(TransportError::Protocol(msg));
+    }
+    Ok((indices, values))
 }
 
 #[cfg(test)]

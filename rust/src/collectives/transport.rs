@@ -128,6 +128,12 @@ pub enum Frame {
     Bcast { idx: u32, net_s: f64, data: Vec<f32> },
     /// Chunked-chain hop (up = reduce-forward, down = copy-forward).
     Chunk { idx: u32, chunk: u32, net_s: f64, data: Vec<f32> },
+    /// Sparse top-k hop on a network ring (`train.sparsify`): the
+    /// surviving coordinates of one rank's segment, as parallel
+    /// index/value arrays.  `n` is the dense segment length the indices
+    /// address — receivers check every index against it before
+    /// scattering, so a corrupt frame cannot write out of bounds.
+    Sparse { tag: u32, n: u32, indices: Vec<u32>, values: Vec<f32> },
 }
 
 impl Frame {
@@ -139,6 +145,7 @@ impl Frame {
             Frame::Bucket { .. } => 3,
             Frame::Bcast { .. } => 4,
             Frame::Chunk { .. } => 5,
+            Frame::Sparse { .. } => 6,
         }
     }
 }
@@ -151,6 +158,7 @@ impl Frame {
 pub struct PayloadPool {
     f32s: Vec<Vec<f32>>,
     u16s: Vec<Vec<u16>>,
+    u32s: Vec<Vec<u32>>,
 }
 
 impl PayloadPool {
@@ -168,6 +176,13 @@ impl PayloadPool {
         v
     }
 
+    /// Pop a cleared u32 (sparse-index) buffer.
+    pub fn take_u32(&mut self) -> Vec<u32> {
+        let mut v = self.u32s.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
     /// Return an f32 buffer to the free list.
     pub fn put_f32(&mut self, mut v: Vec<f32>) {
         v.clear();
@@ -180,6 +195,12 @@ impl PayloadPool {
         self.u16s.push(v);
     }
 
+    /// Return a u32 buffer to the free list.
+    pub fn put_u32(&mut self, mut v: Vec<u32>) {
+        v.clear();
+        self.u32s.push(v);
+    }
+
     /// Strip a frame and recycle its payload buffer.
     pub fn recycle(&mut self, frame: Frame) {
         match frame {
@@ -188,6 +209,10 @@ impl PayloadPool {
             | Frame::Bcast { data, .. }
             | Frame::Chunk { data, .. } => self.put_f32(data),
             Frame::RingF16 { data, .. } => self.put_u16(data),
+            Frame::Sparse { indices, values, .. } => {
+                self.put_u32(indices);
+                self.put_f32(values);
+            }
         }
     }
 }
@@ -231,6 +256,17 @@ pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) {
             out.extend_from_slice(&chunk.to_le_bytes());
             out.extend_from_slice(&net_s.to_le_bytes());
             for x in data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Frame::Sparse { tag, n, indices, values } => {
+            out.extend_from_slice(&tag.to_le_bytes());
+            out.extend_from_slice(&n.to_le_bytes());
+            out.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+            for x in indices {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            for x in values {
                 out.extend_from_slice(&x.to_le_bytes());
             }
         }
@@ -324,6 +360,35 @@ pub fn decode_frame(body: &[u8], pool: &mut PayloadPool)
             net_s: read_f64(body, 9)?,
             data: payload_f32(body, 17, pool)?,
         }),
+        6 => {
+            let tag = read_u32(body, 1)?;
+            let n = read_u32(body, 5)?;
+            let count = read_u32(body, 9)? as usize;
+            // The count is the single source of truth for both array
+            // lengths, so the body length must match it EXACTLY: a
+            // short body is a truncated frame, a long one is a skewed
+            // count — either would silently corrupt the scatter.
+            let want = 13usize.saturating_add(count.saturating_mul(8));
+            if body.len() != want {
+                return Err(TransportError::Protocol(format!(
+                    "sparse payload truncated or skewed: {} entries need \
+                     {want} body bytes, have {}",
+                    count,
+                    body.len()
+                )));
+            }
+            let mut indices = pool.take_u32();
+            indices.reserve(count);
+            for c in body[13..13 + count * 4].chunks_exact(4) {
+                indices.push(u32::from_le_bytes(c.try_into().unwrap()));
+            }
+            let mut values = pool.take_f32();
+            values.reserve(count);
+            for c in body[13 + count * 4..].chunks_exact(4) {
+                values.push(f32::from_le_bytes(c.try_into().unwrap()));
+            }
+            Ok(Frame::Sparse { tag, n, indices, values })
+        }
         k => Err(TransportError::Protocol(format!("unknown frame kind {k}"))),
     }
 }
@@ -943,10 +1008,45 @@ mod tests {
             Frame::Bcast { idx: 2, net_s: 0.125, data: vec![1.0] },
             Frame::Chunk { idx: 3, chunk: 1, net_s: 0.25,
                            data: vec![1.0, -2.0] },
+            Frame::Sparse { tag: 204, n: 64, indices: vec![0, 7, 63],
+                            values: vec![1.5, -0.25, 8.0] },
         ];
         for f in &frames {
             assert_eq!(&round_trip(f), f);
         }
+    }
+
+    #[test]
+    fn codec_round_trips_empty_sparse() {
+        let f = Frame::Sparse { tag: 200, n: 0, indices: vec![],
+                                values: vec![] };
+        assert_eq!(round_trip(&f), f);
+    }
+
+    #[test]
+    fn decode_rejects_truncated_or_skewed_sparse() {
+        let mut pool = PayloadPool::default();
+        let f = Frame::Sparse { tag: 1, n: 8, indices: vec![2, 5],
+                                values: vec![0.5, -1.0] };
+        let mut bytes = Vec::new();
+        encode_frame(&f, &mut bytes);
+        // body with the last value byte cut off: truncated payload
+        let body = &bytes[4..];
+        let err = decode_frame(&body[..body.len() - 1], &mut pool)
+            .expect_err("truncated sparse body must fail");
+        assert!(format!("{err}").contains("sparse payload truncated"),
+                "got: {err}");
+        // count claims one more entry than the body carries
+        let mut skew = body.to_vec();
+        skew[9..13].copy_from_slice(&3u32.to_le_bytes());
+        let err = decode_frame(&skew, &mut pool)
+            .expect_err("skewed sparse count must fail");
+        assert!(format!("{err}").contains("sparse payload truncated"),
+                "got: {err}");
+        // a count so large it would overflow the length math
+        let mut huge = body.to_vec();
+        huge[9..13].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_frame(&huge, &mut pool).is_err());
     }
 
     #[test]

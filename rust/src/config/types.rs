@@ -3,6 +3,7 @@
 use super::toml::TomlDoc;
 use crate::collectives::pool::{CommMode, IntraNodeMode,
                                DEFAULT_CHUNK_ELEMS};
+use crate::grad::sparsify::Sparsify;
 use crate::topology::Topology;
 
 /// Training hyper-parameters (per-phase values live in `phases.rs`).
@@ -47,6 +48,14 @@ pub struct TrainConfig {
     /// `--chunk-elems`); values larger than a bucket degrade to one
     /// chunk per bucket (the serialized schedule's granularity).
     pub chunk_elems: usize,
+    /// Top-k gradient sparsification of the NETWORK-crossing rings (CLI
+    /// `--sparsify`, `none` | `topk:RATIO`): each cross-machine hop
+    /// ships only the `ceil(ratio * len)` largest-magnitude entries of
+    /// its segment as index/value pairs, and every rank folds the
+    /// dropped residual into its next step via a local error-feedback
+    /// accumulator.  PCIe links always stay dense; single-machine
+    /// topologies ignore the knob entirely.
+    pub sparsify: Sparsify,
     /// Gradient bucket size threshold in elements (DDP-style).
     pub bucket_elems: usize,
     /// Batch-prefetch ring depth per rank (paper §4.1: input prep must
@@ -115,6 +124,7 @@ impl Default for TrainConfig {
             comm_mode: CommMode::Auto,
             intra_node: IntraNodeMode::Auto,
             chunk_elems: DEFAULT_CHUNK_ELEMS,
+            sparsify: Sparsify::None,
             bucket_elems: 1 << 20,
             prefetch_depth: 2,
             steps: 100,
@@ -225,6 +235,10 @@ impl RunConfig {
             .map_err(|e| anyhow::anyhow!("train.intra_node: {e}"))?;
         c.train.chunk_elems =
             doc.int("train.chunk_elems", c.train.chunk_elems as i64) as usize;
+        let sparsify =
+            doc.str("train.sparsify", &c.train.sparsify.to_string());
+        c.train.sparsify = Sparsify::parse(&sparsify)
+            .map_err(|e| anyhow::anyhow!("train.sparsify: {e}"))?;
         c.train.bucket_elems =
             doc.int("train.bucket_elems", c.train.bucket_elems as i64) as usize;
         c.train.prefetch_depth =
@@ -378,6 +392,29 @@ mod tests {
         let mut c = RunConfig::default();
         c.train.chunk_elems = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn sparsify_knob_parses_and_validates() {
+        let doc =
+            TomlDoc::parse("[train]\nsparsify = \"topk:0.01\"\n").unwrap();
+        let c = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.train.sparsify, Sparsify::TopK(0.01));
+        c.validate().unwrap();
+        // default: dense everywhere
+        assert_eq!(RunConfig::default().train.sparsify, Sparsify::None);
+        // the exactness spelling is first-class
+        let one = TomlDoc::parse("[train]\nsparsify = \"topk:1.0\"\n")
+            .unwrap();
+        let c = RunConfig::from_toml(&one).unwrap();
+        assert_eq!(c.train.sparsify, Sparsify::TopK(1.0));
+        // bad spellings and out-of-range ratios fail loudly
+        for bad in ["dense", "topk:0", "topk:1.5", "topk:nan"] {
+            let doc = TomlDoc::parse(
+                &format!("[train]\nsparsify = \"{bad}\"\n")).unwrap();
+            let err = RunConfig::from_toml(&doc).map(|_| ()).unwrap_err();
+            assert!(err.to_string().contains("sparsify"), "{bad}: {err}");
+        }
     }
 
     #[test]

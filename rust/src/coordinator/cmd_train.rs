@@ -17,6 +17,7 @@ use crate::collectives::{socket, InProcTransport, RendezvousStamp,
 use crate::config::{RunConfig, TwoPhaseSchedule};
 use crate::data::pipeline::shard_manifest_hash;
 use crate::data::ShardedDataset;
+use crate::grad::sparsify::Sparsify;
 use crate::runtime::Engine;
 use crate::topology::Topology;
 use crate::trainer::{InjectFail, TrainReport, Trainer};
@@ -414,7 +415,7 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
         println!(
             "phase 1: preset={} variant={} topo={} world={} ranks={:?} \
              batch={}x{} accum={} overlap={} wire={} comm={} ({}) \
-             intra={} ({}) prefetch={}",
+             intra={} ({}) sparsify={} ({}) prefetch={}",
             cfg.train.preset, cfg.train.variant, cfg.cluster.topo, world,
             t.local_ranks(), batch1, seq1, cfg.train.accum_steps,
             cfg.train.overlap,
@@ -429,6 +430,8 @@ pub fn train_run_with(engine: &Engine, cfg: &RunConfig, data_dir: &Path,
             } else {
                 "serial".to_string()
             },
+            cfg.train.sparsify,
+            if t.sparsify_active() { "net rings" } else { "inert" },
             if cfg.train.prefetch_depth == 0 {
                 "sync".to_string()
             } else {
@@ -677,6 +680,15 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     if let Some(m) = args.get_opt("intra-node") {
         cfg.train.intra_node = IntraNodeMode::parse(&m)
             .map_err(|e| anyhow::anyhow!("--intra-node: {e}"))?;
+    }
+    // Top-k gradient sparsification of the NETWORK-crossing rings
+    // (paper §4.4): `--sparsify none|topk:RATIO` — PCIe links stay
+    // dense; dropped residual folds into the next step's gradient via
+    // per-rank error-feedback accumulators.  Single-machine topologies
+    // have no network link, so the knob is recorded but inert there.
+    if let Some(s) = args.get_opt("sparsify") {
+        cfg.train.sparsify = Sparsify::parse(&s)
+            .map_err(|e| anyhow::anyhow!("--sparsify: {e}"))?;
     }
     cfg.train.chunk_elems =
         args.get_parse("chunk-elems", cfg.train.chunk_elems)?;

@@ -41,6 +41,18 @@ COMMANDS:
                                    PCIe and the network)
                    [--chunk-elems N]  pipeline chunk size in elements
                                    (default 65536; > bucket = 1 chunk)
+                   [--sparsify none|topk:RATIO]  top-k gradient
+                                   sparsification on the NETWORK rings
+                                   only (leader/flat/rs-cross; PCIe
+                                   stays dense): each hop ships the
+                                   top ceil(RATIO*len) coordinates as
+                                   (index, value) frames, the dropped
+                                   mass rides a per-rank error-feedback
+                                   residual into the next step
+                                   (checkpointed, so resume stays
+                                   bitwise).  topk:1.0 is bitwise-equal
+                                   to the dense exchange; inert on
+                                   single-machine topologies
                    [--prefetch N]  per-rank batch-prefetch ring depth
                                    (default 2 = double buffer; 0 = build
                                    batches on the compute workers)

@@ -12,6 +12,70 @@
 
 use crate::util::Pcg64;
 
+/// What the collective pool ships over **network-crossing** ring links
+/// (`train.sparsify`): dense payloads, or the top-k magnitude subset
+/// with local error feedback.  PCIe-class intra-node links always stay
+/// dense — the paper places lossy compression on the slow fabric only.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Sparsify {
+    /// Dense f32/f16 payloads on every link (the pre-sparsify wire).
+    #[default]
+    None,
+    /// Ship the top `ratio` fraction of each network segment by
+    /// magnitude (at least one entry), folding the dropped residual
+    /// into the next step via per-rank error feedback.  `ratio = 1.0`
+    /// sends every coordinate — exact, and bitwise-equal to the dense
+    /// path whenever the gradient sums are exactly representable.
+    TopK(f64),
+}
+
+impl Sparsify {
+    /// Parse the `none | topk:RATIO` config/CLI spelling.
+    pub fn parse(s: &str) -> std::result::Result<Sparsify, String> {
+        let t = s.trim().to_ascii_lowercase();
+        if t == "none" {
+            return Ok(Sparsify::None);
+        }
+        if let Some(r) = t.strip_prefix("topk:") {
+            let ratio: f64 = r.parse().map_err(|_| {
+                format!("'{s}': topk ratio '{r}' is not a number")
+            })?;
+            if !(ratio > 0.0 && ratio <= 1.0) {
+                return Err(format!(
+                    "'{s}': topk ratio must be in (0, 1], got {ratio}"
+                ));
+            }
+            return Ok(Sparsify::TopK(ratio));
+        }
+        Err(format!("'{s}': expected none | topk:RATIO"))
+    }
+
+    /// Top-k entry count for a segment of `len` elements: `ceil(ratio *
+    /// len)`, floored at one entry so every rank always sends SOMETHING
+    /// (the growth floor netsim prices) — except for empty segments.
+    pub fn entries(self, len: usize) -> usize {
+        match self {
+            Sparsify::None => len,
+            Sparsify::TopK(ratio) => {
+                if len == 0 {
+                    0
+                } else {
+                    ((ratio * len as f64).ceil() as usize).clamp(1, len)
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Sparsify {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Sparsify::None => f.write_str("none"),
+            Sparsify::TopK(r) => write!(f, "topk:{r}"),
+        }
+    }
+}
+
 /// A sparsified gradient message: (index, value) pairs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SparseGrad {
@@ -62,6 +126,34 @@ pub fn top_k(grads: &[f32], k: usize) -> SparseGrad {
     indices.sort_unstable();
     let values = indices.iter().map(|&i| grads[i as usize]).collect();
     SparseGrad { n, indices, values }
+}
+
+/// In-place [`top_k`] for the comm hot path: selection order scratch
+/// and the output index/value buffers are caller-owned (recycled
+/// through the transport's `PayloadPool`), so the steady-state step
+/// performs no per-selection allocation.  `indices` comes out sorted
+/// ascending with `values` parallel to it — identical content to
+/// [`top_k`], asserted by a property test.
+pub fn top_k_into(grads: &[f32], k: usize, order: &mut Vec<u32>,
+                  indices: &mut Vec<u32>, values: &mut Vec<f32>) {
+    indices.clear();
+    values.clear();
+    let n = grads.len();
+    let k = k.min(n);
+    if k == 0 {
+        return;
+    }
+    order.clear();
+    order.extend(0..n as u32);
+    order.select_nth_unstable_by(k - 1, |&a, &b| {
+        grads[b as usize]
+            .abs()
+            .partial_cmp(&grads[a as usize].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    indices.extend_from_slice(&order[..k]);
+    indices.sort_unstable();
+    values.extend(indices.iter().map(|&i| grads[i as usize]));
 }
 
 /// Threshold-based sparsification (the tuning-sensitive alternative).
@@ -224,6 +316,53 @@ mod tests {
         assert!(cos_heavy > 0.98, "{cos_heavy}");
         assert!(cos_dense < 0.85, "{cos_dense}");
         assert!(cos_heavy > cos_dense + 0.1);
+    }
+
+    #[test]
+    fn sparsify_knob_parses_and_displays() {
+        assert_eq!(Sparsify::parse("none").unwrap(), Sparsify::None);
+        assert_eq!(Sparsify::parse(" NONE ").unwrap(), Sparsify::None);
+        assert_eq!(Sparsify::parse("topk:0.01").unwrap(),
+                   Sparsify::TopK(0.01));
+        assert_eq!(Sparsify::parse("topk:1.0").unwrap(),
+                   Sparsify::TopK(1.0));
+        for bad in ["topk:0", "topk:1.5", "topk:-0.1", "topk:x", "dense"] {
+            assert!(Sparsify::parse(bad).is_err(), "{bad} must not parse");
+        }
+        assert_eq!(Sparsify::TopK(0.25).to_string(), "topk:0.25");
+        assert_eq!(Sparsify::None.to_string(), "none");
+        let rt = Sparsify::parse(&Sparsify::TopK(0.01).to_string()).unwrap();
+        assert_eq!(rt, Sparsify::TopK(0.01));
+    }
+
+    #[test]
+    fn sparsify_entries_has_growth_floor() {
+        let s = Sparsify::TopK(0.01);
+        assert_eq!(s.entries(0), 0);
+        assert_eq!(s.entries(1), 1);
+        assert_eq!(s.entries(10), 1); // floor: ceil(0.1) = 1
+        assert_eq!(s.entries(1000), 10);
+        assert_eq!(Sparsify::TopK(1.0).entries(37), 37);
+        assert_eq!(Sparsify::None.entries(37), 37);
+    }
+
+    #[test]
+    fn prop_top_k_into_matches_top_k() {
+        testkit::check(
+            "topk-into", 0x59B, 48,
+            |r| {
+                let g = testkit::gen_f32_vec(r, 0, 300);
+                let k = r.range_usize(0, g.len() + 2);
+                (g, k)
+            },
+            |(g, k)| {
+                let want = top_k(g, *k);
+                let (mut order, mut idx, mut val) =
+                    (Vec::new(), Vec::new(), Vec::new());
+                top_k_into(g, *k, &mut order, &mut idx, &mut val);
+                idx == want.indices && val == want.values
+            },
+        );
     }
 
     #[test]

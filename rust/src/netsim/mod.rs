@@ -25,6 +25,7 @@
 //!   serialized pricing at one chunk (`chunk_bytes >= bytes`), so the
 //!   two models can never disagree on the unpipelined schedule.
 
+use crate::grad::sparsify::Sparsify;
 use crate::topology::{DeviceId, LinkKind, Topology};
 
 /// An analytic point-to-point link.
@@ -290,6 +291,106 @@ pub fn hierarchical_pipelined_phases(topo: &Topology, bytes: f64,
     }
 }
 
+/// Per-message wire overhead of one sparse frame, matching the
+/// `collectives::transport` v1 codec exactly: a 4-byte length prefix
+/// plus the 13-byte `kind | tag | n | count` body header.
+pub const SPARSE_FRAME_OVERHEAD_BYTES: f64 = 17.0;
+
+/// Bytes per transmitted sparse entry: u32 index + f32 value — the 2x
+/// index overhead that makes `topk:1.0` cost MORE wire than dense f32.
+pub const SPARSE_ENTRY_BYTES: f64 = 8.0;
+
+/// One ratio point of the sparse-ring model (the grist the
+/// `perf_hotpath` sparsify section sweeps into `BENCH_sparsify.json`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SparseRingPoint {
+    /// The `train.sparsify = topk:RATIO` knob value priced.
+    pub ratio: f64,
+    /// Entries each rank transmits per hop (the executed selector's
+    /// `ceil(ratio*elems)` with its k >= 1 growth floor).
+    pub entries: usize,
+    /// Pure wire seconds of the sparse allgather ring.
+    pub wire_s: f64,
+    /// EF staleness inflation: modeled steps-to-target multiplier.
+    pub inflation: f64,
+    /// `wire_s * inflation` — seconds of network time per unit of
+    /// training progress, the quantity with an interior optimum.
+    pub effective_s: f64,
+}
+
+/// Time for the sparse exchange the pool actually executes on a
+/// network ring under `train.sparsify = topk`: an
+/// **allgather-of-messages** — top-k does not commute with
+/// reduce-scatter chunking, so each of the `m-1` hops forwards one
+/// origin's whole `(index, value)` message and every rank rebuilds the
+/// sum locally in fixed origin order.  Per-link bytes are therefore
+/// `(m-1) * (k*8 + frame overhead)` — versus the dense ring's
+/// `2(m-1)/m * bytes` — which is why `topk:1.0` costs ~`m/2 * 2 = m`
+/// times the dense wire: every coordinate ships `m-1` times with an
+/// index bolted on, instead of `2(m-1)/m` times bare.
+pub fn sparse_allgather_time(m: usize, elems: usize, ratio: f64,
+                             link: LinkModel) -> f64 {
+    if m <= 1 {
+        return 0.0;
+    }
+    let k = Sparsify::TopK(ratio).entries(elems);
+    let msg = k as f64 * SPARSE_ENTRY_BYTES + SPARSE_FRAME_OVERHEAD_BYTES;
+    (m - 1) as f64 * link.transfer_time(msg)
+}
+
+/// Modeled convergence inflation of error-feedback top-k: at ratio `r`
+/// a `(1-r)` fraction of each step's gradient mass arrives late through
+/// the residual, so reaching a fixed target takes more steps.  The
+/// standard EF analyses bound the extra term by `O((1-r)/r)`, which is
+/// what this multiplier uses (`kappa` scales it; 1 at `r = 1`,
+/// diverging as `r -> 0` — no free lunch at the aggressive end):
+///
+/// ```text
+/// inflation(r) = 1 + kappa * (1 - r) / r
+/// ```
+pub fn ef_inflation(ratio: f64, kappa: f64) -> f64 {
+    let r = ratio.clamp(1e-9, 1.0);
+    1.0 + kappa * (1.0 - r) / r
+}
+
+/// Price one `train.sparsify = topk:RATIO` point on an `m`-machine
+/// network ring of `elems` f32 gradients: wire time of the executed
+/// sparse allgather, EF inflation, and their product.  The product has
+/// an INTERIOR optimum in `r` — wire time grows affinely in `r` while
+/// inflation decays like `1/r`, so the best ratio sits at
+/// `r* ~ sqrt(overhead * kappa / slope)`, moved by exactly the two
+/// costs the wire charges: per-hop latency+header overhead (pushing
+/// `r*` up) and the 8 B/entry payload slope (pushing it down).
+pub fn sparse_ring_cost(m: usize, elems: usize, ratio: f64,
+                        link: LinkModel, kappa: f64) -> SparseRingPoint {
+    let wire_s = sparse_allgather_time(m, elems, ratio, link);
+    let inflation = ef_inflation(ratio, kappa);
+    SparseRingPoint {
+        ratio,
+        entries: Sparsify::TopK(ratio).entries(elems),
+        wire_s,
+        inflation,
+        effective_s: wire_s * inflation,
+    }
+}
+
+/// Sweep [`sparse_ring_cost`] over a ratio grid and return every point
+/// plus the argmin of `effective_s` (ties to the smaller ratio).
+pub fn sparse_ratio_sweep(m: usize, elems: usize, link: LinkModel,
+                          kappa: f64, grid: &[f64])
+                          -> (Vec<SparseRingPoint>, SparseRingPoint) {
+    assert!(!grid.is_empty(), "sparse ratio sweep needs a grid");
+    let pts: Vec<SparseRingPoint> = grid
+        .iter()
+        .map(|&r| sparse_ring_cost(m, elems, r, link, kappa))
+        .collect();
+    let best = *pts
+        .iter()
+        .reduce(|a, b| if b.effective_s < a.effective_s { b } else { a })
+        .unwrap();
+    (pts, best)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -530,6 +631,88 @@ mod tests {
                     < ring_allreduce_time(n, bytes * 2.0, link)
             },
         );
+    }
+
+    #[test]
+    fn sparse_full_ratio_costs_more_wire_than_dense() {
+        // topk:1.0 ships every coordinate m-1 times WITH an 8B entry
+        // (vs 2(m-1)/m dense f32 passes) — the model must price that
+        // honestly wherever bytes dominate.  (Tiny latency-bound
+        // payloads are the one exception: the allgather's m-1 hops pay
+        // HALF the dense ring's 2(m-1) message latencies.)
+        let f = Fabric::paper();
+        for m in [2usize, 4, 32] {
+            for elems in [1usize << 18, 1 << 22] {
+                let bytes = (elems * 4) as f64;
+                let dense = ring_allreduce_time(m, bytes, f.network);
+                let sparse = sparse_allgather_time(m, elems, 1.0, f.network);
+                assert!(sparse > dense,
+                        "m={m} elems={elems}: sparse {sparse} <= {dense}");
+            }
+        }
+        // bandwidth-dominated regime: the blow-up approaches m x
+        let sparse = sparse_allgather_time(8, 1 << 24, 1.0, f.network);
+        let dense = ring_allreduce_time(8, (1u64 << 26) as f64, f.network);
+        assert!(sparse / dense > 6.0, "{}", sparse / dense);
+    }
+
+    #[test]
+    fn sparse_wire_time_monotone_in_ratio_with_growth_floor() {
+        let f = Fabric::paper();
+        let elems = 1 << 18;
+        let mut prev = 0.0;
+        for r in [0.001, 0.01, 0.1, 0.5, 1.0] {
+            let t = sparse_allgather_time(4, elems, r, f.network);
+            assert!(t >= prev, "ratio {r}: {t} < {prev}");
+            prev = t;
+        }
+        // the k >= 1 growth floor: even an absurd ratio on a tiny
+        // segment still prices one full entry per hop, never zero
+        let tiny = sparse_ring_cost(4, 3, 1e-6, f.network, 0.1);
+        assert_eq!(tiny.entries, 1);
+        assert!(tiny.wire_s > 0.0);
+        // and a single machine has no network ring to sparsify
+        assert_eq!(sparse_allgather_time(1, elems, 0.1, f.network), 0.0);
+    }
+
+    #[test]
+    fn sparse_effective_cost_has_an_interior_ratio_optimum() {
+        // Wire time grows ~affinely in the ratio while EF inflation
+        // decays like 1/r: the effective cost must bottom out strictly
+        // inside (grid[0], 1.0) for BERT-scale payloads — neither "send
+        // almost nothing" nor "send everything" wins.
+        let f = Fabric::paper();
+        let grid: Vec<f64> =
+            (0..60).map(|i| 10f64.powf(-4.0 + i as f64 * 4.0 / 59.0))
+                   .collect();
+        let elems = 336_226_108 / 26; // one of ~26 BERT-large buckets
+        let (pts, best) =
+            sparse_ratio_sweep(4, elems, f.network, 0.05, &grid);
+        assert_eq!(pts.len(), grid.len());
+        assert!(best.ratio > grid[0] && best.ratio < 1.0,
+                "optimum {best:?} sits on the grid edge");
+        // the endpoints really are worse
+        assert!(pts[0].effective_s > best.effective_s * 1.05,
+                "aggressive end not penalized: {:?}", pts[0]);
+        assert!(pts[pts.len() - 1].effective_s > best.effective_s * 1.05,
+                "dense end not penalized: {:?}", pts[pts.len() - 1]);
+        // inflation is 1 exactly at the dense end, > 1 below it
+        assert!((ef_inflation(1.0, 0.05) - 1.0).abs() < 1e-12);
+        assert!(ef_inflation(0.01, 0.05) > 1.0);
+    }
+
+    #[test]
+    fn sparse_model_uses_the_executed_selectors_k() {
+        // Model/executor agreement: the priced entry count IS
+        // Sparsify::entries — if the selector's rounding changes, this
+        // pins the model to change with it.
+        for (elems, ratio) in [(1000usize, 0.01), (10, 0.01), (7, 1.0)] {
+            let p = sparse_ring_cost(2, elems, ratio,
+                                     Fabric::paper().network, 0.0);
+            assert_eq!(p.entries,
+                       crate::grad::sparsify::Sparsify::TopK(ratio)
+                           .entries(elems));
+        }
     }
 
     #[test]

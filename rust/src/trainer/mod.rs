@@ -271,6 +271,7 @@ impl Trainer {
                                                   cfg.train.comm_mode,
                                                   cfg.train.intra_node,
                                                   cfg.train.chunk_elems,
+                                                  cfg.train.sparsify,
                                                   transport)?;
         let mask_cfg = MaskingConfig {
             mask_prob: cfg.data.mask_prob,
@@ -354,6 +355,15 @@ impl Trainer {
             ckpt.params.len(), self.params.len()
         );
         ckpt.ensure_fingerprint(&self.fingerprint())?;
+        // Error-feedback residuals are part of the exact-resume state:
+        // with sparsification active the dropped gradient mass lives in
+        // per-rank accumulators that must round-trip bitwise.  (Only the
+        // writing process's local ranks are captured, so exact EF resume
+        // is an in-process-world contract; socket worlds restore every
+        // peer from the same file and this count check trips for them.)
+        if self.pool.sparsify_active() {
+            self.pool.restore_ef(&ckpt.ef_residuals)?;
+        }
         self.adopt(ckpt);
         Ok(())
     }
@@ -399,6 +409,13 @@ impl Trainer {
                 );
             }
         }
+        // Per-rank error-feedback residuals cannot be remapped across a
+        // world reshape (rank r on the new world is not rank r on the
+        // old one); start them from zero like the legitimate stream
+        // divergences above.
+        if self.pool.sparsify_active() {
+            self.pool.zero_ef();
+        }
         self.adopt(ckpt);
         Ok(())
     }
@@ -442,6 +459,11 @@ impl Trainer {
         self.params = ckpt.params;
         self.m = ckpt.m;
         self.v = ckpt.v;
+        // A phase change is a new training stream: residual gradient
+        // mass from the old geometry does not carry over.
+        if self.pool.sparsify_active() {
+            self.pool.zero_ef();
+        }
         Ok(())
     }
 
@@ -455,6 +477,10 @@ impl Trainer {
         out.fingerprint = Some(self.fingerprint());
         out.exact_data_position = true;
         out.fill_arrays(&self.params, &self.m, &self.v);
+        // With sparsification active, the per-rank error-feedback
+        // residuals are live optimizer-adjacent state (empty Vec
+        // otherwise — the v2.2 section costs 4 bytes when dense).
+        out.ef_residuals = self.pool.ef_snapshot();
     }
 
     /// Snapshot current state into a fresh checkpoint.
@@ -495,6 +521,13 @@ impl Trainer {
     /// reduce-scatter schedule (`train.intra_node = rs`).
     pub fn is_intra_rs(&self) -> bool {
         self.pool.is_intra_rs()
+    }
+
+    /// Whether the pool's network-crossing rings ship top-k sparse
+    /// frames (`train.sparsify = topk:RATIO` on a topology that spans
+    /// machines; single-machine runs stay dense regardless).
+    pub fn sparsify_active(&self) -> bool {
+        self.pool.sparsify_active()
     }
 
     /// Monotone data-consumption counter (attempted optimizer steps,

@@ -22,6 +22,7 @@ use bertdist::config::RunConfig;
 use bertdist::coordinator::prepare_datasets;
 use bertdist::data::corpus::SyntheticCorpus;
 use bertdist::data::{build_shards, Vocab};
+use bertdist::grad::sparsify::Sparsify;
 use bertdist::precision::ScalerState;
 use bertdist::runtime::Engine;
 use bertdist::testkit::{tmp_ckpt_dir, tmp_dir, train_to_step};
@@ -92,6 +93,20 @@ fn assert_state_bitwise(got: &Checkpoint, want: &Checkpoint, ctx: &str) {
                        "{ctx}: {name}[{i}] diverged: {x} vs {y}");
         }
     }
+    // v2.2: the per-rank error-feedback residuals are training state
+    // too — a sparsified stream only resumes bitwise if they match.
+    assert_eq!(got.ef_residuals.len(), want.ef_residuals.len(),
+               "{ctx}: ef residual rank count");
+    for (r, (a, b)) in got.ef_residuals
+        .iter()
+        .zip(want.ef_residuals.iter())
+        .enumerate() {
+        assert_eq!(a.len(), b.len(), "{ctx}: ef[{r}] length");
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "{ctx}: ef[{r}][{i}] diverged: {x} vs {y}");
+        }
+    }
 }
 
 fn losses(points: &[(usize, f64)]) -> Vec<f64> {
@@ -113,19 +128,26 @@ fn assert_losses_bitwise(got: &[f64], want: &[f64], ctx: &str) {
 /// `k` steps, save to disk, rebuild a fresh trainer from the file,
 /// finish, and require bitwise-identical end state + loss history.
 fn check_resume_equivalence(topo: &str, mode: CommMode, prefetch: usize,
-                           inject_skips: bool, n: usize, ks: &[usize]) {
+                           inject_skips: bool, sparsify: Sparsify,
+                           n: usize, ks: &[usize]) {
     let Some(art) = artifacts() else {
         eprintln!("skipping: no artifacts");
         return;
     };
-    let tag = format!("{topo}/{mode:?}/pf{prefetch}/skips={inject_skips}");
+    let tag = format!("{topo}/{mode:?}/pf{prefetch}/skips={inject_skips}/\
+                       {sparsify}");
     let data = tmp_dir(&format!("resume_{topo}_{mode:?}_{prefetch}_\
-                                 {inject_skips}"));
+                                 {inject_skips}_{sparsify}"));
     make_data(data.path(), 512, 4);
     let engine = Engine::cpu(&art).unwrap();
     let mut cfg = base_cfg(topo);
     cfg.train.comm_mode = mode;
     cfg.train.prefetch_depth = prefetch;
+    cfg.train.sparsify = sparsify;
+    // topk on a multi-machine topology puts real error-feedback state
+    // in every checkpoint; on one machine the knob is inert
+    let sparsify_live = matches!(sparsify, Sparsify::TopK(_))
+        && cfg.cluster.topo.machines > 1;
     if inject_skips {
         // An astronomically large initial scale overflows the scaled
         // loss in f32 for the first step(s): REAL AMP skips through the
@@ -148,6 +170,19 @@ fn check_resume_equivalence(topo: &str, mode: CommMode, prefetch: usize,
         assert!(want.step < want.data_step,
                 "{tag}: skipped steps must leave step behind data_step");
     }
+    if sparsify_live {
+        assert_eq!(want.ef_residuals.len(), world,
+                   "{tag}: a live sparsifier must snapshot one residual \
+                    per rank");
+        assert!(want.ef_residuals
+                    .iter()
+                    .any(|r| r.iter().any(|&x| x != 0.0)),
+                "{tag}: a lossy ratio must leave real mass in the \
+                 residuals");
+    } else {
+        assert!(want.ef_residuals.is_empty(),
+                "{tag}: dense/inert runs must not checkpoint residuals");
+    }
     drop(t);
 
     let ckdir = tmp_ckpt_dir(&format!("resume_{topo}_{mode:?}_{prefetch}_\
@@ -166,6 +201,19 @@ fn check_resume_equivalence(topo: &str, mode: CommMode, prefetch: usize,
         let loaded = Checkpoint::load(&path).unwrap();
         assert!(loaded.exact_data_position);
         assert!(loaded.fingerprint.is_some(), "{ctx}: v2 must fingerprint");
+        assert_eq!(loaded.fingerprint.unwrap().sparsify, sparsify,
+                   "{ctx}: the fingerprint must carry the knob");
+        if sparsify_live {
+            // the residuals round-trip through the real file format at
+            // EVERY boundary k, one full-length vector per rank
+            assert_eq!(loaded.ef_residuals.len(), world, "{ctx}: ef ranks");
+            for (r, ef) in loaded.ef_residuals.iter().enumerate() {
+                assert_eq!(ef.len(), loaded.params.len(),
+                           "{ctx}: ef[{r}] must span the model");
+            }
+        } else {
+            assert!(loaded.ef_residuals.is_empty(), "{ctx}: ef section");
+        }
         resumed.restore(loaded).unwrap();
         assert_eq!(resumed.data_step(), k,
                    "{ctx}: data_step counts attempted steps");
@@ -182,7 +230,8 @@ fn check_resume_equivalence(topo: &str, mode: CommMode, prefetch: usize,
 fn resume_is_bitwise_identical_at_every_boundary() {
     // the full k-sweep on the base configuration
     let ks: Vec<usize> = (1..6).collect();
-    check_resume_equivalence("1M2G", CommMode::Flat, 2, false, 6, &ks);
+    check_resume_equivalence("1M2G", CommMode::Flat, 2, false,
+                             Sparsify::None, 6, &ks);
 }
 
 #[test]
@@ -190,7 +239,8 @@ fn resume_equivalence_with_injected_amp_skips_full_sweep() {
     // every boundary again, with overflow skips in the stream — the
     // checkpoint may land between two skips, mid-backoff
     let ks: Vec<usize> = (1..6).collect();
-    check_resume_equivalence("1M2G", CommMode::Flat, 2, true, 6, &ks);
+    check_resume_equivalence("1M2G", CommMode::Flat, 2, true,
+                             Sparsify::None, 6, &ks);
 }
 
 #[test]
@@ -204,11 +254,33 @@ fn resume_equivalence_across_worlds_comm_modes_and_prefetch() {
                          ("2M2G", CommMode::Hierarchical)] {
         for prefetch in [0usize, 2] {
             for inject in [false, true] {
-                check_resume_equivalence(topo, mode, prefetch, inject, 4,
-                                         &[2]);
+                check_resume_equivalence(topo, mode, prefetch, inject,
+                                         Sparsify::None, 4, &[2]);
             }
         }
     }
+}
+
+#[test]
+fn resume_equivalence_with_topk_sparsify_carries_ef_bitwise() {
+    // ISSUE 10: the sparsify=topk(0.1) axis of the sweep.  The lossy
+    // exchange makes the error-feedback residuals REAL state: they must
+    // round-trip bitwise through the file format at every boundary k,
+    // or the resumed stream diverges from the uninterrupted one.
+    let ks: Vec<usize> = (1..5).collect();
+    check_resume_equivalence("2M2G", CommMode::Hierarchical, 2, false,
+                             Sparsify::TopK(0.1), 5, &ks);
+}
+
+#[test]
+fn resume_equivalence_topk_flat_mode_and_inert_single_machine() {
+    // flat comm mode still sparsifies its (network-crossing) world
+    // ring; a single-machine topology must stay inert — the knob is
+    // set but no residuals ever appear in the checkpoint
+    check_resume_equivalence("2M2G", CommMode::Flat, 0, false,
+                             Sparsify::TopK(0.1), 4, &[2]);
+    check_resume_equivalence("1M2G", CommMode::Flat, 2, false,
+                             Sparsify::TopK(0.1), 4, &[2]);
 }
 
 #[test]
@@ -370,6 +442,75 @@ fn corruption_matrix_truncate_and_flip_every_section() {
     let bad = dir.join("longer.bckp");
     std::fs::write(&bad, &longer).unwrap();
     assert!(Checkpoint::load(&bad).is_err());
+}
+
+#[test]
+fn corruption_matrix_covers_the_v22_ef_section() {
+    // ISSUE 10: a checkpoint carrying error-feedback residuals grows an
+    // `ef` section between `v` and the CRC — the same truncate/flip
+    // matrix must hold over the extended layout, and the intact file
+    // must verify and round-trip the residuals bitwise.
+    let dir = tmp_ckpt_dir("corruption_ef");
+    let n = 6usize;
+    let mut c = Checkpoint::new(n);
+    c.step = 11;
+    c.data_step = 13;
+    let mut cfg = RunConfig::default();
+    cfg.train.sparsify = Sparsify::TopK(0.1);
+    c.fingerprint = Some(Fingerprint::of(&cfg, 8, 128));
+    c.ef_residuals = vec![vec![0.25f32; n], vec![-1.5f32; n]];
+    for (i, x) in c.params.iter_mut().enumerate() {
+        *x = i as f32 + 0.5;
+    }
+    let good = dir.join("good.bckp");
+    c.save(&good).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+    let ef_lens = [n, n];
+    assert_eq!(bytes.len(), checkpoint::v2_file_len_with_ef(n, &ef_lens));
+    assert_eq!(verify_checkpoint(&good).unwrap(), bytes.len() as u64);
+    let loaded = Checkpoint::load(&good).unwrap();
+    assert_eq!(loaded.ef_residuals, c.ef_residuals,
+               "residuals must round-trip bitwise");
+    assert_eq!(loaded.fingerprint.unwrap().sparsify, Sparsify::TopK(0.1));
+
+    for (name, range) in checkpoint::v2_sections_with_ef(n, &ef_lens) {
+        // truncate at the section's start boundary
+        let bad = dir.join(format!("trunc_{name}.bckp"));
+        std::fs::write(&bad, &bytes[..range.start]).unwrap();
+        let err = Checkpoint::load(&bad).map(|_| ()).unwrap_err();
+        assert!(
+            matches!(err, CkptError::BadMagic | CkptError::Corrupt
+                          | CkptError::SizeMismatch),
+            "truncation at {name} ({}) must be a clean load error, got \
+             {err:?}", range.start
+        );
+        if range.is_empty() {
+            continue;
+        }
+        // flip one byte inside the section
+        let mut flipped = bytes.clone();
+        flipped[range.start] ^= 0x01;
+        let bad = dir.join(format!("flip_{name}.bckp"));
+        std::fs::write(&bad, &flipped).unwrap();
+        let err = Checkpoint::load(&bad).map(|_| ()).unwrap_err();
+        if name == "magic" {
+            assert!(matches!(err, CkptError::BadMagic), "{name}: {err:?}");
+        } else {
+            assert!(matches!(err, CkptError::Corrupt), "{name}: {err:?}");
+        }
+    }
+    // a tear INSIDE the ef section (mid-residual, off every boundary)
+    // fails cleanly too
+    let ef_range = checkpoint::v2_sections_with_ef(n, &ef_lens)
+        .into_iter()
+        .find(|(name, _)| *name == "ef")
+        .unwrap()
+        .1;
+    let bad = dir.join("trunc_mid_ef.bckp");
+    std::fs::write(&bad, &bytes[..ef_range.start + 6]).unwrap();
+    let err = Checkpoint::load(&bad).map(|_| ()).unwrap_err();
+    assert!(matches!(err, CkptError::Corrupt | CkptError::SizeMismatch),
+            "mid-ef tear: {err:?}");
 }
 
 #[test]

@@ -351,3 +351,110 @@ fn comm_modes_train_to_close_params() {
             "flat vs hierarchical training diverged: {max_rel}");
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn topk_sparsified_training_tracks_dense_loss() {
+    // ISSUE 10: `train.sparsify = topk:0.1` ships 10% of the gradient
+    // coordinates over the network ring; the error-feedback residual
+    // folds the dropped mass back in, so training must land within a
+    // pinned tolerance of the dense run's loss — lossy wire, same
+    // training story.
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    use bertdist::grad::sparsify::Sparsify;
+    let dir = std::env::temp_dir().join("bertdist_it_topk_loss");
+    make_data(&dir, 512, 4);
+    let engine = Engine::cpu(&art).unwrap();
+    let datasets = prepare_datasets(&dir, 4).unwrap();
+    let mut tails: Vec<f64> = Vec::new();
+    for sparsify in [Sparsify::None, Sparsify::TopK(0.1)] {
+        let mut cfg = base_cfg("2M2G");
+        cfg.train.sparsify = sparsify;
+        let mut t = bertdist::trainer::Trainer::new(&engine, cfg, 32, 2)
+            .unwrap();
+        assert_eq!(t.sparsify_active(),
+                   sparsify != Sparsify::None,
+                   "2M2G must activate topk and leave dense alone");
+        let r = t.run(&datasets, 20, 20).unwrap();
+        assert_eq!(r.steps, 20);
+        let head = r.loss.points[0].1;
+        let tail = r.loss.tail_mean(5);
+        assert!(tail.is_finite(), "{sparsify}");
+        assert!(tail < head,
+                "{sparsify}: training did not improve: {head} -> {tail}");
+        tails.push(tail);
+    }
+    let (dense, sparse) = (tails[0], tails[1]);
+    let rel = (sparse - dense).abs() / dense;
+    assert!(rel < 0.25,
+            "topk:0.1 loss diverged from dense beyond the pinned \
+             tolerance: dense {dense}, sparse {sparse} (rel {rel})");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn topk_resume_mid_run_matches_uninterrupted_bitwise() {
+    // ISSUE 10: interrupting a sparsified run and resuming from the
+    // checkpoint must be invisible — the v2.2 error-feedback section
+    // makes the residuals part of the resumable state, so the resumed
+    // stream lands bitwise on the uninterrupted run's parameters.
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    use bertdist::checkpoint::Checkpoint;
+    use bertdist::grad::sparsify::Sparsify;
+    use bertdist::trainer::Trainer;
+    let dir = std::env::temp_dir().join("bertdist_it_topk_resume");
+    make_data(&dir, 512, 4);
+    let engine = Engine::cpu(&art).unwrap();
+    let datasets = prepare_datasets(&dir, 4).unwrap();
+    let mut cfg = base_cfg("2M2G");
+    cfg.train.sparsify = Sparsify::TopK(0.1);
+
+    let mut ta = Trainer::new(&engine, cfg.clone(), 32, 2).unwrap();
+    ta.run(&datasets, 6, 6).unwrap();
+    let want = ta.checkpoint();
+    assert!(!want.ef_residuals.is_empty(),
+            "a live sparsifier must snapshot residuals");
+    drop(ta);
+
+    let ckdir = bertdist::testkit::tmp_ckpt_dir("it_topk_resume");
+    let ck = ckdir.join("mid.bckp");
+    let mut tb = Trainer::new(&engine, cfg.clone(), 32, 2).unwrap();
+    tb.run(&datasets, 3, 6).unwrap();
+    tb.save(&ck).unwrap();
+    drop(tb);
+
+    let mut tc = Trainer::new(&engine, cfg, 32, 2).unwrap();
+    let loaded = Checkpoint::load(&ck).unwrap();
+    assert!(!loaded.ef_residuals.is_empty(),
+            "the mid-run checkpoint must carry the EF section");
+    tc.restore(loaded).unwrap();
+    tc.run(&datasets, 3, 6).unwrap();
+    let got = tc.checkpoint();
+
+    assert_eq!(got.step, want.step);
+    assert_eq!(got.data_step, want.data_step);
+    assert_eq!(got.scaler, want.scaler);
+    for (name, a, b) in [("params", &got.params, &want.params),
+                         ("m", &got.m, &want.m), ("v", &got.v, &want.v)] {
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "{name}[{i}] diverged after topk resume: {x} vs {y}");
+        }
+    }
+    assert_eq!(got.ef_residuals.len(), want.ef_residuals.len());
+    for (r, (a, b)) in got.ef_residuals
+        .iter()
+        .zip(want.ef_residuals.iter())
+        .enumerate() {
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "ef[{r}][{i}] diverged after topk resume: {x} vs {y}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

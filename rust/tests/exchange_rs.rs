@@ -27,6 +27,7 @@ use bertdist::collectives::transport::{FrameTx, InProcTransport, LinkEnds,
                                        LinkId, LinkKind, PayloadPool,
                                        Transport, TransportError};
 use bertdist::collectives::{Frame, SocketTransport};
+use bertdist::grad::sparsify::Sparsify;
 use bertdist::grad::{bucket_ranges, build_buckets, BucketRange,
                      GradAccumulator};
 use bertdist::model::layout::ParamLayout;
@@ -275,7 +276,7 @@ fn socket_world_grads(topo: Topology, nprocs: usize, wire: WireFormat,
                         world, &peers[p], peers.clone(), 30.0).unwrap();
                     let mut pool = CollectivePool::with_transport(
                         topo, n, ranges, wire, mode, intra, 1 << 16,
-                        &mut t).unwrap();
+                        Sparsify::None, &mut t).unwrap();
                     for s in 0..steps {
                         pool.step(&[], 1.0, k, s, true,
                                   &ExactSynth { n, salt })
@@ -432,7 +433,8 @@ fn tampered_step_err(topo: Topology, wire: WireFormat, mode: CommMode,
     let n = 96;
     let ranges = BucketRange::even_split(n, 2);
     let mut pool = CollectivePool::with_transport(
-        topo, n, ranges, wire, mode, intra, 1 << 16, &mut t).unwrap();
+        topo, n, ranges, wire, mode, intra, 1 << 16, Sparsify::None,
+        &mut t).unwrap();
     let err = pool
         .step(&[], 1.0, 1, 0, true, &ExactSynth { n, salt: 1 })
         .map(|_| ())
@@ -535,7 +537,7 @@ fn socket_tampered_errs(topo: Topology, mode: CommMode,
                         };
                         let mut pool = CollectivePool::with_transport(
                             topo, n, ranges, WireFormat::F32, mode, intra,
-                            1 << 16, &mut t).unwrap();
+                            1 << 16, Sparsify::None, &mut t).unwrap();
                         pool.step(&[], 1.0, 1, 0, true,
                                   &ExactSynth { n, salt: 1 })
                             .map(|_| ())
@@ -543,7 +545,7 @@ fn socket_tampered_errs(topo: Topology, mode: CommMode,
                     } else {
                         let mut pool = CollectivePool::with_transport(
                             topo, n, ranges, WireFormat::F32, mode, intra,
-                            1 << 16, &mut sock).unwrap();
+                            1 << 16, Sparsify::None, &mut sock).unwrap();
                         pool.step(&[], 1.0, 1, 0, true,
                                   &ExactSynth { n, salt: 1 })
                             .map(|_| ())

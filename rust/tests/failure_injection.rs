@@ -398,6 +398,7 @@ mod socket_failures {
                                       IntraNodeMode, MicroStats,
                                       RankCompute, WireFormat};
     use bertdist::collectives::SocketTransport;
+    use bertdist::grad::sparsify::Sparsify;
     use bertdist::grad::BucketRange;
     use bertdist::topology::Topology;
 
@@ -447,7 +448,7 @@ mod socket_failures {
         CollectivePool::with_transport(
             Topology::new(2, 1), n, BucketRange::even_split(n, 2),
             WireFormat::F32, CommMode::Flat, IntraNodeMode::Auto, 1 << 16,
-            &mut t).unwrap()
+            Sparsify::None, &mut t).unwrap()
     }
 
     /// A peer process dying mid-exchange (its socket closes) must

@@ -1,0 +1,721 @@
+//! ISSUE 10 (tentpole): top-k gradient sparsification on the
+//! network-crossing rings (`train.sparsify = topk:RATIO`), with the
+//! bitwise/convergence test wall.
+//!
+//! The headline property: across random `<X>M<Y>G` topologies, all
+//! three comm schedules (flat world ring, serialized leader,
+//! 2-level reduce-scatter) and both wire formats, `topk:1.0` produces
+//! gradients BITWISE identical to the dense exchange — and to the old
+//! spawn-per-step baseline — on exact-sum gradients (dyadic grid, so
+//! no summation association can matter).  Full-ratio sparsification
+//! changes the framing, never the bits.
+//!
+//! Below 1.0 the exchange is lossy but still deterministic: the same
+//! seed gives identical parameters over `InProcTransport` and
+//! `SocketTransport`, and across `train.prefetch_depth` 0 and 2; the
+//! error-feedback residual snapshot/restore round-trips bitwise
+//! (pool-level resume).
+//!
+//! Plus the loud-fail regressions: a peer that ships a truncated
+//! sparse payload, an out-of-bounds index, skewed index/value lengths,
+//! a skewed dense dimension, a skewed schedule tag, or the wrong frame
+//! kind on a sparse ring link surfaces a NAMED protocol error — on
+//! both transports, in release builds — instead of silently
+//! scattering garbage into the gradient sum.
+
+use std::ops::Range;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use bertdist::collectives::pool::{CollectivePool, CommMode, IntraNodeMode,
+                                  MicroStats, RankCompute, WireFormat};
+use bertdist::collectives::transport::{FrameTx, InProcTransport, LinkEnds,
+                                       LinkId, LinkKind, PayloadPool,
+                                       Transport, TransportError};
+use bertdist::collectives::{Frame, SocketTransport};
+use bertdist::grad::sparsify::Sparsify;
+use bertdist::grad::{bucket_ranges, build_buckets, BucketRange,
+                     GradAccumulator};
+use bertdist::model::layout::ParamLayout;
+use bertdist::testkit;
+use bertdist::topology::Topology;
+use bertdist::trainer::allreduce_buckets;
+use bertdist::util::Pcg64;
+
+// ---------------------------------------------------------------------------
+// shared fixtures (the exchange_rs.rs dyadic-grid idiom)
+// ---------------------------------------------------------------------------
+
+/// Deterministic synthetic gradients on a dyadic grid: multiples of
+/// 0.25 in [-2, 2].  Every partial sum under ANY association is exactly
+/// representable in both f32 and f16, so the `topk:1.0` allgather
+/// reconstruction (fixed origin order) and the dense ring
+/// reduce-scatter (ring order) must agree to the bit.
+struct ExactSynth {
+    n: usize,
+    salt: u64,
+}
+
+impl RankCompute for ExactSynth {
+    fn micro(&self, rank: usize, step_index: usize, micro: usize,
+             _params: &[f32], _scale: f32, out: &mut Vec<f32>)
+             -> anyhow::Result<MicroStats> {
+        out.resize(self.n, 0.0);
+        let stream = (rank as u64) << 32
+            | (step_index as u64) << 8
+            | micro as u64;
+        let mut rng = Pcg64::with_stream(self.salt, stream);
+        for v in out.iter_mut() {
+            *v = (rng.range_usize(0, 17) as f32 - 8.0) * 0.25;
+        }
+        Ok(MicroStats { loss: 1.0, ..Default::default() })
+    }
+}
+
+fn random_layout(rng: &mut Pcg64) -> ParamLayout {
+    let tensors = rng.range_usize(1, 10);
+    let shapes: Vec<(String, Vec<usize>)> = (0..tensors)
+        .map(|i| (format!("t{i}"), vec![rng.range_usize(1, 400)]))
+        .collect();
+    ParamLayout::from_shapes(&shapes)
+}
+
+/// Run `steps` pooled steps under (mode, intra, sparsify) over an
+/// in-process transport and return every rank's reduced buffer.
+#[allow(clippy::too_many_arguments)]
+fn run_pool(topo: Topology, n: usize, ranges: Arc<[BucketRange]>,
+            wire: WireFormat, mode: CommMode, intra: IntraNodeMode,
+            overlap: bool, k: usize, steps: usize, sparsify: Sparsify,
+            compute: &dyn RankCompute) -> Vec<Vec<f32>> {
+    let world = topo.world_size();
+    let mut t = InProcTransport::new(world);
+    let mut pool = CollectivePool::with_transport(
+        topo, n, ranges, wire, mode, intra, 1 << 16, sparsify, &mut t)
+        .unwrap();
+    for s in 0..steps {
+        pool.step(&[], 1.0, k, s, overlap, compute).unwrap();
+    }
+    (0..world).map(|r| pool.rank_grads(r).clone()).collect()
+}
+
+/// The old spawn-per-step exchange over the same gradients (f32 only).
+fn run_spawn_baseline(topo: Topology, n: usize, threshold: usize,
+                      layout: &ParamLayout, k: usize, steps: usize,
+                      compute: &dyn RankCompute) -> Vec<Vec<f32>> {
+    let world = topo.world_size();
+    let buckets = build_buckets(layout, threshold);
+    let mut accs: Vec<GradAccumulator> =
+        (0..world).map(|_| GradAccumulator::new(n)).collect();
+    let mut g = Vec::new();
+    for s in 0..steps {
+        for (r, acc) in accs.iter_mut().enumerate() {
+            acc.reset();
+            for m in 0..k {
+                compute.micro(r, s, m, &[], 1.0, &mut g).unwrap();
+                acc.add(&g);
+            }
+        }
+        allreduce_buckets(&mut accs, &buckets);
+    }
+    accs.iter().map(|a| a.buffer().to_vec()).collect()
+}
+
+fn assert_bitwise(tag: &str, a: &[Vec<f32>], b: &[Vec<f32>])
+                  -> Result<(), String> {
+    for (r, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        if x.len() != y.len() {
+            return Err(format!("{tag}: rank {r} length {} != {}",
+                               x.len(), y.len()));
+        }
+        for (i, (va, vb)) in x.iter().zip(y.iter()).enumerate() {
+            if va.to_bits() != vb.to_bits() {
+                return Err(format!("{tag}: rank {r} [{i}]: {va} != {vb}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// the headline property: topk:1.0 ≡ dense ≡ spawn baseline, bitwise
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_topk_full_ratio_matches_dense_and_spawn_bitwise() {
+    testkit::check_msg(
+        "topk(1.0)≡dense≡spawn", 0x5A12, 8,
+        |r: &mut Pcg64| {
+            let machines = r.range_usize(1, 5);
+            let gpus = r.range_usize(1, 4);
+            let threshold = r.range_usize(1, 900);
+            let k = r.range_usize(1, 4);
+            let overlap = r.range_usize(0, 2) == 1;
+            let salt = r.next_u64();
+            (machines, gpus, threshold, k, overlap, salt)
+        },
+        |&(machines, gpus, threshold, k, overlap, salt)| {
+            let topo = Topology::new(machines, gpus);
+            let mut lrng = Pcg64::with_stream(salt, 0x5A1);
+            let layout = random_layout(&mut lrng);
+            let n = layout.total_len();
+            let ranges = bucket_ranges(&build_buckets(&layout, threshold));
+            let synth = ExactSynth { n, salt };
+            // two steps: at ratio 1.0 the error-feedback residual must
+            // stay exactly zero, so step 2 re-proves it rides along as
+            // a no-op rather than once-by-luck
+            let steps = 2;
+
+            let base = run_spawn_baseline(topo, n, threshold, &layout, k,
+                                          steps, &synth);
+            for wire in [WireFormat::F32, WireFormat::F16] {
+                for (mode, intra) in
+                    [(CommMode::Flat, IntraNodeMode::Auto),
+                     (CommMode::Hierarchical, IntraNodeMode::Serial),
+                     (CommMode::Hierarchical, IntraNodeMode::ReduceScatter)]
+                {
+                    let tag = format!(
+                        "{topo} {wire:?} {mode:?}/{intra:?} \
+                         overlap={overlap} k={k}");
+                    let dense = run_pool(
+                        topo, n, ranges.clone(), wire, mode, intra,
+                        overlap, k, steps, Sparsify::None, &synth);
+                    let sparse = run_pool(
+                        topo, n, ranges.clone(), wire, mode, intra,
+                        overlap, k, steps, Sparsify::TopK(1.0), &synth);
+                    assert_bitwise(&format!("{tag} topk(1.0) vs dense"),
+                                   &sparse, &dense)?;
+                    if wire == WireFormat::F32 {
+                        assert_bitwise(&format!("{tag} dense vs spawn"),
+                                       &dense, &base)?;
+                    }
+                    // replicas identical within the sparse run
+                    for r in 1..topo.world_size() {
+                        if sparse[0] != sparse[r] {
+                            return Err(format!(
+                                "{tag}: sparse replicas diverged \
+                                 (rank {r})"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn single_machine_topk_is_inert_and_bitwise_dense() {
+    // Placement is a pure function of the TOPOLOGY: one machine has no
+    // network ring, so even an aggressive ratio changes nothing — no
+    // residuals are allocated and the grads match dense to the bit.
+    let topo = Topology::new(1, 4);
+    let layout = ParamLayout::from_shapes(&[
+        ("a".into(), vec![211]),
+        ("b".into(), vec![96]),
+    ]);
+    let n = layout.total_len();
+    let ranges = bucket_ranges(&build_buckets(&layout, 128));
+    let synth = ExactSynth { n, salt: 0x1E47 };
+    let dense = run_pool(topo, n, ranges.clone(), WireFormat::F32,
+                         CommMode::Flat, IntraNodeMode::Auto, true, 2, 2,
+                         Sparsify::None, &synth);
+    let mut t = InProcTransport::new(topo.world_size());
+    let mut pool = CollectivePool::with_transport(
+        topo, n, ranges, WireFormat::F32, CommMode::Flat,
+        IntraNodeMode::Auto, 1 << 16, Sparsify::TopK(0.01), &mut t)
+        .unwrap();
+    assert_eq!(pool.sparsify(), Sparsify::TopK(0.01));
+    assert!(!pool.sparsify_active(), "1M topology must leave topk inert");
+    assert!(pool.ef_snapshot().is_empty(),
+            "inert sparsify must not allocate residuals");
+    for s in 0..2 {
+        pool.step(&[], 1.0, 2, s, true, &synth).unwrap();
+    }
+    let sparse: Vec<Vec<f32>> = (0..topo.world_size())
+        .map(|r| pool.rank_grads(r).clone())
+        .collect();
+    assert_bitwise("inert topk vs dense", &sparse, &dense).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// ratio < 1.0: lossy but deterministic, and EF state resumes bitwise
+// ---------------------------------------------------------------------------
+
+/// Fresh loopback TCP addresses: bind-to-:0 probes, then released for
+/// the transports to claim.
+fn probe_addrs(n: usize) -> Vec<String> {
+    let listeners: Vec<std::net::TcpListener> = (0..n)
+        .map(|_| std::net::TcpListener::bind("127.0.0.1:0").unwrap())
+        .collect();
+    listeners
+        .iter()
+        .map(|l| format!("127.0.0.1:{}", l.local_addr().unwrap().port()))
+        .collect()
+}
+
+/// Run `steps` pooled exchanges with the world split over `nprocs`
+/// socket transports and return every rank's reduced gradients in
+/// world order.
+#[allow(clippy::too_many_arguments)]
+fn socket_world_grads(topo: Topology, nprocs: usize, wire: WireFormat,
+                      mode: CommMode, intra: IntraNodeMode, n: usize,
+                      ranges: &Arc<[BucketRange]>, steps: usize, k: usize,
+                      sparsify: Sparsify, salt: u64) -> Vec<Vec<f32>> {
+    let peers = probe_addrs(nprocs);
+    let world = topo.world_size();
+    let mut out: Vec<Vec<f32>> = vec![Vec::new(); world];
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..nprocs)
+            .map(|p| {
+                let peers = peers.clone();
+                let ranges = ranges.clone();
+                scope.spawn(move || {
+                    let mut t = SocketTransport::with_hosts(
+                        world, &peers[p], peers.clone(), 30.0).unwrap();
+                    let mut pool = CollectivePool::with_transport(
+                        topo, n, ranges, wire, mode, intra, 1 << 16,
+                        sparsify, &mut t).unwrap();
+                    for s in 0..steps {
+                        pool.step(&[], 1.0, k, s, true,
+                                  &ExactSynth { n, salt })
+                            .unwrap();
+                    }
+                    pool.local_ranks()
+                        .map(|r| pool.rank_grads(r).clone())
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for (p, h) in handles.into_iter().enumerate() {
+            let grads = h.join().expect("socket world thread panicked");
+            let per = world / nprocs;
+            for (i, g) in grads.into_iter().enumerate() {
+                out[p * per + i] = g;
+            }
+        }
+    });
+    out
+}
+
+#[test]
+fn topk_below_one_is_deterministic_across_transports() {
+    // Lossy ratios drop real mass into the residual, so three steps
+    // exercise the error feedback riding between steps — and the
+    // resulting bits must not care whether the sparse frames moved
+    // in-memory or over real sockets.
+    let topo = Topology::new(2, 2);
+    let salt = 0x70_0B17u64;
+    let layout = ParamLayout::from_shapes(&[
+        ("a".into(), vec![130]),
+        ("b".into(), vec![77]),
+    ]);
+    let n = layout.total_len();
+    let ranges = bucket_ranges(&build_buckets(&layout, 64));
+    for (mode, intra) in
+        [(CommMode::Flat, IntraNodeMode::Auto),
+         (CommMode::Hierarchical, IntraNodeMode::Serial),
+         (CommMode::Hierarchical, IntraNodeMode::ReduceScatter)]
+    {
+        for wire in [WireFormat::F32, WireFormat::F16] {
+            let tag = format!("{mode:?}/{intra:?} {wire:?}");
+            let sock = socket_world_grads(
+                topo, 2, wire, mode, intra, n, &ranges, 3, 2,
+                Sparsify::TopK(0.1), salt);
+            let inproc = run_pool(
+                topo, n, ranges.clone(), wire, mode, intra, true, 2, 3,
+                Sparsify::TopK(0.1), &ExactSynth { n, salt });
+            assert_bitwise(&format!("topk(0.1) socket vs inproc {tag}"),
+                           &sock, &inproc)
+                .unwrap();
+            // the lossy exchange still keeps every replica identical
+            for r in 1..topo.world_size() {
+                assert_bitwise(&format!("{tag} replica {r}"),
+                               &[inproc[0].clone()],
+                               &[inproc[r].clone()])
+                    .unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn ef_snapshot_restore_resumes_the_sparse_stream_bitwise() {
+    // Pool-level resume: 4 uninterrupted lossy steps vs 2 steps +
+    // ef_snapshot + a FRESH pool restored from the snapshot finishing
+    // steps 2..4.  The reduced gradients after the final step must
+    // match bitwise — the residual is the only cross-step state, and
+    // it must round-trip exactly.
+    let topo = Topology::new(2, 2);
+    let salt = 0xEF_57A7Eu64;
+    let layout = ParamLayout::from_shapes(&[("a".into(), vec![257])]);
+    let n = layout.total_len();
+    let ranges = bucket_ranges(&build_buckets(&layout, 64));
+    let synth = ExactSynth { n, salt };
+    let sp = Sparsify::TopK(0.1);
+
+    let uninterrupted = run_pool(topo, n, ranges.clone(), WireFormat::F32,
+                                 CommMode::Hierarchical,
+                                 IntraNodeMode::Serial, true, 2, 4, sp,
+                                 &synth);
+
+    let mut t1 = InProcTransport::new(topo.world_size());
+    let mut first = CollectivePool::with_transport(
+        topo, n, ranges.clone(), WireFormat::F32, CommMode::Hierarchical,
+        IntraNodeMode::Serial, 1 << 16, sp, &mut t1).unwrap();
+    for s in 0..2 {
+        first.step(&[], 1.0, 2, s, true, &synth).unwrap();
+    }
+    let snap = first.ef_snapshot();
+    assert_eq!(snap.len(), topo.world_size(),
+               "active sparsify snapshots one residual per local rank");
+    assert!(snap.iter().any(|r| r.iter().any(|&x| x != 0.0)),
+            "a lossy ratio must leave real mass in the residual");
+    drop(first);
+
+    let mut t2 = InProcTransport::new(topo.world_size());
+    let mut resumed = CollectivePool::with_transport(
+        topo, n, ranges, WireFormat::F32, CommMode::Hierarchical,
+        IntraNodeMode::Serial, 1 << 16, sp, &mut t2).unwrap();
+    resumed.restore_ef(&snap).unwrap();
+    for s in 2..4 {
+        resumed.step(&[], 1.0, 2, s, true, &synth).unwrap();
+    }
+    let got: Vec<Vec<f32>> = (0..topo.world_size())
+        .map(|r| resumed.rank_grads(r).clone())
+        .collect();
+    assert_bitwise("ef resume vs uninterrupted", &got, &uninterrupted)
+        .unwrap();
+
+    // and the guard rails: restoring residuals into a pool whose knob
+    // is inert, or the wrong count, fails loudly
+    let mut t3 = InProcTransport::new(topo.world_size());
+    let dense_pool = CollectivePool::with_transport(
+        Topology::new(2, 2), n, bucket_ranges(
+            &build_buckets(&ParamLayout::from_shapes(
+                &[("a".into(), vec![257])]), 64)),
+        WireFormat::F32, CommMode::Hierarchical, IntraNodeMode::Serial,
+        1 << 16, Sparsify::None, &mut t3).unwrap();
+    let err = dense_pool.restore_ef(&snap).unwrap_err();
+    assert!(err.to_string().contains("sparsification is inactive"),
+            "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// determinism across prefetch depths (trainer level, needs artifacts)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn topk_training_is_bitwise_identical_across_prefetch_depths() {
+    // `train.prefetch_depth` changes WHEN batches are staged, never
+    // what is computed — and sparsification must not break that: same
+    // seed, ratio 0.1, prefetch 0 vs 2, bitwise-identical parameters.
+    let Some(art) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    use bertdist::coordinator::prepare_datasets;
+    use bertdist::runtime::Engine;
+    let dir = testkit::tmp_dir("sparsify_prefetch");
+    make_data(dir.path());
+    let engine = Engine::cpu(&art).unwrap();
+    let datasets = prepare_datasets(dir.path(), 4).unwrap();
+    let mut finals: Vec<Vec<f32>> = Vec::new();
+    for prefetch in [0usize, 2] {
+        let mut cfg = base_cfg("2M2G");
+        cfg.train.comm_mode = CommMode::Hierarchical;
+        cfg.train.sparsify = Sparsify::TopK(0.1);
+        cfg.train.prefetch_depth = prefetch;
+        let mut t = bertdist::trainer::Trainer::new(&engine, cfg, 32, 2)
+            .unwrap();
+        assert!(t.sparsify_active(), "2M2G must activate the sparsifier");
+        let r = t.run(&datasets, 4, 4).unwrap();
+        assert_eq!(r.steps, 4);
+        finals.push(t.params.clone());
+    }
+    assert_eq!(finals[0].len(), finals[1].len());
+    for (i, (a, b)) in finals[0].iter().zip(finals[1].iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(),
+                   "param [{i}] diverged across prefetch depths: {a} vs {b}");
+    }
+}
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+fn make_data(dir: &std::path::Path) {
+    use bertdist::data::corpus::SyntheticCorpus;
+    use bertdist::data::{build_shards, Vocab};
+    let docs = SyntheticCorpus::new(9, 2_000).documents(24, 8, 10);
+    let vocab = Vocab::from_documents(&docs, 512);
+    vocab.save(&dir.join("vocab.txt")).unwrap();
+    build_shards(&docs, &vocab, 4, dir, "train", 9).unwrap();
+}
+
+fn base_cfg(topo: &str) -> bertdist::config::RunConfig {
+    let mut cfg = bertdist::config::RunConfig::default();
+    cfg.train.preset = "bert-micro".into();
+    cfg.train.variant = "fused_f32".into();
+    cfg.train.lr = 1e-3;
+    cfg.train.warmup_steps = 2;
+    cfg.train.accum_steps = 2;
+    cfg.train.log_every = 0;
+    cfg.cluster.topo = Topology::parse(topo).unwrap();
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// loud-fail regressions: tampered sparse frames surface named errors
+// ---------------------------------------------------------------------------
+
+/// Wraps another transport and tampers with every frame sent on links
+/// of one [`LinkKind`] — the desynchronized/buggy peer the sparse
+/// protocol checks must catch in release builds.
+struct TamperTransport<T: Transport> {
+    inner: T,
+    kind: LinkKind,
+    mutate: fn(&mut Frame),
+}
+
+struct TamperTx {
+    inner: Box<dyn FrameTx>,
+    mutate: fn(&mut Frame),
+}
+
+impl FrameTx for TamperTx {
+    fn send(&mut self, mut frame: Frame, pool: &mut PayloadPool)
+            -> Result<(), TransportError> {
+        (self.mutate)(&mut frame);
+        self.inner.send(frame, pool)
+    }
+
+    fn remote(&self) -> bool {
+        self.inner.remote()
+    }
+
+    fn take_backpressure_s(&mut self) -> f64 {
+        self.inner.take_backpressure_s()
+    }
+}
+
+impl<T: Transport> Transport for TamperTransport<T> {
+    fn world(&self) -> usize {
+        self.inner.world()
+    }
+
+    fn local_ranks(&self) -> Range<usize> {
+        self.inner.local_ranks()
+    }
+
+    fn link(&mut self, id: LinkId) -> Result<LinkEnds, TransportError> {
+        let mut ends = self.inner.link(id)?;
+        if id.kind == self.kind {
+            if let Some(tx) = ends.tx.take() {
+                ends.tx = Some(Box::new(TamperTx {
+                    inner: tx,
+                    mutate: self.mutate,
+                }));
+            }
+        }
+        Ok(ends)
+    }
+}
+
+fn skew_sparse_lengths(f: &mut Frame) {
+    if let Frame::Sparse { values, .. } = f {
+        values.pop();
+    }
+}
+
+fn oob_sparse_index(f: &mut Frame) {
+    if let Frame::Sparse { n, indices, .. } = f {
+        if let Some(i) = indices.first_mut() {
+            *i = *n; // == segment length: one past the last valid index
+        }
+    }
+}
+
+fn skew_sparse_dim(f: &mut Frame) {
+    if let Frame::Sparse { n, .. } = f {
+        *n += 1;
+    }
+}
+
+fn skew_sparse_tag(f: &mut Frame) {
+    if let Frame::Sparse { tag, .. } = f {
+        *tag += 1;
+    }
+}
+
+fn wrong_kind_on_sparse_link(f: &mut Frame) {
+    if matches!(f, Frame::Sparse { .. }) {
+        *f = Frame::Bucket { idx: 0, data: Vec::new() };
+    }
+}
+
+/// One sparsified pooled step over an in-proc world whose `kind` links
+/// tamper with every frame; returns the step error's full message.
+fn tampered_step_err(topo: Topology, mode: CommMode, intra: IntraNodeMode,
+                     kind: LinkKind, mutate: fn(&mut Frame)) -> String {
+    let world = topo.world_size();
+    let mut t = TamperTransport {
+        inner: InProcTransport::new(world),
+        kind,
+        mutate,
+    };
+    let n = 96;
+    let ranges = BucketRange::even_split(n, 2);
+    let mut pool = CollectivePool::with_transport(
+        topo, n, ranges, WireFormat::F32, mode, intra, 1 << 16,
+        Sparsify::TopK(0.25), &mut t).unwrap();
+    let err = pool
+        .step(&[], 1.0, 1, 0, true, &ExactSynth { n, salt: 1 })
+        .map(|_| ())
+        .unwrap_err();
+    format!("{err:#}")
+}
+
+#[test]
+fn skewed_sparse_index_value_lengths_fail_loudly() {
+    // Pre-check, a short value array would silently under-scatter one
+    // origin's message.  Cover all three sparse ring links.
+    for (topo, mode, intra, kind) in [
+        (Topology::new(2, 1), CommMode::Flat, IntraNodeMode::Auto,
+         LinkKind::FlatRing),
+        (Topology::new(2, 2), CommMode::Hierarchical, IntraNodeMode::Serial,
+         LinkKind::LeaderRing),
+        (Topology::new(2, 2), CommMode::Hierarchical,
+         IntraNodeMode::ReduceScatter, LinkKind::RsCross),
+    ] {
+        let msg = tampered_step_err(topo, mode, intra, kind,
+                                    skew_sparse_lengths);
+        assert!(msg.contains("sparse index/value length skew"),
+                "{topo} {kind:?}: {msg}");
+        assert!(msg.contains("pooled step 0 failed"),
+                "{topo} {kind:?}: {msg}");
+    }
+}
+
+#[test]
+fn out_of_bounds_sparse_index_fails_loudly() {
+    // An OOB index applied silently would scatter into a NEIGHBORING
+    // bucket's sum (or panic on the last one); the receiver must name
+    // it before touching the buffer.
+    let msg = tampered_step_err(Topology::new(2, 2), CommMode::Hierarchical,
+                                IntraNodeMode::Serial, LinkKind::LeaderRing,
+                                oob_sparse_index);
+    assert!(msg.contains("sparse index out of bounds"), "{msg}");
+}
+
+#[test]
+fn skewed_sparse_dimension_fails_loudly() {
+    let msg = tampered_step_err(Topology::new(2, 1), CommMode::Flat,
+                                IntraNodeMode::Auto, LinkKind::FlatRing,
+                                skew_sparse_dim);
+    assert!(msg.contains("sparse payload dimension skew"), "{msg}");
+}
+
+#[test]
+fn skewed_sparse_schedule_tag_fails_loudly() {
+    let msg = tampered_step_err(Topology::new(2, 2), CommMode::Hierarchical,
+                                IntraNodeMode::Serial, LinkKind::LeaderRing,
+                                skew_sparse_tag);
+    assert!(msg.contains("sparse schedule skew"), "{msg}");
+}
+
+#[test]
+fn wrong_frame_kind_on_a_sparse_link_fails_loudly() {
+    let msg = tampered_step_err(Topology::new(2, 1), CommMode::Flat,
+                                IntraNodeMode::Auto, LinkKind::FlatRing,
+                                wrong_kind_on_sparse_link);
+    assert!(msg.contains("unexpected frame kind on sparse ring link"),
+            "{msg}");
+}
+
+/// Two socket processes where process 0 tampers its `kind` sends;
+/// returns (good process's step error, bad process's step error).
+fn socket_tampered_errs(topo: Topology, mode: CommMode,
+                        intra: IntraNodeMode, kind: LinkKind,
+                        mutate: fn(&mut Frame)) -> (String, String) {
+    let peers = probe_addrs(2);
+    let world = topo.world_size();
+    let n = 96;
+    let ranges = BucketRange::even_split(n, 2);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..2)
+            .map(|p| {
+                let peers = peers.clone();
+                let ranges = ranges.clone();
+                scope.spawn(move || {
+                    let mut sock = SocketTransport::with_hosts(
+                        world, &peers[p], peers.clone(), 30.0).unwrap();
+                    let err = if p == 0 {
+                        let mut t = TamperTransport {
+                            inner: sock,
+                            kind,
+                            mutate,
+                        };
+                        let mut pool = CollectivePool::with_transport(
+                            topo, n, ranges, WireFormat::F32, mode, intra,
+                            1 << 16, Sparsify::TopK(0.25), &mut t).unwrap();
+                        pool.step(&[], 1.0, 1, 0, true,
+                                  &ExactSynth { n, salt: 1 })
+                            .map(|_| ())
+                            .unwrap_err()
+                    } else {
+                        let mut pool = CollectivePool::with_transport(
+                            topo, n, ranges, WireFormat::F32, mode, intra,
+                            1 << 16, Sparsify::TopK(0.25), &mut sock)
+                            .unwrap();
+                        pool.step(&[], 1.0, 1, 0, true,
+                                  &ExactSynth { n, salt: 1 })
+                            .map(|_| ())
+                            .unwrap_err()
+                    };
+                    format!("{err:#}")
+                })
+            })
+            .collect();
+        let mut msgs = handles
+            .into_iter()
+            .map(|h| h.join().expect("socket thread panicked"));
+        let bad = msgs.next().unwrap();
+        let good = msgs.next().unwrap();
+        (good, bad)
+    })
+}
+
+#[test]
+fn truncated_sparse_payload_fails_loudly_over_sockets() {
+    // Over the wire the entry COUNT is the single source of truth for
+    // the body length: popping a value off the frame ships a body 4
+    // bytes short of its count, and the v1 codec must refuse it by
+    // name before recv_sparse ever sees it.
+    let (good, _bad) = socket_tampered_errs(
+        Topology::new(2, 2), CommMode::Hierarchical, IntraNodeMode::Serial,
+        LinkKind::LeaderRing, skew_sparse_lengths);
+    assert!(good.contains("sparse payload truncated or skewed"), "{good}");
+}
+
+#[test]
+fn out_of_bounds_sparse_index_fails_loudly_over_sockets() {
+    // An OOB index survives the codec (the bytes are well-formed) and
+    // must be caught by the shared recv_sparse bounds check instead.
+    let (good, _bad) = socket_tampered_errs(
+        Topology::new(2, 2), CommMode::Hierarchical, IntraNodeMode::Serial,
+        LinkKind::LeaderRing, oob_sparse_index);
+    assert!(good.contains("sparse index out of bounds"), "{good}");
+}
+
+#[test]
+fn skewed_sparse_lengths_fail_loudly_on_the_rs_cross_ring_over_sockets() {
+    // The rs schedule's cross-machine shard rings carry sparse frames
+    // too; the 2M2G machine-per-process split sends them over real
+    // sockets.
+    let (good, _bad) = socket_tampered_errs(
+        Topology::new(2, 2), CommMode::Hierarchical,
+        IntraNodeMode::ReduceScatter, LinkKind::RsCross,
+        skew_sparse_lengths);
+    assert!(good.contains("sparse payload truncated or skewed"), "{good}");
+}

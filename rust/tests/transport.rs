@@ -11,6 +11,7 @@ use bertdist::collectives::pool::{CollectivePool, CommMode, IntraNodeMode,
 use bertdist::collectives::transport::{decode_frame, encode_frame,
                                        PayloadPool};
 use bertdist::collectives::{Frame, SocketTransport, Transport};
+use bertdist::grad::sparsify::Sparsify;
 use bertdist::grad::{bucket_ranges, build_buckets, BucketRange};
 use bertdist::model::layout::ParamLayout;
 use bertdist::topology::Topology;
@@ -134,7 +135,8 @@ fn socket_world_grads(topo: Topology, nprocs: usize, wire: WireFormat,
                     let mut t = SocketTransport::with_hosts(
                         world, &peers[p], peers.clone(), 30.0).unwrap();
                     let mut pool = CollectivePool::with_transport(
-                        topo, n, ranges, wire, mode, intra, chunk, &mut t)
+                        topo, n, ranges, wire, mode, intra, chunk,
+                        Sparsify::None, &mut t)
                         .unwrap();
                     for s in 0..steps {
                         pool.step(&[], 1.0, k, s, true, &ExactGrads { n })
@@ -374,7 +376,8 @@ fn authenticated_socket_exchange_matches_inproc_bitwise() {
                     t.set_connect_backoff(5, 10);
                     let mut pool = CollectivePool::with_transport(
                         topo, n, ranges, WireFormat::F32, CommMode::Flat,
-                        IntraNodeMode::Auto, 1 << 16, &mut t).unwrap();
+                        IntraNodeMode::Auto, 1 << 16, Sparsify::None,
+                        &mut t).unwrap();
                     for s in 0..2 {
                         pool.step(&[], 1.0, 2, s, true, &ExactGrads { n })
                             .unwrap();
@@ -415,7 +418,8 @@ fn transport_reports_its_local_slice() {
                 assert!(!t.fully_local());
                 let mut pool = CollectivePool::with_transport(
                     topo, n, ranges, WireFormat::F32, CommMode::Flat,
-                    IntraNodeMode::Auto, 1 << 16, &mut t).unwrap();
+                    IntraNodeMode::Auto, 1 << 16, Sparsify::None,
+                    &mut t).unwrap();
                 assert_eq!(pool.local_ranks(), p..p + 1);
                 assert_eq!(pool.is_lead(), p == 0);
                 pool.step(&[], 1.0, 1, 0, true, &ExactGrads { n }).unwrap();

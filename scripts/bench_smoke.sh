@@ -18,15 +18,21 @@
 # re-establish latency at a republished rendezvous epoch, and the
 # authenticated vs plain handshake cost) and a BENCH_exchange_rs.json
 # section (2-level reduce-scatter vs serialized-leader vs pipelined
-# exchange at the fixed synthetic 2M4G world) so future PRs can diff
-# the hot-path, comm-mode, input-pipeline, checkpoint, intra-node,
-# elastic, transport, rejoin, and exchange-schedule trajectories.
+# exchange at the fixed synthetic 2M4G world) and a
+# BENCH_sparsify.json section (dense vs topk:1.0 vs topk:0.01 pooled
+# step time and modeled network bytes at a fixed synthetic 2M1G world,
+# top-k selection throughput, and the netsim EF-weighted ratio sweep
+# with its interior optimum) so future PRs can diff the hot-path,
+# comm-mode, input-pipeline, checkpoint, intra-node, elastic,
+# transport, rejoin, exchange-schedule, and sparsification
+# trajectories.
 #
 # Usage: scripts/bench_smoke.sh [output.json] [hier_output.json] \
 #                               [input_output.json] [ckpt_output.json] \
 #                               [intra_output.json] [elastic_output.json] \
 #                               [transport_output.json] [rejoin_output.json] \
-#                               [exchange_rs_output.json]
+#                               [exchange_rs_output.json] \
+#                               [sparsify_output.json]
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -40,6 +46,7 @@ ELASTIC_OUT="${6:-BENCH_elastic.json}"
 TRANSPORT_OUT="${7:-BENCH_transport.json}"
 REJOIN_OUT="${8:-BENCH_rejoin.json}"
 RS_OUT="${9:-BENCH_exchange_rs.json}"
+SPARSIFY_OUT="${10:-BENCH_sparsify.json}"
 export BENCH_QUICK=1
 export BENCH_JSON_OUT="$OUT"
 export BENCH_HIER_JSON_OUT="$HIER_OUT"
@@ -50,11 +57,13 @@ export BENCH_ELASTIC_JSON_OUT="$ELASTIC_OUT"
 export BENCH_TRANSPORT_JSON_OUT="$TRANSPORT_OUT"
 export BENCH_REJOIN_JSON_OUT="$REJOIN_OUT"
 export BENCH_EXCHANGE_RS_JSON_OUT="$RS_OUT"
+export BENCH_SPARSIFY_JSON_OUT="$SPARSIFY_OUT"
 
 cargo bench --bench perf_hotpath
 
 for f in "$OUT" "$HIER_OUT" "$INPUT_OUT" "$CKPT_OUT" "$INTRA_OUT" \
-         "$ELASTIC_OUT" "$TRANSPORT_OUT" "$REJOIN_OUT" "$RS_OUT"; do
+         "$ELASTIC_OUT" "$TRANSPORT_OUT" "$REJOIN_OUT" "$RS_OUT" \
+         "$SPARSIFY_OUT"; do
     if [[ -f "$f" ]]; then
         echo "bench rows -> $f"
     else

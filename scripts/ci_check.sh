@@ -41,6 +41,15 @@ cargo test -q --test transport
 echo "==> cargo test -q --test exchange_rs"
 cargo test -q --test exchange_rs
 
+# the sparsification suite proves topk:1.0 bitwise-equal to the dense
+# exchange (all schedules, both wires), lossy ratios deterministic
+# across transports with bitwise-resumable error-feedback state, and
+# tampered sparse frames failing loudly by name on both transports; run
+# it explicitly so the ISSUE-10 bitwise/convergence wall cannot be
+# silently skipped
+echo "==> cargo test -q --test sparsify"
+cargo test -q --test sparsify
+
 # the rejoin e2e pair is the grow-back gate: a killed peer re-admitted
 # at the same world size inside --rejoin-window (bitwise-equal finish),
 # and a window expiry degrading to the shrink restart instead of
